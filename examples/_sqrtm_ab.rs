@@ -1,0 +1,17 @@
+//! §Perf probe: Newton–Schulz matrix-sqrt iteration count & wallclock,
+//! spectral scaling (default) vs Frobenius scaling (AXE_SQRTM_FROB=1).
+use axe::linalg::{sqrtm_psd, Mat};
+use axe::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(1);
+    for &(n, d) in &[(256usize, 256usize), (576, 768)] {
+        let x = Mat::random_normal(n, d, &mut rng, 1.0);
+        let mut a = x.gram();
+        let md = a.diag().iter().sum::<f64>() / n as f64;
+        a.add_diag(0.01 * md);
+        let t0 = std::time::Instant::now();
+        let r = sqrtm_psd(&a, 1e-11, 100).unwrap();
+        println!("n={n}: {} iterations, {:.2}s", r.iterations, t0.elapsed().as_secs_f64());
+    }
+}

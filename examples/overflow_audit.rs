@@ -1,0 +1,113 @@
+//! Overflow audit (paper §2.2 motivation + the Eq. 6 guarantee):
+//!
+//! 1. quantize with AXE for a small accumulator and prove — via the
+//!    analytic worst-case inputs of Eq. 6 AND a large randomized fuzz
+//!    through the bit-accurate wraparound simulator — that no dot
+//!    product can overflow;
+//! 2. quantize *without* constraints, run the same model on the same
+//!    narrow datapath, and watch wraparound destroy perplexity.
+//!
+//!     cargo run --release --example overflow_audit [model]
+
+use axe::coordinator::{quantize_transformer, DatapathMode, PipelineConfig};
+use axe::eval::{load_corpus_split_or_synth, perplexity};
+use axe::model::{load_named, Linear, Model};
+use axe::quant::{AccumTarget, Algorithm, Method};
+use axe::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let name = std::env::args().nth(1).unwrap_or_else(|| "pico-160k".to_string());
+    let Model::Lm(base) = load_named(&name)? else {
+        anyhow::bail!("{name} is not an LM")
+    };
+    let seq = base.cfg.max_seq;
+    let train = load_corpus_split_or_synth("train", base.cfg.vocab);
+    let val = load_corpus_split_or_synth("val", base.cfg.vocab);
+    let calib: Vec<&[u16]> = train.chunks_exact(seq).take(12).collect();
+    let float_ppl = perplexity(&base, &val, seq, 24).ppl;
+    let p = 16u32;
+    let tile = 64usize;
+
+    // --- constrained: AXE W4A8 @ 64x16b, faithful wraparound datapath
+    let mut cfg = PipelineConfig::new(Algorithm::Optq, Method::Axe, 4, 8);
+    cfg.target = AccumTarget::MultiStage { p_inner: p, tile };
+    cfg.datapath = DatapathMode::Faithful;
+    let mut constrained = base.clone();
+    let report = quantize_transformer(&mut constrained, &calib, &cfg)?;
+    println!("== AXE-constrained model (W4A8, {tile}x{p}b) ==");
+    println!("worst-case audit: {} violations / {} cases (max util {:.3})",
+        report.audit.violations, report.audit.cases, report.audit.worst_utilization);
+
+    // deep randomized fuzz of every channel through the simulator
+    let mut rng = Rng::new(42);
+    let (mut cases, mut violations) = (0usize, 0usize);
+    for lname in constrained.linear_names() {
+        if let Some(Linear::Quant(q)) = constrained.get_linear(&lname) {
+            for o in 0..q.out_dim {
+                let codes: Vec<i64> =
+                    q.codes[o * q.in_dim..(o + 1) * q.in_dim].iter().map(|&c| c as i64).collect();
+                let r = axe::accum::audit_random(&codes, 8, p, tile, 20, &mut rng);
+                cases += r.cases;
+                violations += r.violations;
+            }
+        }
+    }
+    println!("fuzz audit      : {violations} violations / {cases} random input vectors");
+    let ppl_c = perplexity(&constrained, &val, seq, 24);
+    println!("faithful-datapath PPL: {:.2} (float {:.2}), overflow events during eval: {}",
+        ppl_c.ppl, float_ppl, ppl_c.overflows);
+    assert_eq!(ppl_c.overflows, 0);
+
+    // --- unconstrained on a *narrow* register. Note: at K ≤ 224 random
+    // W4A8 data rarely drives a 16-bit register past its range — which
+    // is exactly why FBGEMM-style libraries "usually get away with it"
+    // (paper §3.3) — but the worst-case audit proves it CAN overflow,
+    // and at 12 bits the corruption is immediate and observable.
+    let p_demo = 12u32;
+    println!("\n== unconstrained model forced onto a {p_demo}-bit register ==");
+    let mut cfg_u = PipelineConfig::new(Algorithm::Optq, Method::Naive, 4, 8);
+    cfg_u.datapath = DatapathMode::Faithful;
+    cfg_u.force_eval_bits = Some(p_demo);
+    let mut unconstrained = base.clone();
+    let report_u = quantize_transformer(&mut unconstrained, &calib, &cfg_u)?;
+    println!("worst-case audit of unconstrained codes at {p_demo}b: utilization would be {:.1}x",
+        report_u.audit.worst_utilization
+            * ((1u64 << (report_u_cap(&report_u) - 1)) - 1) as f64
+            / ((1u64 << (p_demo - 1)) - 1) as f64);
+    let ppl_u = perplexity(&unconstrained, &val, seq, 24);
+    println!("faithful-datapath PPL: {:.2}, overflow events during eval: {}",
+        ppl_u.ppl, ppl_u.overflows);
+
+    // --- AXE constrained for that same narrow register. A 12-bit inner
+    // register pairs with a shorter tile (8) — the hardware trade the
+    // multi-stage formulation exposes (Eq. 22).
+    let tile12 = 8usize;
+    let mut cfg_c12 = PipelineConfig::new(Algorithm::Optq, Method::Axe, 4, 8);
+    cfg_c12.target = AccumTarget::MultiStage { p_inner: p_demo, tile: tile12 };
+    cfg_c12.datapath = DatapathMode::Faithful;
+    let mut constrained12 = base.clone();
+    let rep12 = quantize_transformer(&mut constrained12, &calib, &cfg_c12)?;
+    let ppl_c12 = perplexity(&constrained12, &val, seq, 24);
+    println!("\n== AXE model constrained for {tile12}x{p_demo}b ==");
+    println!("audit: {} violations; faithful PPL {:.2}, overflow events: {}",
+        rep12.audit.violations, ppl_c12.ppl, ppl_c12.overflows);
+
+    println!("\nsummary: float {float_ppl:.1}");
+    println!("  AXE      @{tile}x{p}b   : {:.1} PPL, {} overflows (guaranteed)", ppl_c.ppl, ppl_c.overflows);
+    println!("  AXE      @{tile12}x{p_demo}b   : {:.1} PPL, {} overflows (guaranteed)", ppl_c12.ppl, ppl_c12.overflows);
+    println!("  unconstr @{p_demo}b        : {:.1} PPL, {} overflows", ppl_u.ppl, ppl_u.overflows);
+    if ppl_u.overflows > 0 && ppl_u.ppl > 2.0 * ppl_c12.ppl {
+        println!("=> wraparound corruption exactly where the paper predicts it");
+    }
+    Ok(())
+}
+
+/// The unconstrained model's audited register width (Eq. 3 P* of the
+/// widest layer) — used to rescale its utilization to the demo width.
+fn report_u_cap(report: &axe::coordinator::PipelineReport) -> u32 {
+    // P* for W4A8 at the widest K in the pico family is ~21; recover it
+    // from the report name-free by bounding with Eq. 3 on the widest
+    // layer the audit saw.
+    let k_max = report.layers.iter().map(|l| l.k).max().unwrap_or(1);
+    axe::quant::datatype_min_bits(k_max, 8, 4, false)
+}

@@ -1,0 +1,86 @@
+//! Full (M, N, P) design-space sweep for one model — the data behind the
+//! paper's Figures 1/3 and Tables 4-7 (perplexity/accuracy, winning
+//! (M, N), sparsity per Pareto-dominant point).
+//!
+//! Usage:
+//!     cargo run --release --example pareto_sweep [model] [gpfq|optq]
+//! LM models sweep perplexity; glyph models sweep top-1 accuracy.
+
+use axe::coordinator::experiments::{
+    design_space, pareto_frontier, render_frontier, run_img_config, run_lm_config, MetricKind,
+};
+use axe::coordinator::PipelineConfig;
+use axe::eval::{load_corpus_split_or_synth, load_glyphs, synth_glyphs};
+use axe::model::{load_named, Model};
+use axe::quant::{AccumTarget, Algorithm, Method};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let name = args.get(1).cloned().unwrap_or_else(|| "pico-160k".to_string());
+    let algo = Algorithm::parse(args.get(2).map(|s| s.as_str()).unwrap_or("gpfq"))
+        .ok_or_else(|| anyhow::anyhow!("bad algorithm"))?;
+    let p_values: Vec<u32> = vec![9, 10, 11, 12, 13, 14, 16, 18, 20, 22, 24];
+
+    match load_named(&name)? {
+        Model::Lm(base) => {
+            let seq = base.cfg.max_seq;
+            let train = load_corpus_split_or_synth("train", base.cfg.vocab);
+            let val = load_corpus_split_or_synth("val", base.cfg.vocab);
+            let calib: Vec<&[u16]> = train.chunks_exact(seq).take(12).collect();
+            for (method, label) in axe::coordinator::experiments::methods() {
+                let mut points = Vec::new();
+                for (m, n) in design_space(3, 8) {
+                    if method == Method::Naive {
+                        let cfg = PipelineConfig::new(algo, method, m, n);
+                        points.push(run_lm_config(&base, &calib, &val, seq, 24, &cfg)?);
+                    } else {
+                        for &p in &p_values {
+                            let mut cfg = PipelineConfig::new(algo, method, m, n);
+                            cfg.target = AccumTarget::Monolithic { p_bits: p };
+                            points.push(run_lm_config(&base, &calib, &val, seq, 24, &cfg)?);
+                        }
+                    }
+                }
+                let f = pareto_frontier(&points, MetricKind::Perplexity);
+                println!(
+                    "{}",
+                    render_frontier(
+                        &format!("{name} · {} + {label}", algo.name()),
+                        MetricKind::Perplexity,
+                        &f
+                    )
+                );
+            }
+        }
+        Model::Img(base) => {
+            let train = load_glyphs("train").unwrap_or_else(|_| synth_glyphs(2000, 16, 10, 1));
+            let test = load_glyphs("test").unwrap_or_else(|_| synth_glyphs(500, 16, 10, 2));
+            let calib: Vec<&[f32]> = (0..256.min(train.len())).map(|i| train.row(i)).collect();
+            for (method, label) in axe::coordinator::experiments::methods() {
+                let mut points = Vec::new();
+                for (m, n) in design_space(3, 8) {
+                    if method == Method::Naive {
+                        let cfg = PipelineConfig::new(algo, method, m, n);
+                        points.push(run_img_config(&base, &calib, &test, &cfg)?);
+                    } else {
+                        for &p in &p_values {
+                            let mut cfg = PipelineConfig::new(algo, method, m, n);
+                            cfg.target = AccumTarget::Monolithic { p_bits: p };
+                            points.push(run_img_config(&base, &calib, &test, &cfg)?);
+                        }
+                    }
+                }
+                let f = pareto_frontier(&points, MetricKind::Accuracy);
+                println!(
+                    "{}",
+                    render_frontier(
+                        &format!("{name} · {} + {label}", algo.name()),
+                        MetricKind::Accuracy,
+                        &f
+                    )
+                );
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,168 @@
+//! Mini serving loop: batched greedy generation served two ways —
+//! (a) the float model AOT-compiled by JAX and executed through the
+//!     PJRT runtime (the L2→runtime path), and
+//! (b) the rust-native AXE-quantized model on the integer datapath
+//!     (the L3 path) —
+//! reporting latency, throughput and per-token agreement between them.
+//!
+//! Requires `make artifacts` (weights + pico-160k_fwd.hlo.txt).
+//!
+//!     cargo run --release --example serve_quantized
+
+use axe::coordinator::{quantize_transformer, PipelineConfig};
+use axe::eval::load_corpus_split_or_synth;
+use axe::model::{load_named, read_f32_bin_any, Model};
+use axe::quant::{AccumTarget, Algorithm, Method};
+use axe::runtime::{F32Input, Runtime};
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let name = "pico-160k";
+    let Model::Lm(float_model) = load_named(name)? else {
+        anyhow::bail!("missing model")
+    };
+    let cfg_m = float_model.cfg.clone();
+    let (batch, seq, vocab) = (4usize, cfg_m.max_seq, cfg_m.vocab);
+
+    // ---- PJRT path: load the AOT artifact and its parameter list
+    let rt = Runtime::new()?;
+    let manifest = axe::runtime::load_manifest()?;
+    let entry = manifest
+        .req_arr("artifacts")?
+        .iter()
+        .find(|a| a.get("name").and_then(|n| n.as_str()) == Some(&format!("{name}_fwd")))
+        .ok_or_else(|| anyhow::anyhow!("{name}_fwd artifact missing — run `make artifacts`"))?
+        .clone();
+    let param_names: Vec<String> = entry
+        .req_arr("params")?
+        .iter()
+        .filter_map(|p| p.as_str().map(|s| s.to_string()))
+        .collect();
+    let weights_dir = axe::artifacts_dir().join("weights").join(name);
+    let mut param_inputs: Vec<(Vec<f32>, Vec<usize>)> = Vec::new();
+    let model_manifest = axe::util::json::Json::parse(&std::fs::read_to_string(
+        weights_dir.join("manifest.json"),
+    )?)
+    .map_err(|e| anyhow::anyhow!("{e}"))?;
+    for pn in &param_names {
+        let shape: Vec<usize> = model_manifest
+            .get("tensors")
+            .and_then(|t| t.get(pn))
+            .and_then(|s| s.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("missing tensor {pn}"))?
+            .iter()
+            .map(|d| d.as_usize().unwrap_or(0))
+            .collect();
+        let data = read_f32_bin_any(&weights_dir.join(format!("{pn}.bin")))?;
+        param_inputs.push((data, shape));
+    }
+    println!("PJRT platform: {}, artifact {} params", rt.platform(), param_names.len());
+
+    // ---- quantized rust path
+    let train = load_corpus_split_or_synth("train", vocab);
+    let calib: Vec<&[u16]> = train.chunks_exact(seq).take(12).collect();
+    let mut qcfg = PipelineConfig::new(Algorithm::Optq, Method::Axe, 4, 8);
+    qcfg.target = AccumTarget::MultiStage { p_inner: 16, tile: 64 };
+    let mut qmodel = float_model.clone();
+    let report = quantize_transformer(&mut qmodel, &calib, &qcfg)?;
+    println!("quantized model ready ({}, safe={})", report.config, report.guaranteed_safe());
+
+    // ---- serve a few batched generation requests
+    let val = load_corpus_split_or_synth("val", vocab);
+    let prompts: Vec<Vec<u16>> =
+        (0..batch).map(|i| val[i * seq..i * seq + seq].to_vec()).collect();
+    let gen_tokens = 16usize;
+
+    // PJRT float generation (recompiles nothing: fixed (B, S) shape,
+    // sliding window)
+    let t0 = Instant::now();
+    let mut pjrt_out: Vec<Vec<u16>> = prompts.clone();
+    for _ in 0..gen_tokens {
+        let mut toks = vec![0f32; batch * seq];
+        for (b, p) in pjrt_out.iter().enumerate() {
+            let window = &p[p.len() - seq..];
+            for (s, &t) in window.iter().enumerate() {
+                toks[b * seq + s] = t as f32;
+            }
+        }
+        let mut inputs = vec![F32Input::new(toks, &[batch, seq])];
+        for (data, shape) in &param_inputs {
+            inputs.push(F32Input::new(data.clone(), shape));
+        }
+        let outs = rt.run_f32(&format!("{name}_fwd"), &inputs)?;
+        let logits = &outs[0]; // (B, S, V)
+        for (b, p) in pjrt_out.iter_mut().enumerate() {
+            let last = &logits[(b * seq + seq - 1) * vocab..(b * seq + seq) * vocab];
+            let next = argmax(last) as u16;
+            p.push(next);
+        }
+    }
+    let pjrt_s = t0.elapsed().as_secs_f64();
+
+    // rust quantized generation (same full-window recompute as the PJRT
+    // path, for an apples-to-apples per-token comparison)
+    let t1 = Instant::now();
+    let mut rust_out: Vec<Vec<u16>> = prompts.clone();
+    for p in rust_out.iter_mut() {
+        for _ in 0..gen_tokens {
+            let window = &p[p.len() - seq..];
+            let logits = qmodel.forward(window, None);
+            let last = &logits[(seq - 1) * vocab..seq * vocab];
+            p.push(argmax(last) as u16);
+        }
+    }
+    let rust_s = t1.elapsed().as_secs_f64();
+
+    // rust quantized generation with the KV cache (the serving fast path)
+    let t2 = Instant::now();
+    let mut kv_out: Vec<Vec<u16>> = Vec::new();
+    for p in &prompts {
+        kv_out.push(qmodel.generate_greedy(&p[p.len() - seq / 2..], gen_tokens));
+    }
+    let kv_s = t2.elapsed().as_secs_f64();
+
+    // agreement
+    let mut agree = 0usize;
+    for (a, b) in pjrt_out.iter().zip(rust_out.iter()) {
+        for i in seq..a.len() {
+            if a[i] == b[i] {
+                agree += 1;
+            }
+        }
+    }
+    let total = batch * gen_tokens;
+    println!("\nserved {batch} requests × {gen_tokens} tokens");
+    println!(
+        "PJRT float path : {:.3}s total, {:.1} tok/s, {:.1} ms/token-batch",
+        pjrt_s,
+        total as f64 / pjrt_s,
+        1000.0 * pjrt_s / gen_tokens as f64
+    );
+    println!(
+        "rust quant path : {:.3}s total, {:.1} tok/s",
+        rust_s,
+        total as f64 / rust_s
+    );
+    println!(
+        "rust + KV cache : {:.3}s total, {:.1} tok/s ({:.1}x over recompute)",
+        kv_s,
+        total as f64 / kv_s,
+        rust_s / kv_s
+    );
+    let _ = &kv_out;
+    println!(
+        "agreement       : {agree}/{total} generated tokens match ({:.0}%)",
+        100.0 * agree as f64 / total as f64
+    );
+    Ok(())
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}

@@ -1,0 +1,128 @@
+"""AOT lowering: JAX/Pallas → HLO text artifacts for the rust runtime.
+
+Interchange is HLO *text* (never `.serialize()`): jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts:
+  <model>_fwd.hlo.txt    — float forward logits(tokens, *params);
+                           params passed as inputs in sorted-name order
+                           (listed in manifest.json) so the rust side
+                           feeds the same tensors it loaded from the zoo.
+  qmatmul_tT_pP.hlo.txt  — the standalone L1 Pallas kernel for a
+                           canonical shape (integer in/out).
+"""
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .kernels.qmatmul import qmatmul
+from .model import LM_ZOO, lm_forward
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_lm_forward(cfg, weights_dir: pathlib.Path, out_dir: pathlib.Path, batch: int):
+    """Lower logits = fwd(tokens, *params) with params as inputs."""
+    manifest = json.loads((weights_dir / cfg.name / "manifest.json").read_text())
+    names = sorted(manifest["tensors"].keys())
+    shapes = [tuple(manifest["tensors"][n]) for n in names]
+
+    def fwd(tokens, *flat_params):
+        params = dict(zip(names, flat_params))
+        return (lm_forward(cfg, params, tokens.astype(jnp.int32)),)
+
+    tok_spec = jax.ShapeDtypeStruct((batch, cfg.max_seq), jnp.float32)
+    param_specs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes]
+    lowered = jax.jit(fwd).lower(tok_spec, *param_specs)
+    text = to_hlo_text(lowered)
+    name = f"{cfg.name}_fwd"
+    (out_dir / f"{name}.hlo.txt").write_text(text)
+    return {
+        "name": name,
+        "kind": "lm_forward",
+        "model": cfg.name,
+        "batch": batch,
+        "seq": cfg.max_seq,
+        "vocab": cfg.vocab,
+        "params": names,
+        "tokens_dtype": "f32",
+    }
+
+
+def export_qmatmul(out_dir: pathlib.Path, m: int, k: int, n: int, tile: int, p_inner: int,
+                   p_outer: int):
+    def fn(x, w):
+        return (
+            qmatmul(x, w, tile=tile, p_inner=p_inner, p_outer=p_outer, block_m=min(32, m),
+                    block_n=min(32, n)),
+        )
+
+    xs = jax.ShapeDtypeStruct((m, k), jnp.int32)
+    ws = jax.ShapeDtypeStruct((k, n), jnp.int32)
+    lowered = jax.jit(fn).lower(xs, ws)
+    text = to_hlo_text(lowered)
+    name = f"qmatmul_t{tile}_p{p_inner}"
+    (out_dir / f"{name}.hlo.txt").write_text(text)
+    return {
+        "name": name,
+        "kind": "qmatmul",
+        "m": m,
+        "k": k,
+        "n": n,
+        "tile": tile,
+        "p_inner": p_inner,
+        "p_outer": p_outer,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/hlo")
+    ap.add_argument("--weights", default="../artifacts/weights")
+    ap.add_argument("--models", default="pico-160k", help="comma list of LMs to export")
+    ap.add_argument("--batch", type=int, default=4)
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    weights_dir = pathlib.Path(args.weights)
+
+    entries = []
+    for mname in args.models.split(","):
+        mname = mname.strip()
+        if not mname:
+            continue
+        cfg = LM_ZOO[mname]
+        if not (weights_dir / mname / "manifest.json").exists():
+            print(f"skipping {mname}: weights not trained yet")
+            continue
+        entries.append(export_lm_forward(cfg, weights_dir, out_dir, args.batch))
+        print(f"exported {mname}_fwd")
+
+    # canonical kernel artifacts (Table-1 tiles)
+    for tile, p_inner in [(64, 16), (128, 16)]:
+        k = 256
+        p_outer = p_inner + int(np.ceil(np.log2(max(1, k // tile))))
+        entries.append(export_qmatmul(out_dir, m=32, k=k, n=64, tile=tile, p_inner=p_inner,
+                                      p_outer=p_outer))
+        print(f"exported qmatmul_t{tile}_p{p_inner}")
+
+    (out_dir / "manifest.json").write_text(json.dumps({"artifacts": entries}, indent=2))
+    print(f"wrote {len(entries)} artifacts to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,123 @@
+"""Synthetic datasets (the WikiText2 / ImageNet substitutes; DESIGN.md §2).
+
+- Corpus: an order-1 Markov chain over a Zipf-weighted 64-symbol
+  alphabet. Structured enough that a trained pico-LM reaches PPL far
+  below the uniform baseline, random enough that quantization damage is
+  measurable.
+- Glyphs: 16×16 grayscale "characters" — a class prototype of strokes
+  plus per-sample jitter and noise.
+
+Everything is deterministic from fixed seeds, and both splits are
+written to artifacts/data/ so the rust side sees identical bytes.
+"""
+
+import argparse
+import pathlib
+
+import numpy as np
+
+VOCAB = 64
+GLYPH_SIDE = 16
+GLYPH_CLASSES = 10
+
+
+def make_corpus(length: int, seed: int, structure_seed: int = 0) -> np.ndarray:
+    """Zipf–Markov byte stream with tokens in [0, VOCAB).
+
+    The *language structure* (transition table) comes from
+    `structure_seed` and is SHARED between train and val splits; `seed`
+    only drives the sampling path — otherwise val would be a different
+    language and perplexity meaningless.
+    """
+    rng = np.random.default_rng(seed)
+    # Zipf marginal
+    weights = 1.0 / np.arange(1, VOCAB + 1)
+    weights /= weights.sum()
+    # per-state transition: 4 preferred successors at 75% total mass
+    succ = np.random.default_rng(structure_seed).integers(0, VOCAB, size=(VOCAB, 4))
+    out = np.empty(length, dtype=np.uint8)
+    state = 0
+    stick = rng.random(length)
+    pick = rng.integers(0, 4, size=length)
+    zipf_draws = rng.choice(VOCAB, size=length, p=weights)
+    for i in range(length):
+        if stick[i] < 0.75:
+            state = succ[state, pick[i]]
+        else:
+            state = zipf_draws[i]
+        out[i] = state
+    return out
+
+
+def glyph_prototypes(proto_seed: int = 0) -> np.ndarray:
+    """Class prototypes of 3 strokes each — FIXED across splits so the
+    task is learnable (train and test share the class definitions)."""
+    rng = np.random.default_rng(proto_seed)
+    side = GLYPH_SIDE
+    protos = np.zeros((GLYPH_CLASSES, side, side), np.float32)
+    for c in range(GLYPH_CLASSES):
+        for _ in range(3):
+            # random stroke: line segment with thickness 1
+            x0, y0 = rng.integers(2, side - 2, 2)
+            angle = rng.random() * np.pi
+            length = rng.integers(5, side - 2)
+            for t in np.linspace(0, 1, 2 * length):
+                x = int(round(x0 + np.cos(angle) * t * length))
+                y = int(round(y0 + np.sin(angle) * t * length))
+                if 0 <= x < side and 0 <= y < side:
+                    protos[c, y, x] = 1.0
+    return protos
+
+
+def make_glyphs(n: int, seed: int, proto_seed: int = 0):
+    """Glyph images: shared class prototypes + per-sample jitter/noise."""
+    rng = np.random.default_rng(seed)
+    protos = glyph_prototypes(proto_seed)
+    side = GLYPH_SIDE
+    xs = np.empty((n, side * side), np.float32)
+    ys = np.empty(n, np.uint8)
+    for i in range(n):
+        c = i % GLYPH_CLASSES
+        img = protos[c].copy()
+        # jitter: roll by up to 1 pixel
+        img = np.roll(img, rng.integers(-1, 2), axis=0)
+        img = np.roll(img, rng.integers(-1, 2), axis=1)
+        img += rng.normal(0, 0.25, img.shape).astype(np.float32)
+        xs[i] = img.reshape(-1)
+        ys[i] = c
+    return xs, ys
+
+
+def write_all(out_dir: pathlib.Path, train_len: int, val_len: int, n_train: int, n_test: int):
+    out_dir.mkdir(parents=True, exist_ok=True)
+    train = make_corpus(train_len, seed=1)
+    val = make_corpus(val_len, seed=2)
+    (out_dir / "corpus_train.bin").write_bytes(train.tobytes())
+    (out_dir / "corpus_val.bin").write_bytes(val.tobytes())
+    gx, gy = make_glyphs(n_train, seed=3)
+    tx, ty = make_glyphs(n_test, seed=4)
+    (out_dir / "glyphs_train_x.bin").write_bytes(gx.astype("<f4").tobytes())
+    (out_dir / "glyphs_train_y.bin").write_bytes(gy.tobytes())
+    (out_dir / "glyphs_test_x.bin").write_bytes(tx.astype("<f4").tobytes())
+    (out_dir / "glyphs_test_y.bin").write_bytes(ty.tobytes())
+    print(
+        f"wrote corpus train={len(train)} val={len(val)}, "
+        f"glyphs train={len(gy)} test={len(ty)} to {out_dir}"
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/data")
+    ap.add_argument("--train-len", type=int, default=400_000)
+    ap.add_argument("--val-len", type=int, default=80_000)
+    ap.add_argument("--glyphs-train", type=int, default=4000)
+    ap.add_argument("--glyphs-test", type=int, default=1000)
+    args = ap.parse_args()
+    write_all(
+        pathlib.Path(args.out), args.train_len, args.val_len, args.glyphs_train, args.glyphs_test
+    )
+
+
+if __name__ == "__main__":
+    main()

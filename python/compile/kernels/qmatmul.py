@@ -1,0 +1,102 @@
+"""L1 Pallas kernel: tiled quantized matmul with multi-stage low-precision
+accumulation (paper Fig. 2b).
+
+The grid's K dimension *is* the paper's tile loop: each (bm, bn, T)
+block computes one tile's partial dot product, wraps it into the
+P_I-bit inner register, and accumulates the running output block in the
+P_O-bit outer register. On a real TPU this schedule maps to MXU passes
+with VMEM-resident blocks; here it is lowered with interpret=True so the
+CPU PJRT client (and the rust runtime) can execute the same HLO — see
+DESIGN.md §Hardware-Adaptation.
+
+VMEM budget per grid step (int32):
+    bm*T + T*bn + bm*bn words = (bm + bn) * T + bm*bn
+e.g. bm=bn=64, T=128: 64 KiB — comfortably under the ~16 MiB VMEM of a
+TPU core, leaving room for double buffering.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _wrap(v, bits: int):
+    """Two's-complement wrap into a `bits`-bit register (int32 domain).
+
+    The kernel's physical carrier is int32, so a register of ≥ 31 bits is
+    exact here and the wrap is the identity (1 << 31 would also overflow
+    the int32 modulus).
+    """
+    if bits >= 31:
+        return v
+    lo = -(1 << (bits - 1))
+    width = 1 << bits
+    return (v - lo) % width + lo
+
+
+def _qmatmul_kernel(x_ref, w_ref, o_ref, *, p_inner: int, p_outer: int):
+    """One grid step: tile partial product -> inner wrap -> outer wrap."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    part = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.int32)
+    part = _wrap(part, p_inner)
+    o_ref[...] = _wrap(o_ref[...] + part, p_outer)
+
+
+def qmatmul(
+    x,
+    w,
+    *,
+    tile: int,
+    p_inner: int,
+    p_outer: int,
+    block_m: int = 32,
+    block_n: int = 32,
+    interpret: bool = True,
+):
+    """Multi-stage quantized matmul via Pallas.
+
+    x: (M, K) int32 activation codes; w: (K, N) int32 weight codes.
+    K must be divisible by `tile`, M by block_m, N by block_n (the AOT
+    path pads; the kernel itself stays power-of-two regular, as a Mosaic
+    lowering would require).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"shape mismatch {x.shape} @ {w.shape}"
+    assert k % tile == 0, f"K={k} not divisible by tile={tile}"
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    assert m % bm == 0 and n % bn == 0, f"M={m}/N={n} not divisible by blocks"
+    grid = (m // bm, n // bn, k // tile)
+    kernel = functools.partial(_qmatmul_kernel, p_inner=p_inner, p_outer=p_outer)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, tile), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tile, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(x, w)
+
+
+def vmem_words(block_m: int, block_n: int, tile: int) -> int:
+    """int32 words resident per grid step (for the DESIGN.md roofline
+    estimate)."""
+    return (block_m + block_n) * tile + block_m * block_n
+
+
+def dequantize(acc, w_scales, x_scale, x_zero_point, w_code_sums):
+    """Turn integer accumulator outputs into real values:
+    y = s_w ⊙ s_x · (acc − z_x · Σ_k q) — the zero-point correction the
+    rust QuantLinear applies (linear.rs)."""
+    corrected = acc - x_zero_point * w_code_sums[None, :]
+    return (w_scales[None, :] * x_scale) * corrected.astype(jnp.float32)

@@ -1,0 +1,74 @@
+"""Pure-jnp oracle for the multi-stage quantized matmul kernel.
+
+This is the correctness ground truth for the Pallas kernel
+(`qmatmul.py`) and mirrors the rust accumulator simulator
+(`rust/src/accum/simulator.rs`). Two's-complement addition is
+associative mod 2^P, so wrapping each tile's partial sum once is
+bit-identical to wrapping after every MAC — the property the rust
+tests also rely on.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def wrap_twos_complement(v, bits: int):
+    """Wrap integer values into a `bits`-bit two's-complement register.
+
+    Works on int32/int64 jnp or numpy arrays. Uses floor-mod so negative
+    values wrap exactly like hardware.
+    """
+    lo = -(1 << (bits - 1))
+    width = 1 << bits
+    return (v - lo) % width + lo
+
+
+def qmatmul_ref(x, w, tile: int, p_inner: int, p_outer: int):
+    """Reference multi-stage quantized matmul.
+
+    x: (M, K) integer activation codes (unsigned range, stored int32).
+    w: (K, N) integer weight codes (signed alphabet, stored int32).
+    Each K-tile of size `tile` accumulates in a p_inner-bit register;
+    the partial sums accumulate in a p_outer-bit register (paper Fig. 2b,
+    Eq. 22).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"shape mismatch {x.shape} @ {w.shape}"
+    # numpy int64 on purpose: jax may run with x64 disabled, which would
+    # silently truncate the exact arithmetic this oracle depends on.
+    x64 = np.asarray(x, np.int64)
+    w64 = np.asarray(w, np.int64)
+    acc = np.zeros((m, n), np.int64)
+    for start in range(0, k, tile):
+        stop = min(start + tile, k)
+        part = x64[:, start:stop] @ w64[start:stop, :]
+        part = np.asarray(wrap_twos_complement(part, p_inner))
+        acc = np.asarray(wrap_twos_complement(acc + part, p_outer))
+    return jnp.asarray(acc, jnp.int32)
+
+
+def qmatmul_exact(x, w):
+    """Exact int64 matmul (what a wide accumulator would produce)."""
+    return np.asarray(x, np.int64) @ np.asarray(w, np.int64)
+
+
+def overflow_count_ref(x, w, tile: int, p_inner: int, p_outer: int) -> int:
+    """Count tile partials / outer sums that left their register range
+    (diagnostic mirror of the rust `Checked` mode, counted per tile)."""
+    x64 = np.asarray(x, np.int64)
+    w64 = np.asarray(w, np.int64)
+    m, k = x64.shape
+    cap_i = (1 << (p_inner - 1)) - 1
+    cap_o = (1 << (p_outer - 1)) - 1
+    count = 0
+    acc = np.zeros((m, w64.shape[1]), np.int64)
+    for start in range(0, k, tile):
+        stop = min(start + tile, k)
+        part = x64[:, start:stop] @ w64[start:stop, :]
+        count += int((np.abs(part) > cap_i).sum())
+        part = np.asarray(wrap_twos_complement(part, p_inner))
+        acc = acc + part
+        count += int((np.abs(acc) > cap_o).sum())
+        acc = np.asarray(wrap_twos_complement(acc, p_outer))
+    return count

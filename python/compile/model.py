@@ -1,0 +1,275 @@
+"""L2: the pico-LM transformer and glyph MLP in pure JAX.
+
+Semantics mirror the rust inference substrate exactly (tanh-GELU,
+LayerNorm eps 1e-5, learned positions, optional parallel residual,
+float head without bias); a parity test on exported weights checks
+rust-vs-jax logits agree. Parameters live in a flat dict keyed by the
+same tensor names the rust loader reads (`b0.wq.w`, `ln_f.g`, ...),
+with weight matrices stored [out, in].
+
+The quantized forward path (`lm_forward_quant`) routes every linear
+through the L1 Pallas kernel so the whole multi-stage integer datapath
+lowers into one HLO artifact.
+"""
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.qmatmul import dequantize, qmatmul
+
+
+@dataclass(frozen=True)
+class LmConfig:
+    name: str
+    vocab: int = 64
+    d_model: int = 56
+    n_layers: int = 4
+    n_heads: int = 7
+    d_ff: int = 224
+    max_seq: int = 64
+    act: str = "gelu"  # "gelu" | "relu"
+    parallel_residual: bool = True
+
+    def param_specs(self):
+        """(name, shape) pairs — the manifest's tensor table."""
+        d, ff, v, s = self.d_model, self.d_ff, self.vocab, self.max_seq
+        specs = [("embed", (v, d)), ("pos", (s, d))]
+        for b in range(self.n_layers):
+            p = f"b{b}"
+            specs += [
+                (f"{p}.ln1.g", (d,)),
+                (f"{p}.ln1.b", (d,)),
+                (f"{p}.ln2.g", (d,)),
+                (f"{p}.ln2.b", (d,)),
+            ]
+            for lin, (o, i) in [
+                ("wq", (d, d)),
+                ("wk", (d, d)),
+                ("wv", (d, d)),
+                ("wo", (d, d)),
+                ("fc1", (ff, d)),
+                ("fc2", (d, ff)),
+            ]:
+                specs += [(f"{p}.{lin}.w", (o, i)), (f"{p}.{lin}.b", (o,))]
+        specs += [("ln_f.g", (d,)), ("ln_f.b", (d,)), ("head.w", (v, d))]
+        return specs
+
+
+def lm_init(cfg: LmConfig, key) -> dict:
+    """Initialize parameters (GPT-2-style scaled normal)."""
+    params = {}
+    for name, shape in cfg.param_specs():
+        key, sub = jax.random.split(key)
+        if name.endswith(".g"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith(".b") and len(shape) == 1:
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            std = 0.08 if name in ("embed", "pos") else 0.06
+            params[name] = jax.random.normal(sub, shape, jnp.float32) * std
+    return params
+
+
+def _act(cfg: LmConfig, x):
+    if cfg.act == "relu":
+        return jax.nn.relu(x)
+    return jax.nn.gelu(x, approximate=True)  # tanh approximation == rust
+
+
+def _ln(x, g, b, eps=1e-5):
+    mean = x.mean(-1, keepdims=True)
+    var = ((x - mean) ** 2).mean(-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * g + b
+
+
+def _linear(p, prefix, x):
+    # weights stored [out, in]; x is (..., in)
+    return x @ p[f"{prefix}.w"].T + p[f"{prefix}.b"]
+
+
+def _attention(cfg: LmConfig, q, k, v):
+    s, d = q.shape[-2], q.shape[-1]
+    h = cfg.n_heads
+    hd = d // h
+    qh = q.reshape(*q.shape[:-1], h, hd)
+    kh = k.reshape(*k.shape[:-1], h, hd)
+    vh = v.reshape(*v.shape[:-1], h, hd)
+    scores = jnp.einsum("...qhd,...khd->...hqk", qh, kh) / jnp.sqrt(hd)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask, scores, -1e9)
+    attn = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("...hqk,...khd->...qhd", attn, vh)
+    return out.reshape(*q.shape)
+
+
+def lm_forward(cfg: LmConfig, params: dict, tokens):
+    """Float forward: tokens (B, S) int -> logits (B, S, vocab)."""
+    tokens = tokens.astype(jnp.int32)
+    s = tokens.shape[-1]
+    h = params["embed"][tokens] + params["pos"][:s]
+    for bi in range(cfg.n_layers):
+        p = f"b{bi}"
+        ln1 = _ln(h, params[f"{p}.ln1.g"], params[f"{p}.ln1.b"])
+        q = _linear(params, f"{p}.wq", ln1)
+        k = _linear(params, f"{p}.wk", ln1)
+        v = _linear(params, f"{p}.wv", ln1)
+        mix = _attention(cfg, q, k, v)
+        attn_out = _linear(params, f"{p}.wo", mix)
+        if not cfg.parallel_residual:
+            h = h + attn_out
+        ln2 = _ln(h, params[f"{p}.ln2.g"], params[f"{p}.ln2.b"])
+        ff = _act(cfg, _linear(params, f"{p}.fc1", ln2))
+        ff_out = _linear(params, f"{p}.fc2", ff)
+        h = h + attn_out + ff_out if cfg.parallel_residual else h + ff_out
+    h = _ln(h, params["ln_f.g"], params["ln_f.b"])
+    return h @ params["head.w"].T
+
+
+def lm_loss(cfg: LmConfig, params: dict, tokens):
+    """Mean next-token cross entropy over a batch (B, S)."""
+    logits = lm_forward(cfg, params, tokens)
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = tokens[:, 1:].astype(jnp.int32)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)
+    return nll.mean()
+
+
+# ---------------------------------------------------------------------------
+# Quantized path — routes linears through the Pallas kernel.
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class QuantSpec:
+    """Static quantization metadata for the AOT quantized forward."""
+
+    act_bits: int = 8
+    tile: int = 64
+    p_inner: int = 16
+    p_outer: int = 20
+    block_m: int = 16
+    block_n: int = 8
+
+
+def quant_linear_kernel(x, w_codes, w_scales, x_scale, x_zp, spec: QuantSpec):
+    """Quantize activations, run the Pallas integer kernel, dequantize.
+
+    x: (M, K) float; w_codes: (K, N) int32; returns (M, N) float.
+    Shapes must satisfy the kernel's divisibility constraints (the AOT
+    wrapper pads K / M / N as needed).
+    """
+    nu = (1 << spec.act_bits) - 1
+    codes = jnp.clip(jnp.round(x / x_scale) + x_zp, 0, nu).astype(jnp.int32)
+    acc = qmatmul(
+        codes,
+        w_codes,
+        tile=spec.tile,
+        p_inner=spec.p_inner,
+        p_outer=spec.p_outer,
+        block_m=spec.block_m,
+        block_n=spec.block_n,
+    )
+    sums = w_codes.sum(axis=0)
+    return dequantize(acc, w_scales, x_scale, x_zp, sums)
+
+
+def pad_to(x, axis: int, mult: int):
+    """Zero-pad `axis` of x up to a multiple of `mult`."""
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+# ---------------------------------------------------------------------------
+# Glyph MLP
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MlpConfig:
+    name: str
+    input_dim: int = 256
+    hidden: tuple = (128, 128)
+    classes: int = 10
+    act: str = "relu"
+    residual: bool = False
+
+    def param_specs(self):
+        specs = []
+        prev = self.input_dim
+        for i, hdim in enumerate(self.hidden):
+            specs += [(f"l{i}.w", (hdim, prev)), (f"l{i}.b", (hdim,))]
+            prev = hdim
+        specs += [("head.w", (self.classes, prev)), ("head.b", (self.classes,))]
+        return specs
+
+
+def mlp_init(cfg: MlpConfig, key) -> dict:
+    params = {}
+    for name, shape in cfg.param_specs():
+        key, sub = jax.random.split(key)
+        if name.endswith(".b"):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            fan_in = shape[1]
+            params[name] = jax.random.normal(sub, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+    return params
+
+
+def mlp_forward(cfg: MlpConfig, params: dict, x):
+    """x (B, input_dim) -> logits (B, classes). Mirrors rust Mlp::forward:
+    activation after every hidden layer, optional equal-width residual."""
+    h = x
+    for i in range(len(cfg.hidden)):
+        out = h @ params[f"l{i}.w"].T + params[f"l{i}.b"]
+        out = jax.nn.relu(out) if cfg.act == "relu" else jax.nn.gelu(out, approximate=True)
+        if cfg.residual and out.shape == h.shape:
+            out = out + h
+        h = out
+    return h @ params["head.w"].T + params["head.b"]
+
+
+def mlp_loss(cfg: MlpConfig, params: dict, x, y):
+    logits = mlp_forward(cfg, params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, y[:, None].astype(jnp.int32), axis=-1).mean()
+
+
+# ---------------------------------------------------------------------------
+# The model zoo (DESIGN.md §2 substitution table)
+# ---------------------------------------------------------------------------
+
+LM_ZOO = {
+    # Pythia-like ladder: width grows, the accumulator experiments' K with it
+    "pico-70k": LmConfig("pico-70k", d_model=40, n_layers=3, n_heads=5, d_ff=160),
+    "pico-160k": LmConfig("pico-160k", d_model=56, n_layers=4, n_heads=7, d_ff=224),
+    "pico-410k": LmConfig("pico-410k", d_model=80, n_layers=5, n_heads=10, d_ff=320),
+    "pico-1m": LmConfig("pico-1m", d_model=112, n_layers=7, n_heads=14, d_ff=448),
+    "pico-2m": LmConfig("pico-2m", d_model=144, n_layers=9, n_heads=18, d_ff=576),
+    # family variants (OPT-ish / GPT2-ish) at the 160k point
+    "pico-160k-opt": LmConfig(
+        "pico-160k-opt", d_model=56, n_layers=4, n_heads=7, d_ff=224, act="relu",
+        parallel_residual=False,
+    ),
+    "pico-160k-gpt2": LmConfig(
+        "pico-160k-gpt2", d_model=56, n_layers=4, n_heads=7, d_ff=224, act="gelu",
+        parallel_residual=False,
+    ),
+}
+
+IMG_ZOO = {
+    "glyph-mlp": MlpConfig("glyph-mlp", hidden=(128, 128)),
+    "glyph-res": MlpConfig("glyph-res", hidden=(96, 96, 96, 96, 96, 96), residual=True),
+    "glyph-bottleneck": MlpConfig("glyph-bottleneck", hidden=(160, 48, 160)),
+}
+
+
+def param_count(params: dict) -> int:
+    return int(sum(np.prod(v.shape) for v in params.values()))

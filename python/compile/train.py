@@ -1,0 +1,233 @@
+"""Train the model zoo and export weights for the rust coordinator.
+
+Own Adam (no optax in the image), jit-compiled update with donated
+params. Exports: raw little-endian f32 tensors + manifest.json per
+model (the format rust/src/model/loader.rs reads), plus a parity bundle
+(fixed input + jax logits) the rust integration tests check against.
+"""
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from .model import (
+    IMG_ZOO,
+    LM_ZOO,
+    LmConfig,
+    MlpConfig,
+    lm_forward,
+    lm_init,
+    lm_loss,
+    mlp_forward,
+    mlp_init,
+    mlp_loss,
+    param_count,
+)
+
+# ---------------------------------------------------------------------------
+# Adam
+# ---------------------------------------------------------------------------
+
+
+def adam_init(params):
+    zeros = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": zeros, "v": {k: jnp.zeros_like(v) for k, v in params.items()}, "t": jnp.zeros(())}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = {k: b1 * state["m"][k] + (1 - b1) * grads[k] for k in params}
+    v = {k: b2 * state["v"][k] + (1 - b2) * grads[k] ** 2 for k in params}
+    mhat = {k: m[k] / (1 - b1**t) for k in params}
+    vhat = {k: v[k] / (1 - b2**t) for k in params}
+    new_params = {k: params[k] - lr * mhat[k] / (jnp.sqrt(vhat[k]) + eps) for k in params}
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# Training loops
+# ---------------------------------------------------------------------------
+
+
+def batches_lm(tokens: np.ndarray, seq: int, batch: int, steps: int, seed: int):
+    rng = np.random.default_rng(seed)
+    max_start = len(tokens) - seq - 1
+    for _ in range(steps):
+        starts = rng.integers(0, max_start, batch)
+        yield np.stack([tokens[s : s + seq] for s in starts]).astype(np.int32)
+
+
+def train_lm(cfg: LmConfig, tokens: np.ndarray, steps: int, batch: int, lr: float, log):
+    key = jax.random.PRNGKey(hash(cfg.name) % (2**31))
+    params = lm_init(cfg, key)
+    opt = adam_init(params)
+    loss_grad = jax.jit(jax.value_and_grad(lambda p, b: lm_loss(cfg, p, b)))
+
+    @jax.jit
+    def step(params, opt, batch_tokens):
+        loss, grads = jax.value_and_grad(lambda p: lm_loss(cfg, p, batch_tokens))(params)
+        params, opt = adam_update(params, grads, opt, lr)
+        return params, opt, loss
+
+    _ = loss_grad  # retained for profiling hooks
+    t0 = time.time()
+    losses = []
+    for i, b in enumerate(batches_lm(tokens, cfg.max_seq, batch, steps, seed=42)):
+        params, opt, loss = step(params, opt, jnp.array(b))
+        losses.append(float(loss))
+        if i % max(1, steps // 10) == 0:
+            log(f"  step {i:>5} loss {float(loss):.3f}")
+    log(f"  trained {cfg.name} ({param_count(params)} params) in {time.time()-t0:.1f}s "
+        f"final loss {np.mean(losses[-20:]):.3f}")
+    return params, losses
+
+
+def train_mlp(cfg: MlpConfig, x: np.ndarray, y: np.ndarray, steps: int, batch: int, lr: float, log):
+    key = jax.random.PRNGKey(hash(cfg.name) % (2**31))
+    params = mlp_init(cfg, key)
+    opt = adam_init(params)
+
+    @jax.jit
+    def step(params, opt, bx, by):
+        loss, grads = jax.value_and_grad(lambda p: mlp_loss(cfg, p, bx, by))(params)
+        params, opt = adam_update(params, grads, opt, lr)
+        return params, opt, loss
+
+    rng = np.random.default_rng(7)
+    t0 = time.time()
+    loss = None
+    for i in range(steps):
+        idx = rng.integers(0, len(y), batch)
+        params, opt, loss = step(params, opt, jnp.array(x[idx]), jnp.array(y[idx]))
+        if i % max(1, steps // 5) == 0:
+            log(f"  step {i:>5} loss {float(loss):.3f}")
+    # train accuracy
+    logits = mlp_forward(cfg, params, jnp.array(x[:1000]))
+    acc = float((jnp.argmax(logits, -1) == jnp.array(y[:1000])).mean()) * 100
+    log(f"  trained {cfg.name} in {time.time()-t0:.1f}s final loss {float(loss):.3f} "
+        f"train acc {acc:.1f}%")
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Export
+# ---------------------------------------------------------------------------
+
+
+def export_model(out_dir: pathlib.Path, name: str, family: str, cfg, params: dict, extra: dict):
+    mdir = out_dir / name
+    mdir.mkdir(parents=True, exist_ok=True)
+    tensors = {}
+    for tname, val in params.items():
+        arr = np.asarray(val, dtype="<f4")
+        tensors[tname] = list(arr.shape)
+        (mdir / f"{tname}.bin").write_bytes(arr.tobytes())
+    manifest = {"name": name, "family": family, "tensors": tensors, **extra}
+    (mdir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+
+
+def export_lm(out_dir, cfg: LmConfig, params, losses):
+    arch = {
+        "vocab": cfg.vocab,
+        "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads,
+        "d_ff": cfg.d_ff,
+        "max_seq": cfg.max_seq,
+        "act": cfg.act,
+        "parallel_residual": cfg.parallel_residual,
+    }
+    train_info = {"final_loss": float(np.mean(losses[-20:])), "steps": len(losses)}
+    export_model(out_dir, cfg.name, "lm", cfg, params, {"lm": arch, "train": train_info})
+    # parity bundle: fixed tokens + jax logits for the rust parity test
+    tokens = np.arange(cfg.max_seq, dtype=np.int32) % cfg.vocab
+    logits = np.asarray(lm_forward(cfg, params, jnp.array(tokens[None, :])))[0]
+    mdir = out_dir / cfg.name
+    (mdir / "parity_tokens.bin").write_bytes(tokens.astype("<i4").tobytes())
+    (mdir / "parity_logits.bin").write_bytes(logits.astype("<f4").tobytes())
+    # loss curve for EXPERIMENTS.md
+    (mdir / "loss_curve.json").write_text(json.dumps([round(float(l), 4) for l in losses]))
+
+
+def export_img(out_dir, cfg: MlpConfig, params, sample_x):
+    arch = {
+        "input_dim": cfg.input_dim,
+        "hidden": list(cfg.hidden),
+        "classes": cfg.classes,
+        "act": cfg.act,
+        "residual": cfg.residual,
+    }
+    export_model(out_dir, cfg.name, "img", cfg, params, {"img": arch})
+    logits = np.asarray(mlp_forward(cfg, params, jnp.array(sample_x[:8])))
+    mdir = out_dir / cfg.name
+    (mdir / "parity_x.bin").write_bytes(np.asarray(sample_x[:8], "<f4").tobytes())
+    (mdir / "parity_logits.bin").write_bytes(logits.astype("<f4").tobytes())
+
+
+# LM training budget per model (steps, batch, lr)
+LM_BUDGET = {
+    "pico-70k": (700, 24, 3e-3),
+    "pico-160k": (700, 24, 2e-3),
+    "pico-410k": (500, 24, 2e-3),
+    "pico-1m": (350, 16, 1.5e-3),
+    "pico-2m": (250, 16, 1.5e-3),
+    "pico-160k-opt": (700, 24, 2e-3),
+    "pico-160k-gpt2": (700, 24, 2e-3),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/weights")
+    ap.add_argument("--data", default="../artifacts/data")
+    ap.add_argument("--models", default="all", help="comma list or 'all' / 'lm' / 'img'")
+    ap.add_argument("--quick", action="store_true", help="tiny budgets (CI smoke)")
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out)
+    data_dir = pathlib.Path(args.data)
+
+    sel = args.models.split(",") if args.models not in ("all", "lm", "img") else None
+
+    def want(name, family):
+        if sel is not None:
+            return name in sel
+        if args.models == "lm":
+            return family == "lm"
+        if args.models == "img":
+            return family == "img"
+        return True
+
+    log = print
+    tokens = np.frombuffer((data_dir / "corpus_train.bin").read_bytes(), np.uint8).astype(np.int32)
+
+    for name, cfg in LM_ZOO.items():
+        if not want(name, "lm"):
+            continue
+        steps, batch, lr = LM_BUDGET[name]
+        if args.quick:
+            steps = 30
+        log(f"training {name} ...")
+        params, losses = train_lm(cfg, tokens, steps, batch, lr, log)
+        export_lm(out_dir, cfg, params, losses)
+
+    gx = np.frombuffer((data_dir / "glyphs_train_x.bin").read_bytes(), "<f4").reshape(-1, 256)
+    gy = np.frombuffer((data_dir / "glyphs_train_y.bin").read_bytes(), np.uint8)
+    for name, cfg in IMG_ZOO.items():
+        if not want(name, "img"):
+            continue
+        steps = 60 if args.quick else 800
+        log(f"training {name} ...")
+        params = train_mlp(cfg, gx, gy, steps, 64, 1e-3, log)
+        export_img(out_dir, cfg, params, gx)
+
+    log("zoo export complete")
+
+
+if __name__ == "__main__":
+    main()

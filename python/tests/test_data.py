@@ -1,0 +1,67 @@
+"""Dataset generator tests: determinism, ranges, structure."""
+
+import numpy as np
+
+from compile.data import GLYPH_CLASSES, GLYPH_SIDE, VOCAB, make_corpus, make_glyphs
+
+
+class TestCorpus:
+    def test_deterministic(self):
+        a = make_corpus(5000, seed=1)
+        b = make_corpus(5000, seed=1)
+        np.testing.assert_array_equal(a, b)
+
+    def test_different_seeds_differ(self):
+        a = make_corpus(5000, seed=1)
+        b = make_corpus(5000, seed=2)
+        assert (a != b).any()
+
+    def test_range_and_dtype(self):
+        c = make_corpus(10_000, seed=3)
+        assert c.dtype == np.uint8
+        assert c.max() < VOCAB
+
+    def test_zipf_structure(self):
+        c = make_corpus(50_000, seed=4)
+        counts = np.bincount(c, minlength=VOCAB)
+        # the head symbols must be individually more frequent than the
+        # tail (the Markov mixing flattens the marginal somewhat)
+        assert counts[:8].mean() > 1.5 * counts[-32:].mean()
+
+    def test_markov_predictability(self):
+        # bigram entropy must be clearly below unigram entropy
+        c = make_corpus(100_000, seed=5).astype(np.int64)
+        uni = np.bincount(c, minlength=VOCAB) + 1e-9
+        p_uni = uni / uni.sum()
+        h_uni = -(p_uni * np.log(p_uni)).sum()
+        big = np.zeros((VOCAB, VOCAB)) + 1e-9
+        np.add.at(big, (c[:-1], c[1:]), 1)
+        p_cond = big / big.sum(axis=1, keepdims=True)
+        p_state = big.sum(axis=1) / big.sum()
+        h_big = -(p_state[:, None] * p_cond * np.log(p_cond)).sum()
+        assert h_big < 0.8 * h_uni, f"bigram {h_big:.2f} vs unigram {h_uni:.2f}"
+
+
+class TestGlyphs:
+    def test_shapes_and_labels(self):
+        x, y = make_glyphs(200, seed=1)
+        assert x.shape == (200, GLYPH_SIDE * GLYPH_SIDE)
+        assert x.dtype == np.float32
+        assert set(np.unique(y)) == set(range(GLYPH_CLASSES))
+
+    def test_deterministic(self):
+        x1, y1 = make_glyphs(50, seed=2)
+        x2, y2 = make_glyphs(50, seed=2)
+        np.testing.assert_array_equal(x1, x2)
+        np.testing.assert_array_equal(y1, y2)
+
+    def test_classes_separable(self):
+        # a nearest-class-mean classifier must beat chance comfortably —
+        # otherwise the accuracy experiments would be meaningless
+        x, y = make_glyphs(1000, seed=3)
+        means = np.stack([x[y == c].mean(axis=0) for c in range(GLYPH_CLASSES)])
+        tx, ty = make_glyphs(500, seed=4)
+        d = ((tx[:, None, :] - means[None, :, :]) ** 2).sum(-1)
+        pred = d.argmin(axis=1)
+        acc = (pred == ty).mean()
+        assert acc > 0.6, f"nearest-mean accuracy {acc}"

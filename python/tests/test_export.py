@@ -1,0 +1,82 @@
+"""Export-path tests: the tensor/manifest format contract with the rust
+loader, and the training-budget table's consistency with the zoo."""
+
+import json
+import pathlib
+
+import jax
+import numpy as np
+import pytest
+
+from compile.model import IMG_ZOO, LM_ZOO, LmConfig, lm_forward, lm_init, param_count
+from compile.train import LM_BUDGET, export_lm, export_model
+
+
+class TestBudgets:
+    def test_every_lm_has_a_budget(self):
+        for name in LM_ZOO:
+            assert name in LM_BUDGET, name
+
+    def test_zoo_param_ladder_monotone(self):
+        ladder = ["pico-70k", "pico-160k", "pico-410k", "pico-1m", "pico-2m"]
+        counts = []
+        for name in ladder:
+            cfg = LM_ZOO[name]
+            params = lm_init(cfg, jax.random.PRNGKey(0))
+            counts.append(param_count(params))
+        assert counts == sorted(counts), counts
+        # names roughly match the counts
+        assert 50_000 < counts[0] < 100_000
+        assert 1_500_000 < counts[-1] < 3_000_000
+
+
+class TestExportFormat:
+    @pytest.fixture(scope="class")
+    def exported(self, tmp_path_factory):
+        out = tmp_path_factory.mktemp("zoo")
+        cfg = LmConfig("tiny-exp", vocab=32, d_model=16, n_layers=1, n_heads=2,
+                       d_ff=64, max_seq=8)
+        params = lm_init(cfg, jax.random.PRNGKey(3))
+        export_lm(out, cfg, params, losses=[3.0, 2.5, 2.0])
+        return out / "tiny-exp", cfg, params
+
+    def test_manifest_lists_all_tensors(self, exported):
+        mdir, cfg, params = exported
+        man = json.loads((mdir / "manifest.json").read_text())
+        assert man["family"] == "lm"
+        assert set(man["tensors"].keys()) == set(params.keys())
+        assert man["lm"]["d_ff"] == 64
+        assert man["train"]["steps"] == 3
+
+    def test_tensors_roundtrip_little_endian(self, exported):
+        mdir, cfg, params = exported
+        man = json.loads((mdir / "manifest.json").read_text())
+        for name, shape in man["tensors"].items():
+            raw = np.frombuffer((mdir / f"{name}.bin").read_bytes(), "<f4")
+            assert raw.size == int(np.prod(shape)), name
+            np.testing.assert_allclose(raw.reshape(shape), np.asarray(params[name]), rtol=0,
+                                       atol=0)
+
+    def test_parity_bundle_matches_forward(self, exported):
+        mdir, cfg, params = exported
+        tokens = np.frombuffer((mdir / "parity_tokens.bin").read_bytes(), "<i4")
+        logits = np.frombuffer((mdir / "parity_logits.bin").read_bytes(), "<f4")
+        expect = np.asarray(lm_forward(cfg, params, np.asarray(tokens)[None, :]))[0]
+        np.testing.assert_allclose(logits.reshape(expect.shape), expect, atol=1e-5)
+
+    def test_loss_curve_written(self, exported):
+        mdir, _, _ = exported
+        curve = json.loads((mdir / "loss_curve.json").read_text())
+        assert curve == [3.0, 2.5, 2.0]
+
+
+class TestGenericExport:
+    def test_export_model_writes_every_tensor(self, tmp_path):
+        params = {"a.w": np.ones((2, 3), np.float32), "a.b": np.zeros(2, np.float32)}
+        export_model(tmp_path, "m", "img", None, params, {"img": {}})
+        man = json.loads((tmp_path / "m" / "manifest.json").read_text())
+        assert man["tensors"] == {"a.w": [2, 3], "a.b": [2]}
+        assert (tmp_path / "m" / "a.w.bin").stat().st_size == 24
+
+    def test_img_zoo_importable(self):
+        assert set(IMG_ZOO) == {"glyph-mlp", "glyph-res", "glyph-bottleneck"}

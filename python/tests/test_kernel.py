@@ -1,0 +1,143 @@
+"""L1 kernel correctness: Pallas qmatmul vs the pure-jnp/numpy oracle.
+
+Hypothesis sweeps shapes, tiles and register widths — the core
+correctness signal for the quantized datapath.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.qmatmul import qmatmul, vmem_words
+from compile.kernels.ref import (
+    overflow_count_ref,
+    qmatmul_exact,
+    qmatmul_ref,
+    wrap_twos_complement,
+)
+
+
+def random_codes(rng, m, k, n, act_bits=8, w_max=7):
+    x = rng.integers(0, (1 << act_bits) - 1, (m, k), dtype=np.int32)
+    w = rng.integers(-w_max, w_max + 1, (k, n), dtype=np.int32)
+    return x, w
+
+
+class TestWrap:
+    def test_wrap_matches_int8_cast(self):
+        v = np.arange(-1000, 1000, dtype=np.int64)
+        w = np.asarray(wrap_twos_complement(v, 8))
+        assert (w == v.astype(np.int8)).all()
+
+    def test_wrap_matches_int16_cast(self):
+        v = np.random.default_rng(0).integers(-(10**6), 10**6, 5000)
+        w = np.asarray(wrap_twos_complement(v, 16))
+        assert (w == v.astype(np.int16)).all()
+
+    def test_wrap_identity_in_range(self):
+        v = np.arange(-128, 128, dtype=np.int64)
+        assert (np.asarray(wrap_twos_complement(v, 8)) == v).all()
+
+
+class TestKernelVsRef:
+    @pytest.mark.parametrize("tile,p_inner", [(32, 12), (64, 16), (128, 16), (64, 20)])
+    def test_matches_ref_fixed_shapes(self, tile, p_inner):
+        rng = np.random.default_rng(tile * 1000 + p_inner)
+        m, k, n = 32, 256, 64
+        p_outer = p_inner + int(np.ceil(np.log2(k // tile)))
+        x, w = random_codes(rng, m, k, n)
+        out = np.asarray(qmatmul(jnp.array(x), jnp.array(w), tile=tile, p_inner=p_inner,
+                                 p_outer=p_outer))
+        ref = np.asarray(qmatmul_ref(x, w, tile, p_inner, p_outer))
+        np.testing.assert_array_equal(out, ref)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        mi=st.integers(1, 4),
+        ki=st.integers(1, 6),
+        ni=st.integers(1, 4),
+        tile_i=st.sampled_from([1, 2, 4]),
+        p_inner=st.integers(10, 24),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_hypothesis(self, mi, ki, ni, tile_i, p_inner, seed):
+        m, n = 8 * mi, 8 * ni
+        tile = 16 * tile_i
+        k = tile * ki
+        p_outer = min(31, p_inner + int(np.ceil(np.log2(max(1, k // tile)))))
+        rng = np.random.default_rng(seed)
+        x, w = random_codes(rng, m, k, n)
+        out = np.asarray(
+            qmatmul(jnp.array(x), jnp.array(w), tile=tile, p_inner=p_inner, p_outer=p_outer,
+                    block_m=8, block_n=8)
+        )
+        ref = np.asarray(qmatmul_ref(x, w, tile, p_inner, p_outer))
+        np.testing.assert_array_equal(out, ref)
+
+    def test_wide_register_equals_exact(self):
+        rng = np.random.default_rng(5)
+        x, w = random_codes(rng, 16, 128, 32)
+        out = np.asarray(qmatmul(jnp.array(x), jnp.array(w), tile=64, p_inner=30, p_outer=31,
+                                 block_m=16, block_n=32))
+        exact = qmatmul_exact(x, w)
+        np.testing.assert_array_equal(out.astype(np.int64), exact)
+
+    def test_narrow_register_wraps(self):
+        # all-max weights overflow a 12-bit tile accumulator
+        x = np.full((8, 64), 255, np.int32)
+        w = np.full((64, 8), 7, np.int32)
+        out = np.asarray(qmatmul(jnp.array(x), jnp.array(w), tile=64, p_inner=12, p_outer=12,
+                                 block_m=8, block_n=8))
+        exact = qmatmul_exact(x, w)
+        assert (out.astype(np.int64) != exact).any(), "must wrap"
+        assert overflow_count_ref(x, w, 64, 12, 12) > 0
+
+    def test_safe_budget_never_wraps(self):
+        # weights within the Eq.4/Eq.17 budget -> wrapped == exact
+        rng = np.random.default_rng(6)
+        k, tile, p, nbits = 128, 32, 14, 8
+        budget = (2 ** (p - 1) - 1) / (2**nbits - 1)
+        w = np.zeros((k, 16), np.int32)
+        for col in range(16):
+            pos = neg = 0.0
+            for i in range(k):
+                v = rng.integers(-5, 6)
+                t = i // tile
+                _ = t
+                if v >= 0 and pos + v <= budget:
+                    pos += v
+                    w[i, col] = v
+                elif v < 0 and neg - v <= budget:
+                    neg -= v
+                    w[i, col] = v
+            if (i + 1) % tile == 0:
+                pos = neg = 0.0
+        x = rng.integers(0, 255, (8, k), dtype=np.int32)
+        p_outer = p + int(np.ceil(np.log2(k // tile)))
+        out = np.asarray(qmatmul(jnp.array(x), jnp.array(w), tile=tile, p_inner=p,
+                                 p_outer=p_outer, block_m=8, block_n=16))
+        np.testing.assert_array_equal(out.astype(np.int64), qmatmul_exact(x, w))
+        assert overflow_count_ref(x, w, tile, p, p_outer) == 0
+
+    def test_monolithic_is_tile_equals_k(self):
+        rng = np.random.default_rng(7)
+        x, w = random_codes(rng, 8, 64, 8)
+        mono = np.asarray(qmatmul(jnp.array(x), jnp.array(w), tile=64, p_inner=16, p_outer=16,
+                                  block_m=8, block_n=8))
+        ref = np.asarray(qmatmul_ref(x, w, 64, 16, 16))
+        np.testing.assert_array_equal(mono, ref)
+
+
+class TestVmem:
+    def test_vmem_budget_documented_blocks(self):
+        # the DESIGN.md example: bm=bn=64, T=128 -> 64Ki words = 256 KiB
+        words = vmem_words(64, 64, 128)
+        assert words == (64 + 64) * 128 + 64 * 64
+        assert words * 4 < 16 * 1024 * 1024, "fits VMEM with headroom"
+
+    def test_kernel_rejects_bad_tile(self):
+        x = jnp.zeros((8, 100), jnp.int32)
+        w = jnp.zeros((100, 8), jnp.int32)
+        with pytest.raises(AssertionError):
+            qmatmul(x, w, tile=64, p_inner=16, p_outer=16)

@@ -1,0 +1,144 @@
+"""L2 model tests: shapes, causality, training signal, quantized path."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    IMG_ZOO,
+    LM_ZOO,
+    LmConfig,
+    MlpConfig,
+    QuantSpec,
+    lm_forward,
+    lm_init,
+    lm_loss,
+    mlp_forward,
+    mlp_init,
+    mlp_loss,
+    param_count,
+    quant_linear_kernel,
+)
+
+TINY = LmConfig("tiny", vocab=32, d_model=16, n_layers=2, n_heads=2, d_ff=32, max_seq=16)
+
+
+@pytest.fixture(scope="module")
+def tiny_params():
+    return lm_init(TINY, jax.random.PRNGKey(0))
+
+
+class TestLmForward:
+    def test_shapes(self, tiny_params):
+        toks = jnp.arange(16, dtype=jnp.int32)[None, :] % 32
+        logits = lm_forward(TINY, tiny_params, toks)
+        assert logits.shape == (1, 16, 32)
+        assert bool(jnp.isfinite(logits).all())
+
+    def test_causality(self, tiny_params):
+        a = jnp.array([[1, 2, 3, 4, 5]], jnp.int32)
+        b = jnp.array([[1, 2, 3, 4, 31]], jnp.int32)
+        la = lm_forward(TINY, tiny_params, a)
+        lb = lm_forward(TINY, tiny_params, b)
+        np.testing.assert_allclose(np.asarray(la[0, :4]), np.asarray(lb[0, :4]), atol=1e-5)
+
+    def test_parallel_residual_differs(self, tiny_params):
+        seq_cfg = LmConfig("t2", vocab=32, d_model=16, n_layers=2, n_heads=2, d_ff=32,
+                           max_seq=16, parallel_residual=False)
+        toks = jnp.arange(8, dtype=jnp.int32)[None, :]
+        la = lm_forward(TINY, tiny_params, toks)
+        lb = lm_forward(seq_cfg, tiny_params, toks)
+        assert float(jnp.abs(la - lb).max()) > 1e-6
+
+    def test_param_specs_cover_params(self, tiny_params):
+        spec_names = {n for n, _ in TINY.param_specs()}
+        assert spec_names == set(tiny_params.keys())
+        for name, shape in TINY.param_specs():
+            assert tiny_params[name].shape == shape, name
+
+    def test_zoo_configs_valid(self):
+        for name, cfg in LM_ZOO.items():
+            assert cfg.d_model % cfg.n_heads == 0, name
+            assert cfg.d_ff == 4 * cfg.d_model, name
+
+
+class TestTraining:
+    def test_loss_decreases(self):
+        rng = np.random.default_rng(0)
+        # deterministic-ish data: token t+1 = (t*2) % 32
+        seqs = []
+        for _ in range(8):
+            start = rng.integers(0, 32)
+            s = [start]
+            for _ in range(15):
+                s.append((s[-1] * 2 + 1) % 32)
+            seqs.append(s)
+        batch = jnp.array(seqs, jnp.int32)
+        params = lm_init(TINY, jax.random.PRNGKey(1))
+        loss0 = float(lm_loss(TINY, params, batch))
+        grad_fn = jax.jit(jax.value_and_grad(lambda p: lm_loss(TINY, p, batch)))
+        for _ in range(40):
+            loss, g = grad_fn(params)
+            params = {k: params[k] - 0.05 * g[k] for k in params}
+        loss1 = float(loss)
+        assert loss1 < loss0 * 0.7, f"{loss0} -> {loss1}"
+
+    def test_mlp_loss_decreases(self):
+        cfg = MlpConfig("t", input_dim=16, hidden=(24,), classes=4)
+        rng = np.random.default_rng(1)
+        x = rng.normal(size=(64, 16)).astype(np.float32)
+        y = (x[:, 0] > 0).astype(np.int32) + 2 * (x[:, 1] > 0).astype(np.int32)
+        params = mlp_init(cfg, jax.random.PRNGKey(2))
+        loss0 = float(mlp_loss(cfg, params, jnp.array(x), jnp.array(y)))
+        grad_fn = jax.jit(jax.value_and_grad(lambda p: mlp_loss(cfg, p, jnp.array(x), jnp.array(y))))
+        for _ in range(60):
+            loss, g = grad_fn(params)
+            params = {k: params[k] - 0.1 * g[k] for k in params}
+        assert float(loss) < loss0 * 0.5
+
+    def test_img_zoo_configs(self):
+        for name, cfg in IMG_ZOO.items():
+            assert cfg.input_dim == 256, name
+            assert cfg.classes == 10, name
+
+
+class TestQuantizedPath:
+    def test_quant_linear_approximates_float(self):
+        rng = np.random.default_rng(3)
+        m, k, n = 16, 64, 8
+        x = rng.normal(size=(m, k)).astype(np.float32)
+        w_float = rng.normal(size=(k, n)).astype(np.float32) * 0.2
+        # simple symmetric weight quant at 8 bits per column
+        scales = np.abs(w_float).max(axis=0) / 127.0
+        codes = np.clip(np.round(w_float / scales), -127, 127).astype(np.int32)
+        x_scale = float(np.abs(x).max() * 2 / 255.0)
+        spec = QuantSpec(act_bits=8, tile=32, p_inner=24, p_outer=26, block_m=8, block_n=8)
+        y = np.asarray(
+            quant_linear_kernel(
+                jnp.array(x), jnp.array(codes), jnp.array(scales.astype(np.float32)),
+                x_scale, 128, spec,
+            )
+        )
+        y_ref = x @ w_float
+        err = np.abs(y - y_ref).max() / (np.abs(y_ref).max() + 1e-9)
+        assert err < 0.05, f"relative error {err}"
+
+    def test_zero_point_correction_exact(self):
+        # integer identity: kernel-with-zp == shifted exact dot
+        rng = np.random.default_rng(4)
+        x_codes = rng.integers(0, 255, (8, 32), dtype=np.int32)
+        w = rng.integers(-7, 8, (32, 8), dtype=np.int32)
+        zp = 77
+        from compile.kernels.qmatmul import dequantize, qmatmul
+
+        acc = qmatmul(jnp.array(x_codes), jnp.array(w), tile=32, p_inner=30, p_outer=31,
+                      block_m=8, block_n=8)
+        y = np.asarray(dequantize(acc, jnp.ones(8), 1.0, zp, jnp.array(w.sum(axis=0))))
+        ref = (x_codes.astype(np.int64) - zp) @ w.astype(np.int64)
+        np.testing.assert_allclose(y, ref.astype(np.float32), rtol=0, atol=0)
+
+    def test_param_count(self, tiny_params):
+        n = param_count(tiny_params)
+        specs = TINY.param_specs()
+        assert n == sum(int(np.prod(s)) for _, s in specs)

@@ -1,0 +1,57 @@
+//! Bench: regenerate the paper's Table 2 — the ablation isolating
+//! (a) error correction (EP-init vs AXE-RTZ), (b) rounding function
+//! (AXE-RTZ vs AXE-RTN), and (c) the soft ℓ1 constraint (AXE-RTN vs
+//! AXE-HCO), at W4A8 with a 20-bit monolithic accumulator on two LM
+//! variants.
+
+use axe::coordinator::experiments::run_lm_config;
+use axe::coordinator::PipelineConfig;
+use axe::eval::load_corpus_split_or_synth;
+use axe::model::{load_named, Model};
+use axe::quant::{AccumTarget, Algorithm, Method, Rounding};
+use axe::util::Table;
+
+fn main() -> anyhow::Result<()> {
+    let p = 16u32; // binding regime for K <= 224 (paper used 20 at K ~ 3k)
+    let models = ["pico-160k-opt", "pico-160k"];
+    println!("### Table 2 analog — W4A8, monolithic {p}-bit accumulator (scaled to this zoo's width)\n");
+    let mut table = Table::new(&["Algorithm", "Model", "EP-init", "AXE-RTZ", "AXE-RTN", "AXE-HCO"]);
+    for algo in [Algorithm::Gpfq, Algorithm::Optq] {
+        for name in &models {
+            let Ok(Model::Lm(base)) = load_named(name) else {
+                eprintln!("[ablation] {name} missing — run `make artifacts`");
+                continue;
+            };
+            let seq = base.cfg.max_seq;
+            let train = load_corpus_split_or_synth("train", base.cfg.vocab);
+            let val = load_corpus_split_or_synth("val", base.cfg.vocab);
+            let calib: Vec<&[u16]> = train.chunks_exact(seq).take(10).collect();
+            let mut cells = vec![algo.name().to_string(), name.to_string()];
+            for variant in ["ep", "rtz", "rtn", "hco"] {
+                let mut cfg = PipelineConfig::new(
+                    algo,
+                    if variant == "ep" { Method::EpInit } else { Method::Axe },
+                    4,
+                    8,
+                );
+                cfg.target = AccumTarget::Monolithic { p_bits: p };
+                match variant {
+                    "rtz" => cfg.rounding = Rounding::Zero,
+                    "hco" => cfg.soft = false,
+                    _ => {}
+                }
+                let pt = run_lm_config(&base, &calib, &val, seq, 16, &cfg)?;
+                assert!(pt.safe, "all four variants must be provably safe");
+                cells.push(format!("{:.1}", pt.metric));
+            }
+            table.row(&cells);
+        }
+    }
+    println!("{}", table.render());
+    println!(
+        "Expected ordering (paper Table 2): EP-init ≫ AXE-RTZ > AXE-HCO ≥ AXE-RTN\n\
+         — the EP-init→RTZ gap is error correction, RTZ→RTN is the rounding\n\
+         function, RTN→HCO is the soft ℓ1 penalty."
+    );
+    Ok(())
+}

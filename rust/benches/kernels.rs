@@ -1,0 +1,106 @@
+//! Micro-benchmarks of the hot paths (feeds EXPERIMENTS.md §Perf):
+//! - f64 GEMM (calibration / gram construction)
+//! - integer quantized-linear forward: exact vs simulated datapaths
+//! - GPFQ / GPFQ* / OPTQ per-layer quantization throughput
+//! - transformer forward / perplexity evaluation throughput
+//! - PJRT qmatmul kernel dispatch (when artifacts exist)
+
+use axe::bench_support::{bench, throughput};
+use axe::linalg::Mat;
+use axe::model::{Datapath, QuantLinear};
+use axe::quant::{
+    gpfq_quantize, gpfq_quantize_grams, optq_quantize, ActQuantizer, GpfqParams, OptqParams,
+};
+use axe::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(1);
+
+    // ---- GEMM
+    for &n in &[128usize, 256, 512] {
+        let a = Mat::random_normal(n, n, &mut rng, 1.0);
+        let b = Mat::random_normal(n, n, &mut rng, 1.0);
+        let flops = 2.0 * (n * n * n) as f64;
+        let s = bench(&format!("gemm f64 {n}x{n}x{n}"), 2, 5, || {
+            std::hint::black_box(a.matmul(&b));
+        });
+        println!("    -> {:.2} GFLOP/s", flops / s.median / 1e9);
+    }
+
+    // ---- quantized linear forward (exact vs simulated)
+    let (k, c) = (512usize, 512usize);
+    let w = Mat::random_normal(k, c, &mut rng, 0.3);
+    let x_cal = Mat::random_normal(k, 64, &mut rng, 1.0);
+    let result = gpfq_quantize(&w, &x_cal, &x_cal, &GpfqParams::base(4, 8));
+    let act = ActQuantizer::calibrate(&x_cal.data().to_vec(), 8, 0.999);
+    let mk = |dp: Datapath| QuantLinear::from_result(&result, vec![0.0; c], act, dp);
+    let x_row: Vec<f32> = (0..k).map(|_| rng.normal() as f32).collect();
+    let mut y = vec![0.0f32; c];
+    let mut scratch = vec![0i64; k];
+
+    let ql = mk(Datapath::Exact);
+    let s = bench("qlinear 512x512 exact", 3, 20, || {
+        ql.forward_row(&x_row, &mut y, &mut scratch);
+    });
+    println!("    -> {:.1} M MAC/s", (k * c) as f64 / s.median / 1e6);
+
+    let ql_sim = mk(Datapath::Simulated {
+        tile: 64,
+        inner_bits: 16,
+        outer_bits: 19,
+        mode: axe::accum::OverflowMode::Wraparound,
+    });
+    let s = bench("qlinear 512x512 simulated 64x16b", 3, 20, || {
+        ql_sim.forward_row(&x_row, &mut y, &mut scratch);
+    });
+    println!("    -> {:.1} M MAC/s", (k * c) as f64 / s.median / 1e6);
+
+    // ---- PTQ algorithm throughput (one layer, K=C=256, D=256)
+    let (k2, c2, d2) = (256usize, 256usize, 256usize);
+    let w2 = Mat::random_normal(k2, c2, &mut rng, 0.3);
+    let x2 = Mat::random_normal(k2, d2, &mut rng, 1.0);
+    let gram = x2.gram();
+    let g = x2.gram(); // X == X̃ here
+    bench("gpfq layer 256x256 (D=256)", 1, 3, || {
+        std::hint::black_box(gpfq_quantize(&w2, &x2, &x2, &GpfqParams::base(4, 8)));
+    });
+    bench("gpfq* (mem-eff) layer 256x256", 1, 3, || {
+        std::hint::black_box(
+            gpfq_quantize_grams(&w2, &g, &gram, &GpfqParams::base(4, 8), 0.01).unwrap(),
+        );
+    });
+    bench("optq layer 256x256", 1, 3, || {
+        std::hint::black_box(optq_quantize(&w2, &gram, &OptqParams::base(4, 8)).unwrap());
+    });
+
+    // ---- end-to-end eval throughput on a real model if present
+    if let Ok(axe::model::Model::Lm(m)) = axe::model::load_named("pico-160k") {
+        let val = axe::eval::load_corpus_split_or_synth("val", m.cfg.vocab);
+        let seq = m.cfg.max_seq;
+        let s = bench("perplexity pico-160k (16 seqs)", 1, 3, || {
+            std::hint::black_box(axe::eval::perplexity(&m, &val, seq, 16));
+        });
+        println!("    -> {:.0} tok/s", throughput(16 * seq, s.median));
+    }
+
+    // ---- PJRT kernel dispatch
+    if let Ok(rt) = axe::runtime::Runtime::new() {
+        if rt.list_artifacts().iter().any(|a| a == "qmatmul_t64_p16") {
+            let x: Vec<i32> = (0..32 * 256).map(|i| (i % 255) as i32).collect();
+            let wq: Vec<i32> = (0..256 * 64).map(|i| (i % 15) as i32 - 7).collect();
+            let xi = axe::runtime::I32Input::new(x, &[32, 256]);
+            let wi = axe::runtime::I32Input::new(wq, &[256, 64]);
+            let s = bench("pjrt qmatmul_t64_p16 (32x256x64)", 2, 10, || {
+                std::hint::black_box(rt.run_i32("qmatmul_t64_p16", &[xi_clone(&xi), wi_clone(&wi)]).unwrap());
+            });
+            println!("    -> {:.1} µs/dispatch", s.median * 1e6);
+        }
+    }
+}
+
+fn xi_clone(x: &axe::runtime::I32Input) -> axe::runtime::I32Input {
+    axe::runtime::I32Input::new(x.data.clone(), &x.dims)
+}
+fn wi_clone(x: &axe::runtime::I32Input) -> axe::runtime::I32Input {
+    axe::runtime::I32Input::new(x.data.clone(), &x.dims)
+}

@@ -1,0 +1,135 @@
+//! Bench: regenerate the paper's Figures 1 & 3 / Tables 4-7 — the
+//! Pareto frontier of accumulator width P vs model quality for
+//! naive bit-width manipulation, EP-init and AXE, on both GPFQ and
+//! OPTQ, for one LM and one image classifier.
+//!
+//! A reduced design-space grid keeps `cargo bench` under a few minutes;
+//! the full grid lives in `examples/pareto_sweep.rs`. Set
+//! AXE_BENCH_FULL=1 for the complete (M, N) space.
+
+use axe::coordinator::experiments::{
+    pareto_frontier, render_frontier, run_img_config, run_lm_config, MetricKind,
+};
+use axe::coordinator::PipelineConfig;
+use axe::eval::{load_corpus_split_or_synth, load_glyphs, synth_glyphs};
+use axe::model::{load_named, random_mlp, random_transformer, Activation, Model};
+use axe::quant::{AccumTarget, Algorithm, Method};
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::var("AXE_BENCH_FULL").is_ok();
+    let grid: Vec<(u32, u32)> = if full {
+        axe::coordinator::experiments::design_space(3, 8)
+    } else {
+        vec![(3, 3), (3, 6), (4, 6), (4, 8), (5, 8), (6, 8), (8, 8)]
+    };
+    // Naive bit-width manipulation bottoms out at P* = 14-15 here (Eq. 3
+    // at K = 224-256 with M = N = 3), so the discriminating regime — the
+    // paper's Fig. 1 left side — is P below that floor.
+    let p_values: Vec<u32> = if full {
+        (9..=20).collect()
+    } else {
+        vec![9, 10, 11, 12, 13, 14, 16, 20]
+    };
+
+    // ---- LM track (Fig. 1/3 bottom; Tables 5/7)
+    let lm = match load_named("pico-160k") {
+        Ok(Model::Lm(m)) => m,
+        _ => {
+            eprintln!("[pareto_frontier] artifacts missing; using a random pico model");
+            random_transformer(
+                axe::model::TransformerConfig {
+                    name: "pico-rand".into(),
+                    vocab: 64,
+                    d_model: 56,
+                    n_layers: 4,
+                    n_heads: 7,
+                    d_ff: 224,
+                    max_seq: 64,
+                    act: Activation::Gelu,
+                    parallel_residual: true,
+                },
+                1,
+            )
+        }
+    };
+    let seq = lm.cfg.max_seq;
+    let train = load_corpus_split_or_synth("train", lm.cfg.vocab);
+    let val = load_corpus_split_or_synth("val", lm.cfg.vocab);
+    let calib: Vec<&[u16]> = train.chunks_exact(seq).take(10).collect();
+
+    for algo in [Algorithm::Gpfq, Algorithm::Optq] {
+        for (method, label) in axe::coordinator::experiments::methods() {
+            let t0 = std::time::Instant::now();
+            let mut points = Vec::new();
+            for &(m, n) in &grid {
+                if method == Method::Naive {
+                    let cfg = PipelineConfig::new(algo, method, m, n);
+                    points.push(run_lm_config(&lm, &calib, &val, seq, 16, &cfg)?);
+                } else {
+                    for &p in &p_values {
+                        let mut cfg = PipelineConfig::new(algo, method, m, n);
+                        cfg.target = AccumTarget::Monolithic { p_bits: p };
+                        points.push(run_lm_config(&lm, &calib, &val, seq, 16, &cfg)?);
+                    }
+                }
+            }
+            let f = pareto_frontier(&points, MetricKind::Perplexity);
+            println!(
+                "{}\n({} configs in {:.1}s)\n",
+                render_frontier(
+                    &format!("LM {} + {label}", algo.name()),
+                    MetricKind::Perplexity,
+                    &f
+                ),
+                points.len(),
+                t0.elapsed().as_secs_f64()
+            );
+        }
+    }
+
+    // ---- image track (Fig. 1/3 top; Tables 4/6)
+    let img = match load_named("glyph-mlp") {
+        Ok(Model::Img(m)) => m,
+        _ => random_mlp(
+            axe::model::MlpConfig {
+                name: "glyph-rand".into(),
+                input_dim: 256,
+                hidden: vec![128, 128],
+                classes: 10,
+                act: Activation::Relu,
+                residual: false,
+            },
+            2,
+        ),
+    };
+    let gtrain = load_glyphs("train").unwrap_or_else(|_| synth_glyphs(1000, 16, 10, 1));
+    let gtest = load_glyphs("test").unwrap_or_else(|_| synth_glyphs(400, 16, 10, 2));
+    let gcalib: Vec<&[f32]> = (0..128.min(gtrain.len())).map(|i| gtrain.row(i)).collect();
+    for algo in [Algorithm::Gpfq, Algorithm::Optq] {
+        for (method, label) in axe::coordinator::experiments::methods() {
+            let mut points = Vec::new();
+            for &(m, n) in &grid {
+                if method == Method::Naive {
+                    let cfg = PipelineConfig::new(algo, method, m, n);
+                    points.push(run_img_config(&img, &gcalib, &gtest, &cfg)?);
+                } else {
+                    for &p in &p_values {
+                        let mut cfg = PipelineConfig::new(algo, method, m, n);
+                        cfg.target = AccumTarget::Monolithic { p_bits: p };
+                        points.push(run_img_config(&img, &gcalib, &gtest, &cfg)?);
+                    }
+                }
+            }
+            let f = pareto_frontier(&points, MetricKind::Accuracy);
+            println!(
+                "{}\n",
+                render_frontier(
+                    &format!("IMG {} + {label}", algo.name()),
+                    MetricKind::Accuracy,
+                    &f
+                )
+            );
+        }
+    }
+    Ok(())
+}

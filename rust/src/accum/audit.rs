@@ -1,0 +1,169 @@
+//! Overflow audit: verify the avoidance guarantee bit-exactly.
+//!
+//! For a channel with integer codes q and unsigned N-bit inputs, the
+//! extremal inputs are (Eq. 6): u_i = ν where q_i ≥ 0 else μ, and the
+//! mirror image v. The audit evaluates those two adversarial vectors
+//! per tile (they dominate every other input), plus randomized fuzzing
+//! as a defense-in-depth check on the simulator itself.
+
+use super::simulator::{dot_multistage, AccumSpec};
+use crate::quant::bounds::{outer_bits, worst_case_range};
+use crate::util::rng::Rng;
+
+/// Outcome of auditing one channel (or a whole layer, aggregated).
+#[derive(Clone, Debug, Default)]
+pub struct AuditReport {
+    /// Dot products audited (2 worst-case per tile + fuzz vectors).
+    pub cases: usize,
+    /// Cases in which a register left its range.
+    pub violations: usize,
+    /// Worst observed |accumulator| / register-capacity ratio.
+    pub worst_utilization: f64,
+}
+
+impl AuditReport {
+    pub fn merge(&mut self, other: &AuditReport) {
+        self.cases += other.cases;
+        self.violations += other.violations;
+        self.worst_utilization = self.worst_utilization.max(other.worst_utilization);
+    }
+
+    pub fn clean(&self) -> bool {
+        self.violations == 0
+    }
+}
+
+/// Audit one channel's codes against the worst-case inputs for a
+/// multi-stage (or monolithic: tile ≥ K) datapath.
+pub fn audit_channel(q: &[i64], act_bits: u32, p_inner: u32, tile: usize) -> AuditReport {
+    let nu = (1i64 << act_bits) - 1;
+    let mu = 0i64;
+    let inner_cap = ((1i128 << (p_inner - 1)) - 1) as f64;
+    let p_outer = outer_bits(p_inner, q.len(), tile);
+    let outer_cap = ((1i128 << (p_outer - 1)) - 1) as f64;
+
+    let mut report = AuditReport::default();
+    // Worst case per tile (inner registers).
+    for chunk in q.chunks(tile) {
+        let (hi, lo) = worst_case_range(chunk, mu, nu);
+        report.cases += 2;
+        let util = (hi.max(-lo)) as f64 / inner_cap;
+        report.worst_utilization = report.worst_utilization.max(util);
+        if util > 1.0 {
+            report.violations += 1;
+        }
+    }
+    // Worst case for the whole dot product (outer register). The global
+    // extremal input simultaneously maximizes every tile, so it is also
+    // the outer worst case.
+    let (hi, lo) = worst_case_range(q, mu, nu);
+    report.cases += 2;
+    let util = (hi.max(-lo)) as f64 / outer_cap;
+    if util > 1.0 {
+        report.violations += 1;
+    }
+    report
+}
+
+/// Randomized fuzz audit through the actual simulator: draws random
+/// input vectors and checks the wraparound datapath agrees with exact
+/// arithmetic (i.e. no overflow events fired).
+pub fn audit_random(
+    q: &[i64],
+    act_bits: u32,
+    p_inner: u32,
+    tile: usize,
+    fuzz: usize,
+    rng: &mut Rng,
+) -> AuditReport {
+    let nu = (1i64 << act_bits) - 1;
+    let p_outer = outer_bits(p_inner, q.len(), tile);
+    let inner = AccumSpec::wraparound(p_inner);
+    let outer = AccumSpec::wraparound(p_outer);
+    let mut report = AuditReport::default();
+    let mut x = vec![0i64; q.len()];
+    for _ in 0..fuzz {
+        for xi in &mut x {
+            *xi = rng.int_in(0, nu);
+        }
+        let out = dot_multistage(&x, q, tile, inner, outer);
+        report.cases += 1;
+        if out.overflows > 0 {
+            report.violations += 1;
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::bounds::side_budget;
+
+    fn budget_codes(k: usize, tile: usize, p: u32, n: u32, seed: u64) -> Vec<i64> {
+        let b = side_budget(p, n, 0.0);
+        let mut rng = Rng::new(seed);
+        let mut q = vec![0i64; k];
+        let nt = k.div_ceil(tile);
+        let (mut pos, mut neg) = (vec![0.0; nt], vec![0.0; nt]);
+        for (i, qi) in q.iter_mut().enumerate() {
+            let t = i / tile;
+            let v = rng.int_in(-7, 7);
+            if v >= 0 && pos[t] + v as f64 <= b {
+                pos[t] += v as f64;
+                *qi = v;
+            } else if v < 0 && neg[t] + (-v) as f64 <= b {
+                neg[t] += (-v) as f64;
+                *qi = v;
+            }
+        }
+        q
+    }
+
+    #[test]
+    fn safe_codes_audit_clean() {
+        let q = budget_codes(128, 32, 12, 8, 80);
+        let r = audit_channel(&q, 8, 12, 32);
+        assert!(r.clean(), "violations={}", r.violations);
+        assert!(r.worst_utilization <= 1.0);
+        let mut rng = Rng::new(81);
+        let rf = audit_random(&q, 8, 12, 32, 200, &mut rng);
+        assert!(rf.clean());
+    }
+
+    #[test]
+    fn unsafe_codes_are_caught() {
+        // all-max weights blow a 12-bit inner accumulator immediately
+        let q = vec![7i64; 128];
+        let r = audit_channel(&q, 8, 12, 32);
+        assert!(!r.clean());
+        assert!(r.worst_utilization > 1.0);
+    }
+
+    #[test]
+    fn worst_case_dominates_fuzz() {
+        // utilization from worst-case audit must upper-bound what any
+        // random input can achieve
+        let q = budget_codes(64, 64, 14, 8, 82);
+        let wc = audit_channel(&q, 8, 14, 64);
+        let nu = 255i64;
+        let mut rng = Rng::new(83);
+        for _ in 0..100 {
+            let x: Vec<i64> = (0..64).map(|_| rng.int_in(0, nu)).collect();
+            let v = crate::accum::simulator::dot_exact(&x, &q);
+            let cap = ((1i64 << 13) - 1) as f64;
+            assert!((v.abs() as f64 / cap) <= wc.worst_utilization + 1e-12);
+        }
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = AuditReport { cases: 2, violations: 0, worst_utilization: 0.5 };
+        let b = AuditReport { cases: 3, violations: 1, worst_utilization: 0.9 };
+        a.merge(&b);
+        assert_eq!(a.cases, 5);
+        assert_eq!(a.violations, 1);
+        assert!((a.worst_utilization - 0.9).abs() < 1e-12);
+        assert!(!a.clean());
+    }
+}

@@ -1,0 +1,16 @@
+//! Bit-accurate low-precision accumulator simulation.
+//!
+//! The paper's entire premise is that a P-bit accumulator either
+//! overflows (corrupting results platform-dependently) or must be
+//! guaranteed safe. This module is the "hardware" substitute for the
+//! ARM/ASIC/FPGA datapaths the paper cites: an exact integer MAC pipeline
+//! with configurable register width, overflow behaviour (two's-complement
+//! wraparound / saturation / checked), and the multi-stage tiled datapath
+//! of Fig. 2b. The overflow *audit* constructs the worst-case inputs of
+//! Eq. 6 to verify guarantees bit-exactly.
+
+pub mod audit;
+pub mod simulator;
+
+pub use audit::{audit_channel, audit_random, AuditReport};
+pub use simulator::{dot_exact, AccumSpec, DotOutcome, OverflowMode};

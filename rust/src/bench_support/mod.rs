@@ -1,0 +1,110 @@
+//! Mini-criterion: timing loops with warmup and robust statistics (no
+//! `criterion` in the offline registry). The experiment benches also use
+//! this module's table printer to emit paper-style rows.
+
+use std::time::Instant;
+
+/// Statistics over a sample of timings (seconds).
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub mean: f64,
+    pub median: f64,
+    pub stddev: f64,
+    pub min: f64,
+    pub max: f64,
+    pub n: usize,
+}
+
+impl Stats {
+    pub fn from_samples(mut xs: Vec<f64>) -> Stats {
+        assert!(!xs.is_empty());
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Stats {
+            mean,
+            median: xs[n / 2],
+            stddev: var.sqrt(),
+            min: xs[0],
+            max: xs[n - 1],
+            n,
+        }
+    }
+}
+
+/// Benchmark a closure: `warmup` untimed runs, then `iters` timed runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    let s = Stats::from_samples(samples);
+    println!(
+        "bench {name:<40} mean {:>10}  median {:>10}  σ {:>9}  (n={})",
+        crate::util::fmt_duration(s.mean),
+        crate::util::fmt_duration(s.median),
+        crate::util::fmt_duration(s.stddev),
+        s.n
+    );
+    s
+}
+
+/// Time a single run of a closure, returning (result, seconds).
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
+    let t = Instant::now();
+    let r = f();
+    (r, t.elapsed().as_secs_f64())
+}
+
+/// Throughput helper: items per second.
+pub fn throughput(items: usize, seconds: f64) -> f64 {
+    items as f64 / seconds.max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_of_constant() {
+        let s = Stats::from_samples(vec![2.0; 10]);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.median, 2.0);
+        assert_eq!(s.stddev, 0.0);
+        assert_eq!(s.n, 10);
+    }
+
+    #[test]
+    fn stats_ordering() {
+        let s = Stats::from_samples(vec![3.0, 1.0, 2.0]);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert_eq!(s.median, 2.0);
+    }
+
+    #[test]
+    fn bench_runs_and_counts() {
+        let mut count = 0;
+        let s = bench("test", 2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(s.n, 5);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, secs) = time_once(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn throughput_math() {
+        assert!((throughput(100, 2.0) - 50.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,295 @@
+//! Calibration-time graph conditioning (paper App. C.1):
+//!
+//! - **SmoothQuant** (Xiao et al.) for the LM family: per-channel
+//!   difficulty migration from activations into weights at
+//!   LayerNorm→Linear boundaries, folded into the LN affine parameters.
+//! - **Weight equalization** (Nagel et al.) for the MLP family:
+//!   scale-balancing consecutive linear layers through positively
+//!   homogeneous activations (ReLU).
+//! - **Bias correction** (Nagel et al.): absorb the systematic output
+//!   shift E[Wx] − E[Qx̃] into the layer bias after quantization.
+
+use crate::linalg::Mat;
+use crate::model::{FloatLinear, LayerNorm, Linear, QuantLinear};
+
+/// Per-input-channel max |x| from a K×D calibration capture.
+pub fn channel_abs_max(x_kd: &Mat) -> Vec<f64> {
+    (0..x_kd.rows())
+        .map(|i| x_kd.row(i).iter().fold(0.0f64, |m, v| m.max(v.abs())))
+        .collect()
+}
+
+/// Per-output-channel max |w| of a float linear ([out, in] layout).
+fn weight_col_abs_max(l: &FloatLinear) -> Vec<f64> {
+    // max over outputs for each input column j
+    let mut m = vec![0.0f64; l.in_dim];
+    for o in 0..l.out_dim {
+        let row = &l.w[o * l.in_dim..(o + 1) * l.in_dim];
+        for (j, &w) in row.iter().enumerate() {
+            m[j] = m[j].max(w.abs() as f64);
+        }
+    }
+    m
+}
+
+/// SmoothQuant at a LayerNorm → {linears} boundary: compute per-channel
+/// s_j = max|x_j|^α / max|w_j|^{1−α}, divide the LN affine by s, multiply
+/// the consuming linears' input columns by s. Exact (no approximation).
+/// Returns the applied scales.
+pub fn smoothquant_fold(
+    ln: &mut LayerNorm,
+    consumers: &mut [&mut Linear],
+    act_max: &[f64],
+    alpha: f64,
+) -> Vec<f64> {
+    let k = act_max.len();
+    assert_eq!(ln.gamma.len(), k);
+    // aggregate weight max across all consumers
+    let mut w_max = vec![0.0f64; k];
+    for c in consumers.iter() {
+        let fl = c.as_float().expect("smoothquant requires float consumers");
+        assert_eq!(fl.in_dim, k);
+        for (j, m) in weight_col_abs_max(fl).into_iter().enumerate() {
+            w_max[j] = w_max[j].max(m);
+        }
+    }
+    let scales: Vec<f64> = (0..k)
+        .map(|j| {
+            let a = act_max[j].max(1e-8);
+            let w = w_max[j].max(1e-8);
+            (a.powf(alpha) / w.powf(1.0 - alpha)).clamp(1e-4, 1e4)
+        })
+        .collect();
+    for j in 0..k {
+        ln.gamma[j] /= scales[j] as f32;
+        ln.beta[j] /= scales[j] as f32;
+    }
+    for c in consumers.iter_mut() {
+        if let Linear::Float(fl) = c {
+            for o in 0..fl.out_dim {
+                for j in 0..k {
+                    fl.w[o * fl.in_dim + j] *= scales[j] as f32;
+                }
+            }
+        }
+    }
+    scales
+}
+
+/// Nagel-style weight equalization between consecutive linears l1 → act
+/// → l2 (valid for positively homogeneous activations): balance output
+/// channel j of l1 with input column j of l2 using s_j = √(r1_j / r2_j).
+pub fn equalize_pair(l1: &mut FloatLinear, l2: &mut FloatLinear) -> Vec<f64> {
+    assert_eq!(l1.out_dim, l2.in_dim);
+    let c = l1.out_dim;
+    let mut scales = vec![1.0f64; c];
+    for j in 0..c {
+        let r1 = l1.w[j * l1.in_dim..(j + 1) * l1.in_dim]
+            .iter()
+            .fold(0.0f32, |m, v| m.max(v.abs())) as f64;
+        let mut r2 = 0.0f64;
+        for o in 0..l2.out_dim {
+            r2 = r2.max(l2.w[o * l2.in_dim + j].abs() as f64);
+        }
+        if r1 > 1e-9 && r2 > 1e-9 {
+            scales[j] = (r1 / r2).sqrt().clamp(1e-4, 1e4);
+        }
+    }
+    for j in 0..c {
+        let s = scales[j] as f32;
+        for w in &mut l1.w[j * l1.in_dim..(j + 1) * l1.in_dim] {
+            *w /= s;
+        }
+        l1.b[j] /= s;
+        for o in 0..l2.out_dim {
+            l2.w[o * l2.in_dim + j] *= s;
+        }
+    }
+    scales
+}
+
+/// Bias correction: mean float output (from the float weights and float
+/// inputs) minus mean quantized output (quantized weights on
+/// quantized-prefix inputs), added to the quantized layer's bias.
+///
+/// * `w_float` — K×C original float weights.
+/// * `x_float` — K×D float-model calibration inputs.
+/// * `xt` — K×D quantized-prefix calibration inputs.
+pub fn bias_correct(q: &mut QuantLinear, w_float: &Mat, x_float: &Mat, xt: &Mat) {
+    let (k, c) = (w_float.rows(), w_float.cols());
+    assert_eq!(q.in_dim, k);
+    assert_eq!(q.out_dim, c);
+    let d = x_float.cols();
+    // mean float input / mean quantized-prefix input per neuron
+    let mean_x: Vec<f64> = (0..k).map(|i| x_float.row(i).iter().sum::<f64>() / d as f64).collect();
+    // float mean output (excluding bias): W^T mean_x
+    let mut float_mean = vec![0.0f64; c];
+    for i in 0..k {
+        for ch in 0..c {
+            float_mean[ch] += w_float.get(i, ch) * mean_x[i];
+        }
+    }
+    // quantized mean output (excluding bias): run the integer path on
+    // each calibration column of xt and average.
+    let mut qmean = vec![0.0f64; c];
+    let mut xrow = vec![0.0f32; k];
+    let mut yrow = vec![0.0f32; c];
+    let mut scratch = vec![0i64; k];
+    let saved_bias = q.bias.clone();
+    for b in &mut q.bias {
+        *b = 0.0;
+    }
+    for s in 0..d {
+        for i in 0..k {
+            xrow[i] = xt.get(i, s) as f32;
+        }
+        q.forward_row(&xrow, &mut yrow, &mut scratch);
+        for ch in 0..c {
+            qmean[ch] += yrow[ch] as f64;
+        }
+    }
+    q.bias = saved_bias;
+    for ch in 0..c {
+        qmean[ch] /= d as f64;
+        q.bias[ch] += (float_mean[ch] - qmean[ch]) as f32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Datapath;
+    use crate::quant::ActQuantizer as AQ;
+    use crate::quant::{gpfq_quantize, GpfqParams};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn channel_abs_max_works() {
+        let m = Mat::from_vec(2, 3, vec![1.0, -4.0, 2.0, 0.5, 0.2, -0.1]);
+        assert_eq!(channel_abs_max(&m), vec![4.0, 0.5]);
+    }
+
+    #[test]
+    fn smoothquant_preserves_function() {
+        let mut rng = Rng::new(110);
+        let k = 8;
+        let mut ln = LayerNorm::new(
+            (0..k).map(|_| 1.0 + rng.f32() * 0.5).collect(),
+            (0..k).map(|_| rng.normal() as f32 * 0.1).collect(),
+        );
+        let w: Vec<f32> = (0..k * 4).map(|_| rng.normal() as f32).collect();
+        let mut lin = Linear::Float(FloatLinear::new(k, 4, w, vec![0.0; 4]));
+        // reference output
+        let x: Vec<f32> = (0..k).map(|_| rng.normal() as f32).collect();
+        let mut ln_out = vec![0.0f32; k];
+        ln.forward_row(&x, &mut ln_out);
+        let mut y_ref = vec![0.0f32; 4];
+        let mut scratch = Vec::new();
+        lin.forward_row(&ln_out, &mut y_ref, &mut scratch);
+        // fold with synthetic act stats
+        let act_max: Vec<f64> = (0..k).map(|j| 1.0 + j as f64).collect();
+        let scales = smoothquant_fold(&mut ln, &mut [&mut lin], &act_max, 0.5);
+        assert!(scales.iter().all(|&s| s > 0.0));
+        // function must be unchanged
+        ln.forward_row(&x, &mut ln_out);
+        let mut y_new = vec![0.0f32; 4];
+        lin.forward_row(&ln_out, &mut y_new, &mut scratch);
+        for (a, b) in y_ref.iter().zip(y_new.iter()) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn equalize_pair_preserves_relu_function() {
+        let mut rng = Rng::new(111);
+        let mut l1 = FloatLinear::new(
+            4,
+            6,
+            (0..24).map(|_| rng.normal() as f32).collect(),
+            (0..6).map(|_| rng.normal() as f32 * 0.1).collect(),
+        );
+        let mut l2 = FloatLinear::new(
+            6,
+            3,
+            (0..18).map(|_| rng.normal() as f32 * 3.0).collect(),
+            vec![0.0; 3],
+        );
+        let x: Vec<f32> = (0..4).map(|_| rng.normal() as f32).collect();
+        let fwd = |l1: &FloatLinear, l2: &FloatLinear| {
+            let mut h = vec![0.0f32; 6];
+            l1.forward_row(&x, &mut h);
+            for v in &mut h {
+                *v = v.max(0.0);
+            }
+            let mut y = vec![0.0f32; 3];
+            l2.forward_row(&h, &mut y);
+            y
+        };
+        let y_ref = fwd(&l1, &l2);
+        equalize_pair(&mut l1, &mut l2);
+        let y_new = fwd(&l1, &l2);
+        for (a, b) in y_ref.iter().zip(y_new.iter()) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+        // ranges are balanced after equalization
+        let r1: Vec<f32> = (0..6)
+            .map(|j| l1.w[j * 4..(j + 1) * 4].iter().fold(0.0f32, |m, v| m.max(v.abs())))
+            .collect();
+        let r2: Vec<f32> = (0..6)
+            .map(|j| (0..3).map(|o| l2.w[o * 6 + j].abs()).fold(0.0f32, f32::max))
+            .collect();
+        for j in 0..6 {
+            assert!((r1[j] - r2[j]).abs() / r1[j].max(1e-6) < 1e-3, "channel {j} unbalanced");
+        }
+    }
+
+    #[test]
+    fn bias_correction_reduces_output_shift() {
+        let mut rng = Rng::new(112);
+        let k = 32;
+        let c = 8;
+        let d = 64;
+        let w = Mat::random_normal(k, c, &mut rng, 0.4);
+        // inputs with non-zero mean make quantization bias visible
+        let x = Mat::from_fn(k, d, |_, _| rng.normal() + 0.8);
+        let r = gpfq_quantize(&w, &x, &x, &GpfqParams::base(3, 8));
+        let samples: Vec<f64> = x.data().to_vec();
+        let act = AQ::calibrate(&samples, 8, 0.999);
+        let mk = || {
+            QuantLinear::from_result(&r, vec![0.0; c], act, Datapath::Exact)
+        };
+        // shift before correction
+        let shift = |q: &QuantLinear| -> f64 {
+            let mut total = 0.0;
+            let mut xrow = vec![0.0f32; k];
+            let mut yrow = vec![0.0f32; c];
+            let mut scratch = vec![0i64; k];
+            let mut float_y = vec![0.0f64; c];
+            let mut qy = vec![0.0f64; c];
+            for s in 0..d {
+                for i in 0..k {
+                    xrow[i] = x.get(i, s) as f32;
+                }
+                q.forward_row(&xrow, &mut yrow, &mut scratch);
+                for ch in 0..c {
+                    qy[ch] += yrow[ch] as f64;
+                    let mut f = 0.0;
+                    for i in 0..k {
+                        f += w.get(i, ch) * x.get(i, s);
+                    }
+                    float_y[ch] += f;
+                }
+            }
+            for ch in 0..c {
+                total += (float_y[ch] / d as f64 - qy[ch] / d as f64).abs();
+            }
+            total
+        };
+        let q0 = mk();
+        let before = shift(&q0);
+        let mut q1 = mk();
+        bias_correct(&mut q1, &w, &x, &x);
+        let after = shift(&q1);
+        assert!(after < before * 0.2 + 1e-9, "before={before} after={after}");
+    }
+}

@@ -1,0 +1,235 @@
+//! Experiment harness: the parameter sweeps that regenerate the paper's
+//! tables and figures, shared by the CLI, the benches and the examples.
+
+use super::pipeline::{quantize_mlp, quantize_transformer, PipelineConfig};
+use crate::eval::{perplexity, top1_accuracy, GlyphSet};
+use crate::model::{Mlp, Transformer};
+use crate::quant::{Algorithm, Method};
+use crate::util::Table;
+use anyhow::Result;
+
+/// One point of a Pareto sweep.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub p_bits: u32,
+    pub m_bits: u32,
+    pub n_bits: u32,
+    /// Perplexity (LM) or top-1 accuracy (image).
+    pub metric: f64,
+    pub sparsity: f64,
+    pub safe: bool,
+    pub seconds: f64,
+}
+
+/// For LM metrics lower is better; for accuracy higher is better.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetricKind {
+    Perplexity,
+    Accuracy,
+}
+
+impl MetricKind {
+    pub fn better(&self, a: f64, b: f64) -> bool {
+        match self {
+            MetricKind::Perplexity => a < b,
+            MetricKind::Accuracy => a > b,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            MetricKind::Perplexity => "PPL",
+            MetricKind::Accuracy => "Top-1",
+        }
+    }
+}
+
+/// Quantize a fresh copy of the LM and evaluate perplexity.
+pub fn run_lm_config(
+    base: &Transformer,
+    calib: &[&[u16]],
+    eval_tokens: &[u16],
+    seq: usize,
+    eval_seqs: usize,
+    cfg: &PipelineConfig,
+) -> Result<SweepPoint> {
+    let mut model = base.clone();
+    let report = quantize_transformer(&mut model, calib, cfg)?;
+    let ppl = perplexity(&model, eval_tokens, seq, eval_seqs);
+    Ok(SweepPoint {
+        p_bits: effective_p(cfg, base),
+        m_bits: cfg.weight_bits,
+        n_bits: cfg.act_bits,
+        metric: ppl.ppl,
+        sparsity: report.sparsity(),
+        safe: report.guaranteed_safe(),
+        seconds: report.total_seconds,
+    })
+}
+
+/// Quantize a fresh copy of the classifier and evaluate accuracy.
+pub fn run_img_config(
+    base: &Mlp,
+    calib: &[&[f32]],
+    test: &GlyphSet,
+    cfg: &PipelineConfig,
+) -> Result<SweepPoint> {
+    let mut model = base.clone();
+    let report = quantize_mlp(&mut model, calib, cfg)?;
+    let acc = top1_accuracy(&model, test);
+    Ok(SweepPoint {
+        p_bits: effective_p_mlp(cfg, base),
+        m_bits: cfg.weight_bits,
+        n_bits: cfg.act_bits,
+        metric: acc,
+        sparsity: report.sparsity(),
+        safe: report.guaranteed_safe(),
+        seconds: report.total_seconds,
+    })
+}
+
+/// The deployment accumulator width for reporting: the constrained
+/// target, or max-over-layers Eq. 3 for the naive baseline.
+fn effective_p(cfg: &PipelineConfig, model: &Transformer) -> u32 {
+    let k_max = model
+        .linear_names()
+        .iter()
+        .filter_map(|n| model.get_linear(n))
+        .map(|l| l.in_dim())
+        .max()
+        .unwrap_or(1);
+    target_p(cfg, k_max)
+}
+
+fn effective_p_mlp(cfg: &PipelineConfig, model: &Mlp) -> u32 {
+    let k_max = model.layers.iter().map(|l| l.in_dim()).max().unwrap_or(1);
+    target_p(cfg, k_max)
+}
+
+fn target_p(cfg: &PipelineConfig, k_max: usize) -> u32 {
+    use crate::quant::AccumTarget;
+    match cfg.effective_target(k_max) {
+        AccumTarget::Monolithic { p_bits } => p_bits,
+        AccumTarget::MultiStage { p_inner, .. } => p_inner,
+        AccumTarget::None => 32,
+    }
+}
+
+/// The (M, N) design space of the paper's §4: 3..8 bits with N ≥ M.
+pub fn design_space(min_bits: u32, max_bits: u32) -> Vec<(u32, u32)> {
+    let mut v = Vec::new();
+    for m in min_bits..=max_bits {
+        for n in m..=max_bits {
+            v.push((m, n));
+        }
+    }
+    v
+}
+
+/// Pareto frontier: best metric observed per accumulator width P (with
+/// cumulative dominance so the frontier is monotone in P).
+pub fn pareto_frontier(points: &[SweepPoint], kind: MetricKind) -> Vec<SweepPoint> {
+    use std::collections::BTreeMap;
+    let mut best_at: BTreeMap<u32, SweepPoint> = BTreeMap::new();
+    for p in points {
+        if !p.safe {
+            continue;
+        }
+        match best_at.get(&p.p_bits) {
+            Some(cur) if !kind.better(p.metric, cur.metric) => {}
+            _ => {
+                best_at.insert(p.p_bits, p.clone());
+            }
+        }
+    }
+    // enforce monotonicity: a larger P can always adopt a smaller P's model
+    let mut out: Vec<SweepPoint> = Vec::new();
+    let mut best: Option<SweepPoint> = None;
+    for (_, p) in best_at {
+        let adopt = match &best {
+            None => true,
+            Some(b) => kind.better(p.metric, b.metric),
+        };
+        if adopt {
+            best = Some(p.clone());
+        }
+        let mut row = best.clone().unwrap();
+        row.p_bits = p.p_bits;
+        out.push(row);
+    }
+    out
+}
+
+/// Render sweep points as a paper-style table.
+pub fn render_frontier(title: &str, kind: MetricKind, frontier: &[SweepPoint]) -> String {
+    let mut t = Table::new(&["P", kind.name(), "(M,N)", "Sparsity%"]);
+    for p in frontier {
+        t.row(&[
+            format!("{}", p.p_bits),
+            format!("{:.1}", p.metric),
+            format!("({},{})", p.m_bits, p.n_bits),
+            format!("{:.1}", p.sparsity * 100.0),
+        ]);
+    }
+    format!("## {title}\n{}", t.render())
+}
+
+/// Standard method triplet used by the Pareto experiments.
+pub fn methods() -> [(Method, &'static str); 3] {
+    [(Method::Naive, "naive"), (Method::EpInit, "EP-init"), (Method::Axe, "AXE")]
+}
+
+/// Standard algorithm pair.
+pub fn algorithms() -> [Algorithm; 2] {
+    [Algorithm::Gpfq, Algorithm::Optq]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(p: u32, metric: f64, safe: bool) -> SweepPoint {
+        SweepPoint { p_bits: p, m_bits: 4, n_bits: 8, metric, sparsity: 0.1, safe, seconds: 0.0 }
+    }
+
+    #[test]
+    fn design_space_respects_n_ge_m() {
+        let ds = design_space(3, 8);
+        assert_eq!(ds.len(), 21);
+        assert!(ds.iter().all(|&(m, n)| n >= m));
+        assert!(ds.contains(&(3, 8)));
+        assert!(!ds.contains(&(8, 3)));
+    }
+
+    #[test]
+    fn frontier_takes_best_per_p_and_is_monotone() {
+        let points = vec![
+            pt(16, 100.0, true),
+            pt(16, 80.0, true),
+            pt(18, 90.0, true), // worse than the P=16 model → adopts it
+            pt(20, 40.0, true),
+            pt(14, 500.0, false), // unsafe: excluded
+        ];
+        let f = pareto_frontier(&points, MetricKind::Perplexity);
+        assert_eq!(f.len(), 3);
+        assert_eq!(f[0].p_bits, 16);
+        assert!((f[0].metric - 80.0).abs() < 1e-9);
+        assert!((f[1].metric - 80.0).abs() < 1e-9, "P=18 adopts P=16 model");
+        assert!((f[2].metric - 40.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn frontier_accuracy_direction() {
+        let points = vec![pt(16, 50.0, true), pt(18, 70.0, true), pt(20, 60.0, true)];
+        let f = pareto_frontier(&points, MetricKind::Accuracy);
+        assert!((f[2].metric - 70.0).abs() < 1e-9, "P=20 adopts the P=18 model");
+    }
+
+    #[test]
+    fn render_contains_rows() {
+        let f = vec![pt(16, 42.0, true)];
+        let s = render_frontier("test", MetricKind::Perplexity, &f);
+        assert!(s.contains("42.0"));
+        assert!(s.contains("(4,8)"));
+    }
+}

@@ -1,0 +1,19 @@
+//! The L3 coordinator: layer-by-layer PTQ pipeline and experiment
+//! harness.
+//!
+//! Pipeline order follows the paper (App. C.1): load → graph
+//! equalization → quantizer calibration → GPFQ/OPTQ (± AXE / EP-init) →
+//! bias correction — traversing the network so each layer is quantized
+//! against the activations of the already-quantized prefix (X̃) while
+//! reconstructing the float activations (X).
+
+pub mod experiments;
+pub mod pipeline;
+pub mod report;
+pub mod sensitivity;
+pub mod serve;
+
+pub use pipeline::{
+    quantize_mlp, quantize_transformer, DatapathMode, PipelineConfig, PipelineReport,
+};
+pub use report::LayerReport;

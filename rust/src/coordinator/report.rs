@@ -1,0 +1,88 @@
+//! Per-layer and per-run reporting structures (JSON-serializable via
+//! `util::json`).
+
+use crate::util::json::Json;
+
+/// Outcome of quantizing one layer.
+#[derive(Clone, Debug)]
+pub struct LayerReport {
+    pub name: String,
+    pub k: usize,
+    pub c: usize,
+    /// Fraction of zero codes.
+    pub sparsity: f64,
+    /// Worst-case accumulator utilization from the audit (≤ 1.0 means
+    /// guaranteed safe).
+    pub worst_utilization: f64,
+    /// Audit violations (must be 0 for constrained methods).
+    pub audit_violations: usize,
+    /// Wall-clock seconds spent quantizing this layer.
+    pub seconds: f64,
+}
+
+impl LayerReport {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("name", self.name.as_str().into())
+            .set("k", self.k.into())
+            .set("c", self.c.into())
+            .set("sparsity", self.sparsity.into())
+            .set("worst_utilization", self.worst_utilization.into())
+            .set("audit_violations", self.audit_violations.into())
+            .set("seconds", self.seconds.into());
+        j
+    }
+}
+
+/// Aggregate sparsity across layers (weighted by element count).
+pub fn total_sparsity(layers: &[LayerReport]) -> f64 {
+    let mut zeros = 0.0;
+    let mut total = 0.0;
+    for l in layers {
+        let n = (l.k * l.c) as f64;
+        zeros += l.sparsity * n;
+        total += n;
+    }
+    if total > 0.0 {
+        zeros / total
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip() {
+        let l = LayerReport {
+            name: "b0.wq".into(),
+            k: 64,
+            c: 64,
+            sparsity: 0.25,
+            worst_utilization: 0.9,
+            audit_violations: 0,
+            seconds: 0.1,
+        };
+        let j = l.to_json();
+        assert_eq!(j.get("name").unwrap().as_str(), Some("b0.wq"));
+        assert_eq!(j.get("k").unwrap().as_usize(), Some(64));
+    }
+
+    #[test]
+    fn weighted_sparsity() {
+        let mk = |n: usize, s: f64| LayerReport {
+            name: "x".into(),
+            k: n,
+            c: 1,
+            sparsity: s,
+            worst_utilization: 0.0,
+            audit_violations: 0,
+            seconds: 0.0,
+        };
+        let layers = vec![mk(100, 0.0), mk(300, 1.0)];
+        assert!((total_sparsity(&layers) - 0.75).abs() < 1e-12);
+        assert_eq!(total_sparsity(&[]), 0.0);
+    }
+}

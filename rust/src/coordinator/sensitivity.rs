@@ -1,0 +1,192 @@
+//! Sensitivity analyses:
+//!
+//! 1. **Per-layer**: quantize one layer at a time (leaving the rest
+//!    float) and measure the metric impact — identifies which layers
+//!    consume the accumulator budget hardest (the per-layer analog of
+//!    the paper's App. D sparsity tables).
+//! 2. **Pipeline-stage ablation**: toggle the design choices the paper
+//!    fixes (graph equalization, bias correction, act-order, and this
+//!    repo's rotation extension) one at a time against the default
+//!    pipeline.
+
+use super::pipeline::{quantize_transformer, PipelineConfig};
+use crate::eval::perplexity;
+use crate::model::Transformer;
+use crate::util::Table;
+use anyhow::Result;
+
+/// Per-layer sensitivity result.
+#[derive(Clone, Debug)]
+pub struct LayerSensitivity {
+    pub name: String,
+    pub k: usize,
+    pub ppl: f64,
+    pub delta: f64,
+    pub sparsity: f64,
+}
+
+/// Quantize each linear layer in isolation and measure perplexity.
+pub fn per_layer_sensitivity(
+    base: &Transformer,
+    calib: &[&[u16]],
+    eval_tokens: &[u16],
+    eval_seqs: usize,
+    cfg: &PipelineConfig,
+) -> Result<Vec<LayerSensitivity>> {
+    let seq = base.cfg.max_seq;
+    let float_ppl = perplexity(base, eval_tokens, seq, eval_seqs).ppl;
+    let mut out = Vec::new();
+    for name in base.linear_names() {
+        let mut model = base.clone();
+        let report = quantize_one(&mut model, calib, cfg, &name)?;
+        let ppl = perplexity(&model, eval_tokens, seq, eval_seqs).ppl;
+        out.push(LayerSensitivity {
+            name: name.clone(),
+            k: model.get_linear(&name).map(|l| l.in_dim()).unwrap_or(0),
+            ppl,
+            delta: ppl - float_ppl,
+            sparsity: report,
+        });
+    }
+    Ok(out)
+}
+
+/// Quantize only `target_name` (helper for the sensitivity loop).
+fn quantize_one(
+    model: &mut Transformer,
+    calib: &[&[u16]],
+    cfg: &PipelineConfig,
+    target_name: &str,
+) -> Result<f64> {
+    // run the standard pipeline but restricted to one layer by cloning
+    // the model and reverting every other layer afterwards.
+    let original = model.clone();
+    let report = quantize_transformer(model, calib, cfg)?;
+    let mut sparsity = 0.0;
+    for l in &report.layers {
+        if l.name == target_name {
+            sparsity = l.sparsity;
+        }
+    }
+    for name in original.linear_names() {
+        if name != target_name {
+            let fresh = original.get_linear(&name).unwrap().clone();
+            *model.get_linear_mut(&name).unwrap() = fresh;
+        }
+    }
+    Ok(sparsity)
+}
+
+/// One row of the pipeline-stage ablation.
+#[derive(Clone, Debug)]
+pub struct StageAblation {
+    pub label: String,
+    pub ppl: f64,
+}
+
+/// Toggle pipeline stages one at a time against the default config.
+pub fn stage_ablation(
+    base: &Transformer,
+    calib: &[&[u16]],
+    eval_tokens: &[u16],
+    eval_seqs: usize,
+    cfg: &PipelineConfig,
+) -> Result<Vec<StageAblation>> {
+    let seq = base.cfg.max_seq;
+    let mut rows = Vec::new();
+    let mut run = |label: &str, cfg: PipelineConfig| -> Result<()> {
+        let mut model = base.clone();
+        quantize_transformer(&mut model, calib, &cfg)?;
+        rows.push(StageAblation {
+            label: label.to_string(),
+            ppl: perplexity(&model, eval_tokens, seq, eval_seqs).ppl,
+        });
+        Ok(())
+    };
+    run("default", cfg.clone())?;
+    let mut c = cfg.clone();
+    c.equalize = false;
+    run("- equalization", c)?;
+    let mut c = cfg.clone();
+    c.bias_correction = false;
+    run("- bias correction", c)?;
+    let mut c = cfg.clone();
+    c.act_order = false;
+    run("- act order", c)?;
+    let mut c = cfg.clone();
+    c.rotate = true;
+    run("+ rotation (QuaRot-style)", c)?;
+    Ok(rows)
+}
+
+/// Render both analyses as tables.
+pub fn render_sensitivity(layers: &[LayerSensitivity], stages: &[StageAblation]) -> String {
+    let mut t = Table::new(&["layer", "K", "PPL", "ΔPPL", "sparsity%"]);
+    for l in layers {
+        t.row(&[
+            l.name.clone(),
+            format!("{}", l.k),
+            format!("{:.2}", l.ppl),
+            format!("{:+.2}", l.delta),
+            format!("{:.1}", l.sparsity * 100.0),
+        ]);
+    }
+    let mut s = format!("## per-layer sensitivity\n{}", t.render());
+    let mut t2 = Table::new(&["pipeline variant", "PPL"]);
+    for r in stages {
+        t2.row(&[r.label.clone(), format!("{:.2}", r.ppl)]);
+    }
+    s.push_str(&format!("\n## pipeline-stage ablation\n{}", t2.render()));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::synth_corpus;
+    use crate::model::{random_transformer, Activation, TransformerConfig};
+    use crate::quant::{AccumTarget, Algorithm, Method};
+
+    fn fixture() -> (Transformer, Vec<u16>) {
+        let cfg = TransformerConfig {
+            name: "sens".into(),
+            vocab: 32,
+            d_model: 16,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 32,
+            max_seq: 16,
+            act: Activation::Gelu,
+            parallel_residual: false,
+        };
+        (random_transformer(cfg, 50), synth_corpus(16 * 16, 32, 51))
+    }
+
+    #[test]
+    fn per_layer_quantizes_exactly_one_layer() {
+        let (base, toks) = fixture();
+        let calib: Vec<&[u16]> = toks.chunks_exact(16).take(4).collect();
+        let mut cfg = PipelineConfig::new(Algorithm::Optq, Method::Axe, 4, 8);
+        cfg.target = AccumTarget::Monolithic { p_bits: 16 };
+        let rows = per_layer_sensitivity(&base, &calib, &toks, 6, &cfg).unwrap();
+        assert_eq!(rows.len(), 6);
+        assert!(rows.iter().all(|r| r.ppl.is_finite()));
+        // fc2 has K = d_ff
+        let fc2 = rows.iter().find(|r| r.name == "b0.fc2").unwrap();
+        assert_eq!(fc2.k, 32);
+    }
+
+    #[test]
+    fn stage_ablation_rows_complete() {
+        let (base, toks) = fixture();
+        let calib: Vec<&[u16]> = toks.chunks_exact(16).take(4).collect();
+        let mut cfg = PipelineConfig::new(Algorithm::Gpfq, Method::Axe, 4, 8);
+        cfg.target = AccumTarget::Monolithic { p_bits: 18 };
+        let rows = stage_ablation(&base, &calib, &toks, 6, &cfg).unwrap();
+        assert_eq!(rows.len(), 5);
+        assert!(rows.iter().all(|r| r.ppl.is_finite()));
+        let s = render_sensitivity(&[], &rows);
+        assert!(s.contains("- equalization"));
+        assert!(s.contains("+ rotation"));
+    }
+}

@@ -1,0 +1,303 @@
+//! Mini serving stack: a request queue, a batching scheduler and a
+//! worker pool over KV-cached decode — the deployment surface for
+//! AXE-quantized models (and the shape a vLLM-style router would take
+//! around this engine).
+//!
+//! Requests are greedy-generation jobs (prompt → n tokens). The
+//! scheduler drains the queue into batches of up to `max_batch`
+//! requests, fans them across the worker pool, and records per-request
+//! latency; a shared histogram feeds the throughput/latency report the
+//! serve example prints.
+
+use crate::model::{KvCache, Transformer};
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// One generation request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u16>,
+    pub max_new_tokens: usize,
+}
+
+/// Completed response with timing.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub tokens: Vec<u16>,
+    /// Queue wait in seconds.
+    pub queued_s: f64,
+    /// Generation time in seconds.
+    pub gen_s: f64,
+}
+
+struct QueueInner {
+    pending: VecDeque<(Request, Instant)>,
+    done: Vec<Response>,
+    closed: bool,
+    in_flight: usize,
+}
+
+/// Shared request queue with blocking pop.
+pub struct ServeQueue {
+    inner: Mutex<QueueInner>,
+    cv: Condvar,
+}
+
+impl ServeQueue {
+    pub fn new() -> Arc<ServeQueue> {
+        Arc::new(ServeQueue {
+            inner: Mutex::new(QueueInner {
+                pending: VecDeque::new(),
+                done: Vec::new(),
+                closed: false,
+                in_flight: 0,
+            }),
+            cv: Condvar::new(),
+        })
+    }
+
+    pub fn submit(&self, req: Request) {
+        let mut g = self.inner.lock().unwrap();
+        assert!(!g.closed, "queue closed");
+        g.pending.push_back((req, Instant::now()));
+        self.cv.notify_all();
+    }
+
+    /// Close the queue; workers drain and exit.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Pop up to `max_batch` requests, blocking until work or close.
+    fn pop_batch(&self, max_batch: usize) -> Option<Vec<(Request, Instant)>> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if !g.pending.is_empty() {
+                let take = g.pending.len().min(max_batch);
+                let batch: Vec<_> = g.pending.drain(..take).collect();
+                g.in_flight += batch.len();
+                return Some(batch);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    fn complete(&self, resp: Vec<Response>) {
+        let mut g = self.inner.lock().unwrap();
+        g.in_flight -= resp.len();
+        g.done.extend(resp);
+        self.cv.notify_all();
+    }
+
+    /// Wait for all submitted work to finish, then return responses
+    /// sorted by id.
+    pub fn drain(&self) -> Vec<Response> {
+        let mut g = self.inner.lock().unwrap();
+        while !g.pending.is_empty() || g.in_flight > 0 {
+            g = self.cv.wait(g).unwrap();
+        }
+        let mut out = std::mem::take(&mut g.done);
+        out.sort_by_key(|r| r.id);
+        out
+    }
+}
+
+/// Serving statistics over a set of responses.
+#[derive(Clone, Debug)]
+pub struct ServeStats {
+    pub requests: usize,
+    pub total_tokens: usize,
+    pub wall_s: f64,
+    pub tokens_per_s: f64,
+    pub p50_latency_s: f64,
+    pub p99_latency_s: f64,
+    pub mean_queue_s: f64,
+}
+
+impl ServeStats {
+    pub fn from_responses(responses: &[Response], wall_s: f64) -> ServeStats {
+        let mut latencies: Vec<f64> = responses.iter().map(|r| r.queued_s + r.gen_s).collect();
+        latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let total_tokens: usize = responses.iter().map(|r| r.tokens.len()).sum();
+        let pct = |p: f64| -> f64 {
+            if latencies.is_empty() {
+                return 0.0;
+            }
+            let idx = ((latencies.len() as f64 * p).ceil() as usize).clamp(1, latencies.len()) - 1;
+            latencies[idx]
+        };
+        ServeStats {
+            requests: responses.len(),
+            total_tokens,
+            wall_s,
+            tokens_per_s: total_tokens as f64 / wall_s.max(1e-12),
+            p50_latency_s: pct(0.50),
+            p99_latency_s: pct(0.99),
+            mean_queue_s: responses.iter().map(|r| r.queued_s).sum::<f64>()
+                / responses.len().max(1) as f64,
+        }
+    }
+}
+
+/// Run a worker pool serving greedy generation off the queue. Returns
+/// when the queue is closed and drained.
+pub fn serve(model: &Transformer, queue: &ServeQueue, workers: usize, max_batch: usize) {
+    std::thread::scope(|scope| {
+        for _ in 0..workers.max(1) {
+            scope.spawn(|| {
+                while let Some(batch) = queue.pop_batch(max_batch) {
+                    let mut responses = Vec::with_capacity(batch.len());
+                    for (req, enqueued) in batch {
+                        let started = Instant::now();
+                        let queued_s = started.duration_since(enqueued).as_secs_f64();
+                        let tokens = generate_within_window(model, &req);
+                        responses.push(Response {
+                            id: req.id,
+                            tokens,
+                            queued_s,
+                            gen_s: started.elapsed().as_secs_f64(),
+                        });
+                    }
+                    queue.complete(responses);
+                }
+            });
+        }
+    });
+}
+
+/// Greedy generation clipped to the model's context window.
+fn generate_within_window(model: &Transformer, req: &Request) -> Vec<u16> {
+    let max_seq = model.cfg.max_seq;
+    let prompt: Vec<u16> = if req.prompt.len() >= max_seq {
+        req.prompt[req.prompt.len() - (max_seq - 1)..].to_vec()
+    } else {
+        req.prompt.clone()
+    };
+    let mut cache = KvCache::new(model);
+    let mut out: Vec<u16> = Vec::with_capacity(req.max_new_tokens);
+    let mut logits = model.prefill(&prompt, &mut cache);
+    let mut context = prompt;
+    for _ in 0..req.max_new_tokens {
+        if cache.is_full() {
+            let keep = max_seq / 2;
+            let tail = context[context.len() - keep..].to_vec();
+            cache.clear();
+            logits = model.prefill(&tail, &mut cache);
+            context = tail;
+        }
+        let next = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i as u16)
+            .unwrap_or(0);
+        out.push(next);
+        context.push(next);
+        logits = model.decode_step(next, &mut cache);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{random_transformer, Activation, TransformerConfig};
+
+    fn model() -> Transformer {
+        random_transformer(
+            TransformerConfig {
+                name: "s".into(),
+                vocab: 32,
+                d_model: 16,
+                n_layers: 1,
+                n_heads: 2,
+                d_ff: 32,
+                max_seq: 16,
+                act: Activation::Gelu,
+                parallel_residual: false,
+            },
+            5,
+        )
+    }
+
+    #[test]
+    fn serves_all_requests() {
+        let m = model();
+        let q = ServeQueue::new();
+        for id in 0..12 {
+            q.submit(Request { id, prompt: vec![1, 2, 3], max_new_tokens: 5 });
+        }
+        q.close();
+        let t0 = Instant::now();
+        serve(&m, &q, 3, 4);
+        let responses = q.drain();
+        assert_eq!(responses.len(), 12);
+        for (i, r) in responses.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            assert_eq!(r.tokens.len(), 5);
+        }
+        let stats = ServeStats::from_responses(&responses, t0.elapsed().as_secs_f64());
+        assert_eq!(stats.requests, 12);
+        assert_eq!(stats.total_tokens, 60);
+        assert!(stats.p99_latency_s >= stats.p50_latency_s);
+    }
+
+    #[test]
+    fn serving_matches_direct_generation() {
+        let m = model();
+        let q = ServeQueue::new();
+        q.submit(Request { id: 0, prompt: vec![4, 5, 6], max_new_tokens: 8 });
+        q.close();
+        serve(&m, &q, 1, 1);
+        let responses = q.drain();
+        let direct = m.generate_greedy(&[4, 5, 6], 8);
+        assert_eq!(responses[0].tokens, direct[3..]);
+    }
+
+    #[test]
+    fn long_prompt_is_window_clipped() {
+        let m = model();
+        let q = ServeQueue::new();
+        let long: Vec<u16> = (0..40).map(|i| i % 32).collect();
+        q.submit(Request { id: 0, prompt: long, max_new_tokens: 4 });
+        q.close();
+        serve(&m, &q, 1, 1);
+        let r = q.drain();
+        assert_eq!(r[0].tokens.len(), 4);
+    }
+
+    #[test]
+    fn generation_past_window_slides() {
+        let m = model();
+        let q = ServeQueue::new();
+        q.submit(Request { id: 0, prompt: vec![1, 2], max_new_tokens: 30 });
+        q.close();
+        serve(&m, &q, 1, 1);
+        let r = q.drain();
+        assert_eq!(r[0].tokens.len(), 30, "generation must continue past max_seq");
+    }
+
+    #[test]
+    fn stats_percentiles() {
+        let resp: Vec<Response> = (0..100)
+            .map(|i| Response {
+                id: i,
+                tokens: vec![0; 2],
+                queued_s: 0.0,
+                gen_s: (i + 1) as f64 / 100.0,
+            })
+            .collect();
+        let s = ServeStats::from_responses(&resp, 1.0);
+        assert!((s.p50_latency_s - 0.5).abs() < 0.02);
+        assert!((s.p99_latency_s - 0.99).abs() < 0.02);
+        assert_eq!(s.total_tokens, 200);
+    }
+}

@@ -1,0 +1,81 @@
+//! Top-1 classification accuracy for the glyph MLP family (the paper's
+//! ImageNet metric).
+
+use super::dataset::GlyphSet;
+use crate::model::Mlp;
+
+/// Top-1 accuracy (%) of `model` on `set`, evaluated thread-parallel.
+pub fn top1_accuracy(model: &Mlp, set: &GlyphSet) -> f64 {
+    let n = set.len();
+    assert!(n > 0);
+    let nthreads = crate::linalg::num_threads().min(n).max(1);
+    let chunk = n.div_ceil(nthreads);
+    let mut partials: Vec<usize> = Vec::new();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for t in 0..nthreads {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(n);
+            if lo >= hi {
+                continue;
+            }
+            handles.push(scope.spawn(move || {
+                let mut correct = 0usize;
+                for i in lo..hi {
+                    let logits = model.forward(set.row(i), None);
+                    let pred = argmax(&logits);
+                    if pred == set.y[i] as usize {
+                        correct += 1;
+                    }
+                }
+                correct
+            }));
+        }
+        for h in handles {
+            partials.push(h.join().expect("accuracy worker panicked"));
+        }
+    });
+    100.0 * partials.iter().sum::<usize>() as f64 / n as f64
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::dataset::synth_glyphs;
+    use crate::model::{random_mlp, Activation, MlpConfig};
+
+    #[test]
+    fn random_model_near_chance() {
+        let set = synth_glyphs(200, 8, 10, 20);
+        let m = random_mlp(
+            MlpConfig {
+                name: "t".into(),
+                input_dim: 64,
+                hidden: vec![32],
+                classes: 10,
+                act: Activation::Relu,
+                residual: false,
+            },
+            21,
+        );
+        let acc = top1_accuracy(&m, &set);
+        assert!(acc < 40.0, "untrained model should be near chance, got {acc}");
+    }
+
+    #[test]
+    fn argmax_works() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
+        assert_eq!(argmax(&[2.0]), 0);
+        assert_eq!(argmax(&[1.0, 1.0]), 0, "ties keep first");
+    }
+}

@@ -1,0 +1,12 @@
+//! Evaluation: datasets, perplexity, classification accuracy.
+
+pub mod accuracy;
+pub mod dataset;
+pub mod perplexity;
+
+pub use accuracy::top1_accuracy;
+pub use dataset::{
+    load_corpus, load_corpus_split, load_corpus_split_or_synth, load_glyphs, synth_corpus,
+    synth_glyphs, GlyphSet,
+};
+pub use perplexity::{perplexity, PplReport};

@@ -1,0 +1,129 @@
+//! Perplexity evaluation for the pico-LM family (the paper's WikiText2
+//! metric). Sequences are evaluated in parallel across threads; the
+//! model is shared read-only.
+
+use crate::model::{softmax, Transformer};
+
+/// Perplexity evaluation summary.
+#[derive(Clone, Debug)]
+pub struct PplReport {
+    pub ppl: f64,
+    pub nll: f64,
+    pub tokens: usize,
+    /// Overflow events observed in quantized layers during the run.
+    pub overflows: u64,
+}
+
+/// Compute perplexity of `model` over non-overlapping sequences of
+/// length `seq` from `tokens`, using at most `max_seqs` sequences.
+pub fn perplexity(model: &Transformer, tokens: &[u16], seq: usize, max_seqs: usize) -> PplReport {
+    let seqs: Vec<&[u16]> = tokens.chunks_exact(seq).take(max_seqs).collect();
+    assert!(!seqs.is_empty(), "not enough tokens for one sequence");
+    let before = model.overflow_events();
+    let nthreads = crate::linalg::num_threads().min(seqs.len()).max(1);
+    let chunk = seqs.len().div_ceil(nthreads);
+    let mut partials: Vec<(f64, usize)> = Vec::new();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for t in 0..nthreads {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(seqs.len());
+            if lo >= hi {
+                continue;
+            }
+            let my = &seqs[lo..hi];
+            handles.push(scope.spawn(move || {
+                let mut nll = 0.0f64;
+                let mut count = 0usize;
+                for s in my {
+                    let (n, c) = seq_nll(model, s);
+                    nll += n;
+                    count += c;
+                }
+                (nll, count)
+            }));
+        }
+        for h in handles {
+            partials.push(h.join().expect("ppl worker panicked"));
+        }
+    });
+    let nll: f64 = partials.iter().map(|p| p.0).sum();
+    let count: usize = partials.iter().map(|p| p.1).sum();
+    let mean = nll / count.max(1) as f64;
+    PplReport {
+        ppl: mean.exp(),
+        nll: mean,
+        tokens: count,
+        overflows: model.overflow_events() - before,
+    }
+}
+
+/// Summed next-token NLL over one sequence.
+fn seq_nll(model: &Transformer, s: &[u16]) -> (f64, usize) {
+    let vocab = model.cfg.vocab;
+    let logits = model.forward(s, None);
+    let mut nll = 0.0f64;
+    let mut count = 0usize;
+    // predict token t+1 from position t
+    let mut probs = vec![0.0f32; vocab];
+    for t in 0..s.len() - 1 {
+        probs.copy_from_slice(&logits[t * vocab..(t + 1) * vocab]);
+        softmax(&mut probs);
+        let p = probs[s[t + 1] as usize].max(1e-12);
+        nll -= (p as f64).ln();
+        count += 1;
+    }
+    (nll, count)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::dataset::synth_corpus;
+    use crate::model::{random_transformer, Activation, TransformerConfig};
+
+    fn tiny() -> Transformer {
+        random_transformer(
+            TransformerConfig {
+                name: "t".into(),
+                vocab: 64,
+                d_model: 16,
+                n_layers: 1,
+                n_heads: 2,
+                d_ff: 32,
+                max_seq: 24,
+                act: Activation::Gelu,
+                parallel_residual: false,
+            },
+            9,
+        )
+    }
+
+    #[test]
+    fn random_model_near_uniform_ppl() {
+        let m = tiny();
+        let toks = synth_corpus(24 * 8, 64, 11);
+        let r = perplexity(&m, &toks, 24, 8);
+        // near-random weights -> ppl close to vocab size
+        assert!(r.ppl > 20.0 && r.ppl < 200.0, "ppl={}", r.ppl);
+        assert_eq!(r.tokens, 8 * 23);
+        assert_eq!(r.overflows, 0);
+    }
+
+    #[test]
+    fn deterministic_across_thread_counts() {
+        let m = tiny();
+        let toks = synth_corpus(24 * 6, 64, 12);
+        let a = perplexity(&m, &toks, 24, 6);
+        std::env::set_var("AXE_THREADS_IGNORED", "1"); // threads only split work
+        let b = perplexity(&m, &toks, 24, 6);
+        assert!((a.nll - b.nll).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "not enough tokens")]
+    fn too_short_panics() {
+        let m = tiny();
+        perplexity(&m, &[1, 2, 3], 24, 4);
+    }
+}

@@ -1,0 +1,52 @@
+//! # AXE — Accumulator-Aware Post-Training Quantization
+//!
+//! A Rust + JAX + Pallas reproduction of *"Accumulator-Aware
+//! Post-Training Quantization"* (Colbert et al., 2024): layer-wise PTQ
+//! (GPFQ, OPTQ) extended with overflow-avoidance guarantees for
+//! user-chosen accumulator bit widths, including the multi-stage tiled
+//! datapath that scales the guarantee to LLMs.
+//!
+//! Layer map:
+//! - [`quant`] — quantizers, bounds, ℓ1 machinery, GPFQ/OPTQ ± AXE,
+//!   EP-init and naïve baselines.
+//! - [`accum`] — bit-accurate P-bit MAC simulation + overflow audit.
+//! - [`model`] — inference substrate (transformers, MLPs, quantized
+//!   linear layers running on the simulated datapath).
+//! - [`calib`] — calibration capture, SmoothQuant-style equalization,
+//!   bias correction.
+//! - [`coordinator`] — the layer-by-layer PTQ pipeline and experiment
+//!   harness.
+//! - [`runtime`] — PJRT (XLA) execution of the AOT-compiled JAX/Pallas
+//!   artifacts.
+//! - [`eval`] — perplexity / accuracy evaluation and dataset readers.
+//! - [`linalg`], [`util`], [`bench_support`] — self-contained substrates.
+
+pub mod accum;
+pub mod bench_support;
+pub mod calib;
+pub mod coordinator;
+pub mod eval;
+pub mod linalg;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod util;
+
+/// Repository-relative path to the artifacts directory, overridable via
+/// `AXE_ARTIFACTS`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("AXE_ARTIFACTS") {
+        return p.into();
+    }
+    // walk up from cwd looking for artifacts/
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.is_dir() {
+            return cand;
+        }
+        if !dir.pop() {
+            return "artifacts".into();
+        }
+    }
+}

@@ -1,0 +1,174 @@
+//! Cholesky factorization, triangular solves and SPD inversion.
+//!
+//! OPTQ needs `Cholesky((2X̃X̃ᵀ + ηI)⁻¹)` (upper factor); the
+//! memory-efficient GPFQ needs `G H⁻¹` solves. Everything here works on
+//! the dense [`Mat`] type.
+
+use super::matrix::Mat;
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum CholeskyError {
+    #[error("matrix is not positive definite at pivot {0} (value {1})")]
+    NotPositiveDefinite(usize, f64),
+    #[error("matrix must be square, got {0}x{1}")]
+    NotSquare(usize, usize),
+}
+
+/// Lower-triangular Cholesky factor L with A = L Lᵀ.
+pub fn cholesky_lower(a: &Mat) -> Result<Mat, CholeskyError> {
+    if a.rows() != a.cols() {
+        return Err(CholeskyError::NotSquare(a.rows(), a.cols()));
+    }
+    let n = a.rows();
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            // s = A[i][j] - sum_k L[i][k] L[j][k]
+            let li = l.row(i);
+            let lj = l.row(j);
+            let mut s = 0.0;
+            for k in 0..j {
+                s += li[k] * lj[k];
+            }
+            let s = a.get(i, j) - s;
+            if i == j {
+                if s <= 0.0 {
+                    return Err(CholeskyError::NotPositiveDefinite(i, s));
+                }
+                l.set(i, j, s.sqrt());
+            } else {
+                l.set(i, j, s / l.get(j, j));
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve L y = b for lower-triangular L (forward substitution).
+pub fn solve_lower(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    assert_eq!(b.len(), n);
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        let row = l.row(i);
+        for j in 0..i {
+            s -= row[j] * y[j];
+        }
+        y[i] = s / row[i];
+    }
+    y
+}
+
+/// Solve Lᵀ x = y for lower-triangular L (backward substitution).
+pub fn solve_lower_transpose(l: &Mat, y: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    assert_eq!(y.len(), n);
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for j in (i + 1)..n {
+            s -= l.get(j, i) * x[j];
+        }
+        x[i] = s / l.get(i, i);
+    }
+    x
+}
+
+/// Inverse of an SPD matrix via Cholesky: A⁻¹ = L⁻ᵀ L⁻¹.
+pub fn spd_inverse(a: &Mat) -> Result<Mat, CholeskyError> {
+    let n = a.rows();
+    let l = cholesky_lower(a)?;
+    // Invert L in place (lower triangular inverse).
+    let mut linv = Mat::zeros(n, n);
+    for i in 0..n {
+        linv.set(i, i, 1.0 / l.get(i, i));
+        for j in 0..i {
+            let mut s = 0.0;
+            for k in j..i {
+                s += l.get(i, k) * linv.get(k, j);
+            }
+            linv.set(i, j, -s / l.get(i, i));
+        }
+    }
+    // A⁻¹ = L⁻ᵀ L⁻¹ — symmetric product.
+    let mut inv = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = 0.0;
+            // (L⁻ᵀ L⁻¹)[i][j] = sum_k Linv[k][i] Linv[k][j], k >= max(i,j)
+            for k in i..n {
+                s += linv.get(k, i) * linv.get(k, j);
+            }
+            inv.set(i, j, s);
+            inv.set(j, i, s);
+        }
+    }
+    Ok(inv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::frob_diff;
+    use crate::util::rng::Rng;
+
+    fn random_spd(n: usize, rng: &mut Rng) -> Mat {
+        let x = Mat::random_normal(n, n + 8, rng, 1.0);
+        let mut g = x.gram();
+        g.add_diag(0.5);
+        g
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Rng::new(10);
+        for &n in &[1usize, 4, 17, 64] {
+            let a = random_spd(n, &mut rng);
+            let l = cholesky_lower(&a).unwrap();
+            let recon = l.matmul(&l.transpose());
+            assert!(frob_diff(&a, &recon) < 1e-8 * n as f64, "n={n}");
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let mut a = Mat::eye(3);
+        a.set(2, 2, -1.0);
+        assert!(matches!(cholesky_lower(&a), Err(CholeskyError::NotPositiveDefinite(2, _))));
+    }
+
+    #[test]
+    fn cholesky_rejects_non_square() {
+        let a = Mat::zeros(2, 3);
+        assert!(matches!(cholesky_lower(&a), Err(CholeskyError::NotSquare(2, 3))));
+    }
+
+    #[test]
+    fn triangular_solves() {
+        let mut rng = Rng::new(11);
+        let a = random_spd(20, &mut rng);
+        let l = cholesky_lower(&a).unwrap();
+        let x_true = rng.normal_vec(20);
+        // b = A x = L (Lᵀ x)
+        let b = a.matvec(&x_true);
+        let y = solve_lower(&l, &b);
+        let x = solve_lower_transpose(&l, &y);
+        for (xi, ti) in x.iter().zip(x_true.iter()) {
+            assert!((xi - ti).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn spd_inverse_is_inverse() {
+        let mut rng = Rng::new(12);
+        for &n in &[3usize, 10, 33] {
+            let a = random_spd(n, &mut rng);
+            let inv = spd_inverse(&a).unwrap();
+            let prod = a.matmul(&inv);
+            assert!(frob_diff(&prod, &Mat::eye(n)) < 1e-7 * n as f64, "n={n}");
+            assert!(inv.is_symmetric(1e-9));
+        }
+    }
+}

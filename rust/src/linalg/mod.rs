@@ -1,0 +1,27 @@
+//! Dense linear algebra substrate.
+//!
+//! The PTQ algorithms (GPFQ/OPTQ and their memory-efficient variants)
+//! need GEMM, Cholesky factorization/inversion and a symmetric-PSD
+//! matrix square root. No BLAS/LAPACK is available offline, so this
+//! module carries a cache-blocked, multi-threaded f64 implementation
+//! sized for the K ≤ ~2048 matrices that show up per layer.
+
+mod cholesky;
+mod matrix;
+mod sqrtm;
+
+pub use cholesky::{cholesky_lower, solve_lower, solve_lower_transpose, spd_inverse, CholeskyError};
+pub use matrix::{dot, num_threads, Mat};
+pub use sqrtm::{sqrtm_psd, SqrtmError};
+
+/// Frobenius norm of the difference of two matrices (test helper).
+pub fn frob_diff(a: &Mat, b: &Mat) -> f64 {
+    assert_eq!(a.rows(), b.rows());
+    assert_eq!(a.cols(), b.cols());
+    a.data()
+        .iter()
+        .zip(b.data().iter())
+        .map(|(x, y)| (x - y) * (x - y))
+        .sum::<f64>()
+        .sqrt()
+}

@@ -1,0 +1,392 @@
+//! `axe` — the command-line front end of the AXE reproduction.
+//!
+//! Subcommands map onto the paper's experiments:
+//!   quantize — run one PTQ configuration on a model and evaluate it
+//!   pareto   — sweep the (M, N, P) design space (Figs. 1/3, Tables 4-7)
+//!   scaling  — multi-stage accumulation across the LM ladder (Table 1)
+//!   ablation — EP-init / AXE-RTZ / AXE-RTN / AXE-HCO (Table 2)
+//!   audit    — overflow audit of a quantized configuration (Eq. 6)
+//!   zoo      — list available models and artifacts
+//!   runtime  — smoke-test the PJRT runtime against the AOT artifacts
+
+use anyhow::{anyhow, Result};
+use axe::coordinator::experiments::{
+    design_space, pareto_frontier, render_frontier, run_lm_config, MetricKind,
+};
+use axe::coordinator::{quantize_transformer, PipelineConfig};
+use axe::eval::load_corpus_split_or_synth;
+use axe::eval::perplexity;
+use axe::model::{load_named, Model};
+use axe::quant::{AccumTarget, Algorithm, Method, Rounding};
+use axe::util::argparse::{usage, Args};
+use axe::util::Table;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.command.as_deref() {
+        Some("quantize") => cmd_quantize(args),
+        Some("pareto") => cmd_pareto(args),
+        Some("scaling") => cmd_scaling(args),
+        Some("ablation") => cmd_ablation(args),
+        Some("audit") => cmd_audit(args),
+        Some("serve") => cmd_serve(args),
+        Some("sensitivity") => cmd_sensitivity(args),
+        Some("zoo") => cmd_zoo(),
+        Some("runtime") => cmd_runtime(),
+        _ => {
+            println!(
+                "{}",
+                usage(
+                    "axe",
+                    "accumulator-aware post-training quantization",
+                    &[
+                        ("quantize", "quantize one model with one configuration"),
+                        ("pareto", "P-vs-accuracy Pareto sweep (Figs. 1/3)"),
+                        ("scaling", "multi-stage accumulation across the LM ladder (Table 1)"),
+                        ("ablation", "rounding/soft-constraint ablation (Table 2)"),
+                        ("audit", "worst-case + fuzz overflow audit"),
+                        ("serve", "serve batched generation from a quantized model"),
+                        ("sensitivity", "per-layer + pipeline-stage sensitivity analysis"),
+                        ("zoo", "list trained models and artifacts"),
+                        ("runtime", "PJRT runtime smoke test"),
+                    ],
+                    &[],
+                )
+            );
+            Ok(())
+        }
+    }
+}
+
+fn parse_target(args: &Args, default_tile: Option<usize>) -> AccumTarget {
+    let p = args.u32_or("acc-bits", 0);
+    if p == 0 {
+        return AccumTarget::None;
+    }
+    match args.get("tile").map(|t| t.parse::<usize>().unwrap_or(0)).or(default_tile) {
+        Some(t) if t > 0 => AccumTarget::MultiStage { p_inner: p, tile: t },
+        _ => AccumTarget::Monolithic { p_bits: p },
+    }
+}
+
+fn load_lm(name: &str) -> Result<axe::model::Transformer> {
+    match load_named(name)? {
+        Model::Lm(m) => Ok(m),
+        _ => Err(anyhow!("{name} is not an LM")),
+    }
+}
+
+fn cmd_quantize(args: &Args) -> Result<()> {
+    let model_name = args.str_or("model", "pico-160k");
+    let algorithm = Algorithm::parse(&args.str_or("algo", "optq"))
+        .ok_or_else(|| anyhow!("bad --algo"))?;
+    let method =
+        Method::parse(&args.str_or("method", "axe")).ok_or_else(|| anyhow!("bad --method"))?;
+    let m = args.u32_or("weight-bits", 4);
+    let n = args.u32_or("act-bits", 8);
+    let mut cfg = PipelineConfig::new(algorithm, method, m, n);
+    cfg.target = parse_target(args, None);
+    if args.flag("rtz") {
+        cfg.rounding = Rounding::Zero;
+    }
+    if args.flag("no-soft") {
+        cfg.soft = false;
+    }
+    if args.flag("faithful") {
+        cfg.datapath = axe::coordinator::DatapathMode::Faithful;
+    }
+
+    let mut model = load_lm(&model_name)?;
+    let seq = model.cfg.max_seq;
+    let train = load_corpus_split_or_synth("train", model.cfg.vocab);
+    let val = load_corpus_split_or_synth("val", model.cfg.vocab);
+    let calib: Vec<&[u16]> =
+        train.chunks_exact(seq).take(args.usize_or("calib-seqs", 16)).collect();
+    let float_ppl = perplexity(&model, &val, seq, args.usize_or("eval-seqs", 32)).ppl;
+
+    let report = quantize_transformer(&mut model, &calib, &cfg)?;
+    let q = perplexity(&model, &val, seq, args.usize_or("eval-seqs", 32));
+    println!("model            : {model_name} ({} params)", model.cfg.param_count());
+    println!("config           : {}", report.config);
+    let k_max = model
+        .linear_names()
+        .iter()
+        .filter_map(|n| model.get_linear(n))
+        .map(|l| l.in_dim())
+        .max()
+        .unwrap_or(1);
+    println!("deploy target    : {}", cfg.effective_target(k_max).describe());
+    println!("float PPL        : {float_ppl:.2}");
+    println!("quantized PPL    : {:.2}", q.ppl);
+    println!("weight sparsity  : {:.1}%", report.sparsity() * 100.0);
+    println!("guaranteed safe  : {}", report.guaranteed_safe());
+    println!("worst utilization: {:.3}", report.audit.worst_utilization);
+    println!("overflow events  : {}", q.overflows);
+    println!("quantization time: {:.2}s", report.total_seconds);
+    Ok(())
+}
+
+fn cmd_pareto(args: &Args) -> Result<()> {
+    let model_name = args.str_or("model", "pico-160k");
+    let algorithm = Algorithm::parse(&args.str_or("algo", "gpfq"))
+        .ok_or_else(|| anyhow!("bad --algo"))?;
+    let base = load_lm(&model_name)?;
+    let seq = base.cfg.max_seq;
+    let train = load_corpus_split_or_synth("train", base.cfg.vocab);
+    let val = load_corpus_split_or_synth("val", base.cfg.vocab);
+    let calib: Vec<&[u16]> =
+        train.chunks_exact(seq).take(args.usize_or("calib-seqs", 12)).collect();
+    let eval_seqs = args.usize_or("eval-seqs", 24);
+    let min_bits = args.u32_or("min-bits", 3);
+    let max_bits = args.u32_or("max-bits", 8);
+    let p_values = args.usize_list_or("p-bits", &[9, 10, 11, 12, 13, 14, 16, 20]);
+
+    for (method, label) in axe::coordinator::experiments::methods() {
+        let mut points = Vec::new();
+        for (m, n) in design_space(min_bits, max_bits) {
+            match method {
+                Method::Naive => {
+                    let cfg = PipelineConfig::new(algorithm, method, m, n);
+                    points.push(run_lm_config(&base, &calib, &val, seq, eval_seqs, &cfg)?);
+                }
+                _ => {
+                    for &p in &p_values {
+                        let mut cfg = PipelineConfig::new(algorithm, method, m, n);
+                        cfg.target = AccumTarget::Monolithic { p_bits: p as u32 };
+                        points.push(run_lm_config(&base, &calib, &val, seq, eval_seqs, &cfg)?);
+                    }
+                }
+            }
+        }
+        let frontier = pareto_frontier(&points, MetricKind::Perplexity);
+        println!(
+            "{}",
+            render_frontier(
+                &format!("{model_name} {} + {label}", algorithm.name()),
+                MetricKind::Perplexity,
+                &frontier
+            )
+        );
+    }
+    Ok(())
+}
+
+fn cmd_scaling(args: &Args) -> Result<()> {
+    let models = args.str_list_or(
+        "models",
+        &["pico-70k", "pico-160k", "pico-410k", "pico-1m", "pico-2m"],
+    );
+    let tiles = args.usize_list_or("tiles", &[64, 128]);
+    let p_inner = args.u32_or("acc-bits", 16);
+    let algorithm = Algorithm::parse(&args.str_or("algo", "optq")).unwrap();
+    let mut table = Table::new(&["model", "params", "float", "base", "64x16b", "128x16b"]);
+    for name in &models {
+        let base = load_lm(name)?;
+        let seq = base.cfg.max_seq;
+        let train = load_corpus_split_or_synth("train", base.cfg.vocab);
+        let val = load_corpus_split_or_synth("val", base.cfg.vocab);
+        let calib: Vec<&[u16]> = train.chunks_exact(seq).take(12).collect();
+        let float_ppl = perplexity(&base, &val, seq, 24).ppl;
+        let base_cfg = PipelineConfig::new(algorithm, Method::Naive, 4, 8);
+        let base_ppl = run_lm_config(&base, &calib, &val, seq, 24, &base_cfg)?.metric;
+        let mut row = vec![
+            name.clone(),
+            format!("{}", base.cfg.param_count()),
+            format!("{float_ppl:.1}"),
+            format!("{base_ppl:.1}"),
+        ];
+        for &t in &tiles {
+            let mut cfg = PipelineConfig::new(algorithm, Method::Axe, 4, 8);
+            cfg.target = AccumTarget::MultiStage { p_inner, tile: t };
+            let p = run_lm_config(&base, &calib, &val, seq, 24, &cfg)?;
+            row.push(format!("{:.1}{}", p.metric, if p.safe { "" } else { "!" }));
+        }
+        while row.len() < 6 {
+            row.push("-".into());
+        }
+        table.row(&row);
+    }
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_ablation(args: &Args) -> Result<()> {
+    let models = args.str_list_or("models", &["pico-160k", "pico-160k-opt"]);
+    let p = args.u32_or("acc-bits", 16);
+    let mut table = Table::new(&["algo", "model", "EP-init", "AXE-RTZ", "AXE-RTN", "AXE-HCO"]);
+    for algo in [Algorithm::Gpfq, Algorithm::Optq] {
+        for name in &models {
+            let base = load_lm(name)?;
+            let seq = base.cfg.max_seq;
+            let train = load_corpus_split_or_synth("train", base.cfg.vocab);
+            let val = load_corpus_split_or_synth("val", base.cfg.vocab);
+            let calib: Vec<&[u16]> = train.chunks_exact(seq).take(12).collect();
+            let mut cells = vec![algo.name().to_string(), name.clone()];
+            for variant in ["ep", "rtz", "rtn", "hco"] {
+                let mut cfg = PipelineConfig::new(
+                    algo,
+                    if variant == "ep" { Method::EpInit } else { Method::Axe },
+                    4,
+                    8,
+                );
+                cfg.target = AccumTarget::Monolithic { p_bits: p };
+                match variant {
+                    "rtz" => cfg.rounding = Rounding::Zero,
+                    "hco" => cfg.soft = false,
+                    _ => {}
+                }
+                let pt = run_lm_config(&base, &calib, &val, seq, 24, &cfg)?;
+                cells.push(format!("{:.1}", pt.metric));
+            }
+            table.row(&cells);
+        }
+    }
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_audit(args: &Args) -> Result<()> {
+    let model_name = args.str_or("model", "pico-160k");
+    let mut cfg = PipelineConfig::new(
+        Algorithm::parse(&args.str_or("algo", "optq")).unwrap(),
+        Method::parse(&args.str_or("method", "axe")).unwrap(),
+        args.u32_or("weight-bits", 4),
+        args.u32_or("act-bits", 8),
+    );
+    cfg.target = parse_target(args, Some(64));
+    let mut model = load_lm(&model_name)?;
+    let train = load_corpus_split_or_synth("train", model.cfg.vocab);
+    let seq = model.cfg.max_seq;
+    let calib: Vec<&[u16]> = train.chunks_exact(seq).take(8).collect();
+    let report = quantize_transformer(&mut model, &calib, &cfg)?;
+    println!("config           : {}", report.config);
+    println!("audited cases    : {}", report.audit.cases);
+    println!("violations       : {}", report.audit.violations);
+    println!("worst utilization: {:.4}", report.audit.worst_utilization);
+    println!("verdict          : {}", if report.guaranteed_safe() { "SAFE" } else { "UNSAFE" });
+    Ok(())
+}
+
+fn cmd_sensitivity(args: &Args) -> Result<()> {
+    use axe::coordinator::sensitivity::{per_layer_sensitivity, render_sensitivity, stage_ablation};
+    let model_name = args.str_or("model", "pico-160k");
+    let model = load_lm(&model_name)?;
+    let seq = model.cfg.max_seq;
+    let train = load_corpus_split_or_synth("train", model.cfg.vocab);
+    let val = load_corpus_split_or_synth("val", model.cfg.vocab);
+    let calib: Vec<&[u16]> = train.chunks_exact(seq).take(args.usize_or("calib-seqs", 12)).collect();
+    let mut cfg = PipelineConfig::new(
+        Algorithm::parse(&args.str_or("algo", "optq")).unwrap(),
+        Method::Axe,
+        args.u32_or("weight-bits", 4),
+        args.u32_or("act-bits", 8),
+    );
+    cfg.target = match parse_target(args, None) {
+        AccumTarget::None => AccumTarget::Monolithic { p_bits: 16 },
+        t => t,
+    };
+    let eval_seqs = args.usize_or("eval-seqs", 16);
+    let layers = per_layer_sensitivity(&model, &calib, &val, eval_seqs, &cfg)?;
+    let stages = stage_ablation(&model, &calib, &val, eval_seqs, &cfg)?;
+    println!("model: {model_name}, config: {}", cfg.describe());
+    println!("{}", render_sensitivity(&layers, &stages));
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use axe::coordinator::serve::{serve, Request, ServeQueue, ServeStats};
+    let model_name = args.str_or("model", "pico-160k");
+    let mut model = load_lm(&model_name)?;
+    let seq = model.cfg.max_seq;
+    let train = load_corpus_split_or_synth("train", model.cfg.vocab);
+    let val = load_corpus_split_or_synth("val", model.cfg.vocab);
+    let calib: Vec<&[u16]> = train.chunks_exact(seq).take(12).collect();
+
+    let mut cfg = PipelineConfig::new(
+        Algorithm::parse(&args.str_or("algo", "optq")).unwrap(),
+        Method::parse(&args.str_or("method", "axe")).unwrap(),
+        args.u32_or("weight-bits", 4),
+        args.u32_or("act-bits", 8),
+    );
+    cfg.target = parse_target(args, Some(64));
+    if cfg.target == AccumTarget::None {
+        cfg.target = AccumTarget::MultiStage { p_inner: 16, tile: 64 };
+        cfg.method = Method::Axe;
+    }
+    let report = quantize_transformer(&mut model, &calib, &cfg)?;
+    println!("serving {} ({}, safe={})", model_name, report.config, report.guaranteed_safe());
+
+    let n_requests = args.usize_or("requests", 16);
+    let new_tokens = args.usize_or("tokens", 24);
+    let workers = args.usize_or("workers", 1);
+    let queue = ServeQueue::new();
+    for id in 0..n_requests as u64 {
+        let start = (id as usize * 37) % (val.len() - seq);
+        queue.submit(Request {
+            id,
+            prompt: val[start..start + seq / 2].to_vec(),
+            max_new_tokens: new_tokens,
+        });
+    }
+    queue.close();
+    let t0 = std::time::Instant::now();
+    serve(&model, &queue, workers, args.usize_or("max-batch", 4));
+    let responses = queue.drain();
+    let stats = ServeStats::from_responses(&responses, t0.elapsed().as_secs_f64());
+    println!("requests      : {}", stats.requests);
+    println!("generated     : {} tokens in {:.2}s", stats.total_tokens, stats.wall_s);
+    println!("throughput    : {:.1} tok/s", stats.tokens_per_s);
+    println!("latency p50   : {:.1} ms", stats.p50_latency_s * 1e3);
+    println!("latency p99   : {:.1} ms", stats.p99_latency_s * 1e3);
+    println!("mean queue    : {:.1} ms", stats.mean_queue_s * 1e3);
+    println!("overflow evts : {}", model.overflow_events());
+    Ok(())
+}
+
+fn cmd_zoo() -> Result<()> {
+    let names = axe::model::list_models();
+    if names.is_empty() {
+        println!("no models found — run `make artifacts` first");
+        return Ok(());
+    }
+    let mut t = Table::new(&["model", "family", "params"]);
+    for n in names {
+        match load_named(&n) {
+            Ok(m) => {
+                let fam = match &m {
+                    Model::Lm(_) => "lm",
+                    Model::Img(_) => "img",
+                };
+                t.row(&[n.clone(), fam.into(), format!("{}", m.param_count())]);
+            }
+            Err(e) => t.row(&[n.clone(), "error".into(), format!("{e}")]),
+        }
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_runtime() -> Result<()> {
+    let rt = axe::runtime::Runtime::new()?;
+    println!("platform : {}", rt.platform());
+    let artifacts = rt.list_artifacts();
+    println!("artifacts: {artifacts:?}");
+    for name in &artifacts {
+        match rt.load(name) {
+            Ok(_) => println!("  {name}: compiled OK"),
+            Err(e) => println!("  {name}: FAILED ({e})"),
+        }
+    }
+    Ok(())
+}

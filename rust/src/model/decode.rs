@@ -1,0 +1,297 @@
+//! Incremental decoding with a KV cache.
+//!
+//! `forward()` recomputes the whole prefix per step — fine for PPL
+//! evaluation, quadratic-per-token for serving. The KV cache stores each
+//! block's projected keys/values so one decode step costs O(seq · d)
+//! attention instead of O(seq² · d) recompute. Bit-compatible with
+//! `forward()` (tested): the quantized linears run the same integer
+//! datapath in both paths.
+
+use super::layers::softmax;
+use super::transformer::Transformer;
+
+/// Per-layer key/value cache for one sequence.
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    /// [layer][pos * d ..] cached keys.
+    k: Vec<Vec<f32>>,
+    /// [layer][pos * d ..] cached values.
+    v: Vec<Vec<f32>>,
+    d: usize,
+    max_seq: usize,
+    len: usize,
+}
+
+impl KvCache {
+    pub fn new(model: &Transformer) -> KvCache {
+        let d = model.cfg.d_model;
+        let max_seq = model.cfg.max_seq;
+        KvCache {
+            k: vec![Vec::with_capacity(max_seq * d); model.cfg.n_layers],
+            v: vec![Vec::with_capacity(max_seq * d); model.cfg.n_layers],
+            d,
+            max_seq,
+            len: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.len >= self.max_seq
+    }
+
+    pub fn clear(&mut self) {
+        for layer in self.k.iter_mut().chain(self.v.iter_mut()) {
+            layer.clear();
+        }
+        self.len = 0;
+    }
+
+    /// Drop the oldest `n` positions (sliding-window generation).
+    /// NOTE: positional embeddings are absolute, so after sliding the
+    /// model sees shifted positions; for the pico models with short
+    /// windows this matches the serve example's windowed re-encode.
+    pub fn truncate_front(&mut self, n: usize) {
+        let n = n.min(self.len);
+        for layer in self.k.iter_mut().chain(self.v.iter_mut()) {
+            layer.drain(..n * self.d);
+        }
+        self.len -= n;
+    }
+}
+
+impl Transformer {
+    /// Decode one token given the cached prefix; returns the logits for
+    /// this position and appends this position's K/V to the cache.
+    pub fn decode_step(&self, token: u16, cache: &mut KvCache) -> Vec<f32> {
+        assert!(!cache.is_full(), "KV cache full (max_seq {})", cache.max_seq);
+        assert_eq!(cache.d, self.cfg.d_model);
+        let d = self.cfg.d_model;
+        let pos = cache.len;
+        let mut h = vec![0.0f32; d];
+        let e = &self.embed[(token as usize) * d..(token as usize + 1) * d];
+        let p = &self.pos[pos * d..(pos + 1) * d];
+        for i in 0..d {
+            h[i] = e[i] + p[i];
+        }
+        let mut scratch: Vec<i64> = Vec::new();
+        let mut ln_out = vec![0.0f32; d];
+        let mut q = vec![0.0f32; d];
+        let mut k_new = vec![0.0f32; d];
+        let mut v_new = vec![0.0f32; d];
+        let mut mix = vec![0.0f32; d];
+        let mut attn_out = vec![0.0f32; d];
+        let mut ff = vec![0.0f32; self.cfg.d_ff];
+        let mut ff_out = vec![0.0f32; d];
+
+        for (bi, blk) in self.blocks.iter().enumerate() {
+            blk.ln1.forward_row(&h, &mut ln_out);
+            blk.wq.forward_row(&ln_out, &mut q, &mut scratch);
+            blk.wk.forward_row(&ln_out, &mut k_new, &mut scratch);
+            blk.wv.forward_row(&ln_out, &mut v_new, &mut scratch);
+            cache.k[bi].extend_from_slice(&k_new);
+            cache.v[bi].extend_from_slice(&v_new);
+
+            // single-query causal attention over the cache
+            let n_heads = self.cfg.n_heads;
+            let hd = d / n_heads;
+            let scale = 1.0 / (hd as f32).sqrt();
+            let kc = &cache.k[bi];
+            let vc = &cache.v[bi];
+            let t_len = pos + 1;
+            let mut scores = vec![0.0f32; t_len];
+            for hh in 0..n_heads {
+                let off = hh * hd;
+                for (s, score) in scores.iter_mut().enumerate() {
+                    let krow = &kc[s * d + off..s * d + off + hd];
+                    let mut dot = 0.0f32;
+                    for i in 0..hd {
+                        dot += q[off + i] * krow[i];
+                    }
+                    *score = dot * scale;
+                }
+                softmax(&mut scores);
+                let orow = &mut mix[off..off + hd];
+                orow.iter_mut().for_each(|o| *o = 0.0);
+                for (s, &w) in scores.iter().enumerate() {
+                    if w == 0.0 {
+                        continue;
+                    }
+                    let vrow = &vc[s * d + off..s * d + off + hd];
+                    for i in 0..hd {
+                        orow[i] += w * vrow[i];
+                    }
+                }
+            }
+            blk.wo.forward_row(&mix, &mut attn_out, &mut scratch);
+
+            if !self.cfg.parallel_residual {
+                for i in 0..d {
+                    h[i] += attn_out[i];
+                }
+            }
+            blk.ln2.forward_row(&h, &mut ln_out);
+            blk.fc1.forward_row(&ln_out, &mut ff, &mut scratch);
+            self.cfg.act.apply_vec(&mut ff);
+            blk.fc2.forward_row(&ff, &mut ff_out, &mut scratch);
+            if self.cfg.parallel_residual {
+                for i in 0..d {
+                    h[i] += attn_out[i] + ff_out[i];
+                }
+            } else {
+                for i in 0..d {
+                    h[i] += ff_out[i];
+                }
+            }
+        }
+        cache.len += 1;
+        let vocab = self.cfg.vocab;
+        let mut logits = vec![0.0f32; vocab];
+        self.ln_f.forward_row(&h, &mut ln_out);
+        self.head.forward_row(&ln_out, &mut logits);
+        logits
+    }
+
+    /// Prefill: push a whole prompt through the cache, returning the
+    /// logits of the final position.
+    pub fn prefill(&self, tokens: &[u16], cache: &mut KvCache) -> Vec<f32> {
+        assert!(!tokens.is_empty());
+        let mut last = Vec::new();
+        for &t in tokens {
+            last = self.decode_step(t, cache);
+        }
+        last
+    }
+
+    /// Greedy generation: prompt → `n` new tokens.
+    pub fn generate_greedy(&self, prompt: &[u16], n: usize) -> Vec<u16> {
+        let mut cache = KvCache::new(self);
+        let mut out = prompt.to_vec();
+        let mut logits = self.prefill(prompt, &mut cache);
+        for _ in 0..n {
+            if cache.is_full() {
+                // slide the window by re-encoding the tail
+                let keep = self.cfg.max_seq / 2;
+                let tail = out[out.len() - keep..].to_vec();
+                cache.clear();
+                logits = self.prefill(&tail, &mut cache);
+            }
+            let next = argmax(&logits) as u16;
+            out.push(next);
+            logits = self.decode_step(next, &mut cache);
+        }
+        out
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{random_transformer, Activation, TransformerConfig};
+
+    fn model(parallel: bool) -> Transformer {
+        random_transformer(
+            TransformerConfig {
+                name: "d".into(),
+                vocab: 48,
+                d_model: 16,
+                n_layers: 2,
+                n_heads: 2,
+                d_ff: 32,
+                max_seq: 16,
+                act: Activation::Gelu,
+                parallel_residual: parallel,
+            },
+            77,
+        )
+    }
+
+    #[test]
+    fn decode_matches_forward() {
+        for parallel in [false, true] {
+            let m = model(parallel);
+            let toks: Vec<u16> = vec![3, 1, 4, 1, 5, 9, 2, 6];
+            let full = m.forward(&toks, None);
+            let vocab = m.cfg.vocab;
+            let mut cache = KvCache::new(&m);
+            for (t, &tok) in toks.iter().enumerate() {
+                let step_logits = m.decode_step(tok, &mut cache);
+                let full_row = &full[t * vocab..(t + 1) * vocab];
+                for (a, b) in step_logits.iter().zip(full_row.iter()) {
+                    assert!(
+                        (a - b).abs() < 1e-4,
+                        "parallel={parallel} pos={t}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prefill_equals_last_forward_row() {
+        let m = model(true);
+        let toks: Vec<u16> = vec![1, 2, 3, 4, 5];
+        let mut cache = KvCache::new(&m);
+        let last = m.prefill(&toks, &mut cache);
+        let full = m.forward(&toks, None);
+        let vocab = m.cfg.vocab;
+        for (a, b) in last.iter().zip(&full[4 * vocab..5 * vocab]) {
+            assert!((a - b).abs() < 1e-4);
+        }
+        assert_eq!(cache.len(), 5);
+    }
+
+    #[test]
+    fn generate_deterministic_and_bounded() {
+        let m = model(false);
+        let out1 = m.generate_greedy(&[1, 2, 3], 20);
+        let out2 = m.generate_greedy(&[1, 2, 3], 20);
+        assert_eq!(out1, out2);
+        assert_eq!(out1.len(), 23);
+        assert!(out1.iter().all(|&t| (t as usize) < 48));
+    }
+
+    #[test]
+    fn cache_overflow_guard() {
+        let m = model(false);
+        let mut cache = KvCache::new(&m);
+        for t in 0..16 {
+            m.decode_step(t as u16 % 48, &mut cache);
+        }
+        assert!(cache.is_full());
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            m.decode_step(0, &mut cache);
+        }));
+        assert!(r.is_err(), "decoding past max_seq must panic");
+    }
+
+    #[test]
+    fn truncate_front_keeps_suffix() {
+        let m = model(true);
+        let mut cache = KvCache::new(&m);
+        for t in 0..8 {
+            m.decode_step(t, &mut cache);
+        }
+        cache.truncate_front(3);
+        assert_eq!(cache.len(), 5);
+        cache.clear();
+        assert!(cache.is_empty());
+    }
+}

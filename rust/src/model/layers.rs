@@ -1,0 +1,225 @@
+//! Non-linear building blocks: layer norm, activations, softmax,
+//! attention math helpers.
+
+/// Layer normalization with learned gain and bias.
+#[derive(Clone, Debug)]
+pub struct LayerNorm {
+    pub gamma: Vec<f32>,
+    pub beta: Vec<f32>,
+    pub eps: f32,
+}
+
+impl LayerNorm {
+    pub fn new(gamma: Vec<f32>, beta: Vec<f32>) -> LayerNorm {
+        assert_eq!(gamma.len(), beta.len());
+        LayerNorm { gamma, beta, eps: 1e-5 }
+    }
+
+    pub fn identity(dim: usize) -> LayerNorm {
+        LayerNorm::new(vec![1.0; dim], vec![0.0; dim])
+    }
+
+    pub fn forward_row(&self, x: &[f32], y: &mut [f32]) {
+        let n = x.len() as f32;
+        let mean: f32 = x.iter().sum::<f32>() / n;
+        let var: f32 = x.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / n;
+        let inv = 1.0 / (var + self.eps).sqrt();
+        for ((yo, &xi), (&g, &b)) in
+            y.iter_mut().zip(x.iter()).zip(self.gamma.iter().zip(self.beta.iter()))
+        {
+            *yo = (xi - mean) * inv * g + b;
+        }
+    }
+}
+
+/// Pointwise activation functions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Activation {
+    Relu,
+    Gelu,
+}
+
+impl Activation {
+    #[inline]
+    pub fn apply(&self, x: f32) -> f32 {
+        match self {
+            Activation::Relu => x.max(0.0),
+            Activation::Gelu => {
+                // tanh approximation (GPT-2 style)
+                const C: f32 = 0.7978845608; // sqrt(2/pi)
+                0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+            }
+        }
+    }
+
+    pub fn apply_vec(&self, xs: &mut [f32]) {
+        for x in xs {
+            *x = self.apply(*x);
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Activation> {
+        match s.to_ascii_lowercase().as_str() {
+            "relu" => Some(Activation::Relu),
+            "gelu" => Some(Activation::Gelu),
+            _ => None,
+        }
+    }
+}
+
+/// In-place numerically-stable softmax.
+pub fn softmax(xs: &mut [f32]) {
+    let m = xs.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let mut sum = 0.0f32;
+    for x in xs.iter_mut() {
+        *x = (*x - m).exp();
+        sum += *x;
+    }
+    if sum > 0.0 {
+        for x in xs.iter_mut() {
+            *x /= sum;
+        }
+    }
+}
+
+/// Causal (or full) multi-head self-attention over a (seq, d) activation
+/// buffer. q, k, v are (seq, d) with `n_heads` heads of size d/n_heads.
+/// Writes the mixed values (pre-projection) into `out`.
+#[allow(clippy::too_many_arguments)]
+pub fn attention(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    seq: usize,
+    d: usize,
+    n_heads: usize,
+    causal: bool,
+    out: &mut [f32],
+) {
+    assert_eq!(q.len(), seq * d);
+    assert_eq!(out.len(), seq * d);
+    let hd = d / n_heads;
+    assert_eq!(hd * n_heads, d, "d must divide n_heads");
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut scores = vec![0.0f32; seq];
+    for h in 0..n_heads {
+        let off = h * hd;
+        for t in 0..seq {
+            let limit = if causal { t + 1 } else { seq };
+            let qrow = &q[t * d + off..t * d + off + hd];
+            for (s, score) in scores.iter_mut().enumerate().take(limit) {
+                let krow = &k[s * d + off..s * d + off + hd];
+                let mut dotv = 0.0f32;
+                for i in 0..hd {
+                    dotv += qrow[i] * krow[i];
+                }
+                *score = dotv * scale;
+            }
+            softmax(&mut scores[..limit]);
+            let orow = &mut out[t * d + off..t * d + off + hd];
+            orow.iter_mut().for_each(|o| *o = 0.0);
+            for s in 0..limit {
+                let w = scores[s];
+                if w == 0.0 {
+                    continue;
+                }
+                let vrow = &v[s * d + off..s * d + off + hd];
+                for i in 0..hd {
+                    orow[i] += w * vrow[i];
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layernorm_normalizes() {
+        let ln = LayerNorm::identity(4);
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let mut y = vec![0.0; 4];
+        ln.forward_row(&x, &mut y);
+        let mean: f32 = y.iter().sum::<f32>() / 4.0;
+        let var: f32 = y.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-5);
+        assert!((var - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn layernorm_gain_bias() {
+        let ln = LayerNorm::new(vec![2.0, 2.0], vec![1.0, 1.0]);
+        let mut y = vec![0.0; 2];
+        ln.forward_row(&[-1.0, 1.0], &mut y);
+        // normalized = [-1, 1] -> *2 + 1 = [-1, 3]
+        assert!((y[0] + 1.0).abs() < 1e-3);
+        assert!((y[1] - 3.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut xs = vec![1.0, 2.0, 3.0];
+        softmax(&mut xs);
+        let s: f32 = xs.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(xs[2] > xs[1] && xs[1] > xs[0]);
+    }
+
+    #[test]
+    fn softmax_handles_extremes() {
+        let mut xs = vec![1000.0, -1000.0];
+        softmax(&mut xs);
+        assert!((xs[0] - 1.0).abs() < 1e-6);
+        assert!(xs[1] < 1e-6);
+    }
+
+    #[test]
+    fn activations() {
+        assert_eq!(Activation::Relu.apply(-1.0), 0.0);
+        assert_eq!(Activation::Relu.apply(2.0), 2.0);
+        assert!(Activation::Gelu.apply(0.0).abs() < 1e-7);
+        assert!((Activation::Gelu.apply(3.0) - 3.0).abs() < 0.02);
+        assert!(Activation::Gelu.apply(-3.0).abs() < 0.02);
+    }
+
+    #[test]
+    fn attention_uniform_values_passthrough() {
+        // identical k rows -> uniform attention -> output = mean of v rows
+        let seq = 3;
+        let d = 4;
+        let q = vec![1.0f32; seq * d];
+        let k = vec![1.0f32; seq * d];
+        let mut v = vec![0.0f32; seq * d];
+        for t in 0..seq {
+            for i in 0..d {
+                v[t * d + i] = t as f32;
+            }
+        }
+        let mut out = vec![0.0f32; seq * d];
+        attention(&q, &k, &v, seq, d, 2, false, &mut out);
+        // full attention, uniform -> every row = mean(0,1,2) = 1
+        for t in 0..seq {
+            for i in 0..d {
+                assert!((out[t * d + i] - 1.0).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn causal_attention_first_token_sees_itself() {
+        let seq = 3;
+        let d = 2;
+        let q = vec![1.0f32; seq * d];
+        let k = vec![1.0f32; seq * d];
+        let mut v = vec![0.0f32; seq * d];
+        for t in 0..seq {
+            v[t * d] = (t + 1) as f32;
+        }
+        let mut out = vec![0.0f32; seq * d];
+        attention(&q, &k, &v, seq, d, 1, true, &mut out);
+        assert!((out[0] - 1.0).abs() < 1e-6, "token 0 attends only to itself");
+        assert!((out[1 * d] - 1.5).abs() < 1e-6, "token 1 averages tokens 0,1");
+    }
+}

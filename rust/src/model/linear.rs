@@ -1,0 +1,413 @@
+//! Linear layers: float reference and the integer-datapath quantized
+//! version that runs on the accumulator simulator.
+
+use crate::accum::simulator::{dot_multistage, AccumSpec, OverflowMode};
+use crate::quant::{ActQuantizer, QuantResult};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Plain f32 linear layer, weights stored [out, in] row-major.
+#[derive(Clone, Debug)]
+pub struct FloatLinear {
+    pub in_dim: usize,
+    pub out_dim: usize,
+    /// [out, in] row-major.
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+}
+
+impl FloatLinear {
+    pub fn new(in_dim: usize, out_dim: usize, w: Vec<f32>, b: Vec<f32>) -> FloatLinear {
+        assert_eq!(w.len(), in_dim * out_dim);
+        assert_eq!(b.len(), out_dim);
+        FloatLinear { in_dim, out_dim, w, b }
+    }
+
+    pub fn zeros(in_dim: usize, out_dim: usize) -> FloatLinear {
+        FloatLinear { in_dim, out_dim, w: vec![0.0; in_dim * out_dim], b: vec![0.0; out_dim] }
+    }
+
+    /// y = W x + b for one input row.
+    pub fn forward_row(&self, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.in_dim);
+        debug_assert_eq!(y.len(), self.out_dim);
+        for (o, yo) in y.iter_mut().enumerate() {
+            let row = &self.w[o * self.in_dim..(o + 1) * self.in_dim];
+            let mut s = 0.0f32;
+            for (wi, xi) in row.iter().zip(x.iter()) {
+                s += wi * xi;
+            }
+            *yo = s + self.b[o];
+        }
+    }
+
+    /// Weight matrix as K×C f64 (input-major) for the PTQ algorithms.
+    pub fn weights_kc(&self) -> crate::linalg::Mat {
+        crate::linalg::Mat::from_fn(self.in_dim, self.out_dim, |k, c| {
+            self.w[c * self.in_dim + k] as f64
+        })
+    }
+}
+
+/// How the integer dot products are executed.
+#[derive(Clone, Copy, Debug)]
+pub enum Datapath {
+    /// Exact i64 accumulation — valid stand-in when overflow is
+    /// guaranteed absent; the fast evaluation path.
+    Exact,
+    /// Faithful simulation: tiles of `tile` accumulate in `inner`-bit
+    /// registers, partial sums in `outer`-bit registers, with the given
+    /// overflow behaviour. `tile >= in_dim` models a monolithic
+    /// accumulator.
+    Simulated { tile: usize, inner_bits: u32, outer_bits: u32, mode: OverflowMode },
+}
+
+/// Quantized linear layer executing on the integer datapath.
+///
+/// Weights are integer codes with per-channel scales; input activations
+/// are quantized to unsigned `act.bits`-bit codes on entry. The
+/// zero-point correction term z·Σq is applied after accumulation, as
+/// real kernels do.
+#[derive(Debug)]
+pub struct QuantLinear {
+    pub in_dim: usize,
+    pub out_dim: usize,
+    /// [out, in] row-major codes.
+    pub codes: Vec<i32>,
+    /// Per-output-channel weight scale.
+    pub scales: Vec<f32>,
+    /// Per-output-channel Σ_k q (zero-point correction).
+    pub code_sums: Vec<i64>,
+    pub bias: Vec<f32>,
+    pub act: ActQuantizer,
+    pub datapath: Datapath,
+    /// Optional QuaRot-style input rotation (paper §5 future work);
+    /// applied to the activation row before quantization. The weights
+    /// were rotated correspondingly at quantization time.
+    pub rotation: Option<crate::quant::rotation::Rotation>,
+    /// Overflow events observed during forward passes (Simulated only).
+    pub overflow_events: AtomicU64,
+    /// MAC count processed (for overflow-rate reporting).
+    pub macs: AtomicU64,
+}
+
+impl Clone for QuantLinear {
+    fn clone(&self) -> Self {
+        QuantLinear {
+            in_dim: self.in_dim,
+            out_dim: self.out_dim,
+            codes: self.codes.clone(),
+            scales: self.scales.clone(),
+            code_sums: self.code_sums.clone(),
+            bias: self.bias.clone(),
+            act: self.act,
+            datapath: self.datapath,
+            rotation: self.rotation.clone(),
+            overflow_events: AtomicU64::new(self.overflow_events.load(Ordering::Relaxed)),
+            macs: AtomicU64::new(self.macs.load(Ordering::Relaxed)),
+        }
+    }
+}
+
+impl QuantLinear {
+    /// Assemble from a PTQ result (K×C codes) plus the layer's bias and
+    /// input activation quantizer.
+    pub fn from_result(
+        result: &QuantResult,
+        bias: Vec<f32>,
+        act: ActQuantizer,
+        datapath: Datapath,
+    ) -> QuantLinear {
+        let (k, c) = (result.k, result.c);
+        assert_eq!(bias.len(), c);
+        // transpose K×C -> [out, in]
+        let mut codes = vec![0i32; k * c];
+        for i in 0..k {
+            for ch in 0..c {
+                codes[ch * k + i] = result.code(i, ch) as i32;
+            }
+        }
+        let code_sums = result.channel_sums();
+        QuantLinear {
+            in_dim: k,
+            out_dim: c,
+            codes,
+            scales: result.scales.iter().map(|&s| s as f32).collect(),
+            code_sums,
+            bias,
+            act,
+            datapath,
+            rotation: None,
+            overflow_events: AtomicU64::new(0),
+            macs: AtomicU64::new(0),
+        }
+    }
+
+    /// Quantize an input row into integer codes.
+    pub fn quantize_input(&self, x: &[f32], codes: &mut [i64]) {
+        debug_assert_eq!(x.len(), self.in_dim);
+        for (c, &v) in codes.iter_mut().zip(x.iter()) {
+            *c = self.act.to_code(v as f64);
+        }
+    }
+
+    /// y = dequant(∫ integer-datapath(W_q, x_q)) + b for one input row.
+    /// `x_codes` is scratch of length in_dim.
+    pub fn forward_row(&self, x: &[f32], y: &mut [f32], x_codes: &mut [i64]) {
+        debug_assert_eq!(y.len(), self.out_dim);
+        if let Some(rot) = &self.rotation {
+            // online rotation: x' = Rᵀx (O(K log b) FWHT), then quantize
+            let mut xr = x.to_vec();
+            rot.apply_row(&mut xr);
+            self.quantize_input(&xr, x_codes);
+        } else {
+            self.quantize_input(x, x_codes);
+        }
+        let sx = self.act.scale as f32;
+        let zp = self.act.zero_point;
+        let mut w_row = vec![0i64; self.in_dim];
+        let mut overflow_total = 0u64;
+        for o in 0..self.out_dim {
+            let row = &self.codes[o * self.in_dim..(o + 1) * self.in_dim];
+            let acc = match self.datapath {
+                Datapath::Exact => {
+                    let mut s: i64 = 0;
+                    for (q, x) in row.iter().zip(x_codes.iter()) {
+                        s += (*q as i64) * *x;
+                    }
+                    s
+                }
+                Datapath::Simulated { tile, inner_bits, outer_bits, mode } => {
+                    for (w, q) in w_row.iter_mut().zip(row.iter()) {
+                        *w = *q as i64;
+                    }
+                    let out = dot_multistage(
+                        x_codes,
+                        &w_row,
+                        tile,
+                        AccumSpec::new(inner_bits, mode),
+                        AccumSpec::new(outer_bits, mode),
+                    );
+                    overflow_total += out.overflows as u64;
+                    out.value
+                }
+            };
+            let corrected = acc - zp * self.code_sums[o];
+            y[o] = self.scales[o] * sx * corrected as f32 + self.bias[o];
+        }
+        if overflow_total > 0 {
+            self.overflow_events.fetch_add(overflow_total, Ordering::Relaxed);
+        }
+        self.macs.fetch_add((self.in_dim * self.out_dim) as u64, Ordering::Relaxed);
+    }
+
+    /// Dequantized weights as an [out, in] f32 matrix (diagnostics).
+    pub fn dequant_weights(&self) -> Vec<f32> {
+        let mut w = vec![0.0f32; self.codes.len()];
+        for o in 0..self.out_dim {
+            let s = self.scales[o];
+            for i in 0..self.in_dim {
+                w[o * self.in_dim + i] = self.codes[o * self.in_dim + i] as f32 * s;
+            }
+        }
+        w
+    }
+
+    pub fn overflow_count(&self) -> u64 {
+        self.overflow_events.load(Ordering::Relaxed)
+    }
+}
+
+/// A layer that is either float or quantized — the unit the coordinator
+/// swaps during the pipeline.
+#[derive(Clone, Debug)]
+pub enum Linear {
+    Float(FloatLinear),
+    Quant(QuantLinear),
+}
+
+impl Linear {
+    pub fn in_dim(&self) -> usize {
+        match self {
+            Linear::Float(l) => l.in_dim,
+            Linear::Quant(l) => l.in_dim,
+        }
+    }
+
+    pub fn out_dim(&self) -> usize {
+        match self {
+            Linear::Float(l) => l.out_dim,
+            Linear::Quant(l) => l.out_dim,
+        }
+    }
+
+    pub fn forward_row(&self, x: &[f32], y: &mut [f32], scratch: &mut Vec<i64>) {
+        match self {
+            Linear::Float(l) => l.forward_row(x, y),
+            Linear::Quant(l) => {
+                scratch.resize(l.in_dim, 0);
+                l.forward_row(x, y, scratch);
+            }
+        }
+    }
+
+    pub fn bias(&self) -> &[f32] {
+        match self {
+            Linear::Float(l) => &l.b,
+            Linear::Quant(l) => &l.bias,
+        }
+    }
+
+    pub fn bias_mut(&mut self) -> &mut Vec<f32> {
+        match self {
+            Linear::Float(l) => &mut l.b,
+            Linear::Quant(l) => &mut l.bias,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<&FloatLinear> {
+        match self {
+            Linear::Float(l) => Some(l),
+            _ => None,
+        }
+    }
+
+    pub fn as_quant(&self) -> Option<&QuantLinear> {
+        match self {
+            Linear::Quant(l) => Some(l),
+            _ => None,
+        }
+    }
+
+    pub fn is_quantized(&self) -> bool {
+        matches!(self, Linear::Quant(_))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{gpfq_quantize, GpfqParams};
+    use crate::util::rng::Rng;
+
+    fn random_float_linear(k: usize, c: usize, seed: u64) -> FloatLinear {
+        let mut rng = Rng::new(seed);
+        let w: Vec<f32> = (0..k * c).map(|_| (rng.normal() * 0.3) as f32).collect();
+        let b: Vec<f32> = (0..c).map(|_| (rng.normal() * 0.1) as f32).collect();
+        FloatLinear::new(k, c, w, b)
+    }
+
+    fn quantize_layer(fl: &FloatLinear, bits: u32, seed: u64) -> QuantLinear {
+        let mut rng = Rng::new(seed);
+        let w_kc = fl.weights_kc();
+        let x = crate::linalg::Mat::random_normal(fl.in_dim, 64, &mut rng, 1.0);
+        let r = gpfq_quantize(&w_kc, &x, &x, &GpfqParams::base(bits, 8));
+        let samples: Vec<f64> = (0..2000).map(|_| rng.normal()).collect();
+        let act = ActQuantizer::calibrate(&samples, 8, 0.999);
+        QuantLinear::from_result(&r, fl.b.clone(), act, Datapath::Exact)
+    }
+
+    #[test]
+    fn float_forward_known_values() {
+        let l = FloatLinear::new(2, 2, vec![1.0, 2.0, 3.0, 4.0], vec![0.5, -0.5]);
+        let mut y = vec![0.0; 2];
+        l.forward_row(&[1.0, 1.0], &mut y);
+        assert_eq!(y, vec![3.5, 6.5]);
+    }
+
+    #[test]
+    fn quantized_approximates_float_at_8_bits() {
+        let fl = random_float_linear(32, 16, 90);
+        let ql = quantize_layer(&fl, 8, 91);
+        let mut rng = Rng::new(92);
+        let x: Vec<f32> = (0..32).map(|_| rng.normal() as f32).collect();
+        let mut y_f = vec![0.0; 16];
+        let mut y_q = vec![0.0; 16];
+        let mut scratch = vec![0i64; 32];
+        fl.forward_row(&x, &mut y_f);
+        ql.forward_row(&x, &mut y_q, &mut scratch);
+        for (f, q) in y_f.iter().zip(y_q.iter()) {
+            assert!((f - q).abs() < 0.15, "f={f} q={q}");
+        }
+    }
+
+    #[test]
+    fn exact_and_wide_simulated_agree() {
+        let fl = random_float_linear(48, 8, 93);
+        let mut ql = quantize_layer(&fl, 4, 94);
+        let mut rng = Rng::new(95);
+        let x: Vec<f32> = (0..48).map(|_| rng.normal() as f32).collect();
+        let mut y1 = vec![0.0; 8];
+        let mut y2 = vec![0.0; 8];
+        let mut scratch = vec![0i64; 48];
+        ql.forward_row(&x, &mut y1, &mut scratch);
+        ql.datapath = Datapath::Simulated {
+            tile: 48,
+            inner_bits: 32,
+            outer_bits: 32,
+            mode: OverflowMode::Wraparound,
+        };
+        ql.forward_row(&x, &mut y2, &mut scratch);
+        assert_eq!(y1, y2);
+        assert_eq!(ql.overflow_count(), 0);
+    }
+
+    #[test]
+    fn narrow_simulated_corrupts() {
+        let fl = random_float_linear(128, 4, 96);
+        let mut ql = quantize_layer(&fl, 8, 97);
+        // 10-bit accumulator is hopeless for 8-bit codes at K=128
+        ql.datapath = Datapath::Simulated {
+            tile: 128,
+            inner_bits: 10,
+            outer_bits: 10,
+            mode: OverflowMode::Wraparound,
+        };
+        let mut rng = Rng::new(98);
+        let x: Vec<f32> = (0..128).map(|_| rng.normal() as f32 + 1.0).collect();
+        let mut y = vec![0.0; 4];
+        let mut scratch = vec![0i64; 128];
+        ql.forward_row(&x, &mut y, &mut scratch);
+        assert!(ql.overflow_count() > 0, "narrow accumulator must overflow");
+    }
+
+    #[test]
+    fn zero_point_correction_is_exact() {
+        // With act zero-point z, the corrected integer result must equal
+        // the dot of dequantized values / (s_w s_x).
+        let fl = random_float_linear(16, 3, 99);
+        let ql = quantize_layer(&fl, 6, 100);
+        let mut rng = Rng::new(101);
+        let x: Vec<f32> = (0..16).map(|_| rng.normal() as f32).collect();
+        let mut codes = vec![0i64; 16];
+        ql.quantize_input(&x, &mut codes);
+        for o in 0..3 {
+            let row = &ql.codes[o * 16..(o + 1) * 16];
+            let w_row: Vec<i64> = row.iter().map(|&q| q as i64).collect();
+            let acc = crate::accum::simulator::dot_exact(&codes, &w_row);
+            let corrected = acc - ql.act.zero_point * ql.code_sums[o];
+            // reference: Σ q_k (code_k − z)
+            let mut reference = 0i64;
+            for (q, c) in w_row.iter().zip(codes.iter()) {
+                reference += q * (c - ql.act.zero_point);
+            }
+            assert_eq!(corrected, reference);
+        }
+    }
+
+    #[test]
+    fn from_result_transposes_correctly() {
+        let mut r = QuantResult::new(2, 3, 4, vec![1.0, 1.0, 1.0]);
+        r.set_code(0, 1, 5);
+        r.set_code(1, 2, -3);
+        let ql = QuantLinear::from_result(
+            &r,
+            vec![0.0; 3],
+            ActQuantizer::unit(8),
+            Datapath::Exact,
+        );
+        // codes[out=1][in=0] == 5
+        assert_eq!(ql.codes[1 * 2 + 0], 5);
+        assert_eq!(ql.codes[2 * 2 + 1], -3);
+        assert_eq!(ql.code_sums, vec![0, 5, -3]);
+    }
+}

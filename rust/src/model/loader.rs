@@ -1,0 +1,312 @@
+//! Weight-zoo loader: reads the manifests and raw-f32 tensor files that
+//! `python/compile/train.py` exports into `artifacts/weights/<model>/`.
+//!
+//! Format: `manifest.json` carries the architecture and a tensor table
+//! `{name: shape}`; each tensor lives in `<name>.bin` as little-endian
+//! f32, row-major, shape `[out, in]` for weight matrices (matching the
+//! rust `FloatLinear` layout directly).
+
+use super::layers::{Activation, LayerNorm};
+use super::linear::{FloatLinear, Linear};
+use super::mlp::{Mlp, MlpConfig};
+use super::transformer::{Block, Transformer, TransformerConfig};
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// A loaded model of either family.
+pub enum Model {
+    Lm(Transformer),
+    Img(Mlp),
+}
+
+impl Model {
+    pub fn name(&self) -> &str {
+        match self {
+            Model::Lm(m) => &m.cfg.name,
+            Model::Img(m) => &m.cfg.name,
+        }
+    }
+
+    pub fn param_count(&self) -> usize {
+        match self {
+            Model::Lm(m) => m.cfg.param_count(),
+            Model::Img(m) => m.cfg.param_count(),
+        }
+    }
+}
+
+/// Read a raw little-endian f32 tensor file.
+pub fn read_f32_bin(path: &Path, expect_len: usize) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    if bytes.len() != expect_len * 4 {
+        return Err(anyhow!(
+            "{}: expected {} f32 ({} bytes), got {} bytes",
+            path.display(),
+            expect_len,
+            expect_len * 4,
+            bytes.len()
+        ));
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Read a raw little-endian f32 file of unknown length.
+pub fn read_f32_bin_any(path: &Path) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    anyhow::ensure!(bytes.len() % 4 == 0, "{}: not a multiple of 4 bytes", path.display());
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Write a raw little-endian f32 tensor file (used by tests and tools).
+pub fn write_f32_bin(path: &Path, data: &[f32]) -> Result<()> {
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    std::fs::write(path, bytes).with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+struct TensorTable {
+    dir: PathBuf,
+    shapes: std::collections::BTreeMap<String, Vec<usize>>,
+}
+
+impl TensorTable {
+    fn from_manifest(dir: &Path, manifest: &Json) -> Result<TensorTable> {
+        let tensors = manifest
+            .get("tensors")
+            .and_then(|t| t.as_obj())
+            .ok_or_else(|| anyhow!("manifest missing 'tensors'"))?;
+        let mut shapes = std::collections::BTreeMap::new();
+        for (name, shape) in tensors {
+            let dims: Vec<usize> = shape
+                .as_arr()
+                .ok_or_else(|| anyhow!("tensor {name}: shape must be array"))?
+                .iter()
+                .map(|d| d.as_usize().unwrap_or(0))
+                .collect();
+            shapes.insert(name.clone(), dims);
+        }
+        Ok(TensorTable { dir: dir.to_path_buf(), shapes })
+    }
+
+    fn load(&self, name: &str) -> Result<Vec<f32>> {
+        let shape = self
+            .shapes
+            .get(name)
+            .ok_or_else(|| anyhow!("tensor '{name}' not in manifest"))?;
+        let len: usize = shape.iter().product();
+        read_f32_bin(&self.dir.join(format!("{name}.bin")), len)
+    }
+
+    fn shape(&self, name: &str) -> Result<&[usize]> {
+        self.shapes
+            .get(name)
+            .map(|s| s.as_slice())
+            .ok_or_else(|| anyhow!("tensor '{name}' not in manifest"))
+    }
+}
+
+/// Load a model directory produced by `train.py`.
+pub fn load_model(dir: &Path) -> Result<Model> {
+    let manifest_path = dir.join("manifest.json");
+    let text = std::fs::read_to_string(&manifest_path)
+        .with_context(|| format!("reading {}", manifest_path.display()))?;
+    let manifest = Json::parse(&text).map_err(|e| anyhow!("bad manifest: {e}"))?;
+    let family = manifest.req_str("family")?;
+    match family {
+        "lm" => Ok(Model::Lm(load_transformer(dir, &manifest)?)),
+        "img" => Ok(Model::Img(load_mlp(dir, &manifest)?)),
+        other => Err(anyhow!("unknown model family '{other}'")),
+    }
+}
+
+/// Load a model by name from `<artifacts>/weights/<name>/`.
+pub fn load_named(name: &str) -> Result<Model> {
+    let dir = crate::artifacts_dir().join("weights").join(name);
+    load_model(&dir)
+}
+
+/// Names of all models present in the artifacts weight zoo.
+pub fn list_models() -> Vec<String> {
+    let dir = crate::artifacts_dir().join("weights");
+    let mut names = Vec::new();
+    if let Ok(rd) = std::fs::read_dir(&dir) {
+        for e in rd.flatten() {
+            if e.path().join("manifest.json").is_file() {
+                if let Some(n) = e.file_name().to_str() {
+                    names.push(n.to_string());
+                }
+            }
+        }
+    }
+    names.sort();
+    names
+}
+
+fn load_transformer(dir: &Path, manifest: &Json) -> Result<Transformer> {
+    let arch = manifest.get("lm").ok_or_else(|| anyhow!("manifest missing 'lm'"))?;
+    let cfg = TransformerConfig {
+        name: manifest.req_str("name")?.to_string(),
+        vocab: arch.req_usize("vocab")?,
+        d_model: arch.req_usize("d_model")?,
+        n_layers: arch.req_usize("n_layers")?,
+        n_heads: arch.req_usize("n_heads")?,
+        d_ff: arch.req_usize("d_ff")?,
+        max_seq: arch.req_usize("max_seq")?,
+        act: Activation::parse(arch.req_str("act")?)
+            .ok_or_else(|| anyhow!("bad activation"))?,
+        parallel_residual: arch
+            .get("parallel_residual")
+            .and_then(|v| v.as_bool())
+            .unwrap_or(false),
+    };
+    let t = TensorTable::from_manifest(dir, manifest)?;
+    let d = cfg.d_model;
+
+    let load_linear = |name: &str, in_dim: usize, out_dim: usize| -> Result<Linear> {
+        let w = t.load(&format!("{name}.w"))?;
+        let shape = t.shape(&format!("{name}.w"))?;
+        if shape != [out_dim, in_dim] {
+            return Err(anyhow!("{name}.w: expected [{out_dim},{in_dim}], got {shape:?}"));
+        }
+        let b = t.load(&format!("{name}.b"))?;
+        Ok(Linear::Float(FloatLinear::new(in_dim, out_dim, w, b)))
+    };
+
+    let mut blocks = Vec::with_capacity(cfg.n_layers);
+    for bi in 0..cfg.n_layers {
+        let p = format!("b{bi}");
+        blocks.push(Block {
+            ln1: LayerNorm::new(t.load(&format!("{p}.ln1.g"))?, t.load(&format!("{p}.ln1.b"))?),
+            ln2: LayerNorm::new(t.load(&format!("{p}.ln2.g"))?, t.load(&format!("{p}.ln2.b"))?),
+            wq: load_linear(&format!("{p}.wq"), d, d)?,
+            wk: load_linear(&format!("{p}.wk"), d, d)?,
+            wv: load_linear(&format!("{p}.wv"), d, d)?,
+            wo: load_linear(&format!("{p}.wo"), d, d)?,
+            fc1: load_linear(&format!("{p}.fc1"), d, cfg.d_ff)?,
+            fc2: load_linear(&format!("{p}.fc2"), cfg.d_ff, d)?,
+        });
+    }
+    let embed = t.load("embed")?;
+    let pos = t.load("pos")?;
+    let ln_f = LayerNorm::new(t.load("ln_f.g")?, t.load("ln_f.b")?);
+    let head_w = t.load("head.w")?;
+    let head = FloatLinear::new(d, cfg.vocab, head_w, vec![0.0; cfg.vocab]);
+    Ok(Transformer { cfg, embed, pos, blocks, ln_f, head })
+}
+
+fn load_mlp(dir: &Path, manifest: &Json) -> Result<Mlp> {
+    let arch = manifest.get("img").ok_or_else(|| anyhow!("manifest missing 'img'"))?;
+    let hidden: Vec<usize> = arch
+        .req_arr("hidden")?
+        .iter()
+        .map(|v| v.as_usize().unwrap_or(0))
+        .collect();
+    let cfg = MlpConfig {
+        name: manifest.req_str("name")?.to_string(),
+        input_dim: arch.req_usize("input_dim")?,
+        hidden,
+        classes: arch.req_usize("classes")?,
+        act: Activation::parse(arch.req_str("act")?)
+            .ok_or_else(|| anyhow!("bad activation"))?,
+        residual: arch.get("residual").and_then(|v| v.as_bool()).unwrap_or(false),
+    };
+    let t = TensorTable::from_manifest(dir, manifest)?;
+    let mut layers = Vec::new();
+    let mut prev = cfg.input_dim;
+    for (i, &h) in cfg.hidden.iter().enumerate() {
+        let w = t.load(&format!("l{i}.w"))?;
+        let b = t.load(&format!("l{i}.b"))?;
+        layers.push(Linear::Float(FloatLinear::new(prev, h, w, b)));
+        prev = h;
+    }
+    let head = FloatLinear::new(prev, cfg.classes, t.load("head.w")?, t.load("head.b")?);
+    Ok(Mlp { cfg, layers, head })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_bin_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("axe_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.bin");
+        let data = vec![1.5f32, -2.25, 0.0, 1e-9];
+        write_f32_bin(&path, &data).unwrap();
+        let back = read_f32_bin(&path, 4).unwrap();
+        assert_eq!(back, data);
+        assert!(read_f32_bin(&path, 5).is_err(), "length mismatch detected");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_roundtrip_mlp() {
+        let dir = std::env::temp_dir().join(format!("axe_mlp_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // build a tiny mlp manifest by hand
+        let mut tensors = Json::obj();
+        tensors.set("l0.w", vec![3usize, 4].into());
+        tensors.set("l0.b", vec![3usize].into());
+        tensors.set("head.w", vec![2usize, 3].into());
+        tensors.set("head.b", vec![2usize].into());
+        let mut arch = Json::obj();
+        arch.set("input_dim", 4usize.into())
+            .set("hidden", vec![3usize].into())
+            .set("classes", 2usize.into())
+            .set("act", "relu".into())
+            .set("residual", false.into());
+        let mut m = Json::obj();
+        m.set("name", "tiny-img".into())
+            .set("family", "img".into())
+            .set("img", arch)
+            .set("tensors", tensors);
+        std::fs::write(dir.join("manifest.json"), m.to_pretty()).unwrap();
+        write_f32_bin(&dir.join("l0.w.bin"), &[0.1; 12]).unwrap();
+        write_f32_bin(&dir.join("l0.b.bin"), &[0.0; 3]).unwrap();
+        write_f32_bin(&dir.join("head.w.bin"), &[0.2; 6]).unwrap();
+        write_f32_bin(&dir.join("head.b.bin"), &[0.0; 2]).unwrap();
+        let model = load_model(&dir).unwrap();
+        match model {
+            Model::Img(mlp) => {
+                let y = mlp.forward(&[1.0, 1.0, 1.0, 1.0], None);
+                assert_eq!(y.len(), 2);
+                // l0: 0.1*4=0.4 relu -> head: 0.2*0.4*3=0.24
+                assert!((y[0] - 0.24).abs() < 1e-6);
+            }
+            _ => panic!("wrong family"),
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_tensor_is_error() {
+        let dir = std::env::temp_dir().join(format!("axe_miss_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut m = Json::obj();
+        m.set("name", "x".into())
+            .set("family", "img".into())
+            .set("img", {
+                let mut a = Json::obj();
+                a.set("input_dim", 4usize.into())
+                    .set("hidden", vec![3usize].into())
+                    .set("classes", 2usize.into())
+                    .set("act", "relu".into());
+                a
+            })
+            .set("tensors", Json::obj());
+        std::fs::write(dir.join("manifest.json"), m.to_pretty()).unwrap();
+        assert!(load_model(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

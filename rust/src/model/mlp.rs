@@ -1,0 +1,178 @@
+//! MLP image classifiers (the "glyph" family — this repo's stand-in for
+//! ResNet18 / MobileNetV2 / ViT-B-32, see DESIGN.md §2):
+//!
+//! - `glyph-res`        — deep residual MLP (ResNet analog)
+//! - `glyph-bottleneck` — narrow inverted-bottleneck MLP (MobileNet analog)
+//! - `glyph-mlp`        — plain wide MLP (dense baseline)
+
+use super::layers::Activation;
+use super::linear::{FloatLinear, Linear};
+use super::transformer::Capture;
+
+/// MLP architecture.
+#[derive(Clone, Debug)]
+pub struct MlpConfig {
+    pub name: String,
+    pub input_dim: usize,
+    pub hidden: Vec<usize>,
+    pub classes: usize,
+    pub act: Activation,
+    /// Add identity skip connections between equal-width layers.
+    pub residual: bool,
+}
+
+impl MlpConfig {
+    pub fn param_count(&self) -> usize {
+        let mut n = 0;
+        let mut prev = self.input_dim;
+        for &h in &self.hidden {
+            n += prev * h + h;
+            prev = h;
+        }
+        n + prev * self.classes + self.classes
+    }
+}
+
+/// Feed-forward classifier.
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    pub cfg: MlpConfig,
+    pub layers: Vec<Linear>,
+    /// Final classification head (kept 8-bit/float per paper App. C.1).
+    pub head: FloatLinear,
+}
+
+impl Mlp {
+    pub fn linear_names(&self) -> Vec<String> {
+        (0..self.layers.len()).map(|i| format!("l{i}")).collect()
+    }
+
+    /// Each hidden layer is its own "block" for prefix refresh purposes.
+    pub fn block_groups(&self) -> Vec<Vec<String>> {
+        self.linear_names().into_iter().map(|n| vec![n]).collect()
+    }
+
+    pub fn get_linear(&self, name: &str) -> Option<&Linear> {
+        let i: usize = name.strip_prefix('l')?.parse().ok()?;
+        self.layers.get(i)
+    }
+
+    pub fn get_linear_mut(&mut self, name: &str) -> Option<&mut Linear> {
+        let i: usize = name.strip_prefix('l')?.parse().ok()?;
+        self.layers.get_mut(i)
+    }
+
+    /// Forward one input row to class logits.
+    pub fn forward(&self, x: &[f32], mut capture: Option<&mut Capture>) -> Vec<f32> {
+        assert_eq!(x.len(), self.cfg.input_dim);
+        let mut cur = x.to_vec();
+        let mut scratch: Vec<i64> = Vec::new();
+        for (i, layer) in self.layers.iter().enumerate() {
+            if let Some(c) = capture.as_deref_mut() {
+                c.record(&format!("l{i}"), &cur);
+            }
+            let mut out = vec![0.0f32; layer.out_dim()];
+            layer.forward_row(&cur, &mut out, &mut scratch);
+            self.cfg.act.apply_vec(&mut out);
+            if self.cfg.residual && out.len() == cur.len() {
+                for (o, c) in out.iter_mut().zip(cur.iter()) {
+                    *o += c;
+                }
+            }
+            cur = out;
+        }
+        let mut logits = vec![0.0f32; self.cfg.classes];
+        self.head.forward_row(&cur, &mut logits);
+        logits
+    }
+
+    pub fn overflow_events(&self) -> u64 {
+        self.layers
+            .iter()
+            .filter_map(|l| l.as_quant())
+            .map(|q| q.overflow_count())
+            .sum()
+    }
+}
+
+/// Randomly-initialized MLP for tests.
+pub fn random_mlp(cfg: MlpConfig, seed: u64) -> Mlp {
+    use crate::util::rng::Rng;
+    let mut rng = Rng::new(seed);
+    let mut layers = Vec::new();
+    let mut prev = cfg.input_dim;
+    for &h in &cfg.hidden {
+        let std = (2.0 / prev as f64).sqrt();
+        let w: Vec<f32> = (0..prev * h).map(|_| (rng.normal() * std) as f32).collect();
+        layers.push(Linear::Float(FloatLinear::new(prev, h, w, vec![0.0; h])));
+        prev = h;
+    }
+    let w: Vec<f32> =
+        (0..prev * cfg.classes).map(|_| (rng.normal() * 0.05) as f32).collect();
+    let head = FloatLinear::new(prev, cfg.classes, w, vec![0.0; cfg.classes]);
+    Mlp { cfg, layers, head }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(residual: bool) -> MlpConfig {
+        MlpConfig {
+            name: "t".into(),
+            input_dim: 16,
+            hidden: vec![24, 24, 24],
+            classes: 5,
+            act: Activation::Relu,
+            residual,
+        }
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let m = random_mlp(cfg(false), 1);
+        let x = vec![0.5f32; 16];
+        let y = m.forward(&x, None);
+        assert_eq!(y.len(), 5);
+        assert!(y.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn residual_changes_output() {
+        let m1 = random_mlp(cfg(false), 2);
+        let mut m2 = m1.clone();
+        m2.cfg.residual = true;
+        let x = vec![0.3f32; 16];
+        let y1 = m1.forward(&x, None);
+        let y2 = m2.forward(&x, None);
+        assert!(y1.iter().zip(&y2).any(|(a, b)| (a - b).abs() > 1e-6));
+    }
+
+    #[test]
+    fn capture_per_layer() {
+        let m = random_mlp(cfg(false), 3);
+        let mut cap = Capture::for_layers(&m.linear_names());
+        m.forward(&[0.1; 16], Some(&mut cap));
+        m.forward(&[0.2; 16], Some(&mut cap));
+        let x0 = cap.matrix_kd("l0").unwrap();
+        assert_eq!(x0.rows(), 16);
+        assert_eq!(x0.cols(), 2);
+        let x1 = cap.matrix_kd("l1").unwrap();
+        assert_eq!(x1.rows(), 24);
+    }
+
+    #[test]
+    fn accessors() {
+        let mut m = random_mlp(cfg(false), 4);
+        assert!(m.get_linear("l0").is_some());
+        assert!(m.get_linear("l3").is_none());
+        assert!(m.get_linear_mut("l2").is_some());
+        assert_eq!(m.linear_names(), vec!["l0", "l1", "l2"]);
+    }
+
+    #[test]
+    fn param_count() {
+        let c = cfg(false);
+        assert_eq!(c.param_count(), 16 * 24 + 24 + 24 * 24 + 24 + 24 * 24 + 24 + 24 * 5 + 5);
+    }
+}

@@ -1,0 +1,23 @@
+//! Inference substrate: float and integer-datapath model execution.
+//!
+//! The paper quantizes pre-trained ImageNet classifiers and HF language
+//! models; this repo's zoo (trained by `python/compile/train.py`) is a
+//! pico-LM transformer family plus glyph MLP classifiers — see DESIGN.md
+//! §2 for the substitution rationale. Quantized linears execute on the
+//! bit-accurate accumulator simulator from [`crate::accum`].
+
+pub mod decode;
+pub mod layers;
+pub mod linear;
+pub mod loader;
+pub mod mlp;
+pub mod transformer;
+
+pub use decode::KvCache;
+pub use layers::{attention, softmax, Activation, LayerNorm};
+pub use linear::{Datapath, FloatLinear, Linear, QuantLinear};
+pub use loader::{
+    list_models, load_model, load_named, read_f32_bin, read_f32_bin_any, write_f32_bin, Model,
+};
+pub use mlp::{random_mlp, Mlp, MlpConfig};
+pub use transformer::{random_transformer, Block, Capture, Transformer, TransformerConfig};

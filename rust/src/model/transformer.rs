@@ -1,0 +1,422 @@
+//! Decoder-only transformer inference substrate (the "pico-LM" family —
+//! this repo's stand-in for OPT/GPT2/Pythia, see DESIGN.md §2).
+//!
+//! Three architecture variants mirror the paper's three LM families:
+//! - `opt-ish`    — ReLU FFN, sequential residual
+//! - `gpt2-ish`   — GELU FFN, sequential residual
+//! - `pythia-ish` — GELU FFN, parallel residual
+//!
+//! The forward pass supports per-linear capture hooks so the coordinator
+//! can collect calibration activations (float X and quantized-prefix X̃),
+//! and every linear is swappable between float and integer-datapath
+//! quantized execution.
+
+use super::layers::{attention, Activation, LayerNorm};
+use super::linear::Linear;
+use std::collections::BTreeMap;
+
+/// Architecture hyperparameters.
+#[derive(Clone, Debug)]
+pub struct TransformerConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub act: Activation,
+    pub parallel_residual: bool,
+}
+
+impl TransformerConfig {
+    pub fn param_count(&self) -> usize {
+        let d = self.d_model;
+        let emb = self.vocab * d + self.max_seq * d;
+        let per_block = 4 * d * d + 2 * d * self.d_ff + 4 * d /*ln*/ + 4 * d + self.d_ff + d;
+        let head = d * self.vocab;
+        emb + self.n_layers * per_block + head + 2 * d
+    }
+}
+
+/// One transformer block.
+#[derive(Clone, Debug)]
+pub struct Block {
+    pub ln1: LayerNorm,
+    pub ln2: LayerNorm,
+    pub wq: Linear,
+    pub wk: Linear,
+    pub wv: Linear,
+    pub wo: Linear,
+    pub fc1: Linear,
+    pub fc2: Linear,
+}
+
+/// Activation capture sink used for calibration: rows of inputs to each
+/// named linear layer.
+#[derive(Debug, Default)]
+pub struct Capture {
+    /// Only record layers whose name is in this set (empty = record all).
+    pub filter: Option<Vec<String>>,
+    /// layer name -> (in_dim, concatenated rows)
+    pub store: BTreeMap<String, (usize, Vec<f32>)>,
+}
+
+impl Capture {
+    pub fn for_layers(names: &[String]) -> Capture {
+        Capture { filter: Some(names.to_vec()), store: BTreeMap::new() }
+    }
+
+    #[inline]
+    fn wants(&self, name: &str) -> bool {
+        match &self.filter {
+            None => true,
+            Some(f) => f.iter().any(|n| n == name),
+        }
+    }
+
+    #[inline]
+    pub fn record(&mut self, name: &str, row: &[f32]) {
+        if !self.wants(name) {
+            return;
+        }
+        let entry = self.store.entry(name.to_string()).or_insert_with(|| (row.len(), Vec::new()));
+        debug_assert_eq!(entry.0, row.len());
+        entry.1.extend_from_slice(row);
+    }
+
+    /// Captured rows for a layer as a K×D matrix (neuron-major, the
+    /// layout the PTQ algorithms consume).
+    pub fn matrix_kd(&self, name: &str) -> Option<crate::linalg::Mat> {
+        let (k, rows) = self.store.get(name)?;
+        let d = rows.len() / k;
+        let mut m = crate::linalg::Mat::zeros(*k, d);
+        for (r, chunk) in rows.chunks(*k).enumerate() {
+            for (i, &v) in chunk.iter().enumerate() {
+                m.set(i, r, v as f64);
+            }
+        }
+        Some(m)
+    }
+
+    /// Raw samples (all rows flattened) for percentile calibration.
+    pub fn samples(&self, name: &str) -> Option<&[f32]> {
+        self.store.get(name).map(|(_, rows)| rows.as_slice())
+    }
+
+    pub fn clear(&mut self) {
+        self.store.clear();
+    }
+}
+
+/// Decoder-only transformer.
+#[derive(Clone, Debug)]
+pub struct Transformer {
+    pub cfg: TransformerConfig,
+    /// vocab × d token embedding.
+    pub embed: Vec<f32>,
+    /// max_seq × d learned positional embedding.
+    pub pos: Vec<f32>,
+    pub blocks: Vec<Block>,
+    pub ln_f: LayerNorm,
+    /// Final projection to vocabulary — held in float (paper App. C.1).
+    pub head: super::linear::FloatLinear,
+}
+
+impl Transformer {
+    /// Names of the quantizable linear layers in topological order.
+    pub fn linear_names(&self) -> Vec<String> {
+        let mut names = Vec::new();
+        for b in 0..self.cfg.n_layers {
+            for l in ["wq", "wk", "wv", "wo", "fc1", "fc2"] {
+                names.push(format!("b{b}.{l}"));
+            }
+        }
+        names
+    }
+
+    /// Names grouped per block (the granularity at which the coordinator
+    /// refreshes quantized-prefix activations).
+    pub fn block_groups(&self) -> Vec<Vec<String>> {
+        (0..self.cfg.n_layers)
+            .map(|b| {
+                ["wq", "wk", "wv", "wo", "fc1", "fc2"]
+                    .iter()
+                    .map(|l| format!("b{b}.{l}"))
+                    .collect()
+            })
+            .collect()
+    }
+
+    pub fn get_linear(&self, name: &str) -> Option<&Linear> {
+        let (b, l) = parse_name(name)?;
+        let blk = self.blocks.get(b)?;
+        Some(match l {
+            "wq" => &blk.wq,
+            "wk" => &blk.wk,
+            "wv" => &blk.wv,
+            "wo" => &blk.wo,
+            "fc1" => &blk.fc1,
+            "fc2" => &blk.fc2,
+            _ => return None,
+        })
+    }
+
+    pub fn get_linear_mut(&mut self, name: &str) -> Option<&mut Linear> {
+        let (b, l) = parse_name(name)?;
+        let blk = self.blocks.get_mut(b)?;
+        Some(match l {
+            "wq" => &mut blk.wq,
+            "wk" => &mut blk.wk,
+            "wv" => &mut blk.wv,
+            "wo" => &mut blk.wo,
+            "fc1" => &mut blk.fc1,
+            "fc2" => &mut blk.fc2,
+            _ => return None,
+        })
+    }
+
+    /// Forward a token sequence, returning logits (seq × vocab) and
+    /// optionally recording linear inputs into `capture`.
+    pub fn forward(&self, tokens: &[u16], mut capture: Option<&mut Capture>) -> Vec<f32> {
+        let d = self.cfg.d_model;
+        let seq = tokens.len();
+        assert!(seq <= self.cfg.max_seq, "sequence too long");
+        let mut h = vec![0.0f32; seq * d];
+        for (t, &tok) in tokens.iter().enumerate() {
+            let e = &self.embed[(tok as usize) * d..(tok as usize + 1) * d];
+            let p = &self.pos[t * d..(t + 1) * d];
+            for i in 0..d {
+                h[t * d + i] = e[i] + p[i];
+            }
+        }
+        let mut scratch: Vec<i64> = Vec::new();
+        let mut ln_out = vec![0.0f32; seq * d];
+        let mut q = vec![0.0f32; seq * d];
+        let mut k = vec![0.0f32; seq * d];
+        let mut v = vec![0.0f32; seq * d];
+        let mut mix = vec![0.0f32; seq * d];
+        let mut attn_out = vec![0.0f32; seq * d];
+        let mut ff = vec![0.0f32; seq * self.cfg.d_ff];
+        let mut ff_out = vec![0.0f32; seq * d];
+
+        for (bi, blk) in self.blocks.iter().enumerate() {
+            // --- attention path
+            for t in 0..seq {
+                blk.ln1.forward_row(&h[t * d..(t + 1) * d], &mut ln_out[t * d..(t + 1) * d]);
+            }
+            for t in 0..seq {
+                let row = &ln_out[t * d..(t + 1) * d];
+                if let Some(c) = capture.as_deref_mut() {
+                    c.record(&format!("b{bi}.wq"), row);
+                    c.record(&format!("b{bi}.wk"), row);
+                    c.record(&format!("b{bi}.wv"), row);
+                }
+                blk.wq.forward_row(row, &mut q[t * d..(t + 1) * d], &mut scratch);
+                blk.wk.forward_row(row, &mut k[t * d..(t + 1) * d], &mut scratch);
+                blk.wv.forward_row(row, &mut v[t * d..(t + 1) * d], &mut scratch);
+            }
+            attention(&q, &k, &v, seq, d, self.cfg.n_heads, true, &mut mix);
+            for t in 0..seq {
+                let row = &mix[t * d..(t + 1) * d];
+                if let Some(c) = capture.as_deref_mut() {
+                    c.record(&format!("b{bi}.wo"), row);
+                }
+                blk.wo.forward_row(row, &mut attn_out[t * d..(t + 1) * d], &mut scratch);
+            }
+            // --- mlp path (parallel residual reads h pre-attention)
+            if !self.cfg.parallel_residual {
+                for i in 0..seq * d {
+                    h[i] += attn_out[i];
+                }
+            }
+            for t in 0..seq {
+                blk.ln2.forward_row(&h[t * d..(t + 1) * d], &mut ln_out[t * d..(t + 1) * d]);
+            }
+            let dff = self.cfg.d_ff;
+            for t in 0..seq {
+                let row = &ln_out[t * d..(t + 1) * d];
+                if let Some(c) = capture.as_deref_mut() {
+                    c.record(&format!("b{bi}.fc1"), row);
+                }
+                blk.fc1.forward_row(row, &mut ff[t * dff..(t + 1) * dff], &mut scratch);
+                self.cfg.act.apply_vec(&mut ff[t * dff..(t + 1) * dff]);
+                let frow = &ff[t * dff..(t + 1) * dff];
+                if let Some(c) = capture.as_deref_mut() {
+                    c.record(&format!("b{bi}.fc2"), frow);
+                }
+                blk.fc2.forward_row(frow, &mut ff_out[t * d..(t + 1) * d], &mut scratch);
+            }
+            if self.cfg.parallel_residual {
+                for i in 0..seq * d {
+                    h[i] += attn_out[i] + ff_out[i];
+                }
+            } else {
+                for i in 0..seq * d {
+                    h[i] += ff_out[i];
+                }
+            }
+        }
+        // final norm + head
+        let vocab = self.cfg.vocab;
+        let mut logits = vec![0.0f32; seq * vocab];
+        for t in 0..seq {
+            blk_ln(&self.ln_f, &h[t * d..(t + 1) * d], &mut ln_out[t * d..(t + 1) * d]);
+            self.head.forward_row(&ln_out[t * d..(t + 1) * d], &mut logits[t * vocab..(t + 1) * vocab]);
+        }
+        logits
+    }
+
+    /// Total overflow events observed across quantized layers.
+    pub fn overflow_events(&self) -> u64 {
+        let mut total = 0;
+        for name in self.linear_names() {
+            if let Some(Linear::Quant(q)) = self.get_linear(&name) {
+                total += q.overflow_count();
+            }
+        }
+        total
+    }
+}
+
+#[inline]
+fn blk_ln(ln: &LayerNorm, x: &[f32], y: &mut [f32]) {
+    ln.forward_row(x, y);
+}
+
+fn parse_name(name: &str) -> Option<(usize, &str)> {
+    let rest = name.strip_prefix('b')?;
+    let dotpos = rest.find('.')?;
+    let b: usize = rest[..dotpos].parse().ok()?;
+    Some((b, &rest[dotpos + 1..]))
+}
+
+/// Build a randomly-initialized transformer (tests and synthetic runs).
+pub fn random_transformer(cfg: TransformerConfig, seed: u64) -> Transformer {
+    use super::linear::FloatLinear;
+    use crate::util::rng::Rng;
+    let mut rng = Rng::new(seed);
+    let d = cfg.d_model;
+    let std = 0.08f64;
+    let mk = |inp: usize, out: usize, rng: &mut Rng| {
+        let w: Vec<f32> = (0..inp * out).map(|_| (rng.normal() * std) as f32).collect();
+        let b: Vec<f32> = vec![0.0; out];
+        Linear::Float(FloatLinear::new(inp, out, w, b))
+    };
+    let blocks = (0..cfg.n_layers)
+        .map(|_| Block {
+            ln1: LayerNorm::identity(d),
+            ln2: LayerNorm::identity(d),
+            wq: mk(d, d, &mut rng),
+            wk: mk(d, d, &mut rng),
+            wv: mk(d, d, &mut rng),
+            wo: mk(d, d, &mut rng),
+            fc1: mk(d, cfg.d_ff, &mut rng),
+            fc2: mk(cfg.d_ff, d, &mut rng),
+        })
+        .collect();
+    let embed: Vec<f32> = (0..cfg.vocab * d).map(|_| (rng.normal() * std) as f32).collect();
+    let pos: Vec<f32> = (0..cfg.max_seq * d).map(|_| (rng.normal() * std) as f32).collect();
+    let head_w: Vec<f32> = (0..cfg.vocab * d).map(|_| (rng.normal() * std) as f32).collect();
+    let head = FloatLinear::new(d, cfg.vocab, head_w, vec![0.0; cfg.vocab]);
+    Transformer { cfg, embed, pos, blocks, ln_f: LayerNorm::identity(d), head }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> TransformerConfig {
+        TransformerConfig {
+            name: "tiny".into(),
+            vocab: 32,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 32,
+            max_seq: 12,
+            act: Activation::Gelu,
+            parallel_residual: false,
+        }
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let m = random_transformer(tiny_cfg(), 1);
+        let toks: Vec<u16> = vec![1, 5, 9, 3];
+        let logits = m.forward(&toks, None);
+        assert_eq!(logits.len(), 4 * 32);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn causality_holds() {
+        // changing a later token must not change earlier logits
+        let m = random_transformer(tiny_cfg(), 2);
+        let a: Vec<u16> = vec![1, 2, 3, 4];
+        let b: Vec<u16> = vec![1, 2, 3, 31];
+        let la = m.forward(&a, None);
+        let lb = m.forward(&b, None);
+        for i in 0..3 * 32 {
+            assert!((la[i] - lb[i]).abs() < 1e-5, "position {} leaked", i / 32);
+        }
+        // last position must differ
+        let diff: f32 =
+            (3 * 32..4 * 32).map(|i| (la[i] - lb[i]).abs()).sum();
+        assert!(diff > 1e-6);
+    }
+
+    #[test]
+    fn parallel_residual_variant_runs() {
+        let mut cfg = tiny_cfg();
+        cfg.parallel_residual = true;
+        let m = random_transformer(cfg, 3);
+        let logits = m.forward(&[0, 1, 2], None);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn capture_collects_expected_shapes() {
+        let m = random_transformer(tiny_cfg(), 4);
+        let names = m.linear_names();
+        assert_eq!(names.len(), 12);
+        let mut cap = Capture::for_layers(&names);
+        m.forward(&[1, 2, 3, 4, 5], Some(&mut cap));
+        // wq input: 5 rows of 16
+        let x = cap.matrix_kd("b0.wq").unwrap();
+        assert_eq!(x.rows(), 16);
+        assert_eq!(x.cols(), 5);
+        // fc2 input: 5 rows of d_ff
+        let x2 = cap.matrix_kd("b1.fc2").unwrap();
+        assert_eq!(x2.rows(), 32);
+        assert_eq!(x2.cols(), 5);
+    }
+
+    #[test]
+    fn capture_filter_restricts() {
+        let m = random_transformer(tiny_cfg(), 5);
+        let mut cap = Capture::for_layers(&["b0.fc1".to_string()]);
+        m.forward(&[1, 2], Some(&mut cap));
+        assert!(cap.matrix_kd("b0.fc1").is_some());
+        assert!(cap.matrix_kd("b0.wq").is_none());
+    }
+
+    #[test]
+    fn linear_accessors_roundtrip() {
+        let mut m = random_transformer(tiny_cfg(), 6);
+        for name in m.linear_names() {
+            assert!(m.get_linear(&name).is_some(), "{name}");
+            assert!(m.get_linear_mut(&name).is_some(), "{name}");
+        }
+        assert!(m.get_linear("b9.wq").is_none());
+        assert!(m.get_linear("nope").is_none());
+    }
+
+    #[test]
+    fn param_count_sane() {
+        let cfg = tiny_cfg();
+        let n = cfg.param_count();
+        // vocab=32,d=16: emb 512+192, 2 blocks ~ (4·256 + 2·512 + ...), head 512
+        assert!(n > 3_000 && n < 100_000, "n={n}");
+    }
+}

@@ -1,0 +1,116 @@
+//! Fixed-point integer alphabets A_b (paper §2).
+//!
+//! Signed alphabets use the sign-magnitude convention of the paper:
+//! A_b = {k ∈ ℤ : −(2^{b−1}−1) ≤ k ≤ 2^{b−1}−1}. Unsigned alphabets are
+//! [0, 2^b − 1] (the asymmetric-activation case of §3.2 with μ=0,
+//! ν=2^N−1).
+
+/// An integer quantization alphabet.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Alphabet {
+    pub bits: u32,
+    pub signed: bool,
+}
+
+impl Alphabet {
+    pub fn signed(bits: u32) -> Alphabet {
+        assert!((1..=32).contains(&bits), "bits must be in 1..=32");
+        Alphabet { bits, signed: true }
+    }
+
+    pub fn unsigned(bits: u32) -> Alphabet {
+        assert!((1..=32).contains(&bits), "bits must be in 1..=32");
+        Alphabet { bits, signed: false }
+    }
+
+    /// Smallest representable value.
+    #[inline]
+    pub fn min_val(&self) -> i64 {
+        if self.signed {
+            -(self.max_val())
+        } else {
+            0
+        }
+    }
+
+    /// Largest representable value.
+    #[inline]
+    pub fn max_val(&self) -> i64 {
+        if self.signed {
+            (1i64 << (self.bits - 1)) - 1
+        } else {
+            (1i64 << self.bits) - 1
+        }
+    }
+
+    /// Number of representable levels.
+    pub fn levels(&self) -> i64 {
+        self.max_val() - self.min_val() + 1
+    }
+
+    /// Range width ν − μ (used by the overflow bound, §3.1).
+    pub fn width(&self) -> i64 {
+        self.max_val() - self.min_val()
+    }
+
+    #[inline]
+    pub fn contains(&self, v: i64) -> bool {
+        v >= self.min_val() && v <= self.max_val()
+    }
+
+    /// Clamp an integer into the alphabet.
+    #[inline]
+    pub fn clamp(&self, v: i64) -> i64 {
+        v.clamp(self.min_val(), self.max_val())
+    }
+
+    /// Clamp a real value into the alphabet's real hull.
+    #[inline]
+    pub fn clamp_f(&self, v: f64) -> f64 {
+        v.clamp(self.min_val() as f64, self.max_val() as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn signed_ranges() {
+        let a = Alphabet::signed(4);
+        assert_eq!(a.min_val(), -7);
+        assert_eq!(a.max_val(), 7);
+        assert_eq!(a.levels(), 15);
+        assert_eq!(a.width(), 14);
+        let a8 = Alphabet::signed(8);
+        assert_eq!(a8.max_val(), 127);
+        assert_eq!(a8.min_val(), -127); // sign-magnitude
+    }
+
+    #[test]
+    fn unsigned_ranges() {
+        let a = Alphabet::unsigned(8);
+        assert_eq!(a.min_val(), 0);
+        assert_eq!(a.max_val(), 255);
+        assert_eq!(a.levels(), 256);
+        let a3 = Alphabet::unsigned(3);
+        assert_eq!(a3.max_val(), 7);
+    }
+
+    #[test]
+    fn clamp_behaviour() {
+        let a = Alphabet::signed(3); // [-3, 3]
+        assert_eq!(a.clamp(10), 3);
+        assert_eq!(a.clamp(-10), -3);
+        assert_eq!(a.clamp(2), 2);
+        assert!(a.contains(0));
+        assert!(!a.contains(4));
+        assert_eq!(a.clamp_f(3.7), 3.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_zero_bits() {
+        Alphabet::signed(0);
+    }
+}

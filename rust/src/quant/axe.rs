@@ -1,0 +1,333 @@
+//! AXE — the accumulator-aware constraint machinery (paper §3.2-3.3).
+//!
+//! Two ingredients, both operating in the *integer-code domain* (w/s):
+//!
+//! 1. a **soft ℓ1 penalty**: the soft-threshold Π_λ with λ derived per
+//!    channel (per tile in the multi-stage case) from the Euclidean
+//!    projection onto the ℓ1 ball of radius Z = (2^P − 2)/(2^N − 1)
+//!    (Eq. 15-16); and
+//! 2. a **strict running clip** Ψ_{a,b}: the remaining positive budget
+//!    b = B − β_i and negative budget a = A − α_i are tracked as codes
+//!    are committed (Eq. 18-21), so the worst-case dot product against
+//!    any unsigned N-bit input can never leave ±(2^{P−1}−1).
+//!
+//! `Monolithic` applies one budget per channel; `MultiStage` applies the
+//! budget per contiguous tile of `tile` input indices — tiles are
+//! *physical* (defined on original input positions), so act-order
+//! permutations in the base algorithm do not change tile membership.
+
+use super::bounds::{outer_bits, side_budget};
+use super::l1::derive_lambda;
+use super::quantizer::Rounding;
+
+/// What accumulator the quantization must be safe for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AccumTarget {
+    /// Unconstrained base algorithm (GPFQ/OPTQ as published).
+    None,
+    /// One P-bit accumulator per dot product (A2Q-style).
+    Monolithic { p_bits: u32 },
+    /// Tiled datapath: each tile of `tile` inputs accumulates in a
+    /// P_I-bit inner register; partial sums in the implied outer register
+    /// (Eq. 22).
+    MultiStage { p_inner: u32, tile: usize },
+}
+
+impl AccumTarget {
+    pub fn is_constrained(&self) -> bool {
+        !matches!(self, AccumTarget::None)
+    }
+
+    /// Effective (per-tile width, tile size) for a K-deep dot product.
+    pub fn tile_plan(&self, k: usize) -> Option<(u32, usize)> {
+        match *self {
+            AccumTarget::None => None,
+            AccumTarget::Monolithic { p_bits } => Some((p_bits, k.max(1))),
+            AccumTarget::MultiStage { p_inner, tile } => Some((p_inner, tile.min(k.max(1)))),
+        }
+    }
+
+    /// Outer accumulator width needed at inference for depth `k`.
+    pub fn outer_bits(&self, k: usize) -> Option<u32> {
+        match *self {
+            AccumTarget::None => None,
+            AccumTarget::Monolithic { p_bits } => Some(p_bits),
+            AccumTarget::MultiStage { p_inner, tile } => Some(outer_bits(p_inner, k, tile)),
+        }
+    }
+
+    pub fn describe(&self) -> String {
+        match *self {
+            AccumTarget::None => "base".to_string(),
+            AccumTarget::Monolithic { p_bits } => format!("P{p_bits}"),
+            AccumTarget::MultiStage { p_inner, tile } => format!("{tile}x{p_inner}b"),
+        }
+    }
+}
+
+/// Full AXE configuration attached to a base PTQ algorithm.
+#[derive(Clone, Copy, Debug)]
+pub struct AxeConfig {
+    pub target: AccumTarget,
+    /// Soft ℓ1 penalty on (off = AXE-HCO ablation).
+    pub soft: bool,
+    /// Rounding function of the weight quantizer — sets max(Δ) in Eq. 21.
+    pub rounding: Rounding,
+    /// Activation bit width N (inputs assumed unsigned asymmetric codes).
+    pub act_bits: u32,
+}
+
+impl AxeConfig {
+    pub fn unconstrained(rounding: Rounding, act_bits: u32) -> AxeConfig {
+        AxeConfig { target: AccumTarget::None, soft: false, rounding, act_bits }
+    }
+
+    pub fn monolithic(p_bits: u32, act_bits: u32) -> AxeConfig {
+        AxeConfig {
+            target: AccumTarget::Monolithic { p_bits },
+            soft: true,
+            rounding: Rounding::Nearest,
+            act_bits,
+        }
+    }
+
+    pub fn multistage(p_inner: u32, tile: usize, act_bits: u32) -> AxeConfig {
+        AxeConfig {
+            target: AccumTarget::MultiStage { p_inner, tile },
+            soft: true,
+            rounding: Rounding::Nearest,
+            act_bits,
+        }
+    }
+}
+
+/// Per-channel running constraint state for one quantization pass.
+///
+/// All quantities are in integer-code units. `a[t] ≤ 0 ≤ b[t]` always
+/// holds, so a zero code is always admissible and the greedy pass can
+/// never get stuck.
+#[derive(Clone, Debug)]
+pub struct ConstraintState {
+    tile: usize,
+    /// Per-tile λ for Π_λ (zeros when soft penalty disabled).
+    lambdas: Vec<f64>,
+    /// Remaining negative budget per tile (≤ 0).
+    a: Vec<f64>,
+    /// Remaining positive budget per tile (≥ 0).
+    b: Vec<f64>,
+    /// max(Δ) of the rounding function — the budget may legitimately go
+    /// negative by up to this amount (Eq. 21 reserves the slack).
+    slack: f64,
+}
+
+impl ConstraintState {
+    /// Build the state for one channel. `w_scaled` is the channel's
+    /// weight vector divided by its quantizer scale (length K). Returns
+    /// `None` for the unconstrained target.
+    pub fn new(cfg: &AxeConfig, w_scaled: &[f64]) -> Option<ConstraintState> {
+        let k = w_scaled.len();
+        let (p_bits, tile) = cfg.target.tile_plan(k)?;
+        let n_tiles = k.div_ceil(tile);
+        let budget = side_budget(p_bits, cfg.act_bits, cfg.rounding.max_delta());
+        let mut lambdas = vec![0.0; n_tiles];
+        if cfg.soft {
+            // Z per tile: the zero-centered ℓ1 budget of Eq. 4 for the
+            // tile's accumulator. Using the two-sided budget 2B keeps the
+            // projection target consistent with the strict constraint.
+            let z = 2.0 * budget;
+            for (t, lam) in lambdas.iter_mut().enumerate() {
+                let lo = t * tile;
+                let hi = ((t + 1) * tile).min(k);
+                *lam = derive_lambda(&w_scaled[lo..hi], z);
+            }
+        }
+        Some(ConstraintState {
+            tile,
+            lambdas,
+            a: vec![-budget; n_tiles],
+            b: vec![budget; n_tiles],
+            slack: cfg.rounding.max_delta(),
+        })
+    }
+
+    #[inline]
+    fn tile_of(&self, i: usize) -> usize {
+        i / self.tile
+    }
+
+    /// Apply Π_λ then Ψ_{a,b} to the pre-quantization value of input
+    /// index `i` (original position) in code units.
+    #[inline]
+    pub fn process(&self, i: usize, v_scaled: f64) -> f64 {
+        let t = self.tile_of(i);
+        let v = super::l1::soft_threshold(v_scaled, self.lambdas[t]);
+        // Rounding slack can overshoot a side's budget by up to max(Δ);
+        // once a side is exhausted only zero remains admissible there.
+        v.clamp(self.a[t].min(0.0), self.b[t].max(0.0))
+    }
+
+    /// Commit the chosen integer code for input index `i`, consuming
+    /// budget.
+    #[inline]
+    pub fn commit(&mut self, i: usize, q: i64) {
+        let t = self.tile_of(i);
+        if q >= 0 {
+            self.b[t] -= q as f64;
+            // Rounding may overshoot the clipped value by up to max(Δ);
+            // once negative, only zero/negative codes remain admissible on
+            // this side, so the total β stays ≤ B + max(Δ) = exact cap.
+            debug_assert!(self.b[t] >= -self.slack - 1e-9, "positive budget violated");
+        } else {
+            self.a[t] -= q as f64; // q < 0 ⇒ a moves toward 0
+            debug_assert!(self.a[t] <= self.slack + 1e-9, "negative budget violated");
+        }
+    }
+
+    /// Remaining budgets of the tile containing `i` (for tests/telemetry).
+    pub fn remaining(&self, i: usize) -> (f64, f64) {
+        let t = self.tile_of(i);
+        (self.a[t], self.b[t])
+    }
+
+    pub fn lambda(&self, i: usize) -> f64 {
+        self.lambdas[self.tile_of(i)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::bounds::is_safe;
+    use crate::util::prop::quick;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn unconstrained_has_no_state() {
+        let cfg = AxeConfig::unconstrained(Rounding::Nearest, 8);
+        assert!(ConstraintState::new(&cfg, &[1.0, 2.0]).is_none());
+    }
+
+    #[test]
+    fn budgets_start_symmetric_and_shrink() {
+        let cfg = AxeConfig::monolithic(16, 8);
+        let w = vec![0.0; 32];
+        let mut st = ConstraintState::new(&cfg, &w).unwrap();
+        let (a0, b0) = st.remaining(0);
+        assert!((a0 + b0).abs() < 1e-12, "symmetric start");
+        st.commit(0, 5);
+        let (_, b1) = st.remaining(0);
+        assert!((b0 - b1 - 5.0).abs() < 1e-12);
+        st.commit(1, -3);
+        let (a2, _) = st.remaining(0);
+        assert!((a0 - a2 + 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn process_clips_into_remaining_budget() {
+        let cfg = AxeConfig {
+            target: AccumTarget::Monolithic { p_bits: 10 },
+            soft: false,
+            rounding: Rounding::Nearest,
+            act_bits: 4,
+        };
+        // B = (2^9 - 1)/(2^4 - 1) - 0.5 = 511/15 - 0.5 ≈ 33.57
+        let mut st = ConstraintState::new(&cfg, &[0.0; 8]).unwrap();
+        let v = st.process(0, 1000.0);
+        assert!(v <= 33.6 && v > 33.0);
+        st.commit(0, 33);
+        let v2 = st.process(1, 1000.0);
+        assert!(v2 <= 0.58, "budget nearly exhausted: {v2}");
+        let v3 = st.process(1, -1000.0);
+        assert!(v3 < -33.0, "negative side untouched");
+    }
+
+    #[test]
+    fn multistage_tiles_have_independent_budgets() {
+        let cfg = AxeConfig::multistage(12, 4, 8);
+        let w = vec![0.0; 8];
+        let mut st = ConstraintState::new(&cfg, &w).unwrap();
+        let (_, b_t0) = st.remaining(0);
+        st.commit(0, 3);
+        let (_, b_t0_after) = st.remaining(3); // same tile (0..4)
+        let (_, b_t1) = st.remaining(4); // next tile
+        assert!((b_t0 - b_t0_after - 3.0).abs() < 1e-12);
+        assert!((b_t1 - b_t0).abs() < 1e-12, "tile 1 untouched");
+    }
+
+    #[test]
+    fn soft_lambda_zero_when_inside_budget() {
+        let cfg = AxeConfig::monolithic(24, 8); // huge budget
+        let w = vec![0.5; 16];
+        let st = ConstraintState::new(&cfg, &w).unwrap();
+        assert_eq!(st.lambda(0), 0.0);
+    }
+
+    #[test]
+    fn soft_lambda_positive_when_over_budget() {
+        let cfg = AxeConfig::monolithic(8, 8); // tiny budget
+        let w = vec![10.0; 64];
+        let st = ConstraintState::new(&cfg, &w).unwrap();
+        assert!(st.lambda(0) > 0.0);
+    }
+
+    /// THE core invariant: any greedy sequence of codes admitted by
+    /// ConstraintState is safe for the target accumulator, for any order
+    /// of visitation and any adversarial pre-quantization values.
+    #[test]
+    fn prop_committed_codes_always_safe() {
+        quick(
+            "axe_guarantee",
+            |rng: &mut Rng| {
+                let k = rng.int_in(4, 96) as usize;
+                let n = rng.int_in(2, 8) as u32;
+                let p = rng.int_in(8, 18) as u32;
+                let tiled = rng.chance(0.5);
+                let tile = if tiled { rng.int_in(2, 32) as usize } else { k };
+                let w: Vec<f64> = (0..k).map(|_| rng.normal() * 20.0).collect();
+                let order = rng.sample_indices(k, k);
+                let seed = rng.next_u64();
+                (k, n, p, tile, tiled, w, order, seed)
+            },
+            |(k, n, p, tile, tiled, w, order, seed)| {
+                let target = if *tiled {
+                    AccumTarget::MultiStage { p_inner: *p, tile: *tile }
+                } else {
+                    AccumTarget::Monolithic { p_bits: *p }
+                };
+                let cfg = AxeConfig { target, soft: true, rounding: Rounding::Nearest, act_bits: *n };
+                let mut st = ConstraintState::new(&cfg, w).unwrap();
+                let mut rng = Rng::new(*seed);
+                let mut q = vec![0i64; *k];
+                // visit in arbitrary order with adversarial values
+                for &i in order {
+                    let v_raw = rng.normal() * 50.0;
+                    let v = st.process(i, v_raw);
+                    // round-to-nearest may add up to 0.5 — exactly the slack Eq.21 reserves
+                    let code = Rounding::Nearest.round(v) as i64;
+                    st.commit(i, code);
+                    q[i] = code;
+                }
+                let nu = (1i64 << n) - 1;
+                let (pt, tl) = cfg.target.tile_plan(*k).unwrap();
+                for (ti, chunk) in q.chunks(tl).enumerate() {
+                    if !is_safe(chunk, 0, nu, pt) {
+                        return Err(format!("tile {ti} overflows P={pt}"));
+                    }
+                }
+                if let Some(po) = cfg.target.outer_bits(*k) {
+                    if !is_safe(&q, 0, nu, po) {
+                        return Err(format!("outer accumulator overflows P_O={po}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn describe_strings() {
+        assert_eq!(AccumTarget::None.describe(), "base");
+        assert_eq!(AccumTarget::Monolithic { p_bits: 16 }.describe(), "P16");
+        assert_eq!(AccumTarget::MultiStage { p_inner: 16, tile: 64 }.describe(), "64x16b");
+    }
+}

@@ -1,0 +1,154 @@
+//! EP-init — the Euclidean-projection baseline (Colbert et al. A2Q+,
+//! applied post-training per paper §2.3 / App. C.1).
+//!
+//! EP-init projects each channel's (dequantized) weights onto the ℓ1
+//! ball whose radius is the accumulator budget, then re-quantizes with
+//! **round-to-zero** so that |Q(w_i)| ≤ |w_i| for all i, which preserves
+//! the ℓ1 bound through quantization. It is a vector-wise operation with
+//! no error correction — exactly the shortcoming AXE addresses.
+//!
+//! In the PTQ pipeline it is applied *after* GPFQ/OPTQ (so their error
+//! correction still contributed) and *before* bias correction.
+
+use super::axe::AccumTarget;
+use super::bounds::side_budget;
+use super::l1::project_l1;
+use super::quantizer::Rounding;
+use super::result::QuantResult;
+
+/// Apply EP-init to an already-quantized layer, returning a new
+/// `QuantResult` that is guaranteed safe for `target` against unsigned
+/// `act_bits` inputs.
+pub fn ep_init(result: &QuantResult, target: AccumTarget, act_bits: u32) -> QuantResult {
+    let (p_bits, tile) = match target.tile_plan(result.k) {
+        Some(plan) => plan,
+        None => return result.clone(),
+    };
+    // Budget: EP-init enforces the zero-centered ℓ1 bound of Eq. 4. We
+    // use the one-sided-safe budget 2B with RTZ slack 0, which implies
+    // both Eq. 7 and Eq. 8 regardless of centering (‖q‖₁ ≤ 2B ⇒ each of
+    // β, −α ≤ 2B... note: β ≤ ‖q‖₁; safety needs β ≤ B' = (2^{P−1}−1)/(2^N−1),
+    // so the correct radius for arbitrary-centered vectors is B', not 2B').
+    let budget = side_budget(p_bits, act_bits, Rounding::Zero.max_delta());
+    let mut out = result.clone();
+    for ch in 0..result.c {
+        let w_scaled: Vec<f64> = (0..result.k).map(|i| result.code(i, ch) as f64).collect();
+        for t in 0..result.k.div_ceil(tile) {
+            let lo = t * tile;
+            let hi = ((t + 1) * tile).min(result.k);
+            let proj = project_l1(&w_scaled[lo..hi], budget);
+            for (off, &v) in proj.v.iter().enumerate() {
+                // round-to-zero keeps |code| ≤ |v| so the ℓ1 bound holds
+                out.set_code(lo + off, ch, Rounding::Zero.round(v) as i64);
+            }
+        }
+    }
+    out
+}
+
+/// EP-init applied directly to float weights (the "initialization" use):
+/// project w/s per channel, then RTZ-quantize. Used when no base
+/// algorithm runs first.
+pub fn ep_init_float(
+    w: &crate::linalg::Mat,
+    weight_bits: u32,
+    target: AccumTarget,
+    act_bits: u32,
+) -> QuantResult {
+    let wq = super::quantizer::WeightQuantizer::fit_columns(w, weight_bits, Rounding::Zero);
+    let (k, c) = (w.rows(), w.cols());
+    let mut out = QuantResult::new(k, c, weight_bits, wq.scales.clone());
+    let plan = target.tile_plan(k);
+    for ch in 0..c {
+        let s = wq.scales[ch];
+        let w_scaled: Vec<f64> = (0..k).map(|i| w.get(i, ch) / s).collect();
+        match plan {
+            None => {
+                for i in 0..k {
+                    out.set_code(i, ch, wq.to_code_scaled(w_scaled[i]));
+                }
+            }
+            Some((p_bits, tile)) => {
+                let budget = side_budget(p_bits, act_bits, 0.0);
+                for t in 0..k.div_ceil(tile) {
+                    let lo = t * tile;
+                    let hi = ((t + 1) * tile).min(k);
+                    let proj = project_l1(&w_scaled[lo..hi], budget);
+                    for (off, &v) in proj.v.iter().enumerate() {
+                        out.set_code(lo + off, ch, wq.to_code_scaled(v));
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::quant::bounds::{is_safe, is_safe_multistage};
+    use crate::quant::gpfq::{gpfq_quantize, GpfqParams};
+    use crate::util::rng::Rng;
+
+    fn quantized_fixture(seed: u64) -> QuantResult {
+        let mut rng = Rng::new(seed);
+        let w = Mat::random_normal(64, 6, &mut rng, 0.5);
+        let x = Mat::random_normal(64, 128, &mut rng, 1.0);
+        gpfq_quantize(&w, &x, &x, &GpfqParams::base(6, 8))
+    }
+
+    #[test]
+    fn unconstrained_target_is_identity() {
+        let r = quantized_fixture(60);
+        let e = ep_init(&r, AccumTarget::None, 8);
+        assert_eq!(r.codes, e.codes);
+    }
+
+    #[test]
+    fn monolithic_projection_is_safe() {
+        let r = quantized_fixture(61);
+        let e = ep_init(&r, AccumTarget::Monolithic { p_bits: 13 }, 8);
+        for ch in 0..e.c {
+            assert!(is_safe(&e.channel_codes(ch), 0, 255, 13), "ch={ch}");
+        }
+    }
+
+    #[test]
+    fn multistage_projection_is_safe() {
+        let r = quantized_fixture(62);
+        let e = ep_init(&r, AccumTarget::MultiStage { p_inner: 11, tile: 16 }, 8);
+        for ch in 0..e.c {
+            assert!(is_safe_multistage(&e.channel_codes(ch), 0, 255, 11, 16), "ch={ch}");
+        }
+    }
+
+    #[test]
+    fn projection_only_shrinks_magnitudes() {
+        let r = quantized_fixture(63);
+        let e = ep_init(&r, AccumTarget::Monolithic { p_bits: 13 }, 8);
+        for (q_new, q_old) in e.codes.iter().zip(r.codes.iter()) {
+            assert!(q_new.abs() <= q_old.abs(), "EP-init must not grow codes");
+            assert!(q_new.signum() == q_old.signum() || *q_new == 0);
+        }
+    }
+
+    #[test]
+    fn ep_init_float_is_safe() {
+        let mut rng = Rng::new(64);
+        let w = Mat::random_normal(48, 4, &mut rng, 0.8);
+        let e = ep_init_float(&w, 4, AccumTarget::Monolithic { p_bits: 12 }, 8);
+        for ch in 0..4 {
+            assert!(is_safe(&e.channel_codes(ch), 0, 255, 12));
+            assert!(e.max_abs_code() <= 7);
+        }
+    }
+
+    #[test]
+    fn ep_init_increases_sparsity_under_tight_budget() {
+        let r = quantized_fixture(65);
+        let e = ep_init(&r, AccumTarget::Monolithic { p_bits: 12 }, 8);
+        assert!(e.sparsity() >= r.sparsity(), "projection zeroes small codes");
+    }
+}

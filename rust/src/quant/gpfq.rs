@@ -1,0 +1,353 @@
+//! GPFQ — greedy path-following quantization (Lybrand & Saab, 2021) with
+//! the paper's accumulator-aware extension (Algorithm 1) and the
+//! memory-efficient square-matrix reformulation (Theorem B.1).
+//!
+//! Standard form (Eq. 11-12), per output channel:
+//!   v_i = (⟨X̃_i, u_{i−1}⟩ + w_i ⟨X̃_i, X_i⟩) / ‖X̃_i‖²
+//!   q_i = Q ∘ Ψ_{a,b} ∘ Π_λ(v_i / s)
+//!   u_i = u_{i−1} + w_i X_i − (s·q_i) X̃_i
+//!
+//! Memory-efficient form: with H = (X̃X̃ᵀ)^{1/2} and G = XX̃ᵀ,
+//!   GPFQ(W, X, X̃) = GPFQ(W, GH⁻¹, H)   — O(K²) memory instead of O(KD).
+
+use super::axe::AxeConfig;
+use super::quantizer::WeightQuantizer;
+use super::result::QuantResult;
+use crate::linalg::{dot, sqrtm_psd, Mat};
+
+/// Parameters for a GPFQ run.
+#[derive(Clone, Copy, Debug)]
+pub struct GpfqParams {
+    /// Weight bit width M.
+    pub weight_bits: u32,
+    /// Accumulator-aware extension config (target None = base GPFQ).
+    pub axe: AxeConfig,
+    /// Quantize inputs in descending ‖X̃_i‖² order (act-order heuristic,
+    /// App. C.1).
+    pub act_order: bool,
+}
+
+impl GpfqParams {
+    pub fn base(weight_bits: u32, act_bits: u32) -> GpfqParams {
+        GpfqParams {
+            weight_bits,
+            axe: AxeConfig::unconstrained(super::quantizer::Rounding::Nearest, act_bits),
+            act_order: true,
+        }
+    }
+}
+
+/// Quantize one layer with GPFQ from full data matrices.
+///
+/// * `w`  — K×C float weights (input index × output channel).
+/// * `x`  — K×D float-model inputs (row i = samples of input neuron i).
+/// * `xt` — K×D inputs under the already-quantized prefix network
+///          (dequantized real values).
+pub fn gpfq_quantize(w: &Mat, x: &Mat, xt: &Mat, params: &GpfqParams) -> QuantResult {
+    let (k, c) = (w.rows(), w.cols());
+    assert_eq!(x.rows(), k, "x rows must equal K");
+    assert_eq!(xt.rows(), k, "xt rows must equal K");
+    assert_eq!(x.cols(), xt.cols(), "x/xt sample count mismatch");
+    let d = x.cols();
+
+    let wq = WeightQuantizer::fit_columns(w, params.weight_bits, params.axe.rounding);
+    let mut result = QuantResult::new(k, c, params.weight_bits, wq.scales.clone());
+    if k == 0 || c == 0 {
+        return result;
+    }
+
+    // Shared per-index precomputation.
+    let norm_sq: Vec<f64> = (0..k).map(|i| dot(xt.row(i), xt.row(i))).collect();
+    let cross: Vec<f64> = (0..k).map(|i| dot(xt.row(i), x.row(i))).collect();
+    let order = visit_order(&norm_sq, params.act_order);
+
+    // Channel-parallel main loop.
+    let nthreads = crate::linalg::num_threads().min(c).max(1);
+    let chunk = c.div_ceil(nthreads);
+    let mut per_thread: Vec<Vec<(usize, Vec<i64>)>> = Vec::with_capacity(nthreads);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for t in 0..nthreads {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(c);
+            if lo >= hi {
+                continue;
+            }
+            let wq_ref = &wq;
+            let norm_sq = &norm_sq;
+            let cross = &cross;
+            let order = &order;
+            handles.push(scope.spawn(move || {
+                let mut out = Vec::with_capacity(hi - lo);
+                let mut u = vec![0.0f64; d];
+                for ch in lo..hi {
+                    u.iter_mut().for_each(|v| *v = 0.0);
+                    let codes =
+                        gpfq_channel(w, x, xt, ch, wq_ref, norm_sq, cross, order, params, &mut u);
+                    out.push((ch, codes));
+                }
+                out
+            }));
+        }
+        for h in handles {
+            per_thread.push(h.join().expect("gpfq worker panicked"));
+        }
+    });
+    for chunk in per_thread {
+        for (ch, codes) in chunk {
+            for (i, q) in codes.into_iter().enumerate() {
+                result.set_code(i, ch, q);
+            }
+        }
+    }
+    result
+}
+
+/// One channel of the GPFQ iteration. `u` is a scratch buffer of length D.
+#[allow(clippy::too_many_arguments)]
+fn gpfq_channel(
+    w: &Mat,
+    x: &Mat,
+    xt: &Mat,
+    ch: usize,
+    wq: &WeightQuantizer,
+    norm_sq: &[f64],
+    cross: &[f64],
+    order: &[usize],
+    params: &GpfqParams,
+    u: &mut [f64],
+) -> Vec<i64> {
+    let k = w.rows();
+    let s = wq.scales[ch];
+    let w_scaled: Vec<f64> = (0..k).map(|i| w.get(i, ch) / s).collect();
+    let mut constraint = super::axe::ConstraintState::new(&params.axe, &w_scaled);
+    let mut codes = vec![0i64; k];
+    const EPS: f64 = 1e-30;
+
+    for &i in order {
+        let w_ic = w.get(i, ch);
+        let xt_i = xt.row(i);
+        let x_i = x.row(i);
+        let q = if norm_sq[i] <= EPS {
+            // Dead direction: any code contributes nothing to the output;
+            // pick 0 and carry the uncorrectable error forward.
+            0
+        } else {
+            let v = (dot(xt_i, u) + w_ic * cross[i]) / norm_sq[i];
+            let mut vs = v / s;
+            if let Some(st) = constraint.as_ref() {
+                vs = st.process(i, vs);
+            }
+            wq.to_code_scaled(vs)
+        };
+        if let Some(st) = constraint.as_mut() {
+            st.commit(i, q);
+        }
+        codes[i] = q;
+        // u += w_i X_i − (s q) X̃_i
+        let deq = q as f64 * s;
+        if q != 0 || w_ic != 0.0 {
+            for j in 0..u.len() {
+                u[j] += w_ic * x_i[j] - deq * xt_i[j];
+            }
+        }
+    }
+    codes
+}
+
+/// Memory-efficient GPFQ (Theorem B.1): run GPFQ on K×K surrogates built
+/// from the Gram matrices.
+///
+/// * `g` — G = X X̃ᵀ (K×K), accumulated streamingly by the caller.
+/// * `a` — A = X̃ X̃ᵀ (K×K), same.
+/// * `damp` — relative diagonal damping (fraction of mean diagonal) that
+///   keeps A invertible; mirrors OPTQ's η.
+pub fn gpfq_quantize_grams(
+    w: &Mat,
+    g: &Mat,
+    a: &Mat,
+    params: &GpfqParams,
+    damp: f64,
+) -> anyhow::Result<QuantResult> {
+    let k = w.rows();
+    assert_eq!(g.rows(), k);
+    assert_eq!(g.cols(), k);
+    assert_eq!(a.rows(), k);
+    assert_eq!(a.cols(), k);
+    let mut a_damped = a.clone();
+    let mean_diag = a.diag().iter().sum::<f64>() / k.max(1) as f64;
+    a_damped.add_diag(damp * mean_diag.max(1e-12));
+    let rt = sqrtm_psd(&a_damped, 1e-11, 100)
+        .map_err(|e| anyhow::anyhow!("sqrtm failed in memory-efficient GPFQ: {e}"))?;
+    // X_eff = G H⁻¹, X̃_eff = H.
+    let x_eff = g.matmul(&rt.inv_sqrt);
+    Ok(gpfq_quantize(w, &x_eff, &rt.sqrt, params))
+}
+
+/// Visitation order: descending ‖X̃_i‖² when act_order, else natural.
+fn visit_order(norm_sq: &[f64], act_order: bool) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..norm_sq.len()).collect();
+    if act_order {
+        order.sort_by(|&a, &b| norm_sq[b].partial_cmp(&norm_sq[a]).unwrap());
+    }
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::axe::AccumTarget;
+    use crate::quant::bounds::is_safe;
+    use crate::quant::quantizer::Rounding;
+    use crate::util::rng::Rng;
+
+    fn recon_error(w: &Mat, x: &Mat, q: &Mat, xt: &Mat) -> f64 {
+        // ‖Xᵀw − X̃ᵀq‖ summed over channels
+        let wx = x.transpose().matmul(w);
+        let qx = xt.transpose().matmul(q);
+        crate::linalg::frob_diff(&wx, &qx)
+    }
+
+    fn random_problem(k: usize, c: usize, d: usize, seed: u64) -> (Mat, Mat, Mat) {
+        let mut rng = Rng::new(seed);
+        let w = Mat::random_normal(k, c, &mut rng, 0.3);
+        let x = Mat::random_normal(k, d, &mut rng, 1.0);
+        // xt = x + small perturbation (models quantized-prefix activations)
+        let mut xt = x.clone();
+        for v in xt.data_mut() {
+            *v += rng.normal() * 0.01;
+        }
+        (w, x, xt)
+    }
+
+    #[test]
+    fn orthogonal_data_reduces_to_rounding() {
+        // X = X̃ = I ⇒ error feedback is orthogonal to future steps ⇒
+        // GPFQ must produce plain RTN codes.
+        let mut rng = Rng::new(40);
+        let k = 16;
+        let w = Mat::random_normal(k, 3, &mut rng, 0.5);
+        let eye = Mat::eye(k);
+        let params = GpfqParams { act_order: false, ..GpfqParams::base(4, 8) };
+        let r = gpfq_quantize(&w, &eye, &eye, &params);
+        let wq = WeightQuantizer::fit_columns(&w, 4, Rounding::Nearest);
+        for ch in 0..3 {
+            for i in 0..k {
+                assert_eq!(r.code(i, ch), wq.to_code(w.get(i, ch), ch), "i={i} ch={ch}");
+            }
+        }
+    }
+
+    #[test]
+    fn beats_naive_rounding_on_correlated_data() {
+        let (w, x, xt) = random_problem(48, 8, 256, 41);
+        let params = GpfqParams::base(4, 8);
+        let r = gpfq_quantize(&w, &x, &xt, &params);
+        // naive RTN baseline
+        let wq = WeightQuantizer::fit_columns(&w, 4, Rounding::Nearest);
+        let naive = Mat::from_fn(48, 8, |i, ch| wq.from_code(wq.to_code(w.get(i, ch), ch), ch));
+        let e_gpfq = recon_error(&w, &x, &r.dequant(), &xt);
+        let e_naive = recon_error(&w, &x, &naive, &xt);
+        assert!(
+            e_gpfq < e_naive,
+            "GPFQ ({e_gpfq:.4}) must beat naive rounding ({e_naive:.4})"
+        );
+    }
+
+    #[test]
+    fn axe_codes_respect_accumulator() {
+        let (w, x, xt) = random_problem(64, 6, 128, 42);
+        let mut params = GpfqParams::base(4, 8);
+        params.axe = AxeConfig::monolithic(14, 8);
+        let r = gpfq_quantize(&w, &x, &xt, &params);
+        for ch in 0..6 {
+            let q = r.channel_codes(ch);
+            assert!(is_safe(&q, 0, 255, 14), "channel {ch} violates P=14");
+        }
+    }
+
+    #[test]
+    fn axe_multistage_codes_respect_tiles() {
+        let (w, x, xt) = random_problem(96, 4, 128, 43);
+        let mut params = GpfqParams::base(4, 8);
+        params.axe = AxeConfig::multistage(12, 32, 8);
+        let r = gpfq_quantize(&w, &x, &xt, &params);
+        for ch in 0..4 {
+            let q = r.channel_codes(ch);
+            assert!(
+                crate::quant::bounds::is_safe_multistage(&q, 0, 255, 12, 32),
+                "channel {ch} violates 32x12b"
+            );
+        }
+    }
+
+    #[test]
+    fn huge_accumulator_equals_base() {
+        let (w, x, xt) = random_problem(32, 5, 96, 44);
+        let base = GpfqParams { act_order: true, ..GpfqParams::base(4, 8) };
+        let mut constrained = base;
+        constrained.axe = AxeConfig {
+            target: AccumTarget::Monolithic { p_bits: 32 },
+            soft: true,
+            rounding: Rounding::Nearest,
+            act_bits: 8,
+        };
+        let r1 = gpfq_quantize(&w, &x, &xt, &base);
+        let r2 = gpfq_quantize(&w, &x, &xt, &constrained);
+        assert_eq!(r1.codes, r2.codes, "32-bit budget must be a no-op");
+    }
+
+    #[test]
+    fn memory_efficient_matches_standard() {
+        // Theorem B.1: GPFQ(W, X, X̃) == GPFQ(W, GH⁻¹, H) — codes must
+        // match exactly (up to fp tolerance pushed through the argmin,
+        // so compare codes with D > K for well-conditioned grams).
+        let (w, x, xt) = random_problem(24, 6, 200, 45);
+        let params = GpfqParams::base(4, 8);
+        let r_std = gpfq_quantize(&w, &x, &xt, &params);
+        let g = x.matmul_bt(&xt);
+        let a = xt.gram();
+        let r_mem = gpfq_quantize_grams(&w, &g, &a, &params, 0.0).unwrap();
+        let diff: usize = r_std
+            .codes
+            .iter()
+            .zip(r_mem.codes.iter())
+            .filter(|(a, b)| a != b)
+            .count();
+        assert!(
+            diff <= r_std.codes.len() / 50,
+            "mem-efficient GPFQ diverged on {diff}/{} codes",
+            r_std.codes.len()
+        );
+        // and the reconstruction errors must agree tightly
+        let e1 = recon_error(&w, &x, &r_std.dequant(), &xt);
+        let e2 = recon_error(&w, &x, &r_mem.dequant(), &xt);
+        assert!((e1 - e2).abs() / e1.max(1e-9) < 0.05, "e_std={e1} e_mem={e2}");
+    }
+
+    #[test]
+    fn dead_inputs_get_zero_codes() {
+        let mut rng = Rng::new(46);
+        let w = Mat::random_normal(8, 2, &mut rng, 1.0);
+        let mut x = Mat::random_normal(8, 32, &mut rng, 1.0);
+        let mut xt = x.clone();
+        // kill input 3
+        for j in 0..32 {
+            x.set(3, j, 0.0);
+            xt.set(3, j, 0.0);
+        }
+        let params = GpfqParams::base(4, 8);
+        let r = gpfq_quantize(&w, &x, &xt, &params);
+        assert_eq!(r.code(3, 0), 0);
+        assert_eq!(r.code(3, 1), 0);
+    }
+
+    #[test]
+    fn empty_layer_is_ok() {
+        let w = Mat::zeros(0, 0);
+        let x = Mat::zeros(0, 4);
+        let params = GpfqParams::base(4, 8);
+        let r = gpfq_quantize(&w, &x, &x, &params);
+        assert_eq!(r.codes.len(), 0);
+    }
+}

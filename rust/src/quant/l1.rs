@@ -1,0 +1,189 @@
+//! Euclidean projection onto the ℓ1 ball (Duchi et al., 2008) and the
+//! Lagrangian soft-threshold used by AXE (paper Eq. 13-16).
+//!
+//! Given weights w and budget Z, the projection's Lagrange multiplier is
+//!   λ = (Σ_{i≤ρ} μ_i − Z)/ρ        (Eq. 16)
+//! where μ is |w| sorted descending and ρ the number of surviving
+//! non-zeros. AXE then applies the soft-threshold operator
+//!   Π_λ(x) = sign(x)·(|x| − λ)₊     (paper, after Eq. 13)
+//! greedily inside the PTQ iteration rather than as a one-shot projection.
+
+/// Soft-threshold (shrinkage) operator Π_λ.
+#[inline]
+pub fn soft_threshold(x: f64, lambda: f64) -> f64 {
+    let m = x.abs() - lambda;
+    if m > 0.0 {
+        m * x.signum()
+    } else {
+        0.0
+    }
+}
+
+/// Result of the ℓ1-ball projection.
+#[derive(Clone, Debug)]
+pub struct L1Projection {
+    /// Projected vector (‖v‖₁ ≤ z).
+    pub v: Vec<f64>,
+    /// Lagrange multiplier λ (0 when already inside the ball).
+    pub lambda: f64,
+    /// Number of non-zeros in the projection.
+    pub rho: usize,
+}
+
+/// Project `w` onto the ℓ1 ball of radius `z ≥ 0` (Duchi et al. 2008,
+/// Fig. 1 algorithm — O(K log K)).
+pub fn project_l1(w: &[f64], z: f64) -> L1Projection {
+    assert!(z >= 0.0, "l1 radius must be non-negative");
+    let norm1: f64 = w.iter().map(|x| x.abs()).sum();
+    if norm1 <= z {
+        return L1Projection { v: w.to_vec(), lambda: 0.0, rho: w.iter().filter(|x| x.abs() > 0.0).count() };
+    }
+    if z == 0.0 {
+        return L1Projection { v: vec![0.0; w.len()], lambda: f64::INFINITY, rho: 0 };
+    }
+    let mut mu: Vec<f64> = w.iter().map(|x| x.abs()).collect();
+    mu.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    // find ρ = max{ j : μ_j − (Σ_{r≤j} μ_r − z)/j > 0 }
+    let mut cumsum = 0.0;
+    let mut rho = 0usize;
+    let mut cum_at_rho = 0.0;
+    for (j, &m) in mu.iter().enumerate() {
+        cumsum += m;
+        if m - (cumsum - z) / (j + 1) as f64 > 0.0 {
+            rho = j + 1;
+            cum_at_rho = cumsum;
+        }
+    }
+    let lambda = (cum_at_rho - z) / rho as f64;
+    let v: Vec<f64> = w.iter().map(|&x| soft_threshold(x, lambda)).collect();
+    L1Projection { v, lambda, rho }
+}
+
+/// Only the Lagrangian λ for budget `z` (Eq. 16) — what AXE feeds Π_λ.
+pub fn derive_lambda(w: &[f64], z: f64) -> f64 {
+    project_l1(w, z).lambda
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::quick;
+    use crate::util::rng::Rng;
+
+    fn l1(v: &[f64]) -> f64 {
+        v.iter().map(|x| x.abs()).sum()
+    }
+
+    #[test]
+    fn inside_ball_is_identity() {
+        let w = vec![0.5, -0.25, 0.1];
+        let p = project_l1(&w, 2.0);
+        assert_eq!(p.v, w);
+        assert_eq!(p.lambda, 0.0);
+    }
+
+    #[test]
+    fn projection_hits_boundary() {
+        let w = vec![3.0, -4.0, 1.0];
+        let p = project_l1(&w, 2.0);
+        assert!((l1(&p.v) - 2.0).abs() < 1e-9);
+        assert!(p.lambda > 0.0);
+    }
+
+    #[test]
+    fn zero_radius_zeroes_everything() {
+        let w = vec![1.0, -2.0];
+        let p = project_l1(&w, 0.0);
+        assert!(p.v.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn soft_threshold_shrinks() {
+        assert_eq!(soft_threshold(3.0, 1.0), 2.0);
+        assert_eq!(soft_threshold(-3.0, 1.0), -2.0);
+        assert_eq!(soft_threshold(0.5, 1.0), 0.0);
+        assert_eq!(soft_threshold(-0.5, 1.0), 0.0);
+    }
+
+    #[test]
+    fn known_projection() {
+        // project [2, 1] onto z=1: λ solves... μ=[2,1]; ρ=1: 2-(2-1)/1=1>0 ✓;
+        // ρ=2: 1-(3-1)/2=0 not >0. so ρ=1, λ=(2-1)/1=1 → v=[1, 0]
+        let p = project_l1(&[2.0, 1.0], 1.0);
+        assert!((p.v[0] - 1.0).abs() < 1e-12);
+        assert_eq!(p.v[1], 0.0);
+        assert_eq!(p.rho, 1);
+        assert!((p.lambda - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prop_projection_satisfies_budget_and_optimality() {
+        quick(
+            "l1_projection",
+            |rng: &mut Rng| {
+                let k = rng.int_in(1, 64) as usize;
+                let w = rng.normal_vec(k);
+                let z = rng.range_f64(0.0, 10.0);
+                (w, z)
+            },
+            |(w, z)| {
+                let p = project_l1(w, *z);
+                if l1(&p.v) > z + 1e-9 {
+                    return Err(format!("budget violated: {} > {z}", l1(&p.v)));
+                }
+                // optimality vs a few random feasible candidates
+                let d0: f64 = w.iter().zip(&p.v).map(|(a, b)| (a - b) * (a - b)).sum();
+                let mut rng2 = Rng::new(7);
+                for _ in 0..20 {
+                    // random candidate inside the ball
+                    let mut c: Vec<f64> = w.iter().map(|_| rng2.normal()).collect();
+                    let n = l1(&c);
+                    if n > *z && n > 0.0 {
+                        let f = z / n;
+                        for v in &mut c {
+                            *v *= f;
+                        }
+                    }
+                    let d: f64 = w.iter().zip(&c).map(|(a, b)| (a - b) * (a - b)).sum();
+                    if d < d0 - 1e-7 {
+                        return Err(format!("candidate beats projection: {d} < {d0}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_projection_idempotent() {
+        quick(
+            "l1_idempotent",
+            |rng: &mut Rng| {
+                let k = rng.int_in(1, 32) as usize;
+                (rng.normal_vec(k), rng.range_f64(0.1, 5.0))
+            },
+            |(w, z)| {
+                let p1 = project_l1(w, *z);
+                let p2 = project_l1(&p1.v, *z);
+                for (a, b) in p1.v.iter().zip(p2.v.iter()) {
+                    if (a - b).abs() > 1e-9 {
+                        return Err("not idempotent".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn lambda_matches_eq16_interpretation() {
+        // λ = average gap between surviving magnitudes and the budget
+        let w = vec![5.0, 3.0, 0.1];
+        let z = 4.0;
+        let p = project_l1(&w, z);
+        // surviving: |5|,|3| → ρ=2, λ=(8−4)/2=2 → v=[3,1,0], ‖v‖₁=4 ✓
+        assert_eq!(p.rho, 2);
+        assert!((p.lambda - 2.0).abs() < 1e-12);
+        assert!((l1(&p.v) - 4.0).abs() < 1e-12);
+    }
+}

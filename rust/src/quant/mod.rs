@@ -1,0 +1,100 @@
+//! The quantization core: uniform quantizers, the accumulator bounds,
+//! the AXE constraint machinery, and the layer-wise PTQ algorithms
+//! (GPFQ, OPTQ) with accumulator-aware variants, plus the EP-init and
+//! naïve bit-width-manipulation baselines.
+
+pub mod alphabet;
+pub mod axe;
+pub mod bounds;
+pub mod ep_init;
+pub mod gpfq;
+pub mod l1;
+pub mod optq;
+pub mod quantizer;
+pub mod result;
+pub mod rotation;
+
+pub use alphabet::Alphabet;
+pub use axe::{AccumTarget, AxeConfig};
+pub use bounds::{datatype_min_bits, is_safe, is_safe_multistage, l1_budget, outer_bits, side_budget};
+pub use ep_init::{ep_init, ep_init_float};
+pub use gpfq::{gpfq_quantize, gpfq_quantize_grams, GpfqParams};
+pub use l1::{derive_lambda, project_l1, soft_threshold};
+pub use optq::{optq_quantize, OptqParams};
+pub use quantizer::{ActQuantizer, Rounding, WeightQuantizer};
+pub use result::QuantResult;
+pub use rotation::Rotation;
+
+/// Which base PTQ algorithm to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algorithm {
+    Gpfq,
+    /// Memory-efficient GPFQ (Theorem B.1) — identical output, O(K²) memory.
+    GpfqMemEff,
+    Optq,
+}
+
+impl Algorithm {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::Gpfq => "GPFQ",
+            Algorithm::GpfqMemEff => "GPFQ*",
+            Algorithm::Optq => "OPTQ",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Algorithm> {
+        match s.to_ascii_lowercase().as_str() {
+            "gpfq" => Some(Algorithm::Gpfq),
+            "gpfq*" | "gpfq-mem" | "gpfqmemeff" | "gpfq_mem" => Some(Algorithm::GpfqMemEff),
+            "optq" | "gptq" => Some(Algorithm::Optq),
+            _ => None,
+        }
+    }
+}
+
+/// How accumulator-awareness is enforced on top of the base algorithm.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// Base algorithm only; accumulator sized by the data-type bound Eq. 3.
+    Naive,
+    /// Base algorithm, then EP-init projection (round-to-zero).
+    EpInit,
+    /// AXE greedy constraints inside the base algorithm.
+    Axe,
+}
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Naive => "naive",
+            Method::EpInit => "ep-init",
+            Method::Axe => "axe",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Method> {
+        match s.to_ascii_lowercase().as_str() {
+            "naive" | "base" => Some(Method::Naive),
+            "ep-init" | "epinit" | "ep_init" => Some(Method::EpInit),
+            "axe" => Some(Method::Axe),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_algorithms_and_methods() {
+        assert_eq!(Algorithm::parse("gptq"), Some(Algorithm::Optq));
+        assert_eq!(Algorithm::parse("GPFQ"), Some(Algorithm::Gpfq));
+        assert_eq!(Algorithm::parse("gpfq*"), Some(Algorithm::GpfqMemEff));
+        assert_eq!(Algorithm::parse("nope"), None);
+        assert_eq!(Method::parse("AXE"), Some(Method::Axe));
+        assert_eq!(Method::parse("ep-init"), Some(Method::EpInit));
+        assert_eq!(Method::parse("base"), Some(Method::Naive));
+    }
+}

@@ -1,0 +1,293 @@
+//! OPTQ (a.k.a. GPTQ; Frantar et al., 2022) with the paper's
+//! accumulator-aware extension (Algorithm 2).
+//!
+//! The layer Hessian proxy is H = 2 X̃X̃ᵀ + ηI with η = 1% of the mean
+//! diagonal. The error-propagation factor is the upper-triangular
+//! Cholesky factor U of H⁻¹ (H⁻¹ = UᵀU):
+//!
+//!   V_i = Ψ_{a,b} ∘ Π_λ (W_i / s)            (accumulator-aware step)
+//!   Q_i = Q(V_i)
+//!   E   = (W_i − s·Q_i) / U_{i,i}
+//!   W_{j>i} ← W_{j>i} − E · U_{i,j}
+//!
+//! Act-order (descending Hessian diagonal) is applied as a permutation;
+//! AXE tile budgets are tracked on *original* input positions so the
+//! physical datapath tiling is respected regardless of visit order.
+
+use super::axe::AxeConfig;
+use super::quantizer::WeightQuantizer;
+use super::result::QuantResult;
+use crate::linalg::{cholesky_lower, spd_inverse, Mat};
+
+/// Parameters for an OPTQ run.
+#[derive(Clone, Copy, Debug)]
+pub struct OptqParams {
+    /// Weight bit width M.
+    pub weight_bits: u32,
+    /// Accumulator-aware extension config (target None = base OPTQ).
+    pub axe: AxeConfig,
+    /// Quantize in descending Hessian-diagonal order (App. C.1).
+    pub act_order: bool,
+    /// Relative dampening η as a fraction of the mean Hessian diagonal.
+    pub damp: f64,
+}
+
+impl OptqParams {
+    pub fn base(weight_bits: u32, act_bits: u32) -> OptqParams {
+        OptqParams {
+            weight_bits,
+            axe: AxeConfig::unconstrained(super::quantizer::Rounding::Nearest, act_bits),
+            act_order: true,
+            damp: 0.01,
+        }
+    }
+}
+
+/// Quantize one layer with OPTQ.
+///
+/// * `w` — K×C float weights (input index × output channel).
+/// * `gram` — X̃X̃ᵀ (K×K) from calibration data under the quantized
+///   prefix network.
+pub fn optq_quantize(w: &Mat, gram: &Mat, params: &OptqParams) -> anyhow::Result<QuantResult> {
+    let (k, c) = (w.rows(), w.cols());
+    assert_eq!(gram.rows(), k, "gram must be K×K");
+    assert_eq!(gram.cols(), k, "gram must be K×K");
+
+    let wq = WeightQuantizer::fit_columns(w, params.weight_bits, params.axe.rounding);
+    let mut result = QuantResult::new(k, c, params.weight_bits, wq.scales.clone());
+    if k == 0 || c == 0 {
+        return Ok(result);
+    }
+
+    // H = 2·gram + ηI
+    let mut h = gram.clone();
+    h.scale(2.0);
+    let mean_diag = h.diag().iter().sum::<f64>() / k as f64;
+    h.add_diag((params.damp * mean_diag).max(1e-10));
+
+    // act-order permutation by descending diagonal
+    let perm = if params.act_order {
+        let diag = h.diag();
+        let mut idx: Vec<usize> = (0..k).collect();
+        idx.sort_by(|&a, &b| diag[b].partial_cmp(&diag[a]).unwrap());
+        idx
+    } else {
+        (0..k).collect()
+    };
+    let h_p = permute_sym(&h, &perm);
+
+    // U upper-triangular with H⁻¹ = UᵀU  (U = Lᵀ, H⁻¹ = L Lᵀ)
+    let hinv = spd_inverse(&h_p).map_err(|e| anyhow::anyhow!("OPTQ hessian inversion: {e}"))?;
+    let l = cholesky_lower(&hinv).map_err(|e| anyhow::anyhow!("OPTQ cholesky: {e}"))?;
+    let u = l.transpose();
+
+    // Channel-parallel loop: each worker owns a slice of channels with a
+    // private working copy of the (permuted) weights.
+    let nthreads = crate::linalg::num_threads().min(c).max(1);
+    let chunk = c.div_ceil(nthreads);
+    let mut per_thread: Vec<Vec<(usize, Vec<i64>)>> = Vec::with_capacity(nthreads);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for t in 0..nthreads {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(c);
+            if lo >= hi {
+                continue;
+            }
+            let wq_ref = &wq;
+            let u_ref = &u;
+            let perm_ref = &perm;
+            handles.push(scope.spawn(move || {
+                let mut out = Vec::with_capacity(hi - lo);
+                for ch in lo..hi {
+                    out.push((ch, optq_channel(w, ch, wq_ref, u_ref, perm_ref, params)));
+                }
+                out
+            }));
+        }
+        for h in handles {
+            per_thread.push(h.join().expect("optq worker panicked"));
+        }
+    });
+    for chunk in per_thread {
+        for (ch, codes) in chunk {
+            for (i, q) in codes.into_iter().enumerate() {
+                result.set_code(i, ch, q);
+            }
+        }
+    }
+    Ok(result)
+}
+
+/// One channel of OPTQ over the permuted index space. Returns codes in
+/// the ORIGINAL index space.
+fn optq_channel(
+    w: &Mat,
+    ch: usize,
+    wq: &WeightQuantizer,
+    u: &Mat,
+    perm: &[usize],
+    params: &OptqParams,
+) -> Vec<i64> {
+    let k = w.rows();
+    let s = wq.scales[ch];
+    // working copy in permuted order
+    let mut wv: Vec<f64> = perm.iter().map(|&i| w.get(i, ch)).collect();
+    let w_scaled: Vec<f64> = (0..k).map(|i| w.get(i, ch) / s).collect();
+    let mut constraint = super::axe::ConstraintState::new(&params.axe, &w_scaled);
+    let mut codes = vec![0i64; k];
+
+    for ip in 0..k {
+        let orig = perm[ip];
+        let mut vs = wv[ip] / s;
+        if let Some(st) = constraint.as_ref() {
+            vs = st.process(orig, vs);
+        }
+        let q = wq.to_code_scaled(vs);
+        if let Some(st) = constraint.as_mut() {
+            st.commit(orig, q);
+        }
+        codes[orig] = q;
+        let deq = q as f64 * s;
+        let uii = u.get(ip, ip);
+        if uii.abs() > 1e-30 {
+            let e = (wv[ip] - deq) / uii;
+            let urow = u.row(ip);
+            for jp in (ip + 1)..k {
+                wv[jp] -= e * urow[jp];
+            }
+        }
+    }
+    codes
+}
+
+/// Symmetric permutation of a square matrix: out[a][b] = m[p[a]][p[b]].
+fn permute_sym(m: &Mat, perm: &[usize]) -> Mat {
+    let k = m.rows();
+    Mat::from_fn(k, k, |a, b| m.get(perm[a], perm[b]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::axe::AccumTarget;
+    use crate::quant::bounds::{is_safe, is_safe_multistage};
+    use crate::quant::quantizer::Rounding;
+    use crate::util::rng::Rng;
+
+    fn random_problem(k: usize, c: usize, d: usize, seed: u64) -> (Mat, Mat, Mat) {
+        let mut rng = Rng::new(seed);
+        let w = Mat::random_normal(k, c, &mut rng, 0.3);
+        let xt = Mat::random_normal(k, d, &mut rng, 1.0);
+        let gram = xt.gram();
+        (w, xt, gram)
+    }
+
+    fn recon_error(w: &Mat, q: &Mat, xt: &Mat) -> f64 {
+        let wx = xt.transpose().matmul(w);
+        let qx = xt.transpose().matmul(q);
+        crate::linalg::frob_diff(&wx, &qx)
+    }
+
+    #[test]
+    fn beats_naive_rounding() {
+        let (w, xt, gram) = random_problem(48, 8, 256, 50);
+        let params = OptqParams::base(4, 8);
+        let r = optq_quantize(&w, &gram, &params).unwrap();
+        let wq = WeightQuantizer::fit_columns(&w, 4, Rounding::Nearest);
+        let naive = Mat::from_fn(48, 8, |i, ch| wq.from_code(wq.to_code(w.get(i, ch), ch), ch));
+        let e_optq = recon_error(&w, &r.dequant(), &xt);
+        let e_naive = recon_error(&w, &naive, &xt);
+        assert!(e_optq < e_naive, "OPTQ ({e_optq:.4}) must beat naive ({e_naive:.4})");
+    }
+
+    #[test]
+    fn diagonal_hessian_reduces_to_rounding() {
+        // With an (isotropic) diagonal Hessian and no act-order there is
+        // no cross-coordinate error to propagate: codes == RTN codes.
+        let mut rng = Rng::new(51);
+        let k = 16;
+        let w = Mat::random_normal(k, 3, &mut rng, 0.5);
+        let gram = Mat::eye(k);
+        let params = OptqParams { act_order: false, ..OptqParams::base(4, 8) };
+        let r = optq_quantize(&w, &gram, &params).unwrap();
+        let wq = WeightQuantizer::fit_columns(&w, 4, Rounding::Nearest);
+        for ch in 0..3 {
+            for i in 0..k {
+                assert_eq!(r.code(i, ch), wq.to_code(w.get(i, ch), ch));
+            }
+        }
+    }
+
+    #[test]
+    fn axe_monolithic_safe() {
+        let (w, _xt, gram) = random_problem(64, 6, 128, 52);
+        let mut params = OptqParams::base(4, 8);
+        params.axe = AxeConfig::monolithic(14, 8);
+        let r = optq_quantize(&w, &gram, &params).unwrap();
+        for ch in 0..6 {
+            assert!(is_safe(&r.channel_codes(ch), 0, 255, 14), "ch={ch}");
+        }
+    }
+
+    #[test]
+    fn axe_multistage_safe_with_act_order() {
+        // act-order permutation must NOT break physical tile budgets
+        let (w, _xt, gram) = random_problem(96, 4, 160, 53);
+        let mut params = OptqParams::base(4, 8);
+        params.axe = AxeConfig::multistage(12, 32, 8);
+        params.act_order = true;
+        let r = optq_quantize(&w, &gram, &params).unwrap();
+        for ch in 0..4 {
+            assert!(is_safe_multistage(&r.channel_codes(ch), 0, 255, 12, 32), "ch={ch}");
+        }
+    }
+
+    #[test]
+    fn huge_accumulator_equals_base() {
+        let (w, _xt, gram) = random_problem(32, 5, 96, 54);
+        let base = OptqParams::base(4, 8);
+        let mut constrained = base;
+        constrained.axe = AxeConfig {
+            target: AccumTarget::Monolithic { p_bits: 32 },
+            soft: true,
+            rounding: Rounding::Nearest,
+            act_bits: 8,
+        };
+        let r1 = optq_quantize(&w, &gram, &base).unwrap();
+        let r2 = optq_quantize(&w, &gram, &constrained).unwrap();
+        assert_eq!(r1.codes, r2.codes);
+    }
+
+    #[test]
+    fn act_order_helps_or_matches() {
+        // Not a theorem, but on act-heavy data it should rarely hurt; we
+        // assert it stays within 20% to catch sign errors in the
+        // permutation plumbing.
+        let (w, xt, gram) = random_problem(64, 8, 256, 55);
+        let mut p_on = OptqParams::base(4, 8);
+        p_on.act_order = true;
+        let mut p_off = p_on;
+        p_off.act_order = false;
+        let e_on = recon_error(&w, &optq_quantize(&w, &gram, &p_on).unwrap().dequant(), &xt);
+        let e_off = recon_error(&w, &optq_quantize(&w, &gram, &p_off).unwrap().dequant(), &xt);
+        assert!(e_on <= e_off * 1.2, "act-order exploded: {e_on} vs {e_off}");
+    }
+
+    #[test]
+    fn permute_sym_roundtrip() {
+        let mut rng = Rng::new(56);
+        let m = {
+            let x = Mat::random_normal(6, 10, &mut rng, 1.0);
+            x.gram()
+        };
+        let perm = vec![3, 1, 5, 0, 2, 4];
+        let p = permute_sym(&m, &perm);
+        for a in 0..6 {
+            for b in 0..6 {
+                assert_eq!(p.get(a, b), m.get(perm[a], perm[b]));
+            }
+        }
+        assert!(p.is_symmetric(1e-12));
+    }
+}

@@ -1,0 +1,240 @@
+//! Uniform affine quantizers (paper Eq. 1, Eq. 27).
+//!
+//! Weights: symmetric per-channel (z = 0), s_c = max|w_c| / (2^{M−1}−1).
+//! Activations: asymmetric per-tensor, zero-point calibrated to a
+//! percentile window of the calibration data, codes unsigned in
+//! [0, 2^N−1] — the μ=0, ν=2^N−1 setting §3.2 derives the strict
+//! constraint for.
+
+use super::alphabet::Alphabet;
+
+/// Rounding functions. `max_delta` is the worst-case magnitude increase
+/// from rounding (paper Eq. 21): 0.5 for round-to-nearest, 0 for
+/// round-to-zero.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rounding {
+    /// Round to nearest, ties away from zero (PyTorch `round`-like).
+    Nearest,
+    /// Round toward zero (truncation) — EP-init's requirement.
+    Zero,
+}
+
+impl Rounding {
+    #[inline]
+    pub fn round(&self, x: f64) -> f64 {
+        match self {
+            Rounding::Nearest => x.round(),
+            Rounding::Zero => x.trunc(),
+        }
+    }
+
+    /// Worst-case |round(x)| − |x| (Eq. 21's max(Δ)).
+    #[inline]
+    pub fn max_delta(&self) -> f64 {
+        match self {
+            Rounding::Nearest => 0.5,
+            Rounding::Zero => 0.0,
+        }
+    }
+}
+
+/// Per-channel symmetric weight quantizer.
+#[derive(Clone, Debug)]
+pub struct WeightQuantizer {
+    pub alphabet: Alphabet,
+    /// One scale per output channel; strictly positive.
+    pub scales: Vec<f64>,
+    pub rounding: Rounding,
+}
+
+impl WeightQuantizer {
+    /// Fit per-channel scales from a weight matrix given as K×C columns
+    /// (channel c = column c), per Eq. 27.
+    pub fn fit_columns(w: &crate::linalg::Mat, bits: u32, rounding: Rounding) -> WeightQuantizer {
+        let alphabet = Alphabet::signed(bits);
+        let qmax = alphabet.max_val() as f64;
+        let c = w.cols();
+        let mut scales = vec![0.0f64; c];
+        for i in 0..w.rows() {
+            let row = w.row(i);
+            for (j, &v) in row.iter().enumerate() {
+                scales[j] = scales[j].max(v.abs());
+            }
+        }
+        for s in &mut scales {
+            *s = (*s / qmax).max(1e-12);
+        }
+        WeightQuantizer { alphabet, scales, rounding }
+    }
+
+    /// Quantize a scaled value (w/s already applied) to an integer code.
+    #[inline]
+    pub fn to_code_scaled(&self, v_scaled: f64) -> i64 {
+        self.alphabet.clamp(self.rounding.round(v_scaled) as i64)
+    }
+
+    /// Quantize a real value for channel `c`.
+    #[inline]
+    pub fn to_code(&self, v: f64, c: usize) -> i64 {
+        self.to_code_scaled(v / self.scales[c])
+    }
+
+    /// Dequantize a code for channel `c`.
+    #[inline]
+    pub fn from_code(&self, q: i64, c: usize) -> f64 {
+        q as f64 * self.scales[c]
+    }
+}
+
+/// Per-tensor asymmetric activation quantizer. Codes are unsigned in
+/// [0, 2^N−1]; real value = s·(code − z).
+#[derive(Clone, Copy, Debug)]
+pub struct ActQuantizer {
+    pub alphabet: Alphabet,
+    pub scale: f64,
+    pub zero_point: i64,
+}
+
+impl ActQuantizer {
+    /// Calibrate from sample values using a two-sided percentile window
+    /// (the paper tunes z to the lowest 99th percentile; we clip both
+    /// tails at `pct`, e.g. 0.999).
+    pub fn calibrate(samples: &[f64], bits: u32, pct: f64) -> ActQuantizer {
+        assert!(!samples.is_empty(), "cannot calibrate on empty samples");
+        let alphabet = Alphabet::unsigned(bits);
+        let mut sorted: Vec<f64> = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = sorted.len();
+        let hi_idx = (((n as f64) * pct).ceil() as usize).clamp(1, n) - 1;
+        let lo_idx = (((n as f64) * (1.0 - pct)).floor() as usize).min(n - 1);
+        let lo = sorted[lo_idx].min(0.0);
+        let mut hi = sorted[hi_idx].max(0.0);
+        if hi - lo < 1e-12 {
+            hi = lo + 1e-6;
+        }
+        let levels = (alphabet.levels() - 1) as f64;
+        let scale = (hi - lo) / levels;
+        let zero_point = (-lo / scale).round() as i64;
+        let zero_point = zero_point.clamp(alphabet.min_val(), alphabet.max_val());
+        ActQuantizer { alphabet, scale, zero_point }
+    }
+
+    /// Identity-ish quantizer for tests: scale 1, zp 0.
+    pub fn unit(bits: u32) -> ActQuantizer {
+        ActQuantizer { alphabet: Alphabet::unsigned(bits), scale: 1.0, zero_point: 0 }
+    }
+
+    #[inline]
+    pub fn to_code(&self, x: f64) -> i64 {
+        self.alphabet.clamp((x / self.scale).round() as i64 + self.zero_point)
+    }
+
+    #[inline]
+    pub fn from_code(&self, code: i64) -> f64 {
+        (code - self.zero_point) as f64 * self.scale
+    }
+
+    /// Quantize-dequantize (fake-quant) a value.
+    #[inline]
+    pub fn fake(&self, x: f64) -> f64 {
+        self.from_code(self.to_code(x))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn rounding_functions() {
+        assert_eq!(Rounding::Nearest.round(1.5), 2.0);
+        assert_eq!(Rounding::Nearest.round(-1.5), -2.0);
+        assert_eq!(Rounding::Zero.round(1.9), 1.0);
+        assert_eq!(Rounding::Zero.round(-1.9), -1.0);
+        assert_eq!(Rounding::Nearest.max_delta(), 0.5);
+        assert_eq!(Rounding::Zero.max_delta(), 0.0);
+    }
+
+    #[test]
+    fn rtz_never_increases_magnitude() {
+        let mut rng = Rng::new(31);
+        for _ in 0..1000 {
+            let x = rng.normal() * 10.0;
+            assert!(Rounding::Zero.round(x).abs() <= x.abs());
+        }
+    }
+
+    #[test]
+    fn weight_quantizer_scales_cover_max() {
+        let mut rng = Rng::new(32);
+        let w = Mat::random_normal(16, 4, &mut rng, 2.0);
+        let q = WeightQuantizer::fit_columns(&w, 4, Rounding::Nearest);
+        assert_eq!(q.scales.len(), 4);
+        for c in 0..4 {
+            let maxabs = (0..16).map(|i| w.get(i, c).abs()).fold(0.0f64, f64::max);
+            // code of the max element must be exactly qmax
+            let code = q.to_code(maxabs, c);
+            assert_eq!(code, q.alphabet.max_val());
+        }
+    }
+
+    #[test]
+    fn weight_roundtrip_error_bounded() {
+        let mut rng = Rng::new(33);
+        let w = Mat::random_normal(64, 8, &mut rng, 1.0);
+        let q = WeightQuantizer::fit_columns(&w, 8, Rounding::Nearest);
+        for c in 0..8 {
+            for i in 0..64 {
+                let v = w.get(i, c);
+                let deq = q.from_code(q.to_code(v, c), c);
+                assert!((v - deq).abs() <= 0.5 * q.scales[c] + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn act_quantizer_codes_unsigned() {
+        let mut rng = Rng::new(34);
+        let samples: Vec<f64> = (0..5000).map(|_| rng.normal()).collect();
+        let q = ActQuantizer::calibrate(&samples, 8, 0.999);
+        for &x in samples.iter().take(500) {
+            let code = q.to_code(x);
+            assert!((0..=255).contains(&code));
+        }
+        // zero must be exactly representable (paper §2.1)
+        assert_eq!(q.to_code(0.0), q.zero_point);
+        assert!((q.from_code(q.zero_point)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn act_quantizer_relu_like_inputs() {
+        // non-negative inputs -> zero_point ~ 0
+        let samples: Vec<f64> = (0..1000).map(|i| (i as f64) / 100.0).collect();
+        let q = ActQuantizer::calibrate(&samples, 8, 1.0);
+        assert_eq!(q.zero_point, 0);
+        let err = (q.fake(5.0) - 5.0).abs();
+        assert!(err <= q.scale);
+    }
+
+    #[test]
+    fn act_quantizer_percentile_clips_outliers() {
+        let mut samples = vec![0.0; 999];
+        for (i, s) in samples.iter_mut().enumerate() {
+            *s = (i as f64) / 999.0;
+        }
+        samples.push(1000.0); // outlier
+        let q = ActQuantizer::calibrate(&samples, 8, 0.99);
+        // the outlier should be clipped, so scale covers ~[0,1], not [0,1000]
+        assert!(q.scale < 0.05, "scale={}", q.scale);
+    }
+
+    #[test]
+    fn constant_input_does_not_divide_by_zero() {
+        let samples = vec![3.0; 100];
+        let q = ActQuantizer::calibrate(&samples, 4, 1.0);
+        assert!(q.scale > 0.0);
+        let _ = q.to_code(3.0);
+    }
+}

@@ -1,0 +1,92 @@
+//! Output container shared by all layer-wise quantization algorithms.
+
+use crate::linalg::Mat;
+
+/// Quantized weights for one layer: integer codes plus per-channel scales.
+/// Layout matches the input weight matrix: K×C (input index × channel).
+#[derive(Clone, Debug)]
+pub struct QuantResult {
+    pub k: usize,
+    pub c: usize,
+    pub bits: u32,
+    /// K×C row-major integer codes in the signed alphabet A_M.
+    pub codes: Vec<i64>,
+    /// Per-channel scale s_c (Eq. 27).
+    pub scales: Vec<f64>,
+}
+
+impl QuantResult {
+    pub fn new(k: usize, c: usize, bits: u32, scales: Vec<f64>) -> QuantResult {
+        assert_eq!(scales.len(), c);
+        QuantResult { k, c, bits, codes: vec![0; k * c], scales }
+    }
+
+    #[inline]
+    pub fn code(&self, i: usize, ch: usize) -> i64 {
+        self.codes[i * self.c + ch]
+    }
+
+    #[inline]
+    pub fn set_code(&mut self, i: usize, ch: usize, q: i64) {
+        self.codes[i * self.c + ch] = q;
+    }
+
+    /// Codes of a single channel (length K).
+    pub fn channel_codes(&self, ch: usize) -> Vec<i64> {
+        (0..self.k).map(|i| self.code(i, ch)).collect()
+    }
+
+    /// Dequantized weight matrix (K×C).
+    pub fn dequant(&self) -> Mat {
+        Mat::from_fn(self.k, self.c, |i, ch| self.code(i, ch) as f64 * self.scales[ch])
+    }
+
+    /// Fraction of zero codes (the paper reports unstructured sparsity).
+    pub fn sparsity(&self) -> f64 {
+        let zeros = self.codes.iter().filter(|&&q| q == 0).count();
+        zeros as f64 / self.codes.len().max(1) as f64
+    }
+
+    /// ℓ1 norm of a channel's codes.
+    pub fn channel_l1(&self, ch: usize) -> f64 {
+        (0..self.k).map(|i| self.code(i, ch).abs() as f64).sum()
+    }
+
+    /// Per-channel sum of codes (needed for the zero-point correction
+    /// term at inference).
+    pub fn channel_sums(&self) -> Vec<i64> {
+        let mut sums = vec![0i64; self.c];
+        for i in 0..self.k {
+            for ch in 0..self.c {
+                sums[ch] += self.code(i, ch);
+            }
+        }
+        sums
+    }
+
+    /// Largest |code| (must stay within the alphabet).
+    pub fn max_abs_code(&self) -> i64 {
+        self.codes.iter().map(|q| q.abs()).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dequant_and_sparsity() {
+        let mut r = QuantResult::new(3, 2, 4, vec![0.5, 2.0]);
+        r.set_code(0, 0, 3);
+        r.set_code(2, 1, -1);
+        let w = r.dequant();
+        assert_eq!(w.get(0, 0), 1.5);
+        assert_eq!(w.get(2, 1), -2.0);
+        assert_eq!(w.get(1, 1), 0.0);
+        assert!((r.sparsity() - 4.0 / 6.0).abs() < 1e-12);
+        assert_eq!(r.channel_sums(), vec![3, -1]);
+        assert_eq!(r.max_abs_code(), 3);
+        assert_eq!(r.channel_l1(0), 3.0);
+        assert_eq!(r.channel_codes(1), vec![0, 0, -1]);
+    }
+}

@@ -1,0 +1,256 @@
+//! Randomized block-Hadamard rotation — the paper's §5 future-work
+//! extension (QuaRot / SpinQuant-style incoherence preprocessing),
+//! implemented as an optional pipeline stage.
+//!
+//! R = H_b · D with H_b a normalized block-Hadamard (largest power-of-two
+//! block dividing K) and D a seeded ±1 diagonal. R is orthogonal, so
+//! rotating both the weights (W' = Rᵀ W) and the activations (x' = Rᵀ x)
+//! leaves every dot product unchanged in exact arithmetic while
+//! flattening activation outliers — which is exactly what per-tensor
+//! activation quantizers and the AXE ℓ1 budgets like. The online
+//! transform costs O(K log b) per row via the fast Walsh–Hadamard
+//! transform.
+
+use crate::util::rng::Rng;
+
+/// A seeded randomized block-Hadamard rotation for dimension `k`.
+#[derive(Clone, Debug)]
+pub struct Rotation {
+    pub k: usize,
+    /// Power-of-two Hadamard block edge (1 disables mixing).
+    pub block: usize,
+    /// ±1 diagonal (applied before the Hadamard mix).
+    pub signs: Vec<f32>,
+}
+
+/// Largest power of two dividing `k`.
+pub fn hadamard_block(k: usize) -> usize {
+    if k == 0 {
+        return 1;
+    }
+    1usize << k.trailing_zeros()
+}
+
+impl Rotation {
+    /// Deterministic rotation for dimension `k` from a seed.
+    pub fn new(k: usize, seed: u64) -> Rotation {
+        let mut rng = Rng::new(seed ^ 0x6A09_E667_F3BC_C908);
+        let signs = (0..k).map(|_| if rng.chance(0.5) { 1.0 } else { -1.0 }).collect();
+        Rotation { k, block: hadamard_block(k), signs }
+    }
+
+    /// Apply x' = Rᵀ x = H (D x) in place (f32 row).
+    pub fn apply_row(&self, x: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.k);
+        for (v, s) in x.iter_mut().zip(self.signs.iter()) {
+            *v *= s;
+        }
+        fwht_blocks(x, self.block);
+    }
+
+    /// Inverse: x = R x' = D (H x') (H is an involution when normalized).
+    pub fn apply_row_inverse(&self, x: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.k);
+        fwht_blocks(x, self.block);
+        for (v, s) in x.iter_mut().zip(self.signs.iter()) {
+            *v *= s;
+        }
+    }
+
+    /// Rotate a K×C weight matrix in place: W' = Rᵀ W (each column is a
+    /// K-vector treated like an activation row).
+    pub fn apply_weights_kc(&self, w: &mut crate::linalg::Mat) {
+        assert_eq!(w.rows(), self.k);
+        let c = w.cols();
+        let mut col = vec![0.0f32; self.k];
+        for ch in 0..c {
+            for i in 0..self.k {
+                col[i] = w.get(i, ch) as f32;
+            }
+            self.apply_row(&mut col);
+            for i in 0..self.k {
+                w.set(i, ch, col[i] as f64);
+            }
+        }
+    }
+
+    /// Rotate a K×D capture matrix in place (each sample column).
+    pub fn apply_capture_kd(&self, x: &mut crate::linalg::Mat) {
+        assert_eq!(x.rows(), self.k);
+        let d = x.cols();
+        let mut col = vec![0.0f32; self.k];
+        for s in 0..d {
+            for i in 0..self.k {
+                col[i] = x.get(i, s) as f32;
+            }
+            self.apply_row(&mut col);
+            for i in 0..self.k {
+                x.set(i, s, col[i] as f64);
+            }
+        }
+    }
+}
+
+/// In-place normalized fast Walsh–Hadamard transform applied per
+/// contiguous block of `block` elements (block must be a power of two).
+pub fn fwht_blocks(x: &mut [f32], block: usize) {
+    debug_assert!(block.is_power_of_two());
+    if block <= 1 {
+        return;
+    }
+    let norm = 1.0 / (block as f32).sqrt();
+    for chunk in x.chunks_mut(block) {
+        if chunk.len() < block {
+            continue; // trailing partial block left unmixed
+        }
+        let mut h = 1;
+        while h < block {
+            let mut i = 0;
+            while i < block {
+                for j in i..i + h {
+                    let a = chunk[j];
+                    let b = chunk[j + h];
+                    chunk[j] = a + b;
+                    chunk[j + h] = a - b;
+                }
+                i += h * 2;
+            }
+            h *= 2;
+        }
+        for v in chunk.iter_mut() {
+            *v *= norm;
+        }
+    }
+}
+
+/// Excess kurtosis of a sample — the outlier metric rotation flattens.
+pub fn kurtosis(xs: &[f64]) -> f64 {
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n;
+    if var < 1e-18 {
+        return 0.0;
+    }
+    let m4 = xs.iter().map(|x| (x - mean).powi(4)).sum::<f64>() / n;
+    m4 / (var * var) - 3.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::util::prop::quick;
+
+    #[test]
+    fn hadamard_block_values() {
+        assert_eq!(hadamard_block(224), 32);
+        assert_eq!(hadamard_block(64), 64);
+        assert_eq!(hadamard_block(56), 8);
+        assert_eq!(hadamard_block(7), 1);
+        assert_eq!(hadamard_block(0), 1);
+    }
+
+    #[test]
+    fn fwht_is_involution_and_isometry() {
+        quick(
+            "fwht_involution",
+            |rng| {
+                let block = 1usize << rng.int_in(1, 6);
+                let n = block * rng.int_in(1, 4) as usize;
+                let xs: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+                (xs, block)
+            },
+            |(xs, block)| {
+                let mut y = xs.clone();
+                fwht_blocks(&mut y, *block);
+                let n_before: f32 = xs.iter().map(|v| v * v).sum();
+                let n_after: f32 = y.iter().map(|v| v * v).sum();
+                if (n_before - n_after).abs() > 1e-3 * n_before.max(1.0) {
+                    return Err(format!("not an isometry: {n_before} vs {n_after}"));
+                }
+                fwht_blocks(&mut y, *block);
+                for (a, b) in xs.iter().zip(y.iter()) {
+                    if (a - b).abs() > 1e-4 {
+                        return Err("not an involution".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn rotation_roundtrip() {
+        let r = Rotation::new(48, 7);
+        let mut x: Vec<f32> = (0..48).map(|i| (i as f32 - 20.0) * 0.3).collect();
+        let orig = x.clone();
+        r.apply_row(&mut x);
+        r.apply_row_inverse(&mut x);
+        for (a, b) in x.iter().zip(orig.iter()) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn rotation_preserves_dot_products() {
+        // Rᵀ on both sides of a dot product is a no-op (orthogonality).
+        let k = 64;
+        let r = Rotation::new(k, 3);
+        let mut rng = crate::util::rng::Rng::new(5);
+        let mut w = Mat::random_normal(k, 4, &mut rng, 0.5);
+        let x: Vec<f32> = (0..k).map(|_| rng.normal() as f32).collect();
+        // reference dot per channel
+        let dots: Vec<f64> =
+            (0..4).map(|c| (0..k).map(|i| w.get(i, c) * x[i] as f64).sum()).collect();
+        r.apply_weights_kc(&mut w);
+        let mut xr = x.clone();
+        r.apply_row(&mut xr);
+        for c in 0..4 {
+            let d: f64 = (0..k).map(|i| w.get(i, c) * xr[i] as f64).sum();
+            assert!((d - dots[c]).abs() < 1e-3, "channel {c}: {d} vs {}", dots[c]);
+        }
+    }
+
+    #[test]
+    fn rotation_flattens_outliers() {
+        // a spiky activation vector (few huge channels) must become much
+        // flatter after rotation — the QuaRot effect.
+        let k = 256;
+        let r = Rotation::new(k, 11);
+        let mut rng = crate::util::rng::Rng::new(13);
+        let mut worst_before = 0.0f64;
+        let mut worst_after = 0.0f64;
+        for _ in 0..10 {
+            let mut x: Vec<f32> = (0..k).map(|_| rng.normal() as f32 * 0.1).collect();
+            // inject outliers
+            for _ in 0..3 {
+                x[rng.below(k)] = 50.0;
+            }
+            let before: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+            let mut xr = x.clone();
+            r.apply_row(&mut xr);
+            let after: Vec<f64> = xr.iter().map(|&v| v as f64).collect();
+            worst_before = worst_before.max(kurtosis(&before));
+            worst_after = worst_after.max(kurtosis(&after));
+        }
+        assert!(
+            worst_after < worst_before / 2.0,
+            "kurtosis must drop: {worst_before:.1} -> {worst_after:.1}"
+        );
+    }
+
+    #[test]
+    fn capture_rotation_consistent_with_row_rotation() {
+        let k = 32;
+        let r = Rotation::new(k, 21);
+        let mut rng = crate::util::rng::Rng::new(22);
+        let mut m = Mat::random_normal(k, 5, &mut rng, 1.0);
+        let col0: Vec<f32> = (0..k).map(|i| m.get(i, 0) as f32).collect();
+        r.apply_capture_kd(&mut m);
+        let mut expected = col0;
+        r.apply_row(&mut expected);
+        for i in 0..k {
+            assert!((m.get(i, 0) as f32 - expected[i]).abs() < 1e-4);
+        }
+    }
+}

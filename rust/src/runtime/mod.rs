@@ -1,0 +1,195 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts
+//! (HLO text emitted by `python/compile/aot.py`) on the XLA CPU client.
+//!
+//! Interchange is HLO *text*, not serialized `HloModuleProto` — jax ≥0.5
+//! emits protos with 64-bit instruction ids which xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example/README).
+//!
+//! Python runs only at build time; this module is the entire inference
+//! dependency on the artifacts.
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// A compiled-executable cache over one PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    hlo_dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a runtime rooted at `<artifacts>/hlo`.
+    pub fn new() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            cache: Mutex::new(HashMap::new()),
+            hlo_dir: crate::artifacts_dir().join("hlo"),
+        })
+    }
+
+    pub fn with_dir(dir: &Path) -> Result<Runtime> {
+        let mut rt = Runtime::new()?;
+        rt.hlo_dir = dir.to_path_buf();
+        Ok(rt)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Names of available HLO artifacts (without extension).
+    pub fn list_artifacts(&self) -> Vec<String> {
+        let mut v = Vec::new();
+        if let Ok(rd) = std::fs::read_dir(&self.hlo_dir) {
+            for e in rd.flatten() {
+                if let Some(name) = e.file_name().to_str() {
+                    if let Some(stem) = name.strip_suffix(".hlo.txt") {
+                        v.push(stem.to_string());
+                    }
+                }
+            }
+        }
+        v.sort();
+        v
+    }
+
+    /// Load + compile an artifact by name (cached).
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(exe) = cache.get(name) {
+                return Ok(exe.clone());
+            }
+        }
+        let path = self.hlo_dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact on f32 inputs, returning all f32 outputs.
+    /// The AOT path lowers with `return_tuple=True`, so the single result
+    /// literal is a tuple.
+    pub fn run_f32(&self, name: &str, inputs: &[F32Input]) -> Result<Vec<Vec<f32>>> {
+        let exe = self.load(name)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|inp| {
+                let lit = xla::Literal::vec1(&inp.data);
+                let dims: Vec<i64> = inp.dims.iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))
+            })
+            .collect::<Result<_>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let mut out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let tuple = out.decompose_tuple().map_err(|e| anyhow!("decompose: {e:?}"))?;
+        tuple
+            .into_iter()
+            .map(|lit| {
+                // outputs may be f32 or i32; convert i32 to f32 for a
+                // uniform return type
+                lit.to_vec::<f32>().or_else(|_| {
+                    lit.to_vec::<i32>()
+                        .map(|v| v.into_iter().map(|x| x as f32).collect())
+                })
+                .map_err(|e| anyhow!("to_vec: {e:?}"))
+            })
+            .collect()
+    }
+
+    /// Execute an artifact whose inputs are i32 tensors.
+    pub fn run_i32(&self, name: &str, inputs: &[I32Input]) -> Result<Vec<Vec<i32>>> {
+        let exe = self.load(name)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|inp| {
+                let lit = xla::Literal::vec1(&inp.data);
+                let dims: Vec<i64> = inp.dims.iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))
+            })
+            .collect::<Result<_>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let mut out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let tuple = out.decompose_tuple().map_err(|e| anyhow!("decompose: {e:?}"))?;
+        tuple
+            .into_iter()
+            .map(|lit| lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec: {e:?}")))
+            .collect()
+    }
+}
+
+/// A shaped f32 input.
+pub struct F32Input {
+    pub data: Vec<f32>,
+    pub dims: Vec<usize>,
+}
+
+impl F32Input {
+    pub fn new(data: Vec<f32>, dims: &[usize]) -> F32Input {
+        assert_eq!(data.len(), dims.iter().product::<usize>());
+        F32Input { data, dims: dims.to_vec() }
+    }
+}
+
+/// A shaped i32 input.
+pub struct I32Input {
+    pub data: Vec<i32>,
+    pub dims: Vec<usize>,
+}
+
+impl I32Input {
+    pub fn new(data: Vec<i32>, dims: &[usize]) -> I32Input {
+        assert_eq!(data.len(), dims.iter().product::<usize>());
+        I32Input { data, dims: dims.to_vec() }
+    }
+}
+
+/// A manifest describing the AOT artifacts (written by aot.py).
+pub fn load_manifest() -> Result<crate::util::json::Json> {
+    let path = crate::artifacts_dir().join("hlo").join("manifest.json");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    crate::util::json::Json::parse(&text).map_err(|e| anyhow!("bad hlo manifest: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Runtime tests that need artifacts live in rust/tests/ and skip
+    // gracefully when `make artifacts` has not run. Here we only test
+    // the input containers.
+
+    #[test]
+    fn input_shapes_validated() {
+        let i = F32Input::new(vec![1.0; 6], &[2, 3]);
+        assert_eq!(i.dims, vec![2, 3]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn input_shape_mismatch_panics() {
+        F32Input::new(vec![1.0; 5], &[2, 3]);
+    }
+}

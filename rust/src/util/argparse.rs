@@ -1,0 +1,157 @@
+//! Small subcommand-style CLI parser (no `clap` in the offline registry).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional
+//! arguments, with typed accessors, defaults and generated usage text.
+
+use std::collections::BTreeMap;
+
+/// Declarative option spec used for usage text.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed command-line arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (excluding the binary name). The first token not
+    /// starting with `-` becomes the subcommand.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if let Some(eq) = rest.find('=') {
+                    out.options.insert(rest[..eq].to_string(), rest[eq + 1..].to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let val = iter.next().unwrap();
+                    out.options.insert(rest.to_string(), val);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else if out.command.is_none() && out.positional.is_empty() {
+                out.command = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+            || self.options.get(name).map(|v| v == "true" || v == "1").unwrap_or(false)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u32_or(&self, name: &str, default: u32) -> u32 {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    /// Comma-separated usize list, e.g. `--tiles 64,128`.
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(name) {
+            Some(s) => s.split(',').filter_map(|t| t.trim().parse().ok()).collect(),
+            None => default.to_vec(),
+        }
+    }
+
+    /// Comma-separated string list.
+    pub fn str_list_or(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.get(name) {
+            Some(s) => s.split(',').map(|t| t.trim().to_string()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+/// Render usage text for a command table.
+pub fn usage(binary: &str, about: &str, commands: &[(&str, &str)], opts: &[OptSpec]) -> String {
+    let mut s = format!("{binary} — {about}\n\nUSAGE:\n  {binary} <COMMAND> [OPTIONS]\n\nCOMMANDS:\n");
+    for (name, help) in commands {
+        s.push_str(&format!("  {name:<18} {help}\n"));
+    }
+    if !opts.is_empty() {
+        s.push_str("\nOPTIONS:\n");
+        for o in opts {
+            let d = o.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+            s.push_str(&format!("  --{:<16} {}{}\n", o.name, o.help, d));
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["quantize", "--model", "pico-160k", "--bits=4", "--verbose"]);
+        assert_eq!(a.command.as_deref(), Some("quantize"));
+        assert_eq!(a.get("model"), Some("pico-160k"));
+        assert_eq!(a.usize_or("bits", 8), 4);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse(&["bench", "--tiles", "64,128", "--models", "a, b,c"]);
+        assert_eq!(a.usize_list_or("tiles", &[32]), vec![64, 128]);
+        assert_eq!(a.str_list_or("models", &[]), vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&["eval"]);
+        assert_eq!(a.str_or("model", "x"), "x");
+        assert_eq!(a.f64_or("lr", 0.1), 0.1);
+        assert_eq!(a.usize_list_or("tiles", &[32, 64]), vec![32, 64]);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["run", "--fast"]);
+        assert!(a.flag("fast"));
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse(&["audit", "file1", "file2", "--deep"]);
+        assert_eq!(a.positional, vec!["file1", "file2"]);
+        assert!(a.flag("deep"));
+    }
+}

@@ -1,0 +1,110 @@
+//! Self-contained substrates: PRNG, JSON, CLI parsing, property testing,
+//! timing and progress reporting. The build environment is offline with
+//! only the `xla` crate's dependency closure available, so these small
+//! utilities replace `rand`, `serde_json`, `clap` and `proptest`.
+
+pub mod argparse;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+use std::time::Instant;
+
+/// Simple scope timer for coarse profiling.
+pub struct Timer {
+    start: Instant,
+    label: String,
+}
+
+impl Timer {
+    pub fn start(label: &str) -> Self {
+        Self { start: Instant::now(), label: label.to_string() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn report(&self) -> String {
+        format!("[{}] {:.3}s", self.label, self.elapsed_s())
+    }
+}
+
+/// Human-readable duration.
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 1e-3 {
+        format!("{:.1}µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.1}ms", secs * 1e3)
+    } else if secs < 120.0 {
+        format!("{secs:.2}s")
+    } else {
+        format!("{:.1}m", secs / 60.0)
+    }
+}
+
+/// Fixed-width markdown-ish table printer used by the bench harnesses so
+/// the output matches the row/column layout of the paper's tables.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(r[c].len());
+            }
+        }
+        let line = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for (c, cell) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<w$} |", cell, w = widths[c]));
+            }
+            s.push('\n');
+            s
+        };
+        let mut out = line(&self.headers);
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        out.push_str(&line(&sep));
+        for r in &self.rows {
+            out.push_str(&line(r));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["model", "ppl"]);
+        t.row(&["pico-70k".into(), "61.7".into()]);
+        t.row(&["x".into(), "4".into()]);
+        let s = t.render();
+        assert!(s.contains("| model    | ppl  |"));
+        assert!(s.lines().count() == 4);
+    }
+
+    #[test]
+    fn duration_formats() {
+        assert!(fmt_duration(0.0000005).ends_with("µs"));
+        assert!(fmt_duration(0.05).ends_with("ms"));
+        assert!(fmt_duration(5.0).ends_with("s"));
+        assert!(fmt_duration(300.0).ends_with("m"));
+    }
+}

