@@ -1,12 +1,17 @@
 //! Micro-benchmarks of the hot paths (feeds EXPERIMENTS.md §Perf):
 //! - f64 GEMM (calibration / gram construction)
-//! - integer quantized-linear forward: exact vs simulated datapaths
+//! - integer quantized-linear forward: exact vs fused-kernel datapaths
+//! - fused multi-stage qgemm vs the scalar per-MAC simulator (the
+//!   acceptance bench: the kernel must beat the simulator-backed path
+//!   on a ≥1024-deep multi-stage matmul)
 //! - GPFQ / GPFQ* / OPTQ per-layer quantization throughput
 //! - transformer forward / perplexity evaluation throughput
 //! - PJRT qmatmul kernel dispatch (when artifacts exist)
 
+use axe::accum::simulator::dot_multistage;
+use axe::accum::AccumSpec;
 use axe::bench_support::{bench, throughput};
-use axe::linalg::Mat;
+use axe::linalg::{qgemm_multistage, Mat};
 use axe::model::{Datapath, QuantLinear};
 use axe::quant::{
     gpfq_quantize, gpfq_quantize_grams, optq_quantize, ActQuantizer, GpfqParams, OptqParams,
@@ -54,6 +59,40 @@ fn main() {
         ql_sim.forward_row(&x_row, &mut y, &mut scratch);
     });
     println!("    -> {:.1} M MAC/s", (k * c) as f64 / s.median / 1e6);
+
+    // ---- fused multi-stage qgemm vs the scalar per-MAC simulator.
+    // 2048-deep contraction (≥1024 per the acceptance bar), W4A8-ish
+    // codes, 64x16b tiles with the Eq. 22 outer width.
+    let (bq, kq, cq, tile_q) = (16usize, 2048usize, 256usize, 64usize);
+    let inner = AccumSpec::wraparound(16);
+    let outer = AccumSpec::wraparound(axe::quant::outer_bits(16, kq, tile_q));
+    let xq: Vec<i64> = (0..bq * kq).map(|_| rng.int_in(0, 255)).collect();
+    let wq_codes: Vec<i32> = (0..cq * kq).map(|_| rng.int_in(-7, 7) as i32).collect();
+    let mut out_q = vec![0i64; bq * cq];
+    let macs = (bq * kq * cq) as f64;
+    let s_fused = bench("qgemm fused 16x2048x256 (64x16b)", 2, 10, || {
+        std::hint::black_box(qgemm_multistage(
+            &xq, bq, &wq_codes, cq, kq, tile_q, inner, outer, &mut out_q,
+        ));
+    });
+    println!("    -> {:.1} M MAC/s", macs / s_fused.median / 1e6);
+    let w64: Vec<i64> = wq_codes.iter().map(|&v| v as i64).collect();
+    let s_sim = bench("scalar simulator 16x2048x256 (64x16b)", 1, 3, || {
+        let mut total = 0i64;
+        for r in 0..bq {
+            let xr = &xq[r * kq..(r + 1) * kq];
+            for ch in 0..cq {
+                let wr = &w64[ch * kq..(ch + 1) * kq];
+                total = total.wrapping_add(dot_multistage(xr, wr, tile_q, inner, outer).value);
+            }
+        }
+        std::hint::black_box(total);
+    });
+    println!(
+        "    -> {:.1} M MAC/s ({:.1}x speedup for the fused kernel)",
+        macs / s_sim.median / 1e6,
+        s_sim.median / s_fused.median
+    );
 
     // ---- PTQ algorithm throughput (one layer, K=C=256, D=256)
     let (k2, c2, d2) = (256usize, 256usize, 256usize);

@@ -1,24 +1,62 @@
 //! Bench: regenerate the paper's Table 1 — multi-stage accumulation on
 //! the LM ladder (W4A8, 16-bit inner accumulators, T ∈ {64, 128}),
 //! for both the memory-efficient GPFQ* and OPTQ, against the
-//! unconstrained base and the float model.
+//! unconstrained base and the float model — plus an end-to-end timing of
+//! the faithful (fused-kernel) integer datapath.
 //!
-//! AXE_BENCH_FULL=1 includes the larger ladder rungs.
+//! Runs against the trained zoo when `make artifacts` has been built;
+//! otherwise falls back to one synthetic pico model so the bench always
+//! produces numbers. AXE_BENCH_FULL=1 includes the larger ladder rungs.
 
+use axe::bench_support::time_once;
 use axe::coordinator::experiments::run_lm_config;
-use axe::coordinator::PipelineConfig;
+use axe::coordinator::{quantize_transformer, DatapathMode, PipelineConfig};
 use axe::eval::{load_corpus_split_or_synth, perplexity};
-use axe::model::{load_named, Model};
+use axe::model::{
+    load_named, random_transformer, Activation, Model, Transformer, TransformerConfig,
+};
 use axe::quant::{AccumTarget, Algorithm, Method};
 use axe::util::Table;
 
+/// The trained zoo, or one synthetic stand-in model when artifacts are
+/// absent (keeps the bench runnable on a fresh checkout).
+fn zoo_or_synth(names: &[&str]) -> Vec<(String, Transformer)> {
+    let mut out = Vec::new();
+    for name in names {
+        match load_named(name) {
+            Ok(Model::Lm(m)) => out.push((name.to_string(), m)),
+            _ => eprintln!("[multistage_llm] {name} missing — run `make artifacts`"),
+        }
+    }
+    if out.is_empty() {
+        eprintln!(
+            "[multistage_llm] zoo missing — benching a synthetic pico model \
+             (run `make artifacts` for the real ladder)"
+        );
+        let cfg = TransformerConfig {
+            name: "pico-synth".into(),
+            vocab: 64,
+            d_model: 56,
+            n_layers: 4,
+            n_heads: 7,
+            d_ff: 224,
+            max_seq: 64,
+            act: Activation::Gelu,
+            parallel_residual: true,
+        };
+        out.push(("pico-synth".to_string(), random_transformer(cfg, 1)));
+    }
+    out
+}
+
 fn main() -> anyhow::Result<()> {
     let full = std::env::var("AXE_BENCH_FULL").is_ok();
-    let models: Vec<&str> = if full {
+    let model_names: Vec<&str> = if full {
         vec!["pico-70k", "pico-160k", "pico-410k", "pico-1m", "pico-2m"]
     } else {
         vec!["pico-70k", "pico-160k", "pico-410k"]
     };
+    let zoo = zoo_or_synth(&model_names);
     // (tile, P_I) grid: the paper's 64x16b/128x16b (free at our widths,
     // like their 64x16b at Pythia widths) plus the binding 14-bit tier
     // that exposes the tile-size trade at this zoo's K.
@@ -29,20 +67,16 @@ fn main() -> anyhow::Result<()> {
         let mut table = Table::new(&[
             "model", "params", "K_max", "float", "base", "64x16b", "128x16b", "64x14b", "128x14b",
         ]);
-        for name in &models {
-            let Ok(Model::Lm(base)) = load_named(name) else {
-                eprintln!("[multistage_llm] {name} missing — run `make artifacts`");
-                continue;
-            };
+        for (name, base) in &zoo {
             let k_max = base.cfg.d_ff;
             let seq = base.cfg.max_seq;
             let train = load_corpus_split_or_synth("train", base.cfg.vocab);
             let val = load_corpus_split_or_synth("val", base.cfg.vocab);
             let calib: Vec<&[u16]> = train.chunks_exact(seq).take(10).collect();
-            let float_ppl = perplexity(&base, &val, seq, 16).ppl;
+            let float_ppl = perplexity(base, &val, seq, 16).ppl;
             let base_cfg = PipelineConfig::new(algo, Method::Naive, 4, 8);
             let t0 = std::time::Instant::now();
-            let base_pt = run_lm_config(&base, &calib, &val, seq, 16, &base_cfg)?;
+            let base_pt = run_lm_config(base, &calib, &val, seq, 16, &base_cfg)?;
             let mut row = vec![
                 name.to_string(),
                 format!("{}", base.cfg.param_count()),
@@ -53,7 +87,7 @@ fn main() -> anyhow::Result<()> {
             for &(t, p_inner) in &configs {
                 let mut cfg = PipelineConfig::new(algo, Method::Axe, 4, 8);
                 cfg.target = AccumTarget::MultiStage { p_inner, tile: t };
-                let pt = run_lm_config(&base, &calib, &val, seq, 16, &cfg)?;
+                let pt = run_lm_config(base, &calib, &val, seq, 16, &cfg)?;
                 row.push(format!("{:.1}", pt.metric));
             }
             table.row(&row);
@@ -61,6 +95,30 @@ fn main() -> anyhow::Result<()> {
         }
         println!("{}", table.render());
     }
+
+    // ---- faithful-datapath serving throughput. DatapathMode::Faithful
+    // now executes on the fused qgemm kernel (bit-for-bit equal to the
+    // scalar simulator, which remains the audit oracle) — this times the
+    // end-to-end integer-datapath eval the serve path runs on.
+    let (name, base) = &zoo[0];
+    let seq = base.cfg.max_seq;
+    let train = load_corpus_split_or_synth("train", base.cfg.vocab);
+    let val = load_corpus_split_or_synth("val", base.cfg.vocab);
+    let calib: Vec<&[u16]> = train.chunks_exact(seq).take(8).collect();
+    let mut cfg = PipelineConfig::new(Algorithm::Optq, Method::Axe, 4, 8);
+    cfg.target = AccumTarget::MultiStage { p_inner: 16, tile: 64 };
+    cfg.datapath = DatapathMode::Faithful;
+    let mut qmodel = base.clone();
+    quantize_transformer(&mut qmodel, &calib, &cfg)?;
+    let (report, secs) = time_once(|| perplexity(&qmodel, &val, seq, 16));
+    println!(
+        "\nfaithful-datapath eval on {name} (fused 64x16b kernel): \
+         {:.0} tok/s, PPL {:.1}, overflow events {}",
+        report.tokens as f64 / secs,
+        report.ppl,
+        report.overflows
+    );
+
     println!(
         "Expected shape: constrained columns approach `base` as width grows\n\
          (T fixed while K grows — the A2Q scaling hypothesis, paper §4.2)."

@@ -174,6 +174,12 @@ pub fn serve(model: &Transformer, queue: &ServeQueue, workers: usize, max_batch:
 }
 
 /// Greedy generation clipped to the model's context window.
+///
+/// The prompt goes through [`Transformer::prefill`], which runs every
+/// linear batched over the whole window — quantized layers execute one
+/// fused qgemm kernel call per layer instead of one simulated dot
+/// product per (token, channel) pair. Decode steps then reuse the KV
+/// cache.
 fn generate_within_window(model: &Transformer, req: &Request) -> Vec<u16> {
     let max_seq = model.cfg.max_seq;
     let prompt: Vec<u16> = if req.prompt.len() >= max_seq {

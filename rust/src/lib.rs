@@ -9,17 +9,26 @@
 //! Layer map:
 //! - [`quant`] — quantizers, bounds, ℓ1 machinery, GPFQ/OPTQ ± AXE,
 //!   EP-init and naïve baselines.
-//! - [`accum`] — bit-accurate P-bit MAC simulation + overflow audit.
+//! - [`accum`] — bit-accurate P-bit MAC simulation + overflow audit
+//!   (the oracle the serving kernel is verified against).
+//! - [`linalg`] — dense f64 GEMM/Cholesky/sqrtm plus the fused
+//!   multi-stage integer GEMM kernel ([`linalg::qgemm`]) that executes
+//!   the tiled P_I/P_O datapath at matmul speed.
 //! - [`model`] — inference substrate (transformers, MLPs, quantized
-//!   linear layers running on the simulated datapath).
+//!   linear layers running on the fused integer datapath).
 //! - [`calib`] — calibration capture, SmoothQuant-style equalization,
 //!   bias correction.
-//! - [`coordinator`] — the layer-by-layer PTQ pipeline and experiment
-//!   harness.
+//! - [`coordinator`] — the layer-by-layer PTQ pipeline (layer-parallel
+//!   within each block) and experiment harness.
 //! - [`runtime`] — PJRT (XLA) execution of the AOT-compiled JAX/Pallas
-//!   artifacts.
+//!   artifacts; gated behind the off-by-default `pjrt` feature (the
+//!   `xla` bindings are unavailable offline) with a stub fallback.
 //! - [`eval`] — perplexity / accuracy evaluation and dataset readers.
-//! - [`linalg`], [`util`], [`bench_support`] — self-contained substrates.
+//! - [`util`], [`bench_support`] — self-contained substrates.
+
+// Index loops mirror the paper's equations throughout the numeric code;
+// iterator rewrites would obscure the math without changing codegen.
+#![allow(clippy::needless_range_loop)]
 
 pub mod accum;
 pub mod bench_support;

@@ -5,15 +5,28 @@
 //! the dense [`Mat`] type.
 
 use super::matrix::Mat;
-use thiserror::Error;
+use std::fmt;
 
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum CholeskyError {
-    #[error("matrix is not positive definite at pivot {0} (value {1})")]
     NotPositiveDefinite(usize, f64),
-    #[error("matrix must be square, got {0}x{1}")]
     NotSquare(usize, usize),
 }
+
+impl fmt::Display for CholeskyError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CholeskyError::NotPositiveDefinite(pivot, value) => {
+                write!(f, "matrix is not positive definite at pivot {pivot} (value {value})")
+            }
+            CholeskyError::NotSquare(rows, cols) => {
+                write!(f, "matrix must be square, got {rows}x{cols}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CholeskyError {}
 
 /// Lower-triangular Cholesky factor L with A = L Lᵀ.
 pub fn cholesky_lower(a: &Mat) -> Result<Mat, CholeskyError> {

@@ -294,13 +294,13 @@ fn matmul_band(a: &[f64], bt: &[f64], out: &mut [f64], row_lo: usize, row_hi: us
 
 /// Number of worker threads for GEMM bands.
 pub fn num_threads() -> usize {
-    static N: once_cell::sync::Lazy<usize> = once_cell::sync::Lazy::new(|| {
+    static N: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *N.get_or_init(|| {
         std::env::var("AXE_THREADS")
             .ok()
             .and_then(|v| v.parse().ok())
             .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4))
-    });
-    *N
+    })
 }
 
 #[cfg(test)]

@@ -8,10 +8,12 @@
 
 mod cholesky;
 mod matrix;
+pub mod qgemm;
 mod sqrtm;
 
 pub use cholesky::{cholesky_lower, solve_lower, solve_lower_transpose, spd_inverse, CholeskyError};
 pub use matrix::{dot, num_threads, Mat};
+pub use qgemm::{dot_multistage_fused, qgemm_exact, qgemm_multistage};
 pub use sqrtm::{sqrtm_psd, SqrtmError};
 
 /// Frobenius norm of the difference of two matrices (test helper).

@@ -1,0 +1,395 @@
+//! Fused multi-stage integer GEMM — the serving datapath.
+//!
+//! The bit-accurate per-MAC simulator in [`crate::accum::simulator`] is
+//! the *oracle*: it narrows a register after every addition, which makes
+//! it ~two orders of magnitude slower than a plain integer matmul. The
+//! paper's whole point (Eq. 22 + the A2Q line of work) is that once the
+//! weights carry a *static* overflow-avoidance guarantee, the tiled
+//! P_I-bit inner / P_O-bit outer datapath can be executed as an ordinary
+//! blocked integer GEMM — no per-step narrowing can ever trigger.
+//!
+//! This kernel exploits exactly that, while staying **bit-for-bit equal
+//! to [`dot_multistage`]** for *any* input (including unsafe codes):
+//!
+//! - Per (row, channel, tile): accumulate the tile dot product in plain
+//!   i64 while tracking Σ|x_i·w_i|. Any prefix of the tile sum is
+//!   bounded by that ℓ1 mass, so if it fits the inner register's
+//!   positive capacity, **no per-MAC narrowing could have fired** — in
+//!   any overflow mode — and the plain sum is exactly what the
+//!   simulator would produce, with zero overflow events.
+//! - Otherwise (rare: the guarantee is absent or violated) the tile
+//!   falls back to the scalar per-MAC simulator, reproducing wraparound
+//!   or saturation trajectories and overflow counts exactly.
+//! - Tile partials feed the outer register through the same
+//!   [`AccumSpec::narrow`] step the simulator uses.
+//!
+//! Channels are fanned out across threads with the band-parallel
+//! `std::thread::scope` idiom proven in [`super::matrix`]; each band
+//! writes a disjoint set of output columns.
+//!
+//! Precondition (documented, debug-asserted): products and per-tile
+//! ℓ1 masses must fit in i64 — true for any real quantized-code
+//! alphabet (|w| < 2^31, |x| < 2^31, tile · |x·w| < 2^63).
+
+use crate::accum::simulator::{dot_monolithic, AccumSpec, OverflowMode};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Exact integer GEMM: `out[r][ch] = Σ_i x[r][i] · w[ch][i]`.
+///
+/// * `x` — `rows`×`k` activation codes, row-major.
+/// * `w` — `c`×`k` weight codes, row-major (`[out, in]`, the
+///   [`crate::model::QuantLinear`] layout).
+/// * `out` — `rows`×`c`, row-major.
+///
+/// This is the `Datapath::Exact` kernel: valid whenever overflow is
+/// impossible (wide registers or an audited guarantee).
+pub fn qgemm_exact(x: &[i64], rows: usize, w: &[i32], c: usize, k: usize, out: &mut [i64]) {
+    assert_eq!(x.len(), rows * k, "x must be rows*k");
+    assert_eq!(w.len(), c * k, "w must be c*k");
+    assert_eq!(out.len(), rows * c, "out must be rows*c");
+    run_channel_bands(c, rows * c * k, out, |lo, hi, band| {
+        for r in 0..rows {
+            let xrow = &x[r * k..(r + 1) * k];
+            let orow = band.row(r);
+            for ch in lo..hi {
+                orow[ch - lo] = dot_codes(xrow, &w[ch * k..(ch + 1) * k]);
+            }
+        }
+    });
+}
+
+/// Fused multi-stage integer GEMM, bit-for-bit equal to evaluating
+/// [`crate::accum::simulator::dot_multistage`] at every `(row, channel)`
+/// pair. Returns the total number of overflow events (0 whenever the
+/// codes honour their accumulator guarantee).
+///
+/// Layouts match [`qgemm_exact`]; `tile`, `inner` and `outer` match the
+/// simulator's multi-stage datapath (Fig. 2b / Eq. 22).
+#[allow(clippy::too_many_arguments)]
+pub fn qgemm_multistage(
+    x: &[i64],
+    rows: usize,
+    w: &[i32],
+    c: usize,
+    k: usize,
+    tile: usize,
+    inner: AccumSpec,
+    outer: AccumSpec,
+    out: &mut [i64],
+) -> u64 {
+    assert_eq!(x.len(), rows * k, "x must be rows*k");
+    assert_eq!(w.len(), c * k, "w must be c*k");
+    assert_eq!(out.len(), rows * c, "out must be rows*c");
+    assert!(tile >= 1, "tile must be >= 1");
+    let overflow_total = AtomicU64::new(0);
+    run_channel_bands(c, rows * c * k, out, |lo, hi, band| {
+        let mut local_overflows = 0u64;
+        for r in 0..rows {
+            let xrow = &x[r * k..(r + 1) * k];
+            let orow = band.row(r);
+            for ch in lo..hi {
+                let (value, overflows) =
+                    dot_multistage_fused(xrow, &w[ch * k..(ch + 1) * k], tile, inner, outer);
+                orow[ch - lo] = value;
+                local_overflows += overflows as u64;
+            }
+        }
+        if local_overflows > 0 {
+            overflow_total.fetch_add(local_overflows, Ordering::Relaxed);
+        }
+    });
+    overflow_total.into_inner()
+}
+
+/// One fused multi-stage dot product (see module docs for the fast-path
+/// argument). Public so audits and tests can target single vectors.
+pub fn dot_multistage_fused(
+    x: &[i64],
+    w: &[i32],
+    tile: usize,
+    inner: AccumSpec,
+    outer: AccumSpec,
+) -> (i64, usize) {
+    debug_assert_eq!(x.len(), w.len());
+    assert!(tile >= 1, "tile must be >= 1");
+    let inner_cap = inner.max() as u64; // bits >= 2 ⇒ max() >= 1
+    let mut outer_acc: i64 = 0;
+    let mut overflows = 0usize;
+    for (xc, wc) in x.chunks(tile).zip(w.chunks(tile)) {
+        let mut acc: i64 = 0;
+        let mut l1: u64 = 0;
+        for (xv, wv) in xc.iter().zip(wc.iter()) {
+            let p = xv * (*wv as i64);
+            acc = acc.wrapping_add(p);
+            l1 = l1.saturating_add(p.unsigned_abs());
+        }
+        let part = if l1 <= inner_cap {
+            // Every prefix of the tile sum is within ±l1 ⊆ the register
+            // range, so the per-MAC simulator could never have narrowed:
+            // the plain sum IS the simulated value, with zero events.
+            acc
+        } else {
+            // Slow path: replay the tile through the per-MAC oracle so
+            // wrap/saturate trajectories and event counts match exactly.
+            let w64: Vec<i64> = wc.iter().map(|&v| v as i64).collect();
+            let mono = dot_monolithic(xc, &w64, inner);
+            overflows += mono.overflows;
+            mono.value
+        };
+        // Outer accumulation: identical to the simulator's per-tile step.
+        let wide = outer_acc as i128 + part as i128;
+        let (narrowed, ov) = outer.narrow(wide);
+        outer_acc = if outer.mode == OverflowMode::Checked { wide as i64 } else { narrowed };
+        overflows += ov as usize;
+    }
+    (outer_acc, overflows)
+}
+
+/// Plain i64 code dot product (the vectorizable hot loop).
+#[inline]
+fn dot_codes(x: &[i64], w: &[i32]) -> i64 {
+    debug_assert_eq!(x.len(), w.len());
+    let mut acc: i64 = 0;
+    for (xv, wv) in x.iter().zip(w.iter()) {
+        acc += xv * (*wv as i64);
+    }
+    acc
+}
+
+/// Mutable view of one thread's channel band over a `rows`×`c` output
+/// buffer: [`ChannelBand::row`] hands out the sub-slice
+/// `out[r*c + lo .. r*c + hi]` for one row at a time. References are
+/// only ever materialized over memory inside the band, and bands
+/// partition `0..c`, so concurrent workers never hold overlapping
+/// `&mut` — unlike a shared full-buffer view, this stays within Rust's
+/// aliasing rules.
+struct ChannelBand {
+    /// `*mut i64` laundered through usize so the band is Send.
+    base: usize,
+    c: usize,
+    lo: usize,
+    hi: usize,
+}
+
+impl ChannelBand {
+    /// This band's writable slice of row `r` (length `hi - lo`; index
+    /// by `ch - lo`).
+    #[inline]
+    fn row(&mut self, r: usize) -> &mut [i64] {
+        // SAFETY: [r*c+lo, r*c+hi) lies inside the output buffer the
+        // base pointer was derived from, and is owned exclusively by
+        // this band for the duration of run_channel_bands.
+        unsafe {
+            std::slice::from_raw_parts_mut(
+                (self.base as *mut i64).add(r * self.c + self.lo),
+                self.hi - self.lo,
+            )
+        }
+    }
+}
+
+/// Split channels `0..c` into per-thread bands and run `body(lo, hi,
+/// band)` on each. Small problems run inline to keep decode latency
+/// flat.
+fn run_channel_bands<F>(c: usize, work: usize, out: &mut [i64], body: F)
+where
+    F: Fn(usize, usize, &mut ChannelBand) + Sync,
+{
+    let base = out.as_mut_ptr() as usize;
+    let nthreads = crate::linalg::num_threads().min(c.max(1));
+    if nthreads <= 1 || work < 64 * 64 * 64 {
+        body(0, c, &mut ChannelBand { base, c, lo: 0, hi: c });
+        return;
+    }
+    let band = c.div_ceil(nthreads);
+    let body_ref = &body;
+    std::thread::scope(|scope| {
+        for t in 0..nthreads {
+            let lo = t * band;
+            let hi = ((t + 1) * band).min(c);
+            if lo >= hi {
+                continue;
+            }
+            scope.spawn(move || {
+                body_ref(lo, hi, &mut ChannelBand { base, c, lo, hi });
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accum::simulator::{dot_exact, dot_multistage};
+    use crate::util::prop::quick;
+    use crate::util::rng::Rng;
+
+    #[allow(clippy::too_many_arguments)]
+    fn simulate_gemm(
+        x: &[i64],
+        rows: usize,
+        w: &[i32],
+        c: usize,
+        k: usize,
+        tile: usize,
+        inner: AccumSpec,
+        outer: AccumSpec,
+    ) -> (Vec<i64>, u64) {
+        let mut out = vec![0i64; rows * c];
+        let mut overflows = 0u64;
+        for r in 0..rows {
+            let xrow = &x[r * k..(r + 1) * k];
+            for ch in 0..c {
+                let w64: Vec<i64> = w[ch * k..(ch + 1) * k].iter().map(|&v| v as i64).collect();
+                let o = dot_multistage(xrow, &w64, tile, inner, outer);
+                out[r * c + ch] = o.value;
+                overflows += o.overflows as u64;
+            }
+        }
+        (out, overflows)
+    }
+
+    #[test]
+    fn exact_kernel_matches_dot_exact() {
+        let mut rng = Rng::new(900);
+        for _ in 0..20 {
+            let rows = rng.int_in(1, 5) as usize;
+            let k = rng.int_in(1, 80) as usize;
+            let c = rng.int_in(1, 9) as usize;
+            let x: Vec<i64> = (0..rows * k).map(|_| rng.int_in(0, 255)).collect();
+            let w: Vec<i32> = (0..c * k).map(|_| rng.int_in(-127, 127) as i32).collect();
+            let mut out = vec![0i64; rows * c];
+            qgemm_exact(&x, rows, &w, c, k, &mut out);
+            for r in 0..rows {
+                for ch in 0..c {
+                    let w64: Vec<i64> =
+                        w[ch * k..(ch + 1) * k].iter().map(|&v| v as i64).collect();
+                    assert_eq!(out[r * c + ch], dot_exact(&x[r * k..(r + 1) * k], &w64));
+                }
+            }
+        }
+    }
+
+    /// THE parity property: the fused kernel equals the per-MAC
+    /// simulator bit-for-bit — values AND overflow-event totals — over
+    /// random codes, shapes, tile sizes, register widths and overflow
+    /// modes (saturating and wrapping), safe and unsafe alike.
+    #[test]
+    fn prop_fused_kernel_matches_simulator() {
+        quick(
+            "qgemm_matches_dot_multistage",
+            |rng: &mut Rng| {
+                let rows = rng.int_in(1, 4) as usize;
+                let k = rng.int_in(1, 96) as usize;
+                let c = rng.int_in(1, 8) as usize;
+                let tile = rng.int_in(1, 48) as usize;
+                let p_inner = rng.int_in(6, 20) as u32;
+                let p_outer = rng.int_in(6, 24) as u32;
+                let n = rng.int_in(2, 8) as u32;
+                let mode = if rng.chance(0.5) {
+                    OverflowMode::Wraparound
+                } else {
+                    OverflowMode::Saturate
+                };
+                let nu = (1i64 << n) - 1;
+                let x: Vec<i64> = (0..rows * k).map(|_| rng.int_in(0, nu)).collect();
+                let w: Vec<i32> = (0..c * k).map(|_| rng.int_in(-20, 20) as i32).collect();
+                (rows, k, c, tile, p_inner, p_outer, mode, x, w)
+            },
+            |(rows, k, c, tile, p_inner, p_outer, mode, x, w)| {
+                let inner = AccumSpec::new(*p_inner, *mode);
+                let outer = AccumSpec::new(*p_outer, *mode);
+                let mut out = vec![0i64; rows * c];
+                let got_ovf =
+                    qgemm_multistage(x, *rows, w, *c, *k, *tile, inner, outer, &mut out);
+                let (want, want_ovf) =
+                    simulate_gemm(x, *rows, w, *c, *k, *tile, inner, outer);
+                if out != want {
+                    return Err("kernel values diverge from the simulator".into());
+                }
+                if got_ovf != want_ovf {
+                    return Err(format!(
+                        "overflow counts diverge: kernel {got_ovf} vs simulator {want_ovf}"
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn checked_mode_keeps_exact_values() {
+        let mut rng = Rng::new(901);
+        let (rows, k, c, tile) = (2usize, 64usize, 4usize, 16usize);
+        let inner = AccumSpec::checked(10); // deliberately too narrow
+        let outer = AccumSpec::checked(12);
+        let x: Vec<i64> = (0..rows * k).map(|_| rng.int_in(0, 255)).collect();
+        let w: Vec<i32> = (0..c * k).map(|_| rng.int_in(-7, 7) as i32).collect();
+        let mut out = vec![0i64; rows * c];
+        let ovf = qgemm_multistage(&x, rows, &w, c, k, tile, inner, outer, &mut out);
+        let (want, want_ovf) = simulate_gemm(&x, rows, &w, c, k, tile, inner, outer);
+        assert_eq!(out, want);
+        assert_eq!(ovf, want_ovf);
+        assert!(ovf > 0, "narrow checked registers must flag events");
+        // checked mode preserves exact arithmetic
+        for r in 0..rows {
+            for ch in 0..c {
+                let w64: Vec<i64> = w[ch * k..(ch + 1) * k].iter().map(|&v| v as i64).collect();
+                assert_eq!(out[r * c + ch], dot_exact(&x[r * k..(r + 1) * k], &w64));
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_band_path_matches_simulator() {
+        // rows*c*k above the inline threshold so the scoped-thread bands
+        // actually run.
+        let mut rng = Rng::new(902);
+        let (rows, k, c, tile) = (4usize, 1024usize, 128usize, 64usize);
+        let inner = AccumSpec::wraparound(16);
+        let outer = AccumSpec::wraparound(crate::quant::bounds::outer_bits(16, k, tile));
+        let x: Vec<i64> = (0..rows * k).map(|_| rng.int_in(0, 255)).collect();
+        let w: Vec<i32> = (0..c * k).map(|_| rng.int_in(-2, 2) as i32).collect();
+        let mut out = vec![0i64; rows * c];
+        let ovf = qgemm_multistage(&x, rows, &w, c, k, tile, inner, outer, &mut out);
+        let (want, want_ovf) = simulate_gemm(&x, rows, &w, c, k, tile, inner, outer);
+        assert_eq!(out, want);
+        assert_eq!(ovf, want_ovf);
+    }
+
+    #[test]
+    fn tile_larger_than_k_is_monolithic() {
+        let mut rng = Rng::new(903);
+        let k = 24usize;
+        let x: Vec<i64> = (0..k).map(|_| rng.int_in(0, 255)).collect();
+        let w: Vec<i32> = (0..k).map(|_| rng.int_in(-7, 7) as i32).collect();
+        let spec = AccumSpec::wraparound(20);
+        let (v, ovf) = dot_multistage_fused(&x, &w, 1000, spec, spec);
+        let w64: Vec<i64> = w.iter().map(|&q| q as i64).collect();
+        let want = dot_multistage(&x, &w64, 1000, spec, spec);
+        assert_eq!(v, want.value);
+        assert_eq!(ovf, want.overflows);
+    }
+
+    #[test]
+    fn empty_and_degenerate_shapes() {
+        let mut out: Vec<i64> = Vec::new();
+        qgemm_exact(&[], 0, &[], 0, 7, &mut out);
+        let ovf = qgemm_multistage(
+            &[],
+            0,
+            &[],
+            0,
+            7,
+            4,
+            AccumSpec::wraparound(16),
+            AccumSpec::wraparound(16),
+            &mut out,
+        );
+        assert_eq!(ovf, 0);
+        // k = 0: every dot product is the empty sum
+        let mut out1 = vec![99i64; 2];
+        qgemm_exact(&[], 2, &[], 1, 0, &mut out1[..2]);
+        assert_eq!(out1, vec![0, 0]);
+    }
+}

@@ -13,15 +13,28 @@
 //! convergence region (the caller controls it, mirroring OPTQ's η).
 
 use super::matrix::Mat;
-use thiserror::Error;
+use std::fmt;
 
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum SqrtmError {
-    #[error("matrix must be square, got {0}x{1}")]
     NotSquare(usize, usize),
-    #[error("newton-schulz did not converge after {0} iterations (residual {1})")]
     NoConvergence(usize, f64),
 }
+
+impl fmt::Display for SqrtmError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SqrtmError::NotSquare(rows, cols) => {
+                write!(f, "matrix must be square, got {rows}x{cols}")
+            }
+            SqrtmError::NoConvergence(iters, residual) => {
+                write!(f, "newton-schulz did not converge after {iters} iterations (residual {residual})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SqrtmError {}
 
 /// Result of [`sqrtm_psd`]: the square root and, for free, its inverse.
 pub struct SqrtmResult {

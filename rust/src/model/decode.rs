@@ -7,7 +7,7 @@
 //! `forward()` (tested): the quantized linears run the same integer
 //! datapath in both paths.
 
-use super::layers::softmax;
+use super::layers::{attention, softmax};
 use super::transformer::Transformer;
 
 /// Per-layer key/value cache for one sequence.
@@ -161,13 +161,83 @@ impl Transformer {
 
     /// Prefill: push a whole prompt through the cache, returning the
     /// logits of the final position.
+    ///
+    /// On an empty cache this runs **batched**: every linear processes
+    /// the whole prompt in one [`super::Linear::forward_rows`] call (the
+    /// fused qgemm kernel for quantized layers) and the causal attention
+    /// helper mixes all positions at once — the serving prefill fast
+    /// path. On a non-empty cache it falls back to token-by-token
+    /// decoding over the existing prefix.
     pub fn prefill(&self, tokens: &[u16], cache: &mut KvCache) -> Vec<f32> {
         assert!(!tokens.is_empty());
-        let mut last = Vec::new();
-        for &t in tokens {
-            last = self.decode_step(t, cache);
+        if !cache.is_empty() {
+            let mut last = Vec::new();
+            for &t in tokens {
+                last = self.decode_step(t, cache);
+            }
+            return last;
         }
-        last
+        assert_eq!(cache.d, self.cfg.d_model);
+        let d = self.cfg.d_model;
+        let seq = tokens.len();
+        assert!(seq <= cache.max_seq, "prompt longer than the context window");
+
+        let mut h = vec![0.0f32; seq * d];
+        for (t, &tok) in tokens.iter().enumerate() {
+            let e = &self.embed[(tok as usize) * d..(tok as usize + 1) * d];
+            let p = &self.pos[t * d..(t + 1) * d];
+            for i in 0..d {
+                h[t * d + i] = e[i] + p[i];
+            }
+        }
+        let mut ln_out = vec![0.0f32; seq * d];
+        let mut q = vec![0.0f32; seq * d];
+        let mut k_new = vec![0.0f32; seq * d];
+        let mut v_new = vec![0.0f32; seq * d];
+        let mut mix = vec![0.0f32; seq * d];
+        let mut attn_out = vec![0.0f32; seq * d];
+        let mut ff = vec![0.0f32; seq * self.cfg.d_ff];
+        let mut ff_out = vec![0.0f32; seq * d];
+
+        for (bi, blk) in self.blocks.iter().enumerate() {
+            for t in 0..seq {
+                blk.ln1.forward_row(&h[t * d..(t + 1) * d], &mut ln_out[t * d..(t + 1) * d]);
+            }
+            blk.wq.forward_rows(&ln_out, seq, &mut q);
+            blk.wk.forward_rows(&ln_out, seq, &mut k_new);
+            blk.wv.forward_rows(&ln_out, seq, &mut v_new);
+            cache.k[bi].extend_from_slice(&k_new);
+            cache.v[bi].extend_from_slice(&v_new);
+            attention(&q, &k_new, &v_new, seq, d, self.cfg.n_heads, true, &mut mix);
+            blk.wo.forward_rows(&mix, seq, &mut attn_out);
+            if !self.cfg.parallel_residual {
+                for i in 0..seq * d {
+                    h[i] += attn_out[i];
+                }
+            }
+            for t in 0..seq {
+                blk.ln2.forward_row(&h[t * d..(t + 1) * d], &mut ln_out[t * d..(t + 1) * d]);
+            }
+            blk.fc1.forward_rows(&ln_out, seq, &mut ff);
+            self.cfg.act.apply_vec(&mut ff);
+            blk.fc2.forward_rows(&ff, seq, &mut ff_out);
+            if self.cfg.parallel_residual {
+                for i in 0..seq * d {
+                    h[i] += attn_out[i] + ff_out[i];
+                }
+            } else {
+                for i in 0..seq * d {
+                    h[i] += ff_out[i];
+                }
+            }
+        }
+        cache.len += seq;
+        // logits for the final position only
+        let mut ln_last = vec![0.0f32; d];
+        self.ln_f.forward_row(&h[(seq - 1) * d..], &mut ln_last);
+        let mut logits = vec![0.0f32; self.cfg.vocab];
+        self.head.forward_row(&ln_last, &mut logits);
+        logits
     }
 
     /// Greedy generation: prompt → `n` new tokens.

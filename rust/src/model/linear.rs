@@ -1,7 +1,14 @@
 //! Linear layers: float reference and the integer-datapath quantized
-//! version that runs on the accumulator simulator.
+//! version.
+//!
+//! Quantized layers execute on the fused tiled integer GEMM kernel
+//! ([`crate::linalg::qgemm`]), which is bit-for-bit equal to the scalar
+//! per-MAC accumulator simulator (the audit oracle in [`crate::accum`])
+//! while running at plain-matmul speed whenever the overflow-avoidance
+//! guarantee holds.
 
-use crate::accum::simulator::{dot_multistage, AccumSpec, OverflowMode};
+use crate::accum::simulator::{AccumSpec, OverflowMode};
+use crate::linalg::qgemm;
 use crate::quant::{ActQuantizer, QuantResult};
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -150,6 +157,44 @@ impl QuantLinear {
         }
     }
 
+    /// Run the integer datapath kernel over `rows` quantized input rows,
+    /// writing raw accumulator outputs. Returns overflow events
+    /// (Simulated datapath only; always 0 for Exact).
+    fn run_kernel(&self, x_codes: &[i64], rows: usize, acc: &mut [i64]) -> u64 {
+        match self.datapath {
+            Datapath::Exact => {
+                qgemm::qgemm_exact(x_codes, rows, &self.codes, self.out_dim, self.in_dim, acc);
+                0
+            }
+            Datapath::Simulated { tile, inner_bits, outer_bits, mode } => qgemm::qgemm_multistage(
+                x_codes,
+                rows,
+                &self.codes,
+                self.out_dim,
+                self.in_dim,
+                tile,
+                AccumSpec::new(inner_bits, mode),
+                AccumSpec::new(outer_bits, mode),
+                acc,
+            ),
+        }
+    }
+
+    /// Dequantize raw accumulator outputs: zero-point correction, weight
+    /// and activation scales, bias.
+    fn dequant_rows(&self, acc: &[i64], rows: usize, ys: &mut [f32]) {
+        let sx = self.act.scale as f32;
+        let zp = self.act.zero_point;
+        for r in 0..rows {
+            let arow = &acc[r * self.out_dim..(r + 1) * self.out_dim];
+            let yrow = &mut ys[r * self.out_dim..(r + 1) * self.out_dim];
+            for o in 0..self.out_dim {
+                let corrected = arow[o] - zp * self.code_sums[o];
+                yrow[o] = self.scales[o] * sx * corrected as f32 + self.bias[o];
+            }
+        }
+    }
+
     /// y = dequant(∫ integer-datapath(W_q, x_q)) + b for one input row.
     /// `x_codes` is scratch of length in_dim.
     pub fn forward_row(&self, x: &[f32], y: &mut [f32], x_codes: &mut [i64]) {
@@ -162,42 +207,48 @@ impl QuantLinear {
         } else {
             self.quantize_input(x, x_codes);
         }
-        let sx = self.act.scale as f32;
-        let zp = self.act.zero_point;
-        let mut w_row = vec![0i64; self.in_dim];
-        let mut overflow_total = 0u64;
-        for o in 0..self.out_dim {
-            let row = &self.codes[o * self.in_dim..(o + 1) * self.in_dim];
-            let acc = match self.datapath {
-                Datapath::Exact => {
-                    let mut s: i64 = 0;
-                    for (q, x) in row.iter().zip(x_codes.iter()) {
-                        s += (*q as i64) * *x;
-                    }
-                    s
-                }
-                Datapath::Simulated { tile, inner_bits, outer_bits, mode } => {
-                    for (w, q) in w_row.iter_mut().zip(row.iter()) {
-                        *w = *q as i64;
-                    }
-                    let out = dot_multistage(
-                        x_codes,
-                        &w_row,
-                        tile,
-                        AccumSpec::new(inner_bits, mode),
-                        AccumSpec::new(outer_bits, mode),
-                    );
-                    overflow_total += out.overflows as u64;
-                    out.value
-                }
-            };
-            let corrected = acc - zp * self.code_sums[o];
-            y[o] = self.scales[o] * sx * corrected as f32 + self.bias[o];
-        }
+        let mut acc = vec![0i64; self.out_dim];
+        let overflow_total = self.run_kernel(&x_codes[..self.in_dim], 1, &mut acc);
+        self.dequant_rows(&acc, 1, y);
         if overflow_total > 0 {
             self.overflow_events.fetch_add(overflow_total, Ordering::Relaxed);
         }
         self.macs.fetch_add((self.in_dim * self.out_dim) as u64, Ordering::Relaxed);
+    }
+
+    /// Batched forward over `rows` stacked input rows — the prefill /
+    /// calibration fast path. One fused kernel call covers every row and
+    /// output channel, so the thread-parallel channel bands amortize
+    /// across the whole batch.
+    pub fn forward_rows(&self, xs: &[f32], rows: usize, ys: &mut [f32]) {
+        debug_assert_eq!(xs.len(), rows * self.in_dim);
+        debug_assert_eq!(ys.len(), rows * self.out_dim);
+        let mut codes = vec![0i64; rows * self.in_dim];
+        match &self.rotation {
+            Some(rot) => {
+                let mut xr = vec![0.0f32; self.in_dim];
+                for r in 0..rows {
+                    xr.copy_from_slice(&xs[r * self.in_dim..(r + 1) * self.in_dim]);
+                    rot.apply_row(&mut xr);
+                    self.quantize_input(&xr, &mut codes[r * self.in_dim..(r + 1) * self.in_dim]);
+                }
+            }
+            None => {
+                for r in 0..rows {
+                    self.quantize_input(
+                        &xs[r * self.in_dim..(r + 1) * self.in_dim],
+                        &mut codes[r * self.in_dim..(r + 1) * self.in_dim],
+                    );
+                }
+            }
+        }
+        let mut acc = vec![0i64; rows * self.out_dim];
+        let overflow_total = self.run_kernel(&codes, rows, &mut acc);
+        self.dequant_rows(&acc, rows, ys);
+        if overflow_total > 0 {
+            self.overflow_events.fetch_add(overflow_total, Ordering::Relaxed);
+        }
+        self.macs.fetch_add((rows * self.in_dim * self.out_dim) as u64, Ordering::Relaxed);
     }
 
     /// Dequantized weights as an [out, in] f32 matrix (diagnostics).
@@ -247,6 +298,22 @@ impl Linear {
                 scratch.resize(l.in_dim, 0);
                 l.forward_row(x, y, scratch);
             }
+        }
+    }
+
+    /// Batched y = W x + b over `rows` stacked input rows. Quantized
+    /// layers run one fused qgemm call across every row and channel.
+    pub fn forward_rows(&self, xs: &[f32], rows: usize, ys: &mut [f32]) {
+        match self {
+            Linear::Float(l) => {
+                for r in 0..rows {
+                    l.forward_row(
+                        &xs[r * l.in_dim..(r + 1) * l.in_dim],
+                        &mut ys[r * l.out_dim..(r + 1) * l.out_dim],
+                    );
+                }
+            }
+            Linear::Quant(l) => l.forward_rows(xs, rows, ys),
         }
     }
 
@@ -391,6 +458,36 @@ mod tests {
                 reference += q * (c - ql.act.zero_point);
             }
             assert_eq!(corrected, reference);
+        }
+    }
+
+    #[test]
+    fn forward_rows_matches_row_by_row() {
+        // Batched kernel dispatch must be value-identical to per-row
+        // dispatch, on both datapaths.
+        let fl = random_float_linear(64, 12, 102);
+        let mut ql = quantize_layer(&fl, 4, 103);
+        let mut rng = Rng::new(104);
+        let rows = 5;
+        let xs: Vec<f32> = (0..rows * 64).map(|_| rng.normal() as f32).collect();
+        for datapath in [
+            Datapath::Exact,
+            Datapath::Simulated {
+                tile: 16,
+                inner_bits: 14,
+                outer_bits: 17,
+                mode: OverflowMode::Wraparound,
+            },
+        ] {
+            ql.datapath = datapath;
+            let mut batched = vec![0.0f32; rows * 12];
+            ql.forward_rows(&xs, rows, &mut batched);
+            let mut scratch = vec![0i64; 64];
+            for r in 0..rows {
+                let mut y = vec![0.0f32; 12];
+                ql.forward_row(&xs[r * 64..(r + 1) * 64], &mut y, &mut scratch);
+                assert_eq!(&batched[r * 12..(r + 1) * 12], &y[..], "row {r}");
+            }
         }
     }
 

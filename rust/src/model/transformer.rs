@@ -178,6 +178,10 @@ impl Transformer {
 
     /// Forward a token sequence, returning logits (seq × vocab) and
     /// optionally recording linear inputs into `capture`.
+    ///
+    /// All linears run batched over the whole sequence
+    /// ([`Linear::forward_rows`]), so quantized layers hit the fused
+    /// qgemm kernel once per layer instead of once per token row.
     pub fn forward(&self, tokens: &[u16], mut capture: Option<&mut Capture>) -> Vec<f32> {
         let d = self.cfg.d_model;
         let seq = tokens.len();
@@ -190,7 +194,6 @@ impl Transformer {
                 h[t * d + i] = e[i] + p[i];
             }
         }
-        let mut scratch: Vec<i64> = Vec::new();
         let mut ln_out = vec![0.0f32; seq * d];
         let mut q = vec![0.0f32; seq * d];
         let mut k = vec![0.0f32; seq * d];
@@ -205,25 +208,24 @@ impl Transformer {
             for t in 0..seq {
                 blk.ln1.forward_row(&h[t * d..(t + 1) * d], &mut ln_out[t * d..(t + 1) * d]);
             }
-            for t in 0..seq {
-                let row = &ln_out[t * d..(t + 1) * d];
-                if let Some(c) = capture.as_deref_mut() {
+            if let Some(c) = capture.as_deref_mut() {
+                for t in 0..seq {
+                    let row = &ln_out[t * d..(t + 1) * d];
                     c.record(&format!("b{bi}.wq"), row);
                     c.record(&format!("b{bi}.wk"), row);
                     c.record(&format!("b{bi}.wv"), row);
                 }
-                blk.wq.forward_row(row, &mut q[t * d..(t + 1) * d], &mut scratch);
-                blk.wk.forward_row(row, &mut k[t * d..(t + 1) * d], &mut scratch);
-                blk.wv.forward_row(row, &mut v[t * d..(t + 1) * d], &mut scratch);
             }
+            blk.wq.forward_rows(&ln_out, seq, &mut q);
+            blk.wk.forward_rows(&ln_out, seq, &mut k);
+            blk.wv.forward_rows(&ln_out, seq, &mut v);
             attention(&q, &k, &v, seq, d, self.cfg.n_heads, true, &mut mix);
-            for t in 0..seq {
-                let row = &mix[t * d..(t + 1) * d];
-                if let Some(c) = capture.as_deref_mut() {
-                    c.record(&format!("b{bi}.wo"), row);
+            if let Some(c) = capture.as_deref_mut() {
+                for t in 0..seq {
+                    c.record(&format!("b{bi}.wo"), &mix[t * d..(t + 1) * d]);
                 }
-                blk.wo.forward_row(row, &mut attn_out[t * d..(t + 1) * d], &mut scratch);
             }
+            blk.wo.forward_rows(&mix, seq, &mut attn_out);
             // --- mlp path (parallel residual reads h pre-attention)
             if !self.cfg.parallel_residual {
                 for i in 0..seq * d {
@@ -234,19 +236,19 @@ impl Transformer {
                 blk.ln2.forward_row(&h[t * d..(t + 1) * d], &mut ln_out[t * d..(t + 1) * d]);
             }
             let dff = self.cfg.d_ff;
-            for t in 0..seq {
-                let row = &ln_out[t * d..(t + 1) * d];
-                if let Some(c) = capture.as_deref_mut() {
-                    c.record(&format!("b{bi}.fc1"), row);
+            if let Some(c) = capture.as_deref_mut() {
+                for t in 0..seq {
+                    c.record(&format!("b{bi}.fc1"), &ln_out[t * d..(t + 1) * d]);
                 }
-                blk.fc1.forward_row(row, &mut ff[t * dff..(t + 1) * dff], &mut scratch);
-                self.cfg.act.apply_vec(&mut ff[t * dff..(t + 1) * dff]);
-                let frow = &ff[t * dff..(t + 1) * dff];
-                if let Some(c) = capture.as_deref_mut() {
-                    c.record(&format!("b{bi}.fc2"), frow);
-                }
-                blk.fc2.forward_row(frow, &mut ff_out[t * d..(t + 1) * d], &mut scratch);
             }
+            blk.fc1.forward_rows(&ln_out, seq, &mut ff);
+            self.cfg.act.apply_vec(&mut ff);
+            if let Some(c) = capture.as_deref_mut() {
+                for t in 0..seq {
+                    c.record(&format!("b{bi}.fc2"), &ff[t * dff..(t + 1) * dff]);
+                }
+            }
+            blk.fc2.forward_rows(&ff, seq, &mut ff_out);
             if self.cfg.parallel_residual {
                 for i in 0..seq * d {
                     h[i] += attn_out[i] + ff_out[i];

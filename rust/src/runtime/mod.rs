@@ -7,137 +7,16 @@
 //!
 //! Python runs only at build time; this module is the entire inference
 //! dependency on the artifacts.
+//!
+//! The `xla` bindings crate is not available in the offline registry, so
+//! the PJRT-backed implementation is gated behind the off-by-default
+//! `pjrt` feature (see `rust/Cargo.toml` for how to enable it). Without
+//! the feature this module compiles a stub with the same API whose
+//! constructors return a descriptive error, keeping every caller —
+//! CLI, benches, examples — buildable offline.
 
-use anyhow::{anyhow, Context, Result};
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::Mutex;
-
-/// A compiled-executable cache over one PJRT CPU client.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
-    hlo_dir: PathBuf,
-}
-
-impl Runtime {
-    /// Create a runtime rooted at `<artifacts>/hlo`.
-    pub fn new() -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Runtime {
-            client,
-            cache: Mutex::new(HashMap::new()),
-            hlo_dir: crate::artifacts_dir().join("hlo"),
-        })
-    }
-
-    pub fn with_dir(dir: &Path) -> Result<Runtime> {
-        let mut rt = Runtime::new()?;
-        rt.hlo_dir = dir.to_path_buf();
-        Ok(rt)
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Names of available HLO artifacts (without extension).
-    pub fn list_artifacts(&self) -> Vec<String> {
-        let mut v = Vec::new();
-        if let Ok(rd) = std::fs::read_dir(&self.hlo_dir) {
-            for e in rd.flatten() {
-                if let Some(name) = e.file_name().to_str() {
-                    if let Some(stem) = name.strip_suffix(".hlo.txt") {
-                        v.push(stem.to_string());
-                    }
-                }
-            }
-        }
-        v.sort();
-        v
-    }
-
-    /// Load + compile an artifact by name (cached).
-    pub fn load(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
-        {
-            let cache = self.cache.lock().unwrap();
-            if let Some(exe) = cache.get(name) {
-                return Ok(exe.clone());
-            }
-        }
-        let path = self.hlo_dir.join(format!("{name}.hlo.txt"));
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
-        )
-        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
-        let exe = std::sync::Arc::new(exe);
-        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
-        Ok(exe)
-    }
-
-    /// Execute an artifact on f32 inputs, returning all f32 outputs.
-    /// The AOT path lowers with `return_tuple=True`, so the single result
-    /// literal is a tuple.
-    pub fn run_f32(&self, name: &str, inputs: &[F32Input]) -> Result<Vec<Vec<f32>>> {
-        let exe = self.load(name)?;
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|inp| {
-                let lit = xla::Literal::vec1(&inp.data);
-                let dims: Vec<i64> = inp.dims.iter().map(|&d| d as i64).collect();
-                lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))
-            })
-            .collect::<Result<_>>()?;
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
-        let mut out = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
-        let tuple = out.decompose_tuple().map_err(|e| anyhow!("decompose: {e:?}"))?;
-        tuple
-            .into_iter()
-            .map(|lit| {
-                // outputs may be f32 or i32; convert i32 to f32 for a
-                // uniform return type
-                lit.to_vec::<f32>().or_else(|_| {
-                    lit.to_vec::<i32>()
-                        .map(|v| v.into_iter().map(|x| x as f32).collect())
-                })
-                .map_err(|e| anyhow!("to_vec: {e:?}"))
-            })
-            .collect()
-    }
-
-    /// Execute an artifact whose inputs are i32 tensors.
-    pub fn run_i32(&self, name: &str, inputs: &[I32Input]) -> Result<Vec<Vec<i32>>> {
-        let exe = self.load(name)?;
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|inp| {
-                let lit = xla::Literal::vec1(&inp.data);
-                let dims: Vec<i64> = inp.dims.iter().map(|&d| d as i64).collect();
-                lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))
-            })
-            .collect::<Result<_>>()?;
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
-        let mut out = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
-        let tuple = out.decompose_tuple().map_err(|e| anyhow!("decompose: {e:?}"))?;
-        tuple
-            .into_iter()
-            .map(|lit| lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec: {e:?}")))
-            .collect()
-    }
-}
+use anyhow::Result;
+use std::path::Path;
 
 /// A shaped f32 input.
 pub struct F32Input {
@@ -167,11 +46,228 @@ impl I32Input {
 
 /// A manifest describing the AOT artifacts (written by aot.py).
 pub fn load_manifest() -> Result<crate::util::json::Json> {
+    use anyhow::Context;
     let path = crate::artifacts_dir().join("hlo").join("manifest.json");
     let text = std::fs::read_to_string(&path)
         .with_context(|| format!("reading {}", path.display()))?;
-    crate::util::json::Json::parse(&text).map_err(|e| anyhow!("bad hlo manifest: {e}"))
+    crate::util::json::Json::parse(&text).map_err(|e| anyhow::anyhow!("bad hlo manifest: {e}"))
 }
+
+/// Names of the HLO artifacts (without extension) under `dir`.
+fn scan_artifacts(dir: &Path) -> Vec<String> {
+    let mut v = Vec::new();
+    if let Ok(rd) = std::fs::read_dir(dir) {
+        for e in rd.flatten() {
+            if let Some(name) = e.file_name().to_str() {
+                if let Some(stem) = name.strip_suffix(".hlo.txt") {
+                    v.push(stem.to_string());
+                }
+            }
+        }
+    }
+    v.sort();
+    v
+}
+
+#[cfg(feature = "pjrt")]
+mod imp {
+    use super::{scan_artifacts, F32Input, I32Input};
+    use anyhow::{anyhow, Result};
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+    use std::sync::{Arc, Mutex};
+
+    /// Element types the execution path is generic over.
+    trait PjrtElem: Copy {
+        fn to_literal(data: &[Self]) -> xla::Literal;
+        fn from_literal(lit: &xla::Literal) -> Result<Vec<Self>>;
+    }
+
+    impl PjrtElem for f32 {
+        fn to_literal(data: &[f32]) -> xla::Literal {
+            xla::Literal::vec1(data)
+        }
+        fn from_literal(lit: &xla::Literal) -> Result<Vec<f32>> {
+            // outputs may be f32 or i32; convert i32 to f32 for a
+            // uniform return type
+            lit.to_vec::<f32>()
+                .or_else(|_| {
+                    lit.to_vec::<i32>().map(|v| v.into_iter().map(|x| x as f32).collect())
+                })
+                .map_err(|e| anyhow!("to_vec: {e:?}"))
+        }
+    }
+
+    impl PjrtElem for i32 {
+        fn to_literal(data: &[i32]) -> xla::Literal {
+            xla::Literal::vec1(data)
+        }
+        fn from_literal(lit: &xla::Literal) -> Result<Vec<i32>> {
+            lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+        }
+    }
+
+    /// A compiled-executable cache over one PJRT CPU client.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+        hlo_dir: PathBuf,
+    }
+
+    impl Runtime {
+        /// Create a runtime rooted at `<artifacts>/hlo`.
+        pub fn new() -> Result<Runtime> {
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+            Ok(Runtime {
+                client,
+                cache: Mutex::new(HashMap::new()),
+                hlo_dir: crate::artifacts_dir().join("hlo"),
+            })
+        }
+
+        pub fn with_dir(dir: &Path) -> Result<Runtime> {
+            let mut rt = Runtime::new()?;
+            rt.hlo_dir = dir.to_path_buf();
+            Ok(rt)
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Names of available HLO artifacts (without extension).
+        pub fn list_artifacts(&self) -> Vec<String> {
+            scan_artifacts(&self.hlo_dir)
+        }
+
+        /// Load + compile an artifact by name (cached).
+        pub fn load(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+            {
+                let cache = self.cache.lock().unwrap();
+                if let Some(exe) = cache.get(name) {
+                    return Ok(exe.clone());
+                }
+            }
+            let path = self.hlo_dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            let exe = Arc::new(exe);
+            self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+            Ok(exe)
+        }
+
+        /// Shared execute path: reshape inputs into literals, run the
+        /// executable, and decode the result literal(s). The AOT path
+        /// lowers with `return_tuple=True`, so the single result is
+        /// normally a tuple — but a single-output executable that was
+        /// lowered without tupling is tolerated and treated as a
+        /// one-element result list.
+        fn execute_raw<T: PjrtElem>(
+            &self,
+            name: &str,
+            inputs: &[(&[T], &[usize])],
+        ) -> Result<Vec<xla::Literal>> {
+            let exe = self.load(name)?;
+            let literals: Vec<xla::Literal> = inputs
+                .iter()
+                .map(|(data, dims)| {
+                    let lit = T::to_literal(data);
+                    let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                    lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))
+                })
+                .collect::<Result<_>>()?;
+            let result = exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+            let mut out = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+            match out.decompose_tuple() {
+                Ok(parts) => Ok(parts),
+                // Non-tuple single output: hand the literal back as-is.
+                Err(_) => Ok(vec![out]),
+            }
+        }
+
+        /// Execute an artifact on f32 inputs, returning all f32 outputs.
+        pub fn run_f32(&self, name: &str, inputs: &[F32Input]) -> Result<Vec<Vec<f32>>> {
+            let raw: Vec<(&[f32], &[usize])> =
+                inputs.iter().map(|i| (i.data.as_slice(), i.dims.as_slice())).collect();
+            let parts = self.execute_raw::<f32>(name, &raw)?;
+            parts.iter().map(f32::from_literal).collect()
+        }
+
+        /// Execute an artifact whose inputs are i32 tensors.
+        pub fn run_i32(&self, name: &str, inputs: &[I32Input]) -> Result<Vec<Vec<i32>>> {
+            let raw: Vec<(&[i32], &[usize])> =
+                inputs.iter().map(|i| (i.data.as_slice(), i.dims.as_slice())).collect();
+            let parts = self.execute_raw::<i32>(name, &raw)?;
+            parts.iter().map(i32::from_literal).collect()
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use super::{scan_artifacts, F32Input, I32Input};
+    use anyhow::{anyhow, Result};
+    use std::path::{Path, PathBuf};
+
+    fn unavailable<T>(what: &str) -> Result<T> {
+        Err(anyhow!(
+            "{what}: this build has no PJRT runtime — rebuild with `--features pjrt` \
+             (requires the `xla` bindings crate, see rust/Cargo.toml)"
+        ))
+    }
+
+    /// Stub runtime used when the `pjrt` feature is off. Both
+    /// constructors fail with a descriptive error, so the instance
+    /// methods are unreachable — they exist (with the hlo_dir the real
+    /// runtime carries) purely so every caller of the PJRT API keeps
+    /// compiling unchanged against either implementation.
+    pub struct Runtime {
+        hlo_dir: PathBuf,
+    }
+
+    impl Runtime {
+        pub fn new() -> Result<Runtime> {
+            unavailable("creating PJRT client")
+        }
+
+        pub fn with_dir(_dir: &Path) -> Result<Runtime> {
+            Runtime::new()
+        }
+
+        pub fn platform(&self) -> String {
+            "pjrt-disabled".to_string()
+        }
+
+        pub fn list_artifacts(&self) -> Vec<String> {
+            scan_artifacts(&self.hlo_dir)
+        }
+
+        pub fn load(&self, name: &str) -> Result<()> {
+            unavailable(&format!("compiling {name}"))
+        }
+
+        pub fn run_f32(&self, name: &str, _inputs: &[F32Input]) -> Result<Vec<Vec<f32>>> {
+            unavailable(&format!("executing {name}"))
+        }
+
+        pub fn run_i32(&self, name: &str, _inputs: &[I32Input]) -> Result<Vec<Vec<i32>>> {
+            unavailable(&format!("executing {name}"))
+        }
+    }
+}
+
+pub use imp::Runtime;
 
 #[cfg(test)]
 mod tests {
@@ -191,5 +287,12 @@ mod tests {
     #[should_panic]
     fn input_shape_mismatch_panics() {
         F32Input::new(vec![1.0; 5], &[2, 3]);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_errors_descriptively() {
+        let e = Runtime::new().err().expect("stub must not construct");
+        assert!(e.to_string().contains("pjrt"), "{e}");
     }
 }

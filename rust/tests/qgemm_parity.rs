@@ -1,0 +1,124 @@
+//! Integration parity: the fused qgemm kernel against the scalar
+//! per-MAC accumulator simulator, through every layer that routes dot
+//! products — raw kernel, QuantLinear, and the batched prefill path.
+
+use axe::accum::simulator::{dot_multistage, AccumSpec, OverflowMode};
+use axe::coordinator::{quantize_transformer, DatapathMode, PipelineConfig};
+use axe::eval::synth_corpus;
+use axe::linalg::qgemm_multistage;
+use axe::model::{
+    random_transformer, Activation, Datapath, KvCache, Linear, TransformerConfig,
+};
+use axe::quant::{AccumTarget, Algorithm, Method};
+use axe::util::rng::Rng;
+
+fn lm_fixture(seed: u64) -> (axe::model::Transformer, Vec<u16>) {
+    let cfg = TransformerConfig {
+        name: "qgemm-itest".into(),
+        vocab: 48,
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 32,
+        max_seq: 16,
+        act: Activation::Gelu,
+        parallel_residual: false,
+    };
+    (random_transformer(cfg, seed), synth_corpus(16 * 16, 48, seed + 1))
+}
+
+/// Raw kernel vs simulator on a serving-sized problem, wrap + saturate.
+#[test]
+fn kernel_matches_simulator_at_depth() {
+    let mut rng = Rng::new(7001);
+    let (rows, k, c, tile) = (3usize, 1024usize, 24usize, 64usize);
+    for mode in [OverflowMode::Wraparound, OverflowMode::Saturate] {
+        let inner = AccumSpec::new(14, mode); // narrow enough to overflow sometimes
+        let outer = AccumSpec::new(18, mode);
+        let x: Vec<i64> = (0..rows * k).map(|_| rng.int_in(0, 255)).collect();
+        let w: Vec<i32> = (0..c * k).map(|_| rng.int_in(-7, 7) as i32).collect();
+        let mut out = vec![0i64; rows * c];
+        let ovf = qgemm_multistage(&x, rows, &w, c, k, tile, inner, outer, &mut out);
+        let mut want_ovf = 0u64;
+        for r in 0..rows {
+            for ch in 0..c {
+                let w64: Vec<i64> = w[ch * k..(ch + 1) * k].iter().map(|&v| v as i64).collect();
+                let o = dot_multistage(&x[r * k..(r + 1) * k], &w64, tile, inner, outer);
+                assert_eq!(out[r * c + ch], o.value, "mode {mode:?} [{r},{ch}]");
+                want_ovf += o.overflows as u64;
+            }
+        }
+        assert_eq!(ovf, want_ovf, "mode {mode:?} overflow totals");
+    }
+}
+
+/// The quantized pipeline on the faithful datapath must produce a model
+/// whose every linear runs the kernel, and whose logits match the
+/// exact datapath while the guarantee holds.
+#[test]
+fn faithful_pipeline_runs_on_kernel_and_matches_exact() {
+    let (base, toks) = lm_fixture(7010);
+    let calib: Vec<&[u16]> = toks.chunks_exact(16).take(4).collect();
+    let mut cfg = PipelineConfig::new(Algorithm::Optq, Method::Axe, 4, 8);
+    cfg.target = AccumTarget::MultiStage { p_inner: 14, tile: 8 };
+
+    let mut m_exact = base.clone();
+    quantize_transformer(&mut m_exact, &calib, &cfg).unwrap();
+
+    let mut cfg_f = cfg.clone();
+    cfg_f.datapath = DatapathMode::Faithful;
+    let mut m_faith = base.clone();
+    let report = quantize_transformer(&mut m_faith, &calib, &cfg_f).unwrap();
+    assert!(report.guaranteed_safe());
+    for name in m_faith.linear_names() {
+        let Some(Linear::Quant(q)) = m_faith.get_linear(&name) else {
+            panic!("{name} not quantized")
+        };
+        assert!(matches!(q.datapath, Datapath::Simulated { .. }), "{name}");
+    }
+
+    let la = m_exact.forward(&toks[..16], None);
+    let lb = m_faith.forward(&toks[..16], None);
+    for (a, b) in la.iter().zip(lb.iter()) {
+        assert!((a - b).abs() < 1e-5, "exact vs faithful kernel diverged: {a} {b}");
+    }
+    assert_eq!(m_faith.overflow_events(), 0, "guaranteed-safe model must not overflow");
+}
+
+/// Batched prefill (kernel path) must agree with full-sequence forward
+/// and with token-by-token decode on a quantized model.
+#[test]
+fn batched_prefill_matches_forward_and_decode() {
+    let (base, toks) = lm_fixture(7020);
+    let calib: Vec<&[u16]> = toks.chunks_exact(16).take(4).collect();
+    let mut cfg = PipelineConfig::new(Algorithm::Gpfq, Method::Axe, 4, 8);
+    cfg.target = AccumTarget::MultiStage { p_inner: 14, tile: 8 };
+    cfg.datapath = DatapathMode::Faithful;
+    let mut m = base.clone();
+    quantize_transformer(&mut m, &calib, &cfg).unwrap();
+
+    let prompt = &toks[..10];
+    let vocab = m.cfg.vocab;
+
+    // full-sequence forward: last row of logits
+    let full = m.forward(prompt, None);
+    let want = &full[(prompt.len() - 1) * vocab..prompt.len() * vocab];
+
+    // batched prefill
+    let mut cache = KvCache::new(&m);
+    let got = m.prefill(prompt, &mut cache);
+    assert_eq!(cache.len(), prompt.len());
+    for (a, b) in got.iter().zip(want.iter()) {
+        assert!((a - b).abs() < 1e-4, "prefill vs forward: {a} {b}");
+    }
+
+    // token-by-token decode
+    let mut cache2 = KvCache::new(&m);
+    let mut step = Vec::new();
+    for &t in prompt {
+        step = m.decode_step(t, &mut cache2);
+    }
+    for (a, b) in got.iter().zip(step.iter()) {
+        assert!((a - b).abs() < 1e-4, "prefill vs decode: {a} {b}");
+    }
+}
