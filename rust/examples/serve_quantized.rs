@@ -113,13 +113,27 @@ fn main() -> anyhow::Result<()> {
     }
     let rust_s = t1.elapsed().as_secs_f64();
 
-    // rust quantized generation with the KV cache (the serving fast path)
-    let t2 = Instant::now();
-    let mut kv_out: Vec<Vec<u16>> = Vec::new();
-    for p in &prompts {
-        kv_out.push(qmodel.generate_greedy(&p[p.len() - seq / 2..], gen_tokens));
+    // rust quantized generation through the continuous-batching engine
+    // (the serving fast path): all requests share one KV arena, every
+    // decode step is one fused qgemm dispatch per layer across the
+    // whole in-flight batch
+    use axe::coordinator::serve::{serve, Request, ServeQueue, ServeStats};
+    let queue = ServeQueue::new();
+    for (id, p) in prompts.iter().enumerate() {
+        queue.submit(Request {
+            id: id as u64,
+            prompt: p[p.len() - seq / 2..].to_vec(),
+            max_new_tokens: gen_tokens,
+        });
     }
+    queue.close();
+    let ovf_before = qmodel.overflow_events();
+    let t2 = Instant::now();
+    serve(&qmodel, &queue, 1, batch);
+    let kv_out = queue.drain();
     let kv_s = t2.elapsed().as_secs_f64();
+    let ovf_delta = qmodel.overflow_events() - ovf_before;
+    let kv_stats = ServeStats::from_responses(&kv_out, kv_s, ovf_delta);
 
     // agreement
     let mut agree = 0usize;
@@ -144,12 +158,14 @@ fn main() -> anyhow::Result<()> {
         total as f64 / rust_s
     );
     println!(
-        "rust + KV cache : {:.3}s total, {:.1} tok/s ({:.1}x over recompute)",
+        "rust + batched KV arena : {:.3}s total, {:.1} tok/s ({:.1}x over recompute), \
+         p99 {:.1} ms, overflow events {}",
         kv_s,
-        total as f64 / kv_s,
-        rust_s / kv_s
+        kv_stats.tokens_per_s,
+        rust_s / kv_s,
+        kv_stats.p99_latency_s * 1e3,
+        kv_stats.overflow_events
     );
-    let _ = &kv_out;
     println!(
         "agreement       : {agree}/{total} generated tokens match ({:.0}%)",
         100.0 * agree as f64 / total as f64

@@ -15,11 +15,13 @@
 //!   multi-stage integer GEMM kernel ([`linalg::qgemm`]) that executes
 //!   the tiled P_I/P_O datapath at matmul speed.
 //! - [`model`] — inference substrate (transformers, MLPs, quantized
-//!   linear layers running on the fused integer datapath).
+//!   linear layers running on the fused integer datapath; multi-sequence
+//!   KV arena + batched decode for serving).
 //! - [`calib`] — calibration capture, SmoothQuant-style equalization,
 //!   bias correction.
 //! - [`coordinator`] — the layer-by-layer PTQ pipeline (layer-parallel
-//!   within each block) and experiment harness.
+//!   within each block), the continuous-batching serving engine
+//!   ([`coordinator::serve`]) and experiment harness.
 //! - [`runtime`] — PJRT (XLA) execution of the AOT-compiled JAX/Pallas
 //!   artifacts; gated behind the off-by-default `pjrt` feature (the
 //!   `xla` bindings are unavailable offline) with a stub fallback.

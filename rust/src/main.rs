@@ -340,17 +340,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
         });
     }
     queue.close();
+    let ovf_before = model.overflow_events();
     let t0 = std::time::Instant::now();
     serve(&model, &queue, workers, args.usize_or("max-batch", 4));
     let responses = queue.drain();
-    let stats = ServeStats::from_responses(&responses, t0.elapsed().as_secs_f64());
+    let stats = ServeStats::from_responses(
+        &responses,
+        t0.elapsed().as_secs_f64(),
+        model.overflow_events() - ovf_before,
+    );
     println!("requests      : {}", stats.requests);
     println!("generated     : {} tokens in {:.2}s", stats.total_tokens, stats.wall_s);
     println!("throughput    : {:.1} tok/s", stats.tokens_per_s);
     println!("latency p50   : {:.1} ms", stats.p50_latency_s * 1e3);
     println!("latency p99   : {:.1} ms", stats.p99_latency_s * 1e3);
     println!("mean queue    : {:.1} ms", stats.mean_queue_s * 1e3);
-    println!("overflow evts : {}", model.overflow_events());
+    println!(
+        "overflow evts : {} total ({:.3} per generated token)",
+        stats.overflow_events,
+        stats.overflow_events as f64 / stats.total_tokens.max(1) as f64
+    );
     Ok(())
 }
 

@@ -1,186 +1,331 @@
-//! Incremental decoding with a KV cache.
+//! Incremental decoding over a multi-sequence KV arena.
 //!
 //! `forward()` recomputes the whole prefix per step — fine for PPL
-//! evaluation, quadratic-per-token for serving. The KV cache stores each
-//! block's projected keys/values so one decode step costs O(seq · d)
-//! attention instead of O(seq² · d) recompute. Bit-compatible with
-//! `forward()` (tested): the quantized linears run the same integer
-//! datapath in both paths.
+//! evaluation, quadratic-per-token for serving. The KV structures here
+//! store each block's projected keys/values so one decode step costs
+//! O(seq · d) attention instead of O(seq² · d) recompute.
+//!
+//! The serving engine decodes **many sequences per kernel call**:
+//! [`KvArena`] holds a fixed number of slots (one in-flight sequence
+//! each, with independent lengths), and
+//! [`Transformer::decode_step_batch`] stacks the current token of every
+//! scheduled slot into one [`super::Linear::forward_rows`] call per
+//! linear — quantized layers amortize the fused qgemm kernel across the
+//! whole in-flight batch. Attention stays ragged: each slot attends
+//! over its own cached positions only.
+//!
+//! The single-sequence [`KvCache`] is a thin 1-slot arena view, and
+//! `decode_step`/`prefill` delegate to the batched path, so sequential
+//! decode (`generate_greedy`) and continuous-batched serving run the
+//! **same arithmetic per row** — batched decode is token-exact versus
+//! sequential decode (tested here and in `coordinator::serve`). This
+//! relies on every row of a batched kernel being computed independently
+//! of its batchmates (true of `linalg::qgemm` and `linalg::Mat`'s
+//! banded GEMM).
 
-use super::layers::{attention, softmax};
+use super::layers::attend_one_query;
 use super::transformer::Transformer;
 
-/// Per-layer key/value cache for one sequence.
+/// Multi-sequence key/value arena: `slots` independent sequences, each
+/// owning a fixed `[max_seq × d]` region per layer. Slots are
+/// allocated at admission, reused after retirement, and slide their
+/// window independently (via [`KvArena::reset_slot`] + re-prefill, the
+/// absolute-position re-encode the single-sequence path uses).
 #[derive(Clone, Debug)]
-pub struct KvCache {
-    /// [layer][pos * d ..] cached keys.
+pub struct KvArena {
+    /// [layer][slot * max_seq * d + pos * d ..] cached keys.
     k: Vec<Vec<f32>>,
-    /// [layer][pos * d ..] cached values.
+    /// [layer][slot * max_seq * d + pos * d ..] cached values.
     v: Vec<Vec<f32>>,
     d: usize,
     max_seq: usize,
-    len: usize,
+    slots: usize,
+    /// Per-slot cached length.
+    lens: Vec<usize>,
+    /// Per-slot liveness (allocated to a sequence).
+    live: Vec<bool>,
+    /// LIFO free list of slot ids.
+    free: Vec<usize>,
+}
+
+impl KvArena {
+    /// Arena with `slots` sequence slots, all free.
+    pub fn new(model: &Transformer, slots: usize) -> KvArena {
+        assert!(slots >= 1, "arena needs at least one slot");
+        let d = model.cfg.d_model;
+        let max_seq = model.cfg.max_seq;
+        KvArena {
+            k: vec![vec![0.0; slots * max_seq * d]; model.cfg.n_layers],
+            v: vec![vec![0.0; slots * max_seq * d]; model.cfg.n_layers],
+            d,
+            max_seq,
+            slots,
+            lens: vec![0; slots],
+            live: vec![false; slots],
+            free: (0..slots).rev().collect(),
+        }
+    }
+
+    pub fn slots(&self) -> usize {
+        self.slots
+    }
+
+    pub fn free_slots(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Claim a free slot (length 0), or `None` when all are in flight.
+    pub fn alloc(&mut self) -> Option<usize> {
+        let slot = self.free.pop()?;
+        self.lens[slot] = 0;
+        self.live[slot] = true;
+        Some(slot)
+    }
+
+    /// Retire a sequence: its slot becomes reusable immediately.
+    pub fn release(&mut self, slot: usize) {
+        assert!(self.live[slot], "releasing a free slot");
+        self.live[slot] = false;
+        self.lens[slot] = 0;
+        self.free.push(slot);
+    }
+
+    pub fn len(&self, slot: usize) -> usize {
+        self.lens[slot]
+    }
+
+    pub fn is_empty(&self, slot: usize) -> bool {
+        self.lens[slot] == 0
+    }
+
+    pub fn is_full(&self, slot: usize) -> bool {
+        self.lens[slot] >= self.max_seq
+    }
+
+    /// Drop a slot's cached positions (window-slide: clear, then
+    /// re-prefill the kept tail so absolute positions are re-encoded).
+    pub fn reset_slot(&mut self, slot: usize) {
+        assert!(self.live[slot], "resetting a free slot");
+        self.lens[slot] = 0;
+    }
+
+    /// Drop the oldest `n` positions of one slot (sliding-window
+    /// generation without re-encoding).
+    /// NOTE: positional embeddings are absolute, so after sliding the
+    /// model sees shifted positions; for the pico models with short
+    /// windows this matches the serve example's windowed re-encode.
+    pub fn truncate_front(&mut self, slot: usize, n: usize) {
+        let n = n.min(self.lens[slot]);
+        if n == 0 {
+            return;
+        }
+        let d = self.d;
+        let base = slot * self.max_seq * d;
+        for slab in self.k.iter_mut().chain(self.v.iter_mut()) {
+            slab.copy_within(base + n * d..base + self.lens[slot] * d, base);
+        }
+        self.lens[slot] -= n;
+    }
+
+    /// Append one position's K/V rows to a slot at `layer` (position =
+    /// current length; the length advance happens once per step via
+    /// [`KvArena::advance`]).
+    #[inline]
+    fn append_kv(&mut self, layer: usize, slot: usize, k_row: &[f32], v_row: &[f32]) {
+        debug_assert!(self.lens[slot] < self.max_seq);
+        let at = slot * self.max_seq * self.d + self.lens[slot] * self.d;
+        self.k[layer][at..at + self.d].copy_from_slice(k_row);
+        self.v[layer][at..at + self.d].copy_from_slice(v_row);
+    }
+
+    #[inline]
+    fn advance(&mut self, slot: usize, n: usize) {
+        self.lens[slot] += n;
+        debug_assert!(self.lens[slot] <= self.max_seq);
+    }
+}
+
+/// Per-layer key/value cache for one sequence — a 1-slot [`KvArena`]
+/// view, kept so single-sequence callers (eval, examples,
+/// `generate_greedy`) read naturally.
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    pub(crate) arena: KvArena,
 }
 
 impl KvCache {
     pub fn new(model: &Transformer) -> KvCache {
-        let d = model.cfg.d_model;
-        let max_seq = model.cfg.max_seq;
-        KvCache {
-            k: vec![Vec::with_capacity(max_seq * d); model.cfg.n_layers],
-            v: vec![Vec::with_capacity(max_seq * d); model.cfg.n_layers],
-            d,
-            max_seq,
-            len: 0,
-        }
+        let mut arena = KvArena::new(model, 1);
+        arena.alloc().expect("fresh 1-slot arena");
+        KvCache { arena }
     }
 
     pub fn len(&self) -> usize {
-        self.len
+        self.arena.len(0)
     }
 
     pub fn is_empty(&self) -> bool {
-        self.len == 0
+        self.arena.is_empty(0)
     }
 
     pub fn is_full(&self) -> bool {
-        self.len >= self.max_seq
+        self.arena.is_full(0)
     }
 
     pub fn clear(&mut self) {
-        for layer in self.k.iter_mut().chain(self.v.iter_mut()) {
-            layer.clear();
-        }
-        self.len = 0;
+        self.arena.reset_slot(0);
     }
 
     /// Drop the oldest `n` positions (sliding-window generation).
-    /// NOTE: positional embeddings are absolute, so after sliding the
-    /// model sees shifted positions; for the pico models with short
-    /// windows this matches the serve example's windowed re-encode.
     pub fn truncate_front(&mut self, n: usize) {
-        let n = n.min(self.len);
-        for layer in self.k.iter_mut().chain(self.v.iter_mut()) {
-            layer.drain(..n * self.d);
-        }
-        self.len -= n;
+        self.arena.truncate_front(0, n);
     }
 }
 
 impl Transformer {
     /// Decode one token given the cached prefix; returns the logits for
     /// this position and appends this position's K/V to the cache.
+    ///
+    /// Thin delegate to [`Transformer::decode_step_batch`] over the
+    /// cache's single slot, so sequential and batched decode share one
+    /// datapath.
     pub fn decode_step(&self, token: u16, cache: &mut KvCache) -> Vec<f32> {
-        assert!(!cache.is_full(), "KV cache full (max_seq {})", cache.max_seq);
-        assert_eq!(cache.d, self.cfg.d_model);
+        self.decode_step_batch(&[token], &[0], &mut cache.arena)
+    }
+
+    /// Decode one token for **each** scheduled sequence in one batched
+    /// pass: `tokens[b]` is appended to arena slot `slots[b]`. Returns
+    /// row-major `tokens.len() × vocab` logits.
+    ///
+    /// Every linear runs one [`super::Linear::forward_rows`] call over
+    /// the whole batch (the fused qgemm kernel for quantized layers);
+    /// attention is ragged — slot `b` attends over its own
+    /// `len(slots[b]) + 1` cached positions at its own absolute
+    /// position. Each output row is bit-identical to decoding that
+    /// sequence alone.
+    pub fn decode_step_batch(
+        &self,
+        tokens: &[u16],
+        slots: &[usize],
+        arena: &mut KvArena,
+    ) -> Vec<f32> {
+        assert_eq!(tokens.len(), slots.len(), "one slot per token");
+        assert!(!tokens.is_empty(), "empty decode batch");
+        assert_eq!(arena.d, self.cfg.d_model);
+        let b = tokens.len();
         let d = self.cfg.d_model;
-        let pos = cache.len;
-        let mut h = vec![0.0f32; d];
-        let e = &self.embed[(token as usize) * d..(token as usize + 1) * d];
-        let p = &self.pos[pos * d..(pos + 1) * d];
-        for i in 0..d {
-            h[i] = e[i] + p[i];
+        for (i, &s) in slots.iter().enumerate() {
+            assert!(arena.live[s], "slot {s} not allocated");
+            assert!(!arena.is_full(s), "KV slot {s} full (max_seq {})", arena.max_seq);
+            // hard assert: a doubled slot would append_kv twice at one
+            // position and advance the length by 2, silently corrupting
+            // the sequence (batch widths are small, the scan is cheap)
+            assert!(!slots[..i].contains(&s), "slot {s} scheduled twice in one step");
         }
-        let mut scratch: Vec<i64> = Vec::new();
-        let mut ln_out = vec![0.0f32; d];
-        let mut q = vec![0.0f32; d];
-        let mut k_new = vec![0.0f32; d];
-        let mut v_new = vec![0.0f32; d];
-        let mut mix = vec![0.0f32; d];
-        let mut attn_out = vec![0.0f32; d];
-        let mut ff = vec![0.0f32; self.cfg.d_ff];
-        let mut ff_out = vec![0.0f32; d];
+
+        // token + absolute positional embedding per row
+        let mut h = vec![0.0f32; b * d];
+        for (r, (&tok, &slot)) in tokens.iter().zip(slots.iter()).enumerate() {
+            let e = &self.embed[(tok as usize) * d..(tok as usize + 1) * d];
+            let pos = arena.len(slot);
+            let p = &self.pos[pos * d..(pos + 1) * d];
+            for i in 0..d {
+                h[r * d + i] = e[i] + p[i];
+            }
+        }
+
+        let mut ln_out = vec![0.0f32; b * d];
+        let mut q = vec![0.0f32; b * d];
+        let mut k_new = vec![0.0f32; b * d];
+        let mut v_new = vec![0.0f32; b * d];
+        let mut mix = vec![0.0f32; b * d];
+        let mut attn_out = vec![0.0f32; b * d];
+        let mut ff = vec![0.0f32; b * self.cfg.d_ff];
+        let mut ff_out = vec![0.0f32; b * d];
 
         for (bi, blk) in self.blocks.iter().enumerate() {
-            blk.ln1.forward_row(&h, &mut ln_out);
-            blk.wq.forward_row(&ln_out, &mut q, &mut scratch);
-            blk.wk.forward_row(&ln_out, &mut k_new, &mut scratch);
-            blk.wv.forward_row(&ln_out, &mut v_new, &mut scratch);
-            cache.k[bi].extend_from_slice(&k_new);
-            cache.v[bi].extend_from_slice(&v_new);
-
-            // single-query causal attention over the cache
-            let n_heads = self.cfg.n_heads;
-            let hd = d / n_heads;
-            let scale = 1.0 / (hd as f32).sqrt();
-            let kc = &cache.k[bi];
-            let vc = &cache.v[bi];
-            let t_len = pos + 1;
-            let mut scores = vec![0.0f32; t_len];
-            for hh in 0..n_heads {
-                let off = hh * hd;
-                for (s, score) in scores.iter_mut().enumerate() {
-                    let krow = &kc[s * d + off..s * d + off + hd];
-                    let mut dot = 0.0f32;
-                    for i in 0..hd {
-                        dot += q[off + i] * krow[i];
-                    }
-                    *score = dot * scale;
-                }
-                softmax(&mut scores);
-                let orow = &mut mix[off..off + hd];
-                orow.iter_mut().for_each(|o| *o = 0.0);
-                for (s, &w) in scores.iter().enumerate() {
-                    if w == 0.0 {
-                        continue;
-                    }
-                    let vrow = &vc[s * d + off..s * d + off + hd];
-                    for i in 0..hd {
-                        orow[i] += w * vrow[i];
-                    }
-                }
+            for r in 0..b {
+                blk.ln1.forward_row(&h[r * d..(r + 1) * d], &mut ln_out[r * d..(r + 1) * d]);
             }
-            blk.wo.forward_row(&mix, &mut attn_out, &mut scratch);
-
+            blk.wq.forward_rows(&ln_out, b, &mut q);
+            blk.wk.forward_rows(&ln_out, b, &mut k_new);
+            blk.wv.forward_rows(&ln_out, b, &mut v_new);
+            for (r, &slot) in slots.iter().enumerate() {
+                arena.append_kv(bi, slot, &k_new[r * d..(r + 1) * d], &v_new[r * d..(r + 1) * d]);
+            }
+            // ragged single-query attention: each row over its own slot
+            for (r, &slot) in slots.iter().enumerate() {
+                let t_len = arena.len(slot) + 1;
+                let base = slot * arena.max_seq * d;
+                let kc = &arena.k[bi][base..base + t_len * d];
+                let vc = &arena.v[bi][base..base + t_len * d];
+                attend_one_query(
+                    &q[r * d..(r + 1) * d],
+                    kc,
+                    vc,
+                    t_len,
+                    d,
+                    self.cfg.n_heads,
+                    &mut mix[r * d..(r + 1) * d],
+                );
+            }
+            blk.wo.forward_rows(&mix, b, &mut attn_out);
             if !self.cfg.parallel_residual {
-                for i in 0..d {
+                for i in 0..b * d {
                     h[i] += attn_out[i];
                 }
             }
-            blk.ln2.forward_row(&h, &mut ln_out);
-            blk.fc1.forward_row(&ln_out, &mut ff, &mut scratch);
+            for r in 0..b {
+                blk.ln2.forward_row(&h[r * d..(r + 1) * d], &mut ln_out[r * d..(r + 1) * d]);
+            }
+            blk.fc1.forward_rows(&ln_out, b, &mut ff);
             self.cfg.act.apply_vec(&mut ff);
-            blk.fc2.forward_row(&ff, &mut ff_out, &mut scratch);
+            blk.fc2.forward_rows(&ff, b, &mut ff_out);
             if self.cfg.parallel_residual {
-                for i in 0..d {
+                for i in 0..b * d {
                     h[i] += attn_out[i] + ff_out[i];
                 }
             } else {
-                for i in 0..d {
+                for i in 0..b * d {
                     h[i] += ff_out[i];
                 }
             }
         }
-        cache.len += 1;
+        for &slot in slots {
+            arena.advance(slot, 1);
+        }
         let vocab = self.cfg.vocab;
-        let mut logits = vec![0.0f32; vocab];
-        self.ln_f.forward_row(&h, &mut ln_out);
-        self.head.forward_row(&ln_out, &mut logits);
+        let mut logits = vec![0.0f32; b * vocab];
+        for r in 0..b {
+            self.ln_f.forward_row(&h[r * d..(r + 1) * d], &mut ln_out[r * d..(r + 1) * d]);
+        }
+        self.head.forward_rows(&ln_out[..b * d], b, &mut logits);
         logits
     }
 
-    /// Prefill: push a whole prompt through the cache, returning the
-    /// logits of the final position.
+    /// Prefill: push a whole prompt through one cache slot, returning
+    /// the logits of the final position.
     ///
-    /// On an empty cache this runs **batched**: every linear processes
+    /// On an empty slot this runs **batched**: every linear processes
     /// the whole prompt in one [`super::Linear::forward_rows`] call (the
     /// fused qgemm kernel for quantized layers) and the causal attention
     /// helper mixes all positions at once — the serving prefill fast
-    /// path. On a non-empty cache it falls back to token-by-token
+    /// path. On a non-empty slot it falls back to token-by-token
     /// decoding over the existing prefix.
-    pub fn prefill(&self, tokens: &[u16], cache: &mut KvCache) -> Vec<f32> {
+    pub fn prefill_slot(&self, tokens: &[u16], slot: usize, arena: &mut KvArena) -> Vec<f32> {
         assert!(!tokens.is_empty());
-        if !cache.is_empty() {
+        assert!(arena.live[slot], "slot {slot} not allocated");
+        if !arena.is_empty(slot) {
             let mut last = Vec::new();
             for &t in tokens {
-                last = self.decode_step(t, cache);
+                last = self.decode_step_batch(&[t], &[slot], arena);
             }
             return last;
         }
-        assert_eq!(cache.d, self.cfg.d_model);
+        assert_eq!(arena.d, self.cfg.d_model);
         let d = self.cfg.d_model;
         let seq = tokens.len();
-        assert!(seq <= cache.max_seq, "prompt longer than the context window");
+        assert!(seq <= arena.max_seq, "prompt longer than the context window");
 
         let mut h = vec![0.0f32; seq * d];
         for (t, &tok) in tokens.iter().enumerate() {
@@ -206,9 +351,12 @@ impl Transformer {
             blk.wq.forward_rows(&ln_out, seq, &mut q);
             blk.wk.forward_rows(&ln_out, seq, &mut k_new);
             blk.wv.forward_rows(&ln_out, seq, &mut v_new);
-            cache.k[bi].extend_from_slice(&k_new);
-            cache.v[bi].extend_from_slice(&v_new);
-            attention(&q, &k_new, &v_new, seq, d, self.cfg.n_heads, true, &mut mix);
+            {
+                let base = slot * arena.max_seq * d;
+                arena.k[bi][base..base + seq * d].copy_from_slice(&k_new);
+                arena.v[bi][base..base + seq * d].copy_from_slice(&v_new);
+            }
+            super::layers::attention(&q, &k_new, &v_new, seq, d, self.cfg.n_heads, true, &mut mix);
             blk.wo.forward_rows(&mix, seq, &mut attn_out);
             if !self.cfg.parallel_residual {
                 for i in 0..seq * d {
@@ -231,13 +379,38 @@ impl Transformer {
                 }
             }
         }
-        cache.len += seq;
+        arena.advance(slot, seq);
         // logits for the final position only
         let mut ln_last = vec![0.0f32; d];
         self.ln_f.forward_row(&h[(seq - 1) * d..], &mut ln_last);
         let mut logits = vec![0.0f32; self.cfg.vocab];
-        self.head.forward_row(&ln_last, &mut logits);
+        self.head.forward_rows(&ln_last, 1, &mut logits);
         logits
+    }
+
+    /// Prefill a whole prompt through a single-sequence cache.
+    pub fn prefill(&self, tokens: &[u16], cache: &mut KvCache) -> Vec<f32> {
+        self.prefill_slot(tokens, 0, &mut cache.arena)
+    }
+
+    /// Longest servable prompt suffix: the last `max_seq - 1` tokens,
+    /// so prefill plus one decode step always fit the window. Shared by
+    /// every serving path so clipping stays in lockstep with
+    /// [`Transformer::generate_greedy`].
+    pub fn clip_to_window(&self, prompt: &[u16]) -> Vec<u16> {
+        let max_seq = self.cfg.max_seq;
+        if prompt.len() >= max_seq {
+            prompt[prompt.len() - (max_seq - 1)..].to_vec()
+        } else {
+            prompt.to_vec()
+        }
+    }
+
+    /// Context tokens re-encoded when a full sequence slides its
+    /// window — the single source of truth for the slide, which every
+    /// decode path must share for token-exact parity.
+    pub fn slide_keep(&self) -> usize {
+        self.cfg.max_seq / 2
     }
 
     /// Greedy generation: prompt → `n` new tokens.
@@ -248,7 +421,7 @@ impl Transformer {
         for _ in 0..n {
             if cache.is_full() {
                 // slide the window by re-encoding the tail
-                let keep = self.cfg.max_seq / 2;
+                let keep = self.slide_keep();
                 let tail = out[out.len() - keep..].to_vec();
                 cache.clear();
                 logits = self.prefill(&tail, &mut cache);
@@ -261,7 +434,9 @@ impl Transformer {
     }
 }
 
-fn argmax(xs: &[f32]) -> usize {
+/// Index of the first maximum — the tie-break every greedy path in this
+/// crate must share for token-exact parity across batch shapes.
+pub fn argmax(xs: &[f32]) -> usize {
     let mut best = 0;
     for (i, &v) in xs.iter().enumerate() {
         if v > xs[best] {
@@ -363,5 +538,130 @@ mod tests {
         assert_eq!(cache.len(), 5);
         cache.clear();
         assert!(cache.is_empty());
+    }
+
+    /// THE batched-decode parity property: stacking several sequences
+    /// into one `decode_step_batch` call must produce, for every
+    /// sequence, logits **bit-identical** to decoding it alone through a
+    /// single-slot cache.
+    #[test]
+    fn batched_decode_is_bit_exact_vs_single() {
+        for parallel in [false, true] {
+            let m = model(parallel);
+            let vocab = m.cfg.vocab;
+            let seqs: Vec<Vec<u16>> = vec![
+                vec![3, 1, 4, 1, 5],
+                vec![9, 2, 6, 5, 3],
+                vec![8, 9, 7, 9, 3],
+            ];
+            // reference: each sequence decoded alone
+            let mut want: Vec<Vec<f32>> = Vec::new();
+            for s in &seqs {
+                let mut cache = KvCache::new(&m);
+                let mut last = Vec::new();
+                for &t in s {
+                    last = m.decode_step(t, &mut cache);
+                }
+                want.push(last);
+            }
+            // batched: all three in one arena, one step per position
+            let mut arena = KvArena::new(&m, 3);
+            let slots: Vec<usize> = (0..3).map(|_| arena.alloc().unwrap()).collect();
+            let mut got = Vec::new();
+            for pos in 0..seqs[0].len() {
+                let toks: Vec<u16> = seqs.iter().map(|s| s[pos]).collect();
+                got = m.decode_step_batch(&toks, &slots, &mut arena);
+            }
+            for (b, w) in want.iter().enumerate() {
+                assert_eq!(
+                    &got[b * vocab..(b + 1) * vocab],
+                    &w[..],
+                    "parallel={parallel} seq {b} diverged under batching"
+                );
+            }
+        }
+    }
+
+    /// Ragged batches: sequences of different lengths share steps, and a
+    /// late joiner admitted mid-flight stays bit-exact.
+    #[test]
+    fn ragged_batch_with_late_join_is_exact() {
+        let m = model(false);
+        let vocab = m.cfg.vocab;
+        let a: Vec<u16> = vec![1, 2, 3, 4, 5, 6, 7];
+        let b: Vec<u16> = vec![11, 12, 13];
+        // reference
+        let seq_logits = |s: &[u16]| {
+            let mut cache = KvCache::new(&m);
+            let mut last = Vec::new();
+            for &t in s {
+                last = m.decode_step(t, &mut cache);
+            }
+            last
+        };
+        let want_a = seq_logits(&a);
+        let want_b = seq_logits(&b);
+        // batched: a decodes alone for 4 steps, then b joins (prefill
+        // would be the serving path; token steps exercise raggedness)
+        let mut arena = KvArena::new(&m, 2);
+        let sa = arena.alloc().unwrap();
+        let mut got_a = Vec::new();
+        for &t in &a[..4] {
+            got_a = m.decode_step_batch(&[t], &[sa], &mut arena);
+        }
+        let sb = arena.alloc().unwrap();
+        for i in 0..3 {
+            let logits = m.decode_step_batch(&[a[4 + i], b[i]], &[sa, sb], &mut arena);
+            got_a = logits[..vocab].to_vec();
+            if i == 2 {
+                assert_eq!(&logits[vocab..], &want_b[..], "late joiner diverged");
+            }
+        }
+        assert_eq!(got_a, want_a, "long-running sequence diverged");
+    }
+
+    #[test]
+    fn arena_slot_reuse_after_release() {
+        let m = model(true);
+        let mut arena = KvArena::new(&m, 2);
+        let s0 = arena.alloc().unwrap();
+        let s1 = arena.alloc().unwrap();
+        assert!(arena.alloc().is_none(), "over-allocation must fail");
+        m.decode_step_batch(&[5, 6], &[s0, s1], &mut arena);
+        m.decode_step_batch(&[7], &[s0], &mut arena);
+        assert_eq!(arena.len(s0), 2);
+        assert_eq!(arena.len(s1), 1);
+        // retire s0; the slot comes back empty and decodes a fresh
+        // sequence bit-exactly
+        arena.release(s0);
+        assert_eq!(arena.free_slots(), 1);
+        let s2 = arena.alloc().unwrap();
+        assert_eq!(s2, s0, "LIFO free list must reuse the retired slot");
+        assert_eq!(arena.len(s2), 0);
+        let got = m.decode_step_batch(&[9], &[s2], &mut arena);
+        let mut cache = KvCache::new(&m);
+        let want = m.decode_step(9, &mut cache);
+        assert_eq!(got, want, "reused slot must behave like a fresh cache");
+        // the surviving slot was untouched by the reuse
+        assert_eq!(arena.len(s1), 1);
+    }
+
+    #[test]
+    fn arena_guards() {
+        let m = model(false);
+        let mut arena = KvArena::new(&m, 2);
+        let s = arena.alloc().unwrap();
+        // scheduling a free slot panics
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut a2 = arena.clone();
+            m.decode_step_batch(&[1], &[s + 1], &mut a2);
+        }));
+        assert!(r.is_err(), "free slot must be rejected");
+        // mismatched tokens/slots panics
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut a2 = arena.clone();
+            m.decode_step_batch(&[1, 2], &[s], &mut a2);
+        }));
+        assert!(r.is_err(), "token/slot length mismatch must be rejected");
     }
 }

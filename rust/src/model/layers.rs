@@ -85,6 +85,12 @@ pub fn softmax(xs: &mut [f32]) {
 /// Causal (or full) multi-head self-attention over a (seq, d) activation
 /// buffer. q, k, v are (seq, d) with `n_heads` heads of size d/n_heads.
 /// Writes the mixed values (pre-projection) into `out`.
+///
+/// Delegates every query row to [`attend_one_query`] (each (row, head)
+/// pair is independent, so the nesting order is free) — prefill
+/// attention and batched-decode attention therefore run the *same*
+/// arithmetic, the invariant the serving engine's token-exactness
+/// rests on.
 #[allow(clippy::too_many_arguments)]
 pub fn attention(
     q: &[f32],
@@ -100,33 +106,64 @@ pub fn attention(
     assert_eq!(out.len(), seq * d);
     let hd = d / n_heads;
     assert_eq!(hd * n_heads, d, "d must divide n_heads");
+    for t in 0..seq {
+        let limit = if causal { t + 1 } else { seq };
+        attend_one_query(
+            &q[t * d..(t + 1) * d],
+            k,
+            v,
+            limit,
+            d,
+            n_heads,
+            &mut out[t * d..(t + 1) * d],
+        );
+    }
+}
+
+/// Single-query multi-head attention of one new position over `t_len`
+/// cached positions — the ragged-batch decode primitive: each in-flight
+/// sequence calls this over its **own** KV slab and length, so a
+/// batched step needs no cross-sequence masking at all.
+///
+/// `q` is one (d,) query row; `kc`/`vc` are `(t_len, d)` cached
+/// keys/values (the new position's K/V already appended). Writes the
+/// mixed values (pre-projection) into `out`.
+pub fn attend_one_query(
+    q: &[f32],
+    kc: &[f32],
+    vc: &[f32],
+    t_len: usize,
+    d: usize,
+    n_heads: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(q.len(), d);
+    debug_assert_eq!(out.len(), d);
+    debug_assert!(kc.len() >= t_len * d && vc.len() >= t_len * d);
+    let hd = d / n_heads;
+    debug_assert_eq!(hd * n_heads, d, "d must divide n_heads");
     let scale = 1.0 / (hd as f32).sqrt();
-    let mut scores = vec![0.0f32; seq];
+    let mut scores = vec![0.0f32; t_len];
     for h in 0..n_heads {
         let off = h * hd;
-        for t in 0..seq {
-            let limit = if causal { t + 1 } else { seq };
-            let qrow = &q[t * d + off..t * d + off + hd];
-            for (s, score) in scores.iter_mut().enumerate().take(limit) {
-                let krow = &k[s * d + off..s * d + off + hd];
-                let mut dotv = 0.0f32;
-                for i in 0..hd {
-                    dotv += qrow[i] * krow[i];
-                }
-                *score = dotv * scale;
+        for (s, score) in scores.iter_mut().enumerate() {
+            let krow = &kc[s * d + off..s * d + off + hd];
+            let mut dot = 0.0f32;
+            for i in 0..hd {
+                dot += q[off + i] * krow[i];
             }
-            softmax(&mut scores[..limit]);
-            let orow = &mut out[t * d + off..t * d + off + hd];
-            orow.iter_mut().for_each(|o| *o = 0.0);
-            for s in 0..limit {
-                let w = scores[s];
-                if w == 0.0 {
-                    continue;
-                }
-                let vrow = &v[s * d + off..s * d + off + hd];
-                for i in 0..hd {
-                    orow[i] += w * vrow[i];
-                }
+            *score = dot * scale;
+        }
+        softmax(&mut scores);
+        let orow = &mut out[off..off + hd];
+        orow.iter_mut().for_each(|o| *o = 0.0);
+        for (s, &w) in scores.iter().enumerate() {
+            if w == 0.0 {
+                continue;
+            }
+            let vrow = &vc[s * d + off..s * d + off + hd];
+            for i in 0..hd {
+                orow[i] += w * vrow[i];
             }
         }
     }
@@ -221,5 +258,29 @@ mod tests {
         attention(&q, &k, &v, seq, d, 1, true, &mut out);
         assert!((out[0] - 1.0).abs() < 1e-6, "token 0 attends only to itself");
         assert!((out[1 * d] - 1.5).abs() < 1e-6, "token 1 averages tokens 0,1");
+    }
+
+    #[test]
+    fn one_query_matches_last_causal_row() {
+        // attend_one_query over a full cache must equal the final row of
+        // the batched causal helper, bit for bit (same loop order).
+        let (seq, d, heads) = (5usize, 8usize, 2usize);
+        let mut q = vec![0.0f32; seq * d];
+        let mut k = vec![0.0f32; seq * d];
+        let mut v = vec![0.0f32; seq * d];
+        for (i, x) in q.iter_mut().enumerate() {
+            *x = ((i * 37 % 11) as f32 - 5.0) * 0.13;
+        }
+        for (i, x) in k.iter_mut().enumerate() {
+            *x = ((i * 23 % 13) as f32 - 6.0) * 0.11;
+        }
+        for (i, x) in v.iter_mut().enumerate() {
+            *x = ((i * 41 % 7) as f32 - 3.0) * 0.17;
+        }
+        let mut full = vec![0.0f32; seq * d];
+        attention(&q, &k, &v, seq, d, heads, true, &mut full);
+        let mut one = vec![0.0f32; d];
+        attend_one_query(&q[(seq - 1) * d..], &k, &v, seq, d, heads, &mut one);
+        assert_eq!(&full[(seq - 1) * d..], &one[..]);
     }
 }

@@ -47,6 +47,44 @@ impl FloatLinear {
         }
     }
 
+    /// Batched y = W x + b over `rows` stacked input rows, routed
+    /// through [`crate::linalg::Mat`]'s banded multi-threaded GEMM — the
+    /// float-path analogue of the fused qgemm dispatch, so float
+    /// baselines and mixed models batch the same way quantized ones do.
+    ///
+    /// Every output row is computed independently of its batchmates
+    /// (the GEMM parallelizes over row bands and accumulates each
+    /// element sequentially in f64), so per-row results are
+    /// **batch-size invariant** — the property batched decode's
+    /// token-exactness rests on.
+    pub fn forward_rows(&self, xs: &[f32], rows: usize, ys: &mut [f32]) {
+        debug_assert_eq!(xs.len(), rows * self.in_dim);
+        debug_assert_eq!(ys.len(), rows * self.out_dim);
+        // The weights are converted per call: `w` is a pub field that
+        // calibration (equalization/smoothing) rescales in place, so a
+        // cached f64 copy could go stale and corrupt logits. The
+        // conversion is one O(out·in) pass against the O(rows·out·in)
+        // GEMM, and a cheaper rows==1 special case is ruled out — every
+        // row must be computed identically at every batch size.
+        let a = crate::linalg::Mat::from_vec(
+            rows,
+            self.in_dim,
+            xs.iter().map(|&v| v as f64).collect(),
+        );
+        let w = crate::linalg::Mat::from_vec(
+            self.out_dim,
+            self.in_dim,
+            self.w.iter().map(|&v| v as f64).collect(),
+        );
+        let y = a.matmul_bt(&w); // rows × out_dim
+        for r in 0..rows {
+            let yrow = &mut ys[r * self.out_dim..(r + 1) * self.out_dim];
+            for (o, (yo, &acc)) in yrow.iter_mut().zip(y.row(r).iter()).enumerate() {
+                *yo = acc as f32 + self.b[o];
+            }
+        }
+    }
+
     /// Weight matrix as K×C f64 (input-major) for the PTQ algorithms.
     pub fn weights_kc(&self) -> crate::linalg::Mat {
         crate::linalg::Mat::from_fn(self.in_dim, self.out_dim, |k, c| {
@@ -302,17 +340,11 @@ impl Linear {
     }
 
     /// Batched y = W x + b over `rows` stacked input rows. Quantized
-    /// layers run one fused qgemm call across every row and channel.
+    /// layers run one fused qgemm call across every row and channel;
+    /// float layers run one banded f64 GEMM ([`FloatLinear::forward_rows`]).
     pub fn forward_rows(&self, xs: &[f32], rows: usize, ys: &mut [f32]) {
         match self {
-            Linear::Float(l) => {
-                for r in 0..rows {
-                    l.forward_row(
-                        &xs[r * l.in_dim..(r + 1) * l.in_dim],
-                        &mut ys[r * l.out_dim..(r + 1) * l.out_dim],
-                    );
-                }
-            }
+            Linear::Float(l) => l.forward_rows(xs, rows, ys),
             Linear::Quant(l) => l.forward_rows(xs, rows, ys),
         }
     }
@@ -488,6 +520,29 @@ mod tests {
                 ql.forward_row(&xs[r * 64..(r + 1) * 64], &mut y, &mut scratch);
                 assert_eq!(&batched[r * 12..(r + 1) * 12], &y[..], "row {r}");
             }
+        }
+    }
+
+    #[test]
+    fn float_forward_rows_batches_and_stays_row_invariant() {
+        let fl = random_float_linear(48, 10, 105);
+        let mut rng = Rng::new(106);
+        let rows = 7;
+        let xs: Vec<f32> = (0..rows * 48).map(|_| rng.normal() as f32).collect();
+        let mut batched = vec![0.0f32; rows * 10];
+        fl.forward_rows(&xs, rows, &mut batched);
+        for r in 0..rows {
+            // approximates the f32 per-row loop (f64 accumulation)…
+            let mut y = vec![0.0f32; 10];
+            fl.forward_row(&xs[r * 48..(r + 1) * 48], &mut y);
+            for (a, b) in batched[r * 10..(r + 1) * 10].iter().zip(&y) {
+                assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+            }
+            // …and is bit-identical regardless of batch composition,
+            // the invariant batched decode parity rests on.
+            let mut alone = vec![0.0f32; 10];
+            fl.forward_rows(&xs[r * 48..(r + 1) * 48], 1, &mut alone);
+            assert_eq!(&batched[r * 10..(r + 1) * 10], &alone[..], "row {r}");
         }
     }
 

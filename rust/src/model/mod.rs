@@ -13,8 +13,8 @@ pub mod loader;
 pub mod mlp;
 pub mod transformer;
 
-pub use decode::KvCache;
-pub use layers::{attention, softmax, Activation, LayerNorm};
+pub use decode::{argmax, KvArena, KvCache};
+pub use layers::{attend_one_query, attention, softmax, Activation, LayerNorm};
 pub use linear::{Datapath, FloatLinear, Linear, QuantLinear};
 pub use loader::{
     list_models, load_model, load_named, read_f32_bin, read_f32_bin_any, write_f32_bin, Model,

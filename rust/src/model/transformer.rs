@@ -259,13 +259,15 @@ impl Transformer {
                 }
             }
         }
-        // final norm + head
+        // final norm + head — one banded GEMM over every position, the
+        // same head datapath `decode_step_batch`/`prefill` run, so full
+        // recompute and incremental decode stay numerically identical
         let vocab = self.cfg.vocab;
-        let mut logits = vec![0.0f32; seq * vocab];
         for t in 0..seq {
             blk_ln(&self.ln_f, &h[t * d..(t + 1) * d], &mut ln_out[t * d..(t + 1) * d]);
-            self.head.forward_row(&ln_out[t * d..(t + 1) * d], &mut logits[t * vocab..(t + 1) * vocab]);
         }
+        let mut logits = vec![0.0f32; seq * vocab];
+        self.head.forward_rows(&ln_out, seq, &mut logits);
         logits
     }
 

@@ -122,3 +122,62 @@ fn batched_prefill_matches_forward_and_decode() {
         assert!((a - b).abs() < 1e-4, "prefill vs decode: {a} {b}");
     }
 }
+
+/// Continuous-batched serving on the faithful (fused-kernel) datapath
+/// must emit, for every request, exactly the tokens sequential greedy
+/// decode emits — the end-to-end guarantee the step scheduler rests on
+/// (ragged batching, mid-flight admissions and window slides included)
+/// — and the serve report must surface overflow accounting.
+#[test]
+fn continuous_batched_serving_is_token_exact_on_quantized_model() {
+    use axe::coordinator::serve::{serve, Request, ServeQueue, ServeStats};
+    use std::time::Instant;
+
+    let (base, toks) = lm_fixture(7030);
+    let calib: Vec<&[u16]> = toks.chunks_exact(16).take(4).collect();
+    let mut cfg = PipelineConfig::new(Algorithm::Optq, Method::Axe, 4, 8);
+    cfg.target = AccumTarget::MultiStage { p_inner: 14, tile: 8 };
+    cfg.datapath = DatapathMode::Faithful;
+    let mut m = base.clone();
+    let report = quantize_transformer(&mut m, &calib, &cfg).unwrap();
+    assert!(report.guaranteed_safe());
+
+    // mixed prompt lengths and generation lengths past the window so
+    // slots slide and requests join/leave mid-flight (6 reqs, 3 slots)
+    let reqs: Vec<Request> = (0..6u64)
+        .map(|id| {
+            let plen = 2 + ((id as usize * 3) % 9);
+            Request {
+                id,
+                prompt: toks[id as usize * 16..id as usize * 16 + plen].to_vec(),
+                max_new_tokens: 6 + ((id as usize * 9) % 20),
+            }
+        })
+        .collect();
+    let q = ServeQueue::new();
+    for r in &reqs {
+        q.submit(r.clone());
+    }
+    q.close();
+    let ovf_before = m.overflow_events();
+    let t0 = Instant::now();
+    serve(&m, &q, 1, 3);
+    let responses = q.drain();
+    let stats = ServeStats::from_responses(
+        &responses,
+        t0.elapsed().as_secs_f64(),
+        m.overflow_events() - ovf_before,
+    );
+    assert_eq!(stats.requests, reqs.len());
+    assert_eq!(stats.overflow_events, 0, "guaranteed-safe model must not overflow");
+    for (resp, req) in responses.iter().zip(reqs.iter()) {
+        assert_eq!(resp.id, req.id);
+        let want = m.generate_greedy(&req.prompt, req.max_new_tokens);
+        assert_eq!(
+            resp.tokens,
+            want[req.prompt.len()..],
+            "request {} diverged from sequential greedy decode",
+            req.id
+        );
+    }
+}
