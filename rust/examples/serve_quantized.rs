@@ -127,13 +127,12 @@ fn main() -> anyhow::Result<()> {
         });
     }
     queue.close();
-    let ovf_before = qmodel.overflow_events();
     let t2 = Instant::now();
     serve(&qmodel, &queue, 1, batch);
     let kv_out = queue.drain();
     let kv_s = t2.elapsed().as_secs_f64();
-    let ovf_delta = qmodel.overflow_events() - ovf_before;
-    let kv_stats = ServeStats::from_responses(&kv_out, kv_s, ovf_delta);
+    // overflow events are summed from the exact per-request counters
+    let kv_stats = ServeStats::from_responses(&kv_out, kv_s);
 
     // agreement
     let mut agree = 0usize;

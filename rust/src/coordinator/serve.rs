@@ -16,9 +16,14 @@
 //! [`Transformer::generate_greedy`] per sequence, and every batched
 //! kernel row is computed independently of its batchmates, so each
 //! response is bit-identical to serving that request alone (tested
-//! below and in `tests/qgemm_parity.rs`).
+//! below and in `tests/qgemm_parity.rs`). The same row independence
+//! makes overflow accounting **exact**: the kernels report per-row
+//! event counts, so each [`Response`] carries precisely the events its
+//! own prefills, decode rows and (on the quantized-KV backend,
+//! [`serve_with`]) attention matmuls produced — not a batch-window
+//! bound.
 
-use crate::model::{argmax, KvArena, Transformer};
+use crate::model::{argmax, KvArena, KvCacheKind, Transformer};
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
@@ -40,11 +45,13 @@ pub struct Response {
     pub queued_s: f64,
     /// Generation time in seconds (admission → retirement).
     pub gen_s: f64,
-    /// Model-wide overflow-event counter delta while this request was
-    /// in flight. Overflow counters are per-layer totals, so under
-    /// batched load this window also covers co-scheduled requests —
-    /// it bounds this request's own events and shows the overflow
-    /// behavior of the traffic it rode in.
+    /// Integer-datapath overflow events attributed to **this request
+    /// exactly**: its admission prefill and window-slide re-prefills,
+    /// plus its own rows of every batched decode step it rode in
+    /// (quantized linear layers and, on the quantized-KV backend, its
+    /// attention matmuls). Per-row kernel attribution makes the counts
+    /// disjoint across co-scheduled requests and invariant to batch
+    /// composition.
     pub overflow_events: u64,
 }
 
@@ -154,16 +161,19 @@ pub struct ServeStats {
     pub p50_latency_s: f64,
     pub p99_latency_s: f64,
     pub mean_queue_s: f64,
-    /// Total overflow events observed model-wide across the serve run
-    /// (the counter delta the caller measured around [`serve`]).
+    /// Total overflow events across the serve run — the sum of the
+    /// exact per-request counts (attribution is disjoint, so the sum
+    /// is the model-wide total for the run's forward work).
     pub overflow_events: u64,
+    /// KV arena footprint in bytes per engine (0 when the caller did
+    /// not fill it in; see [`crate::model::KvArena::footprint`]).
+    pub arena_bytes: usize,
 }
 
 impl ServeStats {
-    /// Aggregate responses plus the model-wide overflow-event delta
-    /// measured across the serve run (per-request windows overlap under
-    /// batching, so the total is passed in rather than summed).
-    pub fn from_responses(responses: &[Response], wall_s: f64, overflow: u64) -> ServeStats {
+    /// Aggregate responses; overflow events are summed from the exact
+    /// per-request counters.
+    pub fn from_responses(responses: &[Response], wall_s: f64) -> ServeStats {
         let mut latencies: Vec<f64> = responses.iter().map(|r| r.queued_s + r.gen_s).collect();
         latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let total_tokens: usize = responses.iter().map(|r| r.tokens.len()).sum();
@@ -183,7 +193,8 @@ impl ServeStats {
             p99_latency_s: pct(0.99),
             mean_queue_s: responses.iter().map(|r| r.queued_s).sum::<f64>()
                 / responses.len().max(1) as f64,
-            overflow_events: overflow,
+            overflow_events: responses.iter().map(|r| r.overflow_events).sum(),
+            arena_bytes: 0,
         }
     }
 }
@@ -202,25 +213,41 @@ struct InFlight {
     logits: Vec<f32>,
     enqueued: Instant,
     admitted: Instant,
-    overflow_at_admit: u64,
+    /// Exact overflow events this request has triggered so far
+    /// (prefills + its rows of every batched step).
+    overflow: u64,
 }
 
 /// Run `engines` continuous-batching engine threads off the queue, each
-/// with `max_batch` in-flight slots. Returns when the queue is closed
-/// and fully drained.
+/// with `max_batch` in-flight slots over an f32 KV arena. Returns when
+/// the queue is closed and fully drained.
 pub fn serve(model: &Transformer, queue: &ServeQueue, engines: usize, max_batch: usize) {
+    serve_with(model, queue, engines, max_batch, KvCacheKind::F32);
+}
+
+/// [`serve`] with an explicit KV-cache backend: `KvCacheKind::Quant`
+/// stores each engine's arena as narrow integer codes and runs the
+/// attention score/value matmuls through the multi-stage integer
+/// accumulator — the `--kv-bits` deployment path.
+pub fn serve_with(
+    model: &Transformer,
+    queue: &ServeQueue,
+    engines: usize,
+    max_batch: usize,
+    kind: KvCacheKind,
+) {
     std::thread::scope(|scope| {
         for _ in 0..engines.max(1) {
-            scope.spawn(|| run_engine(model, queue, max_batch.max(1)));
+            scope.spawn(move || run_engine(model, queue, max_batch.max(1), kind));
         }
     });
 }
 
 /// The step scheduler: admit → (slide | sample | retire) → one batched
 /// decode step, until the queue closes and the batch drains.
-fn run_engine(model: &Transformer, queue: &ServeQueue, max_batch: usize) {
+fn run_engine(model: &Transformer, queue: &ServeQueue, max_batch: usize, kind: KvCacheKind) {
     let vocab = model.cfg.vocab;
-    let mut arena = KvArena::new(model, max_batch);
+    let mut arena = KvArena::with_kind(model, max_batch, kind);
     let mut active: Vec<InFlight> = Vec::new();
     loop {
         // -- admission: block when idle, poll when the batch has work
@@ -249,8 +276,8 @@ fn run_engine(model: &Transformer, queue: &ServeQueue, max_batch: usize) {
             }
             let slot = arena.alloc().expect("admission is bounded by free slots");
             let prompt = model.clip_to_window(&req.prompt);
-            let overflow_at_admit = model.overflow_events();
-            let logits = model.prefill_slot(&prompt, slot, &mut arena);
+            let mut prefill_ovf = 0u64;
+            let logits = model.prefill_slot_counted(&prompt, slot, &mut arena, &mut prefill_ovf);
             active.push(InFlight {
                 id: req.id,
                 slot,
@@ -260,7 +287,7 @@ fn run_engine(model: &Transformer, queue: &ServeQueue, max_batch: usize) {
                 logits,
                 enqueued,
                 admitted,
-                overflow_at_admit,
+                overflow: prefill_ovf,
             });
         }
 
@@ -275,7 +302,10 @@ fn run_engine(model: &Transformer, queue: &ServeQueue, max_batch: usize) {
                     let keep = model.slide_keep();
                     let tail = seq.context[seq.context.len() - keep..].to_vec();
                     arena.reset_slot(seq.slot);
-                    seq.logits = model.prefill_slot(&tail, seq.slot, &mut arena);
+                    let mut slide_ovf = 0u64;
+                    seq.logits =
+                        model.prefill_slot_counted(&tail, seq.slot, &mut arena, &mut slide_ovf);
+                    seq.overflow += slide_ovf;
                     seq.context = tail;
                 }
                 let next = argmax(&seq.logits) as u16;
@@ -291,7 +321,7 @@ fn run_engine(model: &Transformer, queue: &ServeQueue, max_batch: usize) {
                     tokens: seq.emitted,
                     queued_s: seq.admitted.duration_since(seq.enqueued).as_secs_f64(),
                     gen_s: seq.admitted.elapsed().as_secs_f64(),
-                    overflow_events: model.overflow_events() - seq.overflow_at_admit,
+                    overflow_events: seq.overflow,
                 });
             } else {
                 i += 1;
@@ -299,12 +329,16 @@ fn run_engine(model: &Transformer, queue: &ServeQueue, max_batch: usize) {
         }
 
         // -- one decode step for every sequence still in flight: the
-        // whole batch goes through one forward_rows per linear
+        // whole batch goes through one forward_rows per linear; the
+        // kernel's per-row overflow counts land on the requests that
+        // produced them
         if !active.is_empty() {
             let tokens: Vec<u16> = active.iter().map(|s| *s.context.last().unwrap()).collect();
             let slots: Vec<usize> = active.iter().map(|s| s.slot).collect();
-            let logits = model.decode_step_batch(&tokens, &slots, &mut arena);
+            let mut row_ovf = vec![0u64; active.len()];
+            let logits = model.decode_step_batch_counted(&tokens, &slots, &mut arena, &mut row_ovf);
             for (b, seq) in active.iter_mut().enumerate() {
+                seq.overflow += row_ovf[b];
                 seq.logits.clear();
                 seq.logits.extend_from_slice(&logits[b * vocab..(b + 1) * vocab]);
             }
@@ -357,7 +391,7 @@ mod tests {
             assert_eq!(r.id, i as u64);
             assert_eq!(r.tokens.len(), 5);
         }
-        let stats = ServeStats::from_responses(&responses, t0.elapsed().as_secs_f64(), 0);
+        let stats = ServeStats::from_responses(&responses, t0.elapsed().as_secs_f64());
         assert_eq!(stats.requests, 12);
         assert_eq!(stats.total_tokens, 60);
         assert!(stats.p99_latency_s >= stats.p50_latency_s);
@@ -415,6 +449,46 @@ mod tests {
         }
     }
 
+    /// Continuous batching over the **quantized** KV arena must be
+    /// token-exact versus sequential greedy decode on that same
+    /// backend — the serving guarantee survives the integer attention
+    /// datapath.
+    #[test]
+    fn quant_kv_serving_matches_quant_sequential() {
+        use crate::model::KvQuantSpec;
+        let m = model();
+        let kind = KvCacheKind::Quant(KvQuantSpec::int8());
+        let q = ServeQueue::new();
+        let reqs: Vec<Request> = (0..6u64)
+            .map(|id| {
+                let off = id as usize;
+                let plen = 1 + ((off * 5) % 12);
+                Request {
+                    id,
+                    prompt: (0..plen).map(|i| ((i * 7 + off) % 32) as u16).collect(),
+                    max_new_tokens: 3 + ((off * 11) % 22),
+                }
+            })
+            .collect();
+        for r in &reqs {
+            q.submit(r.clone());
+        }
+        q.close();
+        serve_with(&m, &q, 1, 3, kind);
+        let responses = q.drain();
+        assert_eq!(responses.len(), reqs.len());
+        for (resp, req) in responses.iter().zip(reqs.iter()) {
+            let clipped = m.clip_to_window(&req.prompt);
+            let want = m.generate_greedy_with(&clipped, req.max_new_tokens, kind);
+            assert_eq!(
+                resp.tokens,
+                want[clipped.len()..],
+                "request {} diverged from sequential quant-KV decode",
+                req.id
+            );
+        }
+    }
+
     #[test]
     fn zero_token_request_completes_empty() {
         let m = model();
@@ -461,13 +535,15 @@ mod tests {
                 tokens: vec![0; 2],
                 queued_s: 0.0,
                 gen_s: (i + 1) as f64 / 100.0,
-                overflow_events: 0,
+                overflow_events: i % 5,
             })
             .collect();
-        let s = ServeStats::from_responses(&resp, 1.0, 7);
+        let s = ServeStats::from_responses(&resp, 1.0);
         assert!((s.p50_latency_s - 0.5).abs() < 0.02);
         assert!((s.p99_latency_s - 0.99).abs() < 0.02);
         assert_eq!(s.total_tokens, 200);
-        assert_eq!(s.overflow_events, 7);
+        // per-request counts are disjoint, so the total is their sum
+        assert_eq!(s.overflow_events, (0..100u64).map(|i| i % 5).sum::<u64>());
+        assert_eq!(s.arena_bytes, 0, "arena bytes are caller-filled");
     }
 }

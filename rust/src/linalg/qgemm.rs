@@ -60,8 +60,11 @@ pub fn qgemm_exact(x: &[i64], rows: usize, w: &[i32], c: usize, k: usize, out: &
 
 /// Fused multi-stage integer GEMM, bit-for-bit equal to evaluating
 /// [`crate::accum::simulator::dot_multistage`] at every `(row, channel)`
-/// pair. Returns the total number of overflow events (0 whenever the
-/// codes honour their accumulator guarantee).
+/// pair. Returns **per-row** overflow-event counts (`len == rows`, all
+/// zeros whenever the codes honour their accumulator guarantee) — the
+/// serving engine uses them to attribute overflow events to the
+/// individual sequences stacked into one batched call; sum the vector
+/// for the call total.
 ///
 /// Layouts match [`qgemm_exact`]; `tile`, `inner` and `outer` match the
 /// simulator's multi-stage datapath (Fig. 2b / Eq. 22).
@@ -76,29 +79,33 @@ pub fn qgemm_multistage(
     inner: AccumSpec,
     outer: AccumSpec,
     out: &mut [i64],
-) -> u64 {
+) -> Vec<u64> {
     assert_eq!(x.len(), rows * k, "x must be rows*k");
     assert_eq!(w.len(), c * k, "w must be c*k");
     assert_eq!(out.len(), rows * c, "out must be rows*c");
     assert!(tile >= 1, "tile must be >= 1");
-    let overflow_total = AtomicU64::new(0);
+    // Channel bands run concurrently and each touches every row, so the
+    // per-row counters are atomics; bands only pay the fetch_add when a
+    // row actually overflowed inside the band (rare on guaranteed-safe
+    // codes).
+    let row_overflows: Vec<AtomicU64> = (0..rows).map(|_| AtomicU64::new(0)).collect();
     run_channel_bands(c, rows * c * k, out, |lo, hi, band| {
-        let mut local_overflows = 0u64;
         for r in 0..rows {
             let xrow = &x[r * k..(r + 1) * k];
             let orow = band.row(r);
+            let mut row_total = 0u64;
             for ch in lo..hi {
                 let (value, overflows) =
                     dot_multistage_fused(xrow, &w[ch * k..(ch + 1) * k], tile, inner, outer);
                 orow[ch - lo] = value;
-                local_overflows += overflows as u64;
+                row_total += overflows as u64;
+            }
+            if row_total > 0 {
+                row_overflows[r].fetch_add(row_total, Ordering::Relaxed);
             }
         }
-        if local_overflows > 0 {
-            overflow_total.fetch_add(local_overflows, Ordering::Relaxed);
-        }
     });
-    overflow_total.into_inner()
+    row_overflows.into_iter().map(|a| a.into_inner()).collect()
 }
 
 /// One fused multi-stage dot product (see module docs for the fast-path
@@ -234,16 +241,16 @@ mod tests {
         tile: usize,
         inner: AccumSpec,
         outer: AccumSpec,
-    ) -> (Vec<i64>, u64) {
+    ) -> (Vec<i64>, Vec<u64>) {
         let mut out = vec![0i64; rows * c];
-        let mut overflows = 0u64;
+        let mut overflows = vec![0u64; rows];
         for r in 0..rows {
             let xrow = &x[r * k..(r + 1) * k];
             for ch in 0..c {
                 let w64: Vec<i64> = w[ch * k..(ch + 1) * k].iter().map(|&v| v as i64).collect();
                 let o = dot_multistage(xrow, &w64, tile, inner, outer);
                 out[r * c + ch] = o.value;
-                overflows += o.overflows as u64;
+                overflows[r] += o.overflows as u64;
             }
         }
         (out, overflows)
@@ -271,9 +278,10 @@ mod tests {
     }
 
     /// THE parity property: the fused kernel equals the per-MAC
-    /// simulator bit-for-bit — values AND overflow-event totals — over
-    /// random codes, shapes, tile sizes, register widths and overflow
-    /// modes (saturating and wrapping), safe and unsafe alike.
+    /// simulator bit-for-bit — values AND per-row overflow-event
+    /// counts — over random codes, shapes, tile sizes, register widths
+    /// and overflow modes (saturating and wrapping), safe and unsafe
+    /// alike.
     #[test]
     fn prop_fused_kernel_matches_simulator() {
         quick(
@@ -309,7 +317,8 @@ mod tests {
                 }
                 if got_ovf != want_ovf {
                     return Err(format!(
-                        "overflow counts diverge: kernel {got_ovf} vs simulator {want_ovf}"
+                        "per-row overflow counts diverge: \
+                         kernel {got_ovf:?} vs simulator {want_ovf:?}"
                     ));
                 }
                 Ok(())
@@ -330,7 +339,7 @@ mod tests {
         let (want, want_ovf) = simulate_gemm(&x, rows, &w, c, k, tile, inner, outer);
         assert_eq!(out, want);
         assert_eq!(ovf, want_ovf);
-        assert!(ovf > 0, "narrow checked registers must flag events");
+        assert!(ovf.iter().sum::<u64>() > 0, "narrow checked registers must flag events");
         // checked mode preserves exact arithmetic
         for r in 0..rows {
             for ch in 0..c {
@@ -386,7 +395,7 @@ mod tests {
             AccumSpec::wraparound(16),
             &mut out,
         );
-        assert_eq!(ovf, 0);
+        assert!(ovf.is_empty(), "rows=0 yields no per-row counters");
         // k = 0: every dot product is the empty sum
         let mut out1 = vec![99i64; 2];
         qgemm_exact(&[], 2, &[], 1, 0, &mut out1[..2]);

@@ -305,7 +305,8 @@ fn cmd_sensitivity(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    use axe::coordinator::serve::{serve, Request, ServeQueue, ServeStats};
+    use axe::coordinator::serve::{serve_with, Request, ServeQueue, ServeStats};
+    use axe::model::{KvArena, KvCacheKind, KvQuantSpec};
     let model_name = args.str_or("model", "pico-160k");
     let mut model = load_lm(&model_name)?;
     let seq = model.cfg.max_seq;
@@ -324,12 +325,30 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.target = AccumTarget::MultiStage { p_inner: 16, tile: 64 };
         cfg.method = Method::Axe;
     }
+    // --kv-bits 8|16|off: quantize the KV arena and run the attention
+    // score/value matmuls on the multi-stage integer datapath
+    let kind = match args.str_or("kv-bits", "off").as_str() {
+        "off" | "f32" => KvCacheKind::F32,
+        s => {
+            let bits: u32 =
+                s.parse().map_err(|_| anyhow!("--kv-bits must be 8, 16 or off (got {s})"))?;
+            if bits != 8 && bits != 16 {
+                return Err(anyhow!("--kv-bits must be 8, 16 or off (got {bits})"));
+            }
+            let inner = match args.u32_or("kv-acc-bits", 0) {
+                0 => None, // data-type-safe width (guaranteed overflow-free)
+                b => Some(b),
+            };
+            KvCacheKind::Quant(KvQuantSpec::new(bits, args.usize_or("kv-tile", 64), inner))
+        }
+    };
     let report = quantize_transformer(&mut model, &calib, &cfg)?;
     println!("serving {} ({}, safe={})", model_name, report.config, report.guaranteed_safe());
 
     let n_requests = args.usize_or("requests", 16);
     let new_tokens = args.usize_or("tokens", 24);
     let workers = args.usize_or("workers", 1);
+    let max_batch = args.usize_or("max-batch", 4);
     let queue = ServeQueue::new();
     for id in 0..n_requests as u64 {
         let start = (id as usize * 37) % (val.len() - seq);
@@ -340,15 +359,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         });
     }
     queue.close();
-    let ovf_before = model.overflow_events();
     let t0 = std::time::Instant::now();
-    serve(&model, &queue, workers, args.usize_or("max-batch", 4));
+    serve_with(&model, &queue, workers, max_batch, kind);
     let responses = queue.drain();
-    let stats = ServeStats::from_responses(
-        &responses,
-        t0.elapsed().as_secs_f64(),
-        model.overflow_events() - ovf_before,
-    );
+    let mut stats = ServeStats::from_responses(&responses, t0.elapsed().as_secs_f64());
+    stats.arena_bytes = KvArena::footprint(&model.cfg, max_batch, kind);
+    let f32_bytes = KvArena::footprint(&model.cfg, max_batch, KvCacheKind::F32);
     println!("requests      : {}", stats.requests);
     println!("generated     : {} tokens in {:.2}s", stats.total_tokens, stats.wall_s);
     println!("throughput    : {:.1} tok/s", stats.tokens_per_s);
@@ -356,7 +372,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("latency p99   : {:.1} ms", stats.p99_latency_s * 1e3);
     println!("mean queue    : {:.1} ms", stats.mean_queue_s * 1e3);
     println!(
-        "overflow evts : {} total ({:.3} per generated token)",
+        "kv arena      : {} B per engine ({:.1}% of the {} B f32 arena)",
+        stats.arena_bytes,
+        100.0 * stats.arena_bytes as f64 / f32_bytes.max(1) as f64,
+        f32_bytes
+    );
+    println!(
+        "overflow evts : {} total across requests ({:.3} per generated token; \
+         exact per-request attribution)",
         stats.overflow_events,
         stats.overflow_events as f64 / stats.total_tokens.max(1) as f64
     );

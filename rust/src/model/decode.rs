@@ -14,17 +14,33 @@
 //! whole in-flight batch. Attention stays ragged: each slot attends
 //! over its own cached positions only.
 //!
+//! The arena runs on one of two **backends** ([`KvCacheKind`]): plain
+//! f32 keys/values with float attention, or the accumulator-aware
+//! quantized store ([`super::kvquant`]) — narrow integer codes with
+//! per-(slot, position, head) scales, quantized once at append time,
+//! with both attention matmuls executed on the multi-stage integer
+//! datapath ([`super::layers::attend_one_query_quant`]). Every decode
+//! entry point dispatches internally, so callers pick a backend at
+//! arena construction and nothing else changes.
+//!
 //! The single-sequence [`KvCache`] is a thin 1-slot arena view, and
 //! `decode_step`/`prefill` delegate to the batched path, so sequential
 //! decode (`generate_greedy`) and continuous-batched serving run the
 //! **same arithmetic per row** — batched decode is token-exact versus
-//! sequential decode (tested here and in `coordinator::serve`). This
-//! relies on every row of a batched kernel being computed independently
-//! of its batchmates (true of `linalg::qgemm` and `linalg::Mat`'s
-//! banded GEMM).
+//! sequential decode on either backend (tested here and in
+//! `coordinator::serve`). This relies on every row of a batched kernel
+//! being computed independently of its batchmates (true of
+//! `linalg::qgemm`, `linalg::Mat`'s banded GEMM, and the per-slot
+//! quantized attention).
+//!
+//! The `_counted` variants additionally attribute integer-datapath
+//! overflow events (linear layers and quantized attention) to the row /
+//! request that produced them — the serving engine's exact per-request
+//! accounting.
 
-use super::layers::attend_one_query;
-use super::transformer::Transformer;
+use super::kvquant::{KvCacheKind, QuantKv};
+use super::layers::{attend_one_query, attend_one_query_quant};
+use super::transformer::{Transformer, TransformerConfig};
 
 /// Multi-sequence key/value arena: `slots` independent sequences, each
 /// owning a fixed `[max_seq × d]` region per layer. Slots are
@@ -33,10 +49,7 @@ use super::transformer::Transformer;
 /// absolute-position re-encode the single-sequence path uses).
 #[derive(Clone, Debug)]
 pub struct KvArena {
-    /// [layer][slot * max_seq * d + pos * d ..] cached keys.
-    k: Vec<Vec<f32>>,
-    /// [layer][slot * max_seq * d + pos * d ..] cached values.
-    v: Vec<Vec<f32>>,
+    store: KvStore,
     d: usize,
     max_seq: usize,
     slots: usize,
@@ -48,21 +61,99 @@ pub struct KvArena {
     free: Vec<usize>,
 }
 
+/// Backend storage of the arena (see [`KvCacheKind`]).
+#[derive(Clone, Debug)]
+enum KvStore {
+    F32 {
+        /// [layer][slot * max_seq * d + pos * d ..] cached keys.
+        k: Vec<Vec<f32>>,
+        /// [layer][slot * max_seq * d + pos * d ..] cached values.
+        v: Vec<Vec<f32>>,
+    },
+    Quant(QuantKv),
+}
+
 impl KvArena {
-    /// Arena with `slots` sequence slots, all free.
+    /// Arena with `slots` sequence slots, all free, on the f32 backend.
     pub fn new(model: &Transformer, slots: usize) -> KvArena {
+        KvArena::with_kind(model, slots, KvCacheKind::F32)
+    }
+
+    /// Arena with `slots` sequence slots on the chosen backend.
+    pub fn with_kind(model: &Transformer, slots: usize, kind: KvCacheKind) -> KvArena {
         assert!(slots >= 1, "arena needs at least one slot");
         let d = model.cfg.d_model;
         let max_seq = model.cfg.max_seq;
+        let n_layers = model.cfg.n_layers;
+        let store = match kind {
+            KvCacheKind::F32 => KvStore::F32 {
+                k: vec![vec![0.0; slots * max_seq * d]; n_layers],
+                v: vec![vec![0.0; slots * max_seq * d]; n_layers],
+            },
+            KvCacheKind::Quant(spec) => {
+                KvStore::Quant(QuantKv::new(spec, n_layers, slots, max_seq, d, model.cfg.n_heads))
+            }
+        };
         KvArena {
-            k: vec![vec![0.0; slots * max_seq * d]; model.cfg.n_layers],
-            v: vec![vec![0.0; slots * max_seq * d]; model.cfg.n_layers],
+            store,
             d,
             max_seq,
             slots,
             lens: vec![0; slots],
             live: vec![false; slots],
             free: (0..slots).rev().collect(),
+        }
+    }
+
+    /// Which backend this arena runs on.
+    pub fn kind(&self) -> KvCacheKind {
+        match &self.store {
+            KvStore::F32 { .. } => KvCacheKind::F32,
+            KvStore::Quant(q) => KvCacheKind::Quant(q.spec),
+        }
+    }
+
+    /// KV storage footprint in bytes (the serving-memory figure the
+    /// quantized backend exists to shrink).
+    pub fn bytes(&self) -> usize {
+        match &self.store {
+            KvStore::F32 { k, v } => {
+                let mut elems = 0usize;
+                for slab in k.iter().chain(v.iter()) {
+                    elems += slab.len();
+                }
+                elems * std::mem::size_of::<f32>()
+            }
+            KvStore::Quant(q) => q.bytes(),
+        }
+    }
+
+    /// Storage footprint of an arena with `slots` slots for this model
+    /// config on the given backend, without building it — lets reports
+    /// compare f32 vs quantized footprints cheaply.
+    pub fn footprint(cfg: &TransformerConfig, slots: usize, kind: KvCacheKind) -> usize {
+        let positions = slots * cfg.max_seq;
+        match kind {
+            KvCacheKind::F32 => 2 * cfg.n_layers * positions * cfg.d_model * 4,
+            KvCacheKind::Quant(spec) => {
+                let code_bytes = if spec.kv_bits <= 8 { 1 } else { 2 };
+                2 * cfg.n_layers * positions * (cfg.d_model * code_bytes + cfg.n_heads * 4)
+            }
+        }
+    }
+
+    /// Attention overflow events observed on the quantized backend
+    /// (always 0 on f32).
+    pub fn overflow_events(&self) -> u64 {
+        match &self.store {
+            KvStore::F32 { .. } => 0,
+            KvStore::Quant(q) => q.overflow_events(),
+        }
+    }
+
+    fn add_attention_overflows(&mut self, n: u64) {
+        if let KvStore::Quant(q) = &mut self.store {
+            q.add_overflows(n);
         }
     }
 
@@ -110,7 +201,10 @@ impl KvArena {
     }
 
     /// Drop the oldest `n` positions of one slot (sliding-window
-    /// generation without re-encoding).
+    /// generation without re-encoding). On the quantized backend the
+    /// codes **and** their scales slide together verbatim — a window
+    /// slide never requantizes anything, so repeated slides cannot
+    /// accumulate drift.
     /// NOTE: positional embeddings are absolute, so after sliding the
     /// model sees shifted positions; for the pico models with short
     /// windows this matches the serve example's windowed re-encode.
@@ -119,23 +213,57 @@ impl KvArena {
         if n == 0 {
             return;
         }
-        let d = self.d;
-        let base = slot * self.max_seq * d;
-        for slab in self.k.iter_mut().chain(self.v.iter_mut()) {
-            slab.copy_within(base + n * d..base + self.lens[slot] * d, base);
+        let (d, max_seq, len) = (self.d, self.max_seq, self.lens[slot]);
+        match &mut self.store {
+            KvStore::F32 { k, v } => {
+                let base = slot * max_seq * d;
+                for slab in k.iter_mut().chain(v.iter_mut()) {
+                    slab.copy_within(base + n * d..base + len * d, base);
+                }
+            }
+            KvStore::Quant(q) => q.truncate_front(slot, n, len),
         }
         self.lens[slot] -= n;
     }
 
-    /// Append one position's K/V rows to a slot at `layer` (position =
-    /// current length; the length advance happens once per step via
-    /// [`KvArena::advance`]).
+    /// Cached K/V rows of one position, dequantized on the quantized
+    /// backend — the backend-independent inspection hook slide/parity
+    /// tests rely on.
+    pub fn kv_row(&self, layer: usize, slot: usize, pos: usize) -> (Vec<f32>, Vec<f32>) {
+        assert!(pos < self.lens[slot], "position {pos} not cached");
+        match &self.store {
+            KvStore::F32 { k, v } => {
+                let at = (slot * self.max_seq + pos) * self.d;
+                (k[layer][at..at + self.d].to_vec(), v[layer][at..at + self.d].to_vec())
+            }
+            KvStore::Quant(q) => {
+                let view = q.slot_view(layer, slot);
+                (view.dequant_k_row(pos), view.dequant_v_row(pos))
+            }
+        }
+    }
+
+    /// Write one position's K/V rows into a slot — raw copy on the f32
+    /// backend, quantize-at-append on the quantized backend.
     #[inline]
-    fn append_kv(&mut self, layer: usize, slot: usize, k_row: &[f32], v_row: &[f32]) {
-        debug_assert!(self.lens[slot] < self.max_seq);
-        let at = slot * self.max_seq * self.d + self.lens[slot] * self.d;
-        self.k[layer][at..at + self.d].copy_from_slice(k_row);
-        self.v[layer][at..at + self.d].copy_from_slice(v_row);
+    fn append_kv_at(
+        &mut self,
+        layer: usize,
+        slot: usize,
+        pos: usize,
+        k_row: &[f32],
+        v_row: &[f32],
+    ) {
+        debug_assert!(pos < self.max_seq);
+        let (d, max_seq) = (self.d, self.max_seq);
+        match &mut self.store {
+            KvStore::F32 { k, v } => {
+                let at = (slot * max_seq + pos) * d;
+                k[layer][at..at + d].copy_from_slice(k_row);
+                v[layer][at..at + d].copy_from_slice(v_row);
+            }
+            KvStore::Quant(q) => q.append_row(layer, slot, pos, k_row, v_row),
+        }
     }
 
     #[inline]
@@ -155,7 +283,12 @@ pub struct KvCache {
 
 impl KvCache {
     pub fn new(model: &Transformer) -> KvCache {
-        let mut arena = KvArena::new(model, 1);
+        KvCache::with_kind(model, KvCacheKind::F32)
+    }
+
+    /// Single-sequence cache on the chosen backend.
+    pub fn with_kind(model: &Transformer, kind: KvCacheKind) -> KvCache {
+        let mut arena = KvArena::with_kind(model, 1, kind);
         arena.alloc().expect("fresh 1-slot arena");
         KvCache { arena }
     }
@@ -170,6 +303,10 @@ impl KvCache {
 
     pub fn is_full(&self) -> bool {
         self.arena.is_full(0)
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.arena.bytes()
     }
 
     pub fn clear(&mut self) {
@@ -201,15 +338,33 @@ impl Transformer {
     /// the whole batch (the fused qgemm kernel for quantized layers);
     /// attention is ragged — slot `b` attends over its own
     /// `len(slots[b]) + 1` cached positions at its own absolute
-    /// position. Each output row is bit-identical to decoding that
-    /// sequence alone.
+    /// position, on the arena's backend. Each output row is
+    /// bit-identical to decoding that sequence alone.
     pub fn decode_step_batch(
         &self,
         tokens: &[u16],
         slots: &[usize],
         arena: &mut KvArena,
     ) -> Vec<f32> {
+        let mut row_ovf = vec![0u64; tokens.len()];
+        self.decode_step_batch_counted(tokens, slots, arena, &mut row_ovf)
+    }
+
+    /// [`Transformer::decode_step_batch`] with **exact per-row overflow
+    /// attribution**: `row_ovf[b]` is incremented by every integer-
+    /// datapath overflow event row `b` triggered this step — its rows of
+    /// each quantized linear plus (on the quantized-KV backend) its own
+    /// attention matmuls. The serving engine threads per-request
+    /// counters through here.
+    pub fn decode_step_batch_counted(
+        &self,
+        tokens: &[u16],
+        slots: &[usize],
+        arena: &mut KvArena,
+        row_ovf: &mut [u64],
+    ) -> Vec<f32> {
         assert_eq!(tokens.len(), slots.len(), "one slot per token");
+        assert_eq!(row_ovf.len(), tokens.len(), "one overflow counter per row");
         assert!(!tokens.is_empty(), "empty decode batch");
         assert_eq!(arena.d, self.cfg.d_model);
         let b = tokens.len();
@@ -217,7 +372,7 @@ impl Transformer {
         for (i, &s) in slots.iter().enumerate() {
             assert!(arena.live[s], "slot {s} not allocated");
             assert!(!arena.is_full(s), "KV slot {s} full (max_seq {})", arena.max_seq);
-            // hard assert: a doubled slot would append_kv twice at one
+            // hard assert: a doubled slot would append twice at one
             // position and advance the length by 2, silently corrupting
             // the sequence (batch widths are small, the scan is cheap)
             assert!(!slots[..i].contains(&s), "slot {s} scheduled twice in one step");
@@ -242,34 +397,57 @@ impl Transformer {
         let mut attn_out = vec![0.0f32; b * d];
         let mut ff = vec![0.0f32; b * self.cfg.d_ff];
         let mut ff_out = vec![0.0f32; b * d];
+        let mut attn_total = 0u64;
 
         for (bi, blk) in self.blocks.iter().enumerate() {
             for r in 0..b {
                 blk.ln1.forward_row(&h[r * d..(r + 1) * d], &mut ln_out[r * d..(r + 1) * d]);
             }
-            blk.wq.forward_rows(&ln_out, b, &mut q);
-            blk.wk.forward_rows(&ln_out, b, &mut k_new);
-            blk.wv.forward_rows(&ln_out, b, &mut v_new);
+            blk.wq.forward_rows_counted(&ln_out, b, &mut q, row_ovf);
+            blk.wk.forward_rows_counted(&ln_out, b, &mut k_new, row_ovf);
+            blk.wv.forward_rows_counted(&ln_out, b, &mut v_new, row_ovf);
             for (r, &slot) in slots.iter().enumerate() {
-                arena.append_kv(bi, slot, &k_new[r * d..(r + 1) * d], &v_new[r * d..(r + 1) * d]);
-            }
-            // ragged single-query attention: each row over its own slot
-            for (r, &slot) in slots.iter().enumerate() {
-                let t_len = arena.len(slot) + 1;
-                let base = slot * arena.max_seq * d;
-                let kc = &arena.k[bi][base..base + t_len * d];
-                let vc = &arena.v[bi][base..base + t_len * d];
-                attend_one_query(
-                    &q[r * d..(r + 1) * d],
-                    kc,
-                    vc,
-                    t_len,
-                    d,
-                    self.cfg.n_heads,
-                    &mut mix[r * d..(r + 1) * d],
+                let pos = arena.len(slot);
+                arena.append_kv_at(
+                    bi,
+                    slot,
+                    pos,
+                    &k_new[r * d..(r + 1) * d],
+                    &v_new[r * d..(r + 1) * d],
                 );
             }
-            blk.wo.forward_rows(&mix, b, &mut attn_out);
+            // ragged single-query attention: each row over its own slot,
+            // on the arena's backend
+            for (r, &slot) in slots.iter().enumerate() {
+                let t_len = arena.len(slot) + 1;
+                let qrow = &q[r * d..(r + 1) * d];
+                let orow = &mut mix[r * d..(r + 1) * d];
+                match &arena.store {
+                    KvStore::F32 { k, v } => {
+                        let base = slot * arena.max_seq * d;
+                        let kc = &k[bi][base..base + t_len * d];
+                        let vc = &v[bi][base..base + t_len * d];
+                        attend_one_query(qrow, kc, vc, t_len, d, self.cfg.n_heads, orow);
+                    }
+                    KvStore::Quant(qkv) => {
+                        let spec = qkv.spec;
+                        let ovf = attend_one_query_quant(
+                            qrow,
+                            &qkv.slot_view(bi, slot),
+                            t_len,
+                            d,
+                            self.cfg.n_heads,
+                            &spec,
+                            orow,
+                        );
+                        if ovf > 0 {
+                            row_ovf[r] += ovf;
+                            attn_total += ovf;
+                        }
+                    }
+                }
+            }
+            blk.wo.forward_rows_counted(&mix, b, &mut attn_out, row_ovf);
             if !self.cfg.parallel_residual {
                 for i in 0..b * d {
                     h[i] += attn_out[i];
@@ -278,9 +456,9 @@ impl Transformer {
             for r in 0..b {
                 blk.ln2.forward_row(&h[r * d..(r + 1) * d], &mut ln_out[r * d..(r + 1) * d]);
             }
-            blk.fc1.forward_rows(&ln_out, b, &mut ff);
+            blk.fc1.forward_rows_counted(&ln_out, b, &mut ff, row_ovf);
             self.cfg.act.apply_vec(&mut ff);
-            blk.fc2.forward_rows(&ff, b, &mut ff_out);
+            blk.fc2.forward_rows_counted(&ff, b, &mut ff_out, row_ovf);
             if self.cfg.parallel_residual {
                 for i in 0..b * d {
                     h[i] += attn_out[i] + ff_out[i];
@@ -290,6 +468,9 @@ impl Transformer {
                     h[i] += ff_out[i];
                 }
             }
+        }
+        if attn_total > 0 {
+            arena.add_attention_overflows(attn_total);
         }
         for &slot in slots {
             arena.advance(slot, 1);
@@ -308,17 +489,38 @@ impl Transformer {
     ///
     /// On an empty slot this runs **batched**: every linear processes
     /// the whole prompt in one [`super::Linear::forward_rows`] call (the
-    /// fused qgemm kernel for quantized layers) and the causal attention
-    /// helper mixes all positions at once — the serving prefill fast
-    /// path. On a non-empty slot it falls back to token-by-token
-    /// decoding over the existing prefix.
+    /// fused qgemm kernel for quantized layers) and causal attention
+    /// mixes all positions — through the float helper on the f32
+    /// backend, or position-by-position over the just-appended codes on
+    /// the quantized backend (the same arithmetic decode uses, so
+    /// prefill-then-decode equals pure decode bit for bit). On a
+    /// non-empty slot it falls back to token-by-token decoding over the
+    /// existing prefix.
     pub fn prefill_slot(&self, tokens: &[u16], slot: usize, arena: &mut KvArena) -> Vec<f32> {
+        let mut ovf = 0u64;
+        self.prefill_slot_counted(tokens, slot, arena, &mut ovf)
+    }
+
+    /// [`Transformer::prefill_slot`] accumulating the prompt's integer-
+    /// datapath overflow events into `ovf` — a prefill belongs entirely
+    /// to one request, so a scalar counter suffices for exact
+    /// per-request attribution.
+    pub fn prefill_slot_counted(
+        &self,
+        tokens: &[u16],
+        slot: usize,
+        arena: &mut KvArena,
+        ovf: &mut u64,
+    ) -> Vec<f32> {
         assert!(!tokens.is_empty());
         assert!(arena.live[slot], "slot {slot} not allocated");
         if !arena.is_empty(slot) {
             let mut last = Vec::new();
+            let mut row = [0u64; 1];
             for &t in tokens {
-                last = self.decode_step_batch(&[t], &[slot], arena);
+                row[0] = 0;
+                last = self.decode_step_batch_counted(&[t], &[slot], arena, &mut row);
+                *ovf += row[0];
             }
             return last;
         }
@@ -343,21 +545,51 @@ impl Transformer {
         let mut attn_out = vec![0.0f32; seq * d];
         let mut ff = vec![0.0f32; seq * self.cfg.d_ff];
         let mut ff_out = vec![0.0f32; seq * d];
+        let mut row_ovf = vec![0u64; seq];
+        let mut attn_total = 0u64;
 
         for (bi, blk) in self.blocks.iter().enumerate() {
             for t in 0..seq {
                 blk.ln1.forward_row(&h[t * d..(t + 1) * d], &mut ln_out[t * d..(t + 1) * d]);
             }
-            blk.wq.forward_rows(&ln_out, seq, &mut q);
-            blk.wk.forward_rows(&ln_out, seq, &mut k_new);
-            blk.wv.forward_rows(&ln_out, seq, &mut v_new);
-            {
-                let base = slot * arena.max_seq * d;
-                arena.k[bi][base..base + seq * d].copy_from_slice(&k_new);
-                arena.v[bi][base..base + seq * d].copy_from_slice(&v_new);
+            blk.wq.forward_rows_counted(&ln_out, seq, &mut q, &mut row_ovf);
+            blk.wk.forward_rows_counted(&ln_out, seq, &mut k_new, &mut row_ovf);
+            blk.wv.forward_rows_counted(&ln_out, seq, &mut v_new, &mut row_ovf);
+            for t in 0..seq {
+                arena.append_kv_at(
+                    bi,
+                    slot,
+                    t,
+                    &k_new[t * d..(t + 1) * d],
+                    &v_new[t * d..(t + 1) * d],
+                );
             }
-            super::layers::attention(&q, &k_new, &v_new, seq, d, self.cfg.n_heads, true, &mut mix);
-            blk.wo.forward_rows(&mix, seq, &mut attn_out);
+            match &arena.store {
+                KvStore::F32 { .. } => {
+                    // float backend: causal attention over the f32
+                    // buffers (bit-identical to reading the slab back)
+                    let heads = self.cfg.n_heads;
+                    super::layers::attention(&q, &k_new, &v_new, seq, d, heads, true, &mut mix);
+                }
+                KvStore::Quant(qkv) => {
+                    // quantized backend: every position attends over the
+                    // just-appended codes — exactly what decode does
+                    let spec = qkv.spec;
+                    for t in 0..seq {
+                        let o = attend_one_query_quant(
+                            &q[t * d..(t + 1) * d],
+                            &qkv.slot_view(bi, slot),
+                            t + 1,
+                            d,
+                            self.cfg.n_heads,
+                            &spec,
+                            &mut mix[t * d..(t + 1) * d],
+                        );
+                        attn_total += o;
+                    }
+                }
+            }
+            blk.wo.forward_rows_counted(&mix, seq, &mut attn_out, &mut row_ovf);
             if !self.cfg.parallel_residual {
                 for i in 0..seq * d {
                     h[i] += attn_out[i];
@@ -366,9 +598,9 @@ impl Transformer {
             for t in 0..seq {
                 blk.ln2.forward_row(&h[t * d..(t + 1) * d], &mut ln_out[t * d..(t + 1) * d]);
             }
-            blk.fc1.forward_rows(&ln_out, seq, &mut ff);
+            blk.fc1.forward_rows_counted(&ln_out, seq, &mut ff, &mut row_ovf);
             self.cfg.act.apply_vec(&mut ff);
-            blk.fc2.forward_rows(&ff, seq, &mut ff_out);
+            blk.fc2.forward_rows_counted(&ff, seq, &mut ff_out, &mut row_ovf);
             if self.cfg.parallel_residual {
                 for i in 0..seq * d {
                     h[i] += attn_out[i] + ff_out[i];
@@ -379,6 +611,10 @@ impl Transformer {
                 }
             }
         }
+        if attn_total > 0 {
+            arena.add_attention_overflows(attn_total);
+        }
+        *ovf += row_ovf.iter().sum::<u64>() + attn_total;
         arena.advance(slot, seq);
         // logits for the final position only
         let mut ln_last = vec![0.0f32; d];
@@ -413,9 +649,16 @@ impl Transformer {
         self.cfg.max_seq / 2
     }
 
-    /// Greedy generation: prompt → `n` new tokens.
+    /// Greedy generation: prompt → `n` new tokens (f32 KV cache).
     pub fn generate_greedy(&self, prompt: &[u16], n: usize) -> Vec<u16> {
-        let mut cache = KvCache::new(self);
+        self.generate_greedy_with(prompt, n, KvCacheKind::F32)
+    }
+
+    /// Greedy generation on the chosen KV backend — the sequential
+    /// reference continuous-batched serving must reproduce token for
+    /// token on that same backend.
+    pub fn generate_greedy_with(&self, prompt: &[u16], n: usize, kind: KvCacheKind) -> Vec<u16> {
+        let mut cache = KvCache::with_kind(self, kind);
         let mut out = prompt.to_vec();
         let mut logits = self.prefill(prompt, &mut cache);
         for _ in 0..n {
@@ -449,6 +692,7 @@ pub fn argmax(xs: &[f32]) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::kvquant::KvQuantSpec;
     use crate::model::{random_transformer, Activation, TransformerConfig};
 
     fn model(parallel: bool) -> Transformer {
@@ -543,41 +787,43 @@ mod tests {
     /// THE batched-decode parity property: stacking several sequences
     /// into one `decode_step_batch` call must produce, for every
     /// sequence, logits **bit-identical** to decoding it alone through a
-    /// single-slot cache.
+    /// single-slot cache — on both KV backends.
     #[test]
     fn batched_decode_is_bit_exact_vs_single() {
-        for parallel in [false, true] {
-            let m = model(parallel);
-            let vocab = m.cfg.vocab;
-            let seqs: Vec<Vec<u16>> = vec![
-                vec![3, 1, 4, 1, 5],
-                vec![9, 2, 6, 5, 3],
-                vec![8, 9, 7, 9, 3],
-            ];
-            // reference: each sequence decoded alone
-            let mut want: Vec<Vec<f32>> = Vec::new();
-            for s in &seqs {
-                let mut cache = KvCache::new(&m);
-                let mut last = Vec::new();
-                for &t in s {
-                    last = m.decode_step(t, &mut cache);
+        for kind in [KvCacheKind::F32, KvCacheKind::Quant(KvQuantSpec::int8())] {
+            for parallel in [false, true] {
+                let m = model(parallel);
+                let vocab = m.cfg.vocab;
+                let seqs: Vec<Vec<u16>> = vec![
+                    vec![3, 1, 4, 1, 5],
+                    vec![9, 2, 6, 5, 3],
+                    vec![8, 9, 7, 9, 3],
+                ];
+                // reference: each sequence decoded alone
+                let mut want: Vec<Vec<f32>> = Vec::new();
+                for s in &seqs {
+                    let mut cache = KvCache::with_kind(&m, kind);
+                    let mut last = Vec::new();
+                    for &t in s {
+                        last = m.decode_step(t, &mut cache);
+                    }
+                    want.push(last);
                 }
-                want.push(last);
-            }
-            // batched: all three in one arena, one step per position
-            let mut arena = KvArena::new(&m, 3);
-            let slots: Vec<usize> = (0..3).map(|_| arena.alloc().unwrap()).collect();
-            let mut got = Vec::new();
-            for pos in 0..seqs[0].len() {
-                let toks: Vec<u16> = seqs.iter().map(|s| s[pos]).collect();
-                got = m.decode_step_batch(&toks, &slots, &mut arena);
-            }
-            for (b, w) in want.iter().enumerate() {
-                assert_eq!(
-                    &got[b * vocab..(b + 1) * vocab],
-                    &w[..],
-                    "parallel={parallel} seq {b} diverged under batching"
-                );
+                // batched: all three in one arena, one step per position
+                let mut arena = KvArena::with_kind(&m, 3, kind);
+                let slots: Vec<usize> = (0..3).map(|_| arena.alloc().unwrap()).collect();
+                let mut got = Vec::new();
+                for pos in 0..seqs[0].len() {
+                    let toks: Vec<u16> = seqs.iter().map(|s| s[pos]).collect();
+                    got = m.decode_step_batch(&toks, &slots, &mut arena);
+                }
+                for (b, w) in want.iter().enumerate() {
+                    assert_eq!(
+                        &got[b * vocab..(b + 1) * vocab],
+                        &w[..],
+                        "kind={kind:?} parallel={parallel} seq {b} diverged under batching"
+                    );
+                }
             }
         }
     }
@@ -663,5 +909,55 @@ mod tests {
             m.decode_step_batch(&[1, 2], &[s], &mut a2);
         }));
         assert!(r.is_err(), "token/slot length mismatch must be rejected");
+    }
+
+    #[test]
+    fn arena_bytes_and_footprint_agree() {
+        let m = model(false);
+        for kind in [
+            KvCacheKind::F32,
+            KvCacheKind::Quant(KvQuantSpec::int8()),
+            KvCacheKind::Quant(KvQuantSpec::int16()),
+        ] {
+            let arena = KvArena::with_kind(&m, 3, kind);
+            assert_eq!(
+                arena.bytes(),
+                KvArena::footprint(&m.cfg, 3, kind),
+                "{kind:?} footprint formula disagrees with the arena"
+            );
+        }
+        // i8 codes shrink the arena; the exact ≤30% bar (wide heads) is
+        // asserted in tests/kvquant_decode.rs
+        let f = KvArena::footprint(&m.cfg, 4, KvCacheKind::F32);
+        let q = KvArena::footprint(&m.cfg, 4, KvCacheKind::Quant(KvQuantSpec::int8()));
+        assert!(q < f / 2, "quantized arena must at least halve f32 ({q} vs {f})");
+    }
+
+    #[test]
+    fn quant_prefill_matches_quant_decode() {
+        // On the quantized backend, batched prefill must be bit-exact
+        // with token-by-token decode — both attend over the same codes.
+        let m = model(true);
+        let kind = KvCacheKind::Quant(KvQuantSpec::int8());
+        let toks: Vec<u16> = vec![4, 7, 1, 9, 2, 8];
+        let mut c1 = KvCache::with_kind(&m, kind);
+        let batched = m.prefill(&toks, &mut c1);
+        let mut c2 = KvCache::with_kind(&m, kind);
+        let mut step = Vec::new();
+        for &t in &toks {
+            step = m.decode_step(t, &mut c2);
+        }
+        assert_eq!(batched, step, "quant prefill diverged from quant decode");
+        assert_eq!(c1.len(), toks.len());
+        // cached rows identical too (codes + scales, via dequant view)
+        for layer in 0..m.cfg.n_layers {
+            for pos in 0..toks.len() {
+                assert_eq!(
+                    c1.arena.kv_row(layer, 0, pos),
+                    c2.arena.kv_row(layer, 0, pos),
+                    "layer {layer} pos {pos}"
+                );
+            }
+        }
     }
 }

@@ -1,0 +1,584 @@
+//! Accumulator-aware quantized KV cache — the storage half of the
+//! integer attention datapath.
+//!
+//! The linear layers already carry the paper's overflow-avoidance
+//! guarantee; the KV arena was the last float island: `f32` keys/values
+//! dominate serving memory and the attention score (q·kᵀ) and value
+//! (p·V) matmuls ran outside the accumulator machinery. This module
+//! stores per-layer K/V as narrow integer codes with **per-(slot,
+//! position, head) scales**, quantized once at append time (prefill and
+//! decode) and never requantized afterwards — window slides via
+//! [`QuantKv::truncate_front`] move codes and scales verbatim.
+//!
+//! The matching compute half is
+//! [`super::layers::attend_one_query_quant`], which runs both attention
+//! matmuls through the same multi-stage integer datapath
+//! ([`crate::linalg::qgemm`] tiles, [`crate::accum::simulator`]
+//! semantics) the linear layers use. Because the cached codes carry no
+//! AXE-trained ℓ1 guarantee, the default inner register width is the
+//! data-type bound [`crate::quant::bounds::attention_inner_bits`]
+//! (overflow provably impossible); narrower widths are accepted and
+//! surface their overflow events through the serving accounting.
+
+use crate::accum::simulator::OverflowMode;
+use crate::quant::bounds::attention_inner_bits;
+
+/// Configuration of the quantized-KV attention datapath.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct KvQuantSpec {
+    /// K/V code width (2..=16; 8 → i8 storage, >8 → i16 storage).
+    pub kv_bits: u32,
+    /// Width of the online-quantized operands: the query codes (signed
+    /// symmetric) and the probability codes (unsigned).
+    pub op_bits: u32,
+    /// Multi-stage accumulation tile size (Eq. 22).
+    pub tile: usize,
+    /// Inner accumulator width P_I for both attention matmuls.
+    pub inner_bits: u32,
+    /// Overflow behaviour of the attention registers.
+    pub mode: OverflowMode,
+}
+
+impl KvQuantSpec {
+    /// Spec with `kv_bits` codes and `tile`-sized inner accumulation.
+    /// `inner_bits: None` picks the data-type-safe width (Eq. 3 at the
+    /// tile depth) — attention then provably never overflows; a
+    /// narrower explicit width turns the overflow counters live.
+    pub fn new(kv_bits: u32, tile: usize, inner_bits: Option<u32>) -> KvQuantSpec {
+        assert!((2..=16).contains(&kv_bits), "kv codes must be 2..=16 bits");
+        assert!(tile >= 1, "tile must be >= 1");
+        let op_bits = 8;
+        let inner = inner_bits.unwrap_or_else(|| attention_inner_bits(tile, op_bits, kv_bits));
+        assert!((2..=64).contains(&inner), "inner register must be 2..=64 bits");
+        KvQuantSpec { kv_bits, op_bits, tile, inner_bits: inner, mode: OverflowMode::Wraparound }
+    }
+
+    /// The deployment default: i8 codes, 64-wide tiles, safe inner width.
+    pub fn int8() -> KvQuantSpec {
+        KvQuantSpec::new(8, 64, None)
+    }
+
+    /// Higher-fidelity variant: i16 codes (half the f32 saving).
+    pub fn int16() -> KvQuantSpec {
+        KvQuantSpec::new(16, 64, None)
+    }
+
+    /// Largest representable K/V code magnitude.
+    #[inline]
+    pub fn code_max(&self) -> i32 {
+        (1i32 << (self.kv_bits - 1)) - 1
+    }
+}
+
+/// Which backend a KV arena runs on.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum KvCacheKind {
+    /// Full-precision f32 keys/values, float attention (the baseline).
+    F32,
+    /// Integer codes + per-(slot, position, head) scales, attention on
+    /// the multi-stage integer datapath.
+    Quant(KvQuantSpec),
+}
+
+/// Storage-width-erased code slab: i8 for ≤8-bit codes, i16 above —
+/// the whole point of the quantized arena is its byte footprint, so
+/// 8-bit codes must really occupy one byte each.
+#[derive(Clone, Debug)]
+pub enum CodeSlab {
+    I8(Vec<i8>),
+    I16(Vec<i16>),
+}
+
+impl CodeSlab {
+    pub fn new(bits: u32, len: usize) -> CodeSlab {
+        if bits <= 8 {
+            CodeSlab::I8(vec![0; len])
+        } else {
+            CodeSlab::I16(vec![0; len])
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> i32 {
+        match self {
+            CodeSlab::I8(v) => v[i] as i32,
+            CodeSlab::I16(v) => v[i] as i32,
+        }
+    }
+
+    /// Store a code; the caller guarantees it fits the storage width
+    /// (quantization clamps to ±code_max, which always fits).
+    #[inline]
+    pub fn set(&mut self, i: usize, code: i32) {
+        match self {
+            CodeSlab::I8(v) => v[i] = code as i8,
+            CodeSlab::I16(v) => v[i] = code as i16,
+        }
+    }
+
+    pub fn copy_within(&mut self, src: std::ops::Range<usize>, dest: usize) {
+        match self {
+            CodeSlab::I8(v) => v.copy_within(src, dest),
+            CodeSlab::I16(v) => v.copy_within(src, dest),
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        match self {
+            CodeSlab::I8(v) => v.len(),
+            CodeSlab::I16(v) => v.len() * std::mem::size_of::<i16>(),
+        }
+    }
+}
+
+/// Quantized multi-sequence K/V storage: per layer, `slots × max_seq`
+/// positions of `d` codes plus `n_heads` scales per position per tensor.
+#[derive(Clone, Debug)]
+pub struct QuantKv {
+    pub spec: KvQuantSpec,
+    d: usize,
+    max_seq: usize,
+    n_heads: usize,
+    /// [layer] → slots·max_seq·d codes.
+    k_codes: Vec<CodeSlab>,
+    v_codes: Vec<CodeSlab>,
+    /// [layer] → slots·max_seq·n_heads per-(slot, position, head) scales.
+    k_scales: Vec<Vec<f32>>,
+    v_scales: Vec<Vec<f32>>,
+    /// Attention overflow events observed across all slots (only
+    /// nonzero when `spec.inner_bits` is below the data-type bound).
+    overflow_events: u64,
+}
+
+impl QuantKv {
+    pub fn new(
+        spec: KvQuantSpec,
+        n_layers: usize,
+        slots: usize,
+        max_seq: usize,
+        d: usize,
+        n_heads: usize,
+    ) -> QuantKv {
+        assert!(n_heads >= 1 && d % n_heads == 0, "d must divide n_heads");
+        let codes = slots * max_seq * d;
+        let scales = slots * max_seq * n_heads;
+        QuantKv {
+            spec,
+            d,
+            max_seq,
+            n_heads,
+            k_codes: (0..n_layers).map(|_| CodeSlab::new(spec.kv_bits, codes)).collect(),
+            v_codes: (0..n_layers).map(|_| CodeSlab::new(spec.kv_bits, codes)).collect(),
+            k_scales: vec![vec![0.0; scales]; n_layers],
+            v_scales: vec![vec![0.0; scales]; n_layers],
+            overflow_events: 0,
+        }
+    }
+
+    #[inline]
+    fn code_base(&self, slot: usize, pos: usize) -> usize {
+        (slot * self.max_seq + pos) * self.d
+    }
+
+    #[inline]
+    fn scale_base(&self, slot: usize, pos: usize) -> usize {
+        (slot * self.max_seq + pos) * self.n_heads
+    }
+
+    /// Quantize one position's K/V rows into a slot — per-head symmetric
+    /// scales, codes clamped to ±code_max. This is the only place K/V
+    /// values are ever quantized; slides and reuse move codes verbatim.
+    pub fn append_row(
+        &mut self,
+        layer: usize,
+        slot: usize,
+        pos: usize,
+        k_row: &[f32],
+        v_row: &[f32],
+    ) {
+        debug_assert_eq!(k_row.len(), self.d);
+        debug_assert_eq!(v_row.len(), self.d);
+        debug_assert!(pos < self.max_seq);
+        let hd = self.d / self.n_heads;
+        let qmax = self.spec.code_max();
+        let cb = self.code_base(slot, pos);
+        let sb = self.scale_base(slot, pos);
+        for h in 0..self.n_heads {
+            let off = h * hd;
+            self.k_scales[layer][sb + h] =
+                quantize_head(&k_row[off..off + hd], qmax, &mut self.k_codes[layer], cb + off);
+            self.v_scales[layer][sb + h] =
+                quantize_head(&v_row[off..off + hd], qmax, &mut self.v_codes[layer], cb + off);
+        }
+    }
+
+    /// Read-only view of one slot at one layer (for the attention path).
+    pub fn slot_view(&self, layer: usize, slot: usize) -> QuantKvSlot<'_> {
+        QuantKvSlot {
+            k_codes: &self.k_codes[layer],
+            v_codes: &self.v_codes[layer],
+            k_scales: &self.k_scales[layer],
+            v_scales: &self.v_scales[layer],
+            code_base: self.code_base(slot, 0),
+            scale_base: self.scale_base(slot, 0),
+            d: self.d,
+            n_heads: self.n_heads,
+        }
+    }
+
+    /// Drop the oldest `n` of `len` cached positions of one slot:
+    /// codes **and** scales slide together, bit-identical — no
+    /// requantization, so a window slide can never drift.
+    pub fn truncate_front(&mut self, slot: usize, n: usize, len: usize) {
+        debug_assert!(n <= len && len <= self.max_seq);
+        let (d, h) = (self.d, self.n_heads);
+        let cb = self.code_base(slot, 0);
+        let sb = self.scale_base(slot, 0);
+        for slab in self.k_codes.iter_mut().chain(self.v_codes.iter_mut()) {
+            slab.copy_within(cb + n * d..cb + len * d, cb);
+        }
+        for scales in self.k_scales.iter_mut().chain(self.v_scales.iter_mut()) {
+            scales.copy_within(sb + n * h..sb + len * h, sb);
+        }
+    }
+
+    /// Arena storage footprint in bytes (codes + scales).
+    pub fn bytes(&self) -> usize {
+        let mut total = 0usize;
+        for slab in self.k_codes.iter().chain(self.v_codes.iter()) {
+            total += slab.bytes();
+        }
+        for scales in self.k_scales.iter().chain(self.v_scales.iter()) {
+            total += scales.len() * std::mem::size_of::<f32>();
+        }
+        total
+    }
+
+    pub fn add_overflows(&mut self, n: u64) {
+        self.overflow_events += n;
+    }
+
+    pub fn overflow_events(&self) -> u64 {
+        self.overflow_events
+    }
+}
+
+/// Borrowed view of one slot's codes and scales at one layer. Positions
+/// are slot-local (0 = oldest cached position).
+pub struct QuantKvSlot<'a> {
+    k_codes: &'a CodeSlab,
+    v_codes: &'a CodeSlab,
+    k_scales: &'a [f32],
+    v_scales: &'a [f32],
+    code_base: usize,
+    scale_base: usize,
+    d: usize,
+    n_heads: usize,
+}
+
+impl QuantKvSlot<'_> {
+    #[inline]
+    pub fn k_code(&self, pos: usize, i: usize) -> i32 {
+        self.k_codes.get(self.code_base + pos * self.d + i)
+    }
+
+    #[inline]
+    pub fn v_code(&self, pos: usize, i: usize) -> i32 {
+        self.v_codes.get(self.code_base + pos * self.d + i)
+    }
+
+    #[inline]
+    pub fn k_scale(&self, pos: usize, head: usize) -> f32 {
+        self.k_scales[self.scale_base + pos * self.n_heads + head]
+    }
+
+    #[inline]
+    pub fn v_scale(&self, pos: usize, head: usize) -> f32 {
+        self.v_scales[self.scale_base + pos * self.n_heads + head]
+    }
+
+    /// Dequantized K row at `pos` (tests / diagnostics).
+    pub fn dequant_k_row(&self, pos: usize) -> Vec<f32> {
+        self.dequant_row(pos, true)
+    }
+
+    /// Dequantized V row at `pos` (tests / diagnostics).
+    pub fn dequant_v_row(&self, pos: usize) -> Vec<f32> {
+        self.dequant_row(pos, false)
+    }
+
+    fn dequant_row(&self, pos: usize, key: bool) -> Vec<f32> {
+        let hd = self.d / self.n_heads;
+        let mut out = vec![0.0f32; self.d];
+        for h in 0..self.n_heads {
+            let s = if key { self.k_scale(pos, h) } else { self.v_scale(pos, h) };
+            for i in 0..hd {
+                let idx = h * hd + i;
+                let c = if key { self.k_code(pos, idx) } else { self.v_code(pos, idx) };
+                out[idx] = c as f32 * s;
+            }
+        }
+        out
+    }
+}
+
+/// Quantize one head segment symmetrically: scale = max|x| / qmax,
+/// codes = round(x / scale) ∈ [−qmax, qmax]. All-zero segments get a
+/// benign scale of 1.0 with all-zero codes.
+fn quantize_head(xs: &[f32], qmax: i32, codes: &mut CodeSlab, base: usize) -> f32 {
+    let mut maxabs = 0.0f32;
+    for &v in xs {
+        maxabs = maxabs.max(v.abs());
+    }
+    if maxabs <= 0.0 {
+        for i in 0..xs.len() {
+            codes.set(base + i, 0);
+        }
+        return 1.0;
+    }
+    let scale = maxabs / qmax as f32;
+    for (i, &v) in xs.iter().enumerate() {
+        let c = (v / scale).round() as i32;
+        codes.set(base + i, c.clamp(-qmax, qmax));
+    }
+    scale
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::layers::{attend_one_query, attend_one_query_quant};
+    use crate::util::rng::Rng;
+
+    /// Build a 1-layer, 1-slot QuantKv holding `t_len` random K/V rows;
+    /// returns the float rows alongside for reference computations.
+    fn filled_kv(
+        spec: KvQuantSpec,
+        t_len: usize,
+        d: usize,
+        h: usize,
+        seed: u64,
+    ) -> (QuantKv, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let mut kv = QuantKv::new(spec, 1, 1, t_len, d, h);
+        let mut k = vec![0.0f32; t_len * d];
+        let mut v = vec![0.0f32; t_len * d];
+        for x in k.iter_mut().chain(v.iter_mut()) {
+            *x = rng.normal() as f32;
+        }
+        for pos in 0..t_len {
+            kv.append_row(0, 0, pos, &k[pos * d..(pos + 1) * d], &v[pos * d..(pos + 1) * d]);
+        }
+        (kv, k, v)
+    }
+
+    #[test]
+    fn spec_defaults_are_safe_widths() {
+        let s = KvQuantSpec::int8();
+        assert_eq!(s.kv_bits, 8);
+        assert_eq!(s.tile, 64);
+        assert_eq!(s.inner_bits, attention_inner_bits(64, 8, 8));
+        assert_eq!(s.code_max(), 127);
+        let s16 = KvQuantSpec::int16();
+        assert_eq!(s16.code_max(), 32767);
+        // explicit narrow width is honoured (for overflow experiments)
+        assert_eq!(KvQuantSpec::new(8, 32, Some(10)).inner_bits, 10);
+    }
+
+    #[test]
+    fn code_slab_widths_and_bytes() {
+        let mut s8 = CodeSlab::new(8, 4);
+        let mut s16 = CodeSlab::new(12, 4);
+        assert_eq!(s8.bytes(), 4);
+        assert_eq!(s16.bytes(), 8);
+        s8.set(1, -127);
+        s16.set(1, 2047);
+        assert_eq!(s8.get(1), -127);
+        assert_eq!(s16.get(1), 2047);
+        s8.copy_within(1..2, 0);
+        assert_eq!(s8.get(0), -127);
+    }
+
+    #[test]
+    fn append_roundtrip_error_is_bounded() {
+        let mut rng = Rng::new(501);
+        let (d, h) = (16usize, 4usize);
+        let spec = KvQuantSpec::int8();
+        let mut kv = QuantKv::new(spec, 1, 1, 8, d, h);
+        let k_row: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let v_row: Vec<f32> = (0..d).map(|_| rng.normal() as f32 * 3.0).collect();
+        kv.append_row(0, 0, 0, &k_row, &v_row);
+        let view = kv.slot_view(0, 0);
+        let k_hat = view.dequant_k_row(0);
+        let v_hat = view.dequant_v_row(0);
+        for i in 0..d {
+            let ks = view.k_scale(0, i / (d / h));
+            let vs = view.v_scale(0, i / (d / h));
+            assert!((k_row[i] - k_hat[i]).abs() <= 0.5 * ks + 1e-6, "k[{i}]");
+            assert!((v_row[i] - v_hat[i]).abs() <= 0.5 * vs + 1e-6, "v[{i}]");
+        }
+    }
+
+    #[test]
+    fn zero_rows_quantize_benignly() {
+        let spec = KvQuantSpec::int8();
+        let mut kv = QuantKv::new(spec, 1, 1, 4, 8, 2);
+        kv.append_row(0, 0, 0, &[0.0; 8], &[0.0; 8]);
+        let view = kv.slot_view(0, 0);
+        assert_eq!(view.k_scale(0, 0), 1.0);
+        assert!(view.dequant_k_row(0).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn truncate_front_slides_codes_and_scales_verbatim() {
+        let mut rng = Rng::new(502);
+        let (d, h, max_seq) = (8usize, 2usize, 6usize);
+        let mut kv = QuantKv::new(KvQuantSpec::int8(), 2, 2, max_seq, d, h);
+        // fill slot 1 with 5 positions (slot 0 left alone as a canary)
+        let mut rows: Vec<Vec<f32>> = Vec::new();
+        for _ in 0..5 {
+            rows.push((0..d).map(|_| rng.normal() as f32).collect());
+        }
+        for (pos, row) in rows.iter().enumerate() {
+            for layer in 0..2 {
+                kv.append_row(layer, 1, pos, row, row);
+            }
+        }
+        kv.append_row(0, 0, 0, &rows[0], &rows[0]);
+        let mut before: Vec<Vec<f32>> = Vec::new();
+        for p in 2..5 {
+            before.push(kv.slot_view(1, 1).dequant_k_row(p));
+        }
+        let canary = kv.slot_view(0, 0).dequant_k_row(0);
+        kv.truncate_front(1, 2, 5);
+        for (p, want) in before.iter().enumerate() {
+            let got = kv.slot_view(1, 1).dequant_k_row(p);
+            assert_eq!(&got, want, "position {p} drifted across the slide");
+        }
+        assert_eq!(kv.slot_view(0, 0).dequant_k_row(0), canary, "other slot touched");
+    }
+
+    #[test]
+    fn quant_attention_tracks_float_attention() {
+        // The integer attention path must approximate the float path to
+        // within 8-bit quantization error on well-conditioned inputs.
+        let (t_len, d, h) = (12usize, 16usize, 2usize);
+        let spec = KvQuantSpec::int8();
+        let (kv, k, v) = filled_kv(spec, t_len, d, h, 510);
+        let mut rng = Rng::new(511);
+        let q: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let mut want = vec![0.0f32; d];
+        attend_one_query(&q, &k, &v, t_len, d, h, &mut want);
+        let mut got = vec![0.0f32; d];
+        let ovf = attend_one_query_quant(&q, &kv.slot_view(0, 0), t_len, d, h, &spec, &mut got);
+        assert_eq!(ovf, 0, "data-type-safe inner width must never overflow");
+        for i in 0..d {
+            assert!(
+                (got[i] - want[i]).abs() < 0.2,
+                "dim {i}: quant {} vs float {}",
+                got[i],
+                want[i]
+            );
+        }
+        // the 16-bit variant stays within the same (tighter K/V
+        // representation) envelope
+        let spec16 = KvQuantSpec::int16();
+        let (kv16, _, _) = filled_kv(spec16, t_len, d, h, 510);
+        let mut got16 = vec![0.0f32; d];
+        let ovf16 =
+            attend_one_query_quant(&q, &kv16.slot_view(0, 0), t_len, d, h, &spec16, &mut got16);
+        assert_eq!(ovf16, 0);
+        for i in 0..d {
+            assert!((got16[i] - want[i]).abs() < 0.2, "kv16 dim {i}");
+        }
+    }
+
+    #[test]
+    fn uniform_attention_recovers_dequantized_value_row() {
+        // Identical K rows → uniform probabilities; identical V rows →
+        // the value reduction must reproduce the dequantized V row to
+        // within float rounding, a closed-form check of the whole
+        // integer chain (codes, folded scales, dequant).
+        let (t_len, d, h) = (5usize, 8usize, 2usize);
+        let spec = KvQuantSpec::int8();
+        let mut kv = QuantKv::new(spec, 1, 1, t_len, d, h);
+        let k_row: Vec<f32> = (0..d).map(|i| 0.3 + 0.01 * i as f32).collect();
+        let v_row: Vec<f32> = (0..d).map(|i| (i as f32 - 3.0) * 0.2).collect();
+        for pos in 0..t_len {
+            kv.append_row(0, 0, pos, &k_row, &v_row);
+        }
+        let q = vec![0.5f32; d];
+        let mut out = vec![0.0f32; d];
+        let ovf = attend_one_query_quant(&q, &kv.slot_view(0, 0), t_len, d, h, &spec, &mut out);
+        assert_eq!(ovf, 0);
+        let v_hat = kv.slot_view(0, 0).dequant_v_row(0);
+        for i in 0..d {
+            assert!(
+                (out[i] - v_hat[i]).abs() < 2e-3,
+                "dim {i}: {} vs dequant {}",
+                out[i],
+                v_hat[i]
+            );
+        }
+    }
+
+    #[test]
+    fn narrow_inner_register_overflows_and_is_deterministic() {
+        let (t_len, d, h) = (16usize, 16usize, 2usize);
+        // 6-bit inner register at tile 8 with 8-bit operands: hopeless.
+        let spec = KvQuantSpec::new(8, 8, Some(6));
+        let (kv, _, _) = filled_kv(spec, t_len, d, h, 520);
+        let mut rng = Rng::new(521);
+        let q: Vec<f32> = (0..d).map(|_| rng.normal() as f32 + 0.5).collect();
+        let mut out1 = vec![0.0f32; d];
+        let mut out2 = vec![0.0f32; d];
+        let ovf1 = attend_one_query_quant(&q, &kv.slot_view(0, 0), t_len, d, h, &spec, &mut out1);
+        let ovf2 = attend_one_query_quant(&q, &kv.slot_view(0, 0), t_len, d, h, &spec, &mut out2);
+        assert!(ovf1 > 0, "6-bit inner register must overflow");
+        assert_eq!(ovf1, ovf2, "overflow counting must be deterministic");
+        assert_eq!(out1, out2, "wrapped values must be deterministic");
+    }
+
+    #[test]
+    fn safe_width_never_overflows_on_random_codes() {
+        // The extended guarantee: at the data-type-bound inner width,
+        // random (adversarial-scale) inputs can never overflow either
+        // attention matmul — mirrors prop_safe_codes_never_overflow for
+        // the linear datapath.
+        let mut rng = Rng::new(530);
+        for trial in 0..25usize {
+            let h = 1 + (trial % 3);
+            let hd = [4usize, 8, 16][trial % 3];
+            let d = h * hd;
+            let t_len = 1 + (trial * 7) % 24;
+            let tile = [4usize, 16, 64][(trial / 3) % 3];
+            let spec = KvQuantSpec::new(8, tile, None);
+            let (kv, _, _) = filled_kv(spec, t_len, d, h, 531 + trial as u64);
+            let q: Vec<f32> = (0..d).map(|_| (rng.normal() * 10.0) as f32).collect();
+            let mut out = vec![0.0f32; d];
+            let ovf = attend_one_query_quant(&q, &kv.slot_view(0, 0), t_len, d, h, &spec, &mut out);
+            assert_eq!(ovf, 0, "trial {trial}: safe width overflowed");
+            assert!(out.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn bytes_quarter_f32_when_heads_are_wide() {
+        // d=64, 2 heads (head dim 32): codes are 1/4 of f32 and the
+        // per-(slot, pos, head) scale overhead is 1/hd = 3.1%.
+        let (layers, slots, max_seq, d, h) = (2usize, 3usize, 16usize, 64usize, 2usize);
+        let kv = QuantKv::new(KvQuantSpec::int8(), layers, slots, max_seq, d, h);
+        let f32_bytes = 2 * layers * slots * max_seq * d * 4;
+        let want = 2 * layers * slots * max_seq * (d + h * 4);
+        assert_eq!(kv.bytes(), want);
+        assert!(
+            (kv.bytes() as f64) <= 0.30 * f32_bytes as f64,
+            "{} vs f32 {}",
+            kv.bytes(),
+            f32_bytes
+        );
+        // i16 codes cost exactly one extra byte per element
+        let kv16 = QuantKv::new(KvQuantSpec::int16(), layers, slots, max_seq, d, h);
+        assert_eq!(kv16.bytes(), want + 2 * layers * slots * max_seq * d);
+    }
+}

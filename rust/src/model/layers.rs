@@ -1,5 +1,11 @@
 //! Non-linear building blocks: layer norm, activations, softmax,
-//! attention math helpers.
+//! attention math helpers — including the integer attention datapath
+//! over the quantized KV cache ([`attend_one_query_quant`]).
+
+use super::kvquant::{KvQuantSpec, QuantKvSlot};
+use crate::accum::simulator::AccumSpec;
+use crate::linalg::qgemm_multistage;
+use crate::quant::bounds::outer_bits;
 
 /// Layer normalization with learned gain and bias.
 #[derive(Clone, Debug)]
@@ -167,6 +173,136 @@ pub fn attend_one_query(
             }
         }
     }
+}
+
+/// Single-query multi-head attention over a **quantized** KV slot — the
+/// integer-datapath counterpart of [`attend_one_query`], extending the
+/// paper's overflow-avoidance machinery to the last two matmuls of the
+/// decode loop. Returns the number of accumulator overflow events
+/// (always 0 when `spec.inner_bits` is at the data-type bound).
+///
+/// Per head:
+/// 1. the query segment is quantized online (symmetric signed
+///    `spec.op_bits` codes, one scale per head);
+/// 2. the **score matmul** q·kᵀ runs through the multi-stage integer
+///    datapath (`spec.tile`-sized P_I tiles, Eq. 22 outer width) via
+///    [`crate::linalg::qgemm_multistage`], whose ℓ1-mass fast path
+///    executes overflow-proof tiles at plain-GEMM speed; scores are
+///    dequantized with the per-(position, head) key scales and
+///    softmaxed in float (the paper's datapath quantizes matmuls only);
+/// 3. the softmax probabilities are folded with the per-(position,
+///    head) value scales into one non-negative operand, quantized to
+///    unsigned `spec.op_bits` codes (one scale per head);
+/// 4. the **value matmul** p·V runs through the same multi-stage
+///    datapath and is dequantized with the probability-operand scale.
+///
+/// Each (row, head) is computed independently of any batchmates, so
+/// quantized-KV batched decode keeps the bit-exactness-vs-sequential
+/// property the serving engine rests on.
+pub fn attend_one_query_quant(
+    q: &[f32],
+    kv: &QuantKvSlot<'_>,
+    t_len: usize,
+    d: usize,
+    n_heads: usize,
+    spec: &KvQuantSpec,
+    out: &mut [f32],
+) -> u64 {
+    debug_assert_eq!(q.len(), d);
+    debug_assert_eq!(out.len(), d);
+    debug_assert!(t_len >= 1);
+    let hd = d / n_heads;
+    debug_assert_eq!(hd * n_heads, d, "d must divide n_heads");
+    let rsqrt = 1.0 / (hd as f32).sqrt();
+    let inner = AccumSpec::new(spec.inner_bits, spec.mode);
+    let score_outer =
+        AccumSpec::new(outer_bits(spec.inner_bits, hd, spec.tile).min(64), spec.mode);
+    let value_outer =
+        AccumSpec::new(outer_bits(spec.inner_bits, t_len, spec.tile).min(64), spec.mode);
+    let q_max = ((1i64 << (spec.op_bits - 1)) - 1) as f32; // signed query codes
+    let p_max = ((1i64 << spec.op_bits) - 1) as f32; // unsigned probability codes
+    let mut overflows = 0u64;
+
+    let mut q_codes = vec![0i64; hd];
+    let mut k_head = vec![0i32; t_len * hd];
+    let mut score_acc = vec![0i64; t_len];
+    let mut scores = vec![0f32; t_len];
+    let mut p_codes = vec![0i64; t_len];
+    let mut v_head_t = vec![0i32; hd * t_len];
+    let mut val_acc = vec![0i64; hd];
+
+    for h in 0..n_heads {
+        let off = h * hd;
+        // -- query operand: online symmetric quantization, one scale/head
+        let qseg = &q[off..off + hd];
+        let mut maxabs = 0.0f32;
+        for &v in qseg {
+            maxabs = maxabs.max(v.abs());
+        }
+        let q_scale = if maxabs > 0.0 { maxabs / q_max } else { 1.0 };
+        for (i, &v) in qseg.iter().enumerate() {
+            let c = (v / q_scale).round() as i64;
+            q_codes[i] = c.clamp(-(q_max as i64), q_max as i64);
+        }
+        // gather this head's key codes, (t_len, hd) row-major
+        for s in 0..t_len {
+            for i in 0..hd {
+                k_head[s * hd + i] = kv.k_code(s, off + i);
+            }
+        }
+        // -- score matmul on the multi-stage integer datapath
+        let ovf = qgemm_multistage(
+            &q_codes,
+            1,
+            &k_head,
+            t_len,
+            hd,
+            spec.tile,
+            inner,
+            score_outer,
+            &mut score_acc,
+        );
+        overflows += ovf.iter().sum::<u64>();
+        for s in 0..t_len {
+            scores[s] = score_acc[s] as f32 * q_scale * kv.k_scale(s, h) * rsqrt;
+        }
+        softmax(&mut scores);
+        // -- probability operand: fold the per-position value scale in,
+        // so the value reduction has one common dequant scale per head
+        let mut wmax = 0.0f32;
+        for s in 0..t_len {
+            let w = scores[s] * kv.v_scale(s, h);
+            scores[s] = w;
+            wmax = wmax.max(w);
+        }
+        let p_scale = if wmax > 0.0 { wmax / p_max } else { 1.0 };
+        for (code, &w) in p_codes.iter_mut().zip(scores.iter()) {
+            *code = ((w / p_scale).round() as i64).clamp(0, p_max as i64);
+        }
+        // gather this head's value codes transposed, (hd, t_len) row-major
+        for i in 0..hd {
+            for s in 0..t_len {
+                v_head_t[i * t_len + s] = kv.v_code(s, off + i);
+            }
+        }
+        // -- value matmul on the multi-stage integer datapath
+        let ovf = qgemm_multistage(
+            &p_codes,
+            1,
+            &v_head_t,
+            hd,
+            t_len,
+            spec.tile,
+            inner,
+            value_outer,
+            &mut val_acc,
+        );
+        overflows += ovf.iter().sum::<u64>();
+        for i in 0..hd {
+            out[off + i] = val_acc[i] as f32 * p_scale;
+        }
+    }
+    overflows
 }
 
 #[cfg(test)]

@@ -196,13 +196,14 @@ impl QuantLinear {
     }
 
     /// Run the integer datapath kernel over `rows` quantized input rows,
-    /// writing raw accumulator outputs. Returns overflow events
-    /// (Simulated datapath only; always 0 for Exact).
-    fn run_kernel(&self, x_codes: &[i64], rows: usize, acc: &mut [i64]) -> u64 {
+    /// writing raw accumulator outputs. Returns per-row overflow-event
+    /// counts (Simulated datapath only; empty — meaning all zeros — for
+    /// Exact).
+    fn run_kernel(&self, x_codes: &[i64], rows: usize, acc: &mut [i64]) -> Vec<u64> {
         match self.datapath {
             Datapath::Exact => {
                 qgemm::qgemm_exact(x_codes, rows, &self.codes, self.out_dim, self.in_dim, acc);
-                0
+                Vec::new()
             }
             Datapath::Simulated { tile, inner_bits, outer_bits, mode } => qgemm::qgemm_multistage(
                 x_codes,
@@ -246,8 +247,9 @@ impl QuantLinear {
             self.quantize_input(x, x_codes);
         }
         let mut acc = vec![0i64; self.out_dim];
-        let overflow_total = self.run_kernel(&x_codes[..self.in_dim], 1, &mut acc);
+        let row_ovf = self.run_kernel(&x_codes[..self.in_dim], 1, &mut acc);
         self.dequant_rows(&acc, 1, y);
+        let overflow_total: u64 = row_ovf.iter().sum();
         if overflow_total > 0 {
             self.overflow_events.fetch_add(overflow_total, Ordering::Relaxed);
         }
@@ -259,8 +261,25 @@ impl QuantLinear {
     /// output channel, so the thread-parallel channel bands amortize
     /// across the whole batch.
     pub fn forward_rows(&self, xs: &[f32], rows: usize, ys: &mut [f32]) {
+        self.forward_rows_counted(xs, rows, ys, &mut []);
+    }
+
+    /// [`QuantLinear::forward_rows`] that additionally **attributes**
+    /// overflow events to the rows that produced them: `row_ovf[r]` is
+    /// incremented by the events row `r` triggered (pass `&mut []` to
+    /// skip attribution). The serving engine threads per-request
+    /// counters through here so each [`crate::coordinator::serve::Response`]
+    /// carries an exact overflow count rather than a batch-window bound.
+    pub fn forward_rows_counted(
+        &self,
+        xs: &[f32],
+        rows: usize,
+        ys: &mut [f32],
+        row_ovf: &mut [u64],
+    ) {
         debug_assert_eq!(xs.len(), rows * self.in_dim);
         debug_assert_eq!(ys.len(), rows * self.out_dim);
+        debug_assert!(row_ovf.is_empty() || row_ovf.len() == rows);
         let mut codes = vec![0i64; rows * self.in_dim];
         match &self.rotation {
             Some(rot) => {
@@ -281,10 +300,16 @@ impl QuantLinear {
             }
         }
         let mut acc = vec![0i64; rows * self.out_dim];
-        let overflow_total = self.run_kernel(&codes, rows, &mut acc);
+        let kernel_ovf = self.run_kernel(&codes, rows, &mut acc);
         self.dequant_rows(&acc, rows, ys);
+        let overflow_total: u64 = kernel_ovf.iter().sum();
         if overflow_total > 0 {
             self.overflow_events.fetch_add(overflow_total, Ordering::Relaxed);
+            if !row_ovf.is_empty() {
+                for (dst, src) in row_ovf.iter_mut().zip(kernel_ovf.iter()) {
+                    *dst += src;
+                }
+            }
         }
         self.macs.fetch_add((rows * self.in_dim * self.out_dim) as u64, Ordering::Relaxed);
     }
@@ -346,6 +371,22 @@ impl Linear {
         match self {
             Linear::Float(l) => l.forward_rows(xs, rows, ys),
             Linear::Quant(l) => l.forward_rows(xs, rows, ys),
+        }
+    }
+
+    /// [`Linear::forward_rows`] with per-row overflow attribution:
+    /// quantized layers add each row's overflow events into
+    /// `row_ovf[r]`; float layers never overflow and leave it untouched.
+    pub fn forward_rows_counted(
+        &self,
+        xs: &[f32],
+        rows: usize,
+        ys: &mut [f32],
+        row_ovf: &mut [u64],
+    ) {
+        match self {
+            Linear::Float(l) => l.forward_rows(xs, rows, ys),
+            Linear::Quant(l) => l.forward_rows_counted(xs, rows, ys, row_ovf),
         }
     }
 
@@ -467,6 +508,38 @@ mod tests {
         let mut scratch = vec![0i64; 128];
         ql.forward_row(&x, &mut y, &mut scratch);
         assert!(ql.overflow_count() > 0, "narrow accumulator must overflow");
+    }
+
+    #[test]
+    fn per_row_overflow_attribution_matches_solo_rows() {
+        // forward_rows_counted must attribute to each batched row
+        // exactly the events that row triggers when run alone — the
+        // invariant per-request serving attribution rests on.
+        let fl = random_float_linear(96, 6, 110);
+        let mut ql = quantize_layer(&fl, 8, 111);
+        ql.datapath = Datapath::Simulated {
+            tile: 96,
+            inner_bits: 11,
+            outer_bits: 11,
+            mode: OverflowMode::Wraparound,
+        };
+        let mut rng = Rng::new(112);
+        let rows = 4;
+        let xs: Vec<f32> = (0..rows * 96).map(|_| rng.normal() as f32 + 0.8).collect();
+        let mut ys = vec![0.0f32; rows * 6];
+        let mut row_ovf = vec![0u64; rows];
+        let before = ql.overflow_count();
+        ql.forward_rows_counted(&xs, rows, &mut ys, &mut row_ovf);
+        let total: u64 = row_ovf.iter().sum();
+        assert_eq!(ql.overflow_count() - before, total, "layer counter must match row sum");
+        assert!(total > 0, "the narrow register must overflow in this fixture");
+        for r in 0..rows {
+            let mut y1 = vec![0.0f32; 6];
+            let mut solo = vec![0u64; 1];
+            ql.forward_rows_counted(&xs[r * 96..(r + 1) * 96], 1, &mut y1, &mut solo);
+            assert_eq!(solo[0], row_ovf[r], "row {r} attribution depends on batchmates");
+            assert_eq!(&ys[r * 6..(r + 1) * 6], &y1[..], "row {r} values diverge");
+        }
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! bit-accurate accumulator simulator from [`crate::accum`].
 
 pub mod decode;
+pub mod kvquant;
 pub mod layers;
 pub mod linear;
 pub mod loader;
@@ -14,7 +15,10 @@ pub mod mlp;
 pub mod transformer;
 
 pub use decode::{argmax, KvArena, KvCache};
-pub use layers::{attend_one_query, attention, softmax, Activation, LayerNorm};
+pub use kvquant::{KvCacheKind, KvQuantSpec};
+pub use layers::{
+    attend_one_query, attend_one_query_quant, attention, softmax, Activation, LayerNorm,
+};
 pub use linear::{Datapath, FloatLinear, Linear, QuantLinear};
 pub use loader::{
     list_models, load_model, load_named, read_f32_bin, read_f32_bin_any, write_f32_bin, Model,

@@ -86,6 +86,18 @@ pub fn is_safe(q: &[i64], mu: i64, nu: i64, p_bits: u32) -> bool {
     hi <= cap && -lo <= cap
 }
 
+/// Safe inner-accumulator width for the quantized-KV **attention**
+/// matmuls. Unlike the linear layers, both attention operands are
+/// data-dependent codes (the K/V cache carries no AXE-trained
+/// weight-side ℓ1 guarantee), so the only a-priori bound is the
+/// data-type bound (Eq. 3) evaluated at the tile depth. Conservative
+/// over both attention matmuls — score (signed query codes × signed key
+/// codes) and value (unsigned probability codes × signed value codes) —
+/// by taking the unsigned-input case, which needs one bit more.
+pub fn attention_inner_bits(tile: usize, op_bits: u32, kv_bits: u32) -> u32 {
+    datatype_min_bits(tile, op_bits, kv_bits, false)
+}
+
 /// Whether weights are safe under multi-stage accumulation: every tile of
 /// size `tile` within a P_I-bit inner register, and the exact total within
 /// the implied P_O-bit outer register.
@@ -216,6 +228,22 @@ mod tests {
                 }
             },
         );
+    }
+
+    #[test]
+    fn attention_inner_bits_is_sufficient() {
+        // 8-bit operands on both sides at tile 64:
+        //   inner = 64 · 2^{8+8-1} = 2^21 → P* = 22 + 1 = 23
+        assert_eq!(attention_inner_bits(64, 8, 8), 23);
+        // the bound must cover the adversarial tile: maximal unsigned
+        // inputs against maximal-magnitude signed codes
+        for &(tile, op, kv) in &[(64usize, 8u32, 8u32), (128, 8, 8), (64, 8, 16), (16, 8, 4)] {
+            let p = attention_inner_bits(tile, op, kv);
+            let wmax = (1i64 << (kv - 1)) - 1;
+            let numax = (1i64 << op) - 1;
+            let q = vec![wmax; tile];
+            assert!(is_safe(&q, 0, numax, p), "tile={tile} op={op} kv={kv} P={p}");
+        }
     }
 
     #[test]

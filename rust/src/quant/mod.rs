@@ -16,7 +16,10 @@ pub mod rotation;
 
 pub use alphabet::Alphabet;
 pub use axe::{AccumTarget, AxeConfig};
-pub use bounds::{datatype_min_bits, is_safe, is_safe_multistage, l1_budget, outer_bits, side_budget};
+pub use bounds::{
+    attention_inner_bits, datatype_min_bits, is_safe, is_safe_multistage, l1_budget, outer_bits,
+    side_budget,
+};
 pub use ep_init::{ep_init, ep_init_float};
 pub use gpfq::{gpfq_quantize, gpfq_quantize_grams, GpfqParams};
 pub use l1::{derive_lambda, project_l1, soft_threshold};

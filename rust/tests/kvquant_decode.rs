@@ -1,0 +1,263 @@
+//! End-to-end coverage for the accumulator-aware quantized KV cache:
+//! batched-vs-sequential decode parity on the integer attention
+//! datapath, slot reuse, window-slide semantics (codes + scales move
+//! verbatim), bounded divergence against the f32 arena, memory
+//! accounting, and exact per-request overflow attribution under
+//! continuous batching.
+
+use axe::coordinator::serve::{serve_with, Request, ServeQueue, ServeStats};
+use axe::coordinator::{quantize_transformer, DatapathMode, PipelineConfig};
+use axe::eval::synth_corpus;
+use axe::model::{
+    random_transformer, Activation, KvArena, KvCache, KvCacheKind, KvQuantSpec, Transformer,
+    TransformerConfig,
+};
+use axe::quant::{AccumTarget, Algorithm, Method};
+
+fn lm(seed: u64, d_model: usize, n_heads: usize, max_seq: usize) -> Transformer {
+    random_transformer(
+        TransformerConfig {
+            name: "kvq-itest".into(),
+            vocab: 48,
+            d_model,
+            n_layers: 2,
+            n_heads,
+            d_ff: 2 * d_model,
+            max_seq,
+            act: Activation::Gelu,
+            parallel_residual: false,
+        },
+        seed,
+    )
+}
+
+const KV8: KvCacheKind = KvCacheKind::Quant(KvQuantSpec {
+    kv_bits: 8,
+    op_bits: 8,
+    tile: 64,
+    inner_bits: 23, // attention_inner_bits(64, 8, 8) — data-type safe
+    mode: axe::accum::OverflowMode::Wraparound,
+});
+
+/// Batched decode on the quantized arena is bit-exact vs decoding each
+/// sequence alone, slots are reusable after release, and the reused
+/// slot behaves like a fresh cache.
+#[test]
+fn quant_arena_batched_decode_and_slot_reuse_are_bit_exact() {
+    let m = lm(901, 16, 2, 16);
+    let vocab = m.cfg.vocab;
+    let seqs: Vec<Vec<u16>> = vec![vec![3, 1, 4, 1, 5], vec![9, 2, 6, 5, 3]];
+    let mut want: Vec<Vec<f32>> = Vec::new();
+    for s in &seqs {
+        let mut cache = KvCache::with_kind(&m, KV8);
+        let mut last = Vec::new();
+        for &t in s {
+            last = m.decode_step(t, &mut cache);
+        }
+        want.push(last);
+    }
+    let mut arena = KvArena::with_kind(&m, 2, KV8);
+    let s0 = arena.alloc().unwrap();
+    let s1 = arena.alloc().unwrap();
+    let mut got = Vec::new();
+    for pos in 0..seqs[0].len() {
+        got = m.decode_step_batch(&[seqs[0][pos], seqs[1][pos]], &[s0, s1], &mut arena);
+    }
+    for (b, w) in want.iter().enumerate() {
+        assert_eq!(&got[b * vocab..(b + 1) * vocab], &w[..], "seq {b} diverged under batching");
+    }
+    // release + reuse: the recycled slot must equal a fresh cache
+    arena.release(s0);
+    let s2 = arena.alloc().unwrap();
+    assert_eq!(s2, s0, "LIFO free list must reuse the retired slot");
+    let fresh = m.decode_step_batch(&[7], &[s2], &mut arena);
+    let mut cache = KvCache::with_kind(&m, KV8);
+    let alone = m.decode_step(7, &mut cache);
+    assert_eq!(fresh, alone, "reused quant slot must behave like a fresh cache");
+    // the surviving slot's cached rows were untouched
+    assert_eq!(arena.len(s1), seqs[1].len());
+}
+
+/// `truncate_front` on the quantized arena slides codes and scales
+/// as-is: every kept position dequantizes bit-identically after the
+/// slide, across all layers.
+#[test]
+fn quant_truncate_front_slides_codes_and_scales_without_drift() {
+    let m = lm(902, 16, 2, 16);
+    let mut arena = KvArena::with_kind(&m, 1, KV8);
+    let slot = arena.alloc().unwrap();
+    for t in 0..8u16 {
+        m.decode_step_batch(&[t], &[slot], &mut arena);
+    }
+    let mut snapshot: Vec<Vec<(Vec<f32>, Vec<f32>)>> = Vec::new();
+    for layer in 0..m.cfg.n_layers {
+        snapshot.push((3..8).map(|pos| arena.kv_row(layer, slot, pos)).collect());
+    }
+    arena.truncate_front(slot, 3);
+    assert_eq!(arena.len(slot), 5);
+    for (layer, rows) in snapshot.iter().enumerate() {
+        for (pos, want) in rows.iter().enumerate() {
+            assert_eq!(
+                &arena.kv_row(layer, slot, pos),
+                want,
+                "layer {layer} pos {pos} drifted across the slide"
+            );
+        }
+    }
+    // sliding everything empties the slot
+    arena.truncate_front(slot, 99);
+    assert_eq!(arena.len(slot), 0);
+}
+
+/// Teacher-forced bounded divergence: feeding the SAME token sequence
+/// through the f32 and the i8 KV backends keeps every step's logits
+/// within quantization-error distance — the accuracy half of the
+/// memory/accuracy trade-off.
+#[test]
+fn quant_vs_f32_logits_divergence_is_bounded() {
+    let m = lm(903, 16, 2, 16);
+    let toks = synth_corpus(12, m.cfg.vocab, 904);
+    let mut f32_cache = KvCache::new(&m);
+    let mut q_cache = KvCache::with_kind(&m, KV8);
+    let mut worst = 0.0f32;
+    let mut total = 0.0f32;
+    let mut n = 0usize;
+    for &t in &toks {
+        let lf = m.decode_step(t, &mut f32_cache);
+        let lq = m.decode_step(t, &mut q_cache);
+        for (a, b) in lf.iter().zip(lq.iter()) {
+            let d = (a - b).abs();
+            worst = worst.max(d);
+            total += d;
+            n += 1;
+        }
+    }
+    assert!(worst < 0.5, "worst logit divergence {worst} exceeds the quantization envelope");
+    assert!(total / n as f32 < 0.1, "mean logit divergence {} too large", total / n as f32);
+}
+
+/// The i8 arena reports ≤ 30% of the f32 arena's bytes at equal
+/// slots/seq-len once heads are reasonably wide (scale overhead is
+/// 1/head_dim), and `bytes()` matches the `footprint` formula.
+#[test]
+fn quant_arena_memory_is_about_a_quarter_of_f32() {
+    let m = lm(905, 64, 2, 32); // head dim 32
+    let f32_bytes = KvArena::footprint(&m.cfg, 4, KvCacheKind::F32);
+    let q8 = KvCacheKind::Quant(KvQuantSpec::int8());
+    let q8_bytes = KvArena::footprint(&m.cfg, 4, q8);
+    assert_eq!(f32_bytes, 2 * m.cfg.n_layers * 4 * m.cfg.max_seq * m.cfg.d_model * 4);
+    assert!(
+        (q8_bytes as f64) <= 0.30 * f32_bytes as f64,
+        "i8 arena {q8_bytes} B exceeds 30% of f32 {f32_bytes} B"
+    );
+    let arena = KvArena::with_kind(&m, 4, q8);
+    assert_eq!(arena.bytes(), q8_bytes, "footprint formula disagrees with the live arena");
+    // 16-bit codes halve instead of quarter
+    let q16_bytes = KvArena::footprint(&m.cfg, 4, KvCacheKind::Quant(KvQuantSpec::int16()));
+    assert!(q16_bytes > q8_bytes && q16_bytes < f32_bytes);
+}
+
+/// THE attribution property: per-request overflow counts are exact —
+/// invariant to batch composition — on a model whose narrow registers
+/// overflow in both the linear layers (forced narrow eval width) and
+/// the attention matmuls (narrow KV inner width).
+#[test]
+fn per_request_overflow_attribution_is_batch_invariant() {
+    let m0 = lm(906, 16, 2, 16);
+    let toks = synth_corpus(16 * 8, m0.cfg.vocab, 907);
+    let calib: Vec<&[u16]> = toks.chunks_exact(16).take(4).collect();
+    let mut cfg = PipelineConfig::new(Algorithm::Optq, Method::Axe, 4, 8);
+    cfg.target = AccumTarget::MultiStage { p_inner: 14, tile: 8 };
+    cfg.datapath = DatapathMode::Faithful;
+    cfg.force_eval_bits = Some(9); // deliberately too narrow → overflows
+    let mut m = m0.clone();
+    quantize_transformer(&mut m, &calib, &cfg).unwrap();
+    // narrow attention registers too, so attention events join the count
+    let kv = KvCacheKind::Quant(KvQuantSpec::new(8, 8, Some(8)));
+
+    let reqs: Vec<Request> = (0..5u64)
+        .map(|id| Request {
+            id,
+            prompt: toks[id as usize * 7..id as usize * 7 + 3 + id as usize].to_vec(),
+            max_new_tokens: 4 + (id as usize * 5) % 14,
+        })
+        .collect();
+    let run = |max_batch: usize| {
+        let q = ServeQueue::new();
+        for r in &reqs {
+            q.submit(r.clone());
+        }
+        q.close();
+        serve_with(&m, &q, 1, max_batch, kv);
+        q.drain()
+    };
+    let solo = run(1);
+    let batched = run(3);
+    assert_eq!(solo.len(), batched.len());
+    let mut total = 0u64;
+    for (a, b) in solo.iter().zip(batched.iter()) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.tokens, b.tokens, "request {} tokens depend on batching", a.id);
+        assert_eq!(
+            a.overflow_events, b.overflow_events,
+            "request {} overflow attribution depends on batch composition",
+            a.id
+        );
+        total += a.overflow_events;
+    }
+    assert!(total > 0, "the narrow-register fixture must actually overflow");
+    let stats = ServeStats::from_responses(&batched, 1.0);
+    assert_eq!(stats.overflow_events, total, "stats total must equal the per-request sum");
+}
+
+/// Acceptance path: an AXE-quantized model served end to end over the
+/// quantized KV arena — token-exact vs sequential decode on the same
+/// backend, zero overflow events (linear guarantee from AXE, attention
+/// guarantee from the data-type-safe inner width), and a shrunken
+/// arena.
+#[test]
+fn quantized_model_serves_end_to_end_on_quant_kv() {
+    let m0 = lm(908, 16, 2, 16);
+    let toks = synth_corpus(16 * 8, m0.cfg.vocab, 909);
+    let calib: Vec<&[u16]> = toks.chunks_exact(16).take(4).collect();
+    let mut cfg = PipelineConfig::new(Algorithm::Optq, Method::Axe, 4, 8);
+    cfg.target = AccumTarget::MultiStage { p_inner: 14, tile: 8 };
+    cfg.datapath = DatapathMode::Faithful;
+    let mut m = m0.clone();
+    let report = quantize_transformer(&mut m, &calib, &cfg).unwrap();
+    assert!(report.guaranteed_safe());
+
+    let reqs: Vec<Request> = (0..6u64)
+        .map(|id| {
+            let plen = 2 + ((id as usize * 3) % 9);
+            Request {
+                id,
+                prompt: toks[id as usize * 16..id as usize * 16 + plen].to_vec(),
+                max_new_tokens: 6 + ((id as usize * 9) % 20), // some past the window → slides
+            }
+        })
+        .collect();
+    let q = ServeQueue::new();
+    for r in &reqs {
+        q.submit(r.clone());
+    }
+    q.close();
+    let t0 = std::time::Instant::now();
+    serve_with(&m, &q, 1, 3, KV8);
+    let responses = q.drain();
+    let mut stats = ServeStats::from_responses(&responses, t0.elapsed().as_secs_f64());
+    stats.arena_bytes = KvArena::footprint(&m.cfg, 3, KV8);
+    assert_eq!(stats.requests, reqs.len());
+    assert_eq!(stats.overflow_events, 0, "both guarantees hold → zero events");
+    assert!(stats.arena_bytes < KvArena::footprint(&m.cfg, 3, KvCacheKind::F32) / 2);
+    for (resp, req) in responses.iter().zip(reqs.iter()) {
+        assert_eq!(resp.id, req.id);
+        let want = m.generate_greedy_with(&req.prompt, req.max_new_tokens, KV8);
+        assert_eq!(
+            resp.tokens,
+            want[req.prompt.len()..],
+            "request {} diverged from sequential quant-KV greedy decode",
+            req.id
+        );
+    }
+}
