@@ -69,11 +69,13 @@ fn main() {
     let xq: Vec<i64> = (0..bq * kq).map(|_| rng.int_in(0, 255)).collect();
     let wq_codes: Vec<i32> = (0..cq * kq).map(|_| rng.int_in(-7, 7) as i32).collect();
     let mut out_q = vec![0i64; bq * cq];
+    let mut row_ovf = vec![0u64; bq];
     let macs = (bq * kq * cq) as f64;
     let s_fused = bench("qgemm fused 16x2048x256 (64x16b)", 2, 10, || {
-        std::hint::black_box(qgemm_multistage(
-            &xq, bq, &wq_codes, cq, kq, tile_q, inner, outer, &mut out_q,
-        ));
+        qgemm_multistage(
+            &xq, bq, &wq_codes, cq, kq, tile_q, inner, outer, &mut out_q, &mut row_ovf,
+        );
+        std::hint::black_box((&out_q, &row_ovf));
     });
     println!("    -> {:.1} M MAC/s", macs / s_fused.median / 1e6);
     let w64: Vec<i64> = wq_codes.iter().map(|&v| v as i64).collect();

@@ -2,21 +2,55 @@
 //! the LM ladder (W4A8, 16-bit inner accumulators, T ∈ {64, 128}),
 //! for both the memory-efficient GPFQ* and OPTQ, against the
 //! unconstrained base and the float model — plus an end-to-end timing of
-//! the faithful (fused-kernel) integer datapath.
+//! the faithful (fused-kernel) integer datapath and the decode-
+//! throughput trajectory (sequential vs continuous batching, f32 vs
+//! quantized KV).
 //!
 //! Runs against the trained zoo when `make artifacts` has been built;
 //! otherwise falls back to one synthetic pico model so the bench always
 //! produces numbers. AXE_BENCH_FULL=1 includes the larger ladder rungs.
+//!
+//! `--quick` (the CI mode) skips the Table 1 PTQ sweep, always runs on
+//! the synthetic model, and — like every run — writes machine-readable
+//! results to `BENCH_decode.json` (override with AXE_BENCH_OUT):
+//! tokens/s per (kv backend, in-flight) configuration, the sequential
+//! baseline, and an in-run before/after of the attention hot loop
+//! (`attend_one_query_quant_ref`, the PR 3 per-element-gather +
+//! per-call-alloc implementation, vs the scratch/bulk-gather fast
+//! path). If `BENCH_decode.baseline.json` exists (override with
+//! AXE_BENCH_BASELINE), its content is embedded verbatim under
+//! `"baseline"` so the perf trajectory can be tracked across PRs; CI
+//! uploads the JSON as an artifact on every run.
 
 use axe::bench_support::time_once;
 use axe::coordinator::experiments::run_lm_config;
+use axe::coordinator::serve::{serve, serve_with, Request, ServeQueue, ServeStats};
 use axe::coordinator::{quantize_transformer, DatapathMode, PipelineConfig};
 use axe::eval::{load_corpus_split_or_synth, perplexity};
 use axe::model::{
-    load_named, random_transformer, Activation, Model, Transformer, TransformerConfig,
+    attend_one_query_quant, attend_one_query_quant_ref, load_named, random_transformer,
+    Activation, AttnScratch, KvArena, KvCacheKind, KvQuantSpec, Model, Transformer,
+    TransformerConfig,
 };
+use axe::model::kvquant::QuantKv;
 use axe::quant::{AccumTarget, Algorithm, Method};
+use axe::util::rng::Rng;
 use axe::util::Table;
+
+fn synth_model() -> (String, Transformer) {
+    let cfg = TransformerConfig {
+        name: "pico-synth".into(),
+        vocab: 64,
+        d_model: 56,
+        n_layers: 4,
+        n_heads: 7,
+        d_ff: 224,
+        max_seq: 64,
+        act: Activation::Gelu,
+        parallel_residual: true,
+    };
+    ("pico-synth".to_string(), random_transformer(cfg, 1))
+}
 
 /// The trained zoo, or one synthetic stand-in model when artifacts are
 /// absent (keeps the bench runnable on a fresh checkout).
@@ -33,99 +67,119 @@ fn zoo_or_synth(names: &[&str]) -> Vec<(String, Transformer)> {
             "[multistage_llm] zoo missing — benching a synthetic pico model \
              (run `make artifacts` for the real ladder)"
         );
-        let cfg = TransformerConfig {
-            name: "pico-synth".into(),
-            vocab: 64,
-            d_model: 56,
-            n_layers: 4,
-            n_heads: 7,
-            d_ff: 224,
-            max_seq: 64,
-            act: Activation::Gelu,
-            parallel_residual: true,
-        };
-        out.push(("pico-synth".to_string(), random_transformer(cfg, 1)));
+        out.push(synth_model());
     }
     out
 }
 
-fn main() -> anyhow::Result<()> {
-    let full = std::env::var("AXE_BENCH_FULL").is_ok();
-    let model_names: Vec<&str> = if full {
-        vec!["pico-70k", "pico-160k", "pico-410k", "pico-1m", "pico-2m"]
-    } else {
-        vec!["pico-70k", "pico-160k", "pico-410k"]
-    };
-    let zoo = zoo_or_synth(&model_names);
-    // (tile, P_I) grid: the paper's 64x16b/128x16b (free at our widths,
-    // like their 64x16b at Pythia widths) plus the binding 14-bit tier
-    // that exposes the tile-size trade at this zoo's K.
-    let configs: [(usize, u32); 4] = [(64, 16), (128, 16), (64, 14), (128, 14)];
+/// One measured decode-throughput configuration (a BENCH_decode.json row).
+struct DecodePoint {
+    kv: &'static str,
+    in_flight: usize,
+    tokens_per_s: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    overflow_events: u64,
+    arena_bytes: usize,
+}
 
-    for algo in [Algorithm::GpfqMemEff, Algorithm::Optq] {
-        println!("\n### Table 1 analog — {} (W4A8)\n", algo.name());
-        let mut table = Table::new(&[
-            "model", "params", "K_max", "float", "base", "64x16b", "128x16b", "64x14b", "128x14b",
-        ]);
-        for (name, base) in &zoo {
-            let k_max = base.cfg.d_ff;
-            let seq = base.cfg.max_seq;
-            let train = load_corpus_split_or_synth("train", base.cfg.vocab);
-            let val = load_corpus_split_or_synth("val", base.cfg.vocab);
-            let calib: Vec<&[u16]> = train.chunks_exact(seq).take(10).collect();
-            let float_ppl = perplexity(base, &val, seq, 16).ppl;
-            let base_cfg = PipelineConfig::new(algo, Method::Naive, 4, 8);
-            let t0 = std::time::Instant::now();
-            let base_pt = run_lm_config(base, &calib, &val, seq, 16, &base_cfg)?;
-            let mut row = vec![
-                name.to_string(),
-                format!("{}", base.cfg.param_count()),
-                format!("{k_max}"),
-                format!("{float_ppl:.1}"),
-                format!("{:.1}", base_pt.metric),
-            ];
-            for &(t, p_inner) in &configs {
-                let mut cfg = PipelineConfig::new(algo, Method::Axe, 4, 8);
-                cfg.target = AccumTarget::MultiStage { p_inner, tile: t };
-                let pt = run_lm_config(base, &calib, &val, seq, 16, &cfg)?;
-                row.push(format!("{:.1}", pt.metric));
+/// In-run before/after of the attention hot loop.
+struct AttnMicro {
+    t_len: usize,
+    d: usize,
+    heads: usize,
+    iters: usize,
+    ref_us_per_call: f64,
+    scratch_us_per_call: f64,
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let full = std::env::var("AXE_BENCH_FULL").is_ok();
+
+    let zoo = if quick {
+        eprintln!("[multistage_llm] --quick: decode trajectory only, synthetic model");
+        vec![synth_model()]
+    } else {
+        let model_names: Vec<&str> = if full {
+            vec!["pico-70k", "pico-160k", "pico-410k", "pico-1m", "pico-2m"]
+        } else {
+            vec!["pico-70k", "pico-160k", "pico-410k"]
+        };
+        zoo_or_synth(&model_names)
+    };
+
+    if !quick {
+        // (tile, P_I) grid: the paper's 64x16b/128x16b (free at our
+        // widths, like their 64x16b at Pythia widths) plus the binding
+        // 14-bit tier that exposes the tile-size trade at this zoo's K.
+        let configs: [(usize, u32); 4] = [(64, 16), (128, 16), (64, 14), (128, 14)];
+        for algo in [Algorithm::GpfqMemEff, Algorithm::Optq] {
+            println!("\n### Table 1 analog — {} (W4A8)\n", algo.name());
+            let mut table = Table::new(&[
+                "model", "params", "K_max", "float", "base", "64x16b", "128x16b", "64x14b",
+                "128x14b",
+            ]);
+            for (name, base) in &zoo {
+                let k_max = base.cfg.d_ff;
+                let seq = base.cfg.max_seq;
+                let train = load_corpus_split_or_synth("train", base.cfg.vocab);
+                let val = load_corpus_split_or_synth("val", base.cfg.vocab);
+                let calib: Vec<&[u16]> = train.chunks_exact(seq).take(10).collect();
+                let float_ppl = perplexity(base, &val, seq, 16).ppl;
+                let base_cfg = PipelineConfig::new(algo, Method::Naive, 4, 8);
+                let t0 = std::time::Instant::now();
+                let base_pt = run_lm_config(base, &calib, &val, seq, 16, &base_cfg)?;
+                let mut row = vec![
+                    name.to_string(),
+                    format!("{}", base.cfg.param_count()),
+                    format!("{k_max}"),
+                    format!("{float_ppl:.1}"),
+                    format!("{:.1}", base_pt.metric),
+                ];
+                for &(t, p_inner) in &configs {
+                    let mut cfg = PipelineConfig::new(algo, Method::Axe, 4, 8);
+                    cfg.target = AccumTarget::MultiStage { p_inner, tile: t };
+                    let pt = run_lm_config(base, &calib, &val, seq, 16, &cfg)?;
+                    row.push(format!("{:.1}", pt.metric));
+                }
+                table.row(&row);
+                eprintln!("  [{name}] done in {:.1}s", t0.elapsed().as_secs_f64());
             }
-            table.row(&row);
-            eprintln!("  [{name}] done in {:.1}s", t0.elapsed().as_secs_f64());
+            println!("{}", table.render());
         }
-        println!("{}", table.render());
     }
 
-    // ---- faithful-datapath serving throughput. DatapathMode::Faithful
-    // now executes on the fused qgemm kernel (bit-for-bit equal to the
-    // scalar simulator, which remains the audit oracle) — this times the
-    // end-to-end integer-datapath eval the serve path runs on.
+    // ---- quantize the timing model: DatapathMode::Faithful executes
+    // on the fused qgemm kernel (bit-for-bit equal to the scalar
+    // simulator, which remains the audit oracle).
     let (name, base) = &zoo[0];
     let seq = base.cfg.max_seq;
     let train = load_corpus_split_or_synth("train", base.cfg.vocab);
     let val = load_corpus_split_or_synth("val", base.cfg.vocab);
-    let calib: Vec<&[u16]> = train.chunks_exact(seq).take(8).collect();
+    let calib_n = if quick { 4 } else { 8 };
+    let calib: Vec<&[u16]> = train.chunks_exact(seq).take(calib_n).collect();
     let mut cfg = PipelineConfig::new(Algorithm::Optq, Method::Axe, 4, 8);
     cfg.target = AccumTarget::MultiStage { p_inner: 16, tile: 64 };
     cfg.datapath = DatapathMode::Faithful;
     let mut qmodel = base.clone();
     quantize_transformer(&mut qmodel, &calib, &cfg)?;
-    let (report, secs) = time_once(|| perplexity(&qmodel, &val, seq, 16));
-    println!(
-        "\nfaithful-datapath eval on {name} (fused 64x16b kernel): \
-         {:.0} tok/s, PPL {:.1}, overflow events {}",
-        report.tokens as f64 / secs,
-        report.ppl,
-        report.overflows
-    );
+
+    if !quick {
+        let (report, secs) = time_once(|| perplexity(&qmodel, &val, seq, 16));
+        println!(
+            "\nfaithful-datapath eval on {name} (fused 64x16b kernel): \
+             {:.0} tok/s, PPL {:.1}, overflow events {}",
+            report.tokens as f64 / secs,
+            report.ppl,
+            report.overflows
+        );
+    }
 
     // ---- decode throughput: per-request sequential decode vs the
     // continuous-batching step scheduler. Each serve run uses ONE
     // engine thread; what scales is the number of in-flight slots the
-    // scheduler stacks into every decode_step_batch / fused qgemm call.
-    use axe::coordinator::serve::{serve, serve_with, Request, ServeQueue, ServeStats};
-    use axe::model::{KvArena, KvCacheKind, KvQuantSpec};
-
+    // scheduler stacks into every decode step / fused qgemm call.
     let n_requests = 16usize;
     let gen_tokens = 32usize;
     let make_requests = || -> Vec<Request> {
@@ -140,6 +194,7 @@ fn main() -> anyhow::Result<()> {
             })
             .collect()
     };
+    let mut points: Vec<DecodePoint> = Vec::new();
 
     // sequential baseline: one request at a time through the KV cache
     let reqs = make_requests();
@@ -148,14 +203,12 @@ fn main() -> anyhow::Result<()> {
             .map(|r| qmodel.generate_greedy(&r.prompt, r.max_new_tokens))
             .collect::<Vec<_>>()
     });
+    let sequential_tok_s = (n_requests * gen_tokens) as f64 / seq_s;
     println!(
         "\ndecode throughput on {name} ({} reqs × {} tokens, W4A8 64x16b faithful):",
         n_requests, gen_tokens
     );
-    println!(
-        "  per-request sequential : {:>7.1} tok/s",
-        (n_requests * gen_tokens) as f64 / seq_s
-    );
+    println!("  per-request sequential : {sequential_tok_s:>7.1} tok/s");
 
     for max_batch in [1usize, 4, 16] {
         let queue = ServeQueue::new();
@@ -183,13 +236,23 @@ fn main() -> anyhow::Result<()> {
                 "batched decode must be token-exact"
             );
         }
+        points.push(DecodePoint {
+            kv: "f32",
+            in_flight: max_batch,
+            tokens_per_s: stats.tokens_per_s,
+            p50_ms: stats.p50_latency_s * 1e3,
+            p99_ms: stats.p99_latency_s * 1e3,
+            overflow_events: stats.overflow_events,
+            arena_bytes: KvArena::footprint(&qmodel.cfg, max_batch, KvCacheKind::F32),
+        });
     }
 
     // ---- quantized-KV decode throughput: same scheduler, but the
-    // arena stores i8 codes + per-(slot, position, head) scales and the
-    // attention score/value matmuls run on the multi-stage integer
-    // datapath. Token-exact vs sequential decode on the SAME backend
-    // (vs the f32 arena it trades bounded divergence for ~4x memory).
+    // arena stores i8 codes + per-(slot, position, head) bf16 scales
+    // and the attention score/value matmuls run on the multi-stage
+    // integer datapath. Token-exact vs sequential decode on the SAME
+    // backend (vs the f32 arena it trades bounded divergence for ~4x
+    // memory).
     let kv_kind = KvCacheKind::Quant(KvQuantSpec::int8());
     let f32_bytes = KvArena::footprint(&qmodel.cfg, 16, KvCacheKind::F32);
     let q_bytes = KvArena::footprint(&qmodel.cfg, 16, kv_kind);
@@ -231,13 +294,180 @@ fn main() -> anyhow::Result<()> {
                 "quant-KV batched decode must be token-exact vs quant-KV sequential"
             );
         }
+        points.push(DecodePoint {
+            kv: "int8",
+            in_flight: max_batch,
+            tokens_per_s: stats.tokens_per_s,
+            p50_ms: stats.p50_latency_s * 1e3,
+            p99_ms: stats.p99_latency_s * 1e3,
+            overflow_events: stats.overflow_events,
+            arena_bytes: stats.arena_bytes,
+        });
     }
 
+    // ---- attention hot-loop micro: the PR 3 reference (per-element
+    // gathers + per-call allocations) vs the scratch/bulk-gather fast
+    // path, identical arithmetic (asserted) — the tentpole's measured
+    // before/after inside one run.
+    let attn = attention_micro(&qmodel.cfg, if quick { 400 } else { 1500 });
     println!(
-        "\nExpected shape: constrained columns approach `base` as width grows\n\
-         (T fixed while K grows — the A2Q scaling hypothesis, paper §4.2);\n\
-         continuous-batch decode throughput grows with in-flight slots,\n\
-         and the i8 KV arena roughly quarters serving memory."
+        "\nattention hot loop (t_len {}, d {}, {} heads, {} iters):\n  \
+         ref (PR 3 gathers+allocs): {:>7.2} µs/call\n  \
+         scratch + bulk gathers   : {:>7.2} µs/call  ({:.2}x)",
+        attn.t_len,
+        attn.d,
+        attn.heads,
+        attn.iters,
+        attn.ref_us_per_call,
+        attn.scratch_us_per_call,
+        attn.ref_us_per_call / attn.scratch_us_per_call
     );
+
+    // ---- machine-readable results (CI uploads this as an artifact).
+    // Default paths anchor at the workspace root (one level above this
+    // package's manifest), independent of the bench's CWD.
+    let out_path = std::env::var("AXE_BENCH_OUT").unwrap_or_else(|_| {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_decode.json").to_string()
+    });
+    let baseline_path = std::env::var("AXE_BENCH_BASELINE").unwrap_or_else(|_| {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_decode.baseline.json").to_string()
+    });
+    let json = render_json(
+        name,
+        quick,
+        n_requests,
+        gen_tokens,
+        sequential_tok_s,
+        &points,
+        &attn,
+        &baseline_path,
+    );
+    std::fs::write(&out_path, &json)?;
+    println!("\nwrote {out_path} ({} bytes)", json.len());
+
+    if !quick {
+        println!(
+            "\nExpected shape: constrained columns approach `base` as width grows\n\
+             (T fixed while K grows — the A2Q scaling hypothesis, paper §4.2);\n\
+             continuous-batch decode throughput grows with in-flight slots,\n\
+             and the i8 KV arena roughly quarters serving memory."
+        );
+    }
     Ok(())
+}
+
+/// Time `attend_one_query_quant_ref` vs the scratch fast path over one
+/// quantized KV fixture, asserting bit-identical outputs first.
+fn attention_micro(cfg: &TransformerConfig, iters: usize) -> AttnMicro {
+    let (d, heads) = (cfg.d_model, cfg.n_heads);
+    let t_len = (cfg.max_seq * 3 / 4).max(1);
+    let spec = KvQuantSpec::int8();
+    let mut rng = Rng::new(42);
+    let mut kv = QuantKv::new(spec, 1, 1, t_len, d, heads);
+    for pos in 0..t_len {
+        let k: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let v: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        kv.append_row(0, 0, pos, &k, &v);
+    }
+    let q: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+    let view = kv.slot_view(0, 0);
+    let mut scratch = AttnScratch::new();
+    let mut out_ref = vec![0.0f32; d];
+    let mut out_fast = vec![0.0f32; d];
+    let ovf_r = attend_one_query_quant_ref(&q, &view, t_len, d, heads, &spec, &mut out_ref);
+    let ovf_f =
+        attend_one_query_quant(&q, &view, t_len, d, heads, &spec, &mut scratch, &mut out_fast);
+    assert_eq!(out_ref, out_fast, "ref and fast attention paths must be bit-identical");
+    assert_eq!(ovf_r, ovf_f, "ref and fast overflow counts must agree");
+
+    let (_, ref_s) = time_once(|| {
+        for _ in 0..iters {
+            std::hint::black_box(attend_one_query_quant_ref(
+                &q, &view, t_len, d, heads, &spec, &mut out_ref,
+            ));
+        }
+    });
+    let (_, fast_s) = time_once(|| {
+        for _ in 0..iters {
+            std::hint::black_box(attend_one_query_quant(
+                &q,
+                &view,
+                t_len,
+                d,
+                heads,
+                &spec,
+                &mut scratch,
+                &mut out_fast,
+            ));
+        }
+    });
+    AttnMicro {
+        t_len,
+        d,
+        heads,
+        iters,
+        ref_us_per_call: ref_s * 1e6 / iters as f64,
+        scratch_us_per_call: fast_s * 1e6 / iters as f64,
+    }
+}
+
+/// Hand-rolled JSON (no serde offline). `baseline` embeds the previous
+/// snapshot verbatim when the file exists and looks like JSON.
+#[allow(clippy::too_many_arguments)]
+fn render_json(
+    model: &str,
+    quick: bool,
+    n_requests: usize,
+    gen_tokens: usize,
+    sequential_tok_s: f64,
+    points: &[DecodePoint],
+    attn: &AttnMicro,
+    baseline_path: &str,
+) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"schema\": \"axe-bench-decode/v1\",\n");
+    s.push_str(&format!("  \"model\": \"{model}\",\n"));
+    s.push_str(&format!("  \"quick\": {quick},\n"));
+    s.push_str(&format!("  \"n_requests\": {n_requests},\n"));
+    s.push_str(&format!("  \"gen_tokens\": {gen_tokens},\n"));
+    s.push_str(&format!("  \"sequential_tok_s\": {sequential_tok_s:.1},\n"));
+    s.push_str("  \"configs\": [\n");
+    for (i, p) in points.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"kv\": \"{}\", \"in_flight\": {}, \"tokens_per_s\": {:.1}, \
+             \"p50_ms\": {:.2}, \"p99_ms\": {:.2}, \"overflow_events\": {}, \
+             \"arena_bytes\": {}}}{}\n",
+            p.kv,
+            p.in_flight,
+            p.tokens_per_s,
+            p.p50_ms,
+            p.p99_ms,
+            p.overflow_events,
+            p.arena_bytes,
+            if i + 1 < points.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str(&format!(
+        "  \"attention_hot_loop\": {{\"t_len\": {}, \"d\": {}, \"heads\": {}, \"iters\": {}, \
+         \"ref_us_per_call\": {:.3}, \"scratch_us_per_call\": {:.3}, \"speedup\": {:.2}}},\n",
+        attn.t_len,
+        attn.d,
+        attn.heads,
+        attn.iters,
+        attn.ref_us_per_call,
+        attn.scratch_us_per_call,
+        attn.ref_us_per_call / attn.scratch_us_per_call
+    ));
+    match std::fs::read_to_string(baseline_path) {
+        Ok(b) if b.trim_start().starts_with('{') => {
+            s.push_str("  \"baseline\": ");
+            s.push_str(b.trim());
+            s.push('\n');
+        }
+        _ => s.push_str("  \"baseline\": null\n"),
+    }
+    s.push_str("}\n");
+    s
 }

@@ -5,11 +5,17 @@
 //! queue. Each engine thread owns a [`KvArena`] of `max_batch` slots
 //! and runs a vLLM-style **step scheduler**: every iteration it admits
 //! queued requests into free slots, stacks the current token of every
-//! in-flight sequence into one [`Transformer::decode_step_batch`] call
-//! (one fused qgemm dispatch per layer across the whole batch), samples
-//! greedily, and retires finished sequences — requests join and leave
-//! the batch mid-flight, so the accumulator-aware GEMM amortizes across
-//! whatever traffic is live instead of idling between requests.
+//! in-flight sequence into one
+//! [`Transformer::decode_step_batch_scratch`] call (one fused qgemm
+//! dispatch per layer across the whole batch), samples greedily, and
+//! retires finished sequences — requests join and leave the batch
+//! mid-flight, so the accumulator-aware GEMM amortizes across whatever
+//! traffic is live instead of idling between requests. Each engine
+//! owns one [`DecodeScratch`] workspace reused across admissions,
+//! steps and slides, so the steady-state step loop performs zero heap
+//! allocations (`tests/zero_alloc_decode.rs`; scoped, to kernel calls
+//! below the band-threading work threshold — past it, thread spawns
+//! allocate by design).
 //!
 //! Scheduling is **token-exact**: admission prefill, per-slot window
 //! slides, sampling order and tie-breaks replicate
@@ -23,7 +29,7 @@
 //! [`serve_with`]) attention matmuls produced — not a batch-window
 //! bound.
 
-use crate::model::{argmax, KvArena, KvCacheKind, Transformer};
+use crate::model::{argmax, DecodeScratch, KvArena, KvCacheKind, Transformer};
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
@@ -245,10 +251,22 @@ pub fn serve_with(
 
 /// The step scheduler: admit → (slide | sample | retire) → one batched
 /// decode step, until the queue closes and the batch drains.
+///
+/// The engine owns one [`DecodeScratch`] workspace plus reusable
+/// step-composition vectors; the steady-state loop — poll-empty
+/// admission, per-sequence sample, one batched
+/// [`Transformer::decode_step_batch_scratch`] call — performs zero heap
+/// allocations beyond the per-sequence `emitted`/`context`/`logits`
+/// buffers, which reuse their retained capacity.
 fn run_engine(model: &Transformer, queue: &ServeQueue, max_batch: usize, kind: KvCacheKind) {
     let vocab = model.cfg.vocab;
     let mut arena = KvArena::with_kind(model, max_batch, kind);
     let mut active: Vec<InFlight> = Vec::new();
+    // one workspace per engine, shared by admissions, steps and slides
+    let mut scratch = DecodeScratch::for_model(&model.cfg, max_batch);
+    let mut step_tokens: Vec<u16> = Vec::with_capacity(max_batch);
+    let mut step_slots: Vec<usize> = Vec::with_capacity(max_batch);
+    let mut step_ovf: Vec<u64> = Vec::with_capacity(max_batch);
     loop {
         // -- admission: block when idle, poll when the batch has work
         let admissions = if active.is_empty() {
@@ -277,14 +295,14 @@ fn run_engine(model: &Transformer, queue: &ServeQueue, max_batch: usize, kind: K
             let slot = arena.alloc().expect("admission is bounded by free slots");
             let prompt = model.clip_to_window(&req.prompt);
             let mut prefill_ovf = 0u64;
-            let logits = model.prefill_slot_counted(&prompt, slot, &mut arena, &mut prefill_ovf);
+            model.prefill_slot_scratch(&prompt, slot, &mut arena, &mut prefill_ovf, &mut scratch);
             active.push(InFlight {
                 id: req.id,
                 slot,
                 context: prompt,
                 emitted: Vec::with_capacity(req.max_new_tokens),
                 max_new: req.max_new_tokens,
-                logits,
+                logits: scratch.step.logits[..vocab].to_vec(),
                 enqueued,
                 admitted,
                 overflow: prefill_ovf,
@@ -303,8 +321,15 @@ fn run_engine(model: &Transformer, queue: &ServeQueue, max_batch: usize, kind: K
                     let tail = seq.context[seq.context.len() - keep..].to_vec();
                     arena.reset_slot(seq.slot);
                     let mut slide_ovf = 0u64;
-                    seq.logits =
-                        model.prefill_slot_counted(&tail, seq.slot, &mut arena, &mut slide_ovf);
+                    model.prefill_slot_scratch(
+                        &tail,
+                        seq.slot,
+                        &mut arena,
+                        &mut slide_ovf,
+                        &mut scratch,
+                    );
+                    seq.logits.clear();
+                    seq.logits.extend_from_slice(&scratch.step.logits[..vocab]);
                     seq.overflow += slide_ovf;
                     seq.context = tail;
                 }
@@ -329,18 +354,28 @@ fn run_engine(model: &Transformer, queue: &ServeQueue, max_batch: usize, kind: K
         }
 
         // -- one decode step for every sequence still in flight: the
-        // whole batch goes through one forward_rows per linear; the
-        // kernel's per-row overflow counts land on the requests that
-        // produced them
+        // whole batch goes through one forward_rows_scratch per linear;
+        // the kernel's per-row overflow counts land on the requests
+        // that produced them. Step vectors and the workspace are
+        // reused, so the steady-state iteration is allocation-free.
         if !active.is_empty() {
-            let tokens: Vec<u16> = active.iter().map(|s| *s.context.last().unwrap()).collect();
-            let slots: Vec<usize> = active.iter().map(|s| s.slot).collect();
-            let mut row_ovf = vec![0u64; active.len()];
-            let logits = model.decode_step_batch_counted(&tokens, &slots, &mut arena, &mut row_ovf);
+            step_tokens.clear();
+            step_tokens.extend(active.iter().map(|s| *s.context.last().unwrap()));
+            step_slots.clear();
+            step_slots.extend(active.iter().map(|s| s.slot));
+            step_ovf.clear();
+            step_ovf.resize(active.len(), 0);
+            model.decode_step_batch_scratch(
+                &step_tokens,
+                &step_slots,
+                &mut arena,
+                &mut step_ovf,
+                &mut scratch,
+            );
             for (b, seq) in active.iter_mut().enumerate() {
-                seq.overflow += row_ovf[b];
+                seq.overflow += step_ovf[b];
                 seq.logits.clear();
-                seq.logits.extend_from_slice(&logits[b * vocab..(b + 1) * vocab]);
+                seq.logits.extend_from_slice(&scratch.step.logits[b * vocab..(b + 1) * vocab]);
             }
         }
         queue.complete(finished);

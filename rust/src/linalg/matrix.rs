@@ -184,30 +184,7 @@ impl Mat {
         assert_eq!(self.cols, b.cols, "matmul_bt shape mismatch");
         let (m, k, n) = (self.rows, self.cols, b.rows);
         let mut out = Mat::zeros(m, n);
-        let nthreads = num_threads().min(m.max(1));
-        if m * n * k < 64 * 64 * 64 || nthreads <= 1 {
-            matmul_band(&self.data, &b.data, &mut out.data, 0, m, k, n);
-            return out;
-        }
-        let band = m.div_ceil(nthreads);
-        let a_data = &self.data;
-        let b_data = &b.data;
-        let out_ptr = out.data.as_mut_ptr() as usize;
-        std::thread::scope(|scope| {
-            for t in 0..nthreads {
-                let lo = t * band;
-                let hi = ((t + 1) * band).min(m);
-                if lo >= hi {
-                    continue;
-                }
-                scope.spawn(move || {
-                    let out_slice = unsafe {
-                        std::slice::from_raw_parts_mut(out_ptr as *mut f64, m * n)
-                    };
-                    matmul_band(a_data, b_data, out_slice, lo, hi, k, n);
-                });
-            }
-        });
+        gemm_bt_into(&self.data, &b.data, m, k, n, &mut out.data);
         out
     }
 
@@ -271,6 +248,43 @@ pub fn dot(a: &[f64], b: &[f64]) -> f64 {
         s += a[i] * b[i];
     }
     s
+}
+
+/// `out = A·Bᵀ` into a caller-provided buffer: `a` is `m`×`k` row-major,
+/// `b` is `n`×`k` row-major (rows of B are the contraction vectors),
+/// `out` is `m`×`n` row-major. The allocation-free core of
+/// [`Mat::matmul_bt`] — the decode hot path feeds pre-sized scratch
+/// buffers through here ([`crate::model::DecodeScratch`]) so a steady-
+/// state float-linear forward performs no heap allocation. Parallelized
+/// over row bands above the same work threshold as [`Mat::matmul`];
+/// each output row is accumulated sequentially, so per-row results are
+/// batch-size invariant.
+pub fn gemm_bt_into(a: &[f64], b: &[f64], m: usize, k: usize, n: usize, out: &mut [f64]) {
+    assert_eq!(a.len(), m * k, "a must be m*k");
+    assert_eq!(b.len(), n * k, "b must be n*k");
+    assert_eq!(out.len(), m * n, "out must be m*n");
+    let nthreads = num_threads().min(m.max(1));
+    if m * n * k < 64 * 64 * 64 || nthreads <= 1 {
+        matmul_band(a, b, out, 0, m, k, n);
+        return;
+    }
+    let band = m.div_ceil(nthreads);
+    let out_ptr = out.as_mut_ptr() as usize;
+    std::thread::scope(|scope| {
+        for t in 0..nthreads {
+            let lo = t * band;
+            let hi = ((t + 1) * band).min(m);
+            if lo >= hi {
+                continue;
+            }
+            scope.spawn(move || {
+                // SAFETY: bands [lo,hi) are disjoint per thread.
+                let out_slice =
+                    unsafe { std::slice::from_raw_parts_mut(out_ptr as *mut f64, m * n) };
+                matmul_band(a, b, out_slice, lo, hi, k, n);
+            });
+        }
+    });
 }
 
 /// Compute rows [row_lo, row_hi) of C = A·Bᵀpacked where `bt` holds B

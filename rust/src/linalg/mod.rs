@@ -12,7 +12,7 @@ pub mod qgemm;
 mod sqrtm;
 
 pub use cholesky::{cholesky_lower, solve_lower, solve_lower_transpose, spd_inverse, CholeskyError};
-pub use matrix::{dot, num_threads, Mat};
+pub use matrix::{dot, gemm_bt_into, num_threads, Mat};
 pub use qgemm::{dot_multistage_fused, qgemm_exact, qgemm_multistage};
 pub use sqrtm::{sqrtm_psd, SqrtmError};
 

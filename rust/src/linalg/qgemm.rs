@@ -23,9 +23,22 @@
 //! - Tile partials feed the outer register through the same
 //!   [`AccumSpec::narrow`] step the simulator uses.
 //!
-//! Channels are fanned out across threads with the band-parallel
-//! `std::thread::scope` idiom proven in [`super::matrix`]; each band
-//! writes a disjoint set of output columns.
+//! Two execution strategies, chosen per call:
+//!
+//! - **Serial fast path** — sub-threshold work runs inline, which
+//!   includes every decode-attention call (one query row against t_len
+//!   cached positions): no band setup, no scoped threads, and the
+//!   per-row overflow counters are plain `u64` adds. This path performs
+//!   **zero heap allocations**, which is what the steady-state decode
+//!   loop rides on (see [`crate::model::DecodeScratch`]). The only
+//!   exception is the rare ℓ1-violation fallback above, which buffers
+//!   one tile of widened codes.
+//! - **Threaded band path** — larger batched calls fan channels out
+//!   across threads with the band-parallel `std::thread::scope` idiom
+//!   proven in [`super::matrix`]; each band writes a disjoint set of
+//!   output columns, and the shared per-row overflow counters are
+//!   touched through atomics (only when a row actually overflowed
+//!   inside a band, i.e. never on guaranteed-safe codes).
 //!
 //! Precondition (documented, debug-asserted): products and per-tile
 //! ℓ1 masses must fit in i64 — true for any real quantized-code
@@ -33,6 +46,10 @@
 
 use crate::accum::simulator::{dot_monolithic, AccumSpec, OverflowMode};
 use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Minimum `rows * c * k` MAC count before a kernel call fans out to
+/// scoped threads; below it the inline serial path wins on latency.
+const PAR_MIN_WORK: usize = 64 * 64 * 64;
 
 /// Exact integer GEMM: `out[r][ch] = Σ_i x[r][i] · w[ch][i]`.
 ///
@@ -60,11 +77,18 @@ pub fn qgemm_exact(x: &[i64], rows: usize, w: &[i32], c: usize, k: usize, out: &
 
 /// Fused multi-stage integer GEMM, bit-for-bit equal to evaluating
 /// [`crate::accum::simulator::dot_multistage`] at every `(row, channel)`
-/// pair. Returns **per-row** overflow-event counts (`len == rows`, all
-/// zeros whenever the codes honour their accumulator guarantee) — the
-/// serving engine uses them to attribute overflow events to the
-/// individual sequences stacked into one batched call; sum the vector
-/// for the call total.
+/// pair.
+///
+/// **Per-row overflow counts are written into the `row_ovf`
+/// out-parameter** (`len == rows`, overwrite semantics: every entry is
+/// set to the count for that row, all zeros whenever the codes honour
+/// their accumulator guarantee). The serving engine uses them to
+/// attribute overflow events to the individual sequences stacked into
+/// one batched call; sum the slice for the call total. The out-param
+/// (instead of a returned `Vec`) keeps the single-row decode-attention
+/// calls allocation-free: the serial path does plain `u64` adds, and
+/// only the threaded band path promotes the counters to atomics
+/// (in place — `AtomicU64` is layout-identical to `u64`).
 ///
 /// Layouts match [`qgemm_exact`]; `tile`, `inner` and `outer` match the
 /// simulator's multi-stage datapath (Fig. 2b / Eq. 22).
@@ -79,16 +103,48 @@ pub fn qgemm_multistage(
     inner: AccumSpec,
     outer: AccumSpec,
     out: &mut [i64],
-) -> Vec<u64> {
+    row_ovf: &mut [u64],
+) {
     assert_eq!(x.len(), rows * k, "x must be rows*k");
     assert_eq!(w.len(), c * k, "w must be c*k");
     assert_eq!(out.len(), rows * c, "out must be rows*c");
+    assert_eq!(row_ovf.len(), rows, "one overflow counter per row");
     assert!(tile >= 1, "tile must be >= 1");
-    // Channel bands run concurrently and each touches every row, so the
-    // per-row counters are atomics; bands only pay the fetch_add when a
-    // row actually overflowed inside the band (rare on guaranteed-safe
+
+    let nthreads = crate::linalg::num_threads().min(c.max(1));
+    if nthreads <= 1 || rows * c * k < PAR_MIN_WORK {
+        // Serial fast path: no band setup, no atomics, no allocations.
+        // The decode-attention shape (one query row against t_len
+        // cached positions, c·k ≪ PAR_MIN_WORK) always lands here,
+        // keeping its latency flat; large single-row linear forwards
+        // still fan out across channel bands below.
+        for r in 0..rows {
+            let xrow = &x[r * k..(r + 1) * k];
+            let orow = &mut out[r * c..(r + 1) * c];
+            let mut row_total = 0u64;
+            for (ch, o) in orow.iter_mut().enumerate() {
+                let (value, overflows) =
+                    dot_multistage_fused(xrow, &w[ch * k..(ch + 1) * k], tile, inner, outer);
+                *o = value;
+                row_total += overflows as u64;
+            }
+            row_ovf[r] = row_total;
+        }
+        return;
+    }
+
+    // Threaded band path: channel bands run concurrently and each
+    // touches every row, so the caller's counters are promoted to
+    // atomics in place; bands only pay the fetch_add when a row
+    // actually overflowed inside the band (never on guaranteed-safe
     // codes).
-    let row_overflows: Vec<AtomicU64> = (0..rows).map(|_| AtomicU64::new(0)).collect();
+    row_ovf.fill(0);
+    // SAFETY: `AtomicU64` has the same size and alignment as `u64`
+    // (guaranteed by std: "same in-memory representation as the
+    // underlying integer type"), and we hold the only reference to
+    // `row_ovf` for the duration of the scope below.
+    let counters: &[AtomicU64] =
+        unsafe { &*(row_ovf as *mut [u64] as *const [AtomicU64]) };
     run_channel_bands(c, rows * c * k, out, |lo, hi, band| {
         for r in 0..rows {
             let xrow = &x[r * k..(r + 1) * k];
@@ -101,11 +157,10 @@ pub fn qgemm_multistage(
                 row_total += overflows as u64;
             }
             if row_total > 0 {
-                row_overflows[r].fetch_add(row_total, Ordering::Relaxed);
+                counters[r].fetch_add(row_total, Ordering::Relaxed);
             }
         }
     });
-    row_overflows.into_iter().map(|a| a.into_inner()).collect()
 }
 
 /// One fused multi-stage dot product (see module docs for the fast-path
@@ -204,7 +259,7 @@ where
 {
     let base = out.as_mut_ptr() as usize;
     let nthreads = crate::linalg::num_threads().min(c.max(1));
-    if nthreads <= 1 || work < 64 * 64 * 64 {
+    if nthreads <= 1 || work < PAR_MIN_WORK {
         body(0, c, &mut ChannelBand { base, c, lo: 0, hi: c });
         return;
     }
@@ -231,6 +286,10 @@ mod tests {
     use crate::util::prop::quick;
     use crate::util::rng::Rng;
 
+    /// Per-(row, channel) simulator reference — this produces exactly
+    /// what the pre-out-param `qgemm_multistage` used to *return* as a
+    /// `Vec<u64>`, so comparing the out-param slice against it is the
+    /// old-vs-new semantics parity check.
     #[allow(clippy::too_many_arguments)]
     fn simulate_gemm(
         x: &[i64],
@@ -308,8 +367,8 @@ mod tests {
                 let inner = AccumSpec::new(*p_inner, *mode);
                 let outer = AccumSpec::new(*p_outer, *mode);
                 let mut out = vec![0i64; rows * c];
-                let got_ovf =
-                    qgemm_multistage(x, *rows, w, *c, *k, *tile, inner, outer, &mut out);
+                let mut got_ovf = vec![0u64; *rows];
+                qgemm_multistage(x, *rows, w, *c, *k, *tile, inner, outer, &mut out, &mut got_ovf);
                 let (want, want_ovf) =
                     simulate_gemm(x, *rows, w, *c, *k, *tile, inner, outer);
                 if out != want {
@@ -326,6 +385,35 @@ mod tests {
         );
     }
 
+    /// The out-parameter has overwrite semantics on **both** execution
+    /// paths: pre-poisoned counters must come back as exactly the
+    /// per-row counts the old return-`Vec` API produced — bit for bit
+    /// against the simulator — including the all-zero case.
+    #[test]
+    fn out_param_overwrites_and_matches_legacy_vec_semantics() {
+        let mut rng = Rng::new(910);
+        // serial shape (small) and threaded shape (above PAR_MIN_WORK)
+        for &(rows, k, c, tile, p_inner) in
+            &[(3usize, 48usize, 6usize, 8usize, 10u32), (4, 1024, 128, 64, 12)]
+        {
+            let inner = AccumSpec::wraparound(p_inner);
+            let outer = AccumSpec::wraparound(p_inner + 6);
+            let x: Vec<i64> = (0..rows * k).map(|_| rng.int_in(0, 255)).collect();
+            let w: Vec<i32> = (0..c * k).map(|_| rng.int_in(-9, 9) as i32).collect();
+            let mut out = vec![0i64; rows * c];
+            let mut ovf = vec![u64::MAX; rows]; // poisoned: must be overwritten
+            qgemm_multistage(&x, rows, &w, c, k, tile, inner, outer, &mut out, &mut ovf);
+            let (want, want_ovf) = simulate_gemm(&x, rows, &w, c, k, tile, inner, outer);
+            assert_eq!(out, want, "rows={rows} k={k}");
+            assert_eq!(ovf, want_ovf, "rows={rows} k={k}: stale counter state leaked");
+            // and the zero case: wide registers, counters poisoned again
+            let wide = AccumSpec::wraparound(40);
+            let mut ovf0 = vec![7u64; rows];
+            qgemm_multistage(&x, rows, &w, c, k, tile, wide, wide, &mut out, &mut ovf0);
+            assert!(ovf0.iter().all(|&v| v == 0), "zero-event rows must be overwritten to 0");
+        }
+    }
+
     #[test]
     fn checked_mode_keeps_exact_values() {
         let mut rng = Rng::new(901);
@@ -335,7 +423,8 @@ mod tests {
         let x: Vec<i64> = (0..rows * k).map(|_| rng.int_in(0, 255)).collect();
         let w: Vec<i32> = (0..c * k).map(|_| rng.int_in(-7, 7) as i32).collect();
         let mut out = vec![0i64; rows * c];
-        let ovf = qgemm_multistage(&x, rows, &w, c, k, tile, inner, outer, &mut out);
+        let mut ovf = vec![0u64; rows];
+        qgemm_multistage(&x, rows, &w, c, k, tile, inner, outer, &mut out, &mut ovf);
         let (want, want_ovf) = simulate_gemm(&x, rows, &w, c, k, tile, inner, outer);
         assert_eq!(out, want);
         assert_eq!(ovf, want_ovf);
@@ -352,7 +441,7 @@ mod tests {
     #[test]
     fn threaded_band_path_matches_simulator() {
         // rows*c*k above the inline threshold so the scoped-thread bands
-        // actually run.
+        // actually run (rows > 1: single-row calls always stay serial).
         let mut rng = Rng::new(902);
         let (rows, k, c, tile) = (4usize, 1024usize, 128usize, 64usize);
         let inner = AccumSpec::wraparound(16);
@@ -360,10 +449,30 @@ mod tests {
         let x: Vec<i64> = (0..rows * k).map(|_| rng.int_in(0, 255)).collect();
         let w: Vec<i32> = (0..c * k).map(|_| rng.int_in(-2, 2) as i32).collect();
         let mut out = vec![0i64; rows * c];
-        let ovf = qgemm_multistage(&x, rows, &w, c, k, tile, inner, outer, &mut out);
+        let mut ovf = vec![0u64; rows];
+        qgemm_multistage(&x, rows, &w, c, k, tile, inner, outer, &mut out, &mut ovf);
         let (want, want_ovf) = simulate_gemm(&x, rows, &w, c, k, tile, inner, outer);
         assert_eq!(out, want);
         assert_eq!(ovf, want_ovf);
+    }
+
+    #[test]
+    fn single_row_serial_path_matches_simulator_at_scale() {
+        // a serving-depth single-row call (1·96·2048 MACs, just under
+        // PAR_MIN_WORK) rides the serial fast path; it must still be
+        // bit-exact (values + counts).
+        let mut rng = Rng::new(904);
+        let (k, c, tile) = (2048usize, 96usize, 64usize);
+        let inner = AccumSpec::wraparound(14); // narrow: some tiles overflow
+        let outer = AccumSpec::wraparound(20);
+        let x: Vec<i64> = (0..k).map(|_| rng.int_in(0, 255)).collect();
+        let w: Vec<i32> = (0..c * k).map(|_| rng.int_in(-7, 7) as i32).collect();
+        let mut out = vec![0i64; c];
+        let mut ovf = [0u64; 1];
+        qgemm_multistage(&x, 1, &w, c, k, tile, inner, outer, &mut out, &mut ovf);
+        let (want, want_ovf) = simulate_gemm(&x, 1, &w, c, k, tile, inner, outer);
+        assert_eq!(out, want);
+        assert_eq!(&ovf[..], &want_ovf[..]);
     }
 
     #[test]
@@ -384,7 +493,7 @@ mod tests {
     fn empty_and_degenerate_shapes() {
         let mut out: Vec<i64> = Vec::new();
         qgemm_exact(&[], 0, &[], 0, 7, &mut out);
-        let ovf = qgemm_multistage(
+        qgemm_multistage(
             &[],
             0,
             &[],
@@ -394,11 +503,25 @@ mod tests {
             AccumSpec::wraparound(16),
             AccumSpec::wraparound(16),
             &mut out,
+            &mut [],
         );
-        assert!(ovf.is_empty(), "rows=0 yields no per-row counters");
         // k = 0: every dot product is the empty sum
         let mut out1 = vec![99i64; 2];
         qgemm_exact(&[], 2, &[], 1, 0, &mut out1[..2]);
         assert_eq!(out1, vec![0, 0]);
+        let mut ovf = [5u64; 2];
+        qgemm_multistage(
+            &[],
+            2,
+            &[],
+            1,
+            0,
+            4,
+            AccumSpec::wraparound(16),
+            AccumSpec::wraparound(16),
+            &mut out1[..2],
+            &mut ovf,
+        );
+        assert_eq!(ovf, [0, 0], "k=0 rows carry zero events");
     }
 }

@@ -359,6 +359,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         });
     }
     queue.close();
+    let ovf_before = model.overflow_events();
     let t0 = std::time::Instant::now();
     serve_with(&model, &queue, workers, max_batch, kind);
     let responses = queue.drain();
@@ -382,6 +383,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
          exact per-request attribution)",
         stats.overflow_events,
         stats.overflow_events as f64 / stats.total_tokens.max(1) as f64
+    );
+    // the unified model-wide counter (quantized linears + attention
+    // matmuls) must agree with the per-request sum — one number for
+    // eval and serve
+    println!(
+        "                of which attention: {}; unified model counter delta: {}",
+        model.attention_overflow_events(),
+        model.overflow_events() - ovf_before
     );
     Ok(())
 }

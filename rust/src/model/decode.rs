@@ -8,20 +8,33 @@
 //! The serving engine decodes **many sequences per kernel call**:
 //! [`KvArena`] holds a fixed number of slots (one in-flight sequence
 //! each, with independent lengths), and
-//! [`Transformer::decode_step_batch`] stacks the current token of every
-//! scheduled slot into one [`super::Linear::forward_rows`] call per
-//! linear — quantized layers amortize the fused qgemm kernel across the
-//! whole in-flight batch. Attention stays ragged: each slot attends
-//! over its own cached positions only.
+//! [`Transformer::decode_step_batch_scratch`] stacks the current token
+//! of every scheduled slot into one batched linear call per layer —
+//! quantized layers amortize the fused qgemm kernel across the whole
+//! in-flight batch. Attention stays ragged: each slot attends over its
+//! own cached positions only.
+//!
+//! The `_scratch` entry points are the hot path: every operand buffer
+//! (activations, quantized codes, attention panels, overflow counters,
+//! logits) lives in a caller-owned [`super::DecodeScratch`] workspace,
+//! so a steady-state decode step performs **zero heap allocations**
+//! (`tests/zero_alloc_decode.rs` asserts this with a counting global
+//! allocator; the guarantee covers kernel calls below the
+//! band-threading work threshold — a batched call large enough to fan
+//! out to scoped threads allocates for the spawns, by design). The serving engine owns one workspace per engine thread
+//! and reuses it across admissions, steps and slides; the non-scratch
+//! wrappers (`decode_step_batch`, `prefill_slot`, …) build a transient
+//! workspace and exist for tests and one-shot callers.
 //!
 //! The arena runs on one of two **backends** ([`KvCacheKind`]): plain
 //! f32 keys/values with float attention, or the accumulator-aware
 //! quantized store ([`super::kvquant`]) — narrow integer codes with
-//! per-(slot, position, head) scales, quantized once at append time,
-//! with both attention matmuls executed on the multi-stage integer
-//! datapath ([`super::layers::attend_one_query_quant`]). Every decode
-//! entry point dispatches internally, so callers pick a backend at
-//! arena construction and nothing else changes.
+//! per-(slot, position, head) bf16 scales, quantized once at append
+//! time, with both attention matmuls executed on the multi-stage
+//! integer datapath ([`super::layers::attend_one_query_quant`], fed by
+//! the slab-resolved bulk gathers). Every decode entry point dispatches
+//! internally, so callers pick a backend at arena construction and
+//! nothing else changes.
 //!
 //! The single-sequence [`KvCache`] is a thin 1-slot arena view, and
 //! `decode_step`/`prefill` delegate to the batched path, so sequential
@@ -30,16 +43,21 @@
 //! sequential decode on either backend (tested here and in
 //! `coordinator::serve`). This relies on every row of a batched kernel
 //! being computed independently of its batchmates (true of
-//! `linalg::qgemm`, `linalg::Mat`'s banded GEMM, and the per-slot
-//! quantized attention).
+//! `linalg::qgemm`, the banded f64 GEMM, and the per-slot quantized
+//! attention).
 //!
-//! The `_counted` variants additionally attribute integer-datapath
-//! overflow events (linear layers and quantized attention) to the row /
-//! request that produced them — the serving engine's exact per-request
-//! accounting.
+//! Overflow accounting is **unified**: the `_counted`/`_scratch`
+//! variants attribute integer-datapath overflow events (linear layers
+//! and quantized attention) to the row / request that produced them —
+//! the serving engine's exact per-request accounting — and attention
+//! events additionally land on the model-wide
+//! [`Transformer::overflow_events`] counter alongside the quantized-
+//! linear events, so eval and serve report one number (previously
+//! attention events lived on a separate arena-side counter).
 
 use super::kvquant::{KvCacheKind, QuantKv};
 use super::layers::{attend_one_query, attend_one_query_quant};
+use super::scratch::DecodeScratch;
 use super::transformer::{Transformer, TransformerConfig};
 
 /// Multi-sequence key/value arena: `slots` independent sequences, each
@@ -130,30 +148,16 @@ impl KvArena {
 
     /// Storage footprint of an arena with `slots` slots for this model
     /// config on the given backend, without building it — lets reports
-    /// compare f32 vs quantized footprints cheaply.
+    /// compare f32 vs quantized footprints cheaply. Quantized scales
+    /// are bf16-packed: 2 bytes per (slot, position, head) per tensor.
     pub fn footprint(cfg: &TransformerConfig, slots: usize, kind: KvCacheKind) -> usize {
         let positions = slots * cfg.max_seq;
         match kind {
             KvCacheKind::F32 => 2 * cfg.n_layers * positions * cfg.d_model * 4,
             KvCacheKind::Quant(spec) => {
                 let code_bytes = if spec.kv_bits <= 8 { 1 } else { 2 };
-                2 * cfg.n_layers * positions * (cfg.d_model * code_bytes + cfg.n_heads * 4)
+                2 * cfg.n_layers * positions * (cfg.d_model * code_bytes + cfg.n_heads * 2)
             }
-        }
-    }
-
-    /// Attention overflow events observed on the quantized backend
-    /// (always 0 on f32).
-    pub fn overflow_events(&self) -> u64 {
-        match &self.store {
-            KvStore::F32 { .. } => 0,
-            KvStore::Quant(q) => q.overflow_events(),
-        }
-    }
-
-    fn add_attention_overflows(&mut self, n: u64) {
-        if let KvStore::Quant(q) = &mut self.store {
-            q.add_overflows(n);
         }
     }
 
@@ -334,12 +338,9 @@ impl Transformer {
     /// pass: `tokens[b]` is appended to arena slot `slots[b]`. Returns
     /// row-major `tokens.len() × vocab` logits.
     ///
-    /// Every linear runs one [`super::Linear::forward_rows`] call over
-    /// the whole batch (the fused qgemm kernel for quantized layers);
-    /// attention is ragged — slot `b` attends over its own
-    /// `len(slots[b]) + 1` cached positions at its own absolute
-    /// position, on the arena's backend. Each output row is
-    /// bit-identical to decoding that sequence alone.
+    /// Transient-workspace wrapper around
+    /// [`Transformer::decode_step_batch_scratch`] (tests and one-shot
+    /// callers; the serving engine holds its own workspace).
     pub fn decode_step_batch(
         &self,
         tokens: &[u16],
@@ -354,8 +355,7 @@ impl Transformer {
     /// attribution**: `row_ovf[b]` is incremented by every integer-
     /// datapath overflow event row `b` triggered this step — its rows of
     /// each quantized linear plus (on the quantized-KV backend) its own
-    /// attention matmuls. The serving engine threads per-request
-    /// counters through here.
+    /// attention matmuls.
     pub fn decode_step_batch_counted(
         &self,
         tokens: &[u16],
@@ -363,12 +363,42 @@ impl Transformer {
         arena: &mut KvArena,
         row_ovf: &mut [u64],
     ) -> Vec<f32> {
+        let mut scratch = DecodeScratch::new();
+        self.decode_step_batch_scratch(tokens, slots, arena, row_ovf, &mut scratch);
+        scratch.step.logits[..tokens.len() * self.cfg.vocab].to_vec()
+    }
+
+    /// The batched decode step over a caller-owned workspace — the
+    /// serving hot path. Every linear runs one
+    /// [`super::Linear::forward_rows_scratch`] call over the whole
+    /// batch (the fused qgemm kernel for quantized layers); attention
+    /// is ragged — slot `b` attends over its own `len(slots[b]) + 1`
+    /// cached positions at its own absolute position, on the arena's
+    /// backend. Each output row is bit-identical to decoding that
+    /// sequence alone, and `row_ovf[b]` is incremented by exactly the
+    /// overflow events row `b` triggered (the serving engine threads
+    /// per-request counters through here).
+    ///
+    /// The step's logits land in `scratch.step.logits[..b * vocab]`
+    /// (row-major, one row per scheduled sequence) — read them from the
+    /// workspace; nothing is allocated or returned. With a warm
+    /// workspace the whole step performs zero heap allocations.
+    pub fn decode_step_batch_scratch(
+        &self,
+        tokens: &[u16],
+        slots: &[usize],
+        arena: &mut KvArena,
+        row_ovf: &mut [u64],
+        scratch: &mut DecodeScratch,
+    ) {
         assert_eq!(tokens.len(), slots.len(), "one slot per token");
         assert_eq!(row_ovf.len(), tokens.len(), "one overflow counter per row");
         assert!(!tokens.is_empty(), "empty decode batch");
         assert_eq!(arena.d, self.cfg.d_model);
         let b = tokens.len();
         let d = self.cfg.d_model;
+        let d_ff = self.cfg.d_ff;
+        let vocab = self.cfg.vocab;
         for (i, &s) in slots.iter().enumerate() {
             assert!(arena.live[s], "slot {s} not allocated");
             assert!(!arena.is_full(s), "KV slot {s} full (max_seq {})", arena.max_seq);
@@ -378,8 +408,22 @@ impl Transformer {
             assert!(!slots[..i].contains(&s), "slot {s} scheduled twice in one step");
         }
 
+        let DecodeScratch { lin, attn, step } = scratch;
+        step.ensure(b, b, d, d_ff, vocab);
+        // Live-size views over the grow-only step buffers; everything
+        // below operates on exactly b rows.
+        let h = &mut step.h[..b * d];
+        let ln_out = &mut step.ln_out[..b * d];
+        let q = &mut step.q[..b * d];
+        let k_new = &mut step.k_new[..b * d];
+        let v_new = &mut step.v_new[..b * d];
+        let mix = &mut step.mix[..b * d];
+        let attn_out = &mut step.attn_out[..b * d];
+        let ff = &mut step.ff[..b * d_ff];
+        let ff_out = &mut step.ff_out[..b * d];
+        let logits = &mut step.logits[..b * vocab];
+
         // token + absolute positional embedding per row
-        let mut h = vec![0.0f32; b * d];
         for (r, (&tok, &slot)) in tokens.iter().zip(slots.iter()).enumerate() {
             let e = &self.embed[(tok as usize) * d..(tok as usize + 1) * d];
             let pos = arena.len(slot);
@@ -389,23 +433,14 @@ impl Transformer {
             }
         }
 
-        let mut ln_out = vec![0.0f32; b * d];
-        let mut q = vec![0.0f32; b * d];
-        let mut k_new = vec![0.0f32; b * d];
-        let mut v_new = vec![0.0f32; b * d];
-        let mut mix = vec![0.0f32; b * d];
-        let mut attn_out = vec![0.0f32; b * d];
-        let mut ff = vec![0.0f32; b * self.cfg.d_ff];
-        let mut ff_out = vec![0.0f32; b * d];
         let mut attn_total = 0u64;
-
         for (bi, blk) in self.blocks.iter().enumerate() {
             for r in 0..b {
                 blk.ln1.forward_row(&h[r * d..(r + 1) * d], &mut ln_out[r * d..(r + 1) * d]);
             }
-            blk.wq.forward_rows_counted(&ln_out, b, &mut q, row_ovf);
-            blk.wk.forward_rows_counted(&ln_out, b, &mut k_new, row_ovf);
-            blk.wv.forward_rows_counted(&ln_out, b, &mut v_new, row_ovf);
+            blk.wq.forward_rows_scratch(ln_out, b, q, row_ovf, lin);
+            blk.wk.forward_rows_scratch(ln_out, b, k_new, row_ovf, lin);
+            blk.wv.forward_rows_scratch(ln_out, b, v_new, row_ovf, lin);
             for (r, &slot) in slots.iter().enumerate() {
                 let pos = arena.len(slot);
                 arena.append_kv_at(
@@ -417,7 +452,7 @@ impl Transformer {
                 );
             }
             // ragged single-query attention: each row over its own slot,
-            // on the arena's backend
+            // on the arena's backend, all through one reused workspace
             for (r, &slot) in slots.iter().enumerate() {
                 let t_len = arena.len(slot) + 1;
                 let qrow = &q[r * d..(r + 1) * d];
@@ -427,7 +462,7 @@ impl Transformer {
                         let base = slot * arena.max_seq * d;
                         let kc = &k[bi][base..base + t_len * d];
                         let vc = &v[bi][base..base + t_len * d];
-                        attend_one_query(qrow, kc, vc, t_len, d, self.cfg.n_heads, orow);
+                        attend_one_query(qrow, kc, vc, t_len, d, self.cfg.n_heads, attn, orow);
                     }
                     KvStore::Quant(qkv) => {
                         let spec = qkv.spec;
@@ -438,6 +473,7 @@ impl Transformer {
                             d,
                             self.cfg.n_heads,
                             &spec,
+                            attn,
                             orow,
                         );
                         if ovf > 0 {
@@ -447,7 +483,7 @@ impl Transformer {
                     }
                 }
             }
-            blk.wo.forward_rows_counted(&mix, b, &mut attn_out, row_ovf);
+            blk.wo.forward_rows_scratch(mix, b, attn_out, row_ovf, lin);
             if !self.cfg.parallel_residual {
                 for i in 0..b * d {
                     h[i] += attn_out[i];
@@ -456,9 +492,9 @@ impl Transformer {
             for r in 0..b {
                 blk.ln2.forward_row(&h[r * d..(r + 1) * d], &mut ln_out[r * d..(r + 1) * d]);
             }
-            blk.fc1.forward_rows_counted(&ln_out, b, &mut ff, row_ovf);
-            self.cfg.act.apply_vec(&mut ff);
-            blk.fc2.forward_rows_counted(&ff, b, &mut ff_out, row_ovf);
+            blk.fc1.forward_rows_scratch(ln_out, b, ff, row_ovf, lin);
+            self.cfg.act.apply_vec(ff);
+            blk.fc2.forward_rows_scratch(ff, b, ff_out, row_ovf, lin);
             if self.cfg.parallel_residual {
                 for i in 0..b * d {
                     h[i] += attn_out[i] + ff_out[i];
@@ -470,32 +506,24 @@ impl Transformer {
             }
         }
         if attn_total > 0 {
-            arena.add_attention_overflows(attn_total);
+            // unified accounting: attention events join the model-wide
+            // overflow counter next to the quantized-linear events
+            self.add_attention_overflows(attn_total);
         }
         for &slot in slots {
             arena.advance(slot, 1);
         }
-        let vocab = self.cfg.vocab;
-        let mut logits = vec![0.0f32; b * vocab];
         for r in 0..b {
             self.ln_f.forward_row(&h[r * d..(r + 1) * d], &mut ln_out[r * d..(r + 1) * d]);
         }
-        self.head.forward_rows(&ln_out[..b * d], b, &mut logits);
-        logits
+        self.head.forward_rows_scratch(&ln_out[..b * d], b, logits, lin);
     }
 
     /// Prefill: push a whole prompt through one cache slot, returning
     /// the logits of the final position.
     ///
-    /// On an empty slot this runs **batched**: every linear processes
-    /// the whole prompt in one [`super::Linear::forward_rows`] call (the
-    /// fused qgemm kernel for quantized layers) and causal attention
-    /// mixes all positions — through the float helper on the f32
-    /// backend, or position-by-position over the just-appended codes on
-    /// the quantized backend (the same arithmetic decode uses, so
-    /// prefill-then-decode equals pure decode bit for bit). On a
-    /// non-empty slot it falls back to token-by-token decoding over the
-    /// existing prefix.
+    /// Transient-workspace wrapper around
+    /// [`Transformer::prefill_slot_scratch`].
     pub fn prefill_slot(&self, tokens: &[u16], slot: usize, arena: &mut KvArena) -> Vec<f32> {
         let mut ovf = 0u64;
         self.prefill_slot_counted(tokens, slot, arena, &mut ovf)
@@ -512,24 +540,65 @@ impl Transformer {
         arena: &mut KvArena,
         ovf: &mut u64,
     ) -> Vec<f32> {
+        let mut scratch = DecodeScratch::new();
+        self.prefill_slot_scratch(tokens, slot, arena, ovf, &mut scratch);
+        scratch.step.logits[..self.cfg.vocab].to_vec()
+    }
+
+    /// Prefill over a caller-owned workspace. On an empty slot this
+    /// runs **batched**: every linear processes the whole prompt in one
+    /// [`super::Linear::forward_rows_scratch`] call (the fused qgemm
+    /// kernel for quantized layers) and causal attention mixes all
+    /// positions — through the float helper on the f32 backend, or
+    /// position-by-position over the just-appended codes on the
+    /// quantized backend (the same arithmetic decode uses, so
+    /// prefill-then-decode equals pure decode bit for bit). On a
+    /// non-empty slot it falls back to token-by-token decoding over the
+    /// existing prefix.
+    ///
+    /// The final position's logits land in
+    /// `scratch.step.logits[..vocab]`; overflow events are accumulated
+    /// into `ovf`.
+    pub fn prefill_slot_scratch(
+        &self,
+        tokens: &[u16],
+        slot: usize,
+        arena: &mut KvArena,
+        ovf: &mut u64,
+        scratch: &mut DecodeScratch,
+    ) {
         assert!(!tokens.is_empty());
         assert!(arena.live[slot], "slot {slot} not allocated");
         if !arena.is_empty(slot) {
-            let mut last = Vec::new();
             let mut row = [0u64; 1];
             for &t in tokens {
                 row[0] = 0;
-                last = self.decode_step_batch_counted(&[t], &[slot], arena, &mut row);
+                self.decode_step_batch_scratch(&[t], &[slot], arena, &mut row, scratch);
                 *ovf += row[0];
             }
-            return last;
+            return;
         }
         assert_eq!(arena.d, self.cfg.d_model);
         let d = self.cfg.d_model;
+        let d_ff = self.cfg.d_ff;
+        let vocab = self.cfg.vocab;
         let seq = tokens.len();
         assert!(seq <= arena.max_seq, "prompt longer than the context window");
 
-        let mut h = vec![0.0f32; seq * d];
+        let DecodeScratch { lin, attn, step } = scratch;
+        step.ensure(seq, 1, d, d_ff, vocab);
+        let h = &mut step.h[..seq * d];
+        let ln_out = &mut step.ln_out[..seq * d];
+        let q = &mut step.q[..seq * d];
+        let k_new = &mut step.k_new[..seq * d];
+        let v_new = &mut step.v_new[..seq * d];
+        let mix = &mut step.mix[..seq * d];
+        let attn_out = &mut step.attn_out[..seq * d];
+        let ff = &mut step.ff[..seq * d_ff];
+        let ff_out = &mut step.ff_out[..seq * d];
+        let row_ovf = &mut step.row_ovf[..seq];
+        row_ovf.fill(0);
+
         for (t, &tok) in tokens.iter().enumerate() {
             let e = &self.embed[(tok as usize) * d..(tok as usize + 1) * d];
             let p = &self.pos[t * d..(t + 1) * d];
@@ -537,24 +606,15 @@ impl Transformer {
                 h[t * d + i] = e[i] + p[i];
             }
         }
-        let mut ln_out = vec![0.0f32; seq * d];
-        let mut q = vec![0.0f32; seq * d];
-        let mut k_new = vec![0.0f32; seq * d];
-        let mut v_new = vec![0.0f32; seq * d];
-        let mut mix = vec![0.0f32; seq * d];
-        let mut attn_out = vec![0.0f32; seq * d];
-        let mut ff = vec![0.0f32; seq * self.cfg.d_ff];
-        let mut ff_out = vec![0.0f32; seq * d];
-        let mut row_ovf = vec![0u64; seq];
         let mut attn_total = 0u64;
 
         for (bi, blk) in self.blocks.iter().enumerate() {
             for t in 0..seq {
                 blk.ln1.forward_row(&h[t * d..(t + 1) * d], &mut ln_out[t * d..(t + 1) * d]);
             }
-            blk.wq.forward_rows_counted(&ln_out, seq, &mut q, &mut row_ovf);
-            blk.wk.forward_rows_counted(&ln_out, seq, &mut k_new, &mut row_ovf);
-            blk.wv.forward_rows_counted(&ln_out, seq, &mut v_new, &mut row_ovf);
+            blk.wq.forward_rows_scratch(ln_out, seq, q, row_ovf, lin);
+            blk.wk.forward_rows_scratch(ln_out, seq, k_new, row_ovf, lin);
+            blk.wv.forward_rows_scratch(ln_out, seq, v_new, row_ovf, lin);
             for t in 0..seq {
                 arena.append_kv_at(
                     bi,
@@ -567,9 +627,10 @@ impl Transformer {
             match &arena.store {
                 KvStore::F32 { .. } => {
                     // float backend: causal attention over the f32
-                    // buffers (bit-identical to reading the slab back)
+                    // buffers (bit-identical to reading the slab back),
+                    // through the engine workspace
                     let heads = self.cfg.n_heads;
-                    super::layers::attention(&q, &k_new, &v_new, seq, d, heads, true, &mut mix);
+                    super::layers::attention(q, k_new, v_new, seq, d, heads, true, attn, mix);
                 }
                 KvStore::Quant(qkv) => {
                     // quantized backend: every position attends over the
@@ -583,13 +644,14 @@ impl Transformer {
                             d,
                             self.cfg.n_heads,
                             &spec,
+                            attn,
                             &mut mix[t * d..(t + 1) * d],
                         );
                         attn_total += o;
                     }
                 }
             }
-            blk.wo.forward_rows_counted(&mix, seq, &mut attn_out, &mut row_ovf);
+            blk.wo.forward_rows_scratch(mix, seq, attn_out, row_ovf, lin);
             if !self.cfg.parallel_residual {
                 for i in 0..seq * d {
                     h[i] += attn_out[i];
@@ -598,9 +660,9 @@ impl Transformer {
             for t in 0..seq {
                 blk.ln2.forward_row(&h[t * d..(t + 1) * d], &mut ln_out[t * d..(t + 1) * d]);
             }
-            blk.fc1.forward_rows_counted(&ln_out, seq, &mut ff, &mut row_ovf);
-            self.cfg.act.apply_vec(&mut ff);
-            blk.fc2.forward_rows_counted(&ff, seq, &mut ff_out, &mut row_ovf);
+            blk.fc1.forward_rows_scratch(ln_out, seq, ff, row_ovf, lin);
+            self.cfg.act.apply_vec(ff);
+            blk.fc2.forward_rows_scratch(ff, seq, ff_out, row_ovf, lin);
             if self.cfg.parallel_residual {
                 for i in 0..seq * d {
                     h[i] += attn_out[i] + ff_out[i];
@@ -612,16 +674,13 @@ impl Transformer {
             }
         }
         if attn_total > 0 {
-            arena.add_attention_overflows(attn_total);
+            self.add_attention_overflows(attn_total);
         }
         *ovf += row_ovf.iter().sum::<u64>() + attn_total;
         arena.advance(slot, seq);
         // logits for the final position only
-        let mut ln_last = vec![0.0f32; d];
-        self.ln_f.forward_row(&h[(seq - 1) * d..], &mut ln_last);
-        let mut logits = vec![0.0f32; self.cfg.vocab];
-        self.head.forward_rows(&ln_last, 1, &mut logits);
-        logits
+        self.ln_f.forward_row(&h[(seq - 1) * d..seq * d], &mut ln_out[..d]);
+        self.head.forward_rows_scratch(&ln_out[..d], 1, &mut step.logits[..vocab], lin);
     }
 
     /// Prefill a whole prompt through a single-sequence cache.
@@ -656,22 +715,29 @@ impl Transformer {
 
     /// Greedy generation on the chosen KV backend — the sequential
     /// reference continuous-batched serving must reproduce token for
-    /// token on that same backend.
+    /// token on that same backend. Runs on the scratch hot path (one
+    /// workspace for the whole generation), so the sequential baseline
+    /// benches the same kernels the engine serves with.
     pub fn generate_greedy_with(&self, prompt: &[u16], n: usize, kind: KvCacheKind) -> Vec<u16> {
         let mut cache = KvCache::with_kind(self, kind);
+        let mut scratch = DecodeScratch::new();
+        let vocab = self.cfg.vocab;
         let mut out = prompt.to_vec();
-        let mut logits = self.prefill(prompt, &mut cache);
+        let mut ovf = 0u64;
+        self.prefill_slot_scratch(prompt, 0, &mut cache.arena, &mut ovf, &mut scratch);
+        let mut row = [0u64; 1];
         for _ in 0..n {
             if cache.is_full() {
                 // slide the window by re-encoding the tail
                 let keep = self.slide_keep();
                 let tail = out[out.len() - keep..].to_vec();
                 cache.clear();
-                logits = self.prefill(&tail, &mut cache);
+                self.prefill_slot_scratch(&tail, 0, &mut cache.arena, &mut ovf, &mut scratch);
             }
-            let next = argmax(&logits) as u16;
+            let next = argmax(&scratch.step.logits[..vocab]) as u16;
             out.push(next);
-            logits = self.decode_step(next, &mut cache);
+            row[0] = 0;
+            self.decode_step_batch_scratch(&[next], &[0], &mut cache.arena, &mut row, &mut scratch);
         }
         out
     }
@@ -809,14 +875,24 @@ mod tests {
                     }
                     want.push(last);
                 }
-                // batched: all three in one arena, one step per position
+                // batched: all three in one arena, one step per position,
+                // one shared scratch workspace across every step
                 let mut arena = KvArena::with_kind(&m, 3, kind);
                 let slots: Vec<usize> = (0..3).map(|_| arena.alloc().unwrap()).collect();
-                let mut got = Vec::new();
+                let mut scratch = DecodeScratch::new();
+                let mut row_ovf = vec![0u64; 3];
                 for pos in 0..seqs[0].len() {
                     let toks: Vec<u16> = seqs.iter().map(|s| s[pos]).collect();
-                    got = m.decode_step_batch(&toks, &slots, &mut arena);
+                    row_ovf.iter_mut().for_each(|v| *v = 0);
+                    m.decode_step_batch_scratch(
+                        &toks,
+                        &slots,
+                        &mut arena,
+                        &mut row_ovf,
+                        &mut scratch,
+                    );
                 }
+                let got = &scratch.step.logits[..3 * vocab];
                 for (b, w) in want.iter().enumerate() {
                     assert_eq!(
                         &got[b * vocab..(b + 1) * vocab],
@@ -959,5 +1035,33 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// Unified accounting: attention overflow events on the quantized
+    /// backend land on the model-wide `Transformer::overflow_events`
+    /// counter (next to quantized-linear events) AND in the per-row
+    /// attribution — one number for eval and serve.
+    #[test]
+    fn attention_overflows_join_the_model_counter() {
+        let m = model(false); // float linears: only attention can overflow
+        let kind = KvCacheKind::Quant(KvQuantSpec::new(8, 8, Some(6))); // hopeless width
+        let mut arena = KvArena::with_kind(&m, 1, kind);
+        let slot = arena.alloc().unwrap();
+        let before = m.overflow_events();
+        assert_eq!(m.attention_overflow_events(), 0);
+        let mut attributed = 0u64;
+        let mut row = vec![0u64; 1];
+        for t in 0..6u16 {
+            row[0] = 0;
+            m.decode_step_batch_counted(&[t % 48], &[slot], &mut arena, &mut row);
+            attributed += row[0];
+        }
+        assert!(attributed > 0, "the narrow attention register must overflow");
+        assert_eq!(
+            m.overflow_events() - before,
+            attributed,
+            "model-wide counter must equal the attributed attention events"
+        );
+        assert_eq!(m.attention_overflow_events(), attributed);
     }
 }

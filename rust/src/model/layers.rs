@@ -1,8 +1,23 @@
 //! Non-linear building blocks: layer norm, activations, softmax,
 //! attention math helpers — including the integer attention datapath
 //! over the quantized KV cache ([`attend_one_query_quant`]).
+//!
+//! The single-query attention primitives take an
+//! [`AttnScratch`] workspace instead of allocating their operand
+//! buffers per call: the serving engine owns one workspace per engine
+//! thread and reuses it across every (row, head) of every decode step,
+//! which — together with the bulk K/V gathers
+//! ([`super::kvquant::QuantKvSlot::gather_k_head`] /
+//! [`super::kvquant::QuantKvSlot::gather_v_head_t`]) and the
+//! out-parameter overflow counts of
+//! [`crate::linalg::qgemm_multistage`] — makes the steady-state decode
+//! step allocation-free. Scratch buffers are grow-only and therefore
+//! usually *larger* than the live problem, so every access below slices
+//! explicitly to `t_len` / `hd`; stale codes from a longer previous
+//! query can never leak into a matmul.
 
 use super::kvquant::{KvQuantSpec, QuantKvSlot};
+use super::scratch::AttnScratch;
 use crate::accum::simulator::AccumSpec;
 use crate::linalg::qgemm_multistage;
 use crate::quant::bounds::outer_bits;
@@ -96,7 +111,9 @@ pub fn softmax(xs: &mut [f32]) {
 /// pair is independent, so the nesting order is free) — prefill
 /// attention and batched-decode attention therefore run the *same*
 /// arithmetic, the invariant the serving engine's token-exactness
-/// rests on.
+/// rests on. The caller's scratch workspace is reused across all rows
+/// (prefill passes its engine workspace through, so even f32-backend
+/// admissions stay allocation-free).
 #[allow(clippy::too_many_arguments)]
 pub fn attention(
     q: &[f32],
@@ -106,6 +123,7 @@ pub fn attention(
     d: usize,
     n_heads: usize,
     causal: bool,
+    scratch: &mut AttnScratch,
     out: &mut [f32],
 ) {
     assert_eq!(q.len(), seq * d);
@@ -121,6 +139,7 @@ pub fn attention(
             limit,
             d,
             n_heads,
+            scratch,
             &mut out[t * d..(t + 1) * d],
         );
     }
@@ -132,8 +151,10 @@ pub fn attention(
 /// batched step needs no cross-sequence masking at all.
 ///
 /// `q` is one (d,) query row; `kc`/`vc` are `(t_len, d)` cached
-/// keys/values (the new position's K/V already appended). Writes the
-/// mixed values (pre-projection) into `out`.
+/// keys/values (the new position's K/V already appended). Uses
+/// `scratch.scores` for the per-head probability row (sliced to
+/// `t_len`). Writes the mixed values (pre-projection) into `out`.
+#[allow(clippy::too_many_arguments)]
 pub fn attend_one_query(
     q: &[f32],
     kc: &[f32],
@@ -141,6 +162,7 @@ pub fn attend_one_query(
     t_len: usize,
     d: usize,
     n_heads: usize,
+    scratch: &mut AttnScratch,
     out: &mut [f32],
 ) {
     debug_assert_eq!(q.len(), d);
@@ -149,7 +171,8 @@ pub fn attend_one_query(
     let hd = d / n_heads;
     debug_assert_eq!(hd * n_heads, d, "d must divide n_heads");
     let scale = 1.0 / (hd as f32).sqrt();
-    let mut scores = vec![0.0f32; t_len];
+    scratch.ensure_scores(t_len);
+    let scores = &mut scratch.scores[..t_len];
     for h in 0..n_heads {
         let off = h * hd;
         for (s, score) in scores.iter_mut().enumerate() {
@@ -160,7 +183,7 @@ pub fn attend_one_query(
             }
             *score = dot * scale;
         }
-        softmax(&mut scores);
+        softmax(scores);
         let orow = &mut out[off..off + hd];
         orow.iter_mut().for_each(|o| *o = 0.0);
         for (s, &w) in scores.iter().enumerate() {
@@ -184,22 +207,149 @@ pub fn attend_one_query(
 /// Per head:
 /// 1. the query segment is quantized online (symmetric signed
 ///    `spec.op_bits` codes, one scale per head);
-/// 2. the **score matmul** q·kᵀ runs through the multi-stage integer
+/// 2. the head's key codes are **bulk-gathered** into a contiguous
+///    `(t_len, hd)` panel ([`QuantKvSlot::gather_k_head`]: one slab
+///    enum match, then contiguous widening copies);
+/// 3. the **score matmul** q·kᵀ runs through the multi-stage integer
 ///    datapath (`spec.tile`-sized P_I tiles, Eq. 22 outer width) via
-///    [`crate::linalg::qgemm_multistage`], whose ℓ1-mass fast path
-///    executes overflow-proof tiles at plain-GEMM speed; scores are
-///    dequantized with the per-(position, head) key scales and
-///    softmaxed in float (the paper's datapath quantizes matmuls only);
-/// 3. the softmax probabilities are folded with the per-(position,
+///    [`crate::linalg::qgemm_multistage`]'s serial single-row fast
+///    path, whose ℓ1-mass argument executes overflow-proof tiles at
+///    plain-GEMM speed; scores are dequantized with the per-(position,
+///    head) key scales and softmaxed in float (the paper's datapath
+///    quantizes matmuls only);
+/// 4. the softmax probabilities are folded with the per-(position,
 ///    head) value scales into one non-negative operand, quantized to
 ///    unsigned `spec.op_bits` codes (one scale per head);
-/// 4. the **value matmul** p·V runs through the same multi-stage
-///    datapath and is dequantized with the probability-operand scale.
+/// 5. the head's value codes are bulk-gathered transposed
+///    ([`QuantKvSlot::gather_v_head_t`], blocked copy) and the **value
+///    matmul** p·V runs through the same multi-stage datapath, then is
+///    dequantized with the probability-operand scale.
 ///
-/// Each (row, head) is computed independently of any batchmates, so
+/// All operand buffers live in `scratch` (grow-only, reused across
+/// calls) and are sliced to the live `t_len`/`hd` before every use, so
+/// a shorter query after a longer one can never read stale codes. Each
+/// (row, head) is computed independently of any batchmates, so
 /// quantized-KV batched decode keeps the bit-exactness-vs-sequential
 /// property the serving engine rests on.
+#[allow(clippy::too_many_arguments)]
 pub fn attend_one_query_quant(
+    q: &[f32],
+    kv: &QuantKvSlot<'_>,
+    t_len: usize,
+    d: usize,
+    n_heads: usize,
+    spec: &KvQuantSpec,
+    scratch: &mut AttnScratch,
+    out: &mut [f32],
+) -> u64 {
+    debug_assert_eq!(q.len(), d);
+    debug_assert_eq!(out.len(), d);
+    debug_assert!(t_len >= 1);
+    let hd = d / n_heads;
+    debug_assert_eq!(hd * n_heads, d, "d must divide n_heads");
+    let rsqrt = 1.0 / (hd as f32).sqrt();
+    let inner = AccumSpec::new(spec.inner_bits, spec.mode);
+    let score_outer =
+        AccumSpec::new(outer_bits(spec.inner_bits, hd, spec.tile).min(64), spec.mode);
+    let value_outer =
+        AccumSpec::new(outer_bits(spec.inner_bits, t_len, spec.tile).min(64), spec.mode);
+    let q_max = ((1i64 << (spec.op_bits - 1)) - 1) as f32; // signed query codes
+    let p_max = ((1i64 << spec.op_bits) - 1) as f32; // unsigned probability codes
+    let mut overflows = 0u64;
+
+    scratch.ensure(hd, t_len);
+    // Explicit live-size slices over the grow-only buffers (see module
+    // docs): everything downstream operates on exactly t_len / hd
+    // elements, never on the buffers' high-water lengths.
+    let AttnScratch { q_codes, k_head, score_acc, scores, p_codes, v_head_t, val_acc, row1 } =
+        scratch;
+    let q_codes = &mut q_codes[..hd];
+    let k_head = &mut k_head[..t_len * hd];
+    let score_acc = &mut score_acc[..t_len];
+    let scores = &mut scores[..t_len];
+    let p_codes = &mut p_codes[..t_len];
+    let v_head_t = &mut v_head_t[..hd * t_len];
+    let val_acc = &mut val_acc[..hd];
+
+    for h in 0..n_heads {
+        let off = h * hd;
+        // -- query operand: online symmetric quantization, one scale/head
+        let qseg = &q[off..off + hd];
+        let mut maxabs = 0.0f32;
+        for &v in qseg {
+            maxabs = maxabs.max(v.abs());
+        }
+        let q_scale = if maxabs > 0.0 { maxabs / q_max } else { 1.0 };
+        for (c, &v) in q_codes.iter_mut().zip(qseg.iter()) {
+            let code = (v / q_scale).round() as i64;
+            *c = code.clamp(-(q_max as i64), q_max as i64);
+        }
+        // gather this head's key codes, (t_len, hd) row-major — one
+        // slab match + contiguous widening copies
+        kv.gather_k_head(t_len, h, k_head);
+        // -- score matmul on the multi-stage integer datapath (serial
+        // single-row kernel path; overflow count via out-param)
+        qgemm_multistage(
+            q_codes,
+            1,
+            k_head,
+            t_len,
+            hd,
+            spec.tile,
+            inner,
+            score_outer,
+            score_acc,
+            &mut row1[..],
+        );
+        overflows += row1[0];
+        for (s, (score, &acc)) in scores.iter_mut().zip(score_acc.iter()).enumerate() {
+            *score = acc as f32 * q_scale * kv.k_scale(s, h) * rsqrt;
+        }
+        softmax(scores);
+        // -- probability operand: fold the per-position value scale in,
+        // so the value reduction has one common dequant scale per head
+        let mut wmax = 0.0f32;
+        for (s, score) in scores.iter_mut().enumerate() {
+            let w = *score * kv.v_scale(s, h);
+            *score = w;
+            wmax = wmax.max(w);
+        }
+        let p_scale = if wmax > 0.0 { wmax / p_max } else { 1.0 };
+        for (code, &w) in p_codes.iter_mut().zip(scores.iter()) {
+            *code = ((w / p_scale).round() as i64).clamp(0, p_max as i64);
+        }
+        // gather this head's value codes transposed, (hd, t_len)
+        // row-major — one slab match + blocked copy
+        kv.gather_v_head_t(t_len, h, v_head_t);
+        // -- value matmul on the multi-stage integer datapath
+        qgemm_multistage(
+            p_codes,
+            1,
+            v_head_t,
+            hd,
+            t_len,
+            spec.tile,
+            inner,
+            value_outer,
+            val_acc,
+            &mut row1[..],
+        );
+        overflows += row1[0];
+        for (o, &acc) in out[off..off + hd].iter_mut().zip(val_acc.iter()) {
+            *o = acc as f32 * p_scale;
+        }
+    }
+    overflows
+}
+
+/// Reference implementation of [`attend_one_query_quant`]: the PR 3
+/// inner loop, kept verbatim as (a) the parity oracle the fast path is
+/// tested bit-for-bit against, and (b) the "before" baseline the
+/// decode-throughput bench measures the gather/scratch rework against.
+/// Allocates its operand buffers per call and gathers K/V codes
+/// element-by-element through the slab enum — do **not** use it on a
+/// serving path.
+pub fn attend_one_query_quant_ref(
     q: &[f32],
     kv: &QuantKvSlot<'_>,
     t_len: usize,
@@ -219,8 +369,8 @@ pub fn attend_one_query_quant(
         AccumSpec::new(outer_bits(spec.inner_bits, hd, spec.tile).min(64), spec.mode);
     let value_outer =
         AccumSpec::new(outer_bits(spec.inner_bits, t_len, spec.tile).min(64), spec.mode);
-    let q_max = ((1i64 << (spec.op_bits - 1)) - 1) as f32; // signed query codes
-    let p_max = ((1i64 << spec.op_bits) - 1) as f32; // unsigned probability codes
+    let q_max = ((1i64 << (spec.op_bits - 1)) - 1) as f32;
+    let p_max = ((1i64 << spec.op_bits) - 1) as f32;
     let mut overflows = 0u64;
 
     let mut q_codes = vec![0i64; hd];
@@ -230,10 +380,10 @@ pub fn attend_one_query_quant(
     let mut p_codes = vec![0i64; t_len];
     let mut v_head_t = vec![0i32; hd * t_len];
     let mut val_acc = vec![0i64; hd];
+    let mut row1 = [0u64; 1];
 
     for h in 0..n_heads {
         let off = h * hd;
-        // -- query operand: online symmetric quantization, one scale/head
         let qseg = &q[off..off + hd];
         let mut maxabs = 0.0f32;
         for &v in qseg {
@@ -244,14 +394,13 @@ pub fn attend_one_query_quant(
             let c = (v / q_scale).round() as i64;
             q_codes[i] = c.clamp(-(q_max as i64), q_max as i64);
         }
-        // gather this head's key codes, (t_len, hd) row-major
+        // element-wise gather through the slab enum (the PR 3 shape)
         for s in 0..t_len {
             for i in 0..hd {
                 k_head[s * hd + i] = kv.k_code(s, off + i);
             }
         }
-        // -- score matmul on the multi-stage integer datapath
-        let ovf = qgemm_multistage(
+        qgemm_multistage(
             &q_codes,
             1,
             &k_head,
@@ -261,14 +410,13 @@ pub fn attend_one_query_quant(
             inner,
             score_outer,
             &mut score_acc,
+            &mut row1,
         );
-        overflows += ovf.iter().sum::<u64>();
+        overflows += row1[0];
         for s in 0..t_len {
             scores[s] = score_acc[s] as f32 * q_scale * kv.k_scale(s, h) * rsqrt;
         }
         softmax(&mut scores);
-        // -- probability operand: fold the per-position value scale in,
-        // so the value reduction has one common dequant scale per head
         let mut wmax = 0.0f32;
         for s in 0..t_len {
             let w = scores[s] * kv.v_scale(s, h);
@@ -279,14 +427,12 @@ pub fn attend_one_query_quant(
         for (code, &w) in p_codes.iter_mut().zip(scores.iter()) {
             *code = ((w / p_scale).round() as i64).clamp(0, p_max as i64);
         }
-        // gather this head's value codes transposed, (hd, t_len) row-major
         for i in 0..hd {
             for s in 0..t_len {
                 v_head_t[i * t_len + s] = kv.v_code(s, off + i);
             }
         }
-        // -- value matmul on the multi-stage integer datapath
-        let ovf = qgemm_multistage(
+        qgemm_multistage(
             &p_codes,
             1,
             &v_head_t,
@@ -296,8 +442,9 @@ pub fn attend_one_query_quant(
             inner,
             value_outer,
             &mut val_acc,
+            &mut row1,
         );
-        overflows += ovf.iter().sum::<u64>();
+        overflows += row1[0];
         for i in 0..hd {
             out[off + i] = val_acc[i] as f32 * p_scale;
         }
@@ -308,6 +455,8 @@ pub fn attend_one_query_quant(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::kvquant::{KvQuantSpec, QuantKv};
+    use crate::util::rng::Rng;
 
     #[test]
     fn layernorm_normalizes() {
@@ -371,7 +520,7 @@ mod tests {
             }
         }
         let mut out = vec![0.0f32; seq * d];
-        attention(&q, &k, &v, seq, d, 2, false, &mut out);
+        attention(&q, &k, &v, seq, d, 2, false, &mut AttnScratch::new(), &mut out);
         // full attention, uniform -> every row = mean(0,1,2) = 1
         for t in 0..seq {
             for i in 0..d {
@@ -391,7 +540,7 @@ mod tests {
             v[t * d] = (t + 1) as f32;
         }
         let mut out = vec![0.0f32; seq * d];
-        attention(&q, &k, &v, seq, d, 1, true, &mut out);
+        attention(&q, &k, &v, seq, d, 1, true, &mut AttnScratch::new(), &mut out);
         assert!((out[0] - 1.0).abs() < 1e-6, "token 0 attends only to itself");
         assert!((out[1 * d] - 1.5).abs() < 1e-6, "token 1 averages tokens 0,1");
     }
@@ -414,9 +563,57 @@ mod tests {
             *x = ((i * 41 % 7) as f32 - 3.0) * 0.17;
         }
         let mut full = vec![0.0f32; seq * d];
-        attention(&q, &k, &v, seq, d, heads, true, &mut full);
+        let mut scratch = AttnScratch::new();
+        attention(&q, &k, &v, seq, d, heads, true, &mut scratch, &mut full);
         let mut one = vec![0.0f32; d];
-        attend_one_query(&q[(seq - 1) * d..], &k, &v, seq, d, heads, &mut one);
+        attend_one_query(&q[(seq - 1) * d..], &k, &v, seq, d, heads, &mut scratch, &mut one);
         assert_eq!(&full[(seq - 1) * d..], &one[..]);
+    }
+
+    /// THE scratch-path parity property: the gather/scratch fast path
+    /// must be bit-for-bit identical to the PR 3 reference — outputs
+    /// AND overflow counts — including when one workspace is reused
+    /// across shrinking and growing t_len (the stale-buffer shape) and
+    /// under narrow overflowing registers.
+    #[test]
+    fn scratch_path_matches_reference_across_reuse() {
+        let mut rng = Rng::new(620);
+        for spec in [
+            KvQuantSpec::int8(),
+            KvQuantSpec::int16(),
+            KvQuantSpec::new(8, 8, Some(6)), // narrow: overflows are live
+        ] {
+            let (d, h, max) = (24usize, 3usize, 14usize);
+            let mut kv = QuantKv::new(spec, 1, 1, max, d, h);
+            for pos in 0..max {
+                let row: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+                let vrow: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+                kv.append_row(0, 0, pos, &row, &vrow);
+            }
+            let mut scratch = AttnScratch::new();
+            // long → short → long: reused buffers must never leak state
+            for &t_len in &[max, 3usize, 1, 9, max] {
+                let q: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+                let view = kv.slot_view(0, 0);
+                let mut want = vec![0.0f32; d];
+                let ovf_want = attend_one_query_quant_ref(&q, &view, t_len, d, h, &spec, &mut want);
+                let mut got = vec![0.0f32; d];
+                let ovf_got = attend_one_query_quant(
+                    &q,
+                    &view,
+                    t_len,
+                    d,
+                    h,
+                    &spec,
+                    &mut scratch,
+                    &mut got,
+                );
+                assert_eq!(got, want, "{spec:?} t_len={t_len}: values diverge from reference");
+                assert_eq!(
+                    ovf_got, ovf_want,
+                    "{spec:?} t_len={t_len}: overflow counts diverge from reference"
+                );
+            }
+        }
     }
 }

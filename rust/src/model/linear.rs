@@ -6,7 +6,17 @@
 //! per-MAC accumulator simulator (the audit oracle in [`crate::accum`])
 //! while running at plain-matmul speed whenever the overflow-avoidance
 //! guarantee holds.
+//!
+//! Batched forwards come in two flavours: the `_scratch` entry points
+//! stream their operand buffers (quantized codes, raw accumulators,
+//! per-row overflow counters; f64 staging for the float path) through a
+//! caller-owned [`LinearScratch`] and perform **zero heap allocations**
+//! in steady state — the decode hot path — while the plain
+//! `forward_rows` / `forward_rows_counted` wrappers build a transient
+//! workspace per call (evaluation and calibration, where a per-call
+//! allocation is irrelevant). Both produce bit-identical results.
 
+use super::scratch::LinearScratch;
 use crate::accum::simulator::{AccumSpec, OverflowMode};
 use crate::linalg::qgemm;
 use crate::quant::{ActQuantizer, QuantResult};
@@ -48,9 +58,12 @@ impl FloatLinear {
     }
 
     /// Batched y = W x + b over `rows` stacked input rows, routed
-    /// through [`crate::linalg::Mat`]'s banded multi-threaded GEMM — the
-    /// float-path analogue of the fused qgemm dispatch, so float
-    /// baselines and mixed models batch the same way quantized ones do.
+    /// through the banded multi-threaded f64 GEMM
+    /// ([`crate::linalg::gemm_bt_into`]) — the float-path analogue of
+    /// the fused qgemm dispatch, so float baselines and mixed models
+    /// batch the same way quantized ones do. Allocates a transient
+    /// workspace; the decode hot path uses
+    /// [`FloatLinear::forward_rows_scratch`] instead.
     ///
     /// Every output row is computed independently of its batchmates
     /// (the GEMM parallelizes over row bands and accumulates each
@@ -58,28 +71,45 @@ impl FloatLinear {
     /// **batch-size invariant** — the property batched decode's
     /// token-exactness rests on.
     pub fn forward_rows(&self, xs: &[f32], rows: usize, ys: &mut [f32]) {
+        self.forward_rows_scratch(xs, rows, ys, &mut LinearScratch::new());
+    }
+
+    /// [`FloatLinear::forward_rows`] over a caller-owned workspace:
+    /// activations and weights are widened into the scratch f64 buffers
+    /// and the GEMM lands in a scratch accumulator, so a warm workspace
+    /// makes the whole forward allocation-free.
+    ///
+    /// The weights are widened per call: `w` is a pub field that
+    /// calibration (equalization/smoothing) rescales in place, so a
+    /// cached f64 copy could go stale and corrupt logits. The widening
+    /// is one O(out·in) pass against the O(rows·out·in) GEMM, and a
+    /// cheaper rows==1 special case is ruled out — every row must be
+    /// computed identically at every batch size.
+    pub fn forward_rows_scratch(
+        &self,
+        xs: &[f32],
+        rows: usize,
+        ys: &mut [f32],
+        scratch: &mut LinearScratch,
+    ) {
         debug_assert_eq!(xs.len(), rows * self.in_dim);
         debug_assert_eq!(ys.len(), rows * self.out_dim);
-        // The weights are converted per call: `w` is a pub field that
-        // calibration (equalization/smoothing) rescales in place, so a
-        // cached f64 copy could go stale and corrupt logits. The
-        // conversion is one O(out·in) pass against the O(rows·out·in)
-        // GEMM, and a cheaper rows==1 special case is ruled out — every
-        // row must be computed identically at every batch size.
-        let a = crate::linalg::Mat::from_vec(
-            rows,
-            self.in_dim,
-            xs.iter().map(|&v| v as f64).collect(),
-        );
-        let w = crate::linalg::Mat::from_vec(
-            self.out_dim,
-            self.in_dim,
-            self.w.iter().map(|&v| v as f64).collect(),
-        );
-        let y = a.matmul_bt(&w); // rows × out_dim
+        let (k, c) = (self.in_dim, self.out_dim);
+        scratch.ensure_float(rows, k, c);
+        let fa = &mut scratch.fa[..rows * k];
+        for (dst, &src) in fa.iter_mut().zip(xs.iter()) {
+            *dst = src as f64;
+        }
+        let fw = &mut scratch.fw[..c * k];
+        for (dst, &src) in fw.iter_mut().zip(self.w.iter()) {
+            *dst = src as f64;
+        }
+        let fy = &mut scratch.fy[..rows * c];
+        crate::linalg::gemm_bt_into(fa, fw, rows, k, c, fy);
         for r in 0..rows {
-            let yrow = &mut ys[r * self.out_dim..(r + 1) * self.out_dim];
-            for (o, (yo, &acc)) in yrow.iter_mut().zip(y.row(r).iter()).enumerate() {
+            let yrow = &mut ys[r * c..(r + 1) * c];
+            let arow = &fy[r * c..(r + 1) * c];
+            for (o, (yo, &acc)) in yrow.iter_mut().zip(arow.iter()).enumerate() {
                 *yo = acc as f32 + self.b[o];
             }
         }
@@ -196,14 +226,14 @@ impl QuantLinear {
     }
 
     /// Run the integer datapath kernel over `rows` quantized input rows,
-    /// writing raw accumulator outputs. Returns per-row overflow-event
-    /// counts (Simulated datapath only; empty — meaning all zeros — for
-    /// Exact).
-    fn run_kernel(&self, x_codes: &[i64], rows: usize, acc: &mut [i64]) -> Vec<u64> {
+    /// writing raw accumulator outputs and per-row overflow-event
+    /// counts into `row_ovf` (overwrite semantics; all zeros on the
+    /// Exact datapath, which cannot overflow by construction).
+    fn run_kernel(&self, x_codes: &[i64], rows: usize, acc: &mut [i64], row_ovf: &mut [u64]) {
         match self.datapath {
             Datapath::Exact => {
                 qgemm::qgemm_exact(x_codes, rows, &self.codes, self.out_dim, self.in_dim, acc);
-                Vec::new()
+                row_ovf.fill(0);
             }
             Datapath::Simulated { tile, inner_bits, outer_bits, mode } => qgemm::qgemm_multistage(
                 x_codes,
@@ -215,6 +245,7 @@ impl QuantLinear {
                 AccumSpec::new(inner_bits, mode),
                 AccumSpec::new(outer_bits, mode),
                 acc,
+                row_ovf,
             ),
         }
     }
@@ -247,11 +278,11 @@ impl QuantLinear {
             self.quantize_input(x, x_codes);
         }
         let mut acc = vec![0i64; self.out_dim];
-        let row_ovf = self.run_kernel(&x_codes[..self.in_dim], 1, &mut acc);
+        let mut row1 = [0u64; 1];
+        self.run_kernel(&x_codes[..self.in_dim], 1, &mut acc, &mut row1);
         self.dequant_rows(&acc, 1, y);
-        let overflow_total: u64 = row_ovf.iter().sum();
-        if overflow_total > 0 {
-            self.overflow_events.fetch_add(overflow_total, Ordering::Relaxed);
+        if row1[0] > 0 {
+            self.overflow_events.fetch_add(row1[0], Ordering::Relaxed);
         }
         self.macs.fetch_add((self.in_dim * self.out_dim) as u64, Ordering::Relaxed);
     }
@@ -277,17 +308,34 @@ impl QuantLinear {
         ys: &mut [f32],
         row_ovf: &mut [u64],
     ) {
+        self.forward_rows_scratch(xs, rows, ys, row_ovf, &mut LinearScratch::new());
+    }
+
+    /// [`QuantLinear::forward_rows_counted`] over a caller-owned
+    /// workspace — the decode hot path. Activation codes, raw
+    /// accumulators and the kernel's fresh per-row overflow counts all
+    /// live in `scratch`; a warm workspace makes the whole forward
+    /// allocation-free.
+    pub fn forward_rows_scratch(
+        &self,
+        xs: &[f32],
+        rows: usize,
+        ys: &mut [f32],
+        row_ovf: &mut [u64],
+        scratch: &mut LinearScratch,
+    ) {
         debug_assert_eq!(xs.len(), rows * self.in_dim);
         debug_assert_eq!(ys.len(), rows * self.out_dim);
         debug_assert!(row_ovf.is_empty() || row_ovf.len() == rows);
-        let mut codes = vec![0i64; rows * self.in_dim];
+        scratch.ensure_quant(rows, self.in_dim, self.out_dim);
+        let codes = &mut scratch.codes[..rows * self.in_dim];
         match &self.rotation {
             Some(rot) => {
-                let mut xr = vec![0.0f32; self.in_dim];
+                let xr = &mut scratch.xr[..self.in_dim];
                 for r in 0..rows {
                     xr.copy_from_slice(&xs[r * self.in_dim..(r + 1) * self.in_dim]);
-                    rot.apply_row(&mut xr);
-                    self.quantize_input(&xr, &mut codes[r * self.in_dim..(r + 1) * self.in_dim]);
+                    rot.apply_row(xr);
+                    self.quantize_input(xr, &mut codes[r * self.in_dim..(r + 1) * self.in_dim]);
                 }
             }
             None => {
@@ -299,9 +347,10 @@ impl QuantLinear {
                 }
             }
         }
-        let mut acc = vec![0i64; rows * self.out_dim];
-        let kernel_ovf = self.run_kernel(&codes, rows, &mut acc);
-        self.dequant_rows(&acc, rows, ys);
+        let acc = &mut scratch.acc[..rows * self.out_dim];
+        let kernel_ovf = &mut scratch.row_ovf[..rows];
+        self.run_kernel(codes, rows, acc, kernel_ovf);
+        self.dequant_rows(acc, rows, ys);
         let overflow_total: u64 = kernel_ovf.iter().sum();
         if overflow_total > 0 {
             self.overflow_events.fetch_add(overflow_total, Ordering::Relaxed);
@@ -387,6 +436,23 @@ impl Linear {
         match self {
             Linear::Float(l) => l.forward_rows(xs, rows, ys),
             Linear::Quant(l) => l.forward_rows_counted(xs, rows, ys, row_ovf),
+        }
+    }
+
+    /// [`Linear::forward_rows_counted`] over a caller-owned workspace —
+    /// the allocation-free decode dispatch. Bit-identical to the
+    /// transient-workspace wrappers on both datapaths.
+    pub fn forward_rows_scratch(
+        &self,
+        xs: &[f32],
+        rows: usize,
+        ys: &mut [f32],
+        row_ovf: &mut [u64],
+        scratch: &mut LinearScratch,
+    ) {
+        match self {
+            Linear::Float(l) => l.forward_rows_scratch(xs, rows, ys, scratch),
+            Linear::Quant(l) => l.forward_rows_scratch(xs, rows, ys, row_ovf, scratch),
         }
     }
 
@@ -539,6 +605,46 @@ mod tests {
             ql.forward_rows_counted(&xs[r * 96..(r + 1) * 96], 1, &mut y1, &mut solo);
             assert_eq!(solo[0], row_ovf[r], "row {r} attribution depends on batchmates");
             assert_eq!(&ys[r * 6..(r + 1) * 6], &y1[..], "row {r} values diverge");
+        }
+    }
+
+    #[test]
+    fn scratch_forward_matches_transient_forward_bit_for_bit() {
+        // The reused-workspace entry point must equal the transient
+        // wrapper exactly — values, attribution and layer counters —
+        // including when the workspace is warm from a *larger* problem
+        // (stale-buffer shape), on both datapaths and the float path.
+        let fl = random_float_linear(64, 12, 130);
+        let mut ql = quantize_layer(&fl, 6, 131);
+        ql.datapath = Datapath::Simulated {
+            tile: 16,
+            inner_bits: 12,
+            outer_bits: 15,
+            mode: OverflowMode::Wraparound,
+        };
+        let mut rng = Rng::new(132);
+        let mut shared = LinearScratch::new();
+        // warm the workspace on a larger batch first
+        let warm: Vec<f32> = (0..7 * 64).map(|_| rng.normal() as f32).collect();
+        let mut sink = vec![0.0f32; 7 * 12];
+        ql.forward_rows_scratch(&warm, 7, &mut sink, &mut [], &mut shared);
+        fl.forward_rows_scratch(&warm, 7, &mut sink, &mut shared);
+        for rows in [1usize, 3, 5] {
+            let xs: Vec<f32> = (0..rows * 64).map(|_| rng.normal() as f32 + 0.4).collect();
+            let mut y_scratch = vec![0.0f32; rows * 12];
+            let mut y_plain = vec![0.0f32; rows * 12];
+            let mut ovf_scratch = vec![0u64; rows];
+            let mut ovf_plain = vec![0u64; rows];
+            ql.forward_rows_scratch(&xs, rows, &mut y_scratch, &mut ovf_scratch, &mut shared);
+            ql.forward_rows_counted(&xs, rows, &mut y_plain, &mut ovf_plain);
+            assert_eq!(y_scratch, y_plain, "rows={rows}: quant values diverge");
+            assert_eq!(ovf_scratch, ovf_plain, "rows={rows}: attribution diverges");
+            // float path too
+            let mut f_scratch = vec![0.0f32; rows * 12];
+            let mut f_plain = vec![0.0f32; rows * 12];
+            fl.forward_rows_scratch(&xs, rows, &mut f_scratch, &mut shared);
+            fl.forward_rows(&xs, rows, &mut f_plain);
+            assert_eq!(f_scratch, f_plain, "rows={rows}: float values diverge");
         }
     }
 

@@ -201,7 +201,15 @@ fn load_transformer(dir: &Path, manifest: &Json) -> Result<Transformer> {
     let ln_f = LayerNorm::new(t.load("ln_f.g")?, t.load("ln_f.b")?);
     let head_w = t.load("head.w")?;
     let head = FloatLinear::new(d, cfg.vocab, head_w, vec![0.0; cfg.vocab]);
-    Ok(Transformer { cfg, embed, pos, blocks, ln_f, head })
+    Ok(Transformer {
+        cfg,
+        embed,
+        pos,
+        blocks,
+        ln_f,
+        head,
+        attn_overflows: std::sync::atomic::AtomicU64::new(0),
+    })
 }
 
 fn load_mlp(dir: &Path, manifest: &Json) -> Result<Mlp> {

@@ -12,16 +12,19 @@ pub mod layers;
 pub mod linear;
 pub mod loader;
 pub mod mlp;
+pub mod scratch;
 pub mod transformer;
 
 pub use decode::{argmax, KvArena, KvCache};
 pub use kvquant::{KvCacheKind, KvQuantSpec};
 pub use layers::{
-    attend_one_query, attend_one_query_quant, attention, softmax, Activation, LayerNorm,
+    attend_one_query, attend_one_query_quant, attend_one_query_quant_ref, attention, softmax,
+    Activation, LayerNorm,
 };
 pub use linear::{Datapath, FloatLinear, Linear, QuantLinear};
 pub use loader::{
     list_models, load_model, load_named, read_f32_bin, read_f32_bin_any, write_f32_bin, Model,
 };
 pub use mlp::{random_mlp, Mlp, MlpConfig};
+pub use scratch::{AttnScratch, DecodeScratch, LinearScratch, StepScratch};
 pub use transformer::{random_transformer, Block, Capture, Transformer, TransformerConfig};

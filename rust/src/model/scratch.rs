@@ -1,0 +1,284 @@
+//! Reusable workspaces for the decode hot path.
+//!
+//! PR 3's quantized decode loop gave a large constant factor back to
+//! per-call heap allocation: every `qgemm_multistage` call built a
+//! `Vec<AtomicU64>` and a result `Vec`, every `attend_one_query_quant`
+//! call allocated seven operand buffers per query, and every
+//! `forward_rows` call allocated its code/accumulator buffers. This
+//! module centralizes all of that state into one [`DecodeScratch`]
+//! workspace that the serving engine owns per engine thread and reuses
+//! across admissions, decode steps and window slides — after warmup, a
+//! steady-state decode step performs **zero heap allocations**
+//! (asserted by `tests/zero_alloc_decode.rs` with a counting global
+//! allocator). The guarantee is scoped to kernel calls below the
+//! band-threading work threshold: a batched call big enough to fan out
+//! across scoped threads pays thread-spawn allocations by design.
+//!
+//! Buffers are **grow-only**: `ensure_*` resizes upward and never
+//! shrinks, so a workspace reaches its high-water shape after the first
+//! step at each batch size and stays allocation-free from then on.
+//! Because buffers are reused across calls with *different* live sizes,
+//! every consumer slices explicitly to the current problem size (e.g.
+//! `&scores[..t_len]`) — stale state beyond the slice can never leak
+//! into a matmul.
+//!
+//! The workspace is split into three independently-borrowable parts so
+//! the batched decode step can hold activation buffers (`step`) while
+//! handing the linear-layer (`lin`) and attention (`attn`) workspaces
+//! to inner calls:
+//!
+//! - [`LinearScratch`] — quantized-linear operand codes, raw
+//!   accumulators and per-row overflow counters, plus the f64 buffers
+//!   the float-linear banded GEMM streams through.
+//! - [`AttnScratch`] — per-head attention operands: online-quantized
+//!   query/probability codes, gathered K/V head panels, score/value
+//!   accumulators and the single-row overflow counter.
+//! - [`StepScratch`] — per-step activation tensors (`h`, layer-norm
+//!   output, q/k/v projections, attention mix, FFN buffers) and the
+//!   step's logits, which callers read back from the workspace instead
+//!   of receiving a freshly allocated `Vec`.
+
+use super::transformer::TransformerConfig;
+
+/// Grow `v` to at least `n` elements (never shrinks — see module docs).
+#[inline]
+fn grow<T: Default + Clone>(v: &mut Vec<T>, n: usize) {
+    if v.len() < n {
+        v.resize(n, T::default());
+    }
+}
+
+/// Operand workspace for [`super::linear::QuantLinear`] /
+/// [`super::linear::FloatLinear`] batched forwards.
+#[derive(Debug, Default)]
+pub struct LinearScratch {
+    /// `rows * in_dim` quantized activation codes.
+    pub codes: Vec<i64>,
+    /// `rows * out_dim` raw integer accumulators.
+    pub acc: Vec<i64>,
+    /// `rows` fresh kernel overflow counts (before attribution).
+    pub row_ovf: Vec<u64>,
+    /// `in_dim` rotated-activation staging row (QuaRot layers only).
+    pub xr: Vec<f32>,
+    /// Float path: `rows * in_dim` activations widened to f64.
+    pub fa: Vec<f64>,
+    /// Float path: `out_dim * in_dim` weights widened to f64.
+    pub fw: Vec<f64>,
+    /// Float path: `rows * out_dim` f64 accumulators.
+    pub fy: Vec<f64>,
+}
+
+impl LinearScratch {
+    pub fn new() -> LinearScratch {
+        LinearScratch::default()
+    }
+
+    /// Size the integer-datapath buffers for a `rows`-row forward.
+    pub fn ensure_quant(&mut self, rows: usize, in_dim: usize, out_dim: usize) {
+        grow(&mut self.codes, rows * in_dim);
+        grow(&mut self.acc, rows * out_dim);
+        grow(&mut self.row_ovf, rows);
+        grow(&mut self.xr, in_dim);
+    }
+
+    /// Size the float-datapath buffers for a `rows`-row forward.
+    pub fn ensure_float(&mut self, rows: usize, in_dim: usize, out_dim: usize) {
+        grow(&mut self.fa, rows * in_dim);
+        grow(&mut self.fw, out_dim * in_dim);
+        grow(&mut self.fy, rows * out_dim);
+    }
+}
+
+/// Per-head operand workspace for single-query attention
+/// ([`super::layers::attend_one_query`] and
+/// [`super::layers::attend_one_query_quant`]).
+#[derive(Debug, Default)]
+pub struct AttnScratch {
+    /// `hd` online-quantized signed query codes.
+    pub q_codes: Vec<i64>,
+    /// `t_len * hd` gathered key codes for the current head, row-major.
+    pub k_head: Vec<i32>,
+    /// `t_len` raw score accumulators.
+    pub score_acc: Vec<i64>,
+    /// `t_len` dequantized scores / softmax probabilities.
+    pub scores: Vec<f32>,
+    /// `t_len` online-quantized unsigned probability codes.
+    pub p_codes: Vec<i64>,
+    /// `hd * t_len` gathered value codes, transposed, row-major.
+    pub v_head_t: Vec<i32>,
+    /// `hd` raw value accumulators.
+    pub val_acc: Vec<i64>,
+    /// Single-row overflow counter for the rows==1 kernel calls.
+    pub row1: [u64; 1],
+}
+
+impl AttnScratch {
+    pub fn new() -> AttnScratch {
+        AttnScratch::default()
+    }
+
+    /// Size for head dimension `hd` attending over `t_len` positions
+    /// on the integer datapath (all buffers).
+    pub fn ensure(&mut self, hd: usize, t_len: usize) {
+        grow(&mut self.q_codes, hd);
+        grow(&mut self.k_head, t_len * hd);
+        grow(&mut self.score_acc, t_len);
+        grow(&mut self.scores, t_len);
+        grow(&mut self.p_codes, t_len);
+        grow(&mut self.v_head_t, hd * t_len);
+        grow(&mut self.val_acc, hd);
+    }
+
+    /// Size for the float attention path, which only needs the
+    /// probability row — the integer-only panels stay untouched, so an
+    /// f32-backend engine never materializes dead code buffers.
+    pub fn ensure_scores(&mut self, t_len: usize) {
+        grow(&mut self.scores, t_len);
+    }
+}
+
+/// Per-step activation workspace for
+/// [`super::transformer::Transformer::decode_step_batch_scratch`] and
+/// [`super::transformer::Transformer::prefill_slot_scratch`].
+#[derive(Debug, Default)]
+pub struct StepScratch {
+    /// `rows * d` residual stream.
+    pub h: Vec<f32>,
+    /// `rows * d` layer-norm output.
+    pub ln_out: Vec<f32>,
+    /// `rows * d` query projection.
+    pub q: Vec<f32>,
+    /// `rows * d` key projection.
+    pub k_new: Vec<f32>,
+    /// `rows * d` value projection.
+    pub v_new: Vec<f32>,
+    /// `rows * d` attention value mix (pre-projection).
+    pub mix: Vec<f32>,
+    /// `rows * d` attention output projection.
+    pub attn_out: Vec<f32>,
+    /// `rows * d_ff` FFN hidden activations.
+    pub ff: Vec<f32>,
+    /// `rows * d` FFN output.
+    pub ff_out: Vec<f32>,
+    /// `logit_rows * vocab` logits — the step's result lives here;
+    /// callers read `&logits[..rows * vocab]` instead of receiving a
+    /// fresh `Vec`.
+    pub logits: Vec<f32>,
+    /// `rows` per-row overflow counters (prefill-internal attribution).
+    pub row_ovf: Vec<u64>,
+}
+
+impl StepScratch {
+    pub fn new() -> StepScratch {
+        StepScratch::default()
+    }
+
+    /// Size for `rows` activation rows and `logit_rows` logit rows
+    /// (batched decode emits one logit row per sequence; prefill only
+    /// the final position's).
+    pub fn ensure(
+        &mut self,
+        rows: usize,
+        logit_rows: usize,
+        d: usize,
+        d_ff: usize,
+        vocab: usize,
+    ) {
+        grow(&mut self.h, rows * d);
+        grow(&mut self.ln_out, rows * d);
+        grow(&mut self.q, rows * d);
+        grow(&mut self.k_new, rows * d);
+        grow(&mut self.v_new, rows * d);
+        grow(&mut self.mix, rows * d);
+        grow(&mut self.attn_out, rows * d);
+        grow(&mut self.ff, rows * d_ff);
+        grow(&mut self.ff_out, rows * d);
+        grow(&mut self.logits, logit_rows * vocab);
+        grow(&mut self.row_ovf, rows);
+    }
+}
+
+/// One engine thread's complete decode workspace, reused across
+/// admissions, batched decode steps and window slides.
+#[derive(Debug, Default)]
+pub struct DecodeScratch {
+    pub lin: LinearScratch,
+    pub attn: AttnScratch,
+    pub step: StepScratch,
+}
+
+impl DecodeScratch {
+    /// Empty workspace; buffers grow to their high-water shape on first
+    /// use and are reused from then on.
+    pub fn new() -> DecodeScratch {
+        DecodeScratch::default()
+    }
+
+    /// Workspace pre-sized for a model config and at most `max_rows`
+    /// stacked decode rows, so even the first step allocates nothing.
+    /// Prefill runs up to `max_seq` rows, so the activation buffers are
+    /// sized for the larger of the two. Linear buffers are sized to the
+    /// model's **actual** layer shapes — block linears are d↔d_ff and
+    /// the only vocab-wide layer is the d→vocab float head — not to
+    /// the max-in × max-out cross product, which no layer has.
+    pub fn for_model(cfg: &TransformerConfig, max_rows: usize) -> DecodeScratch {
+        let mut s = DecodeScratch::new();
+        let rows = max_rows.max(cfg.max_seq).max(1);
+        let dmax = cfg.d_model.max(cfg.d_ff);
+        s.lin.ensure_quant(rows, dmax, dmax);
+        s.lin.ensure_float(rows, cfg.d_model, cfg.d_ff); // fc1-shaped float blocks
+        s.lin.ensure_float(rows, cfg.d_ff, cfg.d_model); // fc2-shaped float blocks
+        s.lin.ensure_float(rows, cfg.d_model, cfg.vocab); // the head
+        s.attn.ensure(cfg.d_model / cfg.n_heads.max(1), cfg.max_seq);
+        s.step.ensure(rows, max_rows.max(1), cfg.d_model, cfg.d_ff, cfg.vocab);
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Activation;
+
+    #[test]
+    fn buffers_grow_and_never_shrink() {
+        let mut a = AttnScratch::new();
+        a.ensure(8, 32);
+        assert_eq!(a.k_head.len(), 256);
+        assert_eq!(a.scores.len(), 32);
+        let cap = a.k_head.capacity();
+        a.ensure(8, 8); // smaller problem: no shrink, no realloc
+        assert_eq!(a.k_head.len(), 256);
+        assert_eq!(a.k_head.capacity(), cap);
+        a.ensure(8, 64);
+        assert_eq!(a.k_head.len(), 512);
+    }
+
+    #[test]
+    fn for_model_presizes_everything() {
+        let cfg = TransformerConfig {
+            name: "s".into(),
+            vocab: 48,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 32,
+            max_seq: 24,
+            act: Activation::Gelu,
+            parallel_residual: false,
+        };
+        let s = DecodeScratch::for_model(&cfg, 4);
+        // prefill dominates the row count (max_seq 24 > batch 4)
+        assert_eq!(s.step.h.len(), 24 * 16);
+        assert_eq!(s.step.ff.len(), 24 * 32);
+        // decode dominates the logit rows (4 * vocab)
+        assert_eq!(s.step.logits.len(), 4 * 48);
+        assert_eq!(s.attn.k_head.len(), 24 * 8);
+        assert_eq!(s.lin.codes.len(), 24 * 32);
+        // float weights cover exactly the real shapes (d↔d_ff blocks
+        // and the d→vocab head = 768 elements here), never a
+        // max-in × max-out cross product no layer has
+        assert_eq!(s.lin.fw.len(), 48 * 16);
+        assert!(s.lin.fw.len() < 48 * 32);
+    }
+}

@@ -110,7 +110,7 @@ impl Capture {
 }
 
 /// Decoder-only transformer.
-#[derive(Clone, Debug)]
+#[derive(Debug)]
 pub struct Transformer {
     pub cfg: TransformerConfig,
     /// vocab × d token embedding.
@@ -121,6 +121,26 @@ pub struct Transformer {
     pub ln_f: LayerNorm,
     /// Final projection to vocabulary — held in float (paper App. C.1).
     pub head: super::linear::FloatLinear,
+    /// Attention-matmul overflow events observed on the quantized-KV
+    /// integer datapath — folded into [`Transformer::overflow_events`]
+    /// so eval and serve report one model-wide number (attention events
+    /// previously lived on a separate arena-side counter).
+    pub(crate) attn_overflows: std::sync::atomic::AtomicU64,
+}
+
+impl Clone for Transformer {
+    fn clone(&self) -> Transformer {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        Transformer {
+            cfg: self.cfg.clone(),
+            embed: self.embed.clone(),
+            pos: self.pos.clone(),
+            blocks: self.blocks.clone(),
+            ln_f: self.ln_f.clone(),
+            head: self.head.clone(),
+            attn_overflows: AtomicU64::new(self.attn_overflows.load(Ordering::Relaxed)),
+        }
+    }
 }
 
 impl Transformer {
@@ -202,6 +222,7 @@ impl Transformer {
         let mut attn_out = vec![0.0f32; seq * d];
         let mut ff = vec![0.0f32; seq * self.cfg.d_ff];
         let mut ff_out = vec![0.0f32; seq * d];
+        let mut attn_scratch = super::scratch::AttnScratch::new();
 
         for (bi, blk) in self.blocks.iter().enumerate() {
             // --- attention path
@@ -219,7 +240,7 @@ impl Transformer {
             blk.wq.forward_rows(&ln_out, seq, &mut q);
             blk.wk.forward_rows(&ln_out, seq, &mut k);
             blk.wv.forward_rows(&ln_out, seq, &mut v);
-            attention(&q, &k, &v, seq, d, self.cfg.n_heads, true, &mut mix);
+            attention(&q, &k, &v, seq, d, self.cfg.n_heads, true, &mut attn_scratch, &mut mix);
             if let Some(c) = capture.as_deref_mut() {
                 for t in 0..seq {
                     c.record(&format!("b{bi}.wo"), &mix[t * d..(t + 1) * d]);
@@ -271,15 +292,30 @@ impl Transformer {
         logits
     }
 
-    /// Total overflow events observed across quantized layers.
+    /// Total overflow events observed on the integer datapath — the
+    /// **unified** model-wide view: quantized-linear events plus the
+    /// attention-matmul events from quantized-KV decoding. Eval
+    /// (perplexity deltas) and the serve report both read this one
+    /// number.
     pub fn overflow_events(&self) -> u64 {
-        let mut total = 0;
+        let mut total = self.attention_overflow_events();
         for name in self.linear_names() {
             if let Some(Linear::Quant(q)) = self.get_linear(&name) {
                 total += q.overflow_count();
             }
         }
         total
+    }
+
+    /// The attention-matmul share of [`Transformer::overflow_events`]
+    /// (0 on the f32 KV backend or at the data-type-safe inner width).
+    pub fn attention_overflow_events(&self) -> u64 {
+        self.attn_overflows.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Record attention overflow events (decode/prefill internals).
+    pub(crate) fn add_attention_overflows(&self, n: u64) {
+        self.attn_overflows.fetch_add(n, std::sync::atomic::Ordering::Relaxed);
     }
 }
 
@@ -323,7 +359,15 @@ pub fn random_transformer(cfg: TransformerConfig, seed: u64) -> Transformer {
     let pos: Vec<f32> = (0..cfg.max_seq * d).map(|_| (rng.normal() * std) as f32).collect();
     let head_w: Vec<f32> = (0..cfg.vocab * d).map(|_| (rng.normal() * std) as f32).collect();
     let head = FloatLinear::new(d, cfg.vocab, head_w, vec![0.0; cfg.vocab]);
-    Transformer { cfg, embed, pos, blocks, ln_f: LayerNorm::identity(d), head }
+    Transformer {
+        cfg,
+        embed,
+        pos,
+        blocks,
+        ln_f: LayerNorm::identity(d),
+        head,
+        attn_overflows: std::sync::atomic::AtomicU64::new(0),
+    }
 }
 
 #[cfg(test)]

@@ -38,7 +38,8 @@ fn kernel_matches_simulator_at_depth() {
         let x: Vec<i64> = (0..rows * k).map(|_| rng.int_in(0, 255)).collect();
         let w: Vec<i32> = (0..c * k).map(|_| rng.int_in(-7, 7) as i32).collect();
         let mut out = vec![0i64; rows * c];
-        let ovf = qgemm_multistage(&x, rows, &w, c, k, tile, inner, outer, &mut out);
+        let mut ovf = vec![0u64; rows];
+        qgemm_multistage(&x, rows, &w, c, k, tile, inner, outer, &mut out, &mut ovf);
         let mut want_ovf = vec![0u64; rows];
         for r in 0..rows {
             for ch in 0..c {

@@ -1,0 +1,163 @@
+//! Steady-state allocation audit of the decode hot path.
+//!
+//! A counting global allocator wraps `System`; after a short warmup
+//! (which grows the [`DecodeScratch`] buffers to their high-water
+//! shape), a batched decode step must perform **zero** heap
+//! allocations — on the quantized model + quantized-KV backend (the
+//! serving configuration the scratch plan exists for) and on the float
+//! model + f32 arena.
+//!
+//! The fixture is deliberately sized below the kernels' band-threading
+//! work threshold (rows·c·k < 64³ everywhere): the zero-allocation
+//! guarantee is scoped to inline kernel calls — a call large enough to
+//! fan out across scoped threads allocates for the spawns by design,
+//! and that path is exercised elsewhere (qgemm threaded-band tests).
+//!
+//! This file contains exactly one `#[test]` on purpose: the allocation
+//! counter is process-global, and a concurrently running sibling test
+//! would pollute the measured window.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use axe::coordinator::{quantize_transformer, DatapathMode, PipelineConfig};
+use axe::eval::synth_corpus;
+use axe::model::{
+    random_transformer, Activation, DecodeScratch, KvArena, KvCacheKind, KvQuantSpec,
+    Transformer, TransformerConfig,
+};
+use axe::quant::{AccumTarget, Algorithm, Method};
+
+/// `System`, with every allocation counted (deallocations are free:
+/// the property under test is "no allocations per step", and a
+/// dealloc without a matching alloc cannot exist).
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::SeqCst);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::SeqCst);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::SeqCst);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocations() -> u64 {
+    ALLOCS.load(Ordering::SeqCst)
+}
+
+fn lm_fixture(seed: u64) -> (Transformer, Vec<u16>) {
+    let cfg = TransformerConfig {
+        name: "zeroalloc".into(),
+        vocab: 48,
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 32,
+        max_seq: 16,
+        act: Activation::Gelu,
+        parallel_residual: false,
+    };
+    (random_transformer(cfg, seed), synth_corpus(16 * 16, 48, seed + 1))
+}
+
+/// Drive `steps` batched decode steps over 4 slots and return how many
+/// heap allocations they performed. Tokens/slots/counters live in
+/// stack arrays; logits are read from the workspace — nothing in the
+/// loop should touch the allocator once the workspace is warm.
+fn run_steps(
+    model: &Transformer,
+    arena: &mut KvArena,
+    slots: &[usize; 4],
+    scratch: &mut DecodeScratch,
+    steps: usize,
+    phase: u16,
+) -> u64 {
+    let vocab = model.cfg.vocab as u16;
+    let mut tokens = [0u16; 4];
+    let mut row_ovf = [0u64; 4];
+    let before = allocations();
+    for s in 0..steps {
+        for (b, t) in tokens.iter_mut().enumerate() {
+            *t = ((phase as usize + s * 7 + b * 3) % vocab as usize) as u16;
+        }
+        row_ovf.iter_mut().for_each(|v| *v = 0);
+        model.decode_step_batch_scratch(&tokens, slots, arena, &mut row_ovf[..], scratch);
+        // touch the result so the read can't be optimized away
+        assert!(scratch.step.logits[..4 * vocab as usize].iter().all(|v| v.is_finite()));
+    }
+    allocations() - before
+}
+
+#[test]
+fn steady_state_decode_steps_allocate_nothing() {
+    // -- phase 1: AXE-quantized model (faithful fused kernel) over the
+    // quantized KV arena — the serving configuration.
+    let (base, toks) = lm_fixture(7010);
+    let calib: Vec<&[u16]> = toks.chunks_exact(16).take(4).collect();
+    let mut cfg = PipelineConfig::new(Algorithm::Optq, Method::Axe, 4, 8);
+    cfg.target = AccumTarget::MultiStage { p_inner: 14, tile: 8 };
+    cfg.datapath = DatapathMode::Faithful;
+    let mut qmodel = base.clone();
+    let report = quantize_transformer(&mut qmodel, &calib, &cfg).unwrap();
+    // The guarantee matters for the allocation property too: an unsafe
+    // tile would fall back to the per-MAC simulator, which buffers one
+    // widened tile per event.
+    assert!(report.guaranteed_safe(), "fixture must carry the overflow guarantee");
+
+    let kind = KvCacheKind::Quant(KvQuantSpec::new(8, 64, None)); // data-type-safe width
+    let mut arena = KvArena::with_kind(&qmodel, 4, kind);
+    let mut slots = [0usize; 4];
+    for s in slots.iter_mut() {
+        *s = arena.alloc().expect("4-slot arena");
+    }
+    let mut scratch = DecodeScratch::for_model(&qmodel.cfg, 4);
+    let mut ovf = 0u64;
+    for (i, &s) in slots.iter().enumerate() {
+        qmodel.prefill_slot_scratch(&toks[i * 3..i * 3 + 3], s, &mut arena, &mut ovf, &mut scratch);
+    }
+    // warmup: first steps may still grow buffers / free-list internals
+    run_steps(&qmodel, &mut arena, &slots, &mut scratch, 3, 100);
+    let quant_allocs = run_steps(&qmodel, &mut arena, &slots, &mut scratch, 6, 200);
+    assert_eq!(
+        quant_allocs, 0,
+        "quantized-model + quant-KV decode steps must not allocate after warmup \
+         ({quant_allocs} allocations across 6 steps)"
+    );
+
+    // -- phase 2: float model over the f32 arena (banded f64 GEMM path).
+    let mut arena_f = KvArena::new(&base, 4);
+    let mut slots_f = [0usize; 4];
+    for s in slots_f.iter_mut() {
+        *s = arena_f.alloc().expect("4-slot arena");
+    }
+    let mut scratch_f = DecodeScratch::for_model(&base.cfg, 4);
+    for (i, &s) in slots_f.iter().enumerate() {
+        let prompt = &toks[i * 3..i * 3 + 3];
+        base.prefill_slot_scratch(prompt, s, &mut arena_f, &mut ovf, &mut scratch_f);
+    }
+    run_steps(&base, &mut arena_f, &slots_f, &mut scratch_f, 3, 300);
+    let float_allocs = run_steps(&base, &mut arena_f, &slots_f, &mut scratch_f, 6, 400);
+    assert_eq!(
+        float_allocs, 0,
+        "float-model decode steps must not allocate after warmup \
+         ({float_allocs} allocations across 6 steps)"
+    );
+}
