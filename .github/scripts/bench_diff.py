@@ -1,0 +1,58 @@
+#!/usr/bin/env python3
+"""Diff a fresh BENCH_decode.json against the committed baseline.
+
+Prints a per-configuration tokens/s and TTFT comparison. Informational
+only — the bench-decode job reports the trajectory, it does not gate.
+"""
+
+import json
+import pathlib
+import sys
+
+
+def rows(doc):
+    return {
+        (c.get("kv"), c.get("in_flight")): c.get("tokens_per_s")
+        for c in doc.get("configs", [])
+    }
+
+
+def ttft_rows(doc):
+    block = doc.get("ttft_under_load") or {}
+    return {c.get("prefill_chunk"): c.get("ttft_ms") for c in block.get("configs", [])}
+
+
+def main():
+    cur_path = pathlib.Path(sys.argv[1] if len(sys.argv) > 1 else "BENCH_decode.json")
+    base_path = pathlib.Path(
+        sys.argv[2] if len(sys.argv) > 2 else "BENCH_decode.baseline.json"
+    )
+    if not base_path.is_file():
+        print(
+            f"no {base_path} committed yet — commit a CI artifact as the baseline "
+            "to enable the cross-PR diff (see ROADMAP)."
+        )
+        return
+    cur = json.loads(cur_path.read_text())
+    base = json.loads(base_path.read_text())
+    if str(base.get("schema", "")).endswith("-stub"):
+        print(f"{base_path} is a schema stub (no measured numbers) — skipping diff.")
+        return
+    b, c = rows(base), rows(cur)
+    print(f"decode throughput vs baseline ({base.get('model')}):")
+    print(f"{'config':>14} {'baseline':>10} {'current':>10} {'delta':>8}")
+    for key in sorted(c, key=str):
+        if key in b and isinstance(b[key], (int, float)) and b[key]:
+            delta = 100.0 * (c[key] - b[key]) / b[key]
+            print(f"{key[0]:>9}@{key[1]:<4} {b[key]:>10.1f} {c[key]:>10.1f} {delta:>+7.1f}%")
+    bt, ct = ttft_rows(base), ttft_rows(cur)
+    shared = [k for k in ct if k in bt and isinstance(bt[k], (int, float))]
+    if shared:
+        print("ttft under load (ms, long prompt vs loaded batch):")
+        print(f"{'chunk':>10} {'baseline':>10} {'current':>10}")
+        for k in sorted(shared, key=lambda x: (x is None, x)):
+            print(f"{k!s:>10} {bt[k]:>10.2f} {ct[k]:>10.2f}")
+
+
+if __name__ == "__main__":
+    main()

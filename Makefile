@@ -1,0 +1,26 @@
+# Artifact pipeline: synthetic corpus/glyph data → trained weight zoo
+# (+ JAX parity bundles the rust integration tests check against) →
+# AOT-lowered HLO artifacts for the PJRT runtime.
+#
+# Requires python3 with jax (CPU is fine) and numpy; the rust side
+# consumes the output from ./artifacts (see `axe::artifacts_dir`).
+
+PY ?= python3
+
+.PHONY: artifacts artifacts-quick clean-artifacts
+
+# Full training budgets — the real zoo.
+artifacts:
+	cd python && $(PY) -m compile.data --out ../artifacts/data
+	cd python && $(PY) -m compile.train --out ../artifacts/weights --data ../artifacts/data
+	cd python && $(PY) -m compile.aot --out ../artifacts/hlo --weights ../artifacts/weights
+
+# Tiny training budgets (CI smoke): same artifact layout, same parity
+# bundles — enough for the JAX↔rust contract tests, not for accuracy.
+artifacts-quick:
+	cd python && $(PY) -m compile.data --out ../artifacts/data
+	cd python && $(PY) -m compile.train --quick --out ../artifacts/weights --data ../artifacts/data
+	cd python && $(PY) -m compile.aot --out ../artifacts/hlo --weights ../artifacts/weights
+
+clean-artifacts:
+	rm -rf artifacts

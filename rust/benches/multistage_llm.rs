@@ -24,7 +24,9 @@
 
 use axe::bench_support::time_once;
 use axe::coordinator::experiments::run_lm_config;
-use axe::coordinator::serve::{serve, serve_with, Request, ServeQueue, ServeStats};
+use axe::coordinator::serve::{
+    serve, serve_with, Request, ServeConfig, ServeQueue, ServeStats, StepEngine,
+};
 use axe::coordinator::{quantize_transformer, DatapathMode, PipelineConfig};
 use axe::eval::{load_corpus_split_or_synth, perplexity};
 use axe::model::{
@@ -91,6 +93,76 @@ struct AttnMicro {
     iters: usize,
     ref_us_per_call: f64,
     scratch_us_per_call: f64,
+}
+
+/// One measured chunked-prefill latency configuration: a long prompt
+/// admitted against a loaded decode batch at one `--prefill-chunk`
+/// setting (`prefill_chunk` 0 = unchunked whole-prompt admission).
+struct TtftPoint {
+    prefill_chunk: usize,
+    /// Submission → first token of the long request.
+    ttft_ms: f64,
+    /// Longest single scheduler step during its admission — the worst
+    /// inter-token stall any co-scheduled decoder experiences
+    /// (head-of-line blocking, the number chunking exists to cut).
+    max_step_ms: f64,
+}
+
+/// TTFT under load: admit a window-length prompt against `decoders`
+/// already-decoding sequences and measure, per chunk setting, the long
+/// request's time-to-first-token and the worst step stall its
+/// admission inflicts on the batch. Token streams are bit-identical
+/// across settings (property-tested in tests/chunked_prefill.rs); this
+/// probe measures the latency trade only.
+struct TtftProbe {
+    prompt_len: usize,
+    decoders: usize,
+    points: Vec<TtftPoint>,
+}
+
+fn ttft_probe(model: &Transformer, val: &[u16]) -> TtftProbe {
+    use std::time::Instant;
+    let seq = model.cfg.max_seq;
+    let decoders = 15usize;
+    let prompt_len = seq - 1; // the longest servable prompt
+    let long_prompt: Vec<u16> = val[..prompt_len].to_vec();
+    let mut points = Vec::new();
+    for &chunk in &[0usize, 64, 16, 8] {
+        let cfg = ServeConfig::new(decoders + 1, KvCacheKind::F32)
+            .with_prefill_chunk(if chunk == 0 { usize::MAX } else { chunk });
+        let mut eng = StepEngine::new(model, cfg);
+        for id in 0..decoders as u64 {
+            let at = (id as usize * 7) % (val.len() - 4);
+            // effectively endless decoders: the probe ends when the
+            // long request finishes
+            eng.admit(
+                Request { id, prompt: val[at..at + 4].to_vec(), max_new_tokens: 1 << 20 },
+                Instant::now(),
+            );
+        }
+        while eng.prefilling() > 0 {
+            eng.step();
+        }
+        for _ in 0..3 {
+            eng.step(); // a few hot steady-state steps
+        }
+        let t0 = Instant::now();
+        eng.admit(
+            Request { id: 999, prompt: long_prompt.clone(), max_new_tokens: 2 },
+            t0,
+        );
+        let mut max_step_ms = 0f64;
+        let ttft_ms = loop {
+            let s0 = Instant::now();
+            eng.step();
+            max_step_ms = max_step_ms.max(s0.elapsed().as_secs_f64() * 1e3);
+            if let Some(r) = eng.take_finished().into_iter().find(|r| r.id == 999) {
+                break r.ttft_s * 1e3;
+            }
+        };
+        points.push(TtftPoint { prefill_chunk: chunk, ttft_ms, max_step_ms });
+    }
+    TtftProbe { prompt_len, decoders, points }
 }
 
 fn main() -> anyhow::Result<()> {
@@ -323,6 +395,27 @@ fn main() -> anyhow::Result<()> {
         attn.ref_us_per_call / attn.scratch_us_per_call
     );
 
+    // ---- chunked-prefill TTFT under load: a window-length prompt
+    // admitted against 15 in-flight decoders, per --prefill-chunk
+    // setting (0 = unchunked). max_step is the worst inter-token stall
+    // the admission inflicts on the batch.
+    let ttft = ttft_probe(&qmodel, &val);
+    println!(
+        "\nttft under load ({}-token prompt vs {} in-flight decoders):",
+        ttft.prompt_len, ttft.decoders
+    );
+    for p in &ttft.points {
+        let label = if p.prefill_chunk == 0 {
+            "unchunked".to_string()
+        } else {
+            format!("chunk {:>3}", p.prefill_chunk)
+        };
+        println!(
+            "  {label:>10} : ttft {:>7.2} ms, worst co-batch stall {:>7.2} ms/step",
+            p.ttft_ms, p.max_step_ms
+        );
+    }
+
     // ---- machine-readable results (CI uploads this as an artifact).
     // Default paths anchor at the workspace root (one level above this
     // package's manifest), independent of the bench's CWD.
@@ -340,6 +433,7 @@ fn main() -> anyhow::Result<()> {
         sequential_tok_s,
         &points,
         &attn,
+        &ttft,
         &baseline_path,
     );
     std::fs::write(&out_path, &json)?;
@@ -422,6 +516,7 @@ fn render_json(
     sequential_tok_s: f64,
     points: &[DecodePoint],
     attn: &AttnMicro,
+    ttft: &TtftProbe,
     baseline_path: &str,
 ) -> String {
     let mut s = String::new();
@@ -460,6 +555,21 @@ fn render_json(
         attn.scratch_us_per_call,
         attn.ref_us_per_call / attn.scratch_us_per_call
     ));
+    // prefill_chunk 0 = unchunked whole-prompt admission
+    s.push_str(&format!(
+        "  \"ttft_under_load\": {{\"prompt_len\": {}, \"decoders\": {}, \"configs\": [\n",
+        ttft.prompt_len, ttft.decoders
+    ));
+    for (i, p) in ttft.points.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"prefill_chunk\": {}, \"ttft_ms\": {:.3}, \"max_step_ms\": {:.3}}}{}\n",
+            p.prefill_chunk,
+            p.ttft_ms,
+            p.max_step_ms,
+            if i + 1 < ttft.points.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]},\n");
     match std::fs::read_to_string(baseline_path) {
         Ok(b) if b.trim_start().starts_with('{') => {
             s.push_str("  \"baseline\": ");

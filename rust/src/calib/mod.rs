@@ -24,7 +24,7 @@ fn weight_col_abs_max(l: &FloatLinear) -> Vec<f64> {
     // max over outputs for each input column j
     let mut m = vec![0.0f64; l.in_dim];
     for o in 0..l.out_dim {
-        let row = &l.w[o * l.in_dim..(o + 1) * l.in_dim];
+        let row = &l.w()[o * l.in_dim..(o + 1) * l.in_dim];
         for (j, &w) in row.iter().enumerate() {
             m[j] = m[j].max(w.abs() as f64);
         }
@@ -66,9 +66,13 @@ pub fn smoothquant_fold(
     }
     for c in consumers.iter_mut() {
         if let Linear::Float(fl) = c {
-            for o in 0..fl.out_dim {
+            let (in_dim, out_dim) = (fl.in_dim, fl.out_dim);
+            // one w_mut borrow per layer: bumps the widened-cache
+            // version exactly once for the whole rescale
+            let w = fl.w_mut();
+            for o in 0..out_dim {
                 for j in 0..k {
-                    fl.w[o * fl.in_dim + j] *= scales[j] as f32;
+                    w[o * in_dim + j] *= scales[j] as f32;
                 }
             }
         }
@@ -84,25 +88,36 @@ pub fn equalize_pair(l1: &mut FloatLinear, l2: &mut FloatLinear) -> Vec<f64> {
     let c = l1.out_dim;
     let mut scales = vec![1.0f64; c];
     for j in 0..c {
-        let r1 = l1.w[j * l1.in_dim..(j + 1) * l1.in_dim]
+        let r1 = l1.w()[j * l1.in_dim..(j + 1) * l1.in_dim]
             .iter()
             .fold(0.0f32, |m, v| m.max(v.abs())) as f64;
         let mut r2 = 0.0f64;
         for o in 0..l2.out_dim {
-            r2 = r2.max(l2.w[o * l2.in_dim + j].abs() as f64);
+            r2 = r2.max(l2.w()[o * l2.in_dim + j].abs() as f64);
         }
         if r1 > 1e-9 && r2 > 1e-9 {
             scales[j] = (r1 / r2).sqrt().clamp(1e-4, 1e4);
         }
     }
+    let in1 = l1.in_dim;
+    {
+        let w1 = l1.w_mut();
+        for j in 0..c {
+            let s = scales[j] as f32;
+            for w in &mut w1[j * in1..(j + 1) * in1] {
+                *w /= s;
+            }
+        }
+    }
+    for j in 0..c {
+        l1.b[j] /= scales[j] as f32;
+    }
+    let (in2, out2) = (l2.in_dim, l2.out_dim);
+    let w2 = l2.w_mut();
     for j in 0..c {
         let s = scales[j] as f32;
-        for w in &mut l1.w[j * l1.in_dim..(j + 1) * l1.in_dim] {
-            *w /= s;
-        }
-        l1.b[j] /= s;
-        for o in 0..l2.out_dim {
-            l2.w[o * l2.in_dim + j] *= s;
+        for o in 0..out2 {
+            w2[o * in2 + j] *= s;
         }
     }
     scales
@@ -233,10 +248,10 @@ mod tests {
         }
         // ranges are balanced after equalization
         let r1: Vec<f32> = (0..6)
-            .map(|j| l1.w[j * 4..(j + 1) * 4].iter().fold(0.0f32, |m, v| m.max(v.abs())))
+            .map(|j| l1.w()[j * 4..(j + 1) * 4].iter().fold(0.0f32, |m, v| m.max(v.abs())))
             .collect();
         let r2: Vec<f32> = (0..6)
-            .map(|j| (0..3).map(|o| l2.w[o * 6 + j].abs()).fold(0.0f32, f32::max))
+            .map(|j| (0..3).map(|o| l2.w()[o * 6 + j].abs()).fold(0.0f32, f32::max))
             .collect();
         for j in 0..6 {
             assert!((r1[j] - r2[j]).abs() / r1[j].max(1e-6) < 1e-3, "channel {j} unbalanced");

@@ -3,36 +3,58 @@
 //!
 //! Requests are greedy-generation jobs (prompt → n tokens) on a shared
 //! queue. Each engine thread owns a [`KvArena`] of `max_batch` slots
-//! and runs a vLLM-style **step scheduler**: every iteration it admits
-//! queued requests into free slots, stacks the current token of every
-//! in-flight sequence into one
-//! [`Transformer::decode_step_batch_scratch`] call (one fused qgemm
-//! dispatch per layer across the whole batch), samples greedily, and
-//! retires finished sequences — requests join and leave the batch
-//! mid-flight, so the accumulator-aware GEMM amortizes across whatever
-//! traffic is live instead of idling between requests. Each engine
-//! owns one [`DecodeScratch`] workspace reused across admissions,
-//! steps and slides, so the steady-state step loop performs zero heap
-//! allocations (`tests/zero_alloc_decode.rs`; scoped, to kernel calls
-//! below the band-threading work threshold — past it, thread spawns
-//! allocate by design).
+//! and runs a vLLM-style **step scheduler** ([`StepEngine`]): every
+//! iteration it admits queued requests into free slots, composes one
+//! **ragged step** — a prefill chunk of up to `prefill_chunk` tokens
+//! for each admitting sequence plus one decode row for every in-flight
+//! sequence — and executes it as a single
+//! [`Transformer::decode_step_ragged_scratch`] call (one fused qgemm
+//! dispatch per layer across every row of the step), then samples
+//! greedily and retires finished sequences. Prefill is therefore a
+//! first-class citizen of the step loop: a long prompt no longer
+//! blocks the in-flight batch head-of-line — it trickles in chunk by
+//! chunk while decode rows keep flowing, and each chunk *amortizes*
+//! the fused kernel across the live decode traffic. Each engine owns
+//! one [`DecodeScratch`] workspace sized to the ragged-step high-water
+//! mark ([`DecodeScratch::for_serve`]), so the steady-state step loop
+//! — chunks included — performs zero heap allocations
+//! (`tests/zero_alloc_decode.rs`; scoped, to kernel calls below the
+//! band-threading work threshold — past it, thread spawns allocate by
+//! design).
 //!
-//! Scheduling is **token-exact**: admission prefill, per-slot window
-//! slides, sampling order and tie-breaks replicate
-//! [`Transformer::generate_greedy`] per sequence, and every batched
-//! kernel row is computed independently of its batchmates, so each
-//! response is bit-identical to serving that request alone (tested
-//! below and in `tests/qgemm_parity.rs`). The same row independence
-//! makes overflow accounting **exact**: the kernels report per-row
-//! event counts, so each [`Response`] carries precisely the events its
-//! own prefills, decode rows and (on the quantized-KV backend,
+//! **Admission / fairness policy.** Decode rows always ride — an
+//! admitting prompt can never stall sequences that are already
+//! generating. The per-step prefill budget (`prefill_chunk` tokens,
+//! shared) is handed out in active-list order (FCFS admission order,
+//! modulo retirement swaps), so concurrent admissions prefill
+//! substantially one after the other rather than all at once;
+//! window-slide re-encodes run through the same chunked path and the
+//! same budget. Per-request **time-to-first-token** is recorded on
+//! every [`Response`] (`ttft_s`), making the latency effect of the
+//! chunk size directly observable (`ServeStats::{p50,p99}_ttft_s`).
+//!
+//! Scheduling is **token-exact for every chunk size**: each row of a
+//! ragged step is computed independently of how rows are grouped into
+//! chunks or batched with other sequences, and sampling order,
+//! tie-breaks and per-slot window slides replicate
+//! [`Transformer::generate_greedy`] per sequence — so each response is
+//! bit-identical to serving that request alone, whatever
+//! `prefill_chunk` says (tested below and in
+//! `tests/chunked_prefill.rs`). The same row independence makes
+//! overflow accounting **exact**: the kernels report per-group event
+//! counts, so each [`Response`] carries precisely the events its own
+//! prefill chunks, decode rows and (on the quantized-KV backend,
 //! [`serve_with`]) attention matmuls produced — not a batch-window
 //! bound.
 
-use crate::model::{argmax, DecodeScratch, KvArena, KvCacheKind, Transformer};
+use crate::model::{argmax, DecodeScratch, KvArena, KvCacheKind, RowGroup, Transformer};
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
+
+/// Default per-step prefill chunk / budget (tokens) — the
+/// `--prefill-chunk` default.
+pub const DEFAULT_PREFILL_CHUNK: usize = 64;
 
 /// One generation request.
 #[derive(Clone, Debug)]
@@ -51,13 +73,17 @@ pub struct Response {
     pub queued_s: f64,
     /// Generation time in seconds (admission → retirement).
     pub gen_s: f64,
+    /// Time to first token in seconds (submission → first sampled
+    /// token) — the latency the chunked-prefill admission path exists
+    /// to cut. Equals `queued_s` for zero-token requests.
+    pub ttft_s: f64,
     /// Integer-datapath overflow events attributed to **this request
-    /// exactly**: its admission prefill and window-slide re-prefills,
-    /// plus its own rows of every batched decode step it rode in
-    /// (quantized linear layers and, on the quantized-KV backend, its
-    /// attention matmuls). Per-row kernel attribution makes the counts
-    /// disjoint across co-scheduled requests and invariant to batch
-    /// composition.
+    /// exactly**: its admission prefill chunks and window-slide
+    /// re-prefill chunks, plus its own rows of every ragged step it
+    /// rode in (quantized linear layers and, on the quantized-KV
+    /// backend, its attention matmuls). Per-group kernel attribution
+    /// makes the counts disjoint across co-scheduled requests and
+    /// invariant to batch composition.
     pub overflow_events: u64,
 }
 
@@ -167,6 +193,10 @@ pub struct ServeStats {
     pub p50_latency_s: f64,
     pub p99_latency_s: f64,
     pub mean_queue_s: f64,
+    /// Time-to-first-token percentiles across responses — the metric
+    /// the chunked-prefill admission path targets.
+    pub p50_ttft_s: f64,
+    pub p99_ttft_s: f64,
     /// Total overflow events across the serve run — the sum of the
     /// exact per-request counts (attribution is disjoint, so the sum
     /// is the model-wide total for the run's forward work).
@@ -180,29 +210,71 @@ impl ServeStats {
     /// Aggregate responses; overflow events are summed from the exact
     /// per-request counters.
     pub fn from_responses(responses: &[Response], wall_s: f64) -> ServeStats {
-        let mut latencies: Vec<f64> = responses.iter().map(|r| r.queued_s + r.gen_s).collect();
-        latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let total_tokens: usize = responses.iter().map(|r| r.tokens.len()).sum();
-        let pct = |p: f64| -> f64 {
-            if latencies.is_empty() {
+        let pct = |sorted: &[f64], p: f64| -> f64 {
+            if sorted.is_empty() {
                 return 0.0;
             }
-            let idx = ((latencies.len() as f64 * p).ceil() as usize).clamp(1, latencies.len()) - 1;
-            latencies[idx]
+            let idx = ((sorted.len() as f64 * p).ceil() as usize).clamp(1, sorted.len()) - 1;
+            sorted[idx]
         };
+        let mut latencies: Vec<f64> = responses.iter().map(|r| r.queued_s + r.gen_s).collect();
+        latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut ttfts: Vec<f64> = responses.iter().map(|r| r.ttft_s).collect();
+        ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let total_tokens: usize = responses.iter().map(|r| r.tokens.len()).sum();
         ServeStats {
             requests: responses.len(),
             total_tokens,
             wall_s,
             tokens_per_s: total_tokens as f64 / wall_s.max(1e-12),
-            p50_latency_s: pct(0.50),
-            p99_latency_s: pct(0.99),
+            p50_latency_s: pct(&latencies, 0.50),
+            p99_latency_s: pct(&latencies, 0.99),
             mean_queue_s: responses.iter().map(|r| r.queued_s).sum::<f64>()
                 / responses.len().max(1) as f64,
+            p50_ttft_s: pct(&ttfts, 0.50),
+            p99_ttft_s: pct(&ttfts, 0.99),
             overflow_events: responses.iter().map(|r| r.overflow_events).sum(),
             arena_bytes: 0,
         }
     }
+}
+
+/// Per-engine serving configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// In-flight slots per engine (the continuous-batching degree).
+    pub max_batch: usize,
+    /// KV arena backend.
+    pub kind: KvCacheKind,
+    /// Per-step prefill chunk size AND shared prefill token budget:
+    /// each ragged step carries at most this many prompt tokens,
+    /// handed out FCFS across admitting sequences. `usize::MAX` (or
+    /// anything ≥ the longest servable prompt) degenerates to
+    /// whole-prompt admission in a single ragged group. Token streams
+    /// are bit-identical for every value — this knob trades
+    /// time-to-first-token against per-step latency only.
+    pub prefill_chunk: usize,
+}
+
+impl ServeConfig {
+    pub fn new(max_batch: usize, kind: KvCacheKind) -> ServeConfig {
+        ServeConfig { max_batch: max_batch.max(1), kind, prefill_chunk: DEFAULT_PREFILL_CHUNK }
+    }
+
+    pub fn with_prefill_chunk(mut self, chunk: usize) -> ServeConfig {
+        self.prefill_chunk = chunk.max(1);
+        self
+    }
+}
+
+/// Scheduler phase of an in-flight sequence.
+enum Phase {
+    /// `context[next_pos..]` still has prompt (or slide-tail) tokens to
+    /// prefill in chunks; no logits are pending.
+    Prefilling { next_pos: usize },
+    /// Prefill complete: `logits` holds the last step's output, a
+    /// sample is due.
+    Decoding,
 }
 
 /// One in-flight sequence: its arena slot plus the state the step
@@ -210,23 +282,251 @@ impl ServeStats {
 struct InFlight {
     id: u64,
     slot: usize,
-    /// Window-clipped prompt + generated tokens (the slide tail source).
+    /// Window-clipped prompt + generated tokens (the slide tail
+    /// source). While `Prefilling`, the suffix from `next_pos` is what
+    /// remains to be encoded.
     context: Vec<u16>,
     /// Generated tokens only.
     emitted: Vec<u16>,
     max_new: usize,
-    /// Logits pending a sample (from prefill or the last batched step).
+    /// Logits pending a sample (valid in `Decoding` only).
     logits: Vec<f32>,
     enqueued: Instant,
     admitted: Instant,
-    /// Exact overflow events this request has triggered so far
-    /// (prefills + its rows of every batched step).
+    /// When the first token was sampled (TTFT numerator).
+    first_token: Option<Instant>,
+    /// Exact overflow events this request has triggered so far (its
+    /// prefill chunks + its rows of every ragged step).
     overflow: u64,
+    phase: Phase,
+}
+
+/// The deterministic, single-threaded step scheduler one engine thread
+/// drives — exposed so tests (`tests/chunked_prefill.rs`) and benches
+/// can run admission schedules step by step without queues or threads.
+///
+/// Lifecycle: [`StepEngine::admit`] requests into free slots (they
+/// start in the `Prefilling` phase — admission does **no** model
+/// work), then call [`StepEngine::step`] repeatedly; completed
+/// [`Response`]s accumulate until [`StepEngine::take_finished`].
+pub struct StepEngine<'m> {
+    model: &'m Transformer,
+    cfg: ServeConfig,
+    arena: KvArena,
+    scratch: DecodeScratch,
+    active: Vec<InFlight>,
+    finished: Vec<Response>,
+    // reused ragged-step composition buffers (allocation-free loop)
+    step_tokens: Vec<u16>,
+    groups: Vec<RowGroup>,
+    /// `group_seq[g]` = index into `active` of the sequence group `g`
+    /// belongs to (a budget-starved prefill contributes no group).
+    group_seq: Vec<usize>,
+    group_ovf: Vec<u64>,
+}
+
+impl<'m> StepEngine<'m> {
+    pub fn new(model: &'m Transformer, cfg: ServeConfig) -> StepEngine<'m> {
+        let max_batch = cfg.max_batch.max(1);
+        StepEngine {
+            model,
+            cfg,
+            arena: KvArena::with_kind(model, max_batch, cfg.kind),
+            scratch: DecodeScratch::for_serve(&model.cfg, max_batch, cfg.prefill_chunk),
+            active: Vec::with_capacity(max_batch),
+            finished: Vec::new(),
+            step_tokens: Vec::new(),
+            groups: Vec::with_capacity(max_batch),
+            group_seq: Vec::with_capacity(max_batch),
+            group_ovf: Vec::with_capacity(max_batch),
+        }
+    }
+
+    pub fn free_slots(&self) -> usize {
+        self.arena.free_slots()
+    }
+
+    /// Sequences currently in flight (any phase).
+    pub fn in_flight(&self) -> usize {
+        self.active.len()
+    }
+
+    /// In-flight sequences still prefilling their prompt or slide tail.
+    pub fn prefilling(&self) -> usize {
+        self.active
+            .iter()
+            .filter(|s| matches!(s.phase, Phase::Prefilling { .. }))
+            .count()
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.active.is_empty()
+    }
+
+    /// Admit a request into a free slot. Costs no model work: the
+    /// prompt is clipped to the window and queued for chunked prefill
+    /// inside the step loop. Zero-token requests complete immediately.
+    pub fn admit(&mut self, req: Request, enqueued: Instant) {
+        let admitted = Instant::now();
+        let queued_s = admitted.duration_since(enqueued).as_secs_f64();
+        if req.max_new_tokens == 0 {
+            // nothing to generate: complete without spending a prefill
+            // or an arena slot
+            self.finished.push(Response {
+                id: req.id,
+                tokens: Vec::new(),
+                queued_s,
+                gen_s: 0.0,
+                ttft_s: queued_s,
+                overflow_events: 0,
+            });
+            return;
+        }
+        assert!(!req.prompt.is_empty(), "empty prompt");
+        let slot = self.arena.alloc().expect("admission is bounded by free slots");
+        let prompt = self.model.clip_to_window(&req.prompt);
+        self.active.push(InFlight {
+            id: req.id,
+            slot,
+            context: prompt,
+            emitted: Vec::with_capacity(req.max_new_tokens),
+            max_new: req.max_new_tokens,
+            logits: Vec::new(),
+            enqueued,
+            admitted,
+            first_token: None,
+            overflow: 0,
+            phase: Phase::Prefilling { next_pos: 0 },
+        });
+    }
+
+    /// One scheduler iteration: sample / slide / retire every
+    /// `Decoding` sequence, then compose and execute one ragged step
+    /// ({prefill chunks + decode rows}) over everything still in
+    /// flight. No-op when nothing is in flight.
+    pub fn step(&mut self) {
+        let vocab = self.model.cfg.vocab;
+        // -- sample, slide, retire (Decoding sequences only; a
+        // Prefilling sequence has no logits to sample yet)
+        let mut i = 0;
+        while i < self.active.len() {
+            let seq = &mut self.active[i];
+            if !matches!(seq.phase, Phase::Decoding) {
+                i += 1;
+                continue;
+            }
+            if self.arena.is_full(seq.slot) {
+                // window slide: drop to the kept tail and re-encode it
+                // through the same chunked prefill path. The pending
+                // logits are discarded and replaced by the tail
+                // re-prefill's final logits — exactly generate_greedy's
+                // slide, so the token stream cannot diverge.
+                let keep = self.model.slide_keep();
+                let cut = seq.context.len() - keep;
+                seq.context.drain(..cut);
+                self.arena.reset_slot(seq.slot);
+                seq.phase = Phase::Prefilling { next_pos: 0 };
+                i += 1;
+                continue;
+            }
+            let next = argmax(&seq.logits) as u16;
+            if seq.first_token.is_none() {
+                seq.first_token = Some(Instant::now());
+            }
+            seq.emitted.push(next);
+            seq.context.push(next);
+            if seq.emitted.len() >= seq.max_new {
+                let seq = self.active.swap_remove(i);
+                self.arena.release(seq.slot);
+                let queued_s = seq.admitted.duration_since(seq.enqueued).as_secs_f64();
+                self.finished.push(Response {
+                    id: seq.id,
+                    tokens: seq.emitted,
+                    queued_s,
+                    gen_s: seq.admitted.elapsed().as_secs_f64(),
+                    ttft_s: seq
+                        .first_token
+                        .map(|t| t.duration_since(seq.enqueued).as_secs_f64())
+                        .unwrap_or(queued_s),
+                    overflow_events: seq.overflow,
+                });
+            } else {
+                i += 1;
+            }
+        }
+
+        // -- compose the ragged step: one decode row per Decoding
+        // sequence (always — admissions can never stall the batch),
+        // plus prefill chunks under the shared FCFS token budget
+        self.step_tokens.clear();
+        self.groups.clear();
+        self.group_seq.clear();
+        let mut budget = self.cfg.prefill_chunk.max(1);
+        for (si, seq) in self.active.iter().enumerate() {
+            match seq.phase {
+                Phase::Decoding => {
+                    let start = self.step_tokens.len();
+                    self.step_tokens.push(*seq.context.last().unwrap());
+                    self.groups.push(RowGroup { slot: seq.slot, start, len: 1 });
+                    self.group_seq.push(si);
+                }
+                Phase::Prefilling { next_pos } => {
+                    if budget == 0 {
+                        continue; // starved this step; next step's budget is fresh
+                    }
+                    let take = budget.min(seq.context.len() - next_pos);
+                    let start = self.step_tokens.len();
+                    self.step_tokens.extend_from_slice(&seq.context[next_pos..next_pos + take]);
+                    self.groups.push(RowGroup { slot: seq.slot, start, len: take });
+                    self.group_seq.push(si);
+                    budget -= take;
+                }
+            }
+        }
+        if self.groups.is_empty() {
+            return;
+        }
+        self.group_ovf.clear();
+        self.group_ovf.resize(self.groups.len(), 0);
+        self.model.decode_step_ragged_scratch(
+            &self.step_tokens,
+            &self.groups,
+            &mut self.arena,
+            &mut self.group_ovf,
+            &mut self.scratch,
+        );
+
+        // -- route results: overflow attribution per group, logits to
+        // every decode row and to each prefill that just completed
+        for (gi, &si) in self.group_seq.iter().enumerate() {
+            let seq = &mut self.active[si];
+            seq.overflow += self.group_ovf[gi];
+            let done_prefill = match &mut seq.phase {
+                Phase::Decoding => true,
+                Phase::Prefilling { next_pos } => {
+                    *next_pos += self.groups[gi].len;
+                    *next_pos == seq.context.len()
+                }
+            };
+            if done_prefill {
+                seq.logits.clear();
+                seq.logits
+                    .extend_from_slice(&self.scratch.step.logits[gi * vocab..(gi + 1) * vocab]);
+                seq.phase = Phase::Decoding;
+            }
+        }
+    }
+
+    /// Drain completed responses (unordered; the queue sorts on drain).
+    pub fn take_finished(&mut self) -> Vec<Response> {
+        std::mem::take(&mut self.finished)
+    }
 }
 
 /// Run `engines` continuous-batching engine threads off the queue, each
-/// with `max_batch` in-flight slots over an f32 KV arena. Returns when
-/// the queue is closed and fully drained.
+/// with `max_batch` in-flight slots over an f32 KV arena and the
+/// default prefill chunk. Returns when the queue is closed and fully
+/// drained.
 pub fn serve(model: &Transformer, queue: &ServeQueue, engines: usize, max_batch: usize) {
     serve_with(model, queue, engines, max_batch, KvCacheKind::F32);
 }
@@ -242,143 +542,38 @@ pub fn serve_with(
     max_batch: usize,
     kind: KvCacheKind,
 ) {
+    serve_config(model, queue, engines, ServeConfig::new(max_batch, kind));
+}
+
+/// [`serve`] with the full per-engine configuration, including
+/// `prefill_chunk` — the `--prefill-chunk` deployment path.
+pub fn serve_config(model: &Transformer, queue: &ServeQueue, engines: usize, cfg: ServeConfig) {
     std::thread::scope(|scope| {
         for _ in 0..engines.max(1) {
-            scope.spawn(move || run_engine(model, queue, max_batch.max(1), kind));
+            scope.spawn(move || run_engine(model, queue, cfg));
         }
     });
 }
 
-/// The step scheduler: admit → (slide | sample | retire) → one batched
-/// decode step, until the queue closes and the batch drains.
-///
-/// The engine owns one [`DecodeScratch`] workspace plus reusable
-/// step-composition vectors; the steady-state loop — poll-empty
-/// admission, per-sequence sample, one batched
-/// [`Transformer::decode_step_batch_scratch`] call — performs zero heap
-/// allocations beyond the per-sequence `emitted`/`context`/`logits`
-/// buffers, which reuse their retained capacity.
-fn run_engine(model: &Transformer, queue: &ServeQueue, max_batch: usize, kind: KvCacheKind) {
-    let vocab = model.cfg.vocab;
-    let mut arena = KvArena::with_kind(model, max_batch, kind);
-    let mut active: Vec<InFlight> = Vec::new();
-    // one workspace per engine, shared by admissions, steps and slides
-    let mut scratch = DecodeScratch::for_model(&model.cfg, max_batch);
-    let mut step_tokens: Vec<u16> = Vec::with_capacity(max_batch);
-    let mut step_slots: Vec<usize> = Vec::with_capacity(max_batch);
-    let mut step_ovf: Vec<u64> = Vec::with_capacity(max_batch);
+/// One engine thread: drive a [`StepEngine`] off the shared queue —
+/// block when idle, poll admissions (bounded by free slots) when the
+/// batch has work, one ragged step per iteration.
+fn run_engine(model: &Transformer, queue: &ServeQueue, cfg: ServeConfig) {
+    let mut engine = StepEngine::new(model, cfg);
     loop {
-        // -- admission: block when idle, poll when the batch has work
-        let admissions = if active.is_empty() {
-            match queue.pop_batch(max_batch) {
+        let admissions = if engine.has_work() {
+            queue.poll(engine.free_slots())
+        } else {
+            match queue.pop_batch(cfg.max_batch.max(1)) {
                 Some(batch) => batch,
                 None => return, // closed + drained
             }
-        } else {
-            queue.poll(arena.free_slots())
         };
-        let mut finished: Vec<Response> = Vec::new();
         for (req, enqueued) in admissions {
-            let admitted = Instant::now();
-            if req.max_new_tokens == 0 {
-                // nothing to generate: complete without spending a
-                // prefill or an arena slot
-                finished.push(Response {
-                    id: req.id,
-                    tokens: Vec::new(),
-                    queued_s: admitted.duration_since(enqueued).as_secs_f64(),
-                    gen_s: 0.0,
-                    overflow_events: 0,
-                });
-                continue;
-            }
-            let slot = arena.alloc().expect("admission is bounded by free slots");
-            let prompt = model.clip_to_window(&req.prompt);
-            let mut prefill_ovf = 0u64;
-            model.prefill_slot_scratch(&prompt, slot, &mut arena, &mut prefill_ovf, &mut scratch);
-            active.push(InFlight {
-                id: req.id,
-                slot,
-                context: prompt,
-                emitted: Vec::with_capacity(req.max_new_tokens),
-                max_new: req.max_new_tokens,
-                logits: scratch.step.logits[..vocab].to_vec(),
-                enqueued,
-                admitted,
-                overflow: prefill_ovf,
-            });
+            engine.admit(req, enqueued);
         }
-
-        // -- per-sequence: window-slide if needed, sample, retire
-        let mut i = 0;
-        while i < active.len() {
-            let seq = &mut active[i];
-            let done = {
-                if arena.is_full(seq.slot) {
-                    // slide: re-encode the tail at fresh absolute
-                    // positions — identical to generate_greedy's slide
-                    let keep = model.slide_keep();
-                    let tail = seq.context[seq.context.len() - keep..].to_vec();
-                    arena.reset_slot(seq.slot);
-                    let mut slide_ovf = 0u64;
-                    model.prefill_slot_scratch(
-                        &tail,
-                        seq.slot,
-                        &mut arena,
-                        &mut slide_ovf,
-                        &mut scratch,
-                    );
-                    seq.logits.clear();
-                    seq.logits.extend_from_slice(&scratch.step.logits[..vocab]);
-                    seq.overflow += slide_ovf;
-                    seq.context = tail;
-                }
-                let next = argmax(&seq.logits) as u16;
-                seq.emitted.push(next);
-                seq.context.push(next);
-                seq.emitted.len() >= seq.max_new
-            };
-            if done {
-                let seq = active.swap_remove(i);
-                arena.release(seq.slot);
-                finished.push(Response {
-                    id: seq.id,
-                    tokens: seq.emitted,
-                    queued_s: seq.admitted.duration_since(seq.enqueued).as_secs_f64(),
-                    gen_s: seq.admitted.elapsed().as_secs_f64(),
-                    overflow_events: seq.overflow,
-                });
-            } else {
-                i += 1;
-            }
-        }
-
-        // -- one decode step for every sequence still in flight: the
-        // whole batch goes through one forward_rows_scratch per linear;
-        // the kernel's per-row overflow counts land on the requests
-        // that produced them. Step vectors and the workspace are
-        // reused, so the steady-state iteration is allocation-free.
-        if !active.is_empty() {
-            step_tokens.clear();
-            step_tokens.extend(active.iter().map(|s| *s.context.last().unwrap()));
-            step_slots.clear();
-            step_slots.extend(active.iter().map(|s| s.slot));
-            step_ovf.clear();
-            step_ovf.resize(active.len(), 0);
-            model.decode_step_batch_scratch(
-                &step_tokens,
-                &step_slots,
-                &mut arena,
-                &mut step_ovf,
-                &mut scratch,
-            );
-            for (b, seq) in active.iter_mut().enumerate() {
-                seq.overflow += step_ovf[b];
-                seq.logits.clear();
-                seq.logits.extend_from_slice(&scratch.step.logits[b * vocab..(b + 1) * vocab]);
-            }
-        }
-        queue.complete(finished);
+        engine.step();
+        queue.complete(engine.take_finished());
     }
 }
 
@@ -425,11 +620,14 @@ mod tests {
         for (i, r) in responses.iter().enumerate() {
             assert_eq!(r.id, i as u64);
             assert_eq!(r.tokens.len(), 5);
+            assert!(r.ttft_s >= r.queued_s, "ttft precedes admission");
+            assert!(r.ttft_s <= r.queued_s + r.gen_s + 1e-9);
         }
         let stats = ServeStats::from_responses(&responses, t0.elapsed().as_secs_f64());
         assert_eq!(stats.requests, 12);
         assert_eq!(stats.total_tokens, 60);
         assert!(stats.p99_latency_s >= stats.p50_latency_s);
+        assert!(stats.p99_ttft_s >= stats.p50_ttft_s);
     }
 
     #[test]
@@ -447,11 +645,12 @@ mod tests {
     /// THE serving parity property: continuous batching with mid-flight
     /// admissions, mixed prompt lengths (including window-clipped ones),
     /// staggered retirements and per-slot window slides emits, for every
-    /// request, exactly the tokens sequential greedy decode emits.
+    /// request, exactly the tokens sequential greedy decode emits —
+    /// whatever the prefill chunk size (whole-prompt, the default, or a
+    /// pathological 1-token trickle).
     #[test]
     fn continuous_batching_is_token_exact() {
         let m = model();
-        let q = ServeQueue::new();
         // 10 requests, prompt lengths 1..=22 (some beyond max_seq=16 →
         // clipped), generation lengths 3..=27 (several past the window →
         // slides); staggered lengths force mid-flight joins and leaves.
@@ -463,37 +662,43 @@ mod tests {
             let max_new_tokens = 3 + ((off * 11) % 25);
             reqs.push(Request { id, prompt, max_new_tokens });
         }
-        for r in &reqs {
-            q.submit(r.clone());
-        }
-        q.close();
-        // one engine, 3 slots, 10 requests → continuous mid-flight
-        // admission pressure the whole run
-        serve(&m, &q, 1, 3);
-        let responses = q.drain();
-        assert_eq!(responses.len(), reqs.len());
-        for (resp, req) in responses.iter().zip(reqs.iter()) {
-            assert_eq!(resp.id, req.id);
-            let want = direct(&m, &req.prompt, req.max_new_tokens);
-            assert_eq!(
-                resp.tokens,
-                want,
-                "request {} diverged from sequential greedy decode",
-                req.id
+        for chunk in [1usize, 3, DEFAULT_PREFILL_CHUNK, usize::MAX] {
+            let q = ServeQueue::new();
+            for r in &reqs {
+                q.submit(r.clone());
+            }
+            q.close();
+            // one engine, 3 slots, 10 requests → continuous mid-flight
+            // admission pressure the whole run
+            serve_config(
+                &m,
+                &q,
+                1,
+                ServeConfig::new(3, KvCacheKind::F32).with_prefill_chunk(chunk),
             );
+            let responses = q.drain();
+            assert_eq!(responses.len(), reqs.len());
+            for (resp, req) in responses.iter().zip(reqs.iter()) {
+                assert_eq!(resp.id, req.id);
+                let want = direct(&m, &req.prompt, req.max_new_tokens);
+                assert_eq!(
+                    resp.tokens, want,
+                    "request {} diverged from sequential greedy decode at chunk {}",
+                    req.id, chunk
+                );
+            }
         }
     }
 
     /// Continuous batching over the **quantized** KV arena must be
     /// token-exact versus sequential greedy decode on that same
     /// backend — the serving guarantee survives the integer attention
-    /// datapath.
+    /// datapath and chunked admission.
     #[test]
     fn quant_kv_serving_matches_quant_sequential() {
         use crate::model::KvQuantSpec;
         let m = model();
         let kind = KvCacheKind::Quant(KvQuantSpec::int8());
-        let q = ServeQueue::new();
         let reqs: Vec<Request> = (0..6u64)
             .map(|id| {
                 let off = id as usize;
@@ -505,23 +710,63 @@ mod tests {
                 }
             })
             .collect();
-        for r in &reqs {
-            q.submit(r.clone());
+        for chunk in [2usize, usize::MAX] {
+            let q = ServeQueue::new();
+            for r in &reqs {
+                q.submit(r.clone());
+            }
+            q.close();
+            serve_config(&m, &q, 1, ServeConfig::new(3, kind).with_prefill_chunk(chunk));
+            let responses = q.drain();
+            assert_eq!(responses.len(), reqs.len());
+            for (resp, req) in responses.iter().zip(reqs.iter()) {
+                let clipped = m.clip_to_window(&req.prompt);
+                let want = m.generate_greedy_with(&clipped, req.max_new_tokens, kind);
+                assert_eq!(
+                    resp.tokens,
+                    want[clipped.len()..],
+                    "request {} diverged from sequential quant-KV decode at chunk {}",
+                    req.id,
+                    chunk
+                );
+            }
         }
-        q.close();
-        serve_with(&m, &q, 1, 3, kind);
-        let responses = q.drain();
-        assert_eq!(responses.len(), reqs.len());
-        for (resp, req) in responses.iter().zip(reqs.iter()) {
-            let clipped = m.clip_to_window(&req.prompt);
-            let want = m.generate_greedy_with(&clipped, req.max_new_tokens, kind);
-            assert_eq!(
-                resp.tokens,
-                want[clipped.len()..],
-                "request {} diverged from sequential quant-KV decode",
-                req.id
-            );
+    }
+
+    /// The interleaving itself: while a long prompt is admitted with a
+    /// small chunk, already-decoding sequences keep emitting — the
+    /// admission can no longer block the batch head-of-line.
+    #[test]
+    fn prefill_chunks_interleave_with_decode() {
+        let m = model();
+        let cfg = ServeConfig::new(2, KvCacheKind::F32).with_prefill_chunk(2);
+        let mut eng = StepEngine::new(&m, cfg);
+        // sequence A: short prompt, decoding after 1 step
+        eng.admit(Request { id: 0, prompt: vec![1, 2], max_new_tokens: 12 }, Instant::now());
+        eng.step(); // A's whole prompt (2 ≤ chunk)
+        assert_eq!(eng.prefilling(), 0);
+        // sequence B: 15-token prompt → 8 chunked steps at chunk 2
+        let prompt_b: Vec<u16> = (0..15).map(|i| (i % 32) as u16).collect();
+        eng.admit(Request { id: 1, prompt: prompt_b.clone(), max_new_tokens: 3 }, Instant::now());
+        let mut a_tokens_during_b_prefill = 0usize;
+        while eng.prefilling() > 0 {
+            eng.step();
+            let a = eng.active.iter().find(|s| s.id == 0).unwrap();
+            a_tokens_during_b_prefill = a.emitted.len();
         }
+        assert!(
+            a_tokens_during_b_prefill >= 5,
+            "decoder A must keep emitting while B's prompt trickles in \
+             (got {a_tokens_during_b_prefill} tokens)"
+        );
+        // and both finish token-exact
+        while eng.has_work() {
+            eng.step();
+        }
+        let mut done = eng.take_finished();
+        done.sort_by_key(|r| r.id);
+        assert_eq!(done[0].tokens, direct(&m, &[1, 2], 12));
+        assert_eq!(done[1].tokens, direct(&m, &prompt_b, 3));
     }
 
     #[test]
@@ -553,13 +798,20 @@ mod tests {
     #[test]
     fn generation_past_window_slides() {
         let m = model();
-        let q = ServeQueue::new();
-        q.submit(Request { id: 0, prompt: vec![1, 2], max_new_tokens: 30 });
-        q.close();
-        serve(&m, &q, 1, 1);
-        let r = q.drain();
-        assert_eq!(r[0].tokens.len(), 30, "generation must continue past max_seq");
-        assert_eq!(r[0].tokens, direct(&m, &[1, 2], 30));
+        for chunk in [3usize, usize::MAX] {
+            let q = ServeQueue::new();
+            q.submit(Request { id: 0, prompt: vec![1, 2], max_new_tokens: 30 });
+            q.close();
+            serve_config(
+                &m,
+                &q,
+                1,
+                ServeConfig::new(1, KvCacheKind::F32).with_prefill_chunk(chunk),
+            );
+            let r = q.drain();
+            assert_eq!(r[0].tokens.len(), 30, "generation must continue past max_seq");
+            assert_eq!(r[0].tokens, direct(&m, &[1, 2], 30), "chunk {chunk}");
+        }
     }
 
     #[test]
@@ -570,12 +822,15 @@ mod tests {
                 tokens: vec![0; 2],
                 queued_s: 0.0,
                 gen_s: (i + 1) as f64 / 100.0,
+                ttft_s: (i + 1) as f64 / 200.0,
                 overflow_events: i % 5,
             })
             .collect();
         let s = ServeStats::from_responses(&resp, 1.0);
         assert!((s.p50_latency_s - 0.5).abs() < 0.02);
         assert!((s.p99_latency_s - 0.99).abs() < 0.02);
+        assert!((s.p50_ttft_s - 0.25).abs() < 0.02);
+        assert!((s.p99_ttft_s - 0.495).abs() < 0.02);
         assert_eq!(s.total_tokens, 200);
         // per-request counts are disjoint, so the total is their sum
         assert_eq!(s.overflow_events, (0..100u64).map(|i| i % 5).sum::<u64>());

@@ -305,7 +305,9 @@ fn cmd_sensitivity(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    use axe::coordinator::serve::{serve_with, Request, ServeQueue, ServeStats};
+    use axe::coordinator::serve::{
+        serve_config, Request, ServeConfig, ServeQueue, ServeStats, DEFAULT_PREFILL_CHUNK,
+    };
     use axe::model::{KvArena, KvCacheKind, KvQuantSpec};
     let model_name = args.str_or("model", "pico-160k");
     let mut model = load_lm(&model_name)?;
@@ -349,6 +351,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let new_tokens = args.usize_or("tokens", 24);
     let workers = args.usize_or("workers", 1);
     let max_batch = args.usize_or("max-batch", 4);
+    // --prefill-chunk N: per-step prefill chunk size / shared token
+    // budget (0 = unchunked whole-prompt admission). Token streams are
+    // bit-identical for every value; small chunks cut time-to-first-
+    // token under load at the cost of more steps per prompt.
+    let prefill_chunk = match args.usize_or("prefill-chunk", DEFAULT_PREFILL_CHUNK) {
+        0 => usize::MAX,
+        c => c,
+    };
     let queue = ServeQueue::new();
     for id in 0..n_requests as u64 {
         let start = (id as usize * 37) % (val.len() - seq);
@@ -361,7 +371,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     queue.close();
     let ovf_before = model.overflow_events();
     let t0 = std::time::Instant::now();
-    serve_with(&model, &queue, workers, max_batch, kind);
+    serve_config(
+        &model,
+        &queue,
+        workers,
+        ServeConfig::new(max_batch, kind).with_prefill_chunk(prefill_chunk),
+    );
     let responses = queue.drain();
     let mut stats = ServeStats::from_responses(&responses, t0.elapsed().as_secs_f64());
     stats.arena_bytes = KvArena::footprint(&model.cfg, max_batch, kind);
@@ -371,6 +386,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("throughput    : {:.1} tok/s", stats.tokens_per_s);
     println!("latency p50   : {:.1} ms", stats.p50_latency_s * 1e3);
     println!("latency p99   : {:.1} ms", stats.p99_latency_s * 1e3);
+    println!(
+        "ttft p50/p99  : {:.1} / {:.1} ms (prefill chunk {})",
+        stats.p50_ttft_s * 1e3,
+        stats.p99_ttft_s * 1e3,
+        if prefill_chunk == usize::MAX { "off".to_string() } else { prefill_chunk.to_string() }
+    );
     println!("mean queue    : {:.1} ms", stats.mean_queue_s * 1e3);
     println!(
         "kv arena      : {} B per engine ({:.1}% of the {} B f32 arena)",

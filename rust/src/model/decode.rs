@@ -8,11 +8,16 @@
 //! The serving engine decodes **many sequences per kernel call**:
 //! [`KvArena`] holds a fixed number of slots (one in-flight sequence
 //! each, with independent lengths), and
-//! [`Transformer::decode_step_batch_scratch`] stacks the current token
-//! of every scheduled slot into one batched linear call per layer —
-//! quantized layers amortize the fused qgemm kernel across the whole
-//! in-flight batch. Attention stays ragged: each slot attends over its
-//! own cached positions only.
+//! [`Transformer::decode_step_ragged_scratch`] stacks a [`RowGroup`]
+//! per scheduled slot — a 1-row decode step or a multi-row **prefill
+//! chunk**, mixed freely in one call — into one batched linear call
+//! per layer, so quantized layers amortize the fused qgemm kernel
+//! across decode rows *and* admission prefill chunks at once.
+//! Attention stays ragged: each group attends over its own slot's
+//! cached positions (plus its own just-appended chunk rows, causally)
+//! only. [`Transformer::decode_step_batch_scratch`] is the
+//! all-1-row-groups wrapper; [`Transformer::prefill_slot_scratch`] the
+//! single-group one.
 //!
 //! The `_scratch` entry points are the hot path: every operand buffer
 //! (activations, quantized codes, attention panels, overflow counters,
@@ -56,9 +61,25 @@
 //! attention events lived on a separate arena-side counter).
 
 use super::kvquant::{KvCacheKind, QuantKv};
-use super::layers::{attend_one_query, attend_one_query_quant};
+use super::layers::{attend_chunk, attend_chunk_quant};
 use super::scratch::DecodeScratch;
 use super::transformer::{Transformer, TransformerConfig};
+
+/// One **row group** of a ragged decode step: `len` consecutive rows of
+/// the step's flat token slice (starting at `start`), appended to
+/// `slot` at consecutive positions beginning at the slot's current
+/// length. A decode row is a 1-row group; a prefill chunk is a
+/// multi-row group. Groups tile the token slice in order and name
+/// pairwise-distinct slots.
+#[derive(Clone, Copy, Debug)]
+pub struct RowGroup {
+    /// Arena slot the group's rows are appended to.
+    pub slot: usize,
+    /// First row of the group in the step's flat token slice.
+    pub start: usize,
+    /// Number of consecutive rows (≥ 1).
+    pub len: usize,
+}
 
 /// Multi-sequence key/value arena: `slots` independent sequences, each
 /// owning a fixed `[max_seq × d]` region per layer. Slots are
@@ -247,26 +268,31 @@ impl KvArena {
         }
     }
 
-    /// Write one position's K/V rows into a slot — raw copy on the f32
-    /// backend, quantize-at-append on the quantized backend.
+    /// Write a chunk of `n` consecutive positions' K/V rows into a slot
+    /// starting at `pos` — one bulk copy on the f32 backend,
+    /// quantize-at-append per position on the quantized backend
+    /// ([`QuantKv::append_rows`]). `n == 1` is the decode-row case.
     #[inline]
-    fn append_kv_at(
+    fn append_kv_rows_at(
         &mut self,
         layer: usize,
         slot: usize,
         pos: usize,
-        k_row: &[f32],
-        v_row: &[f32],
+        n: usize,
+        k_rows: &[f32],
+        v_rows: &[f32],
     ) {
-        debug_assert!(pos < self.max_seq);
+        debug_assert!(pos + n <= self.max_seq);
         let (d, max_seq) = (self.d, self.max_seq);
+        debug_assert_eq!(k_rows.len(), n * d);
+        debug_assert_eq!(v_rows.len(), n * d);
         match &mut self.store {
             KvStore::F32 { k, v } => {
                 let at = (slot * max_seq + pos) * d;
-                k[layer][at..at + d].copy_from_slice(k_row);
-                v[layer][at..at + d].copy_from_slice(v_row);
+                k[layer][at..at + n * d].copy_from_slice(k_rows);
+                v[layer][at..at + n * d].copy_from_slice(v_rows);
             }
-            KvStore::Quant(q) => q.append_row(layer, slot, pos, k_row, v_row),
+            KvStore::Quant(q) => q.append_rows(layer, slot, pos, n, k_rows, v_rows),
         }
     }
 
@@ -368,21 +394,18 @@ impl Transformer {
         scratch.step.logits[..tokens.len() * self.cfg.vocab].to_vec()
     }
 
-    /// The batched decode step over a caller-owned workspace — the
-    /// serving hot path. Every linear runs one
-    /// [`super::Linear::forward_rows_scratch`] call over the whole
-    /// batch (the fused qgemm kernel for quantized layers); attention
-    /// is ragged — slot `b` attends over its own `len(slots[b]) + 1`
-    /// cached positions at its own absolute position, on the arena's
-    /// backend. Each output row is bit-identical to decoding that
-    /// sequence alone, and `row_ovf[b]` is incremented by exactly the
-    /// overflow events row `b` triggered (the serving engine threads
-    /// per-request counters through here).
+    /// The batched decode step over a caller-owned workspace — one
+    /// 1-row [`RowGroup`] per scheduled sequence through
+    /// [`Transformer::decode_step_ragged_scratch`]. Each output row is
+    /// bit-identical to decoding that sequence alone, and `row_ovf[b]`
+    /// is incremented by exactly the overflow events row `b` triggered
+    /// (the serving engine threads per-request counters through here).
     ///
     /// The step's logits land in `scratch.step.logits[..b * vocab]`
     /// (row-major, one row per scheduled sequence) — read them from the
     /// workspace; nothing is allocated or returned. With a warm
-    /// workspace the whole step performs zero heap allocations.
+    /// workspace the whole step performs zero heap allocations (the
+    /// group list lives in a reused workspace buffer).
     pub fn decode_step_batch_scratch(
         &self,
         tokens: &[u16],
@@ -392,115 +415,187 @@ impl Transformer {
         scratch: &mut DecodeScratch,
     ) {
         assert_eq!(tokens.len(), slots.len(), "one slot per token");
-        assert_eq!(row_ovf.len(), tokens.len(), "one overflow counter per row");
-        assert!(!tokens.is_empty(), "empty decode batch");
+        let mut groups = std::mem::take(&mut scratch.groups_buf);
+        groups.clear();
+        groups.extend(
+            slots.iter().enumerate().map(|(i, &slot)| RowGroup { slot, start: i, len: 1 }),
+        );
+        self.decode_step_ragged_scratch(tokens, &groups, arena, row_ovf, scratch);
+        scratch.groups_buf = groups;
+    }
+
+    /// The **ragged** decode step — the serving hot path since chunked
+    /// prefill: every scheduled row group (a 1-row decode step or a
+    /// multi-row prefill chunk, mixed freely in one call) rides the
+    /// same batched kernel dispatches. Every linear runs one
+    /// [`super::Linear::forward_rows_scratch`] call over **all** rows
+    /// of the step (the fused qgemm kernel for quantized layers), so
+    /// prefill chunks amortize the kernel across the in-flight decode
+    /// batch instead of blocking it. Attention stays ragged per group:
+    /// chunk row `i` attends causally over its slot's cached prefix
+    /// plus chunk rows `0..=i` ([`attend_chunk`] /
+    /// [`attend_chunk_quant`]), on the arena's backend.
+    ///
+    /// **Token-exactness:** every row's arithmetic (embedding at its
+    /// absolute position, row-independent linears, attention over its
+    /// own slot only) is identical no matter how rows are grouped into
+    /// chunks or batched with other sequences — so any chunked schedule
+    /// reproduces sequential decode bit for bit (tested in
+    /// `tests/chunked_prefill.rs`).
+    ///
+    /// **Attribution:** `group_ovf[g]` is incremented by exactly the
+    /// integer-datapath overflow events group `g`'s rows triggered
+    /// (linear rows + its own attention matmuls) — disjoint across
+    /// groups and invariant to step composition.
+    ///
+    /// One logits row per **group** (its last row — the only one a
+    /// scheduler can ever sample from) lands in
+    /// `scratch.step.logits[..groups.len() * vocab]`.
+    pub fn decode_step_ragged_scratch(
+        &self,
+        tokens: &[u16],
+        groups: &[RowGroup],
+        arena: &mut KvArena,
+        group_ovf: &mut [u64],
+        scratch: &mut DecodeScratch,
+    ) {
+        assert!(!groups.is_empty(), "empty ragged step");
+        assert_eq!(group_ovf.len(), groups.len(), "one counter per group");
         assert_eq!(arena.d, self.cfg.d_model);
-        let b = tokens.len();
+        let n = tokens.len();
+        let g_n = groups.len();
         let d = self.cfg.d_model;
         let d_ff = self.cfg.d_ff;
         let vocab = self.cfg.vocab;
-        for (i, &s) in slots.iter().enumerate() {
-            assert!(arena.live[s], "slot {s} not allocated");
-            assert!(!arena.is_full(s), "KV slot {s} full (max_seq {})", arena.max_seq);
+        let mut cursor = 0usize;
+        for (gi, g) in groups.iter().enumerate() {
+            assert!(g.len >= 1, "group {gi} is empty");
+            assert_eq!(g.start, cursor, "groups must tile the token slice in order");
+            cursor += g.len;
+            assert!(arena.live[g.slot], "slot {} not allocated", g.slot);
+            assert!(
+                arena.len(g.slot) + g.len <= arena.max_seq,
+                "group {gi} overflows KV slot {} ({} + {} > max_seq {})",
+                g.slot,
+                arena.len(g.slot),
+                g.len,
+                arena.max_seq
+            );
             // hard assert: a doubled slot would append twice at one
-            // position and advance the length by 2, silently corrupting
-            // the sequence (batch widths are small, the scan is cheap)
-            assert!(!slots[..i].contains(&s), "slot {s} scheduled twice in one step");
+            // position and advance the length twice, silently corrupting
+            // the sequence (step widths are small, the scan is cheap)
+            assert!(
+                !groups[..gi].iter().any(|p| p.slot == g.slot),
+                "slot {} scheduled twice in one step",
+                g.slot
+            );
         }
+        assert_eq!(cursor, n, "tokens beyond the last group");
 
-        let DecodeScratch { lin, attn, step } = scratch;
-        step.ensure(b, b, d, d_ff, vocab);
+        let DecodeScratch { lin, attn, step, .. } = scratch;
+        step.ensure(n, g_n, d, d_ff, vocab);
         // Live-size views over the grow-only step buffers; everything
-        // below operates on exactly b rows.
-        let h = &mut step.h[..b * d];
-        let ln_out = &mut step.ln_out[..b * d];
-        let q = &mut step.q[..b * d];
-        let k_new = &mut step.k_new[..b * d];
-        let v_new = &mut step.v_new[..b * d];
-        let mix = &mut step.mix[..b * d];
-        let attn_out = &mut step.attn_out[..b * d];
-        let ff = &mut step.ff[..b * d_ff];
-        let ff_out = &mut step.ff_out[..b * d];
-        let logits = &mut step.logits[..b * vocab];
+        // below operates on exactly n rows (g_n logit rows).
+        let h = &mut step.h[..n * d];
+        let ln_out = &mut step.ln_out[..n * d];
+        let q = &mut step.q[..n * d];
+        let k_new = &mut step.k_new[..n * d];
+        let v_new = &mut step.v_new[..n * d];
+        let mix = &mut step.mix[..n * d];
+        let attn_out = &mut step.attn_out[..n * d];
+        let ff = &mut step.ff[..n * d_ff];
+        let ff_out = &mut step.ff_out[..n * d];
+        let row_ovf = &mut step.row_ovf[..n];
+        row_ovf.fill(0);
 
-        // token + absolute positional embedding per row
-        for (r, (&tok, &slot)) in tokens.iter().zip(slots.iter()).enumerate() {
-            let e = &self.embed[(tok as usize) * d..(tok as usize + 1) * d];
-            let pos = arena.len(slot);
-            let p = &self.pos[pos * d..(pos + 1) * d];
-            for i in 0..d {
-                h[r * d + i] = e[i] + p[i];
+        // token + absolute positional embedding: chunk row i of a group
+        // sits at its slot's position len(slot) + i
+        for g in groups {
+            let pos0 = arena.len(g.slot);
+            for i in 0..g.len {
+                let r = g.start + i;
+                let tok = tokens[r] as usize;
+                let e = &self.embed[tok * d..(tok + 1) * d];
+                let p = &self.pos[(pos0 + i) * d..(pos0 + i + 1) * d];
+                for j in 0..d {
+                    h[r * d + j] = e[j] + p[j];
+                }
             }
         }
 
         let mut attn_total = 0u64;
         for (bi, blk) in self.blocks.iter().enumerate() {
-            for r in 0..b {
+            for r in 0..n {
                 blk.ln1.forward_row(&h[r * d..(r + 1) * d], &mut ln_out[r * d..(r + 1) * d]);
             }
-            blk.wq.forward_rows_scratch(ln_out, b, q, row_ovf, lin);
-            blk.wk.forward_rows_scratch(ln_out, b, k_new, row_ovf, lin);
-            blk.wv.forward_rows_scratch(ln_out, b, v_new, row_ovf, lin);
-            for (r, &slot) in slots.iter().enumerate() {
-                let pos = arena.len(slot);
-                arena.append_kv_at(
+            blk.wq.forward_rows_scratch(ln_out, n, q, row_ovf, lin);
+            blk.wk.forward_rows_scratch(ln_out, n, k_new, row_ovf, lin);
+            blk.wv.forward_rows_scratch(ln_out, n, v_new, row_ovf, lin);
+            for g in groups {
+                let pos0 = arena.len(g.slot);
+                arena.append_kv_rows_at(
                     bi,
-                    slot,
-                    pos,
-                    &k_new[r * d..(r + 1) * d],
-                    &v_new[r * d..(r + 1) * d],
+                    g.slot,
+                    pos0,
+                    g.len,
+                    &k_new[g.start * d..(g.start + g.len) * d],
+                    &v_new[g.start * d..(g.start + g.len) * d],
                 );
             }
-            // ragged single-query attention: each row over its own slot,
-            // on the arena's backend, all through one reused workspace
-            for (r, &slot) in slots.iter().enumerate() {
-                let t_len = arena.len(slot) + 1;
-                let qrow = &q[r * d..(r + 1) * d];
-                let orow = &mut mix[r * d..(r + 1) * d];
+            // ragged causal attention: each group over its own slot
+            // only (prefix + its just-appended chunk rows), on the
+            // arena's backend, all through one reused workspace
+            for g in groups {
+                let t0 = arena.len(g.slot);
+                let qrows = &q[g.start * d..(g.start + g.len) * d];
+                let orows = &mut mix[g.start * d..(g.start + g.len) * d];
                 match &arena.store {
                     KvStore::F32 { k, v } => {
-                        let base = slot * arena.max_seq * d;
-                        let kc = &k[bi][base..base + t_len * d];
-                        let vc = &v[bi][base..base + t_len * d];
-                        attend_one_query(qrow, kc, vc, t_len, d, self.cfg.n_heads, attn, orow);
+                        let base = g.slot * arena.max_seq * d;
+                        let kc = &k[bi][base..base + (t0 + g.len) * d];
+                        let vc = &v[bi][base..base + (t0 + g.len) * d];
+                        attend_chunk(qrows, kc, vc, t0, g.len, d, self.cfg.n_heads, attn, orows);
                     }
                     KvStore::Quant(qkv) => {
                         let spec = qkv.spec;
-                        let ovf = attend_one_query_quant(
-                            qrow,
-                            &qkv.slot_view(bi, slot),
-                            t_len,
+                        let ovf = attend_chunk_quant(
+                            qrows,
+                            &qkv.slot_view(bi, g.slot),
+                            t0,
+                            g.len,
                             d,
                             self.cfg.n_heads,
                             &spec,
                             attn,
-                            orow,
+                            orows,
                         );
                         if ovf > 0 {
-                            row_ovf[r] += ovf;
+                            // a chunk belongs entirely to one request;
+                            // the group fold below picks this up
+                            row_ovf[g.start] += ovf;
                             attn_total += ovf;
                         }
                     }
                 }
             }
-            blk.wo.forward_rows_scratch(mix, b, attn_out, row_ovf, lin);
+            blk.wo.forward_rows_scratch(mix, n, attn_out, row_ovf, lin);
             if !self.cfg.parallel_residual {
-                for i in 0..b * d {
+                for i in 0..n * d {
                     h[i] += attn_out[i];
                 }
             }
-            for r in 0..b {
+            for r in 0..n {
                 blk.ln2.forward_row(&h[r * d..(r + 1) * d], &mut ln_out[r * d..(r + 1) * d]);
             }
-            blk.fc1.forward_rows_scratch(ln_out, b, ff, row_ovf, lin);
+            blk.fc1.forward_rows_scratch(ln_out, n, ff, row_ovf, lin);
             self.cfg.act.apply_vec(ff);
-            blk.fc2.forward_rows_scratch(ff, b, ff_out, row_ovf, lin);
+            blk.fc2.forward_rows_scratch(ff, n, ff_out, row_ovf, lin);
             if self.cfg.parallel_residual {
-                for i in 0..b * d {
+                for i in 0..n * d {
                     h[i] += attn_out[i] + ff_out[i];
                 }
             } else {
-                for i in 0..b * d {
+                for i in 0..n * d {
                     h[i] += ff_out[i];
                 }
             }
@@ -510,13 +605,25 @@ impl Transformer {
             // overflow counter next to the quantized-linear events
             self.add_attention_overflows(attn_total);
         }
-        for &slot in slots {
-            arena.advance(slot, 1);
+        for g in groups {
+            arena.advance(g.slot, g.len);
         }
-        for r in 0..b {
-            self.ln_f.forward_row(&h[r * d..(r + 1) * d], &mut ln_out[r * d..(r + 1) * d]);
+        // per-group attribution: fold the kernel's per-row counts
+        for (gi, g) in groups.iter().enumerate() {
+            group_ovf[gi] += row_ovf[g.start..g.start + g.len].iter().sum::<u64>();
         }
-        self.head.forward_rows_scratch(&ln_out[..b * d], b, logits, lin);
+        // one logits row per group, from its last row: gather the
+        // final-norm rows contiguously, one head GEMM over all groups
+        for (gi, g) in groups.iter().enumerate() {
+            let r = g.start + g.len - 1;
+            self.ln_f.forward_row(&h[r * d..(r + 1) * d], &mut ln_out[gi * d..(gi + 1) * d]);
+        }
+        self.head.forward_rows_scratch(
+            &ln_out[..g_n * d],
+            g_n,
+            &mut step.logits[..g_n * vocab],
+            lin,
+        );
     }
 
     /// Prefill: push a whole prompt through one cache slot, returning
@@ -545,16 +652,15 @@ impl Transformer {
         scratch.step.logits[..self.cfg.vocab].to_vec()
     }
 
-    /// Prefill over a caller-owned workspace. On an empty slot this
-    /// runs **batched**: every linear processes the whole prompt in one
-    /// [`super::Linear::forward_rows_scratch`] call (the fused qgemm
-    /// kernel for quantized layers) and causal attention mixes all
-    /// positions — through the float helper on the f32 backend, or
-    /// position-by-position over the just-appended codes on the
-    /// quantized backend (the same arithmetic decode uses, so
-    /// prefill-then-decode equals pure decode bit for bit). On a
-    /// non-empty slot it falls back to token-by-token decoding over the
-    /// existing prefix.
+    /// Prefill over a caller-owned workspace — the **1-group special
+    /// case** of [`Transformer::decode_step_ragged_scratch`]: the whole
+    /// prompt rides one multi-row [`RowGroup`], so every linear
+    /// processes it in one [`super::Linear::forward_rows_scratch`] call
+    /// (the fused qgemm kernel for quantized layers) and causal
+    /// attention runs position by position over the just-appended
+    /// K/V — exactly the arithmetic decode uses, so prefill-then-decode
+    /// equals pure decode bit for bit, on an empty **or** partially
+    /// filled slot.
     ///
     /// The final position's logits land in
     /// `scratch.step.logits[..vocab]`; overflow events are accumulated
@@ -568,119 +674,14 @@ impl Transformer {
         scratch: &mut DecodeScratch,
     ) {
         assert!(!tokens.is_empty());
-        assert!(arena.live[slot], "slot {slot} not allocated");
-        if !arena.is_empty(slot) {
-            let mut row = [0u64; 1];
-            for &t in tokens {
-                row[0] = 0;
-                self.decode_step_batch_scratch(&[t], &[slot], arena, &mut row, scratch);
-                *ovf += row[0];
-            }
-            return;
-        }
-        assert_eq!(arena.d, self.cfg.d_model);
-        let d = self.cfg.d_model;
-        let d_ff = self.cfg.d_ff;
-        let vocab = self.cfg.vocab;
-        let seq = tokens.len();
-        assert!(seq <= arena.max_seq, "prompt longer than the context window");
-
-        let DecodeScratch { lin, attn, step } = scratch;
-        step.ensure(seq, 1, d, d_ff, vocab);
-        let h = &mut step.h[..seq * d];
-        let ln_out = &mut step.ln_out[..seq * d];
-        let q = &mut step.q[..seq * d];
-        let k_new = &mut step.k_new[..seq * d];
-        let v_new = &mut step.v_new[..seq * d];
-        let mix = &mut step.mix[..seq * d];
-        let attn_out = &mut step.attn_out[..seq * d];
-        let ff = &mut step.ff[..seq * d_ff];
-        let ff_out = &mut step.ff_out[..seq * d];
-        let row_ovf = &mut step.row_ovf[..seq];
-        row_ovf.fill(0);
-
-        for (t, &tok) in tokens.iter().enumerate() {
-            let e = &self.embed[(tok as usize) * d..(tok as usize + 1) * d];
-            let p = &self.pos[t * d..(t + 1) * d];
-            for i in 0..d {
-                h[t * d + i] = e[i] + p[i];
-            }
-        }
-        let mut attn_total = 0u64;
-
-        for (bi, blk) in self.blocks.iter().enumerate() {
-            for t in 0..seq {
-                blk.ln1.forward_row(&h[t * d..(t + 1) * d], &mut ln_out[t * d..(t + 1) * d]);
-            }
-            blk.wq.forward_rows_scratch(ln_out, seq, q, row_ovf, lin);
-            blk.wk.forward_rows_scratch(ln_out, seq, k_new, row_ovf, lin);
-            blk.wv.forward_rows_scratch(ln_out, seq, v_new, row_ovf, lin);
-            for t in 0..seq {
-                arena.append_kv_at(
-                    bi,
-                    slot,
-                    t,
-                    &k_new[t * d..(t + 1) * d],
-                    &v_new[t * d..(t + 1) * d],
-                );
-            }
-            match &arena.store {
-                KvStore::F32 { .. } => {
-                    // float backend: causal attention over the f32
-                    // buffers (bit-identical to reading the slab back),
-                    // through the engine workspace
-                    let heads = self.cfg.n_heads;
-                    super::layers::attention(q, k_new, v_new, seq, d, heads, true, attn, mix);
-                }
-                KvStore::Quant(qkv) => {
-                    // quantized backend: every position attends over the
-                    // just-appended codes — exactly what decode does
-                    let spec = qkv.spec;
-                    for t in 0..seq {
-                        let o = attend_one_query_quant(
-                            &q[t * d..(t + 1) * d],
-                            &qkv.slot_view(bi, slot),
-                            t + 1,
-                            d,
-                            self.cfg.n_heads,
-                            &spec,
-                            attn,
-                            &mut mix[t * d..(t + 1) * d],
-                        );
-                        attn_total += o;
-                    }
-                }
-            }
-            blk.wo.forward_rows_scratch(mix, seq, attn_out, row_ovf, lin);
-            if !self.cfg.parallel_residual {
-                for i in 0..seq * d {
-                    h[i] += attn_out[i];
-                }
-            }
-            for t in 0..seq {
-                blk.ln2.forward_row(&h[t * d..(t + 1) * d], &mut ln_out[t * d..(t + 1) * d]);
-            }
-            blk.fc1.forward_rows_scratch(ln_out, seq, ff, row_ovf, lin);
-            self.cfg.act.apply_vec(ff);
-            blk.fc2.forward_rows_scratch(ff, seq, ff_out, row_ovf, lin);
-            if self.cfg.parallel_residual {
-                for i in 0..seq * d {
-                    h[i] += attn_out[i] + ff_out[i];
-                }
-            } else {
-                for i in 0..seq * d {
-                    h[i] += ff_out[i];
-                }
-            }
-        }
-        if attn_total > 0 {
-            self.add_attention_overflows(attn_total);
-        }
-        *ovf += row_ovf.iter().sum::<u64>() + attn_total;
-        arena.advance(slot, seq);
-        // logits for the final position only
-        self.ln_f.forward_row(&h[(seq - 1) * d..seq * d], &mut ln_out[..d]);
-        self.head.forward_rows_scratch(&ln_out[..d], 1, &mut step.logits[..vocab], lin);
+        assert!(
+            arena.len(slot) + tokens.len() <= arena.max_seq,
+            "prompt longer than the context window"
+        );
+        let group = [RowGroup { slot, start: 0, len: tokens.len() }];
+        let mut g_ovf = [0u64; 1];
+        self.decode_step_ragged_scratch(tokens, &group, arena, &mut g_ovf, scratch);
+        *ovf += g_ovf[0];
     }
 
     /// Prefill a whole prompt through a single-sequence cache.
@@ -1035,6 +1036,162 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// THE chunked-prefill kernel property: splitting a prompt into
+    /// arbitrary chunks across successive ragged steps must produce the
+    /// same cached K/V rows and the same final logits as one-shot
+    /// prefill — bit for bit, on both backends.
+    #[test]
+    fn chunked_prefill_matches_whole_prefill() {
+        for kind in [KvCacheKind::F32, KvCacheKind::Quant(KvQuantSpec::int8())] {
+            for parallel in [false, true] {
+                let m = model(parallel);
+                let vocab = m.cfg.vocab;
+                let prompt: Vec<u16> = vec![3, 1, 4, 1, 5, 9, 2, 6, 5, 3, 5];
+                // reference: whole-prompt prefill
+                let mut arena_w = KvArena::with_kind(&m, 1, kind);
+                let sw = arena_w.alloc().unwrap();
+                let mut ovf_w = 0u64;
+                let want = m.prefill_slot_counted(&prompt, sw, &mut arena_w, &mut ovf_w);
+                for chunks in [&[1usize, 7, 3][..], &[4, 4, 3], &[11], &[1; 11]] {
+                    let mut arena = KvArena::with_kind(&m, 1, kind);
+                    let slot = arena.alloc().unwrap();
+                    let mut scratch = DecodeScratch::new();
+                    let mut ovf = 0u64;
+                    let mut at = 0usize;
+                    for &c in chunks {
+                        let group = [RowGroup { slot, start: 0, len: c }];
+                        let mut g_ovf = [0u64; 1];
+                        m.decode_step_ragged_scratch(
+                            &prompt[at..at + c],
+                            &group,
+                            &mut arena,
+                            &mut g_ovf,
+                            &mut scratch,
+                        );
+                        ovf += g_ovf[0];
+                        at += c;
+                    }
+                    assert_eq!(
+                        &scratch.step.logits[..vocab],
+                        &want[..],
+                        "kind={kind:?} parallel={parallel} chunks={chunks:?}: logits diverge"
+                    );
+                    assert_eq!(ovf, ovf_w, "chunked overflow attribution diverges");
+                    for layer in 0..m.cfg.n_layers {
+                        for pos in 0..prompt.len() {
+                            assert_eq!(
+                                arena.kv_row(layer, slot, pos),
+                                arena_w.kv_row(layer, sw, pos),
+                                "layer {layer} pos {pos} cached rows diverge"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Mixing a prefill chunk with decode rows in ONE ragged step must
+    /// leave every sequence bit-identical to running it alone — the
+    /// interleaved-admission invariant the chunked serving engine
+    /// rests on.
+    #[test]
+    fn mixed_chunk_and_decode_step_is_exact() {
+        for kind in [KvCacheKind::F32, KvCacheKind::Quant(KvQuantSpec::int8())] {
+            let m = model(false);
+            let vocab = m.cfg.vocab;
+            let decode_seq: Vec<u16> = vec![1, 2, 3, 4, 5];
+            let chunk_prompt: Vec<u16> = vec![11, 12, 13, 14];
+            // references: each sequence alone
+            let mut solo = KvCache::with_kind(&m, kind);
+            let mut want_dec = Vec::new();
+            for &t in &decode_seq {
+                want_dec = m.decode_step(t, &mut solo);
+            }
+            let mut arena_p = KvArena::with_kind(&m, 1, kind);
+            let sp = arena_p.alloc().unwrap();
+            let want_chunk = m.prefill_slot(&chunk_prompt, sp, &mut arena_p);
+            // mixed: sequence A decodes 4 tokens, then its 5th decode row
+            // shares a ragged step with B's whole prompt as one chunk
+            let mut arena = KvArena::with_kind(&m, 2, kind);
+            let sa = arena.alloc().unwrap();
+            let sb = arena.alloc().unwrap();
+            let mut scratch = DecodeScratch::new();
+            let mut row = [0u64; 1];
+            for &t in &decode_seq[..4] {
+                row[0] = 0;
+                m.decode_step_batch_scratch(&[t], &[sa], &mut arena, &mut row, &mut scratch);
+            }
+            let mut tokens = vec![decode_seq[4]];
+            tokens.extend_from_slice(&chunk_prompt);
+            let groups = [
+                RowGroup { slot: sa, start: 0, len: 1 },
+                RowGroup { slot: sb, start: 1, len: chunk_prompt.len() },
+            ];
+            let mut g_ovf = [0u64; 2];
+            m.decode_step_ragged_scratch(&tokens, &groups, &mut arena, &mut g_ovf, &mut scratch);
+            assert_eq!(
+                &scratch.step.logits[..vocab],
+                &want_dec[..],
+                "kind={kind:?}: decode row diverged when sharing a step with a chunk"
+            );
+            assert_eq!(
+                &scratch.step.logits[vocab..2 * vocab],
+                &want_chunk[..],
+                "kind={kind:?}: chunk logits diverged when sharing a step with decode rows"
+            );
+            assert_eq!(arena.len(sa), 5);
+            assert_eq!(arena.len(sb), chunk_prompt.len());
+            for layer in 0..m.cfg.n_layers {
+                for pos in 0..chunk_prompt.len() {
+                    assert_eq!(
+                        arena.kv_row(layer, sb, pos),
+                        arena_p.kv_row(layer, sp, pos),
+                        "kind={kind:?} layer {layer} pos {pos}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Ragged-step guards: malformed group lists must be rejected.
+    #[test]
+    fn ragged_step_guards() {
+        let m = model(false);
+        let arena = KvArena::new(&m, 2);
+        // groups must tile the token slice
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut a = arena.clone();
+            let s = a.alloc().unwrap();
+            let groups = [RowGroup { slot: s, start: 1, len: 1 }];
+            let mut scratch = DecodeScratch::new();
+            m.decode_step_ragged_scratch(&[1, 2], &groups, &mut a, &mut [0], &mut scratch);
+        }));
+        assert!(r.is_err(), "a gap before the first group must be rejected");
+        // a chunk past the window must be rejected
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut a = arena.clone();
+            let s = a.alloc().unwrap();
+            let toks: Vec<u16> = (0..17).map(|i| i as u16).collect();
+            let groups = [RowGroup { slot: s, start: 0, len: 17 }];
+            let mut scratch = DecodeScratch::new();
+            m.decode_step_ragged_scratch(&toks, &groups, &mut a, &mut [0], &mut scratch);
+        }));
+        assert!(r.is_err(), "a chunk past the window must be rejected");
+        // one slot in two groups must be rejected
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut a = arena.clone();
+            let s = a.alloc().unwrap();
+            let groups = [
+                RowGroup { slot: s, start: 0, len: 1 },
+                RowGroup { slot: s, start: 1, len: 1 },
+            ];
+            let mut scratch = DecodeScratch::new();
+            m.decode_step_ragged_scratch(&[1, 2], &groups, &mut a, &mut [0, 0], &mut scratch);
+        }));
+        assert!(r.is_err(), "one slot in two groups must be rejected");
     }
 
     /// Unified accounting: attention overflow events on the quantized

@@ -319,6 +319,36 @@ impl QuantKv {
         }
     }
 
+    /// Quantize a **chunk** of `n` consecutive positions into a slot —
+    /// the ragged-step prefill append path. `k_rows`/`v_rows` are
+    /// `(n, d)` row-major; position `pos + i` receives row `i`.
+    /// Identical, row for row, to `n` calls of [`QuantKv::append_row`]
+    /// (each position's scales depend only on its own row), so chunked
+    /// and token-by-token appends fill the slab with the same bits.
+    pub fn append_rows(
+        &mut self,
+        layer: usize,
+        slot: usize,
+        pos: usize,
+        n: usize,
+        k_rows: &[f32],
+        v_rows: &[f32],
+    ) {
+        debug_assert_eq!(k_rows.len(), n * self.d);
+        debug_assert_eq!(v_rows.len(), n * self.d);
+        debug_assert!(pos + n <= self.max_seq);
+        let d = self.d;
+        for i in 0..n {
+            self.append_row(
+                layer,
+                slot,
+                pos + i,
+                &k_rows[i * d..(i + 1) * d],
+                &v_rows[i * d..(i + 1) * d],
+            );
+        }
+    }
+
     /// Read-only view of one slot at one layer (for the attention path).
     pub fn slot_view(&self, layer: usize, slot: usize) -> QuantKvSlot<'_> {
         QuantKvSlot {
@@ -597,6 +627,51 @@ mod tests {
                     row[i],
                     hat[i]
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn append_rows_chunk_equals_row_by_row() {
+        let mut rng = Rng::new(503);
+        let (d, h, max) = (16usize, 2usize, 10usize);
+        for spec in [KvQuantSpec::int8(), KvQuantSpec::int16()] {
+            let mut chunked = QuantKv::new(spec, 2, 2, max, d, h);
+            let mut single = QuantKv::new(spec, 2, 2, max, d, h);
+            // 3 existing positions, then a 4-row chunk at pos 3
+            let rows: Vec<f32> = (0..7 * d).map(|_| rng.normal() as f32).collect();
+            let vals: Vec<f32> = (0..7 * d).map(|_| rng.normal() as f32 * 2.0).collect();
+            for layer in 0..2 {
+                for pos in 0..3 {
+                    for kv in [&mut chunked, &mut single] {
+                        kv.append_row(
+                            layer,
+                            1,
+                            pos,
+                            &rows[pos * d..(pos + 1) * d],
+                            &vals[pos * d..(pos + 1) * d],
+                        );
+                    }
+                }
+                chunked.append_rows(layer, 1, 3, 4, &rows[3 * d..], &vals[3 * d..]);
+                for pos in 3..7 {
+                    single.append_row(
+                        layer,
+                        1,
+                        pos,
+                        &rows[pos * d..(pos + 1) * d],
+                        &vals[pos * d..(pos + 1) * d],
+                    );
+                }
+                for pos in 0..7 {
+                    let (a, b) = (chunked.slot_view(layer, 1), single.slot_view(layer, 1));
+                    assert_eq!(a.dequant_k_row(pos), b.dequant_k_row(pos), "k {spec:?} {pos}");
+                    assert_eq!(a.dequant_v_row(pos), b.dequant_v_row(pos), "v {spec:?} {pos}");
+                    for head in 0..h {
+                        assert_eq!(a.k_scale(pos, head), b.k_scale(pos, head));
+                        assert_eq!(a.v_scale(pos, head), b.v_scale(pos, head));
+                    }
+                }
             }
         }
     }

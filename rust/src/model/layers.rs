@@ -342,6 +342,83 @@ pub fn attend_one_query_quant(
     overflows
 }
 
+/// Causal attention of a multi-row **prefill chunk** over its own KV
+/// slot within a shared ragged step (f32 backend): row `i` of the chunk
+/// attends over the slot's `t0` pre-existing positions plus chunk rows
+/// `0..=i` — all of which were appended to the slab before this call.
+///
+/// `q_rows` is `(len, d)`; `kc`/`vc` are the slot's cached keys/values
+/// covering at least `t0 + len` positions (the chunk's own K/V
+/// included). Delegates every row to [`attend_one_query`], so a chunked
+/// prefill runs bit-for-bit the arithmetic of whole-prompt prefill and
+/// of token-by-token decode — the invariant chunked serving's
+/// token-exactness rests on.
+#[allow(clippy::too_many_arguments)]
+pub fn attend_chunk(
+    q_rows: &[f32],
+    kc: &[f32],
+    vc: &[f32],
+    t0: usize,
+    len: usize,
+    d: usize,
+    n_heads: usize,
+    scratch: &mut AttnScratch,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(q_rows.len(), len * d);
+    debug_assert_eq!(out.len(), len * d);
+    debug_assert!(kc.len() >= (t0 + len) * d && vc.len() >= (t0 + len) * d);
+    for i in 0..len {
+        let t_len = t0 + i + 1;
+        attend_one_query(
+            &q_rows[i * d..(i + 1) * d],
+            kc,
+            vc,
+            t_len,
+            d,
+            n_heads,
+            scratch,
+            &mut out[i * d..(i + 1) * d],
+        );
+    }
+}
+
+/// [`attend_chunk`] over a **quantized** KV slot: row `i` attends over
+/// the `t0 + i + 1` just-appended codes through
+/// [`attend_one_query_quant`] — exactly the arithmetic decode and
+/// whole-prompt prefill run. Returns the chunk's total accumulator
+/// overflow events (attribution is per chunk: a chunk belongs entirely
+/// to one request).
+#[allow(clippy::too_many_arguments)]
+pub fn attend_chunk_quant(
+    q_rows: &[f32],
+    kv: &QuantKvSlot<'_>,
+    t0: usize,
+    len: usize,
+    d: usize,
+    n_heads: usize,
+    spec: &KvQuantSpec,
+    scratch: &mut AttnScratch,
+    out: &mut [f32],
+) -> u64 {
+    debug_assert_eq!(q_rows.len(), len * d);
+    debug_assert_eq!(out.len(), len * d);
+    let mut overflows = 0u64;
+    for i in 0..len {
+        overflows += attend_one_query_quant(
+            &q_rows[i * d..(i + 1) * d],
+            kv,
+            t0 + i + 1,
+            d,
+            n_heads,
+            spec,
+            scratch,
+            &mut out[i * d..(i + 1) * d],
+        );
+    }
+    overflows
+}
+
 /// Reference implementation of [`attend_one_query_quant`]: the PR 3
 /// inner loop, kept verbatim as (a) the parity oracle the fast path is
 /// tested bit-for-bit against, and (b) the "before" baseline the
@@ -568,6 +645,62 @@ mod tests {
         let mut one = vec![0.0f32; d];
         attend_one_query(&q[(seq - 1) * d..], &k, &v, seq, d, heads, &mut scratch, &mut one);
         assert_eq!(&full[(seq - 1) * d..], &one[..]);
+    }
+
+    /// A chunk attending over a slot (prefix + its own rows) must be
+    /// bit-identical to issuing its rows as successive single queries —
+    /// on both the float and the quantized path. This is the primitive
+    /// the ragged chunked-prefill step rests on.
+    #[test]
+    fn chunk_attention_matches_per_query() {
+        let (d, h, max) = (16usize, 2usize, 12usize);
+        let mut rng = Rng::new(710);
+        // float path: t0 = 5 cached positions, then a 4-row chunk
+        let (t0, len) = (5usize, 4usize);
+        let mut k = vec![0.0f32; max * d];
+        let mut v = vec![0.0f32; max * d];
+        for x in k.iter_mut().chain(v.iter_mut()) {
+            *x = rng.normal() as f32;
+        }
+        let q_rows: Vec<f32> = (0..len * d).map(|_| rng.normal() as f32).collect();
+        let mut scratch = AttnScratch::new();
+        let mut chunk_out = vec![0.0f32; len * d];
+        attend_chunk(&q_rows, &k, &v, t0, len, d, h, &mut scratch, &mut chunk_out);
+        for i in 0..len {
+            let mut one = vec![0.0f32; d];
+            let qrow = &q_rows[i * d..(i + 1) * d];
+            attend_one_query(qrow, &k, &v, t0 + i + 1, d, h, &mut scratch, &mut one);
+            assert_eq!(&chunk_out[i * d..(i + 1) * d], &one[..], "float row {i}");
+        }
+        // quantized path, including a narrow overflowing register
+        for spec in [KvQuantSpec::int8(), KvQuantSpec::new(8, 8, Some(6))] {
+            let mut kv = QuantKv::new(spec, 1, 1, max, d, h);
+            for pos in 0..t0 + len {
+                let kr: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+                let vr: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+                kv.append_row(0, 0, pos, &kr, &vr);
+            }
+            let view = kv.slot_view(0, 0);
+            let mut got = vec![0.0f32; len * d];
+            let ovf_chunk =
+                attend_chunk_quant(&q_rows, &view, t0, len, d, h, &spec, &mut scratch, &mut got);
+            let mut ovf_rows = 0u64;
+            for i in 0..len {
+                let mut one = vec![0.0f32; d];
+                ovf_rows += attend_one_query_quant(
+                    &q_rows[i * d..(i + 1) * d],
+                    &view,
+                    t0 + i + 1,
+                    d,
+                    h,
+                    &spec,
+                    &mut scratch,
+                    &mut one,
+                );
+                assert_eq!(&got[i * d..(i + 1) * d], &one[..], "{spec:?} quant row {i}");
+            }
+            assert_eq!(ovf_chunk, ovf_rows, "{spec:?} chunk overflow count diverges");
+        }
     }
 
     /// THE scratch-path parity property: the gather/scratch fast path

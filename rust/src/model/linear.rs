@@ -21,26 +21,98 @@ use crate::accum::simulator::{AccumSpec, OverflowMode};
 use crate::linalg::qgemm;
 use crate::quant::{ActQuantizer, QuantResult};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+
+/// Lazily built f64 copy of a [`FloatLinear`]'s weights, valid while
+/// its recorded version matches the layer's mutation counter.
+#[derive(Clone, Debug, Default)]
+struct WidenedW {
+    /// Layer version this copy was widened from (0 = never built;
+    /// layer versions start at 1).
+    version: u64,
+    /// [out, in] row-major weights widened to f64.
+    fw: Vec<f64>,
+}
 
 /// Plain f32 linear layer, weights stored [out, in] row-major.
-#[derive(Clone, Debug)]
+///
+/// The batched forward runs a banded f64 GEMM over an f64 copy of the
+/// weights. That copy is **cached behind a mutation-bumped version**:
+/// the weight buffer is private and every in-place rescale goes through
+/// [`FloatLinear::w_mut`], which bumps `version` and thereby
+/// invalidates the cache — calibration (SmoothQuant / equalization)
+/// can still rewrite weights freely, while serving re-widens only when
+/// something actually changed instead of once per decode step.
+#[derive(Debug)]
 pub struct FloatLinear {
     pub in_dim: usize,
     pub out_dim: usize,
-    /// [out, in] row-major.
-    pub w: Vec<f32>,
+    /// [out, in] row-major — private so every mutation goes through
+    /// [`FloatLinear::w_mut`] and the widened cache can never go stale.
+    w: Vec<f32>,
     pub b: Vec<f32>,
+    /// Bumped by every [`FloatLinear::w_mut`] borrow.
+    version: u64,
+    cache: RwLock<WidenedW>,
+}
+
+impl Clone for FloatLinear {
+    fn clone(&self) -> FloatLinear {
+        FloatLinear {
+            in_dim: self.in_dim,
+            out_dim: self.out_dim,
+            w: self.w.clone(),
+            b: self.b.clone(),
+            version: self.version,
+            // a warm cache stays warm across clones
+            cache: RwLock::new(self.cache.read().unwrap().clone()),
+        }
+    }
 }
 
 impl FloatLinear {
     pub fn new(in_dim: usize, out_dim: usize, w: Vec<f32>, b: Vec<f32>) -> FloatLinear {
         assert_eq!(w.len(), in_dim * out_dim);
         assert_eq!(b.len(), out_dim);
-        FloatLinear { in_dim, out_dim, w, b }
+        FloatLinear { in_dim, out_dim, w, b, version: 1, cache: RwLock::new(WidenedW::default()) }
     }
 
     pub fn zeros(in_dim: usize, out_dim: usize) -> FloatLinear {
-        FloatLinear { in_dim, out_dim, w: vec![0.0; in_dim * out_dim], b: vec![0.0; out_dim] }
+        FloatLinear::new(in_dim, out_dim, vec![0.0; in_dim * out_dim], vec![0.0; out_dim])
+    }
+
+    /// The weights, [out, in] row-major.
+    pub fn w(&self) -> &[f32] {
+        &self.w
+    }
+
+    /// Mutable weights — the only mutation path. Bumps the version so
+    /// the next batched forward re-widens instead of serving a stale
+    /// f64 copy (tested below).
+    pub fn w_mut(&mut self) -> &mut [f32] {
+        self.version = self.version.wrapping_add(1);
+        &mut self.w
+    }
+
+    /// Read guard over the up-to-date widened weights, rebuilding them
+    /// under the write lock when the version moved. Steady-state
+    /// serving takes the read path only: no allocation, no copy.
+    fn widened(&self) -> std::sync::RwLockReadGuard<'_, WidenedW> {
+        {
+            let r = self.cache.read().unwrap();
+            if r.version == self.version {
+                return r;
+            }
+        }
+        {
+            let mut c = self.cache.write().unwrap();
+            if c.version != self.version {
+                c.fw.clear();
+                c.fw.extend(self.w.iter().map(|&x| x as f64));
+                c.version = self.version;
+            }
+        }
+        self.cache.read().unwrap()
     }
 
     /// y = W x + b for one input row.
@@ -75,16 +147,19 @@ impl FloatLinear {
     }
 
     /// [`FloatLinear::forward_rows`] over a caller-owned workspace:
-    /// activations and weights are widened into the scratch f64 buffers
-    /// and the GEMM lands in a scratch accumulator, so a warm workspace
-    /// makes the whole forward allocation-free.
+    /// activations are widened into the scratch f64 buffer and the GEMM
+    /// lands in a scratch accumulator, so a warm workspace makes the
+    /// whole forward allocation-free.
     ///
-    /// The weights are widened per call: `w` is a pub field that
-    /// calibration (equalization/smoothing) rescales in place, so a
-    /// cached f64 copy could go stale and corrupt logits. The widening
-    /// is one O(out·in) pass against the O(rows·out·in) GEMM, and a
-    /// cheaper rows==1 special case is ruled out — every row must be
-    /// computed identically at every batch size.
+    /// The weight operand comes from the layer's **widened cache**:
+    /// widening f32→f64 is exact, so the cached copy is bit-identical
+    /// to an in-call widening, and the mutation-bumped version
+    /// guarantees a calibration-time rescale (via
+    /// [`FloatLinear::w_mut`]) rebuilds it before the next forward —
+    /// serving drops the former once-per-step O(out·in) widening pass
+    /// without any staleness risk. A cheaper rows==1 special case
+    /// remains ruled out: every row must be computed identically at
+    /// every batch size.
     pub fn forward_rows_scratch(
         &self,
         xs: &[f32],
@@ -100,12 +175,10 @@ impl FloatLinear {
         for (dst, &src) in fa.iter_mut().zip(xs.iter()) {
             *dst = src as f64;
         }
-        let fw = &mut scratch.fw[..c * k];
-        for (dst, &src) in fw.iter_mut().zip(self.w.iter()) {
-            *dst = src as f64;
-        }
         let fy = &mut scratch.fy[..rows * c];
-        crate::linalg::gemm_bt_into(fa, fw, rows, k, c, fy);
+        let cache = self.widened();
+        crate::linalg::gemm_bt_into(fa, &cache.fw[..c * k], rows, k, c, fy);
+        drop(cache);
         for r in 0..rows {
             let yrow = &mut ys[r * c..(r + 1) * c];
             let arow = &fy[r * c..(r + 1) * c];
@@ -723,6 +796,46 @@ mod tests {
             fl.forward_rows(&xs[r * 48..(r + 1) * 48], 1, &mut alone);
             assert_eq!(&batched[r * 10..(r + 1) * 10], &alone[..], "row {r}");
         }
+    }
+
+    /// The widened-weight cache must be invisible (bit-identical to
+    /// per-call widening) AND must be invalidated by calibration-time
+    /// in-place mutation through `w_mut` — the dirty-flag contract.
+    #[test]
+    fn widened_weight_cache_invalidates_on_mutation() {
+        let fl = random_float_linear(24, 6, 140);
+        let mut rng = Rng::new(141);
+        let rows = 3;
+        let xs: Vec<f32> = (0..rows * 24).map(|_| rng.normal() as f32).collect();
+        let mut scratch = LinearScratch::new();
+        // warm the cache
+        let mut y_cold = vec![0.0f32; rows * 6];
+        fl.forward_rows_scratch(&xs, rows, &mut y_cold, &mut scratch);
+        let mut y_warm = vec![0.0f32; rows * 6];
+        fl.forward_rows_scratch(&xs, rows, &mut y_warm, &mut scratch);
+        assert_eq!(y_cold, y_warm, "warm cache must be bit-identical to the cold pass");
+        // mutate in place the way SmoothQuant/equalization do
+        let mut fl = fl;
+        for w in fl.w_mut() {
+            *w *= 2.0;
+        }
+        let mut y_mut = vec![0.0f32; rows * 6];
+        fl.forward_rows_scratch(&xs, rows, &mut y_mut, &mut scratch);
+        // reference: a fresh layer built from the mutated weights (no
+        // cache history at all)
+        let fresh = FloatLinear::new(24, 6, fl.w().to_vec(), fl.b.clone());
+        let mut y_fresh = vec![0.0f32; rows * 6];
+        fresh.forward_rows_scratch(&xs, rows, &mut y_fresh, &mut LinearScratch::new());
+        assert_eq!(
+            y_mut, y_fresh,
+            "mutation through w_mut must invalidate the widened cache"
+        );
+        assert_ne!(y_mut, y_warm, "doubled weights must change the output");
+        // a clone carries the (valid) cache and stays correct
+        let cloned = fl.clone();
+        let mut y_clone = vec![0.0f32; rows * 6];
+        cloned.forward_rows_scratch(&xs, rows, &mut y_clone, &mut scratch);
+        assert_eq!(y_clone, y_fresh);
     }
 
     #[test]

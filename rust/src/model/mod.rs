@@ -15,11 +15,11 @@ pub mod mlp;
 pub mod scratch;
 pub mod transformer;
 
-pub use decode::{argmax, KvArena, KvCache};
+pub use decode::{argmax, KvArena, KvCache, RowGroup};
 pub use kvquant::{KvCacheKind, KvQuantSpec};
 pub use layers::{
-    attend_one_query, attend_one_query_quant, attend_one_query_quant_ref, attention, softmax,
-    Activation, LayerNorm,
+    attend_chunk, attend_chunk_quant, attend_one_query, attend_one_query_quant,
+    attend_one_query_quant_ref, attention, softmax, Activation, LayerNorm,
 };
 pub use linear::{Datapath, FloatLinear, Linear, QuantLinear};
 pub use loader::{

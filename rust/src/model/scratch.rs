@@ -62,9 +62,10 @@ pub struct LinearScratch {
     pub xr: Vec<f32>,
     /// Float path: `rows * in_dim` activations widened to f64.
     pub fa: Vec<f64>,
-    /// Float path: `out_dim * in_dim` weights widened to f64.
-    pub fw: Vec<f64>,
-    /// Float path: `rows * out_dim` f64 accumulators.
+    /// Float path: `rows * out_dim` f64 accumulators. (The widened
+    /// weights live on the layer itself — see
+    /// [`super::linear::FloatLinear`]'s mutation-versioned cache — so
+    /// serving never re-widens an unchanged weight matrix.)
     pub fy: Vec<f64>,
 }
 
@@ -84,7 +85,6 @@ impl LinearScratch {
     /// Size the float-datapath buffers for a `rows`-row forward.
     pub fn ensure_float(&mut self, rows: usize, in_dim: usize, out_dim: usize) {
         grow(&mut self.fa, rows * in_dim);
-        grow(&mut self.fw, out_dim * in_dim);
         grow(&mut self.fy, rows * out_dim);
     }
 }
@@ -205,6 +205,10 @@ pub struct DecodeScratch {
     pub lin: LinearScratch,
     pub attn: AttnScratch,
     pub step: StepScratch,
+    /// Reused group list for the all-1-row-groups wrapper
+    /// (`decode_step_batch_scratch`), taken out for the duration of the
+    /// ragged call so the wrapper stays allocation-free in steady state.
+    pub(crate) groups_buf: Vec<super::decode::RowGroup>,
 }
 
 impl DecodeScratch {
@@ -215,12 +219,13 @@ impl DecodeScratch {
     }
 
     /// Workspace pre-sized for a model config and at most `max_rows`
-    /// stacked decode rows, so even the first step allocates nothing.
-    /// Prefill runs up to `max_seq` rows, so the activation buffers are
-    /// sized for the larger of the two. Linear buffers are sized to the
-    /// model's **actual** layer shapes — block linears are d↔d_ff and
-    /// the only vocab-wide layer is the d→vocab float head — not to
-    /// the max-in × max-out cross product, which no layer has.
+    /// stacked step rows, so even the first step allocates nothing.
+    /// Whole-prompt prefill runs up to `max_seq` rows, so the
+    /// activation buffers are sized for the larger of the two. Linear
+    /// buffers are sized to the model's **actual** layer shapes —
+    /// block linears are d↔d_ff and the only vocab-wide layer is the
+    /// d→vocab float head — not to the max-in × max-out cross product,
+    /// which no layer has.
     pub fn for_model(cfg: &TransformerConfig, max_rows: usize) -> DecodeScratch {
         let mut s = DecodeScratch::new();
         let rows = max_rows.max(cfg.max_seq).max(1);
@@ -231,7 +236,25 @@ impl DecodeScratch {
         s.lin.ensure_float(rows, cfg.d_model, cfg.vocab); // the head
         s.attn.ensure(cfg.d_model / cfg.n_heads.max(1), cfg.max_seq);
         s.step.ensure(rows, max_rows.max(1), cfg.d_model, cfg.d_ff, cfg.vocab);
+        s.groups_buf.reserve(rows);
         s
+    }
+
+    /// Workspace pre-sized for the chunked-prefill serving engine: a
+    /// ragged step stacks at most `max_batch` decode rows plus the
+    /// per-step prefill budget of `prefill_chunk` chunk rows (clamped
+    /// here to the window length), which covers every step for chunk
+    /// settings up to `max_seq`. Larger/unchunked settings can stack
+    /// several whole prompts into one step and grow past this presize
+    /// once — buffers are grow-only, so the steady-state step loop is
+    /// allocation-free as soon as the true high-water step has run.
+    pub fn for_serve(
+        cfg: &TransformerConfig,
+        max_batch: usize,
+        prefill_chunk: usize,
+    ) -> DecodeScratch {
+        let budget = prefill_chunk.clamp(1, cfg.max_seq);
+        DecodeScratch::for_model(cfg, max_batch.max(1) + budget)
     }
 }
 
@@ -275,10 +298,31 @@ mod tests {
         assert_eq!(s.step.logits.len(), 4 * 48);
         assert_eq!(s.attn.k_head.len(), 24 * 8);
         assert_eq!(s.lin.codes.len(), 24 * 32);
-        // float weights cover exactly the real shapes (d↔d_ff blocks
-        // and the d→vocab head = 768 elements here), never a
-        // max-in × max-out cross product no layer has
-        assert_eq!(s.lin.fw.len(), 48 * 16);
-        assert!(s.lin.fw.len() < 48 * 32);
+        // float staging covers the widest real operand shapes: fc2-wide
+        // inputs (d_ff) and head-wide outputs (vocab)
+        assert_eq!(s.lin.fa.len(), 24 * 32);
+        assert_eq!(s.lin.fy.len(), 24 * 48);
+    }
+
+    #[test]
+    fn for_serve_covers_the_ragged_high_water() {
+        let cfg = TransformerConfig {
+            name: "s".into(),
+            vocab: 48,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 32,
+            max_seq: 24,
+            act: Activation::Gelu,
+            parallel_residual: false,
+        };
+        // 4 decode rows + an 8-token prefill budget per step
+        let s = DecodeScratch::for_serve(&cfg, 4, 8);
+        assert!(s.step.h.len() >= (4 + 8) * 16);
+        // a huge chunk setting clamps at the window (a single chunk can
+        // never exceed the longest servable prompt)
+        let s = DecodeScratch::for_serve(&cfg, 4, usize::MAX);
+        assert_eq!(s.step.h.len(), (4 + 24) * 16);
     }
 }

@@ -94,7 +94,7 @@ fn nan_weights_do_not_crash_inference() {
         1,
     );
     if let axe::model::Linear::Float(fl) = &mut m.layers[0] {
-        fl.w[3] = f32::NAN;
+        fl.w_mut()[3] = f32::NAN;
     }
     let y = m.forward(&[1.0; 8], None);
     assert_eq!(y.len(), 3); // NaNs propagate, no panic

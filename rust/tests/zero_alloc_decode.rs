@@ -23,7 +23,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use axe::coordinator::{quantize_transformer, DatapathMode, PipelineConfig};
 use axe::eval::synth_corpus;
 use axe::model::{
-    random_transformer, Activation, DecodeScratch, KvArena, KvCacheKind, KvQuantSpec,
+    random_transformer, Activation, DecodeScratch, KvArena, KvCacheKind, KvQuantSpec, RowGroup,
     Transformer, TransformerConfig,
 };
 use axe::quant::{AccumTarget, Algorithm, Method};
@@ -159,5 +159,64 @@ fn steady_state_decode_steps_allocate_nothing() {
         float_allocs, 0,
         "float-model decode steps must not allocate after warmup \
          ({float_allocs} allocations across 6 steps)"
+    );
+
+    // -- phase 3: ragged steps that INCLUDE a prefill chunk (the
+    // chunked-admission serving shape): 3 decode rows + a 5-token
+    // chunk re-prefilling a recycled slot, every step. The workspace is
+    // pre-sized to the ragged-step high-water mark (for_serve), so
+    // steady-state chunked steps must be allocation-free too.
+    let chunk_len = 5usize;
+    let mut arena_r = KvArena::with_kind(&qmodel, 4, kind);
+    let mut dec_slots = [0usize; 3];
+    for s in dec_slots.iter_mut() {
+        *s = arena_r.alloc().expect("4-slot arena");
+    }
+    let chunk_slot = arena_r.alloc().expect("4th slot");
+    let mut scratch_r = DecodeScratch::for_serve(&qmodel.cfg, 4, chunk_len);
+    let mut ovf_r = 0u64;
+    for (i, &s) in dec_slots.iter().enumerate() {
+        qmodel.prefill_slot_scratch(
+            &toks[i * 3..i * 3 + 3],
+            s,
+            &mut arena_r,
+            &mut ovf_r,
+            &mut scratch_r,
+        );
+    }
+    // step-composition buffers built once, reused every iteration
+    let mut groups: Vec<RowGroup> = Vec::with_capacity(4);
+    let mut tokens = [0u16; 8]; // 3 decode rows + 5 chunk rows
+    let mut group_ovf = [0u64; 4];
+    let vocab = qmodel.cfg.vocab as u16;
+    let mut ragged_step = |arena: &mut KvArena,
+                           scratch: &mut DecodeScratch,
+                           groups: &mut Vec<RowGroup>,
+                           phase: u16| {
+        arena.reset_slot(chunk_slot); // recycle: chunk prefills it afresh
+        for (b, t) in tokens.iter_mut().enumerate() {
+            *t = ((phase as usize + b * 5) % vocab as usize) as u16;
+        }
+        groups.clear();
+        for (g, &s) in dec_slots.iter().enumerate() {
+            groups.push(RowGroup { slot: s, start: g, len: 1 });
+        }
+        groups.push(RowGroup { slot: chunk_slot, start: 3, len: chunk_len });
+        group_ovf.iter_mut().for_each(|v| *v = 0);
+        qmodel.decode_step_ragged_scratch(&tokens, groups, arena, &mut group_ovf, scratch);
+        assert!(scratch.step.logits[..4 * vocab as usize].iter().all(|v| v.is_finite()));
+    };
+    for i in 0..3u16 {
+        ragged_step(&mut arena_r, &mut scratch_r, &mut groups, 500 + i); // warmup
+    }
+    let before = allocations();
+    for i in 0..6u16 {
+        ragged_step(&mut arena_r, &mut scratch_r, &mut groups, 600 + i);
+    }
+    let ragged_allocs = allocations() - before;
+    assert_eq!(
+        ragged_allocs, 0,
+        "ragged steps with a prefill chunk must not allocate after warmup \
+         ({ragged_allocs} allocations across 6 steps)"
     );
 }
