@@ -1,13 +1,21 @@
 #!/usr/bin/env python3
 """Diff a fresh BENCH_decode.json against the committed baseline.
 
-Prints a per-configuration tokens/s and TTFT comparison. Informational
-only — the bench-decode job reports the trajectory, it does not gate.
+Prints a per-configuration tokens/s and TTFT comparison. Once a
+measured (non-stub) baseline is committed — the bench-decode job
+bootstraps it from its own first run on main — any configuration whose
+tokens/s drops more than REGRESSION_PCT fails the job. Shared-runner
+noise on the tiny synthetic model is real, hence the generous margin:
+this gate catches collapses (an accidentally quadratic hot path), not
+single-digit drift.
 """
 
 import json
 import pathlib
 import sys
+
+# tokens/s drop (percent) beyond which the job fails
+REGRESSION_PCT = 25.0
 
 
 def rows(doc):
@@ -29,8 +37,8 @@ def main():
     )
     if not base_path.is_file():
         print(
-            f"no {base_path} committed yet — commit a CI artifact as the baseline "
-            "to enable the cross-PR diff (see ROADMAP)."
+            f"no {base_path} committed yet — the bench-decode job bootstraps it "
+            "from its first measured run on main."
         )
         return
     cur = json.loads(cur_path.read_text())
@@ -39,12 +47,15 @@ def main():
         print(f"{base_path} is a schema stub (no measured numbers) — skipping diff.")
         return
     b, c = rows(base), rows(cur)
+    regressions = []
     print(f"decode throughput vs baseline ({base.get('model')}):")
     print(f"{'config':>14} {'baseline':>10} {'current':>10} {'delta':>8}")
     for key in sorted(c, key=str):
         if key in b and isinstance(b[key], (int, float)) and b[key]:
             delta = 100.0 * (c[key] - b[key]) / b[key]
             print(f"{key[0]:>9}@{key[1]:<4} {b[key]:>10.1f} {c[key]:>10.1f} {delta:>+7.1f}%")
+            if delta < -REGRESSION_PCT:
+                regressions.append((key, delta))
     bt, ct = ttft_rows(base), ttft_rows(cur)
     shared = [k for k in ct if k in bt and isinstance(bt[k], (int, float))]
     if shared:
@@ -52,6 +63,13 @@ def main():
         print(f"{'chunk':>10} {'baseline':>10} {'current':>10}")
         for k in sorted(shared, key=lambda x: (x is None, x)):
             print(f"{k!s:>10} {bt[k]:>10.2f} {ct[k]:>10.2f}")
+    if regressions:
+        for (kv, in_flight), delta in regressions:
+            print(
+                f"REGRESSION: {kv}@{in_flight} tokens/s {delta:+.1f}% "
+                f"(limit -{REGRESSION_PCT:.0f}%)"
+            )
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -31,7 +31,7 @@ use axe::coordinator::{quantize_transformer, DatapathMode, PipelineConfig};
 use axe::eval::{load_corpus_split_or_synth, perplexity};
 use axe::model::{
     attend_one_query_quant, attend_one_query_quant_ref, load_named, random_transformer,
-    Activation, AttnScratch, KvArena, KvCacheKind, KvQuantSpec, Model, Transformer,
+    Activation, AttnScratch, KvArena, KvCacheKind, KvQuantSpec, Model, PageMap, Transformer,
     TransformerConfig,
 };
 use axe::model::kvquant::QuantKv;
@@ -118,6 +118,79 @@ struct TtftProbe {
     prompt_len: usize,
     decoders: usize,
     points: Vec<TtftPoint>,
+}
+
+/// Shared-prefix serving: one sharing-on/off measurement row.
+struct SharedPrefixPoint {
+    prefix_cache: bool,
+    mean_follower_ttft_ms: f64,
+    resident_bytes: usize,
+    pages_shared: u64,
+    prefill_tokens_skipped: usize,
+}
+
+/// N sequences over one system prompt, served with the prefix cache on
+/// vs off: follower TTFT (the cache skips the shared pages' prefill)
+/// and resident arena bytes with every follower in flight (shared
+/// pages are deduplicated). Token streams are bit-identical either way
+/// (property-tested in tests/chunked_prefill.rs); this probe measures
+/// the latency/memory trade only.
+struct SharedPrefixProbe {
+    prefix_len: usize,
+    n_seqs: usize,
+    points: Vec<SharedPrefixPoint>,
+}
+
+fn shared_prefix_probe(model: &Transformer, val: &[u16], kind: KvCacheKind) -> SharedPrefixProbe {
+    use std::time::Instant;
+    let n_seqs = 8usize;
+    let prefix_len = model.cfg.max_seq * 3 / 4; // several full 16-token pages
+    let system: Vec<u16> = val[..prefix_len].to_vec();
+    let reqs: Vec<Request> = (0..n_seqs as u64)
+        .map(|id| {
+            let mut prompt = system.clone();
+            let at = (7 + id as usize * 11) % (val.len() - 4);
+            prompt.extend_from_slice(&val[at..at + 3]); // divergent tail
+            Request { id, prompt, max_new_tokens: 4 }
+        })
+        .collect();
+    let mut points = Vec::new();
+    for sharing in [true, false] {
+        let cfg = ServeConfig::new(n_seqs + 1, kind).with_prefix_cache(sharing);
+        let mut eng = StepEngine::new(model, cfg);
+        // leader populates the cache, then retires
+        eng.admit(
+            Request { id: 999, prompt: reqs[0].prompt.clone(), max_new_tokens: 2 },
+            Instant::now(),
+        );
+        while eng.take_finished().is_empty() {
+            eng.step();
+        }
+        // all followers in flight at once: cache-hit admissions prefill
+        // only the unshared tail
+        for r in &reqs {
+            eng.admit(r.clone(), Instant::now());
+        }
+        while eng.prefilling() > 0 {
+            eng.step();
+        }
+        let resident_bytes = eng.arena().bytes();
+        let mut done = Vec::new();
+        while done.len() < n_seqs {
+            eng.step();
+            done.extend(eng.take_finished());
+        }
+        let mean_ttft_s =
+            done.iter().map(|r| r.ttft_s).sum::<f64>() / done.len().max(1) as f64;
+        points.push(SharedPrefixPoint {
+            prefix_cache: sharing,
+            mean_follower_ttft_ms: mean_ttft_s * 1e3,
+            resident_bytes,
+            pages_shared: eng.arena().pages_shared(),
+            prefill_tokens_skipped: done.iter().map(|r| r.prefill_tokens_skipped).sum(),
+        });
+    }
+    SharedPrefixProbe { prefix_len, n_seqs, points }
 }
 
 fn ttft_probe(model: &Transformer, val: &[u16]) -> TtftProbe {
@@ -416,6 +489,27 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    // ---- shared-prefix serving: N sequences over one system prompt,
+    // prefix cache on vs off — follower TTFT and resident arena bytes
+    // (deduplicated shared pages) are the win; tokens are bit-identical
+    // either way.
+    let shared = shared_prefix_probe(&qmodel, &val, kv_kind);
+    println!(
+        "\nshared-prefix serving ({}-token system prompt, {} sequences, int8 KV):",
+        shared.prefix_len, shared.n_seqs
+    );
+    for p in &shared.points {
+        println!(
+            "  prefix cache {:>3} : mean follower ttft {:>7.2} ms, resident {:>9} B, \
+             {} pages shared, {} prefill tokens skipped",
+            if p.prefix_cache { "on" } else { "off" },
+            p.mean_follower_ttft_ms,
+            p.resident_bytes,
+            p.pages_shared,
+            p.prefill_tokens_skipped
+        );
+    }
+
     // ---- machine-readable results (CI uploads this as an artifact).
     // Default paths anchor at the workspace root (one level above this
     // package's manifest), independent of the bench's CWD.
@@ -434,6 +528,7 @@ fn main() -> anyhow::Result<()> {
         &points,
         &attn,
         &ttft,
+        &shared,
         &baseline_path,
     );
     std::fs::write(&out_path, &json)?;
@@ -457,14 +552,18 @@ fn attention_micro(cfg: &TransformerConfig, iters: usize) -> AttnMicro {
     let t_len = (cfg.max_seq * 3 / 4).max(1);
     let spec = KvQuantSpec::int8();
     let mut rng = Rng::new(42);
+    // one t_len-sized page so the micro times the same contiguous
+    // gathers as before the paged-arena refactor
     let mut kv = QuantKv::new(spec, 1, 1, t_len, d, heads);
+    let table = [0u32];
+    let map = PageMap::new(&table, 0, t_len);
     for pos in 0..t_len {
         let k: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
         let v: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
-        kv.append_row(0, 0, pos, &k, &v);
+        kv.append_row(0, &map, pos, &k, &v);
     }
     let q: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
-    let view = kv.slot_view(0, 0);
+    let view = kv.slot_view(0, map);
     let mut scratch = AttnScratch::new();
     let mut out_ref = vec![0.0f32; d];
     let mut out_fast = vec![0.0f32; d];
@@ -517,6 +616,7 @@ fn render_json(
     points: &[DecodePoint],
     attn: &AttnMicro,
     ttft: &TtftProbe,
+    shared: &SharedPrefixProbe,
     baseline_path: &str,
 ) -> String {
     let mut s = String::new();
@@ -567,6 +667,24 @@ fn render_json(
             p.ttft_ms,
             p.max_step_ms,
             if i + 1 < ttft.points.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]},\n");
+    s.push_str(&format!(
+        "  \"shared_prefix\": {{\"prefix_len\": {}, \"n_seqs\": {}, \"kv\": \"int8\", \
+         \"configs\": [\n",
+        shared.prefix_len, shared.n_seqs
+    ));
+    for (i, p) in shared.points.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"prefix_cache\": {}, \"mean_follower_ttft_ms\": {:.3}, \
+             \"resident_bytes\": {}, \"pages_shared\": {}, \"prefill_tokens_skipped\": {}}}{}\n",
+            p.prefix_cache,
+            p.mean_follower_ttft_ms,
+            p.resident_bytes,
+            p.pages_shared,
+            p.prefill_tokens_skipped,
+            if i + 1 < shared.points.len() { "," } else { "" }
         ));
     }
     s.push_str("  ]},\n");

@@ -47,7 +47,9 @@
 //! [`serve_with`]) attention matmuls produced — not a batch-window
 //! bound.
 
-use crate::model::{argmax, DecodeScratch, KvArena, KvCacheKind, RowGroup, Transformer};
+use crate::model::{
+    argmax, DecodeScratch, KvArena, KvCacheKind, RowGroup, Transformer, DEFAULT_KV_PAGE,
+};
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
@@ -83,8 +85,16 @@ pub struct Response {
     /// rode in (quantized linear layers and, on the quantized-KV
     /// backend, its attention matmuls). Per-group kernel attribution
     /// makes the counts disjoint across co-scheduled requests and
-    /// invariant to batch composition.
+    /// invariant to batch composition. Prefill positions skipped via
+    /// prefix-page adoption contribute the events stored on the adopted
+    /// pages at fill time, so this count is bit-identical with prefix
+    /// sharing on or off.
     pub overflow_events: u64,
+    /// Prompt (and slide-tail) positions this request did **not** have
+    /// to prefill because already-encoded prefix pages were mapped into
+    /// its slot from the prefix cache. 0 on a cold admission or with
+    /// `--prefix-cache off`.
+    pub prefill_tokens_skipped: usize,
 }
 
 struct QueueInner {
@@ -204,6 +214,22 @@ pub struct ServeStats {
     /// KV arena footprint in bytes per engine (0 when the caller did
     /// not fill it in; see [`crate::model::KvArena::footprint`]).
     pub arena_bytes: usize,
+    /// Requests whose admission hit the prefix cache (adopted ≥ 1
+    /// shared page).
+    pub prefix_hits: usize,
+    /// Prefix-cache hit rate across requests (`prefix_hits / requests`).
+    pub prefix_hit_rate: f64,
+    /// Total prefill positions skipped via shared-page adoption.
+    pub prefill_tokens_skipped: usize,
+    /// Median TTFT over cache-hit admissions only (0 when none) — with
+    /// [`ServeStats::p50_ttft_cold_s`], the latency win sharing buys.
+    pub p50_ttft_shared_s: f64,
+    /// Median TTFT over cold (no pages adopted) admissions only.
+    pub p50_ttft_cold_s: f64,
+    /// Full pages mapped read-only from the prefix cache, summed over
+    /// engines (0 when the caller did not fill it in; see
+    /// [`crate::model::KvArena::pages_shared`]).
+    pub pages_shared: u64,
 }
 
 impl ServeStats {
@@ -222,6 +248,17 @@ impl ServeStats {
         let mut ttfts: Vec<f64> = responses.iter().map(|r| r.ttft_s).collect();
         ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let total_tokens: usize = responses.iter().map(|r| r.tokens.len()).sum();
+        let mut shared_ttfts: Vec<f64> = Vec::new();
+        let mut cold_ttfts: Vec<f64> = Vec::new();
+        for r in responses {
+            if r.prefill_tokens_skipped > 0 {
+                shared_ttfts.push(r.ttft_s);
+            } else {
+                cold_ttfts.push(r.ttft_s);
+            }
+        }
+        shared_ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        cold_ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap());
         ServeStats {
             requests: responses.len(),
             total_tokens,
@@ -235,6 +272,12 @@ impl ServeStats {
             p99_ttft_s: pct(&ttfts, 0.99),
             overflow_events: responses.iter().map(|r| r.overflow_events).sum(),
             arena_bytes: 0,
+            prefix_hits: shared_ttfts.len(),
+            prefix_hit_rate: shared_ttfts.len() as f64 / responses.len().max(1) as f64,
+            prefill_tokens_skipped: responses.iter().map(|r| r.prefill_tokens_skipped).sum(),
+            p50_ttft_shared_s: pct(&shared_ttfts, 0.50),
+            p50_ttft_cold_s: pct(&cold_ttfts, 0.50),
+            pages_shared: 0,
         }
     }
 }
@@ -254,15 +297,41 @@ pub struct ServeConfig {
     /// are bit-identical for every value — this knob trades
     /// time-to-first-token against per-step latency only.
     pub prefill_chunk: usize,
+    /// Positions per KV page (`--kv-page`; clamped to the model window
+    /// at arena construction). Smaller pages share shorter common
+    /// prefixes at finer granularity but carry more table overhead.
+    pub kv_page: usize,
+    /// Shared-prefix page caching (`--prefix-cache`): admissions adopt
+    /// already-encoded full prefix pages read-only and skip straight to
+    /// the unshared tail. Token streams and per-request overflow counts
+    /// are bit-identical on or off — the switch trades admission work
+    /// and resident bytes only.
+    pub prefix_cache: bool,
 }
 
 impl ServeConfig {
     pub fn new(max_batch: usize, kind: KvCacheKind) -> ServeConfig {
-        ServeConfig { max_batch: max_batch.max(1), kind, prefill_chunk: DEFAULT_PREFILL_CHUNK }
+        ServeConfig {
+            max_batch: max_batch.max(1),
+            kind,
+            prefill_chunk: DEFAULT_PREFILL_CHUNK,
+            kv_page: DEFAULT_KV_PAGE,
+            prefix_cache: true,
+        }
     }
 
     pub fn with_prefill_chunk(mut self, chunk: usize) -> ServeConfig {
         self.prefill_chunk = chunk.max(1);
+        self
+    }
+
+    pub fn with_kv_page(mut self, page: usize) -> ServeConfig {
+        self.kv_page = page.max(1);
+        self
+    }
+
+    pub fn with_prefix_cache(mut self, on: bool) -> ServeConfig {
+        self.prefix_cache = on;
         self
     }
 }
@@ -296,8 +365,11 @@ struct InFlight {
     /// When the first token was sampled (TTFT numerator).
     first_token: Option<Instant>,
     /// Exact overflow events this request has triggered so far (its
-    /// prefill chunks + its rows of every ragged step).
+    /// prefill chunks + its rows of every ragged step, plus the
+    /// fill-time events credited from any adopted prefix pages).
     overflow: u64,
+    /// Prefill positions skipped via prefix-page adoption.
+    skipped: usize,
     phase: Phase,
 }
 
@@ -331,7 +403,7 @@ impl<'m> StepEngine<'m> {
         StepEngine {
             model,
             cfg,
-            arena: KvArena::with_kind(model, max_batch, cfg.kind),
+            arena: KvArena::with_kind_paged(model, max_batch, cfg.kind, cfg.kv_page),
             scratch: DecodeScratch::for_serve(&model.cfg, max_batch, cfg.prefill_chunk),
             active: Vec::with_capacity(max_batch),
             finished: Vec::new(),
@@ -379,12 +451,25 @@ impl<'m> StepEngine<'m> {
                 gen_s: 0.0,
                 ttft_s: queued_s,
                 overflow_events: 0,
+                prefill_tokens_skipped: 0,
             });
             return;
         }
         assert!(!req.prompt.is_empty(), "empty prompt");
         let slot = self.arena.alloc().expect("admission is bounded by free slots");
         let prompt = self.model.clip_to_window(&req.prompt);
+        // prefix-cache hit: map already-encoded full prefix pages
+        // read-only into the fresh slot (refcount bumps, no model
+        // work) and start the chunked prefill at the unshared tail.
+        // Adopted pages are bit-identical to what prefilling them
+        // would produce, and their stored fill-time overflow events
+        // are credited here — tokens and per-request overflow counts
+        // are unchanged vs a cold admission.
+        let (mapped, adopted_ovf) = if self.cfg.prefix_cache {
+            self.arena.adopt_prefix(slot, &prompt)
+        } else {
+            (0, 0)
+        };
         self.active.push(InFlight {
             id: req.id,
             slot,
@@ -395,8 +480,9 @@ impl<'m> StepEngine<'m> {
             enqueued,
             admitted,
             first_token: None,
-            overflow: 0,
-            phase: Phase::Prefilling { next_pos: 0 },
+            overflow: adopted_ovf,
+            skipped: mapped,
+            phase: Phase::Prefilling { next_pos: mapped },
         });
     }
 
@@ -425,7 +511,18 @@ impl<'m> StepEngine<'m> {
                 let cut = seq.context.len() - keep;
                 seq.context.drain(..cut);
                 self.arena.reset_slot(seq.slot);
-                seq.phase = Phase::Prefilling { next_pos: 0 };
+                // a reset slot is fresh and position-0-aligned, so the
+                // slide tail can adopt shared pages too (a divergent
+                // tail simply misses)
+                let mapped = if self.cfg.prefix_cache {
+                    let (mapped, ovf) = self.arena.adopt_prefix(seq.slot, &seq.context);
+                    seq.overflow += ovf;
+                    seq.skipped += mapped;
+                    mapped
+                } else {
+                    0
+                };
+                seq.phase = Phase::Prefilling { next_pos: mapped };
                 i += 1;
                 continue;
             }
@@ -449,6 +546,7 @@ impl<'m> StepEngine<'m> {
                         .map(|t| t.duration_since(seq.enqueued).as_secs_f64())
                         .unwrap_or(queued_s),
                     overflow_events: seq.overflow,
+                    prefill_tokens_skipped: seq.skipped,
                 });
             } else {
                 i += 1;
@@ -505,6 +603,12 @@ impl<'m> StepEngine<'m> {
                 Phase::Decoding => true,
                 Phase::Prefilling { next_pos } => {
                     *next_pos += self.groups[gi].len;
+                    if self.cfg.prefix_cache {
+                        // file the pages this chunk just completed in
+                        // the prefix cache, so admissions sharing the
+                        // prefix can adopt them (idempotent per page)
+                        self.arena.register_prefix(seq.slot, &seq.context[..*next_pos]);
+                    }
                     *next_pos == seq.context.len()
                 }
             };
@@ -520,6 +624,43 @@ impl<'m> StepEngine<'m> {
     /// Drain completed responses (unordered; the queue sorts on drain).
     pub fn take_finished(&mut self) -> Vec<Response> {
         std::mem::take(&mut self.finished)
+    }
+
+    /// The engine's KV arena — resident/capacity bytes, pages shared,
+    /// prefix-cache size (tests, benches, and the serve report).
+    pub fn arena(&self) -> &KvArena {
+        &self.arena
+    }
+}
+
+/// Per-engine arena/prefix-cache counters collected when an engine
+/// thread exits — the serve report's sharing-effectiveness block.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EngineStats {
+    /// Full pages mapped read-only from the prefix cache.
+    pub pages_shared: u64,
+    /// Entries (full pages) held by the prefix cache at exit.
+    pub prefix_cache_pages: usize,
+    /// Resident (deduplicated) arena bytes at exit.
+    pub resident_bytes: usize,
+    /// High-water resident arena bytes.
+    pub peak_bytes: usize,
+    /// Reserved arena bytes (every page backed).
+    pub capacity_bytes: usize,
+    /// Times allocation pressure flushed the prefix cache.
+    pub cache_flushes: u64,
+}
+
+impl EngineStats {
+    fn of(arena: &KvArena) -> EngineStats {
+        EngineStats {
+            pages_shared: arena.pages_shared(),
+            prefix_cache_pages: arena.prefix_cache_pages(),
+            resident_bytes: arena.bytes(),
+            peak_bytes: arena.peak_bytes(),
+            capacity_bytes: arena.capacity_bytes(),
+            cache_flushes: arena.cache_flushes(),
+        }
     }
 }
 
@@ -546,19 +687,27 @@ pub fn serve_with(
 }
 
 /// [`serve`] with the full per-engine configuration, including
-/// `prefill_chunk` — the `--prefill-chunk` deployment path.
-pub fn serve_config(model: &Transformer, queue: &ServeQueue, engines: usize, cfg: ServeConfig) {
+/// `prefill_chunk`, `kv_page` and `prefix_cache` — the CLI deployment
+/// path. Returns one [`EngineStats`] per engine thread (sharing
+/// effectiveness and resident-byte accounting for the serve report).
+pub fn serve_config(
+    model: &Transformer,
+    queue: &ServeQueue,
+    engines: usize,
+    cfg: ServeConfig,
+) -> Vec<EngineStats> {
     std::thread::scope(|scope| {
-        for _ in 0..engines.max(1) {
-            scope.spawn(move || run_engine(model, queue, cfg));
-        }
-    });
+        let handles: Vec<_> = (0..engines.max(1))
+            .map(|_| scope.spawn(move || run_engine(model, queue, cfg)))
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("engine thread panicked")).collect()
+    })
 }
 
 /// One engine thread: drive a [`StepEngine`] off the shared queue —
 /// block when idle, poll admissions (bounded by free slots) when the
 /// batch has work, one ragged step per iteration.
-fn run_engine(model: &Transformer, queue: &ServeQueue, cfg: ServeConfig) {
+fn run_engine(model: &Transformer, queue: &ServeQueue, cfg: ServeConfig) -> EngineStats {
     let mut engine = StepEngine::new(model, cfg);
     loop {
         let admissions = if engine.has_work() {
@@ -566,7 +715,7 @@ fn run_engine(model: &Transformer, queue: &ServeQueue, cfg: ServeConfig) {
         } else {
             match queue.pop_batch(cfg.max_batch.max(1)) {
                 Some(batch) => batch,
-                None => return, // closed + drained
+                None => return EngineStats::of(engine.arena()), // closed + drained
             }
         };
         for (req, enqueued) in admissions {
@@ -769,6 +918,83 @@ mod tests {
         assert_eq!(done[1].tokens, direct(&m, &prompt_b, 3));
     }
 
+    /// Shared-prefix admissions: followers adopt the leader's full
+    /// prefix pages (prefill work ∝ unshared tail only), and tokens AND
+    /// per-request overflow counts are bit-identical with sharing on vs
+    /// off — on both KV backends, with overflow events live.
+    #[test]
+    fn prefix_sharing_skips_prefill_and_stays_bit_exact() {
+        use crate::model::KvQuantSpec;
+        let m = model();
+        let sys: Vec<u16> = (0..9).map(|i| ((i * 3 + 1) % 32) as u16).collect();
+        for kind in [
+            KvCacheKind::F32,
+            KvCacheKind::Quant(KvQuantSpec::new(8, 8, Some(6))), // overflow live
+        ] {
+            let mut runs: Vec<Vec<Response>> = Vec::new();
+            for sharing in [true, false] {
+                let cfg = ServeConfig::new(3, kind)
+                    .with_prefill_chunk(4)
+                    .with_kv_page(4)
+                    .with_prefix_cache(sharing);
+                let mut eng = StepEngine::new(&m, cfg);
+                // leader: prefills + registers the shared prompt
+                eng.admit(
+                    Request { id: 0, prompt: sys.clone(), max_new_tokens: 4 },
+                    Instant::now(),
+                );
+                while eng.prefilling() > 0 {
+                    eng.step();
+                }
+                // followers: same prompt → with sharing, admission maps
+                // both full pages and prefill covers only the tail
+                for id in 1..3u64 {
+                    eng.admit(
+                        Request { id, prompt: sys.clone(), max_new_tokens: 4 },
+                        Instant::now(),
+                    );
+                }
+                if sharing {
+                    for seq in eng.active.iter().filter(|s| s.id > 0) {
+                        assert_eq!(
+                            seq.skipped, 8,
+                            "kind={kind:?}: followers must adopt both full prefix pages"
+                        );
+                        assert!(
+                            matches!(seq.phase, Phase::Prefilling { next_pos: 8 }),
+                            "kind={kind:?}: prefill must start at the unshared tail"
+                        );
+                    }
+                    assert_eq!(eng.arena().pages_shared(), 4, "2 followers × 2 pages");
+                }
+                while eng.has_work() {
+                    eng.step();
+                }
+                let mut done = eng.take_finished();
+                done.sort_by_key(|r| r.id);
+                runs.push(done);
+            }
+            let (on, off) = (&runs[0], &runs[1]);
+            for (a, b) in on.iter().zip(off.iter()) {
+                assert_eq!(a.tokens, b.tokens, "kind={kind:?}: tokens diverge with sharing");
+                assert_eq!(
+                    a.overflow_events, b.overflow_events,
+                    "kind={kind:?} request {}: overflow attribution diverges with sharing",
+                    a.id
+                );
+                assert_eq!(b.prefill_tokens_skipped, 0, "sharing off must skip nothing");
+            }
+            assert_eq!(on[0].prefill_tokens_skipped, 0, "leader admission is cold");
+            assert_eq!(on[1].prefill_tokens_skipped, 8);
+            assert_eq!(on[2].prefill_tokens_skipped, 8);
+            // and the sequential reference agrees
+            for r in on {
+                let want = m.generate_greedy_with(&sys, 4, kind);
+                assert_eq!(r.tokens, want[sys.len()..], "kind={kind:?}");
+            }
+        }
+    }
+
     #[test]
     fn zero_token_request_completes_empty() {
         let m = model();
@@ -824,6 +1050,8 @@ mod tests {
                 gen_s: (i + 1) as f64 / 100.0,
                 ttft_s: (i + 1) as f64 / 200.0,
                 overflow_events: i % 5,
+                // first half shared (and faster), second half cold
+                prefill_tokens_skipped: if i < 50 { 8 } else { 0 },
             })
             .collect();
         let s = ServeStats::from_responses(&resp, 1.0);
@@ -835,5 +1063,12 @@ mod tests {
         // per-request counts are disjoint, so the total is their sum
         assert_eq!(s.overflow_events, (0..100u64).map(|i| i % 5).sum::<u64>());
         assert_eq!(s.arena_bytes, 0, "arena bytes are caller-filled");
+        assert_eq!(s.prefix_hits, 50);
+        assert!((s.prefix_hit_rate - 0.5).abs() < 1e-12);
+        assert_eq!(s.prefill_tokens_skipped, 400);
+        // shared admissions are ids 0..50 → ttfts 1/200 ..= 50/200
+        assert!((s.p50_ttft_shared_s - 0.125).abs() < 0.01);
+        assert!((s.p50_ttft_cold_s - 0.375).abs() < 0.01);
+        assert_eq!(s.pages_shared, 0, "pages shared are caller-filled");
     }
 }

@@ -308,7 +308,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     use axe::coordinator::serve::{
         serve_config, Request, ServeConfig, ServeQueue, ServeStats, DEFAULT_PREFILL_CHUNK,
     };
-    use axe::model::{KvArena, KvCacheKind, KvQuantSpec};
+    use axe::model::{KvArena, KvCacheKind, KvQuantSpec, DEFAULT_KV_PAGE};
     let model_name = args.str_or("model", "pico-160k");
     let mut model = load_lm(&model_name)?;
     let seq = model.cfg.max_seq;
@@ -359,6 +359,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         0 => usize::MAX,
         c => c,
     };
+    // --kv-page N: positions per KV page (clamped to the window);
+    // --prefix-cache on|off: shared-prefix page adoption at admission.
+    // Tokens and per-request overflow counts are bit-identical either
+    // way — the switch trades admission prefill work and resident
+    // bytes only.
+    let kv_page = args.usize_or("kv-page", DEFAULT_KV_PAGE).max(1);
+    let prefix_cache = match args.str_or("prefix-cache", "on").as_str() {
+        "on" | "true" | "1" => true,
+        "off" | "false" | "0" => false,
+        s => return Err(anyhow!("--prefix-cache must be on or off (got {s})")),
+    };
     let queue = ServeQueue::new();
     for id in 0..n_requests as u64 {
         let start = (id as usize * 37) % (val.len() - seq);
@@ -371,16 +382,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
     queue.close();
     let ovf_before = model.overflow_events();
     let t0 = std::time::Instant::now();
-    serve_config(
+    let engine_stats = serve_config(
         &model,
         &queue,
         workers,
-        ServeConfig::new(max_batch, kind).with_prefill_chunk(prefill_chunk),
+        ServeConfig::new(max_batch, kind)
+            .with_prefill_chunk(prefill_chunk)
+            .with_kv_page(kv_page)
+            .with_prefix_cache(prefix_cache),
     );
     let responses = queue.drain();
     let mut stats = ServeStats::from_responses(&responses, t0.elapsed().as_secs_f64());
-    stats.arena_bytes = KvArena::footprint(&model.cfg, max_batch, kind);
-    let f32_bytes = KvArena::footprint(&model.cfg, max_batch, KvCacheKind::F32);
+    stats.arena_bytes = KvArena::footprint_paged(&model.cfg, max_batch, kind, kv_page);
+    stats.pages_shared = engine_stats.iter().map(|e| e.pages_shared).sum();
+    let f32_bytes = KvArena::footprint_paged(&model.cfg, max_batch, KvCacheKind::F32, kv_page);
     println!("requests      : {}", stats.requests);
     println!("generated     : {} tokens in {:.2}s", stats.total_tokens, stats.wall_s);
     println!("throughput    : {:.1} tok/s", stats.tokens_per_s);
@@ -394,10 +409,31 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     println!("mean queue    : {:.1} ms", stats.mean_queue_s * 1e3);
     println!(
-        "kv arena      : {} B per engine ({:.1}% of the {} B f32 arena)",
+        "kv arena      : {} B per engine ({:.1}% of the {} B f32 arena), page size {}",
         stats.arena_bytes,
         100.0 * stats.arena_bytes as f64 / f32_bytes.max(1) as f64,
-        f32_bytes
+        f32_bytes,
+        kv_page.min(model.cfg.max_seq),
+    );
+    let peak: usize = engine_stats.iter().map(|e| e.peak_bytes).max().unwrap_or(0);
+    println!(
+        "kv resident   : peak {} B across engines (deduplicated pages; \
+         capacity {} B per engine)",
+        peak,
+        engine_stats.first().map(|e| e.capacity_bytes).unwrap_or(0)
+    );
+    println!(
+        "prefix cache  : {} — hits {}/{} ({:.0}%), {} prefill tokens skipped, \
+         {} pages shared, ttft p50 shared/cold {:.1}/{:.1} ms, {} flushes",
+        if prefix_cache { "on" } else { "off" },
+        stats.prefix_hits,
+        stats.requests,
+        100.0 * stats.prefix_hit_rate,
+        stats.prefill_tokens_skipped,
+        stats.pages_shared,
+        stats.p50_ttft_shared_s * 1e3,
+        stats.p50_ttft_cold_s * 1e3,
+        engine_stats.iter().map(|e| e.cache_flushes).sum::<u64>()
     );
     println!(
         "overflow evts : {} total across requests ({:.3} per generated token; \

@@ -1,4 +1,4 @@
-//! Incremental decoding over a multi-sequence KV arena.
+//! Incremental decoding over a multi-sequence **paged** KV arena.
 //!
 //! `forward()` recomputes the whole prefix per step — fine for PPL
 //! evaluation, quadratic-per-token for serving. The KV structures here
@@ -19,6 +19,29 @@
 //! all-1-row-groups wrapper; [`Transformer::prefill_slot_scratch`] the
 //! single-group one.
 //!
+//! **Paged storage.** A slot no longer owns a contiguous
+//! `[max_seq × d]` region: K/V live in fixed-size pages
+//! ([`super::paging`]) drawn from one [`PagePool`], and each slot holds
+//! a page *table* (plus an in-page head offset after window slides).
+//! Appends write into the slot's open tail page at its high-water
+//! position, so a **full** page is immutable from the moment its last
+//! row lands — on the quantized backend the codes and bf16 scales are
+//! written exactly once (quantize-at-append), which makes a full page
+//! bit-identical for every reader. That immutability is what the
+//! shared-prefix machinery rests on: [`KvArena::register_prefix`] files
+//! a slot's full position-0-aligned pages in a content-addressed
+//! [`PrefixCache`], and [`KvArena::adopt_prefix`] maps already-encoded
+//! pages read-only into a fresh slot's table (a refcount bump — the
+//! "copy" in copy-on-write never happens because the open tail page is
+//! always private), so admission prefill skips straight to the unshared
+//! tail. `truncate_front` window slides become head-page drops
+//! (refcount decrements) instead of `copy_within` memmoves. All
+//! position → (page, offset) resolution happens at the attention-gather
+//! / append boundary through a borrowed [`PageMap`]; per-page inner
+//! loops stay contiguous, so the zero-allocation and safe-tile fast
+//! paths survive the indirection (page allocation itself is a free-list
+//! pop).
+//!
 //! The `_scratch` entry points are the hot path: every operand buffer
 //! (activations, quantized codes, attention panels, overflow counters,
 //! logits) lives in a caller-owned [`super::DecodeScratch`] workspace,
@@ -26,15 +49,16 @@
 //! (`tests/zero_alloc_decode.rs` asserts this with a counting global
 //! allocator; the guarantee covers kernel calls below the
 //! band-threading work threshold — a batched call large enough to fan
-//! out to scoped threads allocates for the spawns, by design). The serving engine owns one workspace per engine thread
-//! and reuses it across admissions, steps and slides; the non-scratch
-//! wrappers (`decode_step_batch`, `prefill_slot`, …) build a transient
+//! out to scoped threads allocates for the spawns, by design). The
+//! serving engine owns one workspace per engine thread and reuses it
+//! across admissions, steps and slides; the non-scratch wrappers
+//! (`decode_step_batch`, `prefill_slot`, …) build a transient
 //! workspace and exist for tests and one-shot callers.
 //!
 //! The arena runs on one of two **backends** ([`KvCacheKind`]): plain
 //! f32 keys/values with float attention, or the accumulator-aware
 //! quantized store ([`super::kvquant`]) — narrow integer codes with
-//! per-(slot, position, head) bf16 scales, quantized once at append
+//! per-(page, offset, head) bf16 scales, quantized once at append
 //! time, with both attention matmuls executed on the multi-stage
 //! integer datapath ([`super::layers::attend_one_query_quant`], fed by
 //! the slab-resolved bulk gathers). Every decode entry point dispatches
@@ -51,17 +75,23 @@
 //! `linalg::qgemm`, the banded f64 GEMM, and the per-slot quantized
 //! attention).
 //!
-//! Overflow accounting is **unified**: the `_counted`/`_scratch`
-//! variants attribute integer-datapath overflow events (linear layers
-//! and quantized attention) to the row / request that produced them —
-//! the serving engine's exact per-request accounting — and attention
-//! events additionally land on the model-wide
-//! [`Transformer::overflow_events`] counter alongside the quantized-
-//! linear events, so eval and serve report one number (previously
-//! attention events lived on a separate arena-side counter).
+//! Overflow accounting is **unified and page-aware**: the
+//! `_counted`/`_scratch` variants attribute integer-datapath overflow
+//! events (linear layers and quantized attention) to the row / request
+//! that produced them, attention events additionally land on the
+//! model-wide [`Transformer::overflow_events`] counter, and each row's
+//! fill-time events are *also* recorded on the page holding that row
+//! ([`PagePool::record_ovf`]). A sequence adopting a shared page
+//! credits the page's stored events instead of re-incurring them —
+//! that, plus determinism and the chunking invariance of per-row
+//! events, is exactly what keeps per-request overflow counts
+//! bit-identical with prefix sharing on vs off. (The LM head is a
+//! float linear and contributes no events, so per-row body events are
+//! the complete record.)
 
 use super::kvquant::{KvCacheKind, QuantKv};
-use super::layers::{attend_chunk, attend_chunk_quant};
+use super::layers::{attend_chunk_quant, attend_chunk_rows, KvRows};
+use super::paging::{PageMap, PagePool, PrefixCache, DEFAULT_KV_PAGE, NO_PREFIX};
 use super::scratch::DecodeScratch;
 use super::transformer::{Transformer, TransformerConfig};
 
@@ -81,35 +111,93 @@ pub struct RowGroup {
     pub len: usize,
 }
 
-/// Multi-sequence key/value arena: `slots` independent sequences, each
-/// owning a fixed `[max_seq × d]` region per layer. Slots are
-/// allocated at admission, reused after retirement, and slide their
-/// window independently (via [`KvArena::reset_slot`] + re-prefill, the
-/// absolute-position re-encode the single-sequence path uses).
+/// Multi-sequence key/value arena over a fixed [`PagePool`]: `slots`
+/// independent sequences, each holding a table of refcounted fixed-size
+/// pages. Slots are allocated at admission, reused after retirement,
+/// and slide their window independently (via [`KvArena::reset_slot`] +
+/// re-prefill, the absolute-position re-encode the single-sequence path
+/// uses — which keeps slid tails position-0-aligned and therefore
+/// shareable). Full prefix pages can be shared across slots through the
+/// built-in [`PrefixCache`] ([`KvArena::register_prefix`] /
+/// [`KvArena::adopt_prefix`]).
 #[derive(Clone, Debug)]
 pub struct KvArena {
     store: KvStore,
     d: usize,
     max_seq: usize,
     slots: usize,
+    /// Positions per page (clamped to `1..=max_seq` at construction).
+    page_size: usize,
+    /// Refcounts + free list + per-page overflow attribution.
+    pool: PagePool,
+    /// Per-slot page table (physical page ids), pre-reserved to the
+    /// per-slot maximum so table growth never touches the heap.
+    tables: Vec<Vec<u32>>,
+    /// Per-slot in-page offset of logical position 0 (nonzero only
+    /// after a `truncate_front` that lands mid-page).
+    heads: Vec<usize>,
     /// Per-slot cached length.
     lens: Vec<usize>,
     /// Per-slot liveness (allocated to a sequence).
     live: Vec<bool>,
     /// LIFO free list of slot ids.
     free: Vec<usize>,
+    /// Whether the slot's pages encode a position-0-aligned prefix
+    /// (false after `truncate_front`, which shifts absolute positions).
+    shareable: Vec<bool>,
+    /// How many of the slot's leading pages are already in the cache.
+    registered: Vec<usize>,
+    /// Prefix-chain anchor: cache entry id of the slot's last
+    /// registered/adopted page ([`NO_PREFIX`] at the chain root).
+    chain: Vec<u32>,
+    /// Content-addressed index of shareable full pages.
+    cache: PrefixCache,
+    /// High-water mark of resident pages (capacity-planning signal).
+    peak_pages: usize,
+    /// Full pages mapped read-only via [`KvArena::adopt_prefix`].
+    pages_adopted: u64,
+    /// Times allocation pressure flushed the prefix cache.
+    cache_flushes: u64,
 }
 
-/// Backend storage of the arena (see [`KvCacheKind`]).
+/// Backend storage of the arena (see [`KvCacheKind`]). Payload is
+/// indexed by **physical page id**; which pages form a sequence is the
+/// arena's page tables' business.
 #[derive(Clone, Debug)]
 enum KvStore {
     F32 {
-        /// [layer][slot * max_seq * d + pos * d ..] cached keys.
+        /// [layer][(page * page_size + off) * d ..] cached keys.
         k: Vec<Vec<f32>>,
-        /// [layer][slot * max_seq * d + pos * d ..] cached values.
+        /// [layer][(page * page_size + off) * d ..] cached values.
         v: Vec<Vec<f32>>,
     },
     Quant(QuantKv),
+}
+
+/// Paged f32 K/V rows of one slot at one layer — the float backend's
+/// single position → (page, offset) resolution point, fed to the
+/// row-resolved float attention ([`attend_chunk_rows`]).
+struct PagedKvRows<'a> {
+    k: &'a [f32],
+    v: &'a [f32],
+    map: PageMap<'a>,
+    d: usize,
+}
+
+impl KvRows for PagedKvRows<'_> {
+    #[inline]
+    fn k_row(&self, pos: usize) -> &[f32] {
+        let (pg, off) = self.map.locate(pos);
+        let at = (pg * self.map.page_size() + off) * self.d;
+        &self.k[at..at + self.d]
+    }
+
+    #[inline]
+    fn v_row(&self, pos: usize) -> &[f32] {
+        let (pg, off) = self.map.locate(pos);
+        let at = (pg * self.map.page_size() + off) * self.d;
+        &self.v[at..at + self.d]
+    }
 }
 
 impl KvArena {
@@ -118,30 +206,71 @@ impl KvArena {
         KvArena::with_kind(model, slots, KvCacheKind::F32)
     }
 
-    /// Arena with `slots` sequence slots on the chosen backend.
+    /// Arena with `slots` sequence slots on the chosen backend, at the
+    /// default page size ([`DEFAULT_KV_PAGE`]).
     pub fn with_kind(model: &Transformer, slots: usize, kind: KvCacheKind) -> KvArena {
+        KvArena::with_kind_paged(model, slots, kind, DEFAULT_KV_PAGE)
+    }
+
+    /// Arena with an explicit page size (`--kv-page`; clamped to
+    /// `1..=max_seq`). The pool holds `slots × pages_per_slot` pages —
+    /// enough for every slot to be simultaneously full even with a
+    /// mid-page head offset — so sequences can always make progress
+    /// with sharing off, and sharing only ever *frees* headroom.
+    pub fn with_kind_paged(
+        model: &Transformer,
+        slots: usize,
+        kind: KvCacheKind,
+        page_size: usize,
+    ) -> KvArena {
         assert!(slots >= 1, "arena needs at least one slot");
         let d = model.cfg.d_model;
         let max_seq = model.cfg.max_seq;
         let n_layers = model.cfg.n_layers;
+        let page_size = page_size.clamp(1, max_seq);
+        let pps = KvArena::pages_per_slot(max_seq, page_size);
+        let n_pages = slots * pps;
         let store = match kind {
             KvCacheKind::F32 => KvStore::F32 {
-                k: vec![vec![0.0; slots * max_seq * d]; n_layers],
-                v: vec![vec![0.0; slots * max_seq * d]; n_layers],
+                k: vec![vec![0.0; n_pages * page_size * d]; n_layers],
+                v: vec![vec![0.0; n_pages * page_size * d]; n_layers],
             },
-            KvCacheKind::Quant(spec) => {
-                KvStore::Quant(QuantKv::new(spec, n_layers, slots, max_seq, d, model.cfg.n_heads))
-            }
+            KvCacheKind::Quant(spec) => KvStore::Quant(QuantKv::new(
+                spec,
+                n_layers,
+                n_pages,
+                page_size,
+                d,
+                model.cfg.n_heads,
+            )),
         };
         KvArena {
             store,
             d,
             max_seq,
             slots,
+            page_size,
+            pool: PagePool::new(page_size, n_pages),
+            tables: (0..slots).map(|_| Vec::with_capacity(pps)).collect(),
+            heads: vec![0; slots],
             lens: vec![0; slots],
             live: vec![false; slots],
             free: (0..slots).rev().collect(),
+            shareable: vec![true; slots],
+            registered: vec![0; slots],
+            chain: vec![NO_PREFIX; slots],
+            cache: PrefixCache::new(),
+            peak_pages: 0,
+            pages_adopted: 0,
+            cache_flushes: 0,
         }
+    }
+
+    /// Pages one slot may need at worst: a slid slot carries a head
+    /// offset `< page_size`, so its table can span one page more than
+    /// `ceil(max_seq / page_size)`.
+    fn pages_per_slot(max_seq: usize, page_size: usize) -> usize {
+        (max_seq + page_size - 1) / page_size + 1
     }
 
     /// Which backend this arena runs on.
@@ -152,34 +281,98 @@ impl KvArena {
         }
     }
 
-    /// KV storage footprint in bytes (the serving-memory figure the
-    /// quantized backend exists to shrink).
-    pub fn bytes(&self) -> usize {
+    /// Positions per page.
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    /// Payload bytes of one page (K + V, codes/rows + scales, all
+    /// layers) — the unit of resident accounting.
+    fn page_payload_bytes(&self) -> usize {
         match &self.store {
-            KvStore::F32 { k, v } => {
-                let mut elems = 0usize;
-                for slab in k.iter().chain(v.iter()) {
-                    elems += slab.len();
-                }
-                elems * std::mem::size_of::<f32>()
-            }
-            KvStore::Quant(q) => q.bytes(),
+            KvStore::F32 { k, .. } => 2 * k.len() * self.page_size * self.d * 4,
+            KvStore::Quant(q) => q.page_bytes(),
         }
     }
 
-    /// Storage footprint of an arena with `slots` slots for this model
-    /// config on the given backend, without building it — lets reports
-    /// compare f32 vs quantized footprints cheaply. Quantized scales
-    /// are bf16-packed: 2 bytes per (slot, position, head) per tensor.
+    /// Bookkeeping bytes resident regardless of occupancy: pool
+    /// refcounts/free-list/attribution plus each slot's reserved page
+    /// table and head/len words.
+    fn meta_bytes(&self) -> usize {
+        self.pool.meta_bytes()
+            + self.slots * (KvArena::pages_per_slot(self.max_seq, self.page_size) * 4 + 2 * 8)
+    }
+
+    /// **Resident** KV bytes: live pages counted once each — pages
+    /// shared across slots are deduplicated by construction — plus page
+    /// tables, pool bookkeeping, and prefix-cache metadata. This is the
+    /// serving-memory figure the quantized backend and prefix sharing
+    /// exist to shrink.
+    pub fn bytes(&self) -> usize {
+        self.pool.allocated() * self.page_payload_bytes()
+            + self.meta_bytes()
+            + self.cache.meta_bytes()
+    }
+
+    /// Bytes the arena reserves up front (every page backed, tables at
+    /// capacity) — equals [`KvArena::footprint_paged`] for this
+    /// geometry.
+    pub fn capacity_bytes(&self) -> usize {
+        self.pool.n_pages() * self.page_payload_bytes() + self.meta_bytes()
+    }
+
+    /// High-water resident bytes since construction.
+    pub fn peak_bytes(&self) -> usize {
+        self.peak_pages * self.page_payload_bytes() + self.meta_bytes()
+    }
+
+    /// Pages currently resident (refcounted by a table or the cache).
+    pub fn resident_pages(&self) -> usize {
+        self.pool.allocated()
+    }
+
+    /// Full pages mapped read-only into slots via prefix adoption.
+    pub fn pages_shared(&self) -> u64 {
+        self.pages_adopted
+    }
+
+    /// Entries (full pages) currently in the prefix cache.
+    pub fn prefix_cache_pages(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Times allocation pressure flushed the prefix cache.
+    pub fn cache_flushes(&self) -> u64 {
+        self.cache_flushes
+    }
+
+    /// Reserved storage of an arena with `slots` slots for this model
+    /// config on the given backend at the default page size, without
+    /// building it — lets reports compare f32 vs quantized footprints
+    /// cheaply. Includes page-table/refcount metadata (satellite of the
+    /// paged refactor: the comparison stays honest under sharing).
     pub fn footprint(cfg: &TransformerConfig, slots: usize, kind: KvCacheKind) -> usize {
-        let positions = slots * cfg.max_seq;
-        match kind {
-            KvCacheKind::F32 => 2 * cfg.n_layers * positions * cfg.d_model * 4,
+        KvArena::footprint_paged(cfg, slots, kind, DEFAULT_KV_PAGE)
+    }
+
+    /// [`KvArena::footprint`] at an explicit page size. Quantized scales
+    /// are bf16-packed: 2 bytes per (position, head) per tensor.
+    pub fn footprint_paged(
+        cfg: &TransformerConfig,
+        slots: usize,
+        kind: KvCacheKind,
+        page_size: usize,
+    ) -> usize {
+        let ps = page_size.clamp(1, cfg.max_seq);
+        let pps = KvArena::pages_per_slot(cfg.max_seq, ps);
+        let n_pages = slots * pps;
+        let per_page = match kind {
+            KvCacheKind::F32 => 2 * cfg.n_layers * ps * cfg.d_model * 4,
             KvCacheKind::Quant(spec) => {
-                let code_bytes = if spec.kv_bits <= 8 { 1 } else { 2 };
-                2 * cfg.n_layers * positions * (cfg.d_model * code_bytes + cfg.n_heads * 2)
+                2 * cfg.n_layers * ps * (cfg.d_model * spec.code_bytes() + cfg.n_heads * 2)
             }
-        }
+        };
+        n_pages * per_page + n_pages * (4 + 4 + 8) + slots * (pps * 4 + 2 * 8)
     }
 
     pub fn slots(&self) -> usize {
@@ -190,17 +383,22 @@ impl KvArena {
         self.free.len()
     }
 
-    /// Claim a free slot (length 0), or `None` when all are in flight.
+    /// Claim a free slot (length 0, empty table), or `None` when all
+    /// are in flight.
     pub fn alloc(&mut self) -> Option<usize> {
         let slot = self.free.pop()?;
+        debug_assert!(self.tables[slot].is_empty() && self.heads[slot] == 0);
         self.lens[slot] = 0;
         self.live[slot] = true;
         Some(slot)
     }
 
-    /// Retire a sequence: its slot becomes reusable immediately.
+    /// Retire a sequence: every page reference is dropped (shared pages
+    /// survive under their other holders) and the slot becomes reusable
+    /// immediately.
     pub fn release(&mut self, slot: usize) {
         assert!(self.live[slot], "releasing a free slot");
+        self.drop_pages(slot);
         self.live[slot] = false;
         self.lens[slot] = 0;
         self.free.push(slot);
@@ -218,37 +416,61 @@ impl KvArena {
         self.lens[slot] >= self.max_seq
     }
 
+    /// Drop every page reference a slot holds and reset its sharing
+    /// state to the fresh-sequence shape. Pages return through the
+    /// pool's free list within its original capacity — no heap traffic.
+    fn drop_pages(&mut self, slot: usize) {
+        let KvArena { tables, pool, heads, shareable, registered, chain, .. } = self;
+        for &p in tables[slot].iter() {
+            pool.unref(p);
+        }
+        tables[slot].clear();
+        heads[slot] = 0;
+        shareable[slot] = true;
+        registered[slot] = 0;
+        chain[slot] = NO_PREFIX;
+    }
+
     /// Drop a slot's cached positions (window-slide: clear, then
-    /// re-prefill the kept tail so absolute positions are re-encoded).
+    /// re-prefill the kept tail so absolute positions are re-encoded —
+    /// which keeps the slid tail position-0-aligned and therefore
+    /// eligible for prefix sharing).
     pub fn reset_slot(&mut self, slot: usize) {
         assert!(self.live[slot], "resetting a free slot");
+        self.drop_pages(slot);
         self.lens[slot] = 0;
     }
 
     /// Drop the oldest `n` positions of one slot (sliding-window
-    /// generation without re-encoding). On the quantized backend the
-    /// codes **and** their scales slide together verbatim — a window
-    /// slide never requantizes anything, so repeated slides cannot
-    /// accumulate drift.
+    /// generation without re-encoding) — now a page-table operation:
+    /// whole head pages are unreferenced (a refcount decrement, no
+    /// memmove; data never moves, so repeated slides cannot accumulate
+    /// drift) and a sub-page remainder becomes the slot's head offset.
     /// NOTE: positional embeddings are absolute, so after sliding the
-    /// model sees shifted positions; for the pico models with short
-    /// windows this matches the serve example's windowed re-encode.
+    /// model sees shifted positions; the slot therefore drops out of
+    /// prefix registration until it is reset (its pages no longer
+    /// encode a position-0-aligned prefix).
     pub fn truncate_front(&mut self, slot: usize, n: usize) {
         let n = n.min(self.lens[slot]);
         if n == 0 {
             return;
         }
-        let (d, max_seq, len) = (self.d, self.max_seq, self.lens[slot]);
-        match &mut self.store {
-            KvStore::F32 { k, v } => {
-                let base = slot * max_seq * d;
-                for slab in k.iter_mut().chain(v.iter_mut()) {
-                    slab.copy_within(base + n * d..base + len * d, base);
-                }
-            }
-            KvStore::Quant(q) => q.truncate_front(slot, n, len),
-        }
+        self.heads[slot] += n;
         self.lens[slot] -= n;
+        let drop = self.heads[slot] / self.page_size;
+        for _ in 0..drop {
+            let page = self.tables[slot].remove(0);
+            self.pool.unref(page);
+        }
+        self.heads[slot] -= drop * self.page_size;
+        self.shareable[slot] = false;
+        self.registered[slot] = 0;
+        self.chain[slot] = NO_PREFIX;
+    }
+
+    /// Borrowed position → (page, offset) resolver for one slot.
+    fn page_map(&self, slot: usize) -> PageMap<'_> {
+        PageMap::new(&self.tables[slot], self.heads[slot], self.page_size)
     }
 
     /// Cached K/V rows of one position, dequantized on the quantized
@@ -256,22 +478,147 @@ impl KvArena {
     /// tests rely on.
     pub fn kv_row(&self, layer: usize, slot: usize, pos: usize) -> (Vec<f32>, Vec<f32>) {
         assert!(pos < self.lens[slot], "position {pos} not cached");
+        let map = self.page_map(slot);
         match &self.store {
             KvStore::F32 { k, v } => {
-                let at = (slot * self.max_seq + pos) * self.d;
+                let (pg, off) = map.locate(pos);
+                let at = (pg * self.page_size + off) * self.d;
                 (k[layer][at..at + self.d].to_vec(), v[layer][at..at + self.d].to_vec())
             }
             KvStore::Quant(q) => {
-                let view = q.slot_view(layer, slot);
+                let view = q.slot_view(layer, map);
                 (view.dequant_k_row(pos), view.dequant_v_row(pos))
             }
         }
     }
 
+    /// Grow a slot's page table until it covers `new_len` cached
+    /// positions. Allocation is a free-list pop; on exhaustion the
+    /// prefix cache is flushed (dropping its holds frees every page no
+    /// live table still references) and the pop retried — the pool is
+    /// sized so that live slots alone can never exhaust it.
+    fn ensure_capacity(&mut self, slot: usize, new_len: usize) {
+        let needed = (self.heads[slot] + new_len + self.page_size - 1) / self.page_size;
+        while self.tables[slot].len() < needed {
+            let page = match self.pool.alloc() {
+                Some(p) => p,
+                None => {
+                    self.flush_prefix_cache();
+                    self.pool
+                        .alloc()
+                        .expect("page pool exhausted even after prefix-cache flush")
+                }
+            };
+            self.tables[slot].push(page);
+        }
+        self.peak_pages = self.peak_pages.max(self.pool.allocated());
+    }
+
+    /// Drop every prefix-cache entry (the whole eviction policy: under
+    /// allocation pressure the cache is flushed outright). Pages mapped
+    /// into live slots survive under their table refcounts; only future
+    /// admissions miss. Every slot's registration chain is restarted —
+    /// entry ids are dangling after a flush, and re-inserting a slot's
+    /// full pages later is cheap and idempotent.
+    pub fn flush_prefix_cache(&mut self) {
+        let KvArena { cache, pool, registered, chain, .. } = self;
+        cache.flush(|p| pool.unref(p));
+        for r in registered.iter_mut() {
+            *r = 0;
+        }
+        for c in chain.iter_mut() {
+            *c = NO_PREFIX;
+        }
+        self.cache_flushes += 1;
+    }
+
+    /// Map already-encoded full prefix pages of `tokens` read-only into
+    /// a fresh slot's table (refcount bumps — no data is copied or
+    /// recomputed). Walks the cache's hash chain page by page as far as
+    /// it matches, but always leaves at least one token un-adopted so
+    /// the admission still runs a real prefill producing final logits.
+    /// Returns `(positions mapped, fill-time overflow events credited)`
+    /// — the credited events are exactly what prefilling those
+    /// positions would have cost, which keeps per-request overflow
+    /// attribution bit-identical with sharing on vs off.
+    pub fn adopt_prefix(&mut self, slot: usize, tokens: &[u16]) -> (usize, u64) {
+        assert!(
+            self.live[slot] && self.lens[slot] == 0 && self.tables[slot].is_empty(),
+            "prefix adoption needs a fresh slot"
+        );
+        let ps = self.page_size;
+        let mut mapped = 0usize;
+        let mut ovf = 0u64;
+        let mut parent = NO_PREFIX;
+        for chunk in tokens.chunks_exact(ps) {
+            if mapped + ps >= tokens.len() {
+                break;
+            }
+            let Some((entry, page)) = self.cache.lookup(parent, chunk) else { break };
+            self.pool.retain(page);
+            self.tables[slot].push(page);
+            ovf += self.pool.ovf(page);
+            parent = entry;
+            mapped += ps;
+        }
+        if mapped > 0 {
+            self.lens[slot] = mapped;
+            self.chain[slot] = parent;
+            self.registered[slot] = mapped / ps;
+            self.pages_adopted += (mapped / ps) as u64;
+        }
+        (mapped, ovf)
+    }
+
+    /// File this slot's full, position-0-aligned pages covering
+    /// `prefix` (the tokens encoded so far) in the prefix cache, so
+    /// later admissions sharing the prefix can adopt them. Idempotent
+    /// per page; the cache takes its own refcount on each page it
+    /// indexes. No-op for slots that slid via `truncate_front` (their
+    /// pages are position-shifted) — serve-path slides reset and
+    /// re-encode, so they stay eligible.
+    pub fn register_prefix(&mut self, slot: usize, prefix: &[u16]) {
+        if !self.shareable[slot] || self.heads[slot] != 0 {
+            return;
+        }
+        let ps = self.page_size;
+        let full = prefix.len().min(self.lens[slot]) / ps;
+        while self.registered[slot] < full {
+            let k = self.registered[slot];
+            let chunk = &prefix[k * ps..(k + 1) * ps];
+            let page = self.tables[slot][k];
+            let parent = self.chain[slot];
+            let entry = match self.cache.lookup(parent, chunk) {
+                // already cached (another admission registered the same
+                // prefix): keep this slot's private page mapped, just
+                // advance the chain anchor
+                Some((e, _)) => e,
+                None => {
+                    self.pool.retain(page);
+                    self.cache.insert(parent, chunk, page)
+                }
+            };
+            self.chain[slot] = entry;
+            self.registered[slot] += 1;
+        }
+    }
+
+    /// Record fill-time overflow events of the row at logical `pos`
+    /// onto the page holding it (see module docs: adopters credit these
+    /// instead of re-incurring them). Appends are monotone at the
+    /// slot's high-water position, so the target page is always private
+    /// here — shared pages are full and never receive new events.
+    fn record_fill_ovf(&mut self, slot: usize, pos: usize, events: u64) {
+        let idx = self.heads[slot] + pos;
+        let page = self.tables[slot][idx / self.page_size];
+        self.pool.record_ovf(page, events);
+    }
+
     /// Write a chunk of `n` consecutive positions' K/V rows into a slot
-    /// starting at `pos` — one bulk copy on the f32 backend,
+    /// starting at `pos` — page-run-wise copies on the f32 backend,
     /// quantize-at-append per position on the quantized backend
-    /// ([`QuantKv::append_rows`]). `n == 1` is the decode-row case.
+    /// ([`QuantKv::append_rows`]). `n == 1` is the decode-row case. The
+    /// caller (the ragged step) has already ensured table capacity.
     #[inline]
     fn append_kv_rows_at(
         &mut self,
@@ -283,16 +630,24 @@ impl KvArena {
         v_rows: &[f32],
     ) {
         debug_assert!(pos + n <= self.max_seq);
-        let (d, max_seq) = (self.d, self.max_seq);
-        debug_assert_eq!(k_rows.len(), n * d);
-        debug_assert_eq!(v_rows.len(), n * d);
-        match &mut self.store {
+        debug_assert_eq!(k_rows.len(), n * self.d);
+        debug_assert_eq!(v_rows.len(), n * self.d);
+        let KvArena { store, tables, heads, page_size, d, .. } = self;
+        let (ps, d) = (*page_size, *d);
+        let map = PageMap::new(&tables[slot], heads[slot], ps);
+        match store {
             KvStore::F32 { k, v } => {
-                let at = (slot * max_seq + pos) * d;
-                k[layer][at..at + n * d].copy_from_slice(k_rows);
-                v[layer][at..at + n * d].copy_from_slice(v_rows);
+                let mut i = 0usize;
+                while i < n {
+                    let run = map.run(pos + i, n - i);
+                    let (pg, off) = map.locate(pos + i);
+                    let at = (pg * ps + off) * d;
+                    k[layer][at..at + run * d].copy_from_slice(&k_rows[i * d..(i + run) * d]);
+                    v[layer][at..at + run * d].copy_from_slice(&v_rows[i * d..(i + run) * d]);
+                    i += run;
+                }
             }
-            KvStore::Quant(q) => q.append_rows(layer, slot, pos, n, k_rows, v_rows),
+            KvStore::Quant(q) => q.append_rows(layer, &map, pos, n, k_rows, v_rows),
         }
     }
 
@@ -300,6 +655,10 @@ impl KvArena {
     fn advance(&mut self, slot: usize, n: usize) {
         self.lens[slot] += n;
         debug_assert!(self.lens[slot] <= self.max_seq);
+        debug_assert!(
+            self.heads[slot] + self.lens[slot] <= self.tables[slot].len() * self.page_size,
+            "advance past the slot's page table"
+        );
     }
 }
 
@@ -433,20 +792,26 @@ impl Transformer {
     /// prefill chunks amortize the kernel across the in-flight decode
     /// batch instead of blocking it. Attention stays ragged per group:
     /// chunk row `i` attends causally over its slot's cached prefix
-    /// plus chunk rows `0..=i` ([`attend_chunk`] /
-    /// [`attend_chunk_quant`]), on the arena's backend.
+    /// plus chunk rows `0..=i` ([`attend_chunk_rows`] /
+    /// [`attend_chunk_quant`]), resolving positions through the slot's
+    /// page table.
     ///
     /// **Token-exactness:** every row's arithmetic (embedding at its
     /// absolute position, row-independent linears, attention over its
     /// own slot only) is identical no matter how rows are grouped into
-    /// chunks or batched with other sequences — so any chunked schedule
-    /// reproduces sequential decode bit for bit (tested in
+    /// chunks or batched with other sequences — and independent of the
+    /// physical pages behind the slot (the page map only changes
+    /// *where* a row is stored, never its value) — so any chunked
+    /// schedule reproduces sequential decode bit for bit, with or
+    /// without shared prefix pages (tested in
     /// `tests/chunked_prefill.rs`).
     ///
     /// **Attribution:** `group_ovf[g]` is incremented by exactly the
     /// integer-datapath overflow events group `g`'s rows triggered
     /// (linear rows + its own attention matmuls) — disjoint across
-    /// groups and invariant to step composition.
+    /// groups and invariant to step composition. Per-row fill events
+    /// are also recorded onto the pages holding the appended rows, the
+    /// record prefix adoption credits from.
     ///
     /// One logits row per **group** (its last row — the only one a
     /// scheduler can ever sample from) lands in
@@ -491,6 +856,12 @@ impl Transformer {
             );
         }
         assert_eq!(cursor, n, "tokens beyond the last group");
+        // page tables grown up front (free-list pops, no heap traffic),
+        // so the append/attention loops below never see a missing page
+        for g in groups {
+            let target = arena.len(g.slot) + g.len;
+            arena.ensure_capacity(g.slot, target);
+        }
 
         let DecodeScratch { lin, attn, step, .. } = scratch;
         step.ensure(n, g_n, d, d_ff, vocab);
@@ -543,24 +914,33 @@ impl Transformer {
                 );
             }
             // ragged causal attention: each group over its own slot
-            // only (prefix + its just-appended chunk rows), on the
-            // arena's backend, all through one reused workspace
+            // only (prefix + its just-appended chunk rows), positions
+            // resolved through the slot's page map, all through one
+            // reused workspace
             for g in groups {
                 let t0 = arena.len(g.slot);
                 let qrows = &q[g.start * d..(g.start + g.len) * d];
                 let orows = &mut mix[g.start * d..(g.start + g.len) * d];
+                let map = PageMap::new(&arena.tables[g.slot], arena.heads[g.slot], arena.page_size);
                 match &arena.store {
                     KvStore::F32 { k, v } => {
-                        let base = g.slot * arena.max_seq * d;
-                        let kc = &k[bi][base..base + (t0 + g.len) * d];
-                        let vc = &v[bi][base..base + (t0 + g.len) * d];
-                        attend_chunk(qrows, kc, vc, t0, g.len, d, self.cfg.n_heads, attn, orows);
+                        let view = PagedKvRows { k: &k[bi], v: &v[bi], map, d };
+                        attend_chunk_rows(
+                            qrows,
+                            &view,
+                            t0,
+                            g.len,
+                            d,
+                            self.cfg.n_heads,
+                            attn,
+                            orows,
+                        );
                     }
                     KvStore::Quant(qkv) => {
                         let spec = qkv.spec;
                         let ovf = attend_chunk_quant(
                             qrows,
-                            &qkv.slot_view(bi, g.slot),
+                            &qkv.slot_view(bi, map),
                             t0,
                             g.len,
                             d,
@@ -568,13 +948,9 @@ impl Transformer {
                             &spec,
                             attn,
                             orows,
+                            &mut row_ovf[g.start..g.start + g.len],
                         );
-                        if ovf > 0 {
-                            // a chunk belongs entirely to one request;
-                            // the group fold below picks this up
-                            row_ovf[g.start] += ovf;
-                            attn_total += ovf;
-                        }
+                        attn_total += ovf;
                     }
                 }
             }
@@ -604,6 +980,19 @@ impl Transformer {
             // unified accounting: attention events join the model-wide
             // overflow counter next to the quantized-linear events
             self.add_attention_overflows(attn_total);
+        }
+        // fill-time page attribution: each appended row's complete event
+        // count (all its linear rows + its own attention; the float LM
+        // head below contributes none) lands on the page holding it, so
+        // a later adopter of that page credits exactly these events
+        for g in groups {
+            let pos0 = arena.len(g.slot);
+            for i in 0..g.len {
+                let events = row_ovf[g.start + i];
+                if events > 0 {
+                    arena.record_fill_ovf(g.slot, pos0 + i, events);
+                }
+            }
         }
         for g in groups {
             arena.advance(g.slot, g.len);
@@ -660,7 +1049,8 @@ impl Transformer {
     /// attention runs position by position over the just-appended
     /// K/V — exactly the arithmetic decode uses, so prefill-then-decode
     /// equals pure decode bit for bit, on an empty **or** partially
-    /// filled slot.
+    /// filled slot (including a slot holding adopted prefix pages:
+    /// prefill then starts at the first unshared position).
     ///
     /// The final position's logits land in
     /// `scratch.step.logits[..vocab]`; overflow events are accumulated
@@ -851,6 +1241,40 @@ mod tests {
         assert!(cache.is_empty());
     }
 
+    /// A slide is a page-table operation now: dropping whole head pages
+    /// and carrying a mid-page head offset must expose exactly the
+    /// surviving rows, bit-identical, and return the dropped pages to
+    /// the pool — on both backends.
+    #[test]
+    fn truncate_front_drops_head_pages_and_preserves_rows() {
+        for kind in [KvCacheKind::F32, KvCacheKind::Quant(KvQuantSpec::int8())] {
+            let m = model(false);
+            let mut arena = KvArena::with_kind_paged(&m, 1, kind, 4);
+            assert_eq!(arena.page_size(), 4);
+            let slot = arena.alloc().unwrap();
+            for t in 0..10u16 {
+                m.decode_step_batch(&[t], &[slot], &mut arena);
+            }
+            assert_eq!(arena.resident_pages(), 3, "10 rows over 4-sized pages");
+            let snapshot: Vec<_> =
+                (5..10).map(|p| arena.kv_row(1, slot, p)).collect();
+            // drop 5: one whole page (4 rows) + head offset 1
+            arena.truncate_front(slot, 5);
+            assert_eq!(arena.len(slot), 5);
+            assert_eq!(arena.resident_pages(), 2, "head page went back to the pool");
+            for (i, want) in snapshot.iter().enumerate() {
+                assert_eq!(
+                    &arena.kv_row(1, slot, i),
+                    want,
+                    "kind={kind:?} surviving row {i} drifted across the slide"
+                );
+            }
+            // the slot keeps decoding correctly from its slid state
+            m.decode_step_batch(&[7], &[slot], &mut arena);
+            assert_eq!(arena.len(slot), 6);
+        }
+    }
+
     /// THE batched-decode parity property: stacking several sequences
     /// into one `decode_step_batch` call must produce, for every
     /// sequence, logits **bit-identical** to decoding it alone through a
@@ -955,8 +1379,10 @@ mod tests {
         assert_eq!(arena.len(s0), 2);
         assert_eq!(arena.len(s1), 1);
         // retire s0; the slot comes back empty and decodes a fresh
-        // sequence bit-exactly
+        // sequence bit-exactly, and its pages went back to the pool
+        let resident_before = arena.resident_pages();
         arena.release(s0);
+        assert!(arena.resident_pages() < resident_before, "released pages must free");
         assert_eq!(arena.free_slots(), 1);
         let s2 = arena.alloc().unwrap();
         assert_eq!(s2, s0, "LIFO free list must reuse the retired slot");
@@ -989,18 +1415,28 @@ mod tests {
     }
 
     #[test]
-    fn arena_bytes_and_footprint_agree() {
+    fn arena_capacity_and_footprint_agree() {
         let m = model(false);
         for kind in [
             KvCacheKind::F32,
             KvCacheKind::Quant(KvQuantSpec::int8()),
             KvCacheKind::Quant(KvQuantSpec::int16()),
         ] {
+            for ps in [4usize, 8, 16, 64] {
+                let arena = KvArena::with_kind_paged(&m, 3, kind, ps);
+                assert_eq!(
+                    arena.capacity_bytes(),
+                    KvArena::footprint_paged(&m.cfg, 3, kind, ps),
+                    "{kind:?} ps={ps} footprint formula disagrees with the arena"
+                );
+            }
             let arena = KvArena::with_kind(&m, 3, kind);
+            assert_eq!(arena.capacity_bytes(), KvArena::footprint(&m.cfg, 3, kind));
+            // a fresh arena holds no pages: resident = metadata only
             assert_eq!(
                 arena.bytes(),
-                KvArena::footprint(&m.cfg, 3, kind),
-                "{kind:?} footprint formula disagrees with the arena"
+                arena.capacity_bytes() - arena.pool.n_pages() * arena.page_payload_bytes(),
+                "fresh arena must be metadata-only resident"
             );
         }
         // i8 codes shrink the arena; the exact ≤30% bar (wide heads) is
@@ -1008,6 +1444,97 @@ mod tests {
         let f = KvArena::footprint(&m.cfg, 4, KvCacheKind::F32);
         let q = KvArena::footprint(&m.cfg, 4, KvCacheKind::Quant(KvQuantSpec::int8()));
         assert!(q < f / 2, "quantized arena must at least halve f32 ({q} vs {f})");
+    }
+
+    /// Prefix sharing end to end at arena level: register a prefilled
+    /// slot's full pages, adopt them into a fresh slot, prefill only the
+    /// tail — logits, cached rows, overflow attribution, and resident
+    /// pages must all be exactly right, on both backends.
+    #[test]
+    fn shared_prefix_adoption_is_bit_exact_and_deduplicated() {
+        // narrow attention register so overflow credit is live on quant
+        for kind in [KvCacheKind::F32, KvCacheKind::Quant(KvQuantSpec::new(8, 8, Some(6)))] {
+            let m = model(false);
+            let ps = 4usize;
+            let prompt: Vec<u16> = vec![3, 1, 4, 1, 5, 9, 2, 6, 5];
+            // solo reference: a private arena, no sharing anywhere
+            let mut solo = KvArena::with_kind_paged(&m, 1, kind, ps);
+            let s = solo.alloc().unwrap();
+            let mut ovf_solo = 0u64;
+            let want = m.prefill_slot_counted(&prompt, s, &mut solo, &mut ovf_solo);
+            // shared arena: A prefills + registers, B adopts + prefills
+            // only the unshared tail
+            let mut arena = KvArena::with_kind_paged(&m, 2, kind, ps);
+            let a = arena.alloc().unwrap();
+            let mut ovf_a = 0u64;
+            let got_a = m.prefill_slot_counted(&prompt, a, &mut arena, &mut ovf_a);
+            assert_eq!(got_a, want, "kind={kind:?}: slot A diverged from solo");
+            assert_eq!(ovf_a, ovf_solo);
+            arena.register_prefix(a, &prompt);
+            assert_eq!(arena.prefix_cache_pages(), 2, "9 tokens / ps=4 → 2 full pages");
+            let pages_a = arena.resident_pages();
+            let b = arena.alloc().unwrap();
+            let (mapped, ovf_adopt) = arena.adopt_prefix(b, &prompt);
+            assert_eq!(mapped, 8, "two full pages adopted");
+            assert_eq!(arena.len(b), 8);
+            assert_eq!(
+                arena.resident_pages(),
+                pages_a,
+                "adoption maps existing pages — nothing new resident"
+            );
+            assert_eq!(arena.pages_shared(), 2);
+            let mut ovf_tail = 0u64;
+            let got_b = m.prefill_slot_counted(&prompt[mapped..], b, &mut arena, &mut ovf_tail);
+            assert_eq!(got_b, want, "kind={kind:?}: adopted prefill diverged");
+            assert_eq!(
+                ovf_adopt + ovf_tail,
+                ovf_solo,
+                "kind={kind:?}: credited + tail events must equal the solo count"
+            );
+            for layer in 0..m.cfg.n_layers {
+                for pos in 0..prompt.len() {
+                    assert_eq!(
+                        arena.kv_row(layer, b, pos),
+                        solo.kv_row(layer, s, pos),
+                        "kind={kind:?} layer {layer} pos {pos}"
+                    );
+                }
+            }
+            // B's tail page is private: releasing B keeps A intact
+            arena.release(b);
+            assert_eq!(arena.kv_row(0, a, 0), solo.kv_row(0, s, 0));
+        }
+    }
+
+    /// Adoption never swallows a whole prompt (the admission must still
+    /// prefill ≥ 1 token for final logits), and a truncated slot drops
+    /// out of registration.
+    #[test]
+    fn adoption_and_registration_guards() {
+        let m = model(false);
+        let ps = 4usize;
+        let mut arena = KvArena::with_kind_paged(&m, 2, KvCacheKind::F32, ps);
+        let prompt: Vec<u16> = (0..8).map(|i| i as u16).collect(); // exactly 2 pages
+        let a = arena.alloc().unwrap();
+        m.prefill_slot(&prompt, a, &mut arena);
+        arena.register_prefix(a, &prompt);
+        let b = arena.alloc().unwrap();
+        let (mapped, _) = arena.adopt_prefix(b, &prompt);
+        assert_eq!(mapped, 4, "only one page: the second would leave nothing to prefill");
+        arena.release(b);
+        // a slot that slid via truncate_front is position-shifted and
+        // must refuse to register
+        arena.truncate_front(a, 2);
+        let before = arena.prefix_cache_pages();
+        arena.register_prefix(a, &prompt[2..]);
+        assert_eq!(arena.prefix_cache_pages(), before, "slid slot must not register");
+        // flushing invalidates entries and restarts chains safely
+        arena.flush_prefix_cache();
+        assert_eq!(arena.prefix_cache_pages(), 0);
+        assert_eq!(arena.cache_flushes(), 1);
+        let c = arena.alloc().unwrap();
+        let (mapped, _) = arena.adopt_prefix(c, &prompt);
+        assert_eq!(mapped, 0, "flushed cache has nothing to adopt");
     }
 
     #[test]
@@ -1041,7 +1568,8 @@ mod tests {
     /// THE chunked-prefill kernel property: splitting a prompt into
     /// arbitrary chunks across successive ragged steps must produce the
     /// same cached K/V rows and the same final logits as one-shot
-    /// prefill — bit for bit, on both backends.
+    /// prefill — bit for bit, on both backends, and regardless of the
+    /// page size the rows land in.
     #[test]
     fn chunked_prefill_matches_whole_prefill() {
         for kind in [KvCacheKind::F32, KvCacheKind::Quant(KvQuantSpec::int8())] {
@@ -1049,43 +1577,46 @@ mod tests {
                 let m = model(parallel);
                 let vocab = m.cfg.vocab;
                 let prompt: Vec<u16> = vec![3, 1, 4, 1, 5, 9, 2, 6, 5, 3, 5];
-                // reference: whole-prompt prefill
+                // reference: whole-prompt prefill at the default page size
                 let mut arena_w = KvArena::with_kind(&m, 1, kind);
                 let sw = arena_w.alloc().unwrap();
                 let mut ovf_w = 0u64;
                 let want = m.prefill_slot_counted(&prompt, sw, &mut arena_w, &mut ovf_w);
-                for chunks in [&[1usize, 7, 3][..], &[4, 4, 3], &[11], &[1; 11]] {
-                    let mut arena = KvArena::with_kind(&m, 1, kind);
-                    let slot = arena.alloc().unwrap();
-                    let mut scratch = DecodeScratch::new();
-                    let mut ovf = 0u64;
-                    let mut at = 0usize;
-                    for &c in chunks {
-                        let group = [RowGroup { slot, start: 0, len: c }];
-                        let mut g_ovf = [0u64; 1];
-                        m.decode_step_ragged_scratch(
-                            &prompt[at..at + c],
-                            &group,
-                            &mut arena,
-                            &mut g_ovf,
-                            &mut scratch,
-                        );
-                        ovf += g_ovf[0];
-                        at += c;
-                    }
-                    assert_eq!(
-                        &scratch.step.logits[..vocab],
-                        &want[..],
-                        "kind={kind:?} parallel={parallel} chunks={chunks:?}: logits diverge"
-                    );
-                    assert_eq!(ovf, ovf_w, "chunked overflow attribution diverges");
-                    for layer in 0..m.cfg.n_layers {
-                        for pos in 0..prompt.len() {
-                            assert_eq!(
-                                arena.kv_row(layer, slot, pos),
-                                arena_w.kv_row(layer, sw, pos),
-                                "layer {layer} pos {pos} cached rows diverge"
+                for ps in [3usize, 16] {
+                    for chunks in [&[1usize, 7, 3][..], &[4, 4, 3], &[11], &[1; 11]] {
+                        let mut arena = KvArena::with_kind_paged(&m, 1, kind, ps);
+                        let slot = arena.alloc().unwrap();
+                        let mut scratch = DecodeScratch::new();
+                        let mut ovf = 0u64;
+                        let mut at = 0usize;
+                        for &c in chunks {
+                            let group = [RowGroup { slot, start: 0, len: c }];
+                            let mut g_ovf = [0u64; 1];
+                            m.decode_step_ragged_scratch(
+                                &prompt[at..at + c],
+                                &group,
+                                &mut arena,
+                                &mut g_ovf,
+                                &mut scratch,
                             );
+                            ovf += g_ovf[0];
+                            at += c;
+                        }
+                        assert_eq!(
+                            &scratch.step.logits[..vocab],
+                            &want[..],
+                            "kind={kind:?} parallel={parallel} ps={ps} \
+                             chunks={chunks:?}: logits diverge"
+                        );
+                        assert_eq!(ovf, ovf_w, "chunked overflow attribution diverges");
+                        for layer in 0..m.cfg.n_layers {
+                            for pos in 0..prompt.len() {
+                                assert_eq!(
+                                    arena.kv_row(layer, slot, pos),
+                                    arena_w.kv_row(layer, sw, pos),
+                                    "layer {layer} pos {pos} cached rows diverge"
+                                );
+                            }
                         }
                     }
                 }

@@ -5,10 +5,17 @@
 //! guarantee; the KV arena was the last float island: `f32` keys/values
 //! dominate serving memory and the attention score (q·kᵀ) and value
 //! (p·V) matmuls ran outside the accumulator machinery. This module
-//! stores per-layer K/V as narrow integer codes with **per-(slot,
-//! position, head) scales**, quantized once at append time (prefill and
-//! decode) and never requantized afterwards — window slides via
-//! [`QuantKv::truncate_front`] move codes and scales verbatim.
+//! stores per-layer K/V as narrow integer codes with **per-(page,
+//! offset, head) scales**, quantized once at append time (prefill and
+//! decode) and never requantized afterwards.
+//!
+//! Storage is **paged** ([`super::paging`]): slabs are indexed by
+//! physical page id, and every accessor resolves a logical position
+//! through a borrowed [`PageMap`] — the single indirection point of the
+//! paged arena. Quantize-at-append makes a *full* page bit-immutable,
+//! which is what lets the arena share prefix pages across sequences by
+//! refcount without weakening bit-exactness: every reader decodes the
+//! same codes against the same scales.
 //!
 //! Scales are packed as **bf16-in-u16** (the top 16 bits of the f32,
 //! rounded *up* so the decoded scale can never under-cover the head's
@@ -30,13 +37,14 @@
 //!
 //! Reads happen through [`QuantKvSlot`]'s **bulk gather accessors**
 //! ([`QuantKvSlot::gather_k_head`] / [`QuantKvSlot::gather_v_head_t`]):
-//! the storage-width enum is matched **once per call**, after which the
-//! head's contiguous K segment per position is widened with a tight
-//! slice-to-slice loop (and V with a blocked transposing copy) — the
-//! memcpy-cost replacement for the per-element `CodeSlab::get` gathers
-//! the attention inner loop used to issue.
+//! the storage-width enum is matched **once per page run**, after which
+//! the head's contiguous K segment per position is widened with a tight
+//! slice-to-slice loop (and V with a blocked transposing copy). Inner
+//! loops never cross a page boundary, so the memcpy-shaped fast paths
+//! survive the paging indirection.
 
 use crate::accum::simulator::OverflowMode;
+use crate::model::paging::PageMap;
 use crate::quant::bounds::attention_inner_bits;
 
 /// Configuration of the quantized-KV attention datapath.
@@ -84,6 +92,16 @@ impl KvQuantSpec {
     pub fn code_max(&self) -> i32 {
         (1i32 << (self.kv_bits - 1)) - 1
     }
+
+    /// Bytes one stored code occupies (i8 below 9 bits, i16 above).
+    #[inline]
+    pub fn code_bytes(&self) -> usize {
+        if self.kv_bits <= 8 {
+            1
+        } else {
+            2
+        }
+    }
 }
 
 /// Which backend a KV arena runs on.
@@ -91,7 +109,7 @@ impl KvQuantSpec {
 pub enum KvCacheKind {
     /// Full-precision f32 keys/values, float attention (the baseline).
     F32,
-    /// Integer codes + per-(slot, position, head) scales, attention on
+    /// Integer codes + per-(page, offset, head) scales, attention on
     /// the multi-stage integer datapath.
     Quant(KvQuantSpec),
 }
@@ -168,13 +186,6 @@ impl CodeSlab {
         }
     }
 
-    pub fn copy_within(&mut self, src: std::ops::Range<usize>, dest: usize) {
-        match self {
-            CodeSlab::I8(v) => v.copy_within(src, dest),
-            CodeSlab::I16(v) => v.copy_within(src, dest),
-        }
-    }
-
     pub fn bytes(&self) -> usize {
         match self {
             CodeSlab::I8(v) => v.len(),
@@ -211,47 +222,53 @@ fn gather_rows<T: Copy + Into<i32>>(
     }
 }
 
-/// Blocked transposing gather of one head into a `(hd, t_len)`
-/// row-major panel (`out[i * t_len + s] = src[base + s*stride + i]`) —
-/// the value-matmul operand layout. 32×32 blocks keep both streams
-/// cache-resident.
+/// Blocked transposing gather of `n_rows` positions of one head into
+/// columns `s0..s0 + n_rows` of a `(hd, t_cols)` row-major panel
+/// (`out[i * t_cols + s0 + s] = src[base + s*stride + i]`) — the
+/// value-matmul operand layout, fillable one page run at a time. 32×32
+/// blocks keep both streams cache-resident.
 fn gather_rows_t<T: Copy + Into<i32>>(
     src: &[T],
     base: usize,
     stride: usize,
-    t_len: usize,
+    n_rows: usize,
     hd: usize,
+    s0: usize,
+    t_cols: usize,
     out: &mut [i32],
 ) {
-    debug_assert!(out.len() >= t_len * hd);
+    debug_assert!(s0 + n_rows <= t_cols);
+    debug_assert!(out.len() >= hd * t_cols);
     const TB: usize = 32;
-    for sb in (0..t_len).step_by(TB) {
-        let se = (sb + TB).min(t_len);
+    for sb in (0..n_rows).step_by(TB) {
+        let se = (sb + TB).min(n_rows);
         for ib in (0..hd).step_by(TB) {
             let ie = (ib + TB).min(hd);
             for s in sb..se {
                 let row = &src[base + s * stride + ib..base + s * stride + ie];
                 for (i, &v) in row.iter().enumerate() {
-                    out[(ib + i) * t_len + s] = v.into();
+                    out[(ib + i) * t_cols + s0 + s] = v.into();
                 }
             }
         }
     }
 }
 
-/// Quantized multi-sequence K/V storage: per layer, `slots × max_seq`
+/// Quantized K/V page storage: per layer, `n_pages × page_size`
 /// positions of `d` codes plus `n_heads` bf16 scales per position per
-/// tensor.
+/// tensor, indexed by **physical page id**. Which pages form a
+/// sequence — and in what order — is the arena's business; every
+/// accessor here takes a [`PageMap`].
 #[derive(Clone, Debug)]
 pub struct QuantKv {
     pub spec: KvQuantSpec,
     d: usize,
-    max_seq: usize,
+    page_size: usize,
     n_heads: usize,
-    /// [layer] → slots·max_seq·d codes.
+    /// [layer] → n_pages·page_size·d codes.
     k_codes: Vec<CodeSlab>,
     v_codes: Vec<CodeSlab>,
-    /// [layer] → slots·max_seq·n_heads per-(slot, position, head)
+    /// [layer] → n_pages·page_size·n_heads per-(page, offset, head)
     /// bf16-packed scales.
     k_scales: Vec<Vec<u16>>,
     v_scales: Vec<Vec<u16>>,
@@ -261,18 +278,19 @@ impl QuantKv {
     pub fn new(
         spec: KvQuantSpec,
         n_layers: usize,
-        slots: usize,
-        max_seq: usize,
+        n_pages: usize,
+        page_size: usize,
         d: usize,
         n_heads: usize,
     ) -> QuantKv {
         assert!(n_heads >= 1 && d % n_heads == 0, "d must divide n_heads");
-        let codes = slots * max_seq * d;
-        let scales = slots * max_seq * n_heads;
+        assert!(page_size >= 1, "pages hold at least one position");
+        let codes = n_pages * page_size * d;
+        let scales = n_pages * page_size * n_heads;
         QuantKv {
             spec,
             d,
-            max_seq,
+            page_size,
             n_heads,
             k_codes: (0..n_layers).map(|_| CodeSlab::new(spec.kv_bits, codes)).collect(),
             v_codes: (0..n_layers).map(|_| CodeSlab::new(spec.kv_bits, codes)).collect(),
@@ -281,54 +299,59 @@ impl QuantKv {
         }
     }
 
-    #[inline]
-    fn code_base(&self, slot: usize, pos: usize) -> usize {
-        (slot * self.max_seq + pos) * self.d
+    pub fn page_size(&self) -> usize {
+        self.page_size
     }
 
     #[inline]
-    fn scale_base(&self, slot: usize, pos: usize) -> usize {
-        (slot * self.max_seq + pos) * self.n_heads
+    fn code_base(&self, page: usize, off: usize) -> usize {
+        (page * self.page_size + off) * self.d
     }
 
-    /// Quantize one position's K/V rows into a slot — per-head symmetric
-    /// scales (bf16-packed), codes clamped to ±code_max. This is the
-    /// only place K/V values are ever quantized; slides and reuse move
-    /// codes verbatim.
+    #[inline]
+    fn scale_base(&self, page: usize, off: usize) -> usize {
+        (page * self.page_size + off) * self.n_heads
+    }
+
+    /// Quantize one position's K/V rows — per-head symmetric scales
+    /// (bf16-packed), codes clamped to ±code_max. This is the only
+    /// place K/V values are ever quantized; a page, once full, is never
+    /// rewritten (sharing and slides move page *references*, not data).
     pub fn append_row(
         &mut self,
         layer: usize,
-        slot: usize,
+        map: &PageMap<'_>,
         pos: usize,
         k_row: &[f32],
         v_row: &[f32],
     ) {
         debug_assert_eq!(k_row.len(), self.d);
         debug_assert_eq!(v_row.len(), self.d);
-        debug_assert!(pos < self.max_seq);
+        debug_assert_eq!(map.page_size(), self.page_size);
+        let (pg, off) = map.locate(pos);
         let hd = self.d / self.n_heads;
         let qmax = self.spec.code_max();
-        let cb = self.code_base(slot, pos);
-        let sb = self.scale_base(slot, pos);
+        let cb = self.code_base(pg, off);
+        let sb = self.scale_base(pg, off);
         for h in 0..self.n_heads {
-            let off = h * hd;
+            let o = h * hd;
             self.k_scales[layer][sb + h] =
-                quantize_head(&k_row[off..off + hd], qmax, &mut self.k_codes[layer], cb + off);
+                quantize_head(&k_row[o..o + hd], qmax, &mut self.k_codes[layer], cb + o);
             self.v_scales[layer][sb + h] =
-                quantize_head(&v_row[off..off + hd], qmax, &mut self.v_codes[layer], cb + off);
+                quantize_head(&v_row[o..o + hd], qmax, &mut self.v_codes[layer], cb + o);
         }
     }
 
-    /// Quantize a **chunk** of `n` consecutive positions into a slot —
-    /// the ragged-step prefill append path. `k_rows`/`v_rows` are
-    /// `(n, d)` row-major; position `pos + i` receives row `i`.
-    /// Identical, row for row, to `n` calls of [`QuantKv::append_row`]
-    /// (each position's scales depend only on its own row), so chunked
-    /// and token-by-token appends fill the slab with the same bits.
+    /// Quantize a **chunk** of `n` consecutive positions — the
+    /// ragged-step prefill append path. `k_rows`/`v_rows` are `(n, d)`
+    /// row-major; position `pos + i` receives row `i`. Identical, row
+    /// for row, to `n` calls of [`QuantKv::append_row`] (each
+    /// position's scales depend only on its own row), so chunked and
+    /// token-by-token appends fill the pages with the same bits.
     pub fn append_rows(
         &mut self,
         layer: usize,
-        slot: usize,
+        map: &PageMap<'_>,
         pos: usize,
         n: usize,
         k_rows: &[f32],
@@ -336,12 +359,11 @@ impl QuantKv {
     ) {
         debug_assert_eq!(k_rows.len(), n * self.d);
         debug_assert_eq!(v_rows.len(), n * self.d);
-        debug_assert!(pos + n <= self.max_seq);
         let d = self.d;
         for i in 0..n {
             self.append_row(
                 layer,
-                slot,
+                map,
                 pos + i,
                 &k_rows[i * d..(i + 1) * d],
                 &v_rows[i * d..(i + 1) * d],
@@ -349,37 +371,22 @@ impl QuantKv {
         }
     }
 
-    /// Read-only view of one slot at one layer (for the attention path).
-    pub fn slot_view(&self, layer: usize, slot: usize) -> QuantKvSlot<'_> {
+    /// Read-only view of one sequence at one layer (for the attention
+    /// path): the layer's slabs plus the slot's page map.
+    pub fn slot_view<'a>(&'a self, layer: usize, map: PageMap<'a>) -> QuantKvSlot<'a> {
+        debug_assert_eq!(map.page_size(), self.page_size);
         QuantKvSlot {
             k_codes: &self.k_codes[layer],
             v_codes: &self.v_codes[layer],
             k_scales: &self.k_scales[layer],
             v_scales: &self.v_scales[layer],
-            code_base: self.code_base(slot, 0),
-            scale_base: self.scale_base(slot, 0),
+            map,
             d: self.d,
             n_heads: self.n_heads,
         }
     }
 
-    /// Drop the oldest `n` of `len` cached positions of one slot:
-    /// codes **and** scales slide together, bit-identical — no
-    /// requantization, so a window slide can never drift.
-    pub fn truncate_front(&mut self, slot: usize, n: usize, len: usize) {
-        debug_assert!(n <= len && len <= self.max_seq);
-        let (d, h) = (self.d, self.n_heads);
-        let cb = self.code_base(slot, 0);
-        let sb = self.scale_base(slot, 0);
-        for slab in self.k_codes.iter_mut().chain(self.v_codes.iter_mut()) {
-            slab.copy_within(cb + n * d..cb + len * d, cb);
-        }
-        for scales in self.k_scales.iter_mut().chain(self.v_scales.iter_mut()) {
-            scales.copy_within(sb + n * h..sb + len * h, sb);
-        }
-    }
-
-    /// Arena storage footprint in bytes (codes + bf16 scales).
+    /// Full slab footprint in bytes (codes + bf16 scales, every page).
     pub fn bytes(&self) -> usize {
         let mut total = 0usize;
         for slab in self.k_codes.iter().chain(self.v_codes.iter()) {
@@ -390,65 +397,100 @@ impl QuantKv {
         }
         total
     }
+
+    /// Payload bytes of a single page at this geometry (codes + scales,
+    /// K and V, all layers) — the unit of resident accounting.
+    pub fn page_bytes(&self) -> usize {
+        let layers = self.k_codes.len();
+        2 * layers * self.page_size * (self.d * self.spec.code_bytes() + self.n_heads * 2)
+    }
 }
 
-/// Borrowed view of one slot's codes and scales at one layer. Positions
-/// are slot-local (0 = oldest cached position).
+/// Borrowed view of one sequence's codes and scales at one layer.
+/// Positions are sequence-local (0 = oldest cached position); every
+/// accessor resolves them through the slot's [`PageMap`].
 pub struct QuantKvSlot<'a> {
     k_codes: &'a CodeSlab,
     v_codes: &'a CodeSlab,
     k_scales: &'a [u16],
     v_scales: &'a [u16],
-    code_base: usize,
-    scale_base: usize,
+    map: PageMap<'a>,
     d: usize,
     n_heads: usize,
 }
 
 impl QuantKvSlot<'_> {
     #[inline]
+    fn code_base(&self, pos: usize) -> usize {
+        let (pg, off) = self.map.locate(pos);
+        (pg * self.map.page_size() + off) * self.d
+    }
+
+    #[inline]
+    fn scale_base(&self, pos: usize) -> usize {
+        let (pg, off) = self.map.locate(pos);
+        (pg * self.map.page_size() + off) * self.n_heads
+    }
+
+    #[inline]
     pub fn k_code(&self, pos: usize, i: usize) -> i32 {
-        self.k_codes.get(self.code_base + pos * self.d + i)
+        self.k_codes.get(self.code_base(pos) + i)
     }
 
     #[inline]
     pub fn v_code(&self, pos: usize, i: usize) -> i32 {
-        self.v_codes.get(self.code_base + pos * self.d + i)
+        self.v_codes.get(self.code_base(pos) + i)
     }
 
     #[inline]
     pub fn k_scale(&self, pos: usize, head: usize) -> f32 {
-        bf16_decode(self.k_scales[self.scale_base + pos * self.n_heads + head])
+        bf16_decode(self.k_scales[self.scale_base(pos) + head])
     }
 
     #[inline]
     pub fn v_scale(&self, pos: usize, head: usize) -> f32 {
-        bf16_decode(self.v_scales[self.scale_base + pos * self.n_heads + head])
+        bf16_decode(self.v_scales[self.scale_base(pos) + head])
     }
 
     /// Bulk-gather head `head`'s key codes over positions `0..t_len`
-    /// into a `(t_len, hd)` row-major panel — one enum match, then
-    /// contiguous widening copies (the score-matmul operand).
+    /// into a `(t_len, hd)` row-major panel — page run by page run, one
+    /// enum match and then contiguous widening copies per run (the
+    /// score-matmul operand).
     pub fn gather_k_head(&self, t_len: usize, head: usize, out: &mut [i32]) {
         let hd = self.d / self.n_heads;
         debug_assert!(out.len() >= t_len * hd);
-        let base = self.code_base + head * hd;
-        match self.k_codes {
-            CodeSlab::I8(v) => gather_rows(v.as_slice(), base, self.d, t_len, hd, out),
-            CodeSlab::I16(v) => gather_rows(v.as_slice(), base, self.d, t_len, hd, out),
+        let mut s = 0usize;
+        while s < t_len {
+            let run = self.map.run(s, t_len - s);
+            let base = self.code_base(s) + head * hd;
+            let dst = &mut out[s * hd..(s + run) * hd];
+            match self.k_codes {
+                CodeSlab::I8(v) => gather_rows(v.as_slice(), base, self.d, run, hd, dst),
+                CodeSlab::I16(v) => gather_rows(v.as_slice(), base, self.d, run, hd, dst),
+            }
+            s += run;
         }
     }
 
     /// Bulk-gather head `head`'s value codes over positions `0..t_len`
     /// into a `(hd, t_len)` row-major **transposed** panel via a
-    /// blocked copy (the value-matmul operand).
+    /// blocked copy per page run (the value-matmul operand).
     pub fn gather_v_head_t(&self, t_len: usize, head: usize, out: &mut [i32]) {
         let hd = self.d / self.n_heads;
         debug_assert!(out.len() >= t_len * hd);
-        let base = self.code_base + head * hd;
-        match self.v_codes {
-            CodeSlab::I8(v) => gather_rows_t(v.as_slice(), base, self.d, t_len, hd, out),
-            CodeSlab::I16(v) => gather_rows_t(v.as_slice(), base, self.d, t_len, hd, out),
+        let mut s = 0usize;
+        while s < t_len {
+            let run = self.map.run(s, t_len - s);
+            let base = self.code_base(s) + head * hd;
+            match self.v_codes {
+                CodeSlab::I8(v) => {
+                    gather_rows_t(v.as_slice(), base, self.d, run, hd, s, t_len, out)
+                }
+                CodeSlab::I16(v) => {
+                    gather_rows_t(v.as_slice(), base, self.d, run, hd, s, t_len, out)
+                }
+            }
+            s += run;
         }
     }
 
@@ -466,7 +508,7 @@ impl QuantKvSlot<'_> {
         let hd = self.d / self.n_heads;
         let mut out = vec![0.0f32; self.d];
         let mut seg = vec![0i32; hd];
-        let base = self.code_base + pos * self.d;
+        let base = self.code_base(pos);
         for h in 0..self.n_heads {
             let (slab, s) = if key {
                 (self.k_codes, self.k_scale(pos, h))
@@ -514,8 +556,9 @@ mod tests {
     use crate::model::scratch::AttnScratch;
     use crate::util::rng::Rng;
 
-    /// Build a 1-layer, 1-slot QuantKv holding `t_len` random K/V rows;
-    /// returns the float rows alongside for reference computations.
+    /// Build a 1-layer QuantKv of one `t_len`-sized page holding
+    /// `t_len` random K/V rows; returns the float rows alongside for
+    /// reference computations. View with `PageMap::new(&[0], 0, t_len)`.
     fn filled_kv(
         spec: KvQuantSpec,
         t_len: usize,
@@ -530,8 +573,10 @@ mod tests {
         for x in k.iter_mut().chain(v.iter_mut()) {
             *x = rng.normal() as f32;
         }
+        let table = [0u32];
+        let map = PageMap::new(&table, 0, t_len);
         for pos in 0..t_len {
-            kv.append_row(0, 0, pos, &k[pos * d..(pos + 1) * d], &v[pos * d..(pos + 1) * d]);
+            kv.append_row(0, &map, pos, &k[pos * d..(pos + 1) * d], &v[pos * d..(pos + 1) * d]);
         }
         (kv, k, v)
     }
@@ -543,8 +588,10 @@ mod tests {
         assert_eq!(s.tile, 64);
         assert_eq!(s.inner_bits, attention_inner_bits(64, 8, 8));
         assert_eq!(s.code_max(), 127);
+        assert_eq!(s.code_bytes(), 1);
         let s16 = KvQuantSpec::int16();
         assert_eq!(s16.code_max(), 32767);
+        assert_eq!(s16.code_bytes(), 2);
         // explicit narrow width is honoured (for overflow experiments)
         assert_eq!(KvQuantSpec::new(8, 32, Some(10)).inner_bits, 10);
     }
@@ -559,12 +606,10 @@ mod tests {
         s16.set(1, 2047);
         assert_eq!(s8.get(1), -127);
         assert_eq!(s16.get(1), 2047);
-        s8.copy_within(1..2, 0);
-        assert_eq!(s8.get(0), -127);
         // head_segment widens a contiguous run in one call
         let mut seg = [0i32; 2];
         s8.head_segment(0, &mut seg);
-        assert_eq!(seg, [-127, -127]);
+        assert_eq!(seg, [0, -127]);
     }
 
     #[test]
@@ -590,10 +635,12 @@ mod tests {
         let (d, h) = (16usize, 4usize);
         let spec = KvQuantSpec::int8();
         let mut kv = QuantKv::new(spec, 1, 1, 8, d, h);
+        let table = [0u32];
+        let map = PageMap::new(&table, 0, 8);
         let k_row: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
         let v_row: Vec<f32> = (0..d).map(|_| rng.normal() as f32 * 3.0).collect();
-        kv.append_row(0, 0, 0, &k_row, &v_row);
-        let view = kv.slot_view(0, 0);
+        kv.append_row(0, &map, 0, &k_row, &v_row);
+        let view = kv.slot_view(0, map);
         let k_hat = view.dequant_k_row(0);
         let v_hat = view.dequant_v_row(0);
         for i in 0..d {
@@ -613,10 +660,12 @@ mod tests {
         let (d, h) = (16usize, 2usize);
         let spec = KvQuantSpec::int16();
         let mut kv = QuantKv::new(spec, 1, 1, 4, d, h);
+        let table = [0u32];
+        let map = PageMap::new(&table, 0, 4);
         for trial in 0..50 {
             let row: Vec<f32> = (0..d).map(|_| (rng.normal() * 2.5) as f32).collect();
-            kv.append_row(0, 0, 0, &row, &row);
-            let view = kv.slot_view(0, 0);
+            kv.append_row(0, &map, 0, &row, &row);
+            let view = kv.slot_view(0, map);
             let hat = view.dequant_k_row(0);
             for i in 0..d {
                 let s = view.k_scale(0, i / (d / h));
@@ -638,6 +687,9 @@ mod tests {
         for spec in [KvQuantSpec::int8(), KvQuantSpec::int16()] {
             let mut chunked = QuantKv::new(spec, 2, 2, max, d, h);
             let mut single = QuantKv::new(spec, 2, 2, max, d, h);
+            // both write page 1 (page 0 left alone as a canary)
+            let table = [1u32];
+            let map = PageMap::new(&table, 0, max);
             // 3 existing positions, then a 4-row chunk at pos 3
             let rows: Vec<f32> = (0..7 * d).map(|_| rng.normal() as f32).collect();
             let vals: Vec<f32> = (0..7 * d).map(|_| rng.normal() as f32 * 2.0).collect();
@@ -646,25 +698,25 @@ mod tests {
                     for kv in [&mut chunked, &mut single] {
                         kv.append_row(
                             layer,
-                            1,
+                            &map,
                             pos,
                             &rows[pos * d..(pos + 1) * d],
                             &vals[pos * d..(pos + 1) * d],
                         );
                     }
                 }
-                chunked.append_rows(layer, 1, 3, 4, &rows[3 * d..], &vals[3 * d..]);
+                chunked.append_rows(layer, &map, 3, 4, &rows[3 * d..], &vals[3 * d..]);
                 for pos in 3..7 {
                     single.append_row(
                         layer,
-                        1,
+                        &map,
                         pos,
                         &rows[pos * d..(pos + 1) * d],
                         &vals[pos * d..(pos + 1) * d],
                     );
                 }
                 for pos in 0..7 {
-                    let (a, b) = (chunked.slot_view(layer, 1), single.slot_view(layer, 1));
+                    let (a, b) = (chunked.slot_view(layer, map), single.slot_view(layer, map));
                     assert_eq!(a.dequant_k_row(pos), b.dequant_k_row(pos), "k {spec:?} {pos}");
                     assert_eq!(a.dequant_v_row(pos), b.dequant_v_row(pos), "v {spec:?} {pos}");
                     for head in 0..h {
@@ -680,39 +732,50 @@ mod tests {
     fn zero_rows_quantize_benignly() {
         let spec = KvQuantSpec::int8();
         let mut kv = QuantKv::new(spec, 1, 1, 4, 8, 2);
-        kv.append_row(0, 0, 0, &[0.0; 8], &[0.0; 8]);
-        let view = kv.slot_view(0, 0);
+        let table = [0u32];
+        let map = PageMap::new(&table, 0, 4);
+        kv.append_row(0, &map, 0, &[0.0; 8], &[0.0; 8]);
+        let view = kv.slot_view(0, map);
         assert_eq!(view.k_scale(0, 0), 1.0);
         assert!(view.dequant_k_row(0).iter().all(|&v| v == 0.0));
     }
 
     #[test]
-    fn truncate_front_slides_codes_and_scales_verbatim() {
+    fn head_offset_map_reads_slid_rows_verbatim() {
+        // A window slide is a *page-table* operation now: dropping the
+        // head page and carrying an in-page head offset must expose
+        // exactly the surviving rows, bit-identical — no data moves.
         let mut rng = Rng::new(502);
-        let (d, h, max_seq) = (8usize, 2usize, 6usize);
-        let mut kv = QuantKv::new(KvQuantSpec::int8(), 2, 2, max_seq, d, h);
-        // fill slot 1 with 5 positions (slot 0 left alone as a canary)
+        let (d, h, ps) = (8usize, 2usize, 2usize);
+        let mut kv = QuantKv::new(KvQuantSpec::int8(), 2, 4, ps, d, h);
+        // sequence over pages [1, 2, 3]: 5 positions (page 0 = canary)
+        let table = [1u32, 2, 3];
+        let map = PageMap::new(&table, 0, ps);
+        let canary_table = [0u32];
+        let canary_map = PageMap::new(&canary_table, 0, ps);
         let mut rows: Vec<Vec<f32>> = Vec::new();
         for _ in 0..5 {
             rows.push((0..d).map(|_| rng.normal() as f32).collect());
         }
         for (pos, row) in rows.iter().enumerate() {
             for layer in 0..2 {
-                kv.append_row(layer, 1, pos, row, row);
+                kv.append_row(layer, &map, pos, row, row);
             }
         }
-        kv.append_row(0, 0, 0, &rows[0], &rows[0]);
+        kv.append_row(0, &canary_map, 0, &rows[0], &rows[0]);
         let mut before: Vec<Vec<f32>> = Vec::new();
-        for p in 2..5 {
-            before.push(kv.slot_view(1, 1).dequant_k_row(p));
+        for p in 3..5 {
+            before.push(kv.slot_view(1, map).dequant_k_row(p));
         }
-        let canary = kv.slot_view(0, 0).dequant_k_row(0);
-        kv.truncate_front(1, 2, 5);
+        let canary = kv.slot_view(0, canary_map).dequant_k_row(0);
+        // slide by 3: drop page 1 (one full page), head offset 1 in page 2
+        let slid_table = [2u32, 3];
+        let slid = PageMap::new(&slid_table, 1, ps);
         for (p, want) in before.iter().enumerate() {
-            let got = kv.slot_view(1, 1).dequant_k_row(p);
+            let got = kv.slot_view(1, slid).dequant_k_row(p);
             assert_eq!(&got, want, "position {p} drifted across the slide");
         }
-        assert_eq!(kv.slot_view(0, 0).dequant_k_row(0), canary, "other slot touched");
+        assert_eq!(kv.slot_view(0, canary_map).dequant_k_row(0), canary, "other page touched");
     }
 
     #[test]
@@ -725,7 +788,8 @@ mod tests {
             let (d, h, max) = (24usize, 3usize, 9usize);
             let hd = d / h;
             let (kv, _, _) = filled_kv(spec, max, d, h, 540);
-            let view = kv.slot_view(0, 0);
+            let table = [0u32];
+            let view = kv.slot_view(0, PageMap::new(&table, 0, max));
             let mut k_panel = vec![0i32; max * hd + 7]; // oversized on purpose
             let mut v_panel = vec![0i32; max * hd + 7];
             for t_len in [1usize, 5, max] {
@@ -754,12 +818,56 @@ mod tests {
     }
 
     #[test]
+    fn gathers_cross_page_boundaries_exactly() {
+        // Same rows stored (a) in one big page and (b) scattered over
+        // small pages in non-identity order with a head offset: every
+        // accessor — element, bulk K, bulk transposed V — must agree
+        // bit-for-bit between the two layouts.
+        for spec in [KvQuantSpec::int8(), KvQuantSpec::int16()] {
+            let (d, h, t_len, ps) = (12usize, 3usize, 10usize, 4usize);
+            let hd = d / h;
+            let (big, k, v) = filled_kv(spec, t_len, d, h, 541);
+            let big_table = [0u32];
+            let big_view = big.slot_view(0, PageMap::new(&big_table, 0, t_len));
+            // paged copy: pages [3, 1, 4] with head offset 2 → needs
+            // ceil((2 + 10) / 4) = 3 pages out of a 5-page pool
+            let mut paged = QuantKv::new(spec, 1, 5, ps, d, h);
+            let table = [3u32, 1, 4];
+            let map = PageMap::new(&table, 2, ps);
+            for pos in 0..t_len {
+                let (ks, vs) = (&k[pos * d..(pos + 1) * d], &v[pos * d..(pos + 1) * d]);
+                paged.append_row(0, &map, pos, ks, vs);
+            }
+            let view = paged.slot_view(0, map);
+            let mut want = vec![0i32; t_len * hd];
+            let mut got = vec![0i32; t_len * hd];
+            for head in 0..h {
+                big_view.gather_k_head(t_len, head, &mut want);
+                view.gather_k_head(t_len, head, &mut got);
+                assert_eq!(got, want, "k panel {spec:?} head {head}");
+                big_view.gather_v_head_t(t_len, head, &mut want);
+                view.gather_v_head_t(t_len, head, &mut got);
+                assert_eq!(got, want, "v panel {spec:?} head {head}");
+            }
+            for pos in 0..t_len {
+                assert_eq!(view.dequant_k_row(pos), big_view.dequant_k_row(pos), "row {pos}");
+                for head in 0..h {
+                    assert_eq!(view.k_scale(pos, head), big_view.k_scale(pos, head));
+                    assert_eq!(view.v_scale(pos, head), big_view.v_scale(pos, head));
+                }
+            }
+        }
+    }
+
+    #[test]
     fn quant_attention_tracks_float_attention() {
         // The integer attention path must approximate the float path to
         // within 8-bit quantization error on well-conditioned inputs.
         let (t_len, d, h) = (12usize, 16usize, 2usize);
         let spec = KvQuantSpec::int8();
         let (kv, k, v) = filled_kv(spec, t_len, d, h, 510);
+        let table = [0u32];
+        let map = PageMap::new(&table, 0, t_len);
         let mut rng = Rng::new(511);
         let mut scratch = AttnScratch::new();
         let q: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
@@ -768,7 +876,7 @@ mod tests {
         let mut got = vec![0.0f32; d];
         let ovf = attend_one_query_quant(
             &q,
-            &kv.slot_view(0, 0),
+            &kv.slot_view(0, map),
             t_len,
             d,
             h,
@@ -792,7 +900,7 @@ mod tests {
         let mut got16 = vec![0.0f32; d];
         let ovf16 = attend_one_query_quant(
             &q,
-            &kv16.slot_view(0, 0),
+            &kv16.slot_view(0, map),
             t_len,
             d,
             h,
@@ -815,17 +923,19 @@ mod tests {
         let (t_len, d, h) = (5usize, 8usize, 2usize);
         let spec = KvQuantSpec::int8();
         let mut kv = QuantKv::new(spec, 1, 1, t_len, d, h);
+        let table = [0u32];
+        let map = PageMap::new(&table, 0, t_len);
         let k_row: Vec<f32> = (0..d).map(|i| 0.3 + 0.01 * i as f32).collect();
         let v_row: Vec<f32> = (0..d).map(|i| (i as f32 - 3.0) * 0.2).collect();
         for pos in 0..t_len {
-            kv.append_row(0, 0, pos, &k_row, &v_row);
+            kv.append_row(0, &map, pos, &k_row, &v_row);
         }
         let q = vec![0.5f32; d];
         let mut out = vec![0.0f32; d];
         let mut scratch = AttnScratch::new();
         let ovf = attend_one_query_quant(
             &q,
-            &kv.slot_view(0, 0),
+            &kv.slot_view(0, map),
             t_len,
             d,
             h,
@@ -834,7 +944,7 @@ mod tests {
             &mut out,
         );
         assert_eq!(ovf, 0);
-        let v_hat = kv.slot_view(0, 0).dequant_v_row(0);
+        let v_hat = kv.slot_view(0, map).dequant_v_row(0);
         for i in 0..d {
             assert!(
                 (out[i] - v_hat[i]).abs() < 2e-3,
@@ -851,6 +961,8 @@ mod tests {
         // 6-bit inner register at tile 8 with 8-bit operands: hopeless.
         let spec = KvQuantSpec::new(8, 8, Some(6));
         let (kv, _, _) = filled_kv(spec, t_len, d, h, 520);
+        let table = [0u32];
+        let map = PageMap::new(&table, 0, t_len);
         let mut rng = Rng::new(521);
         let q: Vec<f32> = (0..d).map(|_| rng.normal() as f32 + 0.5).collect();
         let mut out1 = vec![0.0f32; d];
@@ -858,7 +970,7 @@ mod tests {
         let mut scratch = AttnScratch::new();
         let ovf1 = attend_one_query_quant(
             &q,
-            &kv.slot_view(0, 0),
+            &kv.slot_view(0, map),
             t_len,
             d,
             h,
@@ -868,7 +980,7 @@ mod tests {
         );
         let ovf2 = attend_one_query_quant(
             &q,
-            &kv.slot_view(0, 0),
+            &kv.slot_view(0, map),
             t_len,
             d,
             h,
@@ -897,11 +1009,13 @@ mod tests {
             let tile = [4usize, 16, 64][(trial / 3) % 3];
             let spec = KvQuantSpec::new(8, tile, None);
             let (kv, _, _) = filled_kv(spec, t_len, d, h, 531 + trial as u64);
+            let table = [0u32];
+            let map = PageMap::new(&table, 0, t_len);
             let q: Vec<f32> = (0..d).map(|_| (rng.normal() * 10.0) as f32).collect();
             let mut out = vec![0.0f32; d];
             let ovf = attend_one_query_quant(
                 &q,
-                &kv.slot_view(0, 0),
+                &kv.slot_view(0, map),
                 t_len,
                 d,
                 h,
@@ -917,12 +1031,13 @@ mod tests {
     #[test]
     fn bytes_quarter_f32_when_heads_are_wide() {
         // d=64, 2 heads (head dim 32): codes are 1/4 of f32 and the
-        // bf16 per-(slot, pos, head) scale overhead is 1/(2·hd) = 1.6%.
-        let (layers, slots, max_seq, d, h) = (2usize, 3usize, 16usize, 64usize, 2usize);
-        let kv = QuantKv::new(KvQuantSpec::int8(), layers, slots, max_seq, d, h);
-        let f32_bytes = 2 * layers * slots * max_seq * d * 4;
-        let want = 2 * layers * slots * max_seq * (d + h * 2);
+        // bf16 per-(page, offset, head) scale overhead is 1/(2·hd) = 1.6%.
+        let (layers, pages, ps, d, h) = (2usize, 3usize, 16usize, 64usize, 2usize);
+        let kv = QuantKv::new(KvQuantSpec::int8(), layers, pages, ps, d, h);
+        let f32_bytes = 2 * layers * pages * ps * d * 4;
+        let want = 2 * layers * pages * ps * (d + h * 2);
         assert_eq!(kv.bytes(), want);
+        assert_eq!(kv.page_bytes() * pages, want, "page_bytes is the per-page payload");
         assert!(
             (kv.bytes() as f64) <= 0.27 * f32_bytes as f64,
             "{} vs f32 {}",
@@ -930,8 +1045,8 @@ mod tests {
             f32_bytes
         );
         // i16 codes cost exactly one extra byte per element
-        let kv16 = QuantKv::new(KvQuantSpec::int16(), layers, slots, max_seq, d, h);
-        assert_eq!(kv16.bytes(), want + 2 * layers * slots * max_seq * d);
+        let kv16 = QuantKv::new(KvQuantSpec::int16(), layers, pages, ps, d, h);
+        assert_eq!(kv16.bytes(), want + 2 * layers * pages * ps * d);
     }
 
     #[test]
@@ -939,10 +1054,10 @@ mod tests {
         // Head dim 16 (d=64, 4 heads): f32 scales put the i8 arena at
         // (64 + 4·4)/256 = 31.2% of f32 — over the bar. bf16 scales
         // land it at (64 + 4·2)/256 = 28.1%.
-        let (layers, slots, max_seq, d, h) = (2usize, 2usize, 8usize, 64usize, 4usize);
-        let kv = QuantKv::new(KvQuantSpec::int8(), layers, slots, max_seq, d, h);
-        let f32_bytes = 2 * layers * slots * max_seq * d * 4;
-        assert_eq!(kv.bytes(), 2 * layers * slots * max_seq * (d + h * 2));
+        let (layers, pages, ps, d, h) = (2usize, 2usize, 8usize, 64usize, 4usize);
+        let kv = QuantKv::new(KvQuantSpec::int8(), layers, pages, ps, d, h);
+        let f32_bytes = 2 * layers * pages * ps * d * 4;
+        assert_eq!(kv.bytes(), 2 * layers * pages * ps * (d + h * 2));
         assert!(
             (kv.bytes() as f64) <= 0.30 * f32_bytes as f64,
             "head-dim-16 arena {} B exceeds 30% of f32 {} B",

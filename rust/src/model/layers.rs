@@ -145,20 +145,55 @@ pub fn attention(
     }
 }
 
+/// Position-resolved access to one slot's cached f32 K/V rows — the
+/// float backend's single indirection point. The contiguous-slab view
+/// ([`ContigKv`]) serves whole-buffer callers; the paged arena plugs in
+/// its page-table resolver. The attention loops below only ever ask for
+/// one position's row at a time, so the resolver is the *only* place
+/// that knows (or cares) where rows physically live — the arithmetic,
+/// and therefore the bit pattern, is identical across storage layouts.
+pub trait KvRows {
+    /// Cached key row of logical position `pos`, `(d,)`.
+    fn k_row(&self, pos: usize) -> &[f32];
+    /// Cached value row of logical position `pos`, `(d,)`.
+    fn v_row(&self, pos: usize) -> &[f32];
+}
+
+/// [`KvRows`] over contiguous `(seq, d)` K/V slabs — the layout every
+/// pre-paging caller (and the whole-buffer `attention` helper) uses.
+pub struct ContigKv<'a> {
+    pub k: &'a [f32],
+    pub v: &'a [f32],
+    pub d: usize,
+}
+
+impl KvRows for ContigKv<'_> {
+    #[inline]
+    fn k_row(&self, pos: usize) -> &[f32] {
+        &self.k[pos * self.d..(pos + 1) * self.d]
+    }
+
+    #[inline]
+    fn v_row(&self, pos: usize) -> &[f32] {
+        &self.v[pos * self.d..(pos + 1) * self.d]
+    }
+}
+
 /// Single-query multi-head attention of one new position over `t_len`
 /// cached positions — the ragged-batch decode primitive: each in-flight
-/// sequence calls this over its **own** KV slab and length, so a
+/// sequence calls this over its **own** KV rows and length, so a
 /// batched step needs no cross-sequence masking at all.
 ///
-/// `q` is one (d,) query row; `kc`/`vc` are `(t_len, d)` cached
-/// keys/values (the new position's K/V already appended). Uses
-/// `scratch.scores` for the per-head probability row (sliced to
-/// `t_len`). Writes the mixed values (pre-projection) into `out`.
+/// `q` is one (d,) query row; `kv` resolves cached keys/values (the new
+/// position's K/V already appended). Uses `scratch.scores` for the
+/// per-head probability row (sliced to `t_len`). Writes the mixed
+/// values (pre-projection) into `out`. The per-position row resolution
+/// only changes *where* a row is read from, never the accumulation
+/// order, so every [`KvRows`] backing produces bit-identical output.
 #[allow(clippy::too_many_arguments)]
-pub fn attend_one_query(
+pub fn attend_one_query_rows<KV: KvRows + ?Sized>(
     q: &[f32],
-    kc: &[f32],
-    vc: &[f32],
+    kv: &KV,
     t_len: usize,
     d: usize,
     n_heads: usize,
@@ -167,7 +202,6 @@ pub fn attend_one_query(
 ) {
     debug_assert_eq!(q.len(), d);
     debug_assert_eq!(out.len(), d);
-    debug_assert!(kc.len() >= t_len * d && vc.len() >= t_len * d);
     let hd = d / n_heads;
     debug_assert_eq!(hd * n_heads, d, "d must divide n_heads");
     let scale = 1.0 / (hd as f32).sqrt();
@@ -176,7 +210,7 @@ pub fn attend_one_query(
     for h in 0..n_heads {
         let off = h * hd;
         for (s, score) in scores.iter_mut().enumerate() {
-            let krow = &kc[s * d + off..s * d + off + hd];
+            let krow = &kv.k_row(s)[off..off + hd];
             let mut dot = 0.0f32;
             for i in 0..hd {
                 dot += q[off + i] * krow[i];
@@ -190,12 +224,30 @@ pub fn attend_one_query(
             if w == 0.0 {
                 continue;
             }
-            let vrow = &vc[s * d + off..s * d + off + hd];
+            let vrow = &kv.v_row(s)[off..off + hd];
             for i in 0..hd {
                 orow[i] += w * vrow[i];
             }
         }
     }
+}
+
+/// [`attend_one_query_rows`] over contiguous `(t_len, d)` K/V slabs —
+/// kept as the natural entry point for whole-buffer callers.
+#[allow(clippy::too_many_arguments)]
+pub fn attend_one_query(
+    q: &[f32],
+    kc: &[f32],
+    vc: &[f32],
+    t_len: usize,
+    d: usize,
+    n_heads: usize,
+    scratch: &mut AttnScratch,
+    out: &mut [f32],
+) {
+    debug_assert!(kc.len() >= t_len * d && vc.len() >= t_len * d);
+    let view = ContigKv { k: kc, v: vc, d };
+    attend_one_query_rows(q, &view, t_len, d, n_heads, scratch, out);
 }
 
 /// Single-query multi-head attention over a **quantized** KV slot — the
@@ -347,12 +399,41 @@ pub fn attend_one_query_quant(
 /// attends over the slot's `t0` pre-existing positions plus chunk rows
 /// `0..=i` — all of which were appended to the slab before this call.
 ///
-/// `q_rows` is `(len, d)`; `kc`/`vc` are the slot's cached keys/values
+/// `q_rows` is `(len, d)`; `kv` resolves the slot's cached keys/values
 /// covering at least `t0 + len` positions (the chunk's own K/V
-/// included). Delegates every row to [`attend_one_query`], so a chunked
-/// prefill runs bit-for-bit the arithmetic of whole-prompt prefill and
-/// of token-by-token decode — the invariant chunked serving's
-/// token-exactness rests on.
+/// included). Delegates every row to [`attend_one_query_rows`], so a
+/// chunked prefill runs bit-for-bit the arithmetic of whole-prompt
+/// prefill and of token-by-token decode — the invariant chunked
+/// serving's token-exactness rests on — whatever the physical row
+/// layout behind `kv`.
+#[allow(clippy::too_many_arguments)]
+pub fn attend_chunk_rows<KV: KvRows + ?Sized>(
+    q_rows: &[f32],
+    kv: &KV,
+    t0: usize,
+    len: usize,
+    d: usize,
+    n_heads: usize,
+    scratch: &mut AttnScratch,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(q_rows.len(), len * d);
+    debug_assert_eq!(out.len(), len * d);
+    for i in 0..len {
+        let t_len = t0 + i + 1;
+        attend_one_query_rows(
+            &q_rows[i * d..(i + 1) * d],
+            kv,
+            t_len,
+            d,
+            n_heads,
+            scratch,
+            &mut out[i * d..(i + 1) * d],
+        );
+    }
+}
+
+/// [`attend_chunk_rows`] over contiguous `(t0 + len, d)` K/V slabs.
 #[allow(clippy::too_many_arguments)]
 pub fn attend_chunk(
     q_rows: &[f32],
@@ -365,30 +446,19 @@ pub fn attend_chunk(
     scratch: &mut AttnScratch,
     out: &mut [f32],
 ) {
-    debug_assert_eq!(q_rows.len(), len * d);
-    debug_assert_eq!(out.len(), len * d);
     debug_assert!(kc.len() >= (t0 + len) * d && vc.len() >= (t0 + len) * d);
-    for i in 0..len {
-        let t_len = t0 + i + 1;
-        attend_one_query(
-            &q_rows[i * d..(i + 1) * d],
-            kc,
-            vc,
-            t_len,
-            d,
-            n_heads,
-            scratch,
-            &mut out[i * d..(i + 1) * d],
-        );
-    }
+    let view = ContigKv { k: kc, v: vc, d };
+    attend_chunk_rows(q_rows, &view, t0, len, d, n_heads, scratch, out);
 }
 
 /// [`attend_chunk`] over a **quantized** KV slot: row `i` attends over
 /// the `t0 + i + 1` just-appended codes through
 /// [`attend_one_query_quant`] — exactly the arithmetic decode and
-/// whole-prompt prefill run. Returns the chunk's total accumulator
-/// overflow events (attribution is per chunk: a chunk belongs entirely
-/// to one request).
+/// whole-prompt prefill run. Each row's overflow events are added to
+/// `row_ovf[i]` (a chunk belongs entirely to one request, but the
+/// *rows* must stay individually attributed: fill-time events are
+/// recorded onto the page each row lands in, and page boundaries do not
+/// respect chunk boundaries). Also returns the chunk total.
 #[allow(clippy::too_many_arguments)]
 pub fn attend_chunk_quant(
     q_rows: &[f32],
@@ -400,12 +470,14 @@ pub fn attend_chunk_quant(
     spec: &KvQuantSpec,
     scratch: &mut AttnScratch,
     out: &mut [f32],
+    row_ovf: &mut [u64],
 ) -> u64 {
     debug_assert_eq!(q_rows.len(), len * d);
     debug_assert_eq!(out.len(), len * d);
+    debug_assert_eq!(row_ovf.len(), len, "one overflow counter per chunk row");
     let mut overflows = 0u64;
     for i in 0..len {
-        overflows += attend_one_query_quant(
+        let ovf = attend_one_query_quant(
             &q_rows[i * d..(i + 1) * d],
             kv,
             t0 + i + 1,
@@ -415,6 +487,8 @@ pub fn attend_chunk_quant(
             scratch,
             &mut out[i * d..(i + 1) * d],
         );
+        row_ovf[i] += ovf;
+        overflows += ovf;
     }
     overflows
 }
@@ -533,6 +607,7 @@ pub fn attend_one_query_quant_ref(
 mod tests {
     use super::*;
     use crate::model::kvquant::{KvQuantSpec, QuantKv};
+    use crate::model::paging::PageMap;
     use crate::util::rng::Rng;
 
     #[test]
@@ -674,16 +749,26 @@ mod tests {
         }
         // quantized path, including a narrow overflowing register
         for spec in [KvQuantSpec::int8(), KvQuantSpec::new(8, 8, Some(6))] {
+            // one page spanning the whole window: the trivial page table
+            let table = [0u32];
+            let map = PageMap::new(&table, 0, max);
             let mut kv = QuantKv::new(spec, 1, 1, max, d, h);
             for pos in 0..t0 + len {
                 let kr: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
                 let vr: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
-                kv.append_row(0, 0, pos, &kr, &vr);
+                kv.append_row(0, &map, pos, &kr, &vr);
             }
-            let view = kv.slot_view(0, 0);
+            let view = kv.slot_view(0, map);
             let mut got = vec![0.0f32; len * d];
-            let ovf_chunk =
-                attend_chunk_quant(&q_rows, &view, t0, len, d, h, &spec, &mut scratch, &mut got);
+            let mut row_ovf = vec![0u64; len];
+            let ovf_chunk = attend_chunk_quant(
+                &q_rows, &view, t0, len, d, h, &spec, &mut scratch, &mut got, &mut row_ovf,
+            );
+            assert_eq!(
+                row_ovf.iter().sum::<u64>(),
+                ovf_chunk,
+                "{spec:?} per-row attribution must sum to the chunk total"
+            );
             let mut ovf_rows = 0u64;
             for i in 0..len {
                 let mut one = vec![0.0f32; d];
@@ -717,17 +802,21 @@ mod tests {
             KvQuantSpec::new(8, 8, Some(6)), // narrow: overflows are live
         ] {
             let (d, h, max) = (24usize, 3usize, 14usize);
-            let mut kv = QuantKv::new(spec, 1, 1, max, d, h);
+            // two pages of 7 with a non-identity table: the fast path
+            // must stay exact across real page-boundary runs
+            let table = [1u32, 0];
+            let map = PageMap::new(&table, 0, 7);
+            let mut kv = QuantKv::new(spec, 1, 2, 7, d, h);
             for pos in 0..max {
                 let row: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
                 let vrow: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
-                kv.append_row(0, 0, pos, &row, &vrow);
+                kv.append_row(0, &map, pos, &row, &vrow);
             }
             let mut scratch = AttnScratch::new();
             // long → short → long: reused buffers must never leak state
             for &t_len in &[max, 3usize, 1, 9, max] {
                 let q: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
-                let view = kv.slot_view(0, 0);
+                let view = kv.slot_view(0, map);
                 let mut want = vec![0.0f32; d];
                 let ovf_want = attend_one_query_quant_ref(&q, &view, t_len, d, h, &spec, &mut want);
                 let mut got = vec![0.0f32; d];

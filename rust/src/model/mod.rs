@@ -12,19 +12,22 @@ pub mod layers;
 pub mod linear;
 pub mod loader;
 pub mod mlp;
+pub mod paging;
 pub mod scratch;
 pub mod transformer;
 
 pub use decode::{argmax, KvArena, KvCache, RowGroup};
 pub use kvquant::{KvCacheKind, KvQuantSpec};
 pub use layers::{
-    attend_chunk, attend_chunk_quant, attend_one_query, attend_one_query_quant,
-    attend_one_query_quant_ref, attention, softmax, Activation, LayerNorm,
+    attend_chunk, attend_chunk_quant, attend_chunk_rows, attend_one_query,
+    attend_one_query_quant, attend_one_query_quant_ref, attend_one_query_rows, attention,
+    softmax, Activation, ContigKv, KvRows, LayerNorm,
 };
 pub use linear::{Datapath, FloatLinear, Linear, QuantLinear};
 pub use loader::{
     list_models, load_model, load_named, read_f32_bin, read_f32_bin_any, write_f32_bin, Model,
 };
 pub use mlp::{random_mlp, Mlp, MlpConfig};
+pub use paging::{PageMap, PagePool, PrefixCache, DEFAULT_KV_PAGE, NO_PREFIX};
 pub use scratch::{AttnScratch, DecodeScratch, LinearScratch, StepScratch};
 pub use transformer::{random_transformer, Block, Capture, Transformer, TransformerConfig};

@@ -1,0 +1,371 @@
+//! Fixed-size refcounted KV pages and the shared-prefix page cache.
+//!
+//! A *page* covers `page_size` consecutive sequence positions — for all
+//! layers and both K and V at once — so page identity coincides with
+//! token-prefix identity, which is what makes pages the natural unit of
+//! prefix sharing. The arena keeps the payload (codes/scales or f32
+//! rows) in per-layer slabs indexed by physical page id; this module
+//! owns only the bookkeeping:
+//!
+//! * [`PagePool`] — refcounts, the free list, and per-page overflow
+//!   attribution. Allocation is a free-list pop and never touches the
+//!   heap after construction, so the zero-allocation decode guarantee
+//!   survives page turnover.
+//! * [`PageMap`] — a borrowed per-slot page table resolving a logical
+//!   position to `(physical page, in-page offset)`. This is the single
+//!   indirection point the attention gathers go through; inner loops
+//!   stay contiguous within a page run.
+//! * [`PrefixCache`] — content-addressed full pages, keyed by a chained
+//!   hash of the admitted token prefix at page granularity. Lookups
+//!   verify the parent entry *and* the chunk tokens, so a hash
+//!   collision can never map a wrong page (bit-exactness is the bar,
+//!   not probabilistic correctness).
+//!
+//! Immutability is by construction: appends only ever touch the open
+//! tail page at the slot's high-water position, so a *full* page is
+//! frozen the moment its last row is quantized. Quantize-at-append
+//! (codes + bf16 scale written once, never re-derived) means a shared
+//! page is bit-identical for every reader — the copy in copy-on-write
+//! never actually happens; the open tail page is simply always private.
+
+use std::collections::HashMap;
+
+/// Default positions per KV page (`--kv-page`).
+pub const DEFAULT_KV_PAGE: usize = 16;
+
+/// Sentinel "no parent" / "no entry" id for [`PrefixCache`] chains.
+pub const NO_PREFIX: u32 = u32::MAX;
+
+// ---------------------------------------------------------------------------
+// PagePool
+
+/// Refcounts, free list, and per-page overflow attribution for a fixed
+/// population of physical pages. Payload lives elsewhere (the arena's
+/// per-layer slabs); the pool only says which pages are live and who
+/// still needs them.
+#[derive(Clone, Debug)]
+pub struct PagePool {
+    page_size: usize,
+    n_pages: usize,
+    refcounts: Vec<u32>,
+    /// Free physical pages; construction pushes ids in reverse so pops
+    /// hand out page 0 first (deterministic layouts in tests).
+    free: Vec<u32>,
+    /// Overflow events recorded while each page's rows were *filled*
+    /// (quantize-at-append time). A sequence that adopts a shared page
+    /// credits these events instead of re-incurring them, which is what
+    /// keeps per-request overflow attribution bit-identical with
+    /// sharing on vs off.
+    page_ovf: Vec<u64>,
+}
+
+impl PagePool {
+    pub fn new(page_size: usize, n_pages: usize) -> Self {
+        assert!(page_size > 0, "page size must be positive");
+        let mut free: Vec<u32> = Vec::with_capacity(n_pages);
+        for p in (0..n_pages as u32).rev() {
+            free.push(p);
+        }
+        PagePool {
+            page_size,
+            n_pages,
+            refcounts: vec![0; n_pages],
+            free,
+            page_ovf: vec![0; n_pages],
+        }
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    pub fn n_pages(&self) -> usize {
+        self.n_pages
+    }
+
+    /// Pages currently referenced by at least one holder.
+    pub fn allocated(&self) -> usize {
+        self.n_pages - self.free.len()
+    }
+
+    /// Pop a free page (refcount 1, overflow attribution reset). `None`
+    /// when the pool is exhausted — the arena reacts by flushing the
+    /// prefix cache and retrying.
+    pub fn alloc(&mut self) -> Option<u32> {
+        let p = self.free.pop()?;
+        self.refcounts[p as usize] = 1;
+        self.page_ovf[p as usize] = 0;
+        Some(p)
+    }
+
+    /// Add a reference (adoption into another page table, or the prefix
+    /// cache taking its own hold).
+    pub fn retain(&mut self, page: u32) {
+        debug_assert!(self.refcounts[page as usize] > 0, "retain of a free page");
+        self.refcounts[page as usize] += 1;
+    }
+
+    /// Drop a reference; the page returns to the free list when the
+    /// last holder lets go. The push stays within the free list's
+    /// original capacity, so recycling never allocates.
+    pub fn unref(&mut self, page: u32) {
+        let rc = &mut self.refcounts[page as usize];
+        assert!(*rc > 0, "unref of a free page");
+        *rc -= 1;
+        if *rc == 0 {
+            self.free.push(page);
+        }
+    }
+
+    pub fn refcount(&self, page: u32) -> u32 {
+        self.refcounts[page as usize]
+    }
+
+    /// Record overflow events incurred while filling rows of `page`.
+    pub fn record_ovf(&mut self, page: u32, events: u64) {
+        self.page_ovf[page as usize] += events;
+    }
+
+    /// Fill-time overflow events stored on `page`.
+    pub fn ovf(&self, page: u32) -> u64 {
+        self.page_ovf[page as usize]
+    }
+
+    /// Bookkeeping bytes this pool holds resident regardless of how
+    /// many pages are live: refcount + free-list slot + overflow
+    /// counter per page.
+    pub fn meta_bytes(&self) -> usize {
+        self.n_pages * (4 + 4 + 8)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PageMap
+
+/// Borrowed view of one slot's page table: logical position →
+/// `(physical page, in-page offset)`. `head` is the in-page offset of
+/// logical position 0 (nonzero only after `truncate_front` slides that
+/// drop whole head pages but land mid-page).
+#[derive(Clone, Copy, Debug)]
+pub struct PageMap<'a> {
+    table: &'a [u32],
+    head: usize,
+    page_size: usize,
+}
+
+impl<'a> PageMap<'a> {
+    pub fn new(table: &'a [u32], head: usize, page_size: usize) -> Self {
+        debug_assert!(head < page_size.max(1));
+        PageMap { table, head, page_size }
+    }
+
+    #[inline]
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    /// Resolve a logical position to `(physical page, in-page offset)`.
+    #[inline]
+    pub fn locate(&self, pos: usize) -> (usize, usize) {
+        let idx = self.head + pos;
+        (self.table[idx / self.page_size] as usize, idx % self.page_size)
+    }
+
+    /// Length of the contiguous run starting at logical `pos`, capped
+    /// at `limit`: gathers walk the sequence run by run, staying
+    /// contiguous within each page.
+    #[inline]
+    pub fn run(&self, pos: usize, limit: usize) -> usize {
+        let off = (self.head + pos) % self.page_size;
+        (self.page_size - off).min(limit)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PrefixCache
+
+#[derive(Clone, Debug)]
+struct Entry {
+    /// Parent entry id ([`NO_PREFIX`] for a first-page entry).
+    parent: u32,
+    /// Chain hash over (parent hash, this page's tokens).
+    hash: u64,
+    /// Physical page holding the encoded rows. The cache owns one
+    /// refcount on it for as long as the entry lives.
+    page: u32,
+    /// The page's tokens, kept to verify lookups exactly.
+    tokens: Vec<u16>,
+}
+
+/// Content-addressed index of full, immutable, position-0-aligned KV
+/// pages. An entry chain mirrors a token prefix one page at a time;
+/// admission walks the chain as far as it matches and maps those pages
+/// read-only into the new sequence's table.
+#[derive(Clone, Debug, Default)]
+pub struct PrefixCache {
+    entries: Vec<Entry>,
+    index: HashMap<u64, Vec<u32>>,
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn chain_hash(parent: u64, chunk: &[u16]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for b in parent.to_le_bytes() {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    for &t in chunk {
+        for b in t.to_le_bytes() {
+            h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
+
+impl PrefixCache {
+    pub fn new() -> Self {
+        PrefixCache::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    fn parent_hash(&self, parent: u32) -> u64 {
+        if parent == NO_PREFIX {
+            FNV_OFFSET
+        } else {
+            self.entries[parent as usize].hash
+        }
+    }
+
+    /// Find the entry extending `parent` with exactly `chunk`. The hash
+    /// narrows candidates; parent id and stored tokens are compared
+    /// outright, so a collision yields a miss, never a wrong page.
+    pub fn lookup(&self, parent: u32, chunk: &[u16]) -> Option<(u32, u32)> {
+        let h = chain_hash(self.parent_hash(parent), chunk);
+        for &e in self.index.get(&h)? {
+            let ent = &self.entries[e as usize];
+            if ent.parent == parent && ent.tokens == chunk {
+                return Some((e, ent.page));
+            }
+        }
+        None
+    }
+
+    /// Register `page` as the encoding of `chunk` under `parent`. The
+    /// caller must already have bumped the page's refcount for the
+    /// cache's hold. Returns the new entry id.
+    pub fn insert(&mut self, parent: u32, chunk: &[u16], page: u32) -> u32 {
+        let h = chain_hash(self.parent_hash(parent), chunk);
+        let id = self.entries.len() as u32;
+        self.entries.push(Entry { parent, hash: h, page, tokens: chunk.to_vec() });
+        self.index.entry(h).or_default().push(id);
+        id
+    }
+
+    /// Drop every entry, handing each held page to `unref` (the arena
+    /// decrements the pool). Live mappings in slot tables are
+    /// unaffected — only future lookups miss. This is the whole
+    /// eviction policy: under allocation pressure the arena flushes the
+    /// cache outright rather than tracking LRU chains.
+    pub fn flush(&mut self, mut unref: impl FnMut(u32)) {
+        for e in &self.entries {
+            unref(e.page);
+        }
+        self.entries.clear();
+        self.index.clear();
+    }
+
+    /// Logical bytes of cache bookkeeping: per entry the fixed fields,
+    /// the stored tokens, and the index slot that points at it.
+    pub fn meta_bytes(&self) -> usize {
+        self.entries.iter().map(|e| (4 + 8 + 4) + 2 * e.tokens.len() + (8 + 4)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_recycles_pages_through_the_free_list() {
+        let mut pool = PagePool::new(8, 3);
+        assert_eq!(pool.allocated(), 0);
+        let a = pool.alloc().unwrap();
+        let b = pool.alloc().unwrap();
+        let c = pool.alloc().unwrap();
+        assert_eq!((a, b, c), (0, 1, 2), "deterministic first-fit order");
+        assert!(pool.alloc().is_none(), "pool of 3 is exhausted");
+        pool.unref(b);
+        assert_eq!(pool.allocated(), 2);
+        assert_eq!(pool.alloc(), Some(b), "freed page comes back");
+    }
+
+    #[test]
+    fn refcounts_keep_shared_pages_alive() {
+        let mut pool = PagePool::new(8, 2);
+        let p = pool.alloc().unwrap();
+        pool.retain(p); // second holder
+        pool.unref(p);
+        assert_eq!(pool.refcount(p), 1, "one holder left");
+        assert_eq!(pool.allocated(), 1, "still resident");
+        pool.unref(p);
+        assert_eq!(pool.allocated(), 0, "last unref frees");
+    }
+
+    #[test]
+    fn alloc_resets_overflow_attribution() {
+        let mut pool = PagePool::new(4, 1);
+        let p = pool.alloc().unwrap();
+        pool.record_ovf(p, 7);
+        assert_eq!(pool.ovf(p), 7);
+        pool.unref(p);
+        let q = pool.alloc().unwrap();
+        assert_eq!(q, p, "same physical page recycled");
+        assert_eq!(pool.ovf(q), 0, "stale attribution cleared");
+    }
+
+    #[test]
+    fn page_map_resolves_runs_and_offsets() {
+        let table = [5u32, 2, 9];
+        let map = PageMap::new(&table, 3, 4); // head offset 3 in page 5
+        assert_eq!(map.locate(0), (5, 3));
+        assert_eq!(map.locate(1), (2, 0));
+        assert_eq!(map.locate(5), (9, 0));
+        assert_eq!(map.run(0, 100), 1, "one row left in the head page");
+        assert_eq!(map.run(1, 100), 4, "full page run");
+        assert_eq!(map.run(1, 2), 2, "capped by limit");
+    }
+
+    #[test]
+    fn prefix_cache_chains_verify_tokens_not_just_hashes() {
+        let mut cache = PrefixCache::new();
+        let a = cache.insert(NO_PREFIX, &[1, 2, 3, 4], 10);
+        let b = cache.insert(a, &[5, 6, 7, 8], 11);
+        assert_eq!(cache.lookup(NO_PREFIX, &[1, 2, 3, 4]), Some((a, 10)));
+        assert_eq!(cache.lookup(a, &[5, 6, 7, 8]), Some((b, 11)));
+        // same tokens under the wrong parent: miss
+        assert_eq!(cache.lookup(NO_PREFIX, &[5, 6, 7, 8]), None);
+        // different tokens under the right parent: miss
+        assert_eq!(cache.lookup(a, &[5, 6, 7, 9]), None);
+    }
+
+    #[test]
+    fn flush_releases_every_held_page() {
+        let mut cache = PrefixCache::new();
+        let a = cache.insert(NO_PREFIX, &[1, 2], 3);
+        cache.insert(a, &[3, 4], 4);
+        let mut released = Vec::new();
+        cache.flush(|p| released.push(p));
+        released.sort_unstable();
+        assert_eq!(released, vec![3, 4]);
+        assert!(cache.is_empty());
+        assert_eq!(cache.lookup(NO_PREFIX, &[1, 2]), None);
+    }
+}

@@ -246,6 +246,166 @@ fn quantized_model_chunked_serving_is_exact() {
     }
 }
 
+/// Overlapping-prefix workloads under the randomized-admission
+/// harness: every request opens with the same system prompt, tails
+/// diverge, 7 requests ride 3 slots (reuse waves), and generations run
+/// past the window (mid-chunk slides → re-prefills that adopt again).
+/// Token streams and per-request overflow counts must be bit-identical
+/// with prefix sharing ON vs OFF — and both equal the solo sequential
+/// reference — on both backends at every chunk size, with 4-token
+/// pages so several full pages are actually shared.
+#[test]
+fn shared_prefix_schedules_match_sharing_off_exactly() {
+    let m = model(47);
+    let system: Vec<u16> = (0..10u16).map(|i| (i * 7 + 3) % 32).collect();
+    let mut rng = Rng::new(9004);
+    // narrow attention register on the quant backend → live overflow
+    // events whose attribution must survive page adoption
+    for kind in [KvCacheKind::F32, KvCacheKind::Quant(KvQuantSpec::new(8, 8, Some(6)))] {
+        for &chunk in &[1usize, 5, usize::MAX] {
+            let mut arrivals: Vec<usize> =
+                (0..7).map(|_| rng.int_in(0, 10) as usize).collect();
+            arrivals.sort_unstable();
+            let reqs: Vec<Request> = (0..7u64)
+                .map(|id| {
+                    let tail = rng.int_in(0, 5) as usize;
+                    let mut prompt = system.clone();
+                    prompt.extend((0..tail).map(|_| rng.int_in(0, 31) as u16));
+                    Request { id, prompt, max_new_tokens: rng.int_in(1, 24) as usize }
+                })
+                .collect();
+            let run = |sharing: bool| {
+                let cfg = ServeConfig::new(3, kind)
+                    .with_prefill_chunk(chunk)
+                    .with_kv_page(4)
+                    .with_prefix_cache(sharing);
+                run_schedule(&m, cfg, &reqs, &arrivals)
+            };
+            let on = run(true);
+            let off = run(false);
+            let label = format!("kind={kind:?} chunk={chunk}");
+            assert_eq!(on.len(), reqs.len(), "{label}: lost responses");
+            for ((a, b), req) in on.iter().zip(off.iter()).zip(reqs.iter()) {
+                assert_eq!(a.id, req.id);
+                assert_eq!(
+                    a.tokens, b.tokens,
+                    "{label}: request {} tokens depend on prefix sharing",
+                    req.id
+                );
+                assert_eq!(
+                    a.overflow_events, b.overflow_events,
+                    "{label}: request {} overflow attribution depends on prefix sharing",
+                    req.id
+                );
+                assert_eq!(b.prefill_tokens_skipped, 0, "{label}: sharing off must skip nothing");
+                let (want_tokens, want_ovf) =
+                    sequential_reference(&m, &req.prompt, req.max_new_tokens, kind);
+                assert_eq!(a.tokens, want_tokens, "{label}: request {} vs solo", req.id);
+                assert_eq!(a.overflow_events, want_ovf, "{label}: request {} ovf vs solo", req.id);
+            }
+            // 7 requests on 3 slots: deferred admissions land after the
+            // leader registered the system pages, so sharing must fire
+            let skipped: usize = on.iter().map(|r| r.prefill_tokens_skipped).sum();
+            assert!(skipped > 0, "{label}: no admission ever hit the prefix cache");
+        }
+    }
+}
+
+/// ISSUE acceptance bar: a **64-token shared prefix across 8 admitted
+/// sequences**. After the leader serves, every follower's admission
+/// maps the four full 16-token system pages read-only and prefills
+/// only its 3-token private tail (`prefill_tokens_skipped == 64`) —
+/// and tokens plus per-request overflow counts stay bit-identical with
+/// sharing on vs off, on both backends, for every prefill chunk.
+#[test]
+fn sixty_four_token_shared_prefix_across_eight_sequences() {
+    let m = random_transformer(
+        TransformerConfig {
+            name: "chunked-wide".into(),
+            vocab: 32,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 32,
+            max_seq: 96,
+            act: Activation::Gelu,
+            parallel_residual: false,
+        },
+        48,
+    );
+    let system: Vec<u16> = (0..64u16).map(|i| (i * 11 + 5) % 32).collect();
+    let reqs: Vec<Request> = (0..8u64)
+        .map(|id| {
+            let mut prompt = system.clone();
+            let id = id as u16;
+            prompt.extend([id % 32, (id * 7 + 2) % 32, (id * 13 + 1) % 32]);
+            Request { id: id as u64, prompt, max_new_tokens: 4 }
+        })
+        .collect();
+    // leader at tick 0; followers arrive once it has retired, so the
+    // cache holds all four system pages before any of them admits
+    let mut arrivals = vec![90usize; reqs.len()];
+    arrivals[0] = 0;
+    for kind in [KvCacheKind::F32, KvCacheKind::Quant(KvQuantSpec::new(8, 8, Some(6)))] {
+        for &chunk in &[1usize, 7, usize::MAX] {
+            let label = format!("kind={kind:?} chunk={chunk}");
+            let run = |sharing: bool| {
+                let cfg = ServeConfig::new(4, kind)
+                    .with_prefill_chunk(chunk)
+                    .with_kv_page(16)
+                    .with_prefix_cache(sharing);
+                let mut eng = StepEngine::new(&m, cfg);
+                let mut done: Vec<Response> = Vec::new();
+                let mut next = 0usize;
+                let mut tick = 0usize;
+                loop {
+                    while next < reqs.len() && arrivals[next] <= tick && eng.free_slots() > 0 {
+                        eng.admit(reqs[next].clone(), Instant::now());
+                        next += 1;
+                    }
+                    eng.step();
+                    done.extend(eng.take_finished());
+                    tick += 1;
+                    if next == reqs.len() && !eng.has_work() {
+                        break;
+                    }
+                    assert!(tick < 100_000, "schedule did not converge");
+                }
+                let shared = eng.arena().pages_shared();
+                done.sort_by_key(|r| r.id);
+                (done, shared)
+            };
+            let (on, pages_shared) = run(true);
+            let (off, pages_off) = run(false);
+            assert_eq!(on.len(), 8, "{label}: lost responses");
+            assert_eq!(pages_off, 0, "{label}: sharing off must not adopt pages");
+            // 7 followers × 4 system pages each
+            assert_eq!(pages_shared, 28, "{label}: follower admissions must map system pages");
+            for ((a, b), req) in on.iter().zip(off.iter()).zip(reqs.iter()) {
+                assert_eq!(a.id, req.id);
+                let want = if a.id == 0 { 0 } else { 64 };
+                assert_eq!(
+                    a.prefill_tokens_skipped, want,
+                    "{label}: request {} must prefill only its unshared tail",
+                    req.id
+                );
+                assert_eq!(b.prefill_tokens_skipped, 0);
+                assert_eq!(a.tokens, b.tokens, "{label}: request {} tokens", req.id);
+                assert_eq!(
+                    a.overflow_events, b.overflow_events,
+                    "{label}: request {} overflow attribution",
+                    req.id
+                );
+            }
+            // spot-check one follower against solo sequential decode
+            let (want_tokens, want_ovf) =
+                sequential_reference(&m, &reqs[5].prompt, reqs[5].max_new_tokens, kind);
+            assert_eq!(on[5].tokens, want_tokens, "{label}: follower vs solo tokens");
+            assert_eq!(on[5].overflow_events, want_ovf, "{label}: follower vs solo ovf");
+        }
+    }
+}
+
 /// Slot-reuse stress: back-to-back waves through a 2-slot arena — every
 /// retirement hands its slot to a deferred request whose chunked
 /// prefill then shares steps with the survivor's decode rows.

@@ -10,7 +10,7 @@ use axe::coordinator::{quantize_transformer, DatapathMode, PipelineConfig};
 use axe::eval::synth_corpus;
 use axe::model::{
     random_transformer, Activation, KvArena, KvCache, KvCacheKind, KvQuantSpec, Transformer,
-    TransformerConfig,
+    TransformerConfig, DEFAULT_KV_PAGE,
 };
 use axe::quant::{AccumTarget, Algorithm, Method};
 
@@ -78,9 +78,10 @@ fn quant_arena_batched_decode_and_slot_reuse_are_bit_exact() {
     assert_eq!(arena.len(s1), seqs[1].len());
 }
 
-/// `truncate_front` on the quantized arena slides codes and scales
-/// as-is: every kept position dequantizes bit-identically after the
-/// slide, across all layers.
+/// `truncate_front` on the paged quantized arena re-bases the slot's
+/// head offset (whole head pages are dropped, never memmoved): every
+/// kept position dequantizes bit-identically after the slide, across
+/// all layers.
 #[test]
 fn quant_truncate_front_slides_codes_and_scales_without_drift() {
     let m = lm(902, 16, 2, 16);
@@ -136,22 +137,48 @@ fn quant_vs_f32_logits_divergence_is_bounded() {
     assert!(total / n as f32 < 0.1, "mean logit divergence {} too large", total / n as f32);
 }
 
-/// The i8 arena reports ≤ 30% of the f32 arena's bytes at equal
+/// The i8 arena reserves ≤ 30% of the f32 arena's bytes at equal
 /// slots/seq-len once heads are reasonably wide (scale overhead is
-/// 1/head_dim), and `bytes()` matches the `footprint` formula.
+/// 1/head_dim); `footprint_paged` matches the page-pool geometry
+/// including page-table/refcount metadata; and `bytes()` reports
+/// **resident** (allocated-pages-only) memory, so a fresh arena is
+/// metadata-only and filling a slot grows it page by page.
 #[test]
 fn quant_arena_memory_is_about_a_quarter_of_f32() {
     let m = lm(905, 64, 2, 32); // head dim 32
     let f32_bytes = KvArena::footprint(&m.cfg, 4, KvCacheKind::F32);
     let q8 = KvCacheKind::Quant(KvQuantSpec::int8());
     let q8_bytes = KvArena::footprint(&m.cfg, 4, q8);
-    assert_eq!(f32_bytes, 2 * m.cfg.n_layers * 4 * m.cfg.max_seq * m.cfg.d_model * 4);
+    // reserved capacity = pool pages × per-page payload + pool
+    // bookkeeping (refcount + free-list word + overflow counter per
+    // page) + per-slot page tables and head/len words
+    let ps = DEFAULT_KV_PAGE.min(m.cfg.max_seq);
+    let pps = (m.cfg.max_seq + ps - 1) / ps + 1; // +1: head-offset headroom
+    let n_pages = 4 * pps;
+    let per_page_f32 = 2 * m.cfg.n_layers * ps * m.cfg.d_model * 4;
+    let meta = n_pages * (4 + 4 + 8) + 4 * (pps * 4 + 2 * 8);
+    assert_eq!(f32_bytes, n_pages * per_page_f32 + meta);
     assert!(
         (q8_bytes as f64) <= 0.30 * f32_bytes as f64,
         "i8 arena {q8_bytes} B exceeds 30% of f32 {f32_bytes} B"
     );
-    let arena = KvArena::with_kind(&m, 4, q8);
-    assert_eq!(arena.bytes(), q8_bytes, "footprint formula disagrees with the live arena");
+    let mut arena = KvArena::with_kind(&m, 4, q8);
+    assert_eq!(arena.capacity_bytes(), q8_bytes, "footprint formula disagrees with the arena");
+    // resident bytes: fresh arena holds no pages — metadata only
+    let empty = arena.bytes();
+    assert_eq!(empty, meta, "fresh arena must not charge unallocated pages");
+    let slot = arena.alloc().unwrap();
+    for t in 0..(ps as u16 + 1) {
+        m.decode_step_batch(&[t], &[slot], &mut arena);
+    }
+    // ps+1 cached rows span exactly two pages
+    let per_page_q8 = (q8_bytes - meta) / n_pages;
+    assert_eq!(arena.resident_pages(), 2);
+    assert_eq!(arena.bytes(), empty + 2 * per_page_q8);
+    assert_eq!(arena.peak_bytes(), arena.bytes());
+    arena.release(slot);
+    assert_eq!(arena.bytes(), empty, "released pages must leave resident memory");
+    assert_eq!(arena.peak_bytes(), empty + 2 * per_page_q8, "peak is a high-water mark");
     // 16-bit codes halve instead of quarter
     let q16_bytes = KvArena::footprint(&m.cfg, 4, KvCacheKind::Quant(KvQuantSpec::int16()));
     assert!(q16_bytes > q8_bytes && q16_bytes < f32_bytes);
