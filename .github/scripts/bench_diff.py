@@ -30,6 +30,17 @@ def ttft_rows(doc):
     return {c.get("prefill_chunk"): c.get("ttft_ms") for c in block.get("configs", [])}
 
 
+def ragged_rows(doc):
+    block = doc.get("ragged_attention") or {}
+    return {
+        (c.get("in_flight"), c.get("prefill_chunk")): (
+            c.get("serial_tok_s"),
+            c.get("parallel_tok_s"),
+        )
+        for c in block.get("configs", [])
+    }
+
+
 def main():
     cur_path = pathlib.Path(sys.argv[1] if len(sys.argv) > 1 else "BENCH_decode.json")
     base_path = pathlib.Path(
@@ -63,6 +74,19 @@ def main():
         print(f"{'chunk':>10} {'baseline':>10} {'current':>10}")
         for k in sorted(shared, key=lambda x: (x is None, x)):
             print(f"{k!s:>10} {bt[k]:>10.2f} {ct[k]:>10.2f}")
+    cr = ragged_rows(cur)
+    if cr:
+        # informational: banded vs serial ragged attention in THIS run
+        # (in-run before/after, so runner noise cancels; not gated —
+        # the speedup depends on the runner's core count)
+        print("ragged attention: serial vs banded sweep (tok/s, this run):")
+        print(f"{'config':>14} {'serial':>10} {'banded':>10} {'speedup':>8}")
+        for (in_flight, chunk), (ser, par) in sorted(cr.items(), key=str):
+            if isinstance(ser, (int, float)) and ser and isinstance(par, (int, float)):
+                print(
+                    f"{in_flight!s:>7}@c{chunk!s:<6} {ser:>10.1f} {par:>10.1f} "
+                    f"{par / ser:>7.2f}x"
+                )
     if regressions:
         for (kv, in_flight), delta in regressions:
             print(

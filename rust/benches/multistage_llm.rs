@@ -193,6 +193,82 @@ fn shared_prefix_probe(model: &Transformer, val: &[u16], kind: KvCacheKind) -> S
     SharedPrefixProbe { prefix_len, n_seqs, points }
 }
 
+/// Banded ragged-attention before/after: one (in-flight, chunk) corner,
+/// serial sweep vs band-parallel sweep.
+struct RaggedAttnPoint {
+    in_flight: usize,
+    prefill_chunk: usize,
+    serial_tok_s: f64,
+    parallel_tok_s: f64,
+}
+
+/// The tentpole's measured before/after: the same chunked serving
+/// workload with the ragged-attention sweep serial (`attn_threads = 1`,
+/// the oracle path) vs band-parallel (`attn_threads = 0` → auto, with
+/// the work threshold zeroed so the pico fixture actually fans out),
+/// at 4 and 16 in-flight slots × prefill chunk 16 and 64 on the int8
+/// KV backend. Token streams are bit-identical across thread counts
+/// (property-tested in tests/chunked_prefill.rs); this probe measures
+/// the wall-clock trade only.
+struct RaggedAttnProbe {
+    attn_threads: usize,
+    gen_tokens: usize,
+    points: Vec<RaggedAttnPoint>,
+}
+
+fn ragged_attn_probe(model: &Transformer, val: &[u16], kind: KvCacheKind) -> RaggedAttnProbe {
+    use std::time::Instant;
+    let seq = model.cfg.max_seq;
+    let gen_tokens = 24usize;
+    let mut points = Vec::new();
+    for &in_flight in &[4usize, 16] {
+        for &chunk in &[16usize, 64] {
+            let run = |attn_threads: usize, par_min: usize| -> f64 {
+                let n_req = in_flight * 2; // one slot-reuse wave
+                let reqs: Vec<Request> = (0..n_req as u64)
+                    .map(|id| {
+                        let at = (id as usize * 13) % (val.len() - seq);
+                        Request {
+                            id,
+                            prompt: val[at..at + seq / 2].to_vec(),
+                            max_new_tokens: gen_tokens,
+                        }
+                    })
+                    .collect();
+                let cfg = ServeConfig::new(in_flight, kind)
+                    .with_prefill_chunk(chunk)
+                    .with_attn_threads(attn_threads)
+                    .with_attn_par_min_work(par_min);
+                let mut eng = StepEngine::new(model, cfg);
+                let mut next = 0usize;
+                let mut tokens = 0usize;
+                let t0 = Instant::now();
+                loop {
+                    while next < reqs.len() && eng.free_slots() > 0 {
+                        eng.admit(reqs[next].clone(), Instant::now());
+                        next += 1;
+                    }
+                    eng.step();
+                    for r in eng.take_finished() {
+                        tokens += r.tokens.len();
+                    }
+                    if next == reqs.len() && !eng.has_work() {
+                        break;
+                    }
+                }
+                tokens as f64 / t0.elapsed().as_secs_f64()
+            };
+            points.push(RaggedAttnPoint {
+                in_flight,
+                prefill_chunk: chunk,
+                serial_tok_s: run(1, usize::MAX),
+                parallel_tok_s: run(0, 0),
+            });
+        }
+    }
+    RaggedAttnProbe { attn_threads: axe::linalg::num_threads(), gen_tokens, points }
+}
+
 fn ttft_probe(model: &Transformer, val: &[u16]) -> TtftProbe {
     use std::time::Instant;
     let seq = model.cfg.max_seq;
@@ -510,6 +586,27 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    // ---- banded ragged-attention before/after: serial sweep vs the
+    // band-parallel sweep (threshold zeroed so this pico model fans
+    // out) across batch-size × chunk corners. Tokens are bit-identical
+    // across thread counts; only wall clock moves.
+    let ragged = ragged_attn_probe(&qmodel, &val, kv_kind);
+    println!(
+        "\nragged-attention banding ({} attn threads, {} gen tokens/req, int8 KV):",
+        ragged.attn_threads, ragged.gen_tokens
+    );
+    for p in &ragged.points {
+        println!(
+            "  in-flight {:>2}, chunk {:>2} : serial {:>7.1} tok/s, banded {:>7.1} tok/s  \
+             ({:.2}x)",
+            p.in_flight,
+            p.prefill_chunk,
+            p.serial_tok_s,
+            p.parallel_tok_s,
+            p.parallel_tok_s / p.serial_tok_s
+        );
+    }
+
     // ---- machine-readable results (CI uploads this as an artifact).
     // Default paths anchor at the workspace root (one level above this
     // package's manifest), independent of the bench's CWD.
@@ -529,6 +626,7 @@ fn main() -> anyhow::Result<()> {
         &attn,
         &ttft,
         &shared,
+        &ragged,
         &baseline_path,
     );
     std::fs::write(&out_path, &json)?;
@@ -617,6 +715,7 @@ fn render_json(
     attn: &AttnMicro,
     ttft: &TtftProbe,
     shared: &SharedPrefixProbe,
+    ragged: &RaggedAttnProbe,
     baseline_path: &str,
 ) -> String {
     let mut s = String::new();
@@ -685,6 +784,24 @@ fn render_json(
             p.pages_shared,
             p.prefill_tokens_skipped,
             if i + 1 < shared.points.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]},\n");
+    s.push_str(&format!(
+        "  \"ragged_attention\": {{\"attn_threads\": {}, \"gen_tokens\": {}, \"kv\": \"int8\", \
+         \"configs\": [\n",
+        ragged.attn_threads, ragged.gen_tokens
+    ));
+    for (i, p) in ragged.points.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"in_flight\": {}, \"prefill_chunk\": {}, \"serial_tok_s\": {:.1}, \
+             \"parallel_tok_s\": {:.1}, \"speedup\": {:.3}}}{}\n",
+            p.in_flight,
+            p.prefill_chunk,
+            p.serial_tok_s,
+            p.parallel_tok_s,
+            p.parallel_tok_s / p.serial_tok_s,
+            if i + 1 < ragged.points.len() { "," } else { "" }
         ));
     }
     s.push_str("  ]},\n");

@@ -230,6 +230,10 @@ pub struct ServeStats {
     /// engines (0 when the caller did not fill it in; see
     /// [`crate::model::KvArena::pages_shared`]).
     pub pages_shared: u64,
+    /// Unreferenced prefix-cache entries evicted under allocation
+    /// pressure, summed over engines (0 when the caller did not fill it
+    /// in; see [`crate::model::KvArena::cache_evictions`]).
+    pub cache_evictions: u64,
 }
 
 impl ServeStats {
@@ -278,6 +282,7 @@ impl ServeStats {
             p50_ttft_shared_s: pct(&shared_ttfts, 0.50),
             p50_ttft_cold_s: pct(&cold_ttfts, 0.50),
             pages_shared: 0,
+            cache_evictions: 0,
         }
     }
 }
@@ -307,6 +312,17 @@ pub struct ServeConfig {
     /// are bit-identical on or off — the switch trades admission work
     /// and resident bytes only.
     pub prefix_cache: bool,
+    /// Threads for the banded ragged-attention sweep (`--attn-threads`;
+    /// `0` = auto: resolve to [`crate::linalg::num_threads`] at engine
+    /// construction). `1` keeps the sweep serial — the parity oracle.
+    /// Token streams and per-request overflow counts are bit-identical
+    /// at every value.
+    pub attn_threads: usize,
+    /// Minimum estimated attention MACs in a step before it fans out
+    /// across bands (below it the serial sweep is faster and stays
+    /// allocation-free). Benches and parity tests set 0 to force
+    /// banding on tiny fixtures.
+    pub attn_par_min: usize,
 }
 
 impl ServeConfig {
@@ -317,6 +333,8 @@ impl ServeConfig {
             prefill_chunk: DEFAULT_PREFILL_CHUNK,
             kv_page: DEFAULT_KV_PAGE,
             prefix_cache: true,
+            attn_threads: 1,
+            attn_par_min: crate::model::PAR_ATTN_MIN_WORK,
         }
     }
 
@@ -332,6 +350,19 @@ impl ServeConfig {
 
     pub fn with_prefix_cache(mut self, on: bool) -> ServeConfig {
         self.prefix_cache = on;
+        self
+    }
+
+    /// Attention sweep thread count (`0` = auto).
+    pub fn with_attn_threads(mut self, threads: usize) -> ServeConfig {
+        self.attn_threads = threads;
+        self
+    }
+
+    /// Banding threshold in estimated attention MACs (`0` forces the
+    /// banded sweep whenever more than one group is scheduled).
+    pub fn with_attn_par_min_work(mut self, macs: usize) -> ServeConfig {
+        self.attn_par_min = macs;
         self
     }
 }
@@ -400,11 +431,18 @@ pub struct StepEngine<'m> {
 impl<'m> StepEngine<'m> {
     pub fn new(model: &'m Transformer, cfg: ServeConfig) -> StepEngine<'m> {
         let max_batch = cfg.max_batch.max(1);
+        let mut scratch = DecodeScratch::for_serve(&model.cfg, max_batch, cfg.prefill_chunk);
+        // resolve the thread count once and presize the per-thread
+        // attention pool here, so the step loop never allocates scratch
+        let threads =
+            if cfg.attn_threads == 0 { crate::linalg::num_threads() } else { cfg.attn_threads };
+        scratch.set_attn_threads(&model.cfg, threads);
+        scratch.set_attn_par_min_work(cfg.attn_par_min);
         StepEngine {
             model,
             cfg,
             arena: KvArena::with_kind_paged(model, max_batch, cfg.kind, cfg.kv_page),
-            scratch: DecodeScratch::for_serve(&model.cfg, max_batch, cfg.prefill_chunk),
+            scratch,
             active: Vec::with_capacity(max_batch),
             finished: Vec::new(),
             step_tokens: Vec::new(),
@@ -647,8 +685,15 @@ pub struct EngineStats {
     pub peak_bytes: usize,
     /// Reserved arena bytes (every page backed).
     pub capacity_bytes: usize,
-    /// Times allocation pressure flushed the prefix cache.
+    /// Times the prefix cache was flushed outright (explicit
+    /// invalidation; allocation pressure evicts instead).
     pub cache_flushes: u64,
+    /// Unreferenced prefix-cache entries evicted oldest-first under
+    /// allocation pressure.
+    pub cache_evictions: u64,
+    /// Private pages remapped onto an already-cached twin at
+    /// registration (concurrent same-prefix admissions deduplicated).
+    pub pages_deduped: u64,
 }
 
 impl EngineStats {
@@ -660,6 +705,8 @@ impl EngineStats {
             peak_bytes: arena.peak_bytes(),
             capacity_bytes: arena.capacity_bytes(),
             cache_flushes: arena.cache_flushes(),
+            cache_evictions: arena.cache_evictions(),
+            pages_deduped: arena.pages_deduped(),
         }
     }
 }

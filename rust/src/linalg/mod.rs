@@ -13,7 +13,10 @@ mod sqrtm;
 
 pub use cholesky::{cholesky_lower, solve_lower, solve_lower_transpose, spd_inverse, CholeskyError};
 pub use matrix::{dot, gemm_bt_into, num_threads, Mat};
-pub use qgemm::{dot_multistage_fused, qgemm_exact, qgemm_multistage};
+pub use qgemm::{
+    dot_multistage_fused, dot_multistage_fused_scalar, qgemm_exact, qgemm_multistage,
+    qgemm_multistage_scalar, simd_enabled,
+};
 pub use sqrtm::{sqrtm_psd, SqrtmError};
 
 /// Frobenius norm of the difference of two matrices (test helper).

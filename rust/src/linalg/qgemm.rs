@@ -40,16 +40,130 @@
 //!   touched through atomics (only when a row actually overflowed
 //!   inside a band, i.e. never on guaranteed-safe codes).
 //!
+//! The safe-tile inner step additionally carries an **explicit-SIMD
+//! variant** (AVX2 `_mm256_madd_epi16` widening accumulate), runtime-
+//! dispatched per process ([`simd_enabled`]: host AVX2 + `AXE_SIMD`
+//! env override) and engaged per tile only inside the 8-bit operand
+//! envelope where it is provably bit-identical to the scalar step —
+//! [`qgemm_multistage_scalar`] / [`dot_multistage_fused_scalar`] force
+//! the scalar step and serve as the in-process parity oracles.
+//!
 //! Precondition (documented, debug-asserted): products and per-tile
 //! ℓ1 masses must fit in i64 — true for any real quantized-code
 //! alphabet (|w| < 2^31, |x| < 2^31, tile · |x·w| < 2^63).
 
 use crate::accum::simulator::{dot_monolithic, AccumSpec, OverflowMode};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
 
 /// Minimum `rows * c * k` MAC count before a kernel call fans out to
 /// scoped threads; below it the inline serial path wins on latency.
 const PAR_MIN_WORK: usize = 64 * 64 * 64;
+
+/// Runtime SIMD dispatch for the safe-tile inner step: enabled when the
+/// host has AVX2 and `AXE_SIMD` is not `off`/`0`/`false`. Cached once —
+/// the decision is per-process, and the scalar kernel remains reachable
+/// in the same process through [`qgemm_multistage_scalar`] /
+/// [`dot_multistage_fused_scalar`] (the parity oracles).
+pub fn simd_enabled() -> bool {
+    static ENABLED: OnceLock<bool> = OnceLock::new();
+    *ENABLED.get_or_init(|| {
+        if let Ok(v) = std::env::var("AXE_SIMD") {
+            if v == "off" || v == "0" || v == "false" {
+                return false;
+            }
+        }
+        #[cfg(target_arch = "x86_64")]
+        {
+            std::arch::is_x86_feature_detected!("avx2")
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            false
+        }
+    })
+}
+
+/// AVX2 widening-accumulate inner step for safe tiles whose codes fit
+/// the 8-bit operand envelope. Bit-exactness argument: within the
+/// [`tile_in_range`] bounds the scalar accumulator can neither wrap
+/// (|Σ x·w| ≤ 2^19 · 255·127 ≪ 2^63) nor saturate its ℓ1 mass, and the
+/// vector kernel computes the same mathematical sums exactly — so both
+/// paths return identical `(acc, l1)` and therefore identical overflow
+/// decisions downstream.
+#[cfg(target_arch = "x86_64")]
+mod simd {
+    /// SIMD only pays off past this tile length; shorter tiles stay on
+    /// the scalar loop.
+    pub const MIN_SIMD_TILE: usize = 32;
+    /// i32-lane safety bound: each 16-wide step adds ≤ 2·255·127 =
+    /// 64 770 per lane, so 2^19/16 = 32 768 steps stay under i32::MAX.
+    pub const MAX_SIMD_TILE: usize = 1 << 19;
+
+    /// The operand envelope the vector kernel is exact for: unsigned
+    /// 8-bit activation codes (and the attention path's signed q/p
+    /// codes) on one side, signed 8-bit weight/KV codes on the other.
+    /// i16-KV or wider codes fail this check and fall back to scalar.
+    #[inline]
+    pub fn tile_in_range(x: &[i64], w: &[i32]) -> bool {
+        x.iter().all(|&v| v.unsigned_abs() <= 255)
+            && w.iter().all(|&v| v.unsigned_abs() <= 127)
+    }
+
+    /// `(Σ x·w, Σ|x·w|)` over one tile via `_mm256_madd_epi16`.
+    ///
+    /// i16 staging is exact for in-range codes, and each madd pair is
+    /// ≤ 2·255·127 = 64 770 — far under the i16-saturation hazard that
+    /// rules out `_mm256_maddubs_epi16` (2·255·127 > i16::MAX), and
+    /// under the i32 lane bound for `MAX_SIMD_TILE` steps. The ±255/127
+    /// range also keeps `_mm256_abs_epi16` away from its i16::MIN edge
+    /// case.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support (see [`super::simd_enabled`])
+    /// and `tile_in_range(x, w)` with `x.len() <= MAX_SIMD_TILE`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn tile_acc_l1_avx2(x: &[i64], w: &[i32]) -> (i64, u64) {
+        use std::arch::x86_64::*;
+        debug_assert_eq!(x.len(), w.len());
+        debug_assert!(x.len() <= MAX_SIMD_TILE);
+        let n = x.len();
+        let mut acc_v = _mm256_setzero_si256();
+        let mut l1_v = _mm256_setzero_si256();
+        let mut xs = [0i16; 16];
+        let mut ws = [0i16; 16];
+        let mut i = 0usize;
+        while i + 16 <= n {
+            for (s, &v) in xs.iter_mut().zip(&x[i..i + 16]) {
+                *s = v as i16;
+            }
+            for (s, &v) in ws.iter_mut().zip(&w[i..i + 16]) {
+                *s = v as i16;
+            }
+            let xv = _mm256_loadu_si256(xs.as_ptr() as *const __m256i);
+            let wv = _mm256_loadu_si256(ws.as_ptr() as *const __m256i);
+            acc_v = _mm256_add_epi32(acc_v, _mm256_madd_epi16(xv, wv));
+            l1_v = _mm256_add_epi32(
+                l1_v,
+                _mm256_madd_epi16(_mm256_abs_epi16(xv), _mm256_abs_epi16(wv)),
+            );
+            i += 16;
+        }
+        let mut lanes = [0i32; 8];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc_v);
+        let mut acc: i64 = lanes.iter().map(|&v| v as i64).sum();
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, l1_v);
+        // all ℓ1 lanes are sums of non-negative madd pairs
+        let mut l1: u64 = lanes.iter().map(|&v| v as u64).sum();
+        while i < n {
+            let p = x[i] * (w[i] as i64);
+            acc += p;
+            l1 += p.unsigned_abs();
+            i += 1;
+        }
+        (acc, l1)
+    }
+}
 
 /// Exact integer GEMM: `out[r][ch] = Σ_i x[r][i] · w[ch][i]`.
 ///
@@ -105,6 +219,42 @@ pub fn qgemm_multistage(
     out: &mut [i64],
     row_ovf: &mut [u64],
 ) {
+    qgemm_multistage_impl(x, rows, w, c, k, tile, inner, outer, out, row_ovf, simd_enabled());
+}
+
+/// [`qgemm_multistage`] with the explicit-SIMD safe-tile step forced
+/// OFF — the in-process parity oracle for the vector path (values and
+/// overflow counts must be bit-identical; see `tests/qgemm_parity.rs`).
+#[allow(clippy::too_many_arguments)]
+pub fn qgemm_multistage_scalar(
+    x: &[i64],
+    rows: usize,
+    w: &[i32],
+    c: usize,
+    k: usize,
+    tile: usize,
+    inner: AccumSpec,
+    outer: AccumSpec,
+    out: &mut [i64],
+    row_ovf: &mut [u64],
+) {
+    qgemm_multistage_impl(x, rows, w, c, k, tile, inner, outer, out, row_ovf, false);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn qgemm_multistage_impl(
+    x: &[i64],
+    rows: usize,
+    w: &[i32],
+    c: usize,
+    k: usize,
+    tile: usize,
+    inner: AccumSpec,
+    outer: AccumSpec,
+    out: &mut [i64],
+    row_ovf: &mut [u64],
+    use_simd: bool,
+) {
     assert_eq!(x.len(), rows * k, "x must be rows*k");
     assert_eq!(w.len(), c * k, "w must be c*k");
     assert_eq!(out.len(), rows * c, "out must be rows*c");
@@ -123,8 +273,14 @@ pub fn qgemm_multistage(
             let orow = &mut out[r * c..(r + 1) * c];
             let mut row_total = 0u64;
             for (ch, o) in orow.iter_mut().enumerate() {
-                let (value, overflows) =
-                    dot_multistage_fused(xrow, &w[ch * k..(ch + 1) * k], tile, inner, outer);
+                let (value, overflows) = dot_multistage_fused_impl(
+                    xrow,
+                    &w[ch * k..(ch + 1) * k],
+                    tile,
+                    inner,
+                    outer,
+                    use_simd,
+                );
                 *o = value;
                 row_total += overflows as u64;
             }
@@ -151,8 +307,14 @@ pub fn qgemm_multistage(
             let orow = band.row(r);
             let mut row_total = 0u64;
             for ch in lo..hi {
-                let (value, overflows) =
-                    dot_multistage_fused(xrow, &w[ch * k..(ch + 1) * k], tile, inner, outer);
+                let (value, overflows) = dot_multistage_fused_impl(
+                    xrow,
+                    &w[ch * k..(ch + 1) * k],
+                    tile,
+                    inner,
+                    outer,
+                    use_simd,
+                );
                 orow[ch - lo] = value;
                 row_total += overflows as u64;
             }
@@ -172,19 +334,74 @@ pub fn dot_multistage_fused(
     inner: AccumSpec,
     outer: AccumSpec,
 ) -> (i64, usize) {
+    dot_multistage_fused_impl(x, w, tile, inner, outer, simd_enabled())
+}
+
+/// [`dot_multistage_fused`] with the SIMD tile step forced OFF — the
+/// single-vector parity oracle for the vector path.
+pub fn dot_multistage_fused_scalar(
+    x: &[i64],
+    w: &[i32],
+    tile: usize,
+    inner: AccumSpec,
+    outer: AccumSpec,
+) -> (i64, usize) {
+    dot_multistage_fused_impl(x, w, tile, inner, outer, false)
+}
+
+/// `(Σ x·w wrapping, Σ|x·w| saturating)` over one tile — the scalar
+/// reference step. Wrapping/saturating only matter on codes that
+/// violate the i64 precondition envelope; whenever the ℓ1 mass fits
+/// the inner register (the fast-path condition) neither fires.
+#[inline]
+fn tile_acc_l1_scalar(xc: &[i64], wc: &[i32]) -> (i64, u64) {
+    let mut acc: i64 = 0;
+    let mut l1: u64 = 0;
+    for (xv, wv) in xc.iter().zip(wc.iter()) {
+        let p = xv * (*wv as i64);
+        acc = acc.wrapping_add(p);
+        l1 = l1.saturating_add(p.unsigned_abs());
+    }
+    (acc, l1)
+}
+
+/// Per-tile accumulate step with runtime SIMD dispatch: tiles long
+/// enough to amortize staging AND inside the 8-bit operand envelope go
+/// through the AVX2 kernel (bit-identical by construction — see the
+/// `simd` module); everything else takes the scalar reference step.
+#[inline]
+fn tile_acc_l1(xc: &[i64], wc: &[i32], use_simd: bool) -> (i64, u64) {
+    #[cfg(target_arch = "x86_64")]
+    if use_simd
+        && xc.len() >= simd::MIN_SIMD_TILE
+        && xc.len() <= simd::MAX_SIMD_TILE
+        && simd::tile_in_range(xc, wc)
+    {
+        // SAFETY: `use_simd` is only ever true after `simd_enabled()`
+        // verified AVX2 support, and the range/length guards above are
+        // exactly `tile_acc_l1_avx2`'s contract.
+        return unsafe { simd::tile_acc_l1_avx2(xc, wc) };
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = use_simd;
+    tile_acc_l1_scalar(xc, wc)
+}
+
+fn dot_multistage_fused_impl(
+    x: &[i64],
+    w: &[i32],
+    tile: usize,
+    inner: AccumSpec,
+    outer: AccumSpec,
+    use_simd: bool,
+) -> (i64, usize) {
     debug_assert_eq!(x.len(), w.len());
     assert!(tile >= 1, "tile must be >= 1");
     let inner_cap = inner.max() as u64; // bits >= 2 ⇒ max() >= 1
     let mut outer_acc: i64 = 0;
     let mut overflows = 0usize;
     for (xc, wc) in x.chunks(tile).zip(w.chunks(tile)) {
-        let mut acc: i64 = 0;
-        let mut l1: u64 = 0;
-        for (xv, wv) in xc.iter().zip(wc.iter()) {
-            let p = xv * (*wv as i64);
-            acc = acc.wrapping_add(p);
-            l1 = l1.saturating_add(p.unsigned_abs());
-        }
+        let (acc, l1) = tile_acc_l1(xc, wc, use_simd);
         let part = if l1 <= inner_cap {
             // Every prefix of the tile sum is within ±l1 ⊆ the register
             // range, so the per-MAC simulator could never have narrowed:
@@ -473,6 +690,66 @@ mod tests {
         let (want, want_ovf) = simulate_gemm(&x, 1, &w, c, k, tile, inner, outer);
         assert_eq!(out, want);
         assert_eq!(&ovf[..], &want_ovf[..]);
+    }
+
+    /// The dispatched tile step vs the scalar reference step, across
+    /// the SIMD engagement boundary (lengths straddling MIN_SIMD_TILE,
+    /// remainders exercising the scalar tail) on in-envelope codes.
+    /// When this process runs without AVX2 (or with AXE_SIMD=off) both
+    /// sides are scalar and the test is a tautology — CI re-runs the
+    /// suite with SIMD live on x86_64, where it bites.
+    #[test]
+    fn simd_tile_step_matches_scalar_reference() {
+        let mut rng = Rng::new(905);
+        for &n in &[1usize, 15, 16, 31, 32, 33, 48, 63, 64, 100, 256, 1000] {
+            let x: Vec<i64> = (0..n).map(|_| rng.int_in(-255, 255)).collect();
+            let w: Vec<i32> = (0..n).map(|_| rng.int_in(-127, 127) as i32).collect();
+            let scalar = tile_acc_l1_scalar(&x, &w);
+            let dispatched = tile_acc_l1(&x, &w, simd_enabled());
+            assert_eq!(dispatched, scalar, "n={n}");
+        }
+    }
+
+    /// Codes outside the 8-bit envelope (i16-KV magnitudes) must fall
+    /// back to the scalar step — and stay exact either way.
+    #[test]
+    fn out_of_envelope_tiles_fall_back_to_scalar() {
+        let mut rng = Rng::new(906);
+        let n = 64usize;
+        let x: Vec<i64> = (0..n).map(|_| rng.int_in(-30000, 30000)).collect();
+        let w: Vec<i32> = (0..n).map(|_| rng.int_in(-30000, 30000) as i32).collect();
+        assert_eq!(tile_acc_l1(&x, &w, true), tile_acc_l1_scalar(&x, &w));
+        let want: i64 = x.iter().zip(w.iter()).map(|(&a, &b)| a * b as i64).sum();
+        assert_eq!(tile_acc_l1(&x, &w, simd_enabled()).0, want);
+    }
+
+    /// Full-kernel SIMD-vs-scalar parity on SIMD-eligible shapes
+    /// (tile ≥ 32, 8-bit codes): values and per-row overflow counts
+    /// must be bit-identical through both public entry points, in
+    /// saturating and wrapping modes, against the per-MAC simulator.
+    #[test]
+    fn qgemm_simd_matches_forced_scalar_and_simulator() {
+        let mut rng = Rng::new(907);
+        let (rows, k, c, tile) = (3usize, 256usize, 8usize, 64usize);
+        for mode in [OverflowMode::Wraparound, OverflowMode::Saturate] {
+            let inner = AccumSpec::new(13, mode); // narrow: some tiles overflow
+            let outer = AccumSpec::new(18, mode);
+            let x: Vec<i64> = (0..rows * k).map(|_| rng.int_in(0, 255)).collect();
+            let w: Vec<i32> = (0..c * k).map(|_| rng.int_in(-127, 127) as i32).collect();
+            let mut out = vec![0i64; rows * c];
+            let mut ovf = vec![0u64; rows];
+            qgemm_multistage(&x, rows, &w, c, k, tile, inner, outer, &mut out, &mut ovf);
+            let mut out_s = vec![0i64; rows * c];
+            let mut ovf_s = vec![0u64; rows];
+            qgemm_multistage_scalar(
+                &x, rows, &w, c, k, tile, inner, outer, &mut out_s, &mut ovf_s,
+            );
+            assert_eq!(out, out_s, "mode {mode:?}: SIMD values diverge from scalar oracle");
+            assert_eq!(ovf, ovf_s, "mode {mode:?}: SIMD overflow counts diverge");
+            let (want, want_ovf) = simulate_gemm(&x, rows, &w, c, k, tile, inner, outer);
+            assert_eq!(out, want, "mode {mode:?} vs simulator");
+            assert_eq!(ovf, want_ovf, "mode {mode:?} counts vs simulator");
+        }
     }
 
     #[test]

@@ -370,6 +370,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "off" | "false" | "0" => false,
         s => return Err(anyhow!("--prefix-cache must be on or off (got {s})")),
     };
+    // --attn-threads N: threads for the banded ragged-attention sweep
+    // per engine (0 = auto-detect; 1 = serial oracle). Token streams
+    // and per-request overflow counts are bit-identical at every value.
+    let attn_threads = args.usize_or("attn-threads", 0);
     let queue = ServeQueue::new();
     for id in 0..n_requests as u64 {
         let start = (id as usize * 37) % (val.len() - seq);
@@ -389,12 +393,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ServeConfig::new(max_batch, kind)
             .with_prefill_chunk(prefill_chunk)
             .with_kv_page(kv_page)
-            .with_prefix_cache(prefix_cache),
+            .with_prefix_cache(prefix_cache)
+            .with_attn_threads(attn_threads),
     );
     let responses = queue.drain();
     let mut stats = ServeStats::from_responses(&responses, t0.elapsed().as_secs_f64());
     stats.arena_bytes = KvArena::footprint_paged(&model.cfg, max_batch, kind, kv_page);
     stats.pages_shared = engine_stats.iter().map(|e| e.pages_shared).sum();
+    stats.cache_evictions = engine_stats.iter().map(|e| e.cache_evictions).sum();
     let f32_bytes = KvArena::footprint_paged(&model.cfg, max_batch, KvCacheKind::F32, kv_page);
     println!("requests      : {}", stats.requests);
     println!("generated     : {} tokens in {:.2}s", stats.total_tokens, stats.wall_s);
@@ -424,7 +430,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     println!(
         "prefix cache  : {} — hits {}/{} ({:.0}%), {} prefill tokens skipped, \
-         {} pages shared, ttft p50 shared/cold {:.1}/{:.1} ms, {} flushes",
+         {} pages shared, ttft p50 shared/cold {:.1}/{:.1} ms, {} flushes, \
+         {} evictions, {} pages deduped",
         if prefix_cache { "on" } else { "off" },
         stats.prefix_hits,
         stats.requests,
@@ -433,7 +440,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         stats.pages_shared,
         stats.p50_ttft_shared_s * 1e3,
         stats.p50_ttft_cold_s * 1e3,
-        engine_stats.iter().map(|e| e.cache_flushes).sum::<u64>()
+        engine_stats.iter().map(|e| e.cache_flushes).sum::<u64>(),
+        stats.cache_evictions,
+        engine_stats.iter().map(|e| e.pages_deduped).sum::<u64>()
+    );
+    println!(
+        "attn threads  : {} per engine (banded ragged-attention sweep; \
+         0 = auto, 1 = serial oracle)",
+        if attn_threads == 0 { "auto".to_string() } else { attn_threads.to_string() }
     );
     println!(
         "overflow evts : {} total across requests ({:.3} per generated token; \

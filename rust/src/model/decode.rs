@@ -92,7 +92,7 @@
 use super::kvquant::{KvCacheKind, QuantKv};
 use super::layers::{attend_chunk_quant, attend_chunk_rows, KvRows};
 use super::paging::{PageMap, PagePool, PrefixCache, DEFAULT_KV_PAGE, NO_PREFIX};
-use super::scratch::DecodeScratch;
+use super::scratch::{AttnScratch, DecodeScratch};
 use super::transformer::{Transformer, TransformerConfig};
 
 /// One **row group** of a ragged decode step: `len` consecutive rows of
@@ -158,6 +158,12 @@ pub struct KvArena {
     pages_adopted: u64,
     /// Times allocation pressure flushed the prefix cache.
     cache_flushes: u64,
+    /// Private pages remapped onto an already-cached twin at
+    /// registration (late dedup of concurrent same-prefix admissions).
+    pages_deduped: u64,
+    /// Unreferenced cache entries evicted individually under allocation
+    /// pressure (oldest-first; see [`KvArena::ensure_capacity`]).
+    cache_evictions: u64,
 }
 
 /// Backend storage of the arena (see [`KvCacheKind`]). Payload is
@@ -263,6 +269,8 @@ impl KvArena {
             peak_pages: 0,
             pages_adopted: 0,
             cache_flushes: 0,
+            pages_deduped: 0,
+            cache_evictions: 0,
         }
     }
 
@@ -344,6 +352,20 @@ impl KvArena {
     /// Times allocation pressure flushed the prefix cache.
     pub fn cache_flushes(&self) -> u64 {
         self.cache_flushes
+    }
+
+    /// Private pages remapped onto an already-cached twin at
+    /// registration — each one deduplicated a concurrent same-prefix
+    /// admission after the fact.
+    pub fn pages_deduped(&self) -> u64 {
+        self.pages_deduped
+    }
+
+    /// Unreferenced prefix-cache entries evicted under allocation
+    /// pressure (oldest-first), keeping still-referenced entries — hot
+    /// system prompts — resident.
+    pub fn cache_evictions(&self) -> u64 {
+        self.cache_evictions
     }
 
     /// Reserved storage of an arena with `slots` slots for this model
@@ -493,33 +515,42 @@ impl KvArena {
     }
 
     /// Grow a slot's page table until it covers `new_len` cached
-    /// positions. Allocation is a free-list pop; on exhaustion the
-    /// prefix cache is flushed (dropping its holds frees every page no
-    /// live table still references) and the pop retried — the pool is
-    /// sized so that live slots alone can never exhaust it.
+    /// positions. Allocation is a free-list pop; on exhaustion,
+    /// **unreferenced** prefix-cache entries (held by the cache alone —
+    /// no live table maps them) are evicted oldest-first until a page
+    /// frees, so entries still adopted by in-flight sequences — hot
+    /// system prompts — stay resident under churn. The pool is sized so
+    /// that live slots alone can never exhaust it, so an evictable
+    /// entry always exists under pressure.
     fn ensure_capacity(&mut self, slot: usize, new_len: usize) {
         let needed = (self.heads[slot] + new_len + self.page_size - 1) / self.page_size;
         while self.tables[slot].len() < needed {
             let page = match self.pool.alloc() {
                 Some(p) => p,
-                None => {
-                    self.flush_prefix_cache();
-                    self.pool
-                        .alloc()
-                        .expect("page pool exhausted even after prefix-cache flush")
-                }
+                None => loop {
+                    assert!(
+                        self.cache.evict_oldest_unreferenced(&mut self.pool),
+                        "page pool exhausted with no evictable prefix-cache entry"
+                    );
+                    self.cache_evictions += 1;
+                    if let Some(p) = self.pool.alloc() {
+                        break p;
+                    }
+                },
             };
             self.tables[slot].push(page);
         }
         self.peak_pages = self.peak_pages.max(self.pool.allocated());
     }
 
-    /// Drop every prefix-cache entry (the whole eviction policy: under
-    /// allocation pressure the cache is flushed outright). Pages mapped
-    /// into live slots survive under their table refcounts; only future
-    /// admissions miss. Every slot's registration chain is restarted —
-    /// entry ids are dangling after a flush, and re-inserting a slot's
-    /// full pages later is cheap and idempotent.
+    /// Drop every prefix-cache entry at once (the blunt instrument —
+    /// allocation pressure evicts entry-by-entry instead, see
+    /// [`KvArena::ensure_capacity`]; this stays the explicit
+    /// full-invalidation API). Pages mapped into live slots survive
+    /// under their table refcounts; only future admissions miss. Every
+    /// slot's registration chain is restarted — entry ids are dangling
+    /// after a flush, and re-inserting a slot's full pages later is
+    /// cheap and idempotent.
     pub fn flush_prefix_cache(&mut self) {
         let KvArena { cache, pool, registered, chain, .. } = self;
         cache.flush(|p| pool.unref(p));
@@ -589,10 +620,23 @@ impl KvArena {
             let page = self.tables[slot][k];
             let parent = self.chain[slot];
             let entry = match self.cache.lookup(parent, chunk) {
-                // already cached (another admission registered the same
-                // prefix): keep this slot's private page mapped, just
-                // advance the chain anchor
-                Some((e, _)) => e,
+                // already cached (another admission prefilled the same
+                // prefix concurrently and registered first): remap this
+                // slot's table onto the cached twin and drop the
+                // private copy. Full pages are bit-identical for equal
+                // (parent chain, tokens) by determinism — including
+                // their fill-time overflow ledgers — so the swap is
+                // invisible to reads and to adoption credits, and it
+                // frees the duplicate page immediately.
+                Some((e, cached)) => {
+                    if cached != page {
+                        self.pool.retain(cached);
+                        self.tables[slot][k] = cached;
+                        self.pool.unref(page);
+                        self.pages_deduped += 1;
+                    }
+                    e
+                }
                 None => {
                     self.pool.retain(page);
                     self.cache.insert(parent, chunk, page)
@@ -794,7 +838,12 @@ impl Transformer {
     /// chunk row `i` attends causally over its slot's cached prefix
     /// plus chunk rows `0..=i` ([`attend_chunk_rows`] /
     /// [`attend_chunk_quant`]), resolving positions through the slot's
-    /// page table.
+    /// page table. When the workspace is configured with
+    /// [`DecodeScratch::set_attn_threads`] and the step's estimated
+    /// attention MACs clear the threshold, groups fan out across
+    /// contiguous work-balanced **bands** of scoped threads (the qgemm
+    /// band idiom); the serial sweep is the `threads = 1` oracle and
+    /// results are bit-identical at every thread count.
     ///
     /// **Token-exactness:** every row's arithmetic (embedding at its
     /// absolute position, row-independent linears, attention over its
@@ -863,7 +912,8 @@ impl Transformer {
             arena.ensure_capacity(g.slot, target);
         }
 
-        let DecodeScratch { lin, attn, step, .. } = scratch;
+        let DecodeScratch { lin, attn, step, attn_pool, attn_threads, attn_par_min, .. } = scratch;
+        let (attn_threads, attn_par_min) = (*attn_threads, *attn_par_min);
         step.ensure(n, g_n, d, d_ff, vocab);
         // Live-size views over the grow-only step buffers; everything
         // below operates on exactly n rows (g_n logit rows).
@@ -894,6 +944,32 @@ impl Transformer {
             }
         }
 
+        // Band plan for the attention sweep, computed once per step:
+        // slot lengths advance only after the layer loop, so every
+        // group's MAC estimate (score + value matmuls over its slot's
+        // prefix plus its own chunk rows) is constant across layers and
+        // one contiguous, work-balanced partition serves all of them.
+        // Groups are the parallel unit — they name pairwise-distinct
+        // slots (asserted above) and write disjoint `mix`/`row_ovf`
+        // ranges. Below the work threshold the step stays serial (and
+        // allocation-free); `bounds` is only built when it fans out.
+        let n_heads = self.cfg.n_heads;
+        let mut bands = attn_threads.min(g_n).max(1);
+        if bands > 1 {
+            let est: usize = groups
+                .iter()
+                .map(|g| 2 * g.len * (arena.len(g.slot) + g.len) * d)
+                .sum();
+            if est < attn_par_min {
+                bands = 1;
+            }
+        }
+        let bounds: Vec<usize> = if bands > 1 {
+            band_bounds(groups.iter().map(|g| g.len * (arena.len(g.slot) + g.len)), bands)
+        } else {
+            Vec::new()
+        };
+
         let mut attn_total = 0u64;
         for (bi, blk) in self.blocks.iter().enumerate() {
             for r in 0..n {
@@ -915,44 +991,49 @@ impl Transformer {
             }
             // ragged causal attention: each group over its own slot
             // only (prefix + its just-appended chunk rows), positions
-            // resolved through the slot's page map, all through one
-            // reused workspace
-            for g in groups {
-                let t0 = arena.len(g.slot);
-                let qrows = &q[g.start * d..(g.start + g.len) * d];
-                let orows = &mut mix[g.start * d..(g.start + g.len) * d];
-                let map = PageMap::new(&arena.tables[g.slot], arena.heads[g.slot], arena.page_size);
-                match &arena.store {
-                    KvStore::F32 { k, v } => {
-                        let view = PagedKvRows { k: &k[bi], v: &v[bi], map, d };
-                        attend_chunk_rows(
-                            qrows,
-                            &view,
-                            t0,
-                            g.len,
-                            d,
-                            self.cfg.n_heads,
-                            attn,
-                            orows,
-                        );
+            // resolved through the slot's page map. The appends above
+            // are complete, so the arena is read-only for the whole
+            // sweep; one band covering every group runs serially on
+            // the caller thread (the threads=1 oracle), a fanned-out
+            // step sweeps its bands under `std::thread::scope` — band
+            // 0 on the caller thread with the step's own attention
+            // workspace, bands 1.. on the engine-owned per-thread pool
+            // — and folds per-band overflow totals in band order, so
+            // tokens AND per-request overflow attribution are
+            // bit-identical at every thread count.
+            let mix_base = mix.as_mut_ptr() as usize;
+            let ovf_base = row_ovf.as_mut_ptr() as usize;
+            if bands <= 1 {
+                attn_total += attend_groups_band(
+                    n_heads, arena, groups, 0, g_n, bi, q, d, mix_base, ovf_base, attn,
+                );
+            } else {
+                let arena_ro: &KvArena = arena;
+                let q_ro: &[f32] = q;
+                std::thread::scope(|s| {
+                    let mut handles = Vec::with_capacity(bands - 1);
+                    let mut pool = attn_pool.iter_mut();
+                    for b in 1..bands {
+                        let (lo, hi) = (bounds[b], bounds[b + 1]);
+                        let a = pool.next().expect("attn pool presized to attn_threads - 1");
+                        if lo >= hi {
+                            continue;
+                        }
+                        handles.push(s.spawn(move || {
+                            attend_groups_band(
+                                n_heads, arena_ro, groups, lo, hi, bi, q_ro, d, mix_base,
+                                ovf_base, a,
+                            )
+                        }));
                     }
-                    KvStore::Quant(qkv) => {
-                        let spec = qkv.spec;
-                        let ovf = attend_chunk_quant(
-                            qrows,
-                            &qkv.slot_view(bi, map),
-                            t0,
-                            g.len,
-                            d,
-                            self.cfg.n_heads,
-                            &spec,
-                            attn,
-                            orows,
-                            &mut row_ovf[g.start..g.start + g.len],
-                        );
-                        attn_total += ovf;
+                    attn_total += attend_groups_band(
+                        n_heads, arena_ro, groups, bounds[0], bounds[1], bi, q_ro, d, mix_base,
+                        ovf_base, attn,
+                    );
+                    for h in handles {
+                        attn_total += h.join().expect("attention band panicked");
                     }
-                }
+                });
             }
             blk.wo.forward_rows_scratch(mix, n, attn_out, row_ovf, lin);
             if !self.cfg.parallel_residual {
@@ -1132,6 +1213,98 @@ impl Transformer {
         }
         out
     }
+}
+
+/// Split `count` work items into `bands` contiguous, work-balanced
+/// runs: `bounds[b]..bounds[b + 1]` is band `b`'s item range (runs may
+/// be empty). Item `i` lands in band `⌊(cum_i + w_i / 2) · bands /
+/// total⌋` — its work midpoint scaled into band space — which is
+/// monotone in `i`, so runs are contiguous and every item lands in
+/// exactly one band. Pure function of the work profile: the same
+/// schedule always yields the same partition, at every thread count.
+fn band_bounds(work: impl Iterator<Item = usize>, bands: usize) -> Vec<usize> {
+    debug_assert!(bands >= 1);
+    let work: Vec<usize> = work.collect();
+    let total = work.iter().sum::<usize>().max(1);
+    let mut bounds = vec![0usize; bands + 1];
+    let mut cum = 0usize;
+    for (i, &w) in work.iter().enumerate() {
+        let mid = cum + w / 2;
+        let b = (((mid as u128) * (bands as u128)) / (total as u128)) as usize;
+        bounds[b.min(bands - 1) + 1] = i + 1;
+        cum += w;
+    }
+    for b in 1..=bands {
+        bounds[b] = bounds[b].max(bounds[b - 1]);
+    }
+    bounds
+}
+
+/// One band of the ragged attention sweep: attend `groups[lo..hi]` at
+/// layer `layer`, writing each group's mixed output rows and (on the
+/// quantized backend) per-row overflow counts through raw base
+/// pointers into the step's `mix` / `row_ovf` buffers. Returns the
+/// band's attention-overflow total.
+///
+/// Shared by the serial sweep (one band covering every group) and the
+/// scoped-thread sweep, so the thread count can never change the
+/// per-group arithmetic — only who executes it.
+///
+/// SAFETY contract (upheld by `decode_step_ragged_scratch`): groups
+/// tile the token slice and name pairwise-distinct slots, so distinct
+/// groups — hence distinct bands — write pairwise-disjoint `mix` and
+/// `row_ovf` ranges; both buffers outlive the sweep, and no `&mut`
+/// reference to either is live while the raw base pointers are in use.
+#[allow(clippy::too_many_arguments)]
+fn attend_groups_band(
+    n_heads: usize,
+    arena: &KvArena,
+    groups: &[RowGroup],
+    lo: usize,
+    hi: usize,
+    layer: usize,
+    q: &[f32],
+    d: usize,
+    mix_base: usize,
+    ovf_base: usize,
+    attn: &mut AttnScratch,
+) -> u64 {
+    let mut total = 0u64;
+    for g in &groups[lo..hi] {
+        let t0 = arena.len(g.slot);
+        let qrows = &q[g.start * d..(g.start + g.len) * d];
+        // SAFETY: disjoint range per group (see contract above)
+        let orows = unsafe {
+            std::slice::from_raw_parts_mut((mix_base as *mut f32).add(g.start * d), g.len * d)
+        };
+        let map = PageMap::new(&arena.tables[g.slot], arena.heads[g.slot], arena.page_size);
+        match &arena.store {
+            KvStore::F32 { k, v } => {
+                let view = PagedKvRows { k: &k[layer], v: &v[layer], map, d };
+                attend_chunk_rows(qrows, &view, t0, g.len, d, n_heads, attn, orows);
+            }
+            KvStore::Quant(qkv) => {
+                let spec = qkv.spec;
+                // SAFETY: disjoint range per group (see contract above)
+                let rovf = unsafe {
+                    std::slice::from_raw_parts_mut((ovf_base as *mut u64).add(g.start), g.len)
+                };
+                total += attend_chunk_quant(
+                    qrows,
+                    &qkv.slot_view(layer, map),
+                    t0,
+                    g.len,
+                    d,
+                    n_heads,
+                    &spec,
+                    attn,
+                    orows,
+                    rovf,
+                );
+            }
+        }
+    }
+    total
 }
 
 /// Index of the first maximum — the tie-break every greedy path in this
@@ -1751,5 +1924,163 @@ mod tests {
             "model-wide counter must equal the attributed attention events"
         );
         assert_eq!(m.attention_overflow_events(), attributed);
+    }
+
+    /// The band partition covers every group exactly once in order
+    /// (monotone bounds), at every band count, and isolates dominant
+    /// work items.
+    #[test]
+    fn band_bounds_is_contiguous_exhaustive_and_balanced() {
+        let profiles: [&[usize]; 5] =
+            [&[1, 1, 1, 1], &[100, 1, 1, 1], &[1, 1, 1, 100], &[0, 0, 5, 0], &[3]];
+        for w in profiles {
+            for bands in 1..=6usize {
+                let b = band_bounds(w.iter().copied(), bands);
+                assert_eq!(b.len(), bands + 1, "{w:?} bands={bands}");
+                assert_eq!(b[0], 0);
+                assert_eq!(b[bands], w.len(), "{w:?} bands={bands}: items dropped");
+                for i in 1..=bands {
+                    assert!(b[i - 1] <= b[i], "{w:?} bands={bands}: non-monotone {b:?}");
+                }
+            }
+        }
+        // uniform work splits in half; a dominant item gets its own band
+        assert_eq!(band_bounds([1usize, 1, 1, 1].into_iter(), 2), vec![0, 2, 4]);
+        assert_eq!(band_bounds([100usize, 1, 1, 1].into_iter(), 2), vec![0, 1, 4]);
+    }
+
+    /// Tentpole parity: the banded attention sweep is bit-identical to
+    /// the serial oracle — logits, per-group overflow attribution, and
+    /// cached rows — at every thread count, on both backends (the
+    /// narrow quant spec keeps attention overflow events live).
+    #[test]
+    fn parallel_attention_bands_match_serial_oracle() {
+        for kind in [KvCacheKind::F32, KvCacheKind::Quant(KvQuantSpec::new(8, 8, Some(6)))] {
+            let m = model(false);
+            let vocab = m.cfg.vocab;
+            // one ragged step mixing a warm decode row with two fresh
+            // prefill chunks — three groups with skewed work
+            let build = |threads: usize| {
+                let mut arena = KvArena::with_kind(&m, 3, kind);
+                let sa = arena.alloc().unwrap();
+                let sb = arena.alloc().unwrap();
+                let sc = arena.alloc().unwrap();
+                let mut scratch = DecodeScratch::new();
+                if threads > 1 {
+                    scratch.set_attn_threads(&m.cfg, threads);
+                    scratch.set_attn_par_min_work(0);
+                }
+                let mut row = [0u64; 1];
+                for &t in &[1u16, 2, 3, 4] {
+                    row[0] = 0;
+                    m.decode_step_batch_scratch(&[t], &[sa], &mut arena, &mut row, &mut scratch);
+                }
+                let tokens: Vec<u16> = vec![5, 11, 12, 13, 14, 15, 21, 22, 23];
+                let groups = [
+                    RowGroup { slot: sa, start: 0, len: 1 },
+                    RowGroup { slot: sb, start: 1, len: 5 },
+                    RowGroup { slot: sc, start: 6, len: 3 },
+                ];
+                let mut g_ovf = [0u64; 3];
+                m.decode_step_ragged_scratch(&tokens, &groups, &mut arena, &mut g_ovf, &mut scratch);
+                (scratch.step.logits[..3 * vocab].to_vec(), g_ovf, arena)
+            };
+            let (want_logits, want_ovf, want_arena) = build(1);
+            for threads in [2usize, 8] {
+                let (logits, ovf, arena) = build(threads);
+                assert_eq!(
+                    logits, want_logits,
+                    "kind={kind:?} threads={threads}: logits diverged"
+                );
+                assert_eq!(
+                    ovf, want_ovf,
+                    "kind={kind:?} threads={threads}: overflow attribution diverged"
+                );
+                for layer in 0..m.cfg.n_layers {
+                    for slot in 0..3 {
+                        for pos in 0..arena.len(slot) {
+                            assert_eq!(
+                                arena.kv_row(layer, slot, pos),
+                                want_arena.kv_row(layer, slot, pos),
+                                "kind={kind:?} threads={threads} layer {layer} \
+                                 slot {slot} pos {pos}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Satellite: concurrent same-prefix admissions prefill privately
+    /// before either registers; the second registration must remap its
+    /// table onto the cached twin pages and free the duplicates.
+    #[test]
+    fn registration_dedup_remaps_onto_cached_twin() {
+        for kind in [KvCacheKind::F32, KvCacheKind::Quant(KvQuantSpec::int8())] {
+            let m = model(false);
+            let ps = 4usize;
+            let prompt: Vec<u16> = vec![3, 1, 4, 1, 5, 9, 2, 6, 5]; // 2 full pages + tail
+            let mut arena = KvArena::with_kind_paged(&m, 2, kind, ps);
+            let a = arena.alloc().unwrap();
+            let b = arena.alloc().unwrap();
+            // both prefill privately (nothing cached yet, so no adoption)
+            m.prefill_slot(&prompt, a, &mut arena);
+            m.prefill_slot(&prompt, b, &mut arena);
+            let resident_dup = arena.resident_pages();
+            arena.register_prefix(a, &prompt);
+            assert_eq!(arena.pages_deduped(), 0, "first registration only caches");
+            let snapshot: Vec<_> = (0..prompt.len()).map(|p| arena.kv_row(0, b, p)).collect();
+            arena.register_prefix(b, &prompt);
+            assert_eq!(arena.pages_deduped(), 2, "kind={kind:?}: both full pages remap");
+            assert_eq!(
+                arena.resident_pages(),
+                resident_dup - 2,
+                "kind={kind:?}: duplicate pages must free immediately"
+            );
+            // B reads identically through the remapped table…
+            for (p, want) in snapshot.iter().enumerate() {
+                assert_eq!(&arena.kv_row(0, b, p), want, "kind={kind:?} pos {p}");
+            }
+            // …and keeps decoding exactly (tail page stays private)
+            let mut solo = KvArena::with_kind_paged(&m, 1, kind, ps);
+            let s = solo.alloc().unwrap();
+            m.prefill_slot(&prompt, s, &mut solo);
+            let want = m.decode_step_batch(&[7], &[s], &mut solo);
+            let got = m.decode_step_batch(&[7], &[b], &mut arena);
+            assert_eq!(got, want, "kind={kind:?}: remapped slot diverged");
+            // releasing A keeps B alive on the now-shared pages
+            arena.release(a);
+            assert_eq!(&arena.kv_row(0, b, 0), &snapshot[0]);
+        }
+    }
+
+    /// Satellite: allocation pressure evicts unreferenced cache entries
+    /// oldest-first — a hot prefix still mapped into a live slot stays
+    /// resident and adoptable through arbitrary churn.
+    #[test]
+    fn pressure_evicts_unreferenced_cache_entries_oldest_first() {
+        let m = model(false);
+        let ps = 4usize;
+        // pool: 2 slots × (16/4 + 1) = 10 pages
+        let mut arena = KvArena::with_kind_paged(&m, 2, KvCacheKind::F32, ps);
+        let hot: Vec<u16> = (30..39).collect(); // 2 full pages + tail
+        let h = arena.alloc().unwrap();
+        m.prefill_slot(&hot, h, &mut arena);
+        arena.register_prefix(h, &hot); // entries 0,1 — referenced by h
+        // churn: distinct prompts fill the cache until the pool runs dry
+        for r in 0..4u16 {
+            let p: Vec<u16> = (0..9).map(|i| (r * 9 + i) % 48).collect();
+            let t = arena.alloc().unwrap();
+            m.prefill_slot(&p, t, &mut arena);
+            arena.register_prefix(t, &p);
+            arena.release(t);
+        }
+        assert_eq!(arena.cache_evictions(), 2, "round 3 must evict two cold entries");
+        assert_eq!(arena.cache_flushes(), 0, "pressure must not flush anymore");
+        // the hot prefix survived the churn: still adoptable in full
+        let f = arena.alloc().unwrap();
+        let (mapped, _) = arena.adopt_prefix(f, &hot);
+        assert_eq!(mapped, 8, "hot entries must survive eviction under pressure");
     }
 }

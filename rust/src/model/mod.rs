@@ -29,5 +29,5 @@ pub use loader::{
 };
 pub use mlp::{random_mlp, Mlp, MlpConfig};
 pub use paging::{PageMap, PagePool, PrefixCache, DEFAULT_KV_PAGE, NO_PREFIX};
-pub use scratch::{AttnScratch, DecodeScratch, LinearScratch, StepScratch};
+pub use scratch::{AttnScratch, DecodeScratch, LinearScratch, StepScratch, PAR_ATTN_MIN_WORK};
 pub use transformer::{random_transformer, Block, Capture, Transformer, TransformerConfig};

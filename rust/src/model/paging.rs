@@ -195,6 +195,12 @@ struct Entry {
     page: u32,
     /// The page's tokens, kept to verify lookups exactly.
     tokens: Vec<u16>,
+    /// Evicted under allocation pressure. Entry ids are stable
+    /// addresses — descendant entries and slot registration chains
+    /// hold them by index — so eviction tombstones instead of
+    /// compacting: the husk keeps its chain hash readable for
+    /// descendants while its tokens are freed and lookups skip it.
+    dead: bool,
 }
 
 /// Content-addressed index of full, immutable, position-0-aligned KV
@@ -205,6 +211,8 @@ struct Entry {
 pub struct PrefixCache {
     entries: Vec<Entry>,
     index: HashMap<u64, Vec<u32>>,
+    /// Non-tombstoned entries (what [`PrefixCache::len`] reports).
+    live: usize,
 }
 
 const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
@@ -229,11 +237,11 @@ impl PrefixCache {
     }
 
     pub fn len(&self) -> usize {
-        self.entries.len()
+        self.live
     }
 
     pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
+        self.live == 0
     }
 
     fn parent_hash(&self, parent: u32) -> u64 {
@@ -251,7 +259,7 @@ impl PrefixCache {
         let h = chain_hash(self.parent_hash(parent), chunk);
         for &e in self.index.get(&h)? {
             let ent = &self.entries[e as usize];
-            if ent.parent == parent && ent.tokens == chunk {
+            if !ent.dead && ent.parent == parent && ent.tokens == chunk {
                 return Some((e, ent.page));
             }
         }
@@ -264,28 +272,75 @@ impl PrefixCache {
     pub fn insert(&mut self, parent: u32, chunk: &[u16], page: u32) -> u32 {
         let h = chain_hash(self.parent_hash(parent), chunk);
         let id = self.entries.len() as u32;
-        self.entries.push(Entry { parent, hash: h, page, tokens: chunk.to_vec() });
+        self.entries.push(Entry { parent, hash: h, page, tokens: chunk.to_vec(), dead: false });
         self.index.entry(h).or_default().push(id);
+        self.live += 1;
         id
     }
 
-    /// Drop every entry, handing each held page to `unref` (the arena
-    /// decrements the pool). Live mappings in slot tables are
-    /// unaffected — only future lookups miss. This is the whole
-    /// eviction policy: under allocation pressure the arena flushes the
-    /// cache outright rather than tracking LRU chains.
+    /// Evict the **oldest** entry whose page no slot table references
+    /// (the cache holds its only refcount), handing the page back to
+    /// the pool. Entry ids grow monotonically with insertion, so the
+    /// index-order scan is oldest-first by construction. Returns
+    /// `false` when every live entry is still referenced — nothing is
+    /// evictable without stealing a page out from under a sequence.
+    ///
+    /// The entry is tombstoned, not removed (see [`Entry::dead`]). A
+    /// descendant of an evicted entry becomes unreachable for adoption
+    /// walks (they start at the chain root) and therefore drifts to
+    /// unreferenced as its adopters retire — later evictions collect
+    /// it in turn.
+    pub fn evict_oldest_unreferenced(&mut self, pool: &mut PagePool) -> bool {
+        for id in 0..self.entries.len() {
+            let e = &self.entries[id];
+            if e.dead || pool.refcount(e.page) != 1 {
+                continue;
+            }
+            let (hash, page) = (e.hash, e.page);
+            if let Some(bucket) = self.index.get_mut(&hash) {
+                bucket.retain(|&x| x != id as u32);
+                if bucket.is_empty() {
+                    self.index.remove(&hash);
+                }
+            }
+            let e = &mut self.entries[id];
+            e.dead = true;
+            e.tokens = Vec::new();
+            self.live -= 1;
+            pool.unref(page);
+            return true;
+        }
+        false
+    }
+
+    /// Drop every entry at once, handing each held page to `unref`
+    /// (the arena decrements the pool). Live mappings in slot tables
+    /// are unaffected — only future lookups miss. Allocation pressure
+    /// uses [`PrefixCache::evict_oldest_unreferenced`] instead; this is
+    /// the explicit full-invalidation API, and the one point where
+    /// tombstone husks are actually reclaimed.
     pub fn flush(&mut self, mut unref: impl FnMut(u32)) {
         for e in &self.entries {
-            unref(e.page);
+            if !e.dead {
+                unref(e.page);
+            }
         }
         self.entries.clear();
         self.index.clear();
+        self.live = 0;
     }
 
-    /// Logical bytes of cache bookkeeping: per entry the fixed fields,
-    /// the stored tokens, and the index slot that points at it.
+    /// Logical bytes of cache bookkeeping: per live entry the fixed
+    /// fields, the stored tokens, and the index slot that points at it;
+    /// per tombstone just the husk.
     pub fn meta_bytes(&self) -> usize {
-        self.entries.iter().map(|e| (4 + 8 + 4) + 2 * e.tokens.len() + (8 + 4)).sum()
+        self.entries
+            .iter()
+            .map(|e| {
+                let husk = 4 + 8 + 4 + 1;
+                if e.dead { husk } else { husk + 2 * e.tokens.len() + (8 + 4) }
+            })
+            .sum()
     }
 }
 
@@ -354,6 +409,73 @@ mod tests {
         assert_eq!(cache.lookup(NO_PREFIX, &[5, 6, 7, 8]), None);
         // different tokens under the right parent: miss
         assert_eq!(cache.lookup(a, &[5, 6, 7, 9]), None);
+    }
+
+    #[test]
+    fn eviction_is_oldest_first_and_skips_referenced_entries() {
+        let mut pool = PagePool::new(4, 4);
+        let pa = pool.alloc().unwrap();
+        let pb = pool.alloc().unwrap();
+        let pc = pool.alloc().unwrap();
+        let mut cache = PrefixCache::new();
+        // the cache takes its own hold on each page (the arena's retain)
+        pool.retain(pa);
+        pool.retain(pb);
+        pool.retain(pc);
+        let a = cache.insert(NO_PREFIX, &[1, 2, 3, 4], pa);
+        let b = cache.insert(a, &[5, 6, 7, 8], pb);
+        cache.insert(b, &[9, 9, 9, 9], pc);
+        // drop the slot references of b and c: they become cache-only
+        pool.unref(pb);
+        pool.unref(pc);
+        assert_eq!(cache.len(), 3);
+        // a is still mapped into a live table → skipped; b is the
+        // oldest evictable entry
+        assert!(cache.evict_oldest_unreferenced(&mut pool));
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.lookup(a, &[5, 6, 7, 8]), None, "evicted entry must miss");
+        assert_eq!(
+            cache.lookup(NO_PREFIX, &[1, 2, 3, 4]),
+            Some((a, pa)),
+            "referenced entry survives"
+        );
+        assert_eq!(pool.refcount(pb), 0, "evicted page returned to the pool");
+        assert!(cache.evict_oldest_unreferenced(&mut pool), "c is next-oldest");
+        assert_eq!(cache.len(), 1);
+        assert!(
+            !cache.evict_oldest_unreferenced(&mut pool),
+            "only a referenced entry remains — nothing evictable"
+        );
+        // flush releases exactly the surviving page (tombstones are not
+        // double-unreffed)
+        let mut released = Vec::new();
+        cache.flush(|p| released.push(p));
+        assert_eq!(released, vec![pa]);
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn tombstones_keep_descendant_chain_hashes_stable() {
+        let mut pool = PagePool::new(4, 3);
+        let pa = pool.alloc().unwrap();
+        let pb = pool.alloc().unwrap();
+        let mut cache = PrefixCache::new();
+        pool.retain(pa);
+        pool.retain(pb);
+        let a = cache.insert(NO_PREFIX, &[1, 2], pa);
+        let b = cache.insert(a, &[3, 4], pb);
+        pool.unref(pa); // the parent becomes cache-only; the child stays mapped
+        assert!(cache.evict_oldest_unreferenced(&mut pool), "parent evicts first");
+        assert_eq!(cache.lookup(NO_PREFIX, &[1, 2]), None);
+        // the child is still addressable by its parent id — slot
+        // registration chains anchored at the tombstone keep working
+        assert_eq!(cache.lookup(a, &[3, 4]), Some((b, pb)));
+        // and can still grow: the tombstone's chain hash feeds the
+        // grandchild's key exactly as before the eviction
+        let pc = pool.alloc().unwrap();
+        pool.retain(pc);
+        let c = cache.insert(b, &[5, 6], pc);
+        assert_eq!(cache.lookup(b, &[5, 6]), Some((c, pc)));
     }
 
     #[test]

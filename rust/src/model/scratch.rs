@@ -198,9 +198,16 @@ impl StepScratch {
     }
 }
 
+/// Default MAC-count threshold below which a ragged step's attention
+/// sweep stays serial even when a thread pool is configured — matches
+/// the band-threading threshold in `linalg::qgemm`, so tiny steps keep
+/// the zero-allocation guarantee and big steps pay spawns only when
+/// the arithmetic dwarfs them.
+pub const PAR_ATTN_MIN_WORK: usize = 64 * 64 * 64;
+
 /// One engine thread's complete decode workspace, reused across
 /// admissions, batched decode steps and window slides.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct DecodeScratch {
     pub lin: LinearScratch,
     pub attn: AttnScratch,
@@ -209,6 +216,29 @@ pub struct DecodeScratch {
     /// (`decode_step_batch_scratch`), taken out for the duration of the
     /// ragged call so the wrapper stays allocation-free in steady state.
     pub(crate) groups_buf: Vec<super::decode::RowGroup>,
+    /// Extra per-thread attention workspaces for the band-parallel
+    /// ragged sweep: band 0 runs on `attn`, bands 1.. each take one
+    /// pool entry. Owned by the engine (grow-only, presized by
+    /// [`DecodeScratch::set_attn_threads`]), never by the step.
+    pub(crate) attn_pool: Vec<AttnScratch>,
+    /// Attention sweep thread count (≥ 1; 1 = the serial oracle path).
+    pub(crate) attn_threads: usize,
+    /// Minimum estimated step MACs before the sweep fans out.
+    pub(crate) attn_par_min: usize,
+}
+
+impl Default for DecodeScratch {
+    fn default() -> DecodeScratch {
+        DecodeScratch {
+            lin: LinearScratch::default(),
+            attn: AttnScratch::default(),
+            step: StepScratch::default(),
+            groups_buf: Vec::new(),
+            attn_pool: Vec::new(),
+            attn_threads: 1,
+            attn_par_min: PAR_ATTN_MIN_WORK,
+        }
+    }
 }
 
 impl DecodeScratch {
@@ -216,6 +246,33 @@ impl DecodeScratch {
     /// use and are reused from then on.
     pub fn new() -> DecodeScratch {
         DecodeScratch::default()
+    }
+
+    /// Configure the ragged attention sweep to use up to `threads`
+    /// scoped threads (clamped to ≥ 1), presizing one pool workspace
+    /// per extra thread so the parallel path never grows a buffer
+    /// mid-step. Serial callers (`threads == 1`) keep the exact PR 5
+    /// code path.
+    pub fn set_attn_threads(&mut self, cfg: &TransformerConfig, threads: usize) {
+        self.attn_threads = threads.max(1);
+        let hd = cfg.d_model / cfg.n_heads.max(1);
+        while self.attn_pool.len() + 1 < self.attn_threads {
+            self.attn_pool.push(AttnScratch::new());
+        }
+        for a in &mut self.attn_pool {
+            a.ensure(hd, cfg.max_seq);
+        }
+    }
+
+    /// Configured attention sweep thread count.
+    pub fn attn_threads(&self) -> usize {
+        self.attn_threads
+    }
+
+    /// Override the work threshold gating the parallel attention sweep
+    /// (tests and benches set 0 to force banding on tiny fixtures).
+    pub fn set_attn_par_min_work(&mut self, macs: usize) {
+        self.attn_par_min = macs;
     }
 
     /// Workspace pre-sized for a model config and at most `max_rows`
@@ -302,6 +359,37 @@ mod tests {
         // inputs (d_ff) and head-wide outputs (vocab)
         assert_eq!(s.lin.fa.len(), 24 * 32);
         assert_eq!(s.lin.fy.len(), 24 * 48);
+    }
+
+    #[test]
+    fn attn_thread_pool_is_presized_and_grow_only() {
+        let cfg = TransformerConfig {
+            name: "s".into(),
+            vocab: 48,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 32,
+            max_seq: 24,
+            act: Activation::Gelu,
+            parallel_residual: false,
+        };
+        let mut s = DecodeScratch::for_model(&cfg, 4);
+        assert_eq!(s.attn_threads(), 1);
+        assert!(s.attn_pool.is_empty());
+        s.set_attn_threads(&cfg, 4);
+        assert_eq!(s.attn_threads(), 4);
+        assert_eq!(s.attn_pool.len(), 3);
+        for a in &s.attn_pool {
+            // presized like the main workspace: head dim 8 over max_seq
+            assert_eq!(a.k_head.len(), 24 * 8);
+        }
+        // shrinking the thread count keeps the pool (grow-only)
+        s.set_attn_threads(&cfg, 2);
+        assert_eq!(s.attn_threads(), 2);
+        assert_eq!(s.attn_pool.len(), 3);
+        s.set_attn_threads(&cfg, 0); // clamped to serial
+        assert_eq!(s.attn_threads(), 1);
     }
 
     #[test]

@@ -269,6 +269,46 @@ mod imp {
 
 pub use imp::Runtime;
 
+/// Execute a `qmatmul` Pallas artifact as an alternate integer-GEMM
+/// backend behind the calling convention of
+/// [`crate::linalg::qgemm_multistage`]: `x` is `rows*k` activation
+/// codes (row-major), `w` is `c*k` weight codes in the Rust
+/// channel-major layout. The artifact wants `w` feature-major
+/// (`[k, n]`, `n = c`), so this transposes on the way in, narrows the
+/// codes to the artifact's i32 interchange type, and widens the
+/// `rows*c` row-major outputs back to i64 on the way out.
+///
+/// The kernel performs the same tiled two-stage accumulation the fused
+/// Rust GEMM simulates, so its outputs are gated bit-exactly against
+/// `qgemm_multistage` (the same oracle that gates the explicit-SIMD
+/// path) in `tests/integration_artifacts.rs`. Codes always fit i32:
+/// the quantizers emit at most 16-bit codes.
+pub fn qgemm_pjrt(
+    rt: &Runtime,
+    name: &str,
+    x: &[i64],
+    rows: usize,
+    w: &[i32],
+    c: usize,
+    k: usize,
+) -> Result<Vec<i64>> {
+    assert_eq!(x.len(), rows * k, "x must be rows*k");
+    assert_eq!(w.len(), c * k, "w must be c*k");
+    let xi: Vec<i32> = x
+        .iter()
+        .map(|&v| i32::try_from(v).expect("activation code exceeds i32"))
+        .collect();
+    let mut wt = vec![0i32; k * c];
+    for ch in 0..c {
+        for i in 0..k {
+            wt[i * c + ch] = w[ch * k + i];
+        }
+    }
+    let outs =
+        rt.run_i32(name, &[I32Input::new(xi, &[rows, k]), I32Input::new(wt, &[k, c])])?;
+    Ok(outs[0].iter().map(|&v| v as i64).collect())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

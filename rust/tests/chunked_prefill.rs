@@ -406,6 +406,62 @@ fn sixty_four_token_shared_prefix_across_eight_sequences() {
     }
 }
 
+/// Tentpole parity gate for the band-parallel ragged-attention sweep:
+/// the thread count must be invisible. Token streams AND per-request
+/// overflow attribution are bit-identical at attention thread counts
+/// {1, 2, 8} — with the banding work threshold zeroed so even this
+/// tiny fixture actually fans out — and all of them equal the solo
+/// sequential reference. `threads = 1` is the serial oracle (the exact
+/// pre-banding code path); the narrow quant spec keeps attention
+/// overflow events live so attribution-folding across bands is
+/// genuinely exercised.
+#[test]
+fn attention_thread_count_never_changes_tokens_or_attribution() {
+    let m = model(49);
+    let mut rng = Rng::new(9005);
+    for kind in [KvCacheKind::F32, KvCacheKind::Quant(KvQuantSpec::new(8, 8, Some(6)))] {
+        for &chunk in &[1usize, 7, usize::MAX] {
+            let (reqs, arrivals) = random_schedule(&mut rng, 7);
+            let label = format!("kind={kind:?} chunk={chunk}");
+            let run_at = |threads: usize| {
+                let cfg = ServeConfig::new(3, kind)
+                    .with_prefill_chunk(chunk)
+                    .with_attn_threads(threads)
+                    .with_attn_par_min_work(0);
+                run_schedule(&m, cfg, &reqs, &arrivals)
+            };
+            let serial = run_at(1);
+            assert_eq!(serial.len(), reqs.len(), "{label}: lost responses");
+            for (resp, req) in serial.iter().zip(reqs.iter()) {
+                let (want_tokens, want_ovf) =
+                    sequential_reference(&m, &req.prompt, req.max_new_tokens, kind);
+                assert_eq!(resp.tokens, want_tokens, "{label}: serial vs solo tokens");
+                assert_eq!(resp.overflow_events, want_ovf, "{label}: serial vs solo ovf");
+            }
+            if matches!(kind, KvCacheKind::Quant(_)) {
+                let live: u64 = serial.iter().map(|r| r.overflow_events).sum();
+                assert!(live > 0, "{label}: attention overflow must be live in this fixture");
+            }
+            for threads in [2usize, 8] {
+                let par = run_at(threads);
+                for (a, b) in par.iter().zip(serial.iter()) {
+                    assert_eq!(a.id, b.id);
+                    assert_eq!(
+                        a.tokens, b.tokens,
+                        "{label}: request {} tokens depend on attn threads={threads}",
+                        a.id
+                    );
+                    assert_eq!(
+                        a.overflow_events, b.overflow_events,
+                        "{label}: request {} attribution depends on attn threads={threads}",
+                        a.id
+                    );
+                }
+            }
+        }
+    }
+}
+
 /// Slot-reuse stress: back-to-back waves through a 2-slot arena — every
 /// retirement hands its slot to a deferred request whose chunked
 /// prefill then shares steps with the survivor's decode rows.

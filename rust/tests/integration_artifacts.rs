@@ -236,6 +236,27 @@ fn pjrt_qmatmul_matches_rust_simulator() {
                 assert_eq!(got, expect, "{name} [{row},{col}]");
             }
         }
-        eprintln!("[pjrt] {name} bit-exact against the rust simulator ({m}x{k}x{n})");
+
+        // The same artifact driven through the backend adapter must
+        // agree bit-for-bit with the fused Rust GEMM — the very oracle
+        // that gates the explicit-SIMD safe-tile path — through the
+        // Rust calling convention (w channel-major [c,k]).
+        let xi: Vec<i64> = x.iter().map(|&v| v as i64).collect();
+        let mut wck = vec![0i32; n * k];
+        for ch in 0..n {
+            for i in 0..k {
+                wck[ch * k + i] = w[i * n + ch];
+            }
+        }
+        let mut fused = vec![0i64; m * n];
+        let mut row_ovf = vec![0u64; m];
+        axe::linalg::qgemm_multistage(
+            &xi, m, &wck, n, k, tile, inner, outer, &mut fused, &mut row_ovf,
+        );
+        let adapted = axe::runtime::qgemm_pjrt(&rt, name, &xi, m, &wck, n, k).unwrap();
+        assert_eq!(adapted, fused, "{name}: PJRT backend vs fused rust GEMM");
+        eprintln!(
+            "[pjrt] {name} bit-exact against the rust simulator and fused GEMM ({m}x{k}x{n})"
+        );
     }
 }

@@ -5,7 +5,7 @@
 use axe::accum::simulator::{dot_multistage, AccumSpec, OverflowMode};
 use axe::coordinator::{quantize_transformer, DatapathMode, PipelineConfig};
 use axe::eval::synth_corpus;
-use axe::linalg::qgemm_multistage;
+use axe::linalg::{qgemm_multistage, qgemm_multistage_scalar, simd_enabled};
 use axe::model::{
     random_transformer, Activation, Datapath, KvCache, Linear, TransformerConfig,
 };
@@ -50,6 +50,46 @@ fn kernel_matches_simulator_at_depth() {
             }
         }
         assert_eq!(ovf, want_ovf, "mode {mode:?} per-row overflow counts");
+    }
+}
+
+/// The explicit-SIMD safe-tile path against its forced-scalar oracle:
+/// values AND per-row overflow counts must be bit-identical in both
+/// overflow modes, across SIMD-eligible shapes (codes inside the
+/// vector envelope, tile ≥ the SIMD floor) and ineligible ones (codes
+/// outside the envelope → per-tile scalar fallback; ragged tails).
+/// When the host dispatches scalar anyway (no AVX2, or `AXE_SIMD=off`
+/// in the CI matrix leg) the two paths are trivially identical and the
+/// test still pins the dispatcher's determinism.
+#[test]
+fn simd_dispatch_matches_forced_scalar_oracle() {
+    let mut rng = Rng::new(7005);
+    eprintln!("[simd] runtime dispatch: {}", if simd_enabled() { "vector" } else { "scalar" });
+    // (rows, k, c, tile, xmax): in-envelope tiles, a sub-floor tile
+    // (forced scalar per-tile), a ragged tail (k % tile != 0), and
+    // out-of-envelope activation codes (tile_in_range rejects)
+    for &(rows, k, c, tile, xmax) in &[
+        (3usize, 1024usize, 24usize, 64usize, 255i64),
+        (2, 768, 16, 128, 255),
+        (3, 1024, 24, 8, 255),
+        (2, 500, 12, 64, 255),
+        (2, 512, 12, 64, 1 << 12),
+    ] {
+        for mode in [OverflowMode::Wraparound, OverflowMode::Saturate] {
+            let inner = AccumSpec::new(14, mode); // overflows sometimes
+            let outer = AccumSpec::new(18, mode);
+            let x: Vec<i64> = (0..rows * k).map(|_| rng.int_in(0, xmax)).collect();
+            let w: Vec<i32> = (0..c * k).map(|_| rng.int_in(-7, 7) as i32).collect();
+            let (mut out, mut ovf) = (vec![0i64; rows * c], vec![0u64; rows]);
+            let (mut out_s, mut ovf_s) = (vec![0i64; rows * c], vec![0u64; rows]);
+            qgemm_multistage(&x, rows, &w, c, k, tile, inner, outer, &mut out, &mut ovf);
+            qgemm_multistage_scalar(
+                &x, rows, &w, c, k, tile, inner, outer, &mut out_s, &mut ovf_s,
+            );
+            let label = format!("{rows}x{k}x{c} tile={tile} xmax={xmax} mode={mode:?}");
+            assert_eq!(out, out_s, "{label}: values");
+            assert_eq!(ovf, ovf_s, "{label}: per-row overflow counts");
+        }
     }
 }
 

@@ -174,6 +174,15 @@ fn steady_state_decode_steps_allocate_nothing() {
     }
     let chunk_slot = arena_r.alloc().expect("4th slot");
     let mut scratch_r = DecodeScratch::for_serve(&qmodel.cfg, 4, chunk_len);
+    // Configure a banded attention sweep. The per-thread AttnScratch
+    // pool is presized here (grow-only), and this fixture sits far
+    // below the default PAR_ATTN_MIN_WORK threshold, so every step
+    // still runs the serial oracle — pinning that merely *enabling*
+    // attention threads costs nothing on small steps and keeps the
+    // inline path allocation-free. (A step big enough to actually fan
+    // out allocates for the scoped spawns by design; see the module
+    // docs above.)
+    scratch_r.set_attn_threads(&qmodel.cfg, 8);
     let mut ovf_r = 0u64;
     for (i, &s) in dec_slots.iter().enumerate() {
         qmodel.prefill_slot_scratch(
