@@ -41,6 +41,12 @@ def ragged_rows(doc):
     }
 
 
+def hist_rows(doc):
+    return {
+        (c.get("kv"), c.get("in_flight")): c for c in doc.get("step_histograms", [])
+    }
+
+
 def main():
     cur_path = pathlib.Path(sys.argv[1] if len(sys.argv) > 1 else "BENCH_decode.json")
     base_path = pathlib.Path(
@@ -87,6 +93,28 @@ def main():
                     f"{in_flight!s:>7}@c{chunk!s:<6} {ser:>10.1f} {par:>10.1f} "
                     f"{par / ser:>7.2f}x"
                 )
+    ch = hist_rows(cur)
+    if ch:
+        # informational: the telemetry ring's view of the same serve
+        # runs (log2-bucket quantiles). Old baselines predate
+        # step_histograms, so this block reads the current run only and
+        # is never gated.
+        print("step histograms (telemetry ring, this run):")
+        print(f"{'config':>14} {'p50_ms':>8} {'p99_ms':>8} {'occ_p50':>8} {'dropped':>8}")
+        for (kv, in_flight), h in sorted(ch.items(), key=str):
+            p50, p99 = h.get("step_ns_p50"), h.get("step_ns_p99")
+            if isinstance(p50, (int, float)) and isinstance(p99, (int, float)):
+                print(
+                    f"{kv!s:>9}@{in_flight!s:<4} {p50 / 1e6:>8.3f} {p99 / 1e6:>8.3f} "
+                    f"{h.get('occupancy_p50')!s:>8} {h.get('records_dropped')!s:>8}"
+                )
+    ov = cur.get("telemetry_overhead") or {}
+    if isinstance(ov.get("overhead_pct"), (int, float)):
+        print(
+            f"telemetry overhead ({ov.get('kv')}@{ov.get('in_flight')}): "
+            f"off {ov.get('off_tok_s')} tok/s, on+jsonl {ov.get('on_tok_s')} tok/s "
+            f"({ov['overhead_pct']:+.2f}%)"
+        )
     if regressions:
         for (kv, in_flight), delta in regressions:
             print(

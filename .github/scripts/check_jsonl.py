@@ -1,0 +1,94 @@
+#!/usr/bin/env python3
+"""Validate a telemetry JSONL stream emitted by `axe serve --metrics`.
+
+Every line must be a self-contained JSON object carrying the complete
+schema-v1 StepRecord field set (no more, no less); steps must be
+strictly increasing, every counter a non-negative integer, and each
+record's row total must decompose into decode + prefill rows. Exits
+non-zero with a file:line diagnostic on the first violation.
+
+Usage: check_jsonl.py <metrics.jsonl> [min_records]
+"""
+
+import json
+import sys
+
+REQUIRED = {
+    "arena_capacity_bytes",
+    "arena_resident_bytes",
+    "attn_bands",
+    "decode_rows",
+    "overflow_attn",
+    "overflow_linear",
+    "prefill_chunks",
+    "prefill_rows",
+    "prefix_dedups",
+    "prefix_evictions",
+    "prefix_hits",
+    "queue_depth",
+    "schema_version",
+    "step",
+    "tokens",
+    "wall_ns",
+}
+
+
+def fail(path, line_no, msg):
+    print(f"{path}:{line_no}: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main():
+    if len(sys.argv) < 2:
+        print(__doc__.strip(), file=sys.stderr)
+        sys.exit(2)
+    path = sys.argv[1]
+    min_records = int(sys.argv[2]) if len(sys.argv) > 2 else 1
+    prev_step = None
+    n = 0
+    with open(path, encoding="utf-8") as f:
+        for line_no, line in enumerate(f, start=1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError as e:
+                fail(path, line_no, f"not valid JSON: {e}")
+            if not isinstance(rec, dict):
+                fail(path, line_no, "record is not a JSON object")
+            missing = REQUIRED - rec.keys()
+            if missing:
+                fail(path, line_no, f"missing fields: {sorted(missing)}")
+            extra = rec.keys() - REQUIRED
+            if extra:
+                fail(path, line_no, f"unknown fields for schema v1: {sorted(extra)}")
+            if rec["schema_version"] != 1:
+                fail(path, line_no, f"schema_version {rec['schema_version']!r} != 1")
+            for key in sorted(REQUIRED):
+                v = rec[key]
+                if isinstance(v, bool) or not isinstance(v, int) or v < 0:
+                    fail(path, line_no, f"{key} must be a non-negative integer, got {v!r}")
+            if rec["tokens"] != rec["decode_rows"] + rec["prefill_rows"]:
+                fail(
+                    path,
+                    line_no,
+                    f"tokens {rec['tokens']} != decode_rows {rec['decode_rows']} "
+                    f"+ prefill_rows {rec['prefill_rows']}",
+                )
+            if prev_step is not None and rec["step"] <= prev_step:
+                fail(
+                    path,
+                    line_no,
+                    f"step {rec['step']} not strictly increasing (prev {prev_step})",
+                )
+            prev_step = rec["step"]
+            n += 1
+    if n < min_records:
+        print(f"{path}: only {n} records, expected at least {min_records}", file=sys.stderr)
+        sys.exit(1)
+    print(f"{path}: {n} telemetry records OK (schema v1, steps strictly increasing)")
+
+
+if __name__ == "__main__":
+    main()

@@ -14,7 +14,10 @@
 //! the synthetic model, and — like every run — writes machine-readable
 //! results to `BENCH_decode.json` (override with AXE_BENCH_OUT):
 //! tokens/s per (kv backend, in-flight) configuration, the sequential
-//! baseline, and an in-run before/after of the attention hot loop
+//! baseline, the telemetry ring's step-latency/occupancy histograms
+//! per configuration (`"step_histograms"`) with a same-run
+//! telemetry-off vs on+JSONL-sink cost probe (`"telemetry_overhead"`),
+//! and an in-run before/after of the attention hot loop
 //! (`attend_one_query_quant_ref`, the PR 3 per-element-gather +
 //! per-call-alloc implementation, vs the scratch/bulk-gather fast
 //! path). If `BENCH_decode.baseline.json` exists (override with
@@ -25,8 +28,9 @@
 use axe::bench_support::time_once;
 use axe::coordinator::experiments::run_lm_config;
 use axe::coordinator::serve::{
-    serve, serve_with, Request, ServeConfig, ServeQueue, ServeStats, StepEngine,
+    serve_config, serve_telemetry, Request, ServeConfig, ServeQueue, ServeStats, StepEngine,
 };
+use axe::coordinator::telemetry::{MetricsSummary, SinkSpec, DEFAULT_FLUSH_EVERY};
 use axe::coordinator::{quantize_transformer, DatapathMode, PipelineConfig};
 use axe::eval::{load_corpus_split_or_synth, perplexity};
 use axe::model::{
@@ -83,6 +87,30 @@ struct DecodePoint {
     p99_ms: f64,
     overflow_events: u64,
     arena_bytes: usize,
+}
+
+/// Per-(kv, in-flight) merged telemetry summary — the step-latency /
+/// occupancy histograms behind a [`DecodePoint`] row, read out of the
+/// same serve run's telemetry ring.
+struct StepHistPoint {
+    kv: &'static str,
+    in_flight: usize,
+    summary: MetricsSummary,
+}
+
+/// Same-run cost of the telemetry path: the 16-in-flight config served
+/// with telemetry disabled vs recording every step AND streaming JSONL
+/// to a sink file (acceptance: < 2% throughput regression).
+struct TelemetryOverhead {
+    in_flight: usize,
+    off_tok_s: f64,
+    on_tok_s: f64,
+}
+
+impl TelemetryOverhead {
+    fn overhead_pct(&self) -> f64 {
+        (self.off_tok_s / self.on_tok_s - 1.0) * 100.0
+    }
 }
 
 /// In-run before/after of the attention hot loop.
@@ -314,6 +342,37 @@ fn ttft_probe(model: &Transformer, val: &[u16]) -> TtftProbe {
     TtftProbe { prompt_len, decoders, points }
 }
 
+/// Serve the same workload twice on one engine thread — telemetry
+/// disabled vs telemetry on with a JSONL sink streaming every step
+/// record to a temp file — and report both throughputs. Run in this
+/// order (off first) so the on-run sees the warmer caches: any bias
+/// favors finding overhead, not hiding it.
+fn telemetry_overhead_probe(
+    model: &Transformer,
+    reqs: &[Request],
+    kind: KvCacheKind,
+    in_flight: usize,
+) -> TelemetryOverhead {
+    let sink_path = std::env::temp_dir().join("axe_bench_overhead_metrics.jsonl");
+    let run = |spec: &SinkSpec| -> f64 {
+        let queue = ServeQueue::new();
+        for r in reqs {
+            queue.submit(r.clone());
+        }
+        queue.close();
+        let cfg = ServeConfig::new(in_flight, kind).with_telemetry(*spec != SinkSpec::None);
+        let t0 = std::time::Instant::now();
+        serve_telemetry(model, &queue, 1, cfg, spec, DEFAULT_FLUSH_EVERY)
+            .expect("jsonl sink in temp dir must be constructible");
+        let tokens: usize = queue.drain().iter().map(|r| r.tokens.len()).sum();
+        tokens as f64 / t0.elapsed().as_secs_f64()
+    };
+    let off_tok_s = run(&SinkSpec::None);
+    let on_tok_s = run(&SinkSpec::Jsonl(sink_path.clone()));
+    let _ = std::fs::remove_file(&sink_path);
+    TelemetryOverhead { in_flight, off_tok_s, on_tok_s }
+}
+
 fn main() -> anyhow::Result<()> {
     let quick = std::env::args().any(|a| a == "--quick");
     let full = std::env::var("AXE_BENCH_FULL").is_ok();
@@ -416,6 +475,7 @@ fn main() -> anyhow::Result<()> {
             .collect()
     };
     let mut points: Vec<DecodePoint> = Vec::new();
+    let mut hist_points: Vec<StepHistPoint> = Vec::new();
 
     // sequential baseline: one request at a time through the KV cache
     let reqs = make_requests();
@@ -438,9 +498,11 @@ fn main() -> anyhow::Result<()> {
         }
         queue.close();
         let t0 = std::time::Instant::now();
-        serve(&qmodel, &queue, 1, max_batch);
+        let engines =
+            serve_config(&qmodel, &queue, 1, ServeConfig::new(max_batch, KvCacheKind::F32));
         let responses = queue.drain();
-        let stats = ServeStats::from_responses(&responses, t0.elapsed().as_secs_f64());
+        let mut stats = ServeStats::from_responses(&responses, t0.elapsed().as_secs_f64());
+        stats.fill_telemetry(&engines);
         println!(
             "  continuous batch @ {max_batch:>2}  : {:>7.1} tok/s  \
              (p50 {:>6.1} ms, p99 {:>6.1} ms, overflow {})",
@@ -466,6 +528,9 @@ fn main() -> anyhow::Result<()> {
             overflow_events: stats.overflow_events,
             arena_bytes: KvArena::footprint(&qmodel.cfg, max_batch, KvCacheKind::F32),
         });
+        if let Some(t) = stats.telemetry {
+            hist_points.push(StepHistPoint { kv: "f32", in_flight: max_batch, summary: t });
+        }
     }
 
     // ---- quantized-KV decode throughput: same scheduler, but the
@@ -495,9 +560,10 @@ fn main() -> anyhow::Result<()> {
         }
         queue.close();
         let t0 = std::time::Instant::now();
-        serve_with(&qmodel, &queue, 1, max_batch, kv_kind);
+        let engines = serve_config(&qmodel, &queue, 1, ServeConfig::new(max_batch, kv_kind));
         let responses = queue.drain();
         let mut stats = ServeStats::from_responses(&responses, t0.elapsed().as_secs_f64());
+        stats.fill_telemetry(&engines);
         stats.arena_bytes = KvArena::footprint(&qmodel.cfg, max_batch, kv_kind);
         println!(
             "  quant-kv batch @ {max_batch:>2}    : {:>7.1} tok/s  \
@@ -524,7 +590,40 @@ fn main() -> anyhow::Result<()> {
             overflow_events: stats.overflow_events,
             arena_bytes: stats.arena_bytes,
         });
+        if let Some(t) = stats.telemetry {
+            hist_points.push(StepHistPoint { kv: "int8", in_flight: max_batch, summary: t });
+        }
     }
+
+    // ---- step histograms + telemetry cost: the telemetry ring's view
+    // of the serve runs above (merged per config), then the same int8
+    // @16 workload served telemetry-off vs telemetry-on-with-JSONL-sink
+    // to price the observability path itself.
+    println!("\nstep histograms from the telemetry ring (per serve config):");
+    for h in &hist_points {
+        let t = &h.summary;
+        println!(
+            "  {:>4} @ {:>2} : step p50 {:>7.3} ms p99 {:>7.3} ms, occupancy p50 {:>2} \
+             max {:>2}, {} steps ({} dropped)",
+            h.kv,
+            h.in_flight,
+            t.step_ns.quantile(0.50) as f64 / 1e6,
+            t.step_ns.quantile(0.99) as f64 / 1e6,
+            t.occupancy.quantile(0.50),
+            t.occupancy.max_value(),
+            t.steps,
+            t.records_dropped
+        );
+    }
+    let overhead = telemetry_overhead_probe(&qmodel, &make_requests(), kv_kind, 16);
+    println!(
+        "telemetry overhead (int8 @ {} in-flight): off {:.1} tok/s, on+jsonl {:.1} tok/s \
+         ({:+.2}% cost; acceptance < 2%)",
+        overhead.in_flight,
+        overhead.off_tok_s,
+        overhead.on_tok_s,
+        overhead.overhead_pct()
+    );
 
     // ---- attention hot-loop micro: the PR 3 reference (per-element
     // gathers + per-call allocations) vs the scratch/bulk-gather fast
@@ -623,6 +722,8 @@ fn main() -> anyhow::Result<()> {
         gen_tokens,
         sequential_tok_s,
         &points,
+        &hist_points,
+        &overhead,
         &attn,
         &ttft,
         &shared,
@@ -712,6 +813,8 @@ fn render_json(
     gen_tokens: usize,
     sequential_tok_s: f64,
     points: &[DecodePoint],
+    hist: &[StepHistPoint],
+    overhead: &TelemetryOverhead,
     attn: &AttnMicro,
     ttft: &TtftProbe,
     shared: &SharedPrefixProbe,
@@ -743,6 +846,42 @@ fn render_json(
         ));
     }
     s.push_str("  ],\n");
+    // step_histograms mirrors "configs" row-for-row: the same serve
+    // runs seen through the telemetry ring (ns quantiles are log2
+    // bucket upper bounds; buckets are the raw step-latency counts).
+    s.push_str("  \"step_histograms\": [\n");
+    for (i, h) in hist.iter().enumerate() {
+        let t = &h.summary;
+        let buckets: Vec<String> =
+            t.step_ns.bucket_counts().iter().map(|c| c.to_string()).collect();
+        s.push_str(&format!(
+            "    {{\"kv\": \"{}\", \"in_flight\": {}, \"steps\": {}, \"records_dropped\": {}, \
+             \"step_ns_p50\": {}, \"step_ns_p99\": {}, \"ttft_ns_p50\": {}, \
+             \"tpot_ns_p50\": {}, \"occupancy_p50\": {}, \"occupancy_max\": {}, \
+             \"step_ns_buckets\": [{}]}}{}\n",
+            h.kv,
+            h.in_flight,
+            t.steps,
+            t.records_dropped,
+            t.step_ns.quantile(0.50),
+            t.step_ns.quantile(0.99),
+            t.ttft_ns.quantile(0.50),
+            t.tpot_ns.quantile(0.50),
+            t.occupancy.quantile(0.50),
+            t.occupancy.max_value(),
+            buckets.join(", "),
+            if i + 1 < hist.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str(&format!(
+        "  \"telemetry_overhead\": {{\"kv\": \"int8\", \"in_flight\": {}, \"off_tok_s\": {:.1}, \
+         \"on_tok_s\": {:.1}, \"overhead_pct\": {:.2}}},\n",
+        overhead.in_flight,
+        overhead.off_tok_s,
+        overhead.on_tok_s,
+        overhead.overhead_pct()
+    ));
     s.push_str(&format!(
         "  \"attention_hot_loop\": {{\"t_len\": {}, \"d\": {}, \"heads\": {}, \"iters\": {}, \
          \"ref_us_per_call\": {:.3}, \"scratch_us_per_call\": {:.3}, \"speedup\": {:.2}}},\n",

@@ -12,6 +12,7 @@ pub mod pipeline;
 pub mod report;
 pub mod sensitivity;
 pub mod serve;
+pub mod telemetry;
 
 pub use pipeline::{
     quantize_mlp, quantize_transformer, DatapathMode, PipelineConfig, PipelineReport,

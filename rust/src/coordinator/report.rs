@@ -1,6 +1,7 @@
 //! Per-layer and per-run reporting structures (JSON-serializable via
-//! `util::json`).
+//! `util::json`), plus the serve report's telemetry block.
 
+use crate::coordinator::telemetry::MetricsSummary;
 use crate::util::json::Json;
 
 /// Outcome of quantizing one layer.
@@ -32,6 +33,53 @@ impl LayerReport {
             .set("seconds", self.seconds.into());
         j
     }
+}
+
+/// Render the serve report's telemetry block from the cross-engine
+/// merged summary: step-latency / TTFT / TPOT percentiles out of the
+/// log2 histograms (each quantile is the bucket upper bound, exact to
+/// within one bucket of the sorted-sample answer), occupancy, and the
+/// per-step overflow split. Percentile lines print p50/p90/p99/max.
+pub fn render_telemetry_report(t: &MetricsSummary) -> String {
+    let ms = |ns: u64| ns as f64 / 1e6;
+    let lat = |h: &crate::coordinator::telemetry::LatHist| {
+        format!(
+            "p50 {:.2} / p90 {:.2} / p99 {:.2} / max {:.2} ms",
+            ms(h.quantile(0.50)),
+            ms(h.quantile(0.90)),
+            ms(h.quantile(0.99)),
+            ms(h.max_value())
+        )
+    };
+    let mut out = String::new();
+    out.push_str(&format!(
+        "telemetry     : {} steps recorded, {} dropped from the ring ({} rows executed)\n",
+        t.steps, t.records_dropped, t.tokens
+    ));
+    out.push_str(&format!("  step latency: {}\n", lat(&t.step_ns)));
+    out.push_str(&format!(
+        "  ttft        : {} ({} requests)\n",
+        lat(&t.ttft_ns),
+        t.ttft_ns.count()
+    ));
+    out.push_str(&format!(
+        "  tpot        : {} ({} decode rows)\n",
+        lat(&t.tpot_ns),
+        t.tpot_ns.count()
+    ));
+    out.push_str(&format!(
+        "  occupancy   : p50 {} / p99 {} / max {} rows per step\n",
+        t.occupancy.quantile(0.50),
+        t.occupancy.quantile(0.99),
+        t.occupancy.max_value()
+    ));
+    out.push_str(&format!(
+        "  overflow    : {} linear + {} attention events ({:.4} per row)",
+        t.overflow_linear,
+        t.overflow_attn,
+        (t.overflow_linear + t.overflow_attn) as f64 / t.tokens.max(1) as f64
+    ));
+    out
 }
 
 /// Aggregate sparsity across layers (weighted by element count).
@@ -68,6 +116,30 @@ mod tests {
         let j = l.to_json();
         assert_eq!(j.get("name").unwrap().as_str(), Some("b0.wq"));
         assert_eq!(j.get("k").unwrap().as_usize(), Some(64));
+    }
+
+    #[test]
+    fn telemetry_report_renders() {
+        use crate::coordinator::telemetry::{StepMetrics, StepRecord};
+        let mut m = StepMetrics::new(8);
+        for i in 0..5u64 {
+            m.record(StepRecord {
+                step: i,
+                wall_ns: 1_000_000,
+                decode_rows: 3,
+                prefill_rows: 1,
+                prefill_chunks: 1,
+                tokens: 4,
+                overflow_linear: 2,
+                ..StepRecord::default()
+            });
+            m.record_ttft(2_000_000);
+        }
+        let s = render_telemetry_report(&m.summary());
+        assert!(s.contains("5 steps recorded"), "{s}");
+        assert!(s.contains("step latency"), "{s}");
+        assert!(s.contains("occupancy   : p50 4 / p99 4 / max 4 rows"), "{s}");
+        assert!(s.contains("10 linear + 0 attention"), "{s}");
     }
 
     #[test]

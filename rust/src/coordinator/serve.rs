@@ -47,6 +47,10 @@
 //! [`serve_with`]) attention matmuls produced — not a batch-window
 //! bound.
 
+use crate::coordinator::telemetry::{
+    spawn_drainer, EventSink, MetricsSummary, SharedMetrics, SinkSpec, StepRecord,
+    DEFAULT_FLUSH_EVERY, DEFAULT_RING_CAPACITY,
+};
 use crate::model::{
     argmax, DecodeScratch, KvArena, KvCacheKind, RowGroup, Transformer, DEFAULT_KV_PAGE,
 };
@@ -180,6 +184,12 @@ impl ServeQueue {
         self.cv.notify_all();
     }
 
+    /// Pending (unadmitted) requests right now — the queue depth an
+    /// engine samples into its step records at each admission poll.
+    pub fn depth(&self) -> usize {
+        self.inner.lock().unwrap().pending.len()
+    }
+
     /// Wait for all submitted work to finish, then return responses
     /// sorted by id.
     pub fn drain(&self) -> Vec<Response> {
@@ -234,6 +244,11 @@ pub struct ServeStats {
     /// pressure, summed over engines (0 when the caller did not fill it
     /// in; see [`crate::model::KvArena::cache_evictions`]).
     pub cache_evictions: u64,
+    /// Per-step telemetry merged across engines (`None` until the
+    /// caller runs [`ServeStats::fill_telemetry`], or when every
+    /// engine ran with telemetry off) — step-latency / TTFT / TPOT /
+    /// occupancy histograms and the per-step overflow split.
+    pub telemetry: Option<MetricsSummary>,
 }
 
 impl ServeStats {
@@ -283,7 +298,24 @@ impl ServeStats {
             p50_ttft_cold_s: pct(&cold_ttfts, 0.50),
             pages_shared: 0,
             cache_evictions: 0,
+            telemetry: None,
         }
+    }
+
+    /// Merge the per-engine telemetry summaries (histograms are
+    /// associative, so fold order is irrelevant) into this stats
+    /// block for the serve report.
+    pub fn fill_telemetry(&mut self, engines: &[EngineStats]) {
+        let mut merged: Option<MetricsSummary> = None;
+        for e in engines {
+            if let Some(t) = &e.telemetry {
+                match &mut merged {
+                    Some(m) => m.merge(t),
+                    None => merged = Some(*t),
+                }
+            }
+        }
+        self.telemetry = merged;
     }
 }
 
@@ -323,6 +355,15 @@ pub struct ServeConfig {
     /// allocation-free). Benches and parity tests set 0 to force
     /// banding on tiny fixtures.
     pub attn_par_min: usize,
+    /// Per-step telemetry (record ring + histograms). On by default:
+    /// recording is allocation-free and adds one mutex round-trip per
+    /// step. Turning it off removes the records, the histograms and
+    /// the [`EngineStats::telemetry`] summary.
+    pub telemetry: bool,
+    /// Telemetry ring capacity in records (`--metrics-ring`) — the
+    /// slack between the engine and its off-thread sink drainer before
+    /// oldest records are overwritten (drop-counted).
+    pub metrics_ring: usize,
 }
 
 impl ServeConfig {
@@ -335,6 +376,8 @@ impl ServeConfig {
             prefix_cache: true,
             attn_threads: 1,
             attn_par_min: crate::model::PAR_ATTN_MIN_WORK,
+            telemetry: true,
+            metrics_ring: DEFAULT_RING_CAPACITY,
         }
     }
 
@@ -363,6 +406,18 @@ impl ServeConfig {
     /// banded sweep whenever more than one group is scheduled).
     pub fn with_attn_par_min_work(mut self, macs: usize) -> ServeConfig {
         self.attn_par_min = macs;
+        self
+    }
+
+    /// Per-step telemetry on/off (default on).
+    pub fn with_telemetry(mut self, on: bool) -> ServeConfig {
+        self.telemetry = on;
+        self
+    }
+
+    /// Telemetry ring capacity in records (clamped to ≥ 1).
+    pub fn with_metrics_ring(mut self, records: usize) -> ServeConfig {
+        self.metrics_ring = records.max(1);
         self
     }
 }
@@ -426,6 +481,19 @@ pub struct StepEngine<'m> {
     /// belongs to (a budget-starved prefill contributes no group).
     group_seq: Vec<usize>,
     group_ovf: Vec<u64>,
+    /// Per-step telemetry (ring + histograms), shared with the sink
+    /// drainer when one is attached. `None` with `cfg.telemetry` off.
+    metrics: Option<SharedMetrics>,
+    /// Index of the next *executed* ragged step (empty scheduler
+    /// iterations don't advance it, so recorded steps are consecutive).
+    step_idx: u64,
+    /// Queue depth sampled at the latest admission poll
+    /// ([`StepEngine::note_queue_depth`]).
+    queue_depth: u32,
+    /// Last recorded [pages_shared, pages_deduped, cache_evictions] —
+    /// step records carry per-step deltas of the arena's lifetime
+    /// counters.
+    prefix_snap: [u64; 3],
 }
 
 impl<'m> StepEngine<'m> {
@@ -449,6 +517,10 @@ impl<'m> StepEngine<'m> {
             groups: Vec::with_capacity(max_batch),
             group_seq: Vec::with_capacity(max_batch),
             group_ovf: Vec::with_capacity(max_batch),
+            metrics: cfg.telemetry.then(|| SharedMetrics::new(cfg.metrics_ring)),
+            step_idx: 0,
+            queue_depth: 0,
+            prefix_snap: [0; 3],
         }
     }
 
@@ -471,6 +543,19 @@ impl<'m> StepEngine<'m> {
 
     pub fn has_work(&self) -> bool {
         !self.active.is_empty()
+    }
+
+    /// The engine's telemetry handle (`None` with telemetry off) —
+    /// clone it to attach a sink drainer, or snapshot
+    /// `.summary()` after the run.
+    pub fn metrics(&self) -> Option<&SharedMetrics> {
+        self.metrics.as_ref()
+    }
+
+    /// Record the pending-queue depth observed at this iteration's
+    /// admission poll; the next step record carries it.
+    pub fn note_queue_depth(&mut self, depth: usize) {
+        self.queue_depth = depth.min(u32::MAX as usize) as u32;
     }
 
     /// Admit a request into a free slot. Costs no model work: the
@@ -529,6 +614,10 @@ impl<'m> StepEngine<'m> {
     /// ({prefill chunks + decode rows}) over everything still in
     /// flight. No-op when nothing is in flight.
     pub fn step(&mut self) {
+        // telemetry clocks the full scheduler iteration (sample/slide/
+        // retire + compose + kernel + routing); gated so a telemetry-
+        // off engine doesn't even read the clock
+        let t0 = self.metrics.is_some().then(Instant::now);
         let vocab = self.model.cfg.vocab;
         // -- sample, slide, retire (Decoding sequences only; a
         // Prefilling sequence has no logits to sample yet)
@@ -566,7 +655,16 @@ impl<'m> StepEngine<'m> {
             }
             let next = argmax(&seq.logits) as u16;
             if seq.first_token.is_none() {
-                seq.first_token = Some(Instant::now());
+                let now = Instant::now();
+                seq.first_token = Some(now);
+                // TTFT lands in the histogram the moment it is known —
+                // the record stream stays per-step, per-request latency
+                // still reaches the merged summary
+                if let Some(m) = &self.metrics {
+                    m.with(|mm| {
+                        mm.record_ttft(now.duration_since(seq.enqueued).as_nanos() as u64)
+                    });
+                }
             }
             seq.emitted.push(next);
             seq.context.push(next);
@@ -598,6 +696,7 @@ impl<'m> StepEngine<'m> {
         self.groups.clear();
         self.group_seq.clear();
         let mut budget = self.cfg.prefill_chunk.max(1);
+        let (mut decode_rows, mut prefill_rows, mut prefill_chunks) = (0u32, 0u32, 0u32);
         for (si, seq) in self.active.iter().enumerate() {
             match seq.phase {
                 Phase::Decoding => {
@@ -605,6 +704,7 @@ impl<'m> StepEngine<'m> {
                     self.step_tokens.push(*seq.context.last().unwrap());
                     self.groups.push(RowGroup { slot: seq.slot, start, len: 1 });
                     self.group_seq.push(si);
+                    decode_rows += 1;
                 }
                 Phase::Prefilling { next_pos } => {
                     if budget == 0 {
@@ -616,6 +716,8 @@ impl<'m> StepEngine<'m> {
                     self.groups.push(RowGroup { slot: seq.slot, start, len: take });
                     self.group_seq.push(si);
                     budget -= take;
+                    prefill_rows += take as u32;
+                    prefill_chunks += 1;
                 }
             }
         }
@@ -657,6 +759,40 @@ impl<'m> StepEngine<'m> {
                 seq.phase = Phase::Decoding;
             }
         }
+
+        // -- telemetry: one record per executed ragged step, built from
+        // state the step already computed (per-group overflow fold, the
+        // kernel's attention share, arena counters) — a handful of
+        // reads, one memcpy into the preallocated ring, no allocation
+        if let Some(m) = &self.metrics {
+            let total_ovf: u64 = self.group_ovf.iter().sum();
+            let attn_ovf = self.scratch.last_attn_overflows();
+            let shared = self.arena.pages_shared();
+            let deduped = self.arena.pages_deduped();
+            let evicted = self.arena.cache_evictions();
+            let rec = StepRecord {
+                step: self.step_idx,
+                wall_ns: t0.map(|t| t.elapsed().as_nanos() as u64).unwrap_or(0),
+                decode_rows,
+                prefill_rows,
+                prefill_chunks,
+                tokens: decode_rows + prefill_rows,
+                // group_ovf counts linear AND attention events per row;
+                // the kernel reports the attention share separately
+                overflow_linear: total_ovf.saturating_sub(attn_ovf),
+                overflow_attn: attn_ovf,
+                arena_resident_bytes: self.arena.bytes() as u64,
+                arena_capacity_bytes: self.arena.capacity_bytes() as u64,
+                prefix_hits: (shared - self.prefix_snap[0]) as u32,
+                prefix_dedups: (deduped - self.prefix_snap[1]) as u32,
+                prefix_evictions: (evicted - self.prefix_snap[2]) as u32,
+                attn_bands: self.scratch.last_attn_bands() as u32,
+                queue_depth: self.queue_depth,
+            };
+            self.prefix_snap = [shared, deduped, evicted];
+            m.with(|mm| mm.record(rec));
+            self.step_idx += 1;
+        }
     }
 
     /// Drain completed responses (unordered; the queue sorts on drain).
@@ -694,6 +830,9 @@ pub struct EngineStats {
     /// Private pages remapped onto an already-cached twin at
     /// registration (concurrent same-prefix admissions deduplicated).
     pub pages_deduped: u64,
+    /// This engine's telemetry aggregate (histograms + per-step sums);
+    /// `None` when the engine ran with telemetry off.
+    pub telemetry: Option<MetricsSummary>,
 }
 
 impl EngineStats {
@@ -707,6 +846,7 @@ impl EngineStats {
             cache_flushes: arena.cache_flushes(),
             cache_evictions: arena.cache_evictions(),
             pages_deduped: arena.pages_deduped(),
+            telemetry: None,
         }
     }
 }
@@ -743,34 +883,79 @@ pub fn serve_config(
     engines: usize,
     cfg: ServeConfig,
 ) -> Vec<EngineStats> {
-    std::thread::scope(|scope| {
-        let handles: Vec<_> = (0..engines.max(1))
-            .map(|_| scope.spawn(move || run_engine(model, queue, cfg)))
+    serve_telemetry(model, queue, engines, cfg, &SinkSpec::None, DEFAULT_FLUSH_EVERY)
+        .expect("SinkSpec::None cannot fail to build")
+}
+
+/// [`serve_config`] with a structured telemetry stream: each engine
+/// thread gets its own [`EventSink`] built from `sink`
+/// (`--metrics <path|->`) and an off-thread drainer that batches the
+/// engine's step records to it every `flush_every` records
+/// (`--metrics-flush-every`). Errors only on sink construction (e.g.
+/// an unwritable metrics path) — sink I/O during the run is
+/// best-effort by design.
+pub fn serve_telemetry(
+    model: &Transformer,
+    queue: &ServeQueue,
+    engines: usize,
+    cfg: ServeConfig,
+    sink: &SinkSpec,
+    flush_every: usize,
+) -> std::io::Result<Vec<EngineStats>> {
+    let n = engines.max(1);
+    let mut sinks = Vec::with_capacity(n);
+    for i in 0..n {
+        sinks.push(sink.build(i, n)?);
+    }
+    Ok(std::thread::scope(|scope| {
+        let handles: Vec<_> = sinks
+            .into_iter()
+            .map(|s| scope.spawn(move || run_engine(model, queue, cfg, s, flush_every)))
             .collect();
         handles.into_iter().map(|h| h.join().expect("engine thread panicked")).collect()
-    })
+    }))
 }
 
 /// One engine thread: drive a [`StepEngine`] off the shared queue —
 /// block when idle, poll admissions (bounded by free slots) when the
-/// batch has work, one ragged step per iteration.
-fn run_engine(model: &Transformer, queue: &ServeQueue, cfg: ServeConfig) -> EngineStats {
+/// batch has work, one ragged step per iteration. With a sink attached
+/// (and telemetry on), a drainer thread streams the step records; it
+/// is finished — final drain + flush — after the engine stops
+/// stepping, so the stream is complete before the stats return.
+fn run_engine(
+    model: &Transformer,
+    queue: &ServeQueue,
+    cfg: ServeConfig,
+    sink: Option<Box<dyn EventSink>>,
+    flush_every: usize,
+) -> EngineStats {
     let mut engine = StepEngine::new(model, cfg);
+    let drainer = match (sink, engine.metrics()) {
+        (Some(s), Some(m)) => Some(spawn_drainer(m.clone(), s, flush_every)),
+        _ => None,
+    };
     loop {
         let admissions = if engine.has_work() {
             queue.poll(engine.free_slots())
         } else {
             match queue.pop_batch(cfg.max_batch.max(1)) {
                 Some(batch) => batch,
-                None => return EngineStats::of(engine.arena()), // closed + drained
+                None => break, // closed + drained
             }
         };
         for (req, enqueued) in admissions {
             engine.admit(req, enqueued);
         }
+        engine.note_queue_depth(queue.depth());
         engine.step();
         queue.complete(engine.take_finished());
     }
+    let mut stats = EngineStats::of(engine.arena());
+    if let Some(d) = drainer {
+        d.finish();
+    }
+    stats.telemetry = engine.metrics().map(|m| m.summary());
+    stats
 }
 
 #[cfg(test)]
@@ -1085,6 +1270,58 @@ mod tests {
             assert_eq!(r[0].tokens.len(), 30, "generation must continue past max_seq");
             assert_eq!(r[0].tokens, direct(&m, &[1, 2], 30), "chunk {chunk}");
         }
+    }
+
+    /// The merged telemetry histograms must tell the same story as the
+    /// sorted-response percentiles: both use the same rank formula, so
+    /// the histogram's TTFT quantile (a bucket upper bound) lands in
+    /// the same log2 bucket as the sorted sample — the acceptance bar
+    /// is agreement within one bucket.
+    #[test]
+    fn telemetry_histograms_agree_with_sorted_percentiles() {
+        use crate::coordinator::telemetry::LatHist;
+        let m = model();
+        let q = ServeQueue::new();
+        for id in 0..16u64 {
+            let off = id as usize;
+            q.submit(Request {
+                id,
+                prompt: (0..1 + (off % 7)).map(|i| ((i * 5 + off) % 32) as u16).collect(),
+                max_new_tokens: 2 + (off % 9),
+            });
+        }
+        q.close();
+        let t0 = Instant::now();
+        let engines = serve_config(&m, &q, 2, ServeConfig::new(3, KvCacheKind::F32));
+        let responses = q.drain();
+        let mut stats = ServeStats::from_responses(&responses, t0.elapsed().as_secs_f64());
+        stats.fill_telemetry(&engines);
+        let t = stats.telemetry.expect("telemetry is on by default");
+        assert!(t.steps > 0);
+        assert_eq!(t.records_dropped, 0, "default ring holds a full quick run");
+        assert_eq!(t.ttft_ns.count(), 16, "one TTFT observation per generating request");
+        assert!(t.tpot_ns.count() > 0);
+        assert_eq!(t.step_ns.count(), t.steps);
+        assert_eq!(t.occupancy.count(), t.steps);
+        // decode rows = total tokens − one per request (the first token
+        // is sampled from prefill logits, the last needs no decode row)
+        assert_eq!(t.tpot_ns.count(), (stats.total_tokens - stats.requests) as u64);
+        for (q_, sorted_s) in [(0.50, stats.p50_ttft_s), (0.99, stats.p99_ttft_s)] {
+            let hist_bucket = LatHist::bucket_of(t.ttft_ns.quantile(q_));
+            let sorted_bucket = LatHist::bucket_of((sorted_s * 1e9) as u64);
+            assert!(
+                (hist_bucket as i64 - sorted_bucket as i64).abs() <= 1,
+                "ttft q{q_}: histogram bucket {hist_bucket} vs sorted bucket {sorted_bucket}"
+            );
+        }
+        // and telemetry can be switched off entirely
+        let q2 = ServeQueue::new();
+        q2.submit(Request { id: 0, prompt: vec![1, 2], max_new_tokens: 3 });
+        q2.close();
+        let engines =
+            serve_config(&m, &q2, 1, ServeConfig::new(1, KvCacheKind::F32).with_telemetry(false));
+        q2.drain();
+        assert!(engines[0].telemetry.is_none());
     }
 
     #[test]

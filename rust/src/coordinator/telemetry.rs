@@ -1,0 +1,810 @@
+//! Per-step serving telemetry: a preallocated record ring, log2
+//! latency histograms, and pluggable structured event sinks.
+//!
+//! The serve report prints end-of-run aggregates; a production engine
+//! needs *continuous* signals — step-latency tails, batch occupancy,
+//! and the overflow-event **rate** as load shifts (the paper's exact
+//! per-accumulator-width overflow accounting, as a live stream rather
+//! than a final count). This module provides the three pieces:
+//!
+//! - [`StepMetrics`] — a fixed-capacity, preallocated ring of
+//!   [`StepRecord`]s plus [`LatHist`] histograms, filled by the engine
+//!   at the end of every ragged step with **zero hot-path allocation**
+//!   (asserted by `tests/zero_alloc_decode.rs`). When the off-thread
+//!   drainer falls behind, the oldest buffered record is overwritten
+//!   and the `dropped` counter advances — the histograms and running
+//!   sums still see every step, so aggregates stay exact even when the
+//!   raw stream is lossy.
+//! - [`EventSink`] — the pluggable structured-output trait
+//!   ([`JsonlSink`], [`StdoutSink`], [`NullSink`]), drained off the
+//!   engine thread by [`spawn_drainer`] on a flush interval; one sink
+//!   per engine thread, selected via `axe serve --metrics <path|->`
+//!   ([`SinkSpec`]).
+//! - [`LatHist`] — fixed-bucket log2 histograms (48 buckets, so any
+//!   u64 nanosecond value lands somewhere) for step latency, TTFT,
+//!   TPOT and occupancy, mergeable across engines into one
+//!   [`MetricsSummary`] for the serve report and the bench trajectory
+//!   (`BENCH_decode.json` `"step_histograms"`).
+
+use crate::util::json::Json;
+use std::io::{self, BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Version tag stamped on every emitted record; bump on any
+/// field-set change so downstream consumers can dispatch.
+pub const SCHEMA_VERSION: u32 = 1;
+
+/// Default ring capacity (records buffered between drains) — the
+/// `--metrics-ring` default. At one record per ragged step, 4096 steps
+/// of slack before the drainer has to keep up.
+pub const DEFAULT_RING_CAPACITY: usize = 4096;
+
+/// Default drain threshold (buffered records before the drainer writes
+/// a batch) — the `--metrics-flush-every` default.
+pub const DEFAULT_FLUSH_EVERY: usize = 64;
+
+/// One per-step telemetry record. Plain `Copy` data so ring writes are
+/// a memcpy and the drainer can batch-copy records out under the lock
+/// and format them outside it.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StepRecord {
+    /// Engine-local step index (consecutive over *executed* ragged
+    /// steps — empty scheduler iterations record nothing).
+    pub step: u64,
+    /// Wall time of the full scheduler iteration (sample/slide/retire
+    /// + compose + ragged kernel call + routing), nanoseconds.
+    pub wall_ns: u64,
+    /// Decode rows in this step (one per generating sequence).
+    pub decode_rows: u32,
+    /// Prompt (and slide-tail) tokens prefetched this step across all
+    /// admitting sequences.
+    pub prefill_rows: u32,
+    /// Prefill chunks (groups) those rows arrived in.
+    pub prefill_chunks: u32,
+    /// Total rows executed: `decode_rows + prefill_rows` — the step's
+    /// batch occupancy.
+    pub tokens: u32,
+    /// Overflow events from the quantized **linear** layers this step
+    /// (per-group kernel attribution, attention share subtracted).
+    pub overflow_linear: u64,
+    /// Overflow events from the quantized-KV **attention** matmuls
+    /// this step (0 on the f32 backend).
+    pub overflow_attn: u64,
+    /// Resident (deduplicated) KV arena bytes after the step.
+    pub arena_resident_bytes: u64,
+    /// Reserved KV arena bytes (every page backed).
+    pub arena_capacity_bytes: u64,
+    /// Prefix-cache pages adopted since the previous record.
+    pub prefix_hits: u32,
+    /// Private pages deduplicated onto cached twins since the previous
+    /// record.
+    pub prefix_dedups: u32,
+    /// Prefix-cache entries evicted under pressure since the previous
+    /// record.
+    pub prefix_evictions: u32,
+    /// Threads the banded attention sweep actually fanned out across
+    /// (1 = the serial path).
+    pub attn_bands: u32,
+    /// Pending (unadmitted) queue depth sampled at this step's
+    /// admission poll.
+    pub queue_depth: u32,
+}
+
+impl StepRecord {
+    /// The stable JSONL schema — one flat object, every field numeric,
+    /// plus `schema_version`. Field *set* changes require a
+    /// [`SCHEMA_VERSION`] bump (golden-tested below and validated in CI
+    /// by `.github/scripts/check_jsonl.py`).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("schema_version", SCHEMA_VERSION.into())
+            .set("step", self.step.into())
+            .set("wall_ns", self.wall_ns.into())
+            .set("decode_rows", self.decode_rows.into())
+            .set("prefill_rows", self.prefill_rows.into())
+            .set("prefill_chunks", self.prefill_chunks.into())
+            .set("tokens", self.tokens.into())
+            .set("overflow_linear", self.overflow_linear.into())
+            .set("overflow_attn", self.overflow_attn.into())
+            .set("arena_resident_bytes", self.arena_resident_bytes.into())
+            .set("arena_capacity_bytes", self.arena_capacity_bytes.into())
+            .set("prefix_hits", self.prefix_hits.into())
+            .set("prefix_dedups", self.prefix_dedups.into())
+            .set("prefix_evictions", self.prefix_evictions.into())
+            .set("attn_bands", self.attn_bands.into())
+            .set("queue_depth", self.queue_depth.into());
+        o
+    }
+}
+
+/// Log2 bucket count: bucket `i` holds values in `[2^i, 2^(i+1))`
+/// (bucket 0 additionally holds 0), bucket 47 holds everything from
+/// `2^47` up — so any u64 lands somewhere and observation can never
+/// fail or allocate.
+pub const HIST_BUCKETS: usize = 48;
+
+/// Fixed-bucket log2 histogram — `Copy`, allocation-free to observe,
+/// associative to merge. Quantiles return the **inclusive upper bound**
+/// of the bucket holding the rank-`q` observation (clamped to the true
+/// maximum), so a log2 histogram quantile is exact to within one
+/// bucket of the sorted-sample quantile by construction.
+#[derive(Clone, Copy, Debug)]
+pub struct LatHist {
+    buckets: [u64; HIST_BUCKETS],
+    count: u64,
+    max: u64,
+}
+
+// [T; 48] has no Default impl (std stops at 32) — spell it out.
+impl Default for LatHist {
+    fn default() -> LatHist {
+        LatHist { buckets: [0; HIST_BUCKETS], count: 0, max: 0 }
+    }
+}
+
+impl LatHist {
+    pub fn new() -> LatHist {
+        LatHist::default()
+    }
+
+    /// Bucket index of `v`: floor(log2(v)) clamped to the bucket
+    /// range; 0 and 1 both land in bucket 0.
+    pub fn bucket_of(v: u64) -> usize {
+        ((63 - (v | 1).leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+    }
+
+    /// Inclusive upper bound of bucket `i`.
+    pub fn bucket_upper(i: usize) -> u64 {
+        if i + 1 >= 64 {
+            u64::MAX
+        } else {
+            (1u64 << (i + 1)) - 1
+        }
+    }
+
+    pub fn observe(&mut self, v: u64) {
+        self.observe_n(v, 1);
+    }
+
+    /// Record `n` observations of `v` at once (TPOT: one per decode
+    /// row of a step, all sharing the step's wall time).
+    pub fn observe_n(&mut self, v: u64, n: u64) {
+        if n == 0 {
+            return;
+        }
+        self.buckets[LatHist::bucket_of(v)] += n;
+        self.count += n;
+        self.max = self.max.max(v);
+    }
+
+    /// Element-wise merge — commutative and associative, so per-engine
+    /// histograms fold into one in any order.
+    pub fn merge(&mut self, other: &LatHist) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn max_value(&self) -> u64 {
+        self.max
+    }
+
+    pub fn bucket_counts(&self) -> &[u64; HIST_BUCKETS] {
+        &self.buckets
+    }
+
+    /// Rank-based quantile (`q` in [0, 1]): the inclusive upper bound
+    /// of the bucket holding the `ceil(count * q)`-th observation,
+    /// clamped to the observed maximum. 0 when empty. The rank formula
+    /// matches the sorted-vector percentile in
+    /// `ServeStats::from_responses`, so both select the same
+    /// observation and the histogram answer is exact to within its
+    /// bucket.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((self.count as f64 * q).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            cum += b;
+            if cum >= rank {
+                return LatHist::bucket_upper(i).min(self.max);
+            }
+        }
+        self.max
+    }
+}
+
+/// Mergeable cross-engine aggregate of one engine's telemetry —
+/// everything the serve report and the bench `"step_histograms"`
+/// section need, and nothing that refers back into the ring.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MetricsSummary {
+    /// Ragged steps recorded (includes records later dropped from the
+    /// ring — histograms and sums saw them all).
+    pub steps: u64,
+    /// Records overwritten before the drainer took them.
+    pub records_dropped: u64,
+    /// Total rows executed across steps (decode + prefill).
+    pub tokens: u64,
+    /// Total quantized-linear overflow events.
+    pub overflow_linear: u64,
+    /// Total quantized-KV attention overflow events.
+    pub overflow_attn: u64,
+    /// Step wall-time histogram, nanoseconds.
+    pub step_ns: LatHist,
+    /// Time-to-first-token histogram, nanoseconds (requests that
+    /// generate ≥ 1 token).
+    pub ttft_ns: LatHist,
+    /// Time-per-output-token histogram, nanoseconds: each decode row
+    /// observes its step's wall time.
+    pub tpot_ns: LatHist,
+    /// Batch-occupancy histogram (rows per executed step).
+    pub occupancy: LatHist,
+}
+
+impl MetricsSummary {
+    pub fn merge(&mut self, other: &MetricsSummary) {
+        self.steps += other.steps;
+        self.records_dropped += other.records_dropped;
+        self.tokens += other.tokens;
+        self.overflow_linear += other.overflow_linear;
+        self.overflow_attn += other.overflow_attn;
+        self.step_ns.merge(&other.step_ns);
+        self.ttft_ns.merge(&other.ttft_ns);
+        self.tpot_ns.merge(&other.tpot_ns);
+        self.occupancy.merge(&other.occupancy);
+    }
+}
+
+/// Fixed-capacity step-record ring + histograms. All storage is
+/// preallocated at construction; [`StepMetrics::record`] and
+/// [`StepMetrics::record_ttft`] touch only owned arrays — no heap
+/// traffic, ever (the zero-allocation decode bar covers them).
+#[derive(Debug)]
+pub struct StepMetrics {
+    ring: Vec<StepRecord>,
+    /// Index of the oldest undrained record.
+    head: usize,
+    /// Undrained records buffered in the ring.
+    len: usize,
+    recorded: u64,
+    dropped: u64,
+    tokens: u64,
+    overflow_linear: u64,
+    overflow_attn: u64,
+    step_ns: LatHist,
+    ttft_ns: LatHist,
+    tpot_ns: LatHist,
+    occupancy: LatHist,
+}
+
+impl StepMetrics {
+    pub fn new(capacity: usize) -> StepMetrics {
+        StepMetrics {
+            ring: vec![StepRecord::default(); capacity.max(1)],
+            head: 0,
+            len: 0,
+            recorded: 0,
+            dropped: 0,
+            tokens: 0,
+            overflow_linear: 0,
+            overflow_attn: 0,
+            step_ns: LatHist::new(),
+            ttft_ns: LatHist::new(),
+            tpot_ns: LatHist::new(),
+            occupancy: LatHist::new(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.ring.len()
+    }
+
+    /// Append one step record. Histograms and running sums always see
+    /// it; if the ring is full (drainer behind), the **oldest** buffered
+    /// record is overwritten and `dropped` advances — newest data wins,
+    /// aggregates stay exact.
+    pub fn record(&mut self, rec: StepRecord) {
+        self.step_ns.observe(rec.wall_ns);
+        self.occupancy.observe(rec.tokens as u64);
+        self.tpot_ns.observe_n(rec.wall_ns, rec.decode_rows as u64);
+        self.tokens += rec.tokens as u64;
+        self.overflow_linear += rec.overflow_linear;
+        self.overflow_attn += rec.overflow_attn;
+        let cap = self.ring.len();
+        if self.len == cap {
+            self.ring[self.head] = rec;
+            self.head = (self.head + 1) % cap;
+            self.dropped += 1;
+        } else {
+            self.ring[(self.head + self.len) % cap] = rec;
+            self.len += 1;
+        }
+        self.recorded += 1;
+    }
+
+    /// Record one request's time-to-first-token (nanoseconds,
+    /// submission → first sampled token).
+    pub fn record_ttft(&mut self, ns: u64) {
+        self.ttft_ns.observe(ns);
+    }
+
+    /// Undrained records currently buffered.
+    pub fn buffered(&self) -> usize {
+        self.len
+    }
+
+    /// Records ever recorded (drained, buffered, or dropped).
+    pub fn recorded(&self) -> u64 {
+        self.recorded
+    }
+
+    /// Records overwritten before being drained.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Copy every buffered record into `out` in step order and reset
+    /// the buffer. The drainer calls this under the shared lock (a
+    /// bounded memcpy) and formats/writes *outside* it.
+    pub fn take_buffered(&mut self, out: &mut Vec<StepRecord>) {
+        out.clear();
+        let cap = self.ring.len();
+        for i in 0..self.len {
+            out.push(self.ring[(self.head + i) % cap]);
+        }
+        self.head = (self.head + self.len) % cap;
+        self.len = 0;
+    }
+
+    /// Snapshot the mergeable aggregate (histograms + sums).
+    pub fn summary(&self) -> MetricsSummary {
+        MetricsSummary {
+            steps: self.recorded,
+            records_dropped: self.dropped,
+            tokens: self.tokens,
+            overflow_linear: self.overflow_linear,
+            overflow_attn: self.overflow_attn,
+            step_ns: self.step_ns,
+            ttft_ns: self.ttft_ns,
+            tpot_ns: self.tpot_ns,
+            occupancy: self.occupancy,
+        }
+    }
+}
+
+/// Handle shared between one engine thread (recording) and its drainer
+/// (draining). The mutex is uncontended in steady state — the engine
+/// takes it once per step for a memcpy-sized critical section, the
+/// drainer once per flush interval.
+#[derive(Clone, Debug)]
+pub struct SharedMetrics {
+    inner: Arc<Mutex<StepMetrics>>,
+}
+
+impl SharedMetrics {
+    pub fn new(ring_capacity: usize) -> SharedMetrics {
+        SharedMetrics { inner: Arc::new(Mutex::new(StepMetrics::new(ring_capacity))) }
+    }
+
+    /// Run `f` under the lock. Locking an uncontended std mutex does
+    /// not allocate, so recording through this keeps the zero-alloc
+    /// decode bar.
+    pub fn with<R>(&self, f: impl FnOnce(&mut StepMetrics) -> R) -> R {
+        f(&mut self.inner.lock().unwrap())
+    }
+
+    /// Snapshot the mergeable aggregate.
+    pub fn summary(&self) -> MetricsSummary {
+        self.with(|m| m.summary())
+    }
+}
+
+/// Pluggable structured event sink — one per engine thread, driven off
+/// the engine thread by [`spawn_drainer`]. Writes are best-effort:
+/// telemetry must never take the serving path down, so I/O errors are
+/// swallowed (the JSONL consumer sees a truncated stream, the in-memory
+/// aggregates are unaffected).
+pub trait EventSink: Send {
+    /// Emit one step record.
+    fn record_step(&mut self, rec: &StepRecord);
+    /// Flush buffered output (end of a drain batch, and at shutdown).
+    fn flush(&mut self);
+}
+
+/// Discards everything — telemetry aggregates without a stream.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NullSink;
+
+impl EventSink for NullSink {
+    fn record_step(&mut self, _rec: &StepRecord) {}
+    fn flush(&mut self) {}
+}
+
+/// One JSON object per line to stdout (`--metrics -`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StdoutSink;
+
+impl EventSink for StdoutSink {
+    fn record_step(&mut self, rec: &StepRecord) {
+        println!("{}", rec.to_json().to_string());
+    }
+    fn flush(&mut self) {
+        let _ = io::stdout().flush();
+    }
+}
+
+/// Buffered JSON-lines sink: one object per step, stable schema
+/// ([`StepRecord::to_json`]), flushed on the drain interval.
+#[derive(Debug)]
+pub struct JsonlSink<W: Write + Send> {
+    w: W,
+}
+
+impl JsonlSink<BufWriter<std::fs::File>> {
+    /// Create (truncate) `path` and wrap it in a buffered writer.
+    pub fn create(path: &Path) -> io::Result<JsonlSink<BufWriter<std::fs::File>>> {
+        Ok(JsonlSink::new(BufWriter::new(std::fs::File::create(path)?)))
+    }
+}
+
+impl<W: Write + Send> JsonlSink<W> {
+    pub fn new(w: W) -> JsonlSink<W> {
+        JsonlSink { w }
+    }
+
+    /// Unwrap the writer (tests inspect the bytes).
+    pub fn into_inner(self) -> W {
+        self.w
+    }
+}
+
+impl<W: Write + Send> EventSink for JsonlSink<W> {
+    fn record_step(&mut self, rec: &StepRecord) {
+        let _ = writeln!(self.w, "{}", rec.to_json().to_string());
+    }
+    fn flush(&mut self) {
+        let _ = self.w.flush();
+    }
+}
+
+/// CLI-level sink selection (`axe serve --metrics <path|->`): how each
+/// engine thread's sink is built.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub enum SinkSpec {
+    /// No stream — in-memory aggregates only.
+    #[default]
+    None,
+    /// JSON lines to stdout.
+    Stdout,
+    /// JSON lines to a file; with several engines, engine `i` writes
+    /// `<path>.<i>` (sinks are per-thread, streams stay ordered).
+    Jsonl(PathBuf),
+}
+
+impl SinkSpec {
+    /// `-` selects stdout, anything else is a file path.
+    pub fn parse(arg: &str) -> SinkSpec {
+        if arg == "-" {
+            SinkSpec::Stdout
+        } else {
+            SinkSpec::Jsonl(PathBuf::from(arg))
+        }
+    }
+
+    /// Build engine `engine`'s sink (of `engines` total). `Ok(None)`
+    /// means telemetry streaming is off for this run.
+    pub fn build(&self, engine: usize, engines: usize) -> io::Result<Option<Box<dyn EventSink>>> {
+        Ok(match self {
+            SinkSpec::None => None,
+            SinkSpec::Stdout => Some(Box::new(StdoutSink)),
+            SinkSpec::Jsonl(path) => {
+                let p = if engines <= 1 {
+                    path.clone()
+                } else {
+                    PathBuf::from(format!("{}.{engine}", path.display()))
+                };
+                Some(Box::new(JsonlSink::create(&p)?))
+            }
+        })
+    }
+}
+
+/// Off-thread drainer handle: stop + join via [`Drainer::finish`]
+/// (drains whatever is still buffered, flushes, returns the records
+/// written). Dropping without `finish` stops and joins too.
+#[derive(Debug)]
+pub struct Drainer {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<u64>>,
+}
+
+/// Spawn the drain thread for one engine's metrics: every tick it
+/// checks the buffer and, once `flush_every` records are waiting (or
+/// at shutdown), copies them out under the lock and writes them to the
+/// sink outside it. The engine must have stopped stepping before
+/// [`Drainer::finish`] for the final drain to be complete.
+pub fn spawn_drainer(
+    metrics: SharedMetrics,
+    mut sink: Box<dyn EventSink>,
+    flush_every: usize,
+) -> Drainer {
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop_flag = Arc::clone(&stop);
+    let flush_every = flush_every.max(1);
+    let handle = std::thread::spawn(move || {
+        let mut batch: Vec<StepRecord> = Vec::with_capacity(flush_every.max(64));
+        let mut written = 0u64;
+        loop {
+            let stopping = stop_flag.load(Ordering::Acquire);
+            if stopping || metrics.with(|m| m.buffered()) >= flush_every {
+                metrics.with(|m| m.take_buffered(&mut batch));
+                for rec in &batch {
+                    sink.record_step(rec);
+                }
+                written += batch.len() as u64;
+                sink.flush();
+                if stopping {
+                    return written;
+                }
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    });
+    Drainer { stop, handle: Some(handle) }
+}
+
+impl Drainer {
+    /// Stop, final-drain, flush, join; returns total records written.
+    pub fn finish(mut self) -> u64 {
+        self.stop.store(true, Ordering::Release);
+        self.handle.take().map(|h| h.join().expect("drainer panicked")).unwrap_or(0)
+    }
+}
+
+impl Drop for Drainer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(step: u64) -> StepRecord {
+        StepRecord {
+            step,
+            wall_ns: 1000 + step,
+            decode_rows: 2,
+            prefill_rows: 1,
+            prefill_chunks: 1,
+            tokens: 3,
+            ..StepRecord::default()
+        }
+    }
+
+    #[test]
+    fn ring_wraparound_and_drop_accounting() {
+        let mut m = StepMetrics::new(4);
+        for i in 0..10 {
+            m.record(rec(i));
+        }
+        assert_eq!(m.recorded(), 10);
+        assert_eq!(m.dropped(), 6, "capacity 4, 10 records → 6 overwritten");
+        assert_eq!(m.buffered(), 4);
+        let mut out = Vec::new();
+        m.take_buffered(&mut out);
+        // newest-wins: the surviving records are the last 4, in order
+        assert_eq!(out.iter().map(|r| r.step).collect::<Vec<_>>(), vec![6, 7, 8, 9]);
+        assert_eq!(m.buffered(), 0);
+        // a drain resets the buffer but not the lifetime counters …
+        for i in 10..13 {
+            m.record(rec(i));
+        }
+        assert_eq!(m.dropped(), 6, "room after the drain — no new drops");
+        let mut out2 = Vec::new();
+        m.take_buffered(&mut out2);
+        assert_eq!(out2.iter().map(|r| r.step).collect::<Vec<_>>(), vec![10, 11, 12]);
+        // … and the aggregates saw every record, dropped or not
+        let s = m.summary();
+        assert_eq!(s.steps, 13);
+        assert_eq!(s.records_dropped, 6);
+        assert_eq!(s.tokens, 13 * 3);
+        assert_eq!(s.step_ns.count(), 13);
+        assert_eq!(s.tpot_ns.count(), 13 * 2, "one TPOT observation per decode row");
+        assert_eq!(s.occupancy.count(), 13);
+    }
+
+    #[test]
+    fn lathist_bucket_boundaries() {
+        assert_eq!(LatHist::bucket_of(0), 0);
+        assert_eq!(LatHist::bucket_of(1), 0);
+        assert_eq!(LatHist::bucket_of(2), 1);
+        assert_eq!(LatHist::bucket_of(3), 1);
+        assert_eq!(LatHist::bucket_of(4), 2);
+        assert_eq!(LatHist::bucket_of(1023), 9);
+        assert_eq!(LatHist::bucket_of(1024), 10);
+        assert_eq!(LatHist::bucket_of(u64::MAX), HIST_BUCKETS - 1, "tail bucket is open");
+        assert_eq!(LatHist::bucket_upper(0), 1);
+        assert_eq!(LatHist::bucket_upper(9), 1023);
+        assert_eq!(LatHist::bucket_upper(HIST_BUCKETS - 1), u64::MAX);
+        // every boundary value buckets consistently with its upper bound
+        for i in 0..HIST_BUCKETS - 1 {
+            assert_eq!(LatHist::bucket_of(LatHist::bucket_upper(i)), i);
+            assert_eq!(LatHist::bucket_of(LatHist::bucket_upper(i) + 1), i + 1);
+        }
+    }
+
+    #[test]
+    fn lathist_quantiles_and_merge_associativity() {
+        let mut h = LatHist::new();
+        for v in 1..=100u64 {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.max_value(), 100);
+        // rank 50 is value 50 → bucket 5 ([32, 64)) → upper bound 63
+        assert_eq!(h.quantile(0.50), 63);
+        // rank 100 is value 100 → bucket 6, upper bound 127 clamps to max
+        assert_eq!(h.quantile(1.0), 100);
+        assert_eq!(LatHist::new().quantile(0.5), 0, "empty histogram");
+
+        // merge associativity: (a ∪ b) ∪ c == a ∪ (b ∪ c)
+        let mk = |seed: u64, n: u64| {
+            let mut h = LatHist::new();
+            let mut x = seed;
+            for _ in 0..n {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                h.observe(x >> 40);
+            }
+            h
+        };
+        let (a, b, c) = (mk(1, 37), mk(2, 53), mk(3, 71));
+        let mut left = a;
+        left.merge(&b);
+        left.merge(&c);
+        let mut bc = b;
+        bc.merge(&c);
+        let mut right = a;
+        right.merge(&bc);
+        assert_eq!(left.bucket_counts(), right.bucket_counts());
+        assert_eq!(left.count(), right.count());
+        assert_eq!(left.max_value(), right.max_value());
+        assert_eq!(left.count(), 37 + 53 + 71);
+    }
+
+    /// The JSONL schema is a stable contract: the exact field set and
+    /// the schema_version below. Changing either requires bumping
+    /// [`SCHEMA_VERSION`] and updating `.github/scripts/check_jsonl.py`.
+    #[test]
+    fn jsonl_golden_schema() {
+        let golden = [
+            "arena_capacity_bytes",
+            "arena_resident_bytes",
+            "attn_bands",
+            "decode_rows",
+            "overflow_attn",
+            "overflow_linear",
+            "prefill_chunks",
+            "prefill_rows",
+            "prefix_dedups",
+            "prefix_evictions",
+            "prefix_hits",
+            "queue_depth",
+            "schema_version",
+            "step",
+            "tokens",
+            "wall_ns",
+        ];
+        let mut sink = JsonlSink::new(Vec::<u8>::new());
+        sink.record_step(&rec(7));
+        sink.record_step(&rec(8));
+        sink.flush();
+        let text = String::from_utf8(sink.into_inner()).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2, "one object per line");
+        for line in &lines {
+            let v = Json::parse(line).expect("every line parses");
+            let keys: Vec<&str> = v.as_obj().unwrap().keys().map(|k| k.as_str()).collect();
+            assert_eq!(keys, golden, "field set drifted without a schema bump");
+            assert_eq!(v.get("schema_version").unwrap().as_usize(), Some(1));
+        }
+        assert_eq!(Json::parse(lines[0]).unwrap().get("step").unwrap().as_usize(), Some(7));
+    }
+
+    /// Test sink capturing records through a shared handle (the drainer
+    /// boxes its sink, so a Vec can't be recovered by unboxing).
+    struct CaptureSink {
+        out: Arc<Mutex<Vec<StepRecord>>>,
+        flushes: Arc<Mutex<usize>>,
+    }
+
+    impl EventSink for CaptureSink {
+        fn record_step(&mut self, rec: &StepRecord) {
+            self.out.lock().unwrap().push(*rec);
+        }
+        fn flush(&mut self) {
+            *self.flushes.lock().unwrap() += 1;
+        }
+    }
+
+    #[test]
+    fn drainer_drains_everything_in_order() {
+        let sm = SharedMetrics::new(64);
+        let out = Arc::new(Mutex::new(Vec::new()));
+        let flushes = Arc::new(Mutex::new(0usize));
+        let sink = CaptureSink { out: Arc::clone(&out), flushes: Arc::clone(&flushes) };
+        let drainer = spawn_drainer(sm.clone(), Box::new(sink), 8);
+        for i in 0..30 {
+            sm.with(|m| m.record(rec(i)));
+        }
+        // the engine has stopped recording; finish must drain the tail
+        let written = drainer.finish();
+        assert_eq!(written, 30);
+        let got = out.lock().unwrap();
+        assert_eq!(got.len(), 30);
+        assert!(got.windows(2).all(|w| w[0].step + 1 == w[1].step), "records stay ordered");
+        assert!(*flushes.lock().unwrap() >= 1, "shutdown always flushes");
+        assert_eq!(sm.with(|m| m.dropped()), 0, "ring never overflowed");
+    }
+
+    #[test]
+    fn sink_spec_parse_and_multi_engine_paths() {
+        assert_eq!(SinkSpec::parse("-"), SinkSpec::Stdout);
+        assert_eq!(SinkSpec::parse("m.jsonl"), SinkSpec::Jsonl(PathBuf::from("m.jsonl")));
+        assert_eq!(SinkSpec::default(), SinkSpec::None);
+        assert!(SinkSpec::None.build(0, 1).unwrap().is_none());
+        let dir = std::env::temp_dir().join(format!("axe_sinkspec_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let spec = SinkSpec::Jsonl(dir.join("m.jsonl"));
+        {
+            let mut s = spec.build(0, 1).unwrap().unwrap();
+            s.record_step(&rec(0));
+            s.flush();
+        }
+        assert!(dir.join("m.jsonl").is_file(), "single engine writes the path verbatim");
+        {
+            let mut s = spec.build(1, 2).unwrap().unwrap();
+            s.record_step(&rec(0));
+            s.flush();
+        }
+        assert!(dir.join("m.jsonl.1").is_file(), "engine 1 of 2 writes a suffixed path");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn summary_merge_folds_engines() {
+        let mut a = StepMetrics::new(8);
+        let mut b = StepMetrics::new(8);
+        for i in 0..5 {
+            a.record(rec(i));
+            a.record_ttft(500 + i);
+        }
+        for i in 0..3 {
+            b.record(rec(i));
+        }
+        let mut s = a.summary();
+        s.merge(&b.summary());
+        assert_eq!(s.steps, 8);
+        assert_eq!(s.tokens, 8 * 3);
+        assert_eq!(s.step_ns.count(), 8);
+        assert_eq!(s.ttft_ns.count(), 5);
+        assert_eq!(s.tpot_ns.count(), 8 * 2);
+    }
+}

@@ -305,12 +305,37 @@ fn cmd_sensitivity(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    use axe::coordinator::report::render_telemetry_report;
     use axe::coordinator::serve::{
-        serve_config, Request, ServeConfig, ServeQueue, ServeStats, DEFAULT_PREFILL_CHUNK,
+        serve_telemetry, Request, ServeConfig, ServeQueue, ServeStats, DEFAULT_PREFILL_CHUNK,
     };
+    use axe::coordinator::telemetry::{SinkSpec, DEFAULT_FLUSH_EVERY, DEFAULT_RING_CAPACITY};
     use axe::model::{KvArena, KvCacheKind, KvQuantSpec, DEFAULT_KV_PAGE};
     let model_name = args.str_or("model", "pico-160k");
-    let mut model = load_lm(&model_name)?;
+    // --model synthetic: a seeded random transformer served on the
+    // float weight datapath with PTQ skipped — the serve loop, the KV
+    // backends and the telemetry stream all run without trained
+    // artifacts (the CI telemetry-smoke path)
+    let synthetic = model_name == "synthetic";
+    let mut model = if synthetic {
+        use axe::model::{random_transformer, Activation, TransformerConfig};
+        random_transformer(
+            TransformerConfig {
+                name: "synthetic".into(),
+                vocab: 64,
+                d_model: 32,
+                n_layers: 2,
+                n_heads: 4,
+                d_ff: 64,
+                max_seq: 32,
+                act: Activation::Gelu,
+                parallel_residual: false,
+            },
+            7,
+        )
+    } else {
+        load_lm(&model_name)?
+    };
     let seq = model.cfg.max_seq;
     let train = load_corpus_split_or_synth("train", model.cfg.vocab);
     let val = load_corpus_split_or_synth("val", model.cfg.vocab);
@@ -344,8 +369,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
             KvCacheKind::Quant(KvQuantSpec::new(bits, args.usize_or("kv-tile", 64), inner))
         }
     };
-    let report = quantize_transformer(&mut model, &calib, &cfg)?;
-    println!("serving {} ({}, safe={})", model_name, report.config, report.guaranteed_safe());
+    if synthetic {
+        println!("serving {model_name} (random weights, float linear datapath, PTQ skipped)");
+    } else {
+        let report = quantize_transformer(&mut model, &calib, &cfg)?;
+        println!("serving {} ({}, safe={})", model_name, report.config, report.guaranteed_safe());
+    }
 
     let n_requests = args.usize_or("requests", 16);
     let new_tokens = args.usize_or("tokens", 24);
@@ -374,6 +403,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // per engine (0 = auto-detect; 1 = serial oracle). Token streams
     // and per-request overflow counts are bit-identical at every value.
     let attn_threads = args.usize_or("attn-threads", 0);
+    // --metrics <path|->: stream one JSON object per executed ragged
+    // step (schema v1) to a JSONL file — `<path>.<i>` per engine at
+    // --workers > 1 — or to stdout with `-`. Off by default; the
+    // in-memory histograms below are on either way.
+    // --metrics-flush-every N: buffered records per off-thread drain;
+    // --metrics-ring N: ring capacity before oldest records drop.
+    let sink = args.get("metrics").map(SinkSpec::parse).unwrap_or_default();
+    let flush_every = args.usize_or("metrics-flush-every", DEFAULT_FLUSH_EVERY);
+    let metrics_ring = args.usize_or("metrics-ring", DEFAULT_RING_CAPACITY);
     let queue = ServeQueue::new();
     for id in 0..n_requests as u64 {
         let start = (id as usize * 37) % (val.len() - seq);
@@ -386,7 +424,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     queue.close();
     let ovf_before = model.overflow_events();
     let t0 = std::time::Instant::now();
-    let engine_stats = serve_config(
+    let engine_stats = serve_telemetry(
         &model,
         &queue,
         workers,
@@ -394,13 +432,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .with_prefill_chunk(prefill_chunk)
             .with_kv_page(kv_page)
             .with_prefix_cache(prefix_cache)
-            .with_attn_threads(attn_threads),
-    );
+            .with_attn_threads(attn_threads)
+            .with_metrics_ring(metrics_ring),
+        &sink,
+        flush_every,
+    )?;
     let responses = queue.drain();
     let mut stats = ServeStats::from_responses(&responses, t0.elapsed().as_secs_f64());
     stats.arena_bytes = KvArena::footprint_paged(&model.cfg, max_batch, kind, kv_page);
     stats.pages_shared = engine_stats.iter().map(|e| e.pages_shared).sum();
     stats.cache_evictions = engine_stats.iter().map(|e| e.cache_evictions).sum();
+    stats.fill_telemetry(&engine_stats);
     let f32_bytes = KvArena::footprint_paged(&model.cfg, max_batch, KvCacheKind::F32, kv_page);
     println!("requests      : {}", stats.requests);
     println!("generated     : {} tokens in {:.2}s", stats.total_tokens, stats.wall_s);
@@ -463,6 +505,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
         model.attention_overflow_events(),
         model.overflow_events() - ovf_before
     );
+    // merged per-step histograms — continuous signals (latency tails,
+    // occupancy, overflow rate) next to the end-of-run aggregates
+    if let Some(t) = &stats.telemetry {
+        println!("{}", render_telemetry_report(t));
+    }
+    if let SinkSpec::Jsonl(path) = &sink {
+        println!(
+            "metrics       : step records streamed to {} (schema v1{})",
+            path.display(),
+            if workers > 1 { ", one file per engine" } else { "" }
+        );
+    }
     Ok(())
 }
 

@@ -1057,6 +1057,10 @@ impl Transformer {
                 }
             }
         }
+        // leave the step's attention overflow share and band fan-out
+        // where the engine can read them cheaply (telemetry records)
+        step.last_attn_ovf = attn_total;
+        step.last_attn_bands = bands;
         if attn_total > 0 {
             // unified accounting: attention events join the model-wide
             // overflow counter next to the quantized-linear events

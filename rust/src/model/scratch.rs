@@ -166,6 +166,13 @@ pub struct StepScratch {
     pub logits: Vec<f32>,
     /// `rows` per-row overflow counters (prefill-internal attribution).
     pub row_ovf: Vec<u64>,
+    /// Attention-share overflow events of the most recent ragged step
+    /// (the linear share is `Σ row_ovf − this`) — left behind where
+    /// the serving engine's telemetry can read it without re-deriving.
+    pub last_attn_ovf: u64,
+    /// Bands the most recent ragged step's attention sweep actually
+    /// fanned out across (1 = serial).
+    pub last_attn_bands: usize,
 }
 
 impl StepScratch {
@@ -267,6 +274,18 @@ impl DecodeScratch {
     /// Configured attention sweep thread count.
     pub fn attn_threads(&self) -> usize {
         self.attn_threads
+    }
+
+    /// Attention-share overflow events of the most recent ragged step
+    /// run through this workspace (telemetry).
+    pub fn last_attn_overflows(&self) -> u64 {
+        self.step.last_attn_ovf
+    }
+
+    /// Attention bands the most recent ragged step fanned out across
+    /// (telemetry; 1 = the serial sweep).
+    pub fn last_attn_bands(&self) -> usize {
+        self.step.last_attn_bands
     }
 
     /// Override the work threshold gating the parallel attention sweep

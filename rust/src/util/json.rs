@@ -230,6 +230,14 @@ impl From<u32> for Json {
         Json::Num(v as f64)
     }
 }
+impl From<u64> for Json {
+    fn from(v: u64) -> Json {
+        // exact up to 2^53 (counters and nanosecond spans in practice);
+        // beyond that the nearest-f64 JSON number is the documented
+        // behaviour of this f64-backed value model
+        Json::Num(v as f64)
+    }
+}
 impl From<bool> for Json {
     fn from(v: bool) -> Json {
         Json::Bool(v)
@@ -508,6 +516,16 @@ mod tests {
         assert_eq!(v.to_string(), "42");
         let v = Json::Num(42.5);
         assert_eq!(v.to_string(), "42.5");
+    }
+
+    #[test]
+    fn u64_counters_roundtrip_integral() {
+        // telemetry counters (step indexes, nanosecond spans) are u64
+        let v: Json = 1_234_567_890_123u64.into();
+        assert_eq!(v.to_string(), "1234567890123");
+        assert_eq!(Json::parse(&v.to_string()).unwrap().as_f64(), Some(1_234_567_890_123.0));
+        let zero: Json = 0u64.into();
+        assert_eq!(zero.to_string(), "0");
     }
 
     #[test]

@@ -13,6 +13,7 @@
 
 use axe::accum::OverflowMode;
 use axe::coordinator::serve::{Request, Response, ServeConfig, StepEngine};
+use axe::coordinator::telemetry::SharedMetrics;
 use axe::coordinator::{quantize_transformer, DatapathMode, PipelineConfig};
 use axe::eval::synth_corpus;
 use axe::model::{
@@ -110,6 +111,37 @@ fn run_schedule(
     }
     done.sort_by_key(|r| r.id);
     done
+}
+
+/// [`run_schedule`], returning the engine's telemetry ring alongside
+/// the responses so properties can compare per-step records against
+/// response-level totals.
+fn run_with_telemetry(
+    m: &Transformer,
+    cfg: ServeConfig,
+    reqs: &[Request],
+    arrivals: &[usize],
+) -> (Vec<Response>, SharedMetrics) {
+    let mut eng = StepEngine::new(m, cfg);
+    let mut done: Vec<Response> = Vec::new();
+    let mut next = 0usize;
+    let mut tick = 0usize;
+    loop {
+        while next < reqs.len() && arrivals[next] <= tick && eng.free_slots() > 0 {
+            eng.admit(reqs[next].clone(), Instant::now());
+            next += 1;
+        }
+        eng.step();
+        done.extend(eng.take_finished());
+        tick += 1;
+        if next == reqs.len() && !eng.has_work() {
+            break;
+        }
+        assert!(tick < 100_000, "schedule did not converge");
+    }
+    let metrics = eng.metrics().expect("telemetry is on by default").clone();
+    done.sort_by_key(|r| r.id);
+    (done, metrics)
 }
 
 /// Random schedule: prompts 1..=22 tokens (several past max_seq=16 →
@@ -483,5 +515,88 @@ fn slot_reuse_across_waves_stays_exact() {
             let (want, _) = sequential_reference(&m, &req.prompt, req.max_new_tokens, kind);
             assert_eq!(resp.tokens, want, "kind={kind:?} request {} diverged", req.id);
         }
+    }
+}
+
+/// Telemetry conservation: the per-step records in the ring must SUM to
+/// the run's response-level totals — rows, overflow events (live via a
+/// narrow attention register), prefill work — with consecutive step
+/// numbering and `tokens == decode_rows + prefill_rows` per record.
+/// The schedule is slide-free (prompt+gen ≤ 13 < max_seq) so the
+/// decode-row identity `Σ decode_rows == Σ generated − n_requests` is
+/// exact, and the prefix cache stays off so no adoption credit lands
+/// in a response without a matching executed row. A second run with a
+/// 4-record ring checks wraparound: only the newest 4 records survive,
+/// in order, and every overwrite is drop-counted.
+#[test]
+fn telemetry_step_records_conserve_serve_totals() {
+    let m = model(50);
+    let kind = KvCacheKind::Quant(KvQuantSpec::new(8, 8, Some(6)));
+    let reqs: Vec<Request> = (0..6usize)
+        .map(|i| {
+            let plen = 1 + (i % 7);
+            let prompt: Vec<u16> = (0..plen).map(|p| ((p * 5 + i * 3 + 1) % 32) as u16).collect();
+            Request { id: i as u64, prompt, max_new_tokens: 1 + (i % 6) }
+        })
+        .collect();
+    let arrivals: Vec<usize> = (0..reqs.len()).map(|i| i / 2).collect();
+    let cfg = ServeConfig::new(3, kind).with_prefill_chunk(3);
+    let (responses, sm) = run_with_telemetry(&m, cfg, &reqs, &arrivals);
+    let (records, recorded, dropped) = sm.with(|mm| {
+        let mut v = Vec::new();
+        mm.take_buffered(&mut v);
+        (v, mm.recorded(), mm.dropped())
+    });
+    assert_eq!(responses.len(), reqs.len(), "lost responses");
+    assert_eq!(dropped, 0, "the default ring must not drop at this scale");
+    assert_eq!(recorded as usize, records.len(), "every record must still be buffered");
+
+    for (i, r) in records.iter().enumerate() {
+        assert_eq!(r.step, i as u64, "executed steps must be numbered consecutively");
+        assert_eq!(
+            r.tokens,
+            r.decode_rows + r.prefill_rows,
+            "step {} rows must decompose into decode + prefill",
+            r.step
+        );
+        assert!(r.wall_ns > 0, "step {} wall clock must be measured", r.step);
+    }
+
+    let total_generated: usize = responses.iter().map(|r| r.tokens.len()).sum();
+    let total_prompt: usize = reqs.iter().map(|r| r.prompt.len()).sum();
+    let rec_decode: u64 = records.iter().map(|r| u64::from(r.decode_rows)).sum();
+    let rec_prefill: u64 = records.iter().map(|r| u64::from(r.prefill_rows)).sum();
+    let rec_chunks: u64 = records.iter().map(|r| u64::from(r.prefill_chunks)).sum();
+    let rec_ovf: u64 = records.iter().map(|r| r.overflow_linear + r.overflow_attn).sum();
+    let resp_ovf: u64 = responses.iter().map(|r| r.overflow_events).sum();
+    assert_eq!(rec_decode as usize, total_generated - reqs.len(), "decode-row conservation");
+    assert_eq!(rec_prefill as usize, total_prompt, "prefill-row conservation");
+    assert!(rec_chunks as usize >= reqs.len(), "each admission needs at least one chunk");
+    assert!(resp_ovf > 0, "narrow attention register must overflow in this fixture");
+    assert_eq!(rec_ovf, resp_ovf, "overflow events must conserve between ring and responses");
+
+    let sum = sm.summary();
+    assert_eq!(sum.ttft_ns.count() as usize, reqs.len(), "one TTFT observation per request");
+    assert_eq!(
+        sum.tpot_ns.count() as usize,
+        total_generated - reqs.len(),
+        "one TPOT observation per decode row"
+    );
+
+    // ring wraparound: a 4-record ring over the same deterministic
+    // schedule keeps exactly the newest 4 records and drop-counts the
+    // rest.
+    let cfg4 = ServeConfig::new(3, kind).with_prefill_chunk(3).with_metrics_ring(4);
+    let (_, sm4) = run_with_telemetry(&m, cfg4, &reqs, &arrivals);
+    let (rec4, n4, d4) = sm4.with(|mm| {
+        let mut v = Vec::new();
+        mm.take_buffered(&mut v);
+        (v, mm.recorded(), mm.dropped())
+    });
+    assert_eq!(n4, recorded, "the schedule replays to the same step count");
+    assert_eq!(rec4.len(), 4, "a full ring holds exactly its capacity");
+    assert_eq!(d4, n4 - 4, "every overwritten record must be drop-counted");
+    for (i, r) in rec4.iter().enumerate() {
+        assert_eq!(r.step, n4 - 4 + i as u64, "survivors must be the newest records, in order");
     }
 }

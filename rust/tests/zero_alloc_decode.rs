@@ -5,7 +5,11 @@
 //! shape), a batched decode step must perform **zero** heap
 //! allocations — on the quantized model + quantized-KV backend (the
 //! serving configuration the scratch plan exists for) and on the float
-//! model + f32 arena.
+//! model + f32 arena. Telemetry recording rides inside every measured
+//! window: each step builds a [`StepRecord`] and pushes it through a
+//! [`SharedMetrics`] ring sized to wrap, so the record/observe/
+//! overwrite path is held to the same zero-allocation bar as the
+//! kernels it measures.
 //!
 //! The fixture is deliberately sized below the kernels' band-threading
 //! work threshold (rows·c·k < 64³ everywhere): the zero-allocation
@@ -20,6 +24,7 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use axe::coordinator::telemetry::{SharedMetrics, StepRecord};
 use axe::coordinator::{quantize_transformer, DatapathMode, PipelineConfig};
 use axe::eval::synth_corpus;
 use axe::model::{
@@ -87,6 +92,7 @@ fn run_steps(
     arena: &mut KvArena,
     slots: &[usize; 4],
     scratch: &mut DecodeScratch,
+    metrics: &SharedMetrics,
     steps: usize,
     phase: u16,
 ) -> u64 {
@@ -102,6 +108,27 @@ fn run_steps(
         model.decode_step_batch_scratch(&tokens, slots, arena, &mut row_ovf[..], scratch);
         // touch the result so the read can't be optimized away
         assert!(scratch.step.logits[..4 * vocab as usize].iter().all(|v| v.is_finite()));
+        // telemetry rides in the measured window: a full StepRecord
+        // plus a TTFT observation through the shared ring, per step,
+        // must not allocate either (the ring is preallocated and a
+        // std Mutex lock is allocation-free).
+        let attn = scratch.last_attn_overflows();
+        let rec = StepRecord {
+            step: phase as u64 * 64 + s as u64,
+            wall_ns: 1 + s as u64,
+            decode_rows: 4,
+            tokens: 4,
+            overflow_linear: row_ovf.iter().sum::<u64>().saturating_sub(attn),
+            overflow_attn: attn,
+            attn_bands: scratch.last_attn_bands() as u32,
+            arena_resident_bytes: arena.bytes() as u64,
+            arena_capacity_bytes: arena.capacity_bytes() as u64,
+            ..StepRecord::default()
+        };
+        metrics.with(|m| {
+            m.record(rec);
+            m.record_ttft(1 + s as u64);
+        });
     }
     allocations() - before
 }
@@ -133,9 +160,13 @@ fn steady_state_decode_steps_allocate_nothing() {
     for (i, &s) in slots.iter().enumerate() {
         qmodel.prefill_slot_scratch(&toks[i * 3..i * 3 + 3], s, &mut arena, &mut ovf, &mut scratch);
     }
+    // one telemetry ring for the whole test, sized to WRAP (capacity 8,
+    // 27 records by the end): overwrite + drop accounting run inside
+    // the measured windows, not just the happy path.
+    let metrics = SharedMetrics::new(8);
     // warmup: first steps may still grow buffers / free-list internals
-    run_steps(&qmodel, &mut arena, &slots, &mut scratch, 3, 100);
-    let quant_allocs = run_steps(&qmodel, &mut arena, &slots, &mut scratch, 6, 200);
+    run_steps(&qmodel, &mut arena, &slots, &mut scratch, &metrics, 3, 100);
+    let quant_allocs = run_steps(&qmodel, &mut arena, &slots, &mut scratch, &metrics, 6, 200);
     assert_eq!(
         quant_allocs, 0,
         "quantized-model + quant-KV decode steps must not allocate after warmup \
@@ -153,8 +184,8 @@ fn steady_state_decode_steps_allocate_nothing() {
         let prompt = &toks[i * 3..i * 3 + 3];
         base.prefill_slot_scratch(prompt, s, &mut arena_f, &mut ovf, &mut scratch_f);
     }
-    run_steps(&base, &mut arena_f, &slots_f, &mut scratch_f, 3, 300);
-    let float_allocs = run_steps(&base, &mut arena_f, &slots_f, &mut scratch_f, 6, 400);
+    run_steps(&base, &mut arena_f, &slots_f, &mut scratch_f, &metrics, 3, 300);
+    let float_allocs = run_steps(&base, &mut arena_f, &slots_f, &mut scratch_f, &metrics, 6, 400);
     assert_eq!(
         float_allocs, 0,
         "float-model decode steps must not allocate after warmup \
@@ -214,6 +245,27 @@ fn steady_state_decode_steps_allocate_nothing() {
         group_ovf.iter_mut().for_each(|v| *v = 0);
         qmodel.decode_step_ragged_scratch(&tokens, groups, arena, &mut group_ovf, scratch);
         assert!(scratch.step.logits[..4 * vocab as usize].iter().all(|v| v.is_finite()));
+        // chunked serving shape → the serve loop's record shape: the
+        // overflow split reads the kernel's attention share back out of
+        // the scratch, exactly as StepEngine::step does.
+        let attn = scratch.last_attn_overflows();
+        let total: u64 = group_ovf.iter().sum();
+        metrics.with(|m| {
+            m.record(StepRecord {
+                step: phase as u64,
+                wall_ns: 1 + phase as u64,
+                decode_rows: 3,
+                prefill_rows: chunk_len as u32,
+                prefill_chunks: 1,
+                tokens: 8,
+                overflow_linear: total.saturating_sub(attn),
+                overflow_attn: attn,
+                attn_bands: scratch.last_attn_bands() as u32,
+                arena_resident_bytes: arena.bytes() as u64,
+                arena_capacity_bytes: arena.capacity_bytes() as u64,
+                ..StepRecord::default()
+            });
+        });
     };
     for i in 0..3u16 {
         ragged_step(&mut arena_r, &mut scratch_r, &mut groups, 500 + i); // warmup
@@ -228,4 +280,11 @@ fn steady_state_decode_steps_allocate_nothing() {
         "ragged steps with a prefill chunk must not allocate after warmup \
          ({ragged_allocs} allocations across 6 steps)"
     );
+
+    // every step of every phase recorded; the capacity-8 ring wrapped
+    // and drop-counted the overflow — all inside the audited windows.
+    let sum = metrics.summary();
+    assert_eq!(sum.steps, 27, "all 27 steps must be telemetry-recorded");
+    assert_eq!(sum.records_dropped, 27 - 8, "ring wraparound must drop-count exactly");
+    assert_eq!(sum.tokens, 18 * 4 + 9 * 8, "recorded row totals must match the driven steps");
 }
