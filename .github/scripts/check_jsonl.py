@@ -2,10 +2,14 @@
 """Validate a telemetry JSONL stream emitted by `axe serve --metrics`.
 
 Every line must be a self-contained JSON object carrying the complete
-schema-v1 StepRecord field set (no more, no less); steps must be
-strictly increasing, every counter a non-negative integer, and each
-record's row total must decompose into decode + prefill rows. Exits
-non-zero with a file:line diagnostic on the first violation.
+StepRecord field set for its declared schema version (no more, no
+less) — v1 streams from older builds and v2 streams with the overload
+counters (shed, deadline_miss, cancelled, queue_hwm) both pass; steps
+must be strictly increasing, every counter a non-negative integer,
+each record's row total must decompose into decode + prefill rows,
+and v2's queue_hwm must dominate queue_depth and never regress along
+the stream. Exits non-zero with a file:line diagnostic on the first
+violation.
 
 Usage: check_jsonl.py <metrics.jsonl> [min_records]
 """
@@ -13,7 +17,7 @@ Usage: check_jsonl.py <metrics.jsonl> [min_records]
 import json
 import sys
 
-REQUIRED = {
+REQUIRED_V1 = {
     "arena_capacity_bytes",
     "arena_resident_bytes",
     "attn_bands",
@@ -32,6 +36,10 @@ REQUIRED = {
     "wall_ns",
 }
 
+REQUIRED_V2 = REQUIRED_V1 | {"cancelled", "deadline_miss", "queue_hwm", "shed"}
+
+REQUIRED = {1: REQUIRED_V1, 2: REQUIRED_V2}
+
 
 def fail(path, line_no, msg):
     print(f"{path}:{line_no}: {msg}", file=sys.stderr)
@@ -45,6 +53,8 @@ def main():
     path = sys.argv[1]
     min_records = int(sys.argv[2]) if len(sys.argv) > 2 else 1
     prev_step = None
+    prev_hwm = 0
+    versions = set()
     n = 0
     with open(path, encoding="utf-8") as f:
         for line_no, line in enumerate(f, start=1):
@@ -57,15 +67,18 @@ def main():
                 fail(path, line_no, f"not valid JSON: {e}")
             if not isinstance(rec, dict):
                 fail(path, line_no, "record is not a JSON object")
-            missing = REQUIRED - rec.keys()
+            version = rec.get("schema_version")
+            required = REQUIRED.get(version)
+            if required is None:
+                fail(path, line_no, f"schema_version {version!r} not in {sorted(REQUIRED)}")
+            versions.add(version)
+            missing = required - rec.keys()
             if missing:
                 fail(path, line_no, f"missing fields: {sorted(missing)}")
-            extra = rec.keys() - REQUIRED
+            extra = rec.keys() - required
             if extra:
-                fail(path, line_no, f"unknown fields for schema v1: {sorted(extra)}")
-            if rec["schema_version"] != 1:
-                fail(path, line_no, f"schema_version {rec['schema_version']!r} != 1")
-            for key in sorted(REQUIRED):
+                fail(path, line_no, f"unknown fields for schema v{version}: {sorted(extra)}")
+            for key in sorted(required):
                 v = rec[key]
                 if isinstance(v, bool) or not isinstance(v, int) or v < 0:
                     fail(path, line_no, f"{key} must be a non-negative integer, got {v!r}")
@@ -83,11 +96,26 @@ def main():
                     f"step {rec['step']} not strictly increasing (prev {prev_step})",
                 )
             prev_step = rec["step"]
+            if version >= 2:
+                if rec["queue_hwm"] < rec["queue_depth"]:
+                    fail(
+                        path,
+                        line_no,
+                        f"queue_hwm {rec['queue_hwm']} < queue_depth {rec['queue_depth']}",
+                    )
+                if rec["queue_hwm"] < prev_hwm:
+                    fail(
+                        path,
+                        line_no,
+                        f"queue_hwm {rec['queue_hwm']} regressed (prev {prev_hwm})",
+                    )
+                prev_hwm = rec["queue_hwm"]
             n += 1
     if n < min_records:
         print(f"{path}: only {n} records, expected at least {min_records}", file=sys.stderr)
         sys.exit(1)
-    print(f"{path}: {n} telemetry records OK (schema v1, steps strictly increasing)")
+    vs = ", ".join(f"v{v}" for v in sorted(versions)) or "none"
+    print(f"{path}: {n} telemetry records OK (schema {vs}, steps strictly increasing)")
 
 
 if __name__ == "__main__":

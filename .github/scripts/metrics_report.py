@@ -1,0 +1,113 @@
+#!/usr/bin/env python3
+"""Merge per-engine telemetry JSONL streams into one operator report.
+
+Reads one or more `axe serve --metrics` JSONL files (one per engine at
+--workers > 1), tolerates schema v1 records (the overload counters —
+shed, deadline_miss, cancelled, queue_hwm — default to 0), and prints:
+
+  * run totals: steps, tokens, decode/prefill rows, the overflow
+    split, admission outcomes, and the max queue high-water mark;
+  * step-latency percentiles (p50/p90/p99/max) over the exact wall_ns
+    samples — finer than the log2 histograms the engine keeps;
+  * a ~10-bin timeline over the merged step index: steps, tokens,
+    mean queue depth, max queue_hwm and sheds per bin, so queue
+    growth and shedding are visible as a time series rather than a
+    single end-of-run number.
+
+Exit codes: 0 on success, 1 if the streams held no records, 2 on
+usage errors. Validation is check_jsonl.py's job — this script only
+aggregates (it skips blank lines but lets malformed JSON raise).
+
+Usage: metrics_report.py <metrics.jsonl> [more.jsonl ...]
+"""
+
+import json
+import sys
+
+OVERLOAD_FIELDS = ("shed", "deadline_miss", "cancelled", "queue_hwm")
+
+
+def load(paths):
+    records = []
+    for path in paths:
+        with open(path, encoding="utf-8") as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                rec = json.loads(line)
+                for key in OVERLOAD_FIELDS:  # v1 tolerance
+                    rec.setdefault(key, 0)
+                records.append(rec)
+    return records
+
+
+def quantile(sorted_xs, q):
+    if not sorted_xs:
+        return 0
+    i = min(len(sorted_xs) - 1, int(q * len(sorted_xs)))
+    return sorted_xs[i]
+
+
+def main():
+    if len(sys.argv) < 2:
+        print(__doc__.strip(), file=sys.stderr)
+        sys.exit(2)
+    records = load(sys.argv[1:])
+    if not records:
+        print("no telemetry records in " + ", ".join(sys.argv[1:]), file=sys.stderr)
+        sys.exit(1)
+    records.sort(key=lambda r: r["step"])
+
+    total = lambda key: sum(r[key] for r in records)
+    tokens = total("tokens")
+    versions = sorted({r["schema_version"] for r in records})
+    print(
+        f"merged {len(records)} records from {len(sys.argv) - 1} stream(s) "
+        f"(schema {', '.join(f'v{v}' for v in versions)})"
+    )
+    print(
+        f"  work       : {tokens} tokens "
+        f"({total('decode_rows')} decode + {total('prefill_rows')} prefill rows, "
+        f"{total('prefill_chunks')} prefill chunks)"
+    )
+    print(
+        f"  overflow   : {total('overflow_linear')} linear + {total('overflow_attn')} attention "
+        f"({(total('overflow_linear') + total('overflow_attn')) / max(tokens, 1):.4f} per row)"
+    )
+    print(
+        f"  admission  : {total('shed')} shed / {total('deadline_miss')} deadline-missed / "
+        f"{total('cancelled')} cancelled "
+        f"(queue hwm {max(r['queue_hwm'] for r in records)})"
+    )
+    walls = sorted(r["wall_ns"] for r in records)
+    ms = lambda ns: ns / 1e6
+    print(
+        f"  step wall  : p50 {ms(quantile(walls, 0.50)):.2f} / p90 {ms(quantile(walls, 0.90)):.2f} "
+        f"/ p99 {ms(quantile(walls, 0.99)):.2f} / max {ms(walls[-1]):.2f} ms"
+    )
+    occupied = [r for r in records if r["tokens"] > 0]
+    mean_rows = sum(r["tokens"] for r in occupied) / max(len(occupied), 1)
+    print(f"  occupancy  : {mean_rows:.2f} mean rows over {len(occupied)} executing steps")
+
+    lo, hi = records[0]["step"], records[-1]["step"]
+    span = hi - lo + 1
+    bins = min(10, span)
+    width = -(-span // bins)  # ceil
+    print(f"  timeline   : {bins} bins × {width} steps")
+    print("      steps        n   tokens  depth(mean)  hwm(max)  shed")
+    for b in range(bins):
+        lo_b, hi_b = lo + b * width, lo + (b + 1) * width - 1
+        chunk = [r for r in records if lo_b <= r["step"] <= hi_b]
+        if not chunk:
+            continue
+        depth = sum(r["queue_depth"] for r in chunk) / len(chunk)
+        print(
+            f"      {lo_b:>5}-{hi_b:<5} {len(chunk):>4} {sum(r['tokens'] for r in chunk):>8} "
+            f"{depth:>12.2f} {max(r['queue_hwm'] for r in chunk):>9} "
+            f"{sum(r['shed'] for r in chunk):>5}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -179,7 +179,7 @@ fn shared_prefix_probe(model: &Transformer, val: &[u16], kind: KvCacheKind) -> S
             let mut prompt = system.clone();
             let at = (7 + id as usize * 11) % (val.len() - 4);
             prompt.extend_from_slice(&val[at..at + 3]); // divergent tail
-            Request { id, prompt, max_new_tokens: 4 }
+            Request { id, prompt, max_new_tokens: 4, ..Request::default() }
         })
         .collect();
     let mut points = Vec::new();
@@ -188,7 +188,12 @@ fn shared_prefix_probe(model: &Transformer, val: &[u16], kind: KvCacheKind) -> S
         let mut eng = StepEngine::new(model, cfg);
         // leader populates the cache, then retires
         eng.admit(
-            Request { id: 999, prompt: reqs[0].prompt.clone(), max_new_tokens: 2 },
+            Request {
+                id: 999,
+                prompt: reqs[0].prompt.clone(),
+                max_new_tokens: 2,
+                ..Request::default()
+            },
             Instant::now(),
         );
         while eng.take_finished().is_empty() {
@@ -260,6 +265,7 @@ fn ragged_attn_probe(model: &Transformer, val: &[u16], kind: KvCacheKind) -> Rag
                             id,
                             prompt: val[at..at + seq / 2].to_vec(),
                             max_new_tokens: gen_tokens,
+                            ..Request::default()
                         }
                     })
                     .collect();
@@ -313,7 +319,12 @@ fn ttft_probe(model: &Transformer, val: &[u16]) -> TtftProbe {
             // effectively endless decoders: the probe ends when the
             // long request finishes
             eng.admit(
-                Request { id, prompt: val[at..at + 4].to_vec(), max_new_tokens: 1 << 20 },
+                Request {
+                    id,
+                    prompt: val[at..at + 4].to_vec(),
+                    max_new_tokens: 1 << 20,
+                    ..Request::default()
+                },
                 Instant::now(),
             );
         }
@@ -325,7 +336,12 @@ fn ttft_probe(model: &Transformer, val: &[u16]) -> TtftProbe {
         }
         let t0 = Instant::now();
         eng.admit(
-            Request { id: 999, prompt: long_prompt.clone(), max_new_tokens: 2 },
+            Request {
+                id: 999,
+                prompt: long_prompt.clone(),
+                max_new_tokens: 2,
+                ..Request::default()
+            },
             t0,
         );
         let mut max_step_ms = 0f64;
@@ -357,7 +373,7 @@ fn telemetry_overhead_probe(
     let run = |spec: &SinkSpec| -> f64 {
         let queue = ServeQueue::new();
         for r in reqs {
-            queue.submit(r.clone());
+            queue.submit(r.clone()).expect("unbounded queue accepts every submit");
         }
         queue.close();
         let cfg = ServeConfig::new(in_flight, kind).with_telemetry(*spec != SinkSpec::None);
@@ -470,6 +486,7 @@ fn main() -> anyhow::Result<()> {
                     id,
                     prompt: val[start..start + seq / 2].to_vec(),
                     max_new_tokens: gen_tokens,
+                    ..Request::default()
                 }
             })
             .collect()
@@ -494,7 +511,7 @@ fn main() -> anyhow::Result<()> {
     for max_batch in [1usize, 4, 16] {
         let queue = ServeQueue::new();
         for r in make_requests() {
-            queue.submit(r);
+            queue.submit(r).expect("unbounded queue accepts every submit");
         }
         queue.close();
         let t0 = std::time::Instant::now();
@@ -556,7 +573,7 @@ fn main() -> anyhow::Result<()> {
     for max_batch in [1usize, 4, 16] {
         let queue = ServeQueue::new();
         for r in make_requests() {
-            queue.submit(r);
+            queue.submit(r).expect("unbounded queue accepts every submit");
         }
         queue.close();
         let t0 = std::time::Instant::now();

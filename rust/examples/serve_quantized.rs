@@ -120,11 +120,14 @@ fn main() -> anyhow::Result<()> {
     use axe::coordinator::serve::{serve, Request, ServeQueue, ServeStats};
     let queue = ServeQueue::new();
     for (id, p) in prompts.iter().enumerate() {
-        queue.submit(Request {
-            id: id as u64,
-            prompt: p[p.len() - seq / 2..].to_vec(),
-            max_new_tokens: gen_tokens,
-        });
+        queue
+            .submit(Request {
+                id: id as u64,
+                prompt: p[p.len() - seq / 2..].to_vec(),
+                max_new_tokens: gen_tokens,
+                ..Request::default()
+            })
+            .expect("unbounded queue accepts every submit");
     }
     queue.close();
     let t2 = Instant::now();

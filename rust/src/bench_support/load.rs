@@ -1,0 +1,357 @@
+//! Seeded load-generator + fault-injection harness for overload
+//! testing.
+//!
+//! [`schedule`] expands a [`LoadSpec`] into a deterministic arrival
+//! trace (Poisson or bursty inter-arrivals, seeded prompt/output
+//! lengths, optional cancellation and deadline annotations) and
+//! [`run_load`] replays that trace tick by tick against a single
+//! [`StepEngine`] behind a bounded [`ServeQueue`] — the same
+//! admission seam the engine threads use in production, driven
+//! synchronously so tests can inject faults between steps and assert
+//! on the exact step-record stream.
+//!
+//! Determinism contract: [`schedule`] is a pure function of
+//! `(spec, seed)`, and with deadlines and cancellation disabled the
+//! whole run is tick-deterministic — same seed, same shed decisions,
+//! same survivor token streams, bit for bit. Deadlines are wall-clock
+//! (`Instant`), so traces that use them conserve and bound but do not
+//! replay exactly.
+
+use std::time::{Duration, Instant};
+
+use crate::coordinator::serve::{
+    CancelToken, Request, Response, ServeConfig, ServeQueue, ShedPolicy, Status, StepEngine,
+};
+use crate::coordinator::telemetry::{MetricsSummary, StepRecord};
+use crate::model::Transformer;
+use crate::util::rng::Rng;
+
+/// Arrival process for the synthetic trace, in scheduler ticks (one
+/// tick = one driver iteration = at most one ragged step).
+#[derive(Clone, Copy, Debug)]
+pub enum Arrivals {
+    /// Exponential inter-arrival gaps with the given mean — the
+    /// classic open-loop Poisson load.
+    Poisson { mean_ticks: f64 },
+    /// `burst` simultaneous arrivals every `period` ticks — the
+    /// queue-saturation fault: each burst lands on one admission
+    /// check and overflows any cap smaller than the burst.
+    Bursty { burst: usize, period: u64 },
+}
+
+/// Declarative description of a synthetic load trace.
+#[derive(Clone, Copy, Debug)]
+pub struct LoadSpec {
+    pub arrivals: Arrivals,
+    pub n_requests: usize,
+    /// Inclusive prompt-length range, sampled per request.
+    pub prompt_lens: (usize, usize),
+    /// Inclusive output-length range, sampled per request.
+    pub output_lens: (usize, usize),
+    /// Prompt tokens are sampled below this bound.
+    pub vocab: u16,
+    /// Probability a request carries a [`CancelToken`] that fires
+    /// `cancel_after` ticks past its arrival. 0.0 = no cancellation
+    /// (required for bit-exact replay assertions).
+    pub cancel_p: f64,
+    pub cancel_after: u64,
+    /// Wall-clock deadline attached at submission, in milliseconds.
+    /// 0 = no deadlines (required for bit-exact replay assertions).
+    pub deadline_ms: u64,
+}
+
+impl LoadSpec {
+    fn base(arrivals: Arrivals, n_requests: usize) -> LoadSpec {
+        LoadSpec {
+            arrivals,
+            n_requests,
+            prompt_lens: (1, 12),
+            output_lens: (1, 8),
+            vocab: 32,
+            cancel_p: 0.0,
+            cancel_after: 0,
+            deadline_ms: 0,
+        }
+    }
+
+    /// Burst storm: `burst` arrivals every `period` ticks.
+    pub fn bursty(n_requests: usize, burst: usize, period: u64) -> LoadSpec {
+        LoadSpec::base(Arrivals::Bursty { burst: burst.max(1), period: period.max(1) }, n_requests)
+    }
+
+    /// Open-loop Poisson arrivals with the given mean gap in ticks.
+    pub fn poisson(n_requests: usize, mean_ticks: f64) -> LoadSpec {
+        LoadSpec::base(Arrivals::Poisson { mean_ticks: mean_ticks.max(1e-9) }, n_requests)
+    }
+}
+
+/// One scheduled arrival: the request, its arrival tick, and optional
+/// cancellation / deadline annotations resolved by the driver.
+#[derive(Clone, Debug)]
+pub struct LoadEvent {
+    pub tick: u64,
+    pub req: Request,
+    /// Fire `req.cancel` at this tick (the token is already attached
+    /// to the request).
+    pub cancel_at: Option<u64>,
+    /// Attach `Instant::now() + deadline_ms` at submission time.
+    /// 0 = none.
+    pub deadline_ms: u64,
+}
+
+/// Expand a spec into its deterministic arrival trace. Pure in
+/// `(spec, seed)`: every field of every event — ticks, prompts,
+/// output budgets, cancellation picks — replays exactly.
+pub fn schedule(spec: &LoadSpec, seed: u64) -> Vec<LoadEvent> {
+    let mut rng = Rng::new(seed);
+    let mut arrivals = rng.fork(1);
+    let mut shapes = rng.fork(2);
+    let mut cancels = rng.fork(3);
+    let mut events = Vec::with_capacity(spec.n_requests);
+    let mut t = 0.0f64;
+    for i in 0..spec.n_requests {
+        let tick = match spec.arrivals {
+            Arrivals::Poisson { mean_ticks } => {
+                t += -(1.0 - arrivals.f64()).ln() * mean_ticks;
+                t as u64
+            }
+            Arrivals::Bursty { burst, period } => (i / burst) as u64 * period,
+        };
+        let (plo, phi) = spec.prompt_lens;
+        let (olo, ohi) = spec.output_lens;
+        let plen = shapes.int_in(plo.max(1) as i64, phi.max(plo).max(1) as i64) as usize;
+        let olen = shapes.int_in(olo as i64, ohi.max(olo) as i64) as usize;
+        let prompt: Vec<u16> =
+            (0..plen).map(|_| shapes.below(spec.vocab.max(1) as usize) as u16).collect();
+        let cancel_at = if spec.cancel_p > 0.0 && cancels.chance(spec.cancel_p) {
+            Some(tick + spec.cancel_after)
+        } else {
+            None
+        };
+        events.push(LoadEvent {
+            tick,
+            req: Request {
+                id: i as u64,
+                prompt,
+                max_new_tokens: olen,
+                deadline: None,
+                cancel: cancel_at.map(|_| CancelToken::new()),
+            },
+            cancel_at,
+            deadline_ms: spec.deadline_ms,
+        });
+    }
+    events
+}
+
+/// Faults injected by the driver between steps. `Default` = none.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FaultSpec {
+    /// Sleep before every `slow_every`-th tick's step (1 = every
+    /// step). 0 = off. Paired with deadlines this forces mid-flight
+    /// deadline misses without touching the scheduler.
+    pub slow_every: usize,
+    pub slow_ms: u64,
+}
+
+/// Everything a run produced, for assertions.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    /// All terminal responses (accepted and shed), drained from the
+    /// queue after close.
+    pub responses: Vec<Response>,
+    /// The complete step-record stream, drained every tick (no ring
+    /// overwrites at test scale).
+    pub records: Vec<StepRecord>,
+    /// Engine telemetry summary (`None` with telemetry off).
+    pub summary: Option<MetricsSummary>,
+    /// Conservation left-hand side: requests accepted by `submit`.
+    pub submitted: u64,
+    pub shed: u64,
+    pub depth_hwm: usize,
+    /// Driver iterations until quiescence.
+    pub ticks: u64,
+}
+
+impl LoadReport {
+    /// `(ok, shed, deadline_miss, cancelled)` response counts.
+    pub fn status_counts(&self) -> (usize, usize, usize, usize) {
+        let mut c = (0, 0, 0, 0);
+        for r in &self.responses {
+            match r.status {
+                Status::Ok => c.0 += 1,
+                Status::Shed => c.1 += 1,
+                Status::DeadlineMiss => c.2 += 1,
+                Status::Cancelled => c.3 += 1,
+            }
+        }
+        c
+    }
+
+    /// Every submitted request resolved to exactly one response.
+    pub fn conserved(&self) -> bool {
+        self.responses.len() as u64 == self.submitted
+    }
+}
+
+/// Replay an arrival trace against one engine behind a bounded queue.
+///
+/// Each tick: submit due arrivals (attaching deadlines), fire due
+/// cancellations, poll admissions into free slots, fold queue
+/// depth/shed telemetry, optionally inject a slow-step fault, run one
+/// ragged step, complete finished responses, and drain the step
+/// records. Runs until the trace is exhausted and both the queue and
+/// the engine are empty, then closes the queue, flushes the final
+/// shed delta through an empty step, and drains the responses.
+pub fn run_load(
+    model: &Transformer,
+    cfg: ServeConfig,
+    queue_cap: usize,
+    policy: ShedPolicy,
+    events: &[LoadEvent],
+    faults: FaultSpec,
+) -> LoadReport {
+    let queue = ServeQueue::bounded(queue_cap, policy);
+    let mut eng = StepEngine::new(model, cfg);
+    let mut pending_cancels: Vec<(u64, CancelToken)> = Vec::new();
+    let mut records = Vec::new();
+    let mut scratch = Vec::new();
+    let mut next_ev = 0usize;
+    let mut tick = 0u64;
+    loop {
+        while next_ev < events.len() && events[next_ev].tick <= tick {
+            let ev = &events[next_ev];
+            let mut req = ev.req.clone();
+            if ev.deadline_ms > 0 {
+                req.deadline = Some(Instant::now() + Duration::from_millis(ev.deadline_ms));
+            }
+            if let Some(at) = ev.cancel_at {
+                // mint a fresh token per run — the scheduled token is a
+                // shared Arc and would replay as already-cancelled
+                let tok = CancelToken::new();
+                req.cancel = Some(tok.clone());
+                pending_cancels.push((at, tok));
+            }
+            let _ = queue.submit(req); // sheds resolve via the queue
+            next_ev += 1;
+        }
+        pending_cancels.retain(|(at, tok)| {
+            if *at <= tick {
+                tok.cancel();
+                false
+            } else {
+                true
+            }
+        });
+        for (req, enqueued) in queue.poll(eng.free_slots()) {
+            eng.admit(req, enqueued);
+        }
+        eng.note_queue_depth(queue.depth());
+        eng.note_shed(queue.take_shed_delta());
+        if faults.slow_every > 0 && (tick as usize) % faults.slow_every == 0 && faults.slow_ms > 0 {
+            std::thread::sleep(Duration::from_millis(faults.slow_ms));
+        }
+        eng.step();
+        queue.complete(eng.take_finished());
+        if let Some(m) = eng.metrics() {
+            m.with(|mm| mm.take_buffered(&mut scratch));
+            records.extend(scratch.drain(..));
+        }
+        tick += 1;
+        assert!(tick < 1_000_000, "load driver failed to quiesce");
+        if next_ev >= events.len() && queue.depth() == 0 && !eng.has_work() {
+            break;
+        }
+    }
+    queue.close();
+    // late sheds cannot exist here (nothing submits after the trace),
+    // but mirror run_engine's final flush so drain records are never
+    // silently lost if the driver grows richer fault hooks
+    eng.note_shed(queue.take_shed_delta());
+    eng.step();
+    if let Some(m) = eng.metrics() {
+        m.with(|mm| mm.take_buffered(&mut scratch));
+        records.extend(scratch.drain(..));
+    }
+    let summary = eng.metrics().map(|m| m.summary());
+    LoadReport {
+        responses: queue.drain(),
+        records,
+        summary,
+        submitted: queue.submitted_count(),
+        shed: queue.shed_count(),
+        depth_hwm: queue.depth_hwm(),
+        ticks: tick,
+    }
+}
+
+/// The no-contention oracle: run one request alone (batch 1, no
+/// deadline, no cancellation) and return its response. Survivor token
+/// streams from any overloaded run must match this bit for bit — the
+/// overload machinery is allowed to reorder and refuse work, never to
+/// change it.
+pub fn solo_reference(model: &Transformer, cfg: ServeConfig, req: &Request) -> Response {
+    let mut solo = cfg;
+    solo.max_batch = 1;
+    let mut eng = StepEngine::new(model, solo);
+    let mut clean = req.clone();
+    clean.deadline = None;
+    clean.cancel = None;
+    eng.admit(clean, Instant::now());
+    while eng.has_work() {
+        eng.step();
+    }
+    let mut done = eng.take_finished();
+    assert_eq!(done.len(), 1, "solo reference must retire exactly one response");
+    done.pop().expect("len checked above")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_is_deterministic_per_seed() {
+        let spec = LoadSpec::poisson(12, 2.0);
+        let a = schedule(&spec, 9);
+        let b = schedule(&spec, 9);
+        assert_eq!(a.len(), 12);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.tick, y.tick);
+            assert_eq!(x.req.prompt, y.req.prompt);
+            assert_eq!(x.req.max_new_tokens, y.req.max_new_tokens);
+            assert_eq!(x.cancel_at, y.cancel_at);
+        }
+        let c = schedule(&spec, 10);
+        assert!(
+            a.iter().zip(&c).any(|(x, y)| x.tick != y.tick || x.req.prompt != y.req.prompt),
+            "different seeds must produce different traces"
+        );
+    }
+
+    #[test]
+    fn bursty_schedule_lands_in_bursts() {
+        let ev = schedule(&LoadSpec::bursty(9, 3, 5), 1);
+        let ticks: Vec<u64> = ev.iter().map(|e| e.tick).collect();
+        assert_eq!(ticks, vec![0, 0, 0, 5, 5, 5, 10, 10, 10]);
+        for e in &ev {
+            assert!(!e.req.prompt.is_empty());
+            assert!(e.cancel_at.is_none());
+            assert_eq!(e.deadline_ms, 0);
+        }
+    }
+
+    #[test]
+    fn cancel_annotations_follow_probability() {
+        let mut spec = LoadSpec::poisson(64, 1.0);
+        spec.cancel_p = 1.0;
+        spec.cancel_after = 3;
+        let ev = schedule(&spec, 4);
+        for e in &ev {
+            assert_eq!(e.cancel_at, Some(e.tick + 3));
+            assert!(e.req.cancel.is_some());
+        }
+        spec.cancel_p = 0.0;
+        assert!(schedule(&spec, 4).iter().all(|e| e.cancel_at.is_none()));
+    }
+}

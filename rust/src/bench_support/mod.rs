@@ -1,6 +1,10 @@
 //! Mini-criterion: timing loops with warmup and robust statistics (no
 //! `criterion` in the offline registry). The experiment benches also use
-//! this module's table printer to emit paper-style rows.
+//! this module's table printer to emit paper-style rows. The [`load`]
+//! submodule is the seeded load-generator + fault-injection harness for
+//! overload testing.
+
+pub mod load;
 
 use std::time::Instant;
 

@@ -74,10 +74,14 @@ pub fn render_telemetry_report(t: &MetricsSummary) -> String {
         t.occupancy.max_value()
     ));
     out.push_str(&format!(
-        "  overflow    : {} linear + {} attention events ({:.4} per row)",
+        "  overflow    : {} linear + {} attention events ({:.4} per row)\n",
         t.overflow_linear,
         t.overflow_attn,
         (t.overflow_linear + t.overflow_attn) as f64 / t.tokens.max(1) as f64
+    ));
+    out.push_str(&format!(
+        "  admission   : {} shed / {} deadline-missed / {} cancelled (queue hwm {})",
+        t.shed, t.deadline_miss, t.cancelled, t.queue_hwm
     ));
     out
 }
@@ -131,6 +135,9 @@ mod tests {
                 prefill_chunks: 1,
                 tokens: 4,
                 overflow_linear: 2,
+                shed: if i == 0 { 2 } else { 0 },
+                deadline_miss: 1,
+                queue_hwm: 7,
                 ..StepRecord::default()
             });
             m.record_ttft(2_000_000);
@@ -140,6 +147,8 @@ mod tests {
         assert!(s.contains("step latency"), "{s}");
         assert!(s.contains("occupancy   : p50 4 / p99 4 / max 4 rows"), "{s}");
         assert!(s.contains("10 linear + 0 attention"), "{s}");
+        assert!(s.contains("admission   : 2 shed / 5 deadline-missed / 0 cancelled"), "{s}");
+        assert!(s.contains("queue hwm 7"), "{s}");
     }
 
     #[test]

@@ -22,12 +22,38 @@
 //! band-threading work threshold — past it, thread spawns allocate by
 //! design).
 //!
+//! **Overload control.** The serve path degrades by policy, never by
+//! accident, mirroring the guarantee character of the kernel layer:
+//!
+//! - **Bounded admission.** [`ServeQueue::bounded`] caps the pending
+//!   queue; [`ServeQueue::submit`] returns
+//!   [`SubmitError::QueueFull`] instead of growing without bound, and
+//!   the deterministic [`ShedPolicy`] decides *which* request is shed
+//!   (reject-newest by default, or evict the largest pending prompt).
+//!   Every shed request still resolves to a [`Response`] with
+//!   [`Status::Shed`], and the queue keeps exact `submitted`/`shed`
+//!   counters so `submitted == completed + shed + missed + cancelled`
+//!   is checkable ([`ServeStats::conserved`]).
+//! - **Deadlines + cancellation.** A [`Request`] may carry a
+//!   `deadline` and/or a [`CancelToken`]. Doomed work is dropped at
+//!   admission (no slot spent) and mid-flight — including mid-prefill
+//!   — by a reaper that releases the arena slot and unrefs its pages
+//!   (prefix-cache refcounts fall back to the cache's own holds).
+//!   Dropped requests resolve to typed [`Status::DeadlineMiss`] /
+//!   [`Status::Cancelled`] responses carrying whatever tokens they
+//!   emitted, so callers never hang.
+//! - **Fairness under storm.** With `fair_budget` on (default) the
+//!   shared per-step prefill budget scales *down* with live decode
+//!   rows, bounding step tokens — and hence step latency — by
+//!   `max(prefill_chunk, max_batch)`; chunk grants round-robin across
+//!   prefilling sequences so one giant prompt cannot starve the rest.
+//!   Both knobs reorder *scheduling only*: tokens and per-request
+//!   overflow attribution stay bit-identical (row independence).
+//!
 //! **Admission / fairness policy.** Decode rows always ride — an
 //! admitting prompt can never stall sequences that are already
 //! generating. The per-step prefill budget (`prefill_chunk` tokens,
-//! shared) is handed out in active-list order (FCFS admission order,
-//! modulo retirement swaps), so concurrent admissions prefill
-//! substantially one after the other rather than all at once;
+//! shared) is handed out round-robin across prefilling sequences;
 //! window-slide re-encodes run through the same chunked path and the
 //! same budget. Per-request **time-to-first-token** is recorded on
 //! every [`Response`] (`ttft_s`), making the latency effect of the
@@ -55,6 +81,7 @@ use crate::model::{
     argmax, DecodeScratch, KvArena, KvCacheKind, RowGroup, Transformer, DEFAULT_KV_PAGE,
 };
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
@@ -62,12 +89,98 @@ use std::time::Instant;
 /// `--prefill-chunk` default.
 pub const DEFAULT_PREFILL_CHUNK: usize = 64;
 
+/// Typed terminal status of a [`Response`]. Every request accepted by
+/// [`ServeQueue::submit`] resolves to **exactly one** response with
+/// exactly one of these — overloaded or cancelled work is answered,
+/// never silently dropped, so callers can always stop waiting.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Status {
+    /// Ran to completion: `tokens` holds the full requested stream.
+    #[default]
+    Ok,
+    /// Rejected by the bounded queue's [`ShedPolicy`] before admission;
+    /// `tokens` is empty.
+    Shed,
+    /// Deadline expired — at admission (empty `tokens`) or mid-flight
+    /// (partial `tokens`, a prefix of the uncontended stream).
+    DeadlineMiss,
+    /// [`CancelToken::cancel`] observed — at admission or mid-flight;
+    /// `tokens` holds whatever was emitted before the drop.
+    Cancelled,
+}
+
+/// Shared cancellation handle: clone it into a [`Request`], call
+/// [`CancelToken::cancel`] from any thread, and the scheduler drops the
+/// request at its next admission check or step (releasing its arena
+/// slot and page refcounts), resolving it as [`Status::Cancelled`].
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Release);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Acquire)
+    }
+}
+
+/// Typed [`ServeQueue::submit`] rejection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The bounded queue is at capacity and the [`ShedPolicy`] shed the
+    /// submitted request (a [`Status::Shed`] response was filed for it
+    /// — the submission is still *accounted*, not lost).
+    QueueFull,
+    /// [`ServeQueue::close`] already ran — the request was not
+    /// enqueued, not counted, and gets no response.
+    Closed,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull => write!(f, "queue at capacity: request shed"),
+            SubmitError::Closed => write!(f, "queue closed"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Deterministic decision of *which* request a full queue sheds. Both
+/// policies are pure functions of queue contents + incoming request,
+/// so shed decisions replay exactly from a seeded arrival schedule.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ShedPolicy {
+    /// Shed the incoming request (classic tail-drop) — pending work is
+    /// never disturbed.
+    #[default]
+    RejectNewest,
+    /// Evict the pending request with the largest prompt (ties →
+    /// newest) if it is strictly larger than the incoming one,
+    /// otherwise shed the incoming request — under storm, many small
+    /// requests beat one giant one.
+    RejectLargestPrompt,
+}
+
 /// One generation request.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct Request {
     pub id: u64,
     pub prompt: Vec<u16>,
     pub max_new_tokens: usize,
+    /// Drop-dead time: work not finished by here is dropped at the
+    /// scheduler's next admission check or step and resolved as
+    /// [`Status::DeadlineMiss`]. `None` = no deadline.
+    pub deadline: Option<Instant>,
+    /// Caller-held cancellation handle (see [`CancelToken`]).
+    pub cancel: Option<CancelToken>,
 }
 
 /// Completed response with timing and overflow accounting.
@@ -99,6 +212,25 @@ pub struct Response {
     /// its slot from the prefix cache. 0 on a cold admission or with
     /// `--prefix-cache off`.
     pub prefill_tokens_skipped: usize,
+    /// Typed terminal status; non-[`Status::Ok`] responses may carry a
+    /// partial (prefix-exact) token stream.
+    pub status: Status,
+}
+
+/// The response a shed request resolves to — empty tokens, zero model
+/// work, `queued_s` = time spent pending before eviction (0 when the
+/// incoming request itself was shed).
+fn shed_response(req: Request, queued_s: f64) -> Response {
+    Response {
+        id: req.id,
+        tokens: Vec::new(),
+        queued_s,
+        gen_s: 0.0,
+        ttft_s: queued_s,
+        overflow_events: 0,
+        prefill_tokens_skipped: 0,
+        status: Status::Shed,
+    }
 }
 
 struct QueueInner {
@@ -106,36 +238,120 @@ struct QueueInner {
     done: Vec<Response>,
     closed: bool,
     in_flight: usize,
+    /// Pending-queue capacity (`usize::MAX` = unbounded).
+    cap: usize,
+    policy: ShedPolicy,
+    /// Requests accepted by `submit` (everything except
+    /// [`SubmitError::Closed`]) — the conservation left-hand side.
+    submitted: u64,
+    /// Requests shed by the capacity policy (each filed a
+    /// [`Status::Shed`] response).
+    shed: u64,
+    /// Prefix of `shed` already handed to an engine via
+    /// [`ServeQueue::take_shed_delta`] — sheds reach telemetry
+    /// exactly once even with multiple engines polling.
+    shed_reported: u64,
+    /// High-water pending depth — with a cap, provably ≤ cap.
+    depth_hwm: usize,
 }
 
 /// Shared request queue with blocking pop (idle engines) and
-/// non-blocking poll (engines with work in flight).
+/// non-blocking poll (engines with work in flight). Optionally bounded
+/// ([`ServeQueue::bounded`]): at capacity, the [`ShedPolicy`] decides
+/// deterministically which request is shed, and the shed request still
+/// resolves to a [`Status::Shed`] response on [`ServeQueue::drain`].
 pub struct ServeQueue {
     inner: Mutex<QueueInner>,
     cv: Condvar,
 }
 
 impl ServeQueue {
+    /// Unbounded queue (legacy behaviour — `submit` only errors after
+    /// [`ServeQueue::close`]).
     pub fn new() -> Arc<ServeQueue> {
+        ServeQueue::bounded(usize::MAX, ShedPolicy::RejectNewest)
+    }
+
+    /// Bounded queue: at most `cap` pending (unadmitted) requests;
+    /// beyond that, `policy` sheds deterministically. `cap` is clamped
+    /// to ≥ 1.
+    pub fn bounded(cap: usize, policy: ShedPolicy) -> Arc<ServeQueue> {
         Arc::new(ServeQueue {
             inner: Mutex::new(QueueInner {
                 pending: VecDeque::new(),
                 done: Vec::new(),
                 closed: false,
                 in_flight: 0,
+                cap: cap.max(1),
+                policy,
+                submitted: 0,
+                shed: 0,
+                shed_reported: 0,
+                depth_hwm: 0,
             }),
             cv: Condvar::new(),
         })
     }
 
-    pub fn submit(&self, req: Request) {
+    /// Submit a request. `Err(Closed)` after [`ServeQueue::close`]
+    /// (not enqueued, not counted); `Err(QueueFull)` when the bounded
+    /// queue shed the *incoming* request (it **is** counted and will
+    /// resolve as a [`Status::Shed`] response). `Ok` means the request
+    /// is pending — though a later over-capacity submit may still evict
+    /// it under [`ShedPolicy::RejectLargestPrompt`].
+    pub fn submit(&self, req: Request) -> Result<(), SubmitError> {
         let mut g = self.inner.lock().unwrap();
-        assert!(!g.closed, "queue closed");
-        g.pending.push_back((req, Instant::now()));
+        if g.closed {
+            return Err(SubmitError::Closed);
+        }
+        g.submitted += 1;
+        let now = Instant::now();
+        if g.pending.len() >= g.cap {
+            match g.policy {
+                ShedPolicy::RejectNewest => {
+                    g.shed += 1;
+                    g.done.push(shed_response(req, 0.0));
+                    self.cv.notify_all();
+                    return Err(SubmitError::QueueFull);
+                }
+                ShedPolicy::RejectLargestPrompt => {
+                    // victim = largest pending prompt, ties → newest
+                    // (cap ≥ 1, so at capacity pending is non-empty)
+                    let mut vi = 0;
+                    for (i, (p, _)) in g.pending.iter().enumerate() {
+                        if p.prompt.len() >= g.pending[vi].0.prompt.len() {
+                            vi = i;
+                        }
+                    }
+                    if g.pending[vi].0.prompt.len() > req.prompt.len() {
+                        let (victim, venq) =
+                            g.pending.remove(vi).expect("victim index is in bounds");
+                        g.shed += 1;
+                        let queued_s = now.duration_since(venq).as_secs_f64();
+                        g.done.push(shed_response(victim, queued_s));
+                        g.pending.push_back((req, now));
+                        let depth = g.pending.len();
+                        g.depth_hwm = g.depth_hwm.max(depth);
+                        self.cv.notify_all();
+                        return Ok(());
+                    }
+                    // incoming is itself the largest → shed it
+                    g.shed += 1;
+                    g.done.push(shed_response(req, 0.0));
+                    self.cv.notify_all();
+                    return Err(SubmitError::QueueFull);
+                }
+            }
+        }
+        g.pending.push_back((req, now));
+        let depth = g.pending.len();
+        g.depth_hwm = g.depth_hwm.max(depth);
         self.cv.notify_all();
+        Ok(())
     }
 
-    /// Close the queue; engines drain and exit.
+    /// Close the queue; engines drain and exit. Later submits return
+    /// [`SubmitError::Closed`].
     pub fn close(&self) {
         let mut g = self.inner.lock().unwrap();
         g.closed = true;
@@ -162,8 +378,10 @@ impl ServeQueue {
 
     /// Non-blocking admission poll: up to `max` pending requests, empty
     /// when the queue has none — a busy engine never stalls its
-    /// in-flight batch waiting for more traffic.
-    fn poll(&self, max: usize) -> Vec<(Request, Instant)> {
+    /// in-flight batch waiting for more traffic. Crate-visible so the
+    /// load harness (`bench_support::load`) can drive the same
+    /// admission seam tick by tick.
+    pub(crate) fn poll(&self, max: usize) -> Vec<(Request, Instant)> {
         if max == 0 {
             return Vec::new();
         }
@@ -174,7 +392,7 @@ impl ServeQueue {
         batch
     }
 
-    fn complete(&self, resp: Vec<Response>) {
+    pub(crate) fn complete(&self, resp: Vec<Response>) {
         if resp.is_empty() {
             return;
         }
@@ -190,6 +408,34 @@ impl ServeQueue {
         self.inner.lock().unwrap().pending.len()
     }
 
+    /// High-water pending depth over the queue's lifetime — with
+    /// [`ServeQueue::bounded`], provably ≤ the cap.
+    pub fn depth_hwm(&self) -> usize {
+        self.inner.lock().unwrap().depth_hwm
+    }
+
+    /// Requests accepted by `submit` (the conservation left-hand side:
+    /// `submitted == completed + shed + deadline_miss + cancelled`
+    /// after drain).
+    pub fn submitted_count(&self) -> u64 {
+        self.inner.lock().unwrap().submitted
+    }
+
+    /// Requests shed by the capacity policy so far.
+    pub fn shed_count(&self) -> u64 {
+        self.inner.lock().unwrap().shed
+    }
+
+    /// Sheds not yet handed to any engine's telemetry — each shed is
+    /// reported exactly once across all engines polling this queue
+    /// (pair with [`StepEngine::note_shed`]).
+    pub fn take_shed_delta(&self) -> u64 {
+        let mut g = self.inner.lock().unwrap();
+        let delta = g.shed - g.shed_reported;
+        g.shed_reported = g.shed;
+        delta
+    }
+
     /// Wait for all submitted work to finish, then return responses
     /// sorted by id.
     pub fn drain(&self) -> Vec<Response> {
@@ -203,18 +449,31 @@ impl ServeQueue {
     }
 }
 
-/// Serving statistics over a set of responses.
+/// Serving statistics over a set of responses. Latency/TTFT
+/// percentiles, queue-wait means and the prefix-sharing partition are
+/// computed over [`Status::Ok`] responses only (a shed request's
+/// "latency" would poison the percentiles); token and overflow totals
+/// count every response, including partial streams from reaped work.
 #[derive(Clone, Debug)]
 pub struct ServeStats {
     pub requests: usize,
+    /// Responses that ran to completion ([`Status::Ok`]).
+    pub completed: usize,
+    /// Responses shed by the bounded queue's capacity policy.
+    pub shed: usize,
+    /// Responses dropped on an expired deadline (at admission or
+    /// mid-flight).
+    pub deadline_miss: usize,
+    /// Responses dropped via their [`CancelToken`].
+    pub cancelled: usize,
     pub total_tokens: usize,
     pub wall_s: f64,
     pub tokens_per_s: f64,
     pub p50_latency_s: f64,
     pub p99_latency_s: f64,
     pub mean_queue_s: f64,
-    /// Time-to-first-token percentiles across responses — the metric
-    /// the chunked-prefill admission path targets.
+    /// Time-to-first-token percentiles across completed responses —
+    /// the metric the chunked-prefill admission path targets.
     pub p50_ttft_s: f64,
     pub p99_ttft_s: f64,
     /// Total overflow events across the serve run — the sum of the
@@ -224,10 +483,10 @@ pub struct ServeStats {
     /// KV arena footprint in bytes per engine (0 when the caller did
     /// not fill it in; see [`crate::model::KvArena::footprint`]).
     pub arena_bytes: usize,
-    /// Requests whose admission hit the prefix cache (adopted ≥ 1
-    /// shared page).
+    /// Completed requests whose admission hit the prefix cache
+    /// (adopted ≥ 1 shared page).
     pub prefix_hits: usize,
-    /// Prefix-cache hit rate across requests (`prefix_hits / requests`).
+    /// Prefix-cache hit rate across completed requests.
     pub prefix_hit_rate: f64,
     /// Total prefill positions skipped via shared-page adoption.
     pub prefill_tokens_skipped: usize,
@@ -262,14 +521,24 @@ impl ServeStats {
             let idx = ((sorted.len() as f64 * p).ceil() as usize).clamp(1, sorted.len()) - 1;
             sorted[idx]
         };
-        let mut latencies: Vec<f64> = responses.iter().map(|r| r.queued_s + r.gen_s).collect();
+        let (mut shed, mut miss, mut cancelled) = (0usize, 0usize, 0usize);
+        for r in responses {
+            match r.status {
+                Status::Ok => {}
+                Status::Shed => shed += 1,
+                Status::DeadlineMiss => miss += 1,
+                Status::Cancelled => cancelled += 1,
+            }
+        }
+        let ok: Vec<&Response> = responses.iter().filter(|r| r.status == Status::Ok).collect();
+        let mut latencies: Vec<f64> = ok.iter().map(|r| r.queued_s + r.gen_s).collect();
         latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let mut ttfts: Vec<f64> = responses.iter().map(|r| r.ttft_s).collect();
+        let mut ttfts: Vec<f64> = ok.iter().map(|r| r.ttft_s).collect();
         ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let total_tokens: usize = responses.iter().map(|r| r.tokens.len()).sum();
         let mut shared_ttfts: Vec<f64> = Vec::new();
         let mut cold_ttfts: Vec<f64> = Vec::new();
-        for r in responses {
+        for r in &ok {
             if r.prefill_tokens_skipped > 0 {
                 shared_ttfts.push(r.ttft_s);
             } else {
@@ -280,19 +549,22 @@ impl ServeStats {
         cold_ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap());
         ServeStats {
             requests: responses.len(),
+            completed: ok.len(),
+            shed,
+            deadline_miss: miss,
+            cancelled,
             total_tokens,
             wall_s,
             tokens_per_s: total_tokens as f64 / wall_s.max(1e-12),
             p50_latency_s: pct(&latencies, 0.50),
             p99_latency_s: pct(&latencies, 0.99),
-            mean_queue_s: responses.iter().map(|r| r.queued_s).sum::<f64>()
-                / responses.len().max(1) as f64,
+            mean_queue_s: ok.iter().map(|r| r.queued_s).sum::<f64>() / ok.len().max(1) as f64,
             p50_ttft_s: pct(&ttfts, 0.50),
             p99_ttft_s: pct(&ttfts, 0.99),
             overflow_events: responses.iter().map(|r| r.overflow_events).sum(),
             arena_bytes: 0,
             prefix_hits: shared_ttfts.len(),
-            prefix_hit_rate: shared_ttfts.len() as f64 / responses.len().max(1) as f64,
+            prefix_hit_rate: shared_ttfts.len() as f64 / ok.len().max(1) as f64,
             prefill_tokens_skipped: responses.iter().map(|r| r.prefill_tokens_skipped).sum(),
             p50_ttft_shared_s: pct(&shared_ttfts, 0.50),
             p50_ttft_cold_s: pct(&cold_ttfts, 0.50),
@@ -300,6 +572,15 @@ impl ServeStats {
             cache_evictions: 0,
             telemetry: None,
         }
+    }
+
+    /// The overload-conservation invariant: every accepted submission
+    /// resolved to exactly one typed terminal response —
+    /// `submitted == completed + shed + deadline_miss + cancelled`.
+    /// `submitted` comes from [`ServeQueue::submitted_count`].
+    pub fn conserved(&self, submitted: u64) -> bool {
+        self.requests as u64 == submitted
+            && self.completed + self.shed + self.deadline_miss + self.cancelled == self.requests
     }
 
     /// Merge the per-engine telemetry summaries (histograms are
@@ -328,8 +609,8 @@ pub struct ServeConfig {
     pub kind: KvCacheKind,
     /// Per-step prefill chunk size AND shared prefill token budget:
     /// each ragged step carries at most this many prompt tokens,
-    /// handed out FCFS across admitting sequences. `usize::MAX` (or
-    /// anything ≥ the longest servable prompt) degenerates to
+    /// handed out round-robin across admitting sequences. `usize::MAX`
+    /// (or anything ≥ the longest servable prompt) degenerates to
     /// whole-prompt admission in a single ragged group. Token streams
     /// are bit-identical for every value — this knob trades
     /// time-to-first-token against per-step latency only.
@@ -355,6 +636,13 @@ pub struct ServeConfig {
     /// allocation-free). Benches and parity tests set 0 to force
     /// banding on tiny fixtures.
     pub attn_par_min: usize,
+    /// Scale the shared prefill budget down by the step's live decode
+    /// rows (`--fair-budget`, default on): step tokens — and hence
+    /// per-step latency — stay bounded by
+    /// `max(prefill_chunk, max_batch)` under admission storms, at the
+    /// cost of slower prefill when the batch is decode-heavy. Off
+    /// restores the fixed budget. Bit-identical tokens either way.
+    pub fair_budget: bool,
     /// Per-step telemetry (record ring + histograms). On by default:
     /// recording is allocation-free and adds one mutex round-trip per
     /// step. Turning it off removes the records, the histograms and
@@ -376,6 +664,7 @@ impl ServeConfig {
             prefix_cache: true,
             attn_threads: 1,
             attn_par_min: crate::model::PAR_ATTN_MIN_WORK,
+            fair_budget: true,
             telemetry: true,
             metrics_ring: DEFAULT_RING_CAPACITY,
         }
@@ -406,6 +695,12 @@ impl ServeConfig {
     /// banded sweep whenever more than one group is scheduled).
     pub fn with_attn_par_min_work(mut self, macs: usize) -> ServeConfig {
         self.attn_par_min = macs;
+        self
+    }
+
+    /// Decode-row-scaled prefill budget on/off (default on).
+    pub fn with_fair_budget(mut self, on: bool) -> ServeConfig {
+        self.fair_budget = on;
         self
     }
 
@@ -456,12 +751,37 @@ struct InFlight {
     overflow: u64,
     /// Prefill positions skipped via prefix-page adoption.
     skipped: usize,
+    /// Deadline the reaper enforces (admission check + every step).
+    deadline: Option<Instant>,
+    /// Cancellation handle the reaper polls (admission + every step).
+    cancel: Option<CancelToken>,
     phase: Phase,
 }
 
+/// Seal an in-flight sequence into its terminal [`Response`] — shared
+/// by normal retirement ([`Status::Ok`], full stream) and the
+/// deadline/cancel reaper (partial stream).
+fn finish(seq: InFlight, status: Status) -> Response {
+    let queued_s = seq.admitted.duration_since(seq.enqueued).as_secs_f64();
+    Response {
+        id: seq.id,
+        tokens: seq.emitted,
+        queued_s,
+        gen_s: seq.admitted.elapsed().as_secs_f64(),
+        ttft_s: seq
+            .first_token
+            .map(|t| t.duration_since(seq.enqueued).as_secs_f64())
+            .unwrap_or(queued_s),
+        overflow_events: seq.overflow,
+        prefill_tokens_skipped: seq.skipped,
+        status,
+    }
+}
+
 /// The deterministic, single-threaded step scheduler one engine thread
-/// drives — exposed so tests (`tests/chunked_prefill.rs`) and benches
-/// can run admission schedules step by step without queues or threads.
+/// drives — exposed so tests (`tests/chunked_prefill.rs`,
+/// `tests/overload.rs`) and benches can run admission schedules step by
+/// step without queues or threads.
 ///
 /// Lifecycle: [`StepEngine::admit`] requests into free slots (they
 /// start in the `Prefilling` phase — admission does **no** model
@@ -490,6 +810,19 @@ pub struct StepEngine<'m> {
     /// Queue depth sampled at the latest admission poll
     /// ([`StepEngine::note_queue_depth`]).
     queue_depth: u32,
+    /// Running max of every sampled queue depth — the step records'
+    /// high-water mark (monotone per engine stream).
+    queue_hwm: u32,
+    /// Rotates the round-robin start of prefill chunk grants by one
+    /// sequence per executed step.
+    rr_cursor: usize,
+    /// Terminal events (queue sheds / deadline misses / cancellations)
+    /// observed since the last emitted step record — carried on the
+    /// next record (a zero-token drain record if the engine is empty)
+    /// so the record stream's sums equal the response-status counts.
+    pending_shed: u64,
+    pending_miss: u32,
+    pending_cancel: u32,
     /// Last recorded [pages_shared, pages_deduped, cache_evictions] —
     /// step records carry per-step deltas of the arena's lifetime
     /// counters.
@@ -520,6 +853,11 @@ impl<'m> StepEngine<'m> {
             metrics: cfg.telemetry.then(|| SharedMetrics::new(cfg.metrics_ring)),
             step_idx: 0,
             queue_depth: 0,
+            queue_hwm: 0,
+            rr_cursor: 0,
+            pending_shed: 0,
+            pending_miss: 0,
+            pending_cancel: 0,
             prefix_snap: [0; 3],
         }
     }
@@ -553,20 +891,42 @@ impl<'m> StepEngine<'m> {
     }
 
     /// Record the pending-queue depth observed at this iteration's
-    /// admission poll; the next step record carries it.
+    /// admission poll; the next step record carries it (and folds it
+    /// into the high-water mark).
     pub fn note_queue_depth(&mut self, depth: usize) {
         self.queue_depth = depth.min(u32::MAX as usize) as u32;
+        self.queue_hwm = self.queue_hwm.max(self.queue_depth);
+    }
+
+    /// Credit `n` queue sheds to this engine's telemetry stream (pair
+    /// with [`ServeQueue::take_shed_delta`] for exactly-once reporting
+    /// across engines).
+    pub fn note_shed(&mut self, n: u64) {
+        self.pending_shed += n;
     }
 
     /// Admit a request into a free slot. Costs no model work: the
     /// prompt is clipped to the window and queued for chunked prefill
-    /// inside the step loop. Zero-token requests complete immediately.
+    /// inside the step loop. Zero-token requests complete immediately;
+    /// already-cancelled or deadline-expired requests resolve to their
+    /// typed terminal response without spending a slot.
     pub fn admit(&mut self, req: Request, enqueued: Instant) {
         let admitted = Instant::now();
         let queued_s = admitted.duration_since(enqueued).as_secs_f64();
-        if req.max_new_tokens == 0 {
+        let dead_on_arrival = if req.cancel.as_ref().is_some_and(|c| c.is_cancelled()) {
+            self.pending_cancel += 1;
+            Some(Status::Cancelled)
+        } else if req.deadline.is_some_and(|d| admitted >= d) {
+            self.pending_miss += 1;
+            Some(Status::DeadlineMiss)
+        } else if req.max_new_tokens == 0 {
             // nothing to generate: complete without spending a prefill
             // or an arena slot
+            Some(Status::Ok)
+        } else {
+            None
+        };
+        if let Some(status) = dead_on_arrival {
             self.finished.push(Response {
                 id: req.id,
                 tokens: Vec::new(),
@@ -575,6 +935,7 @@ impl<'m> StepEngine<'m> {
                 ttft_s: queued_s,
                 overflow_events: 0,
                 prefill_tokens_skipped: 0,
+                status,
             });
             return;
         }
@@ -605,20 +966,58 @@ impl<'m> StepEngine<'m> {
             first_token: None,
             overflow: adopted_ovf,
             skipped: mapped,
+            deadline: req.deadline,
+            cancel: req.cancel,
             phase: Phase::Prefilling { next_pos: mapped },
         });
     }
 
-    /// One scheduler iteration: sample / slide / retire every
-    /// `Decoding` sequence, then compose and execute one ragged step
-    /// ({prefill chunks + decode rows}) over everything still in
-    /// flight. No-op when nothing is in flight.
+    /// One scheduler iteration: reap cancelled / deadline-expired
+    /// sequences, sample / slide / retire every `Decoding` sequence,
+    /// then compose and execute one ragged step ({prefill chunks +
+    /// decode rows}) over everything still in flight. No-op when
+    /// nothing is in flight (modulo flushing pending terminal events
+    /// into a drain record).
     pub fn step(&mut self) {
-        // telemetry clocks the full scheduler iteration (sample/slide/
-        // retire + compose + kernel + routing); gated so a telemetry-
-        // off engine doesn't even read the clock
+        // telemetry clocks the full scheduler iteration (reap + sample/
+        // slide/retire + compose + kernel + routing); gated so a
+        // telemetry-off engine doesn't even read the clock
         let t0 = self.metrics.is_some().then(Instant::now);
         let vocab = self.model.cfg.vocab;
+
+        // -- reap doomed work before spending any model time on it.
+        // Mid-prefill drops release the slot and unref its pages —
+        // private pages return to the pool, adopted/cached pages fall
+        // back to the prefix cache's own refcount hold. The partial
+        // token stream (a prefix of the uncontended stream, by row
+        // independence) ships on the typed terminal response.
+        if self.active.iter().any(|s| s.deadline.is_some() || s.cancel.is_some()) {
+            let now = Instant::now();
+            let mut i = 0;
+            while i < self.active.len() {
+                let seq = &self.active[i];
+                let status = if seq.cancel.as_ref().is_some_and(|c| c.is_cancelled()) {
+                    Some(Status::Cancelled)
+                } else if seq.deadline.is_some_and(|d| now >= d) {
+                    Some(Status::DeadlineMiss)
+                } else {
+                    None
+                };
+                match status {
+                    Some(status) => {
+                        let seq = self.active.swap_remove(i);
+                        self.arena.release(seq.slot);
+                        match status {
+                            Status::Cancelled => self.pending_cancel += 1,
+                            _ => self.pending_miss += 1,
+                        }
+                        self.finished.push(finish(seq, status));
+                    }
+                    None => i += 1,
+                }
+            }
+        }
+
         // -- sample, slide, retire (Decoding sequences only; a
         // Prefilling sequence has no logits to sample yet)
         let mut i = 0;
@@ -671,57 +1070,88 @@ impl<'m> StepEngine<'m> {
             if seq.emitted.len() >= seq.max_new {
                 let seq = self.active.swap_remove(i);
                 self.arena.release(seq.slot);
-                let queued_s = seq.admitted.duration_since(seq.enqueued).as_secs_f64();
-                self.finished.push(Response {
-                    id: seq.id,
-                    tokens: seq.emitted,
-                    queued_s,
-                    gen_s: seq.admitted.elapsed().as_secs_f64(),
-                    ttft_s: seq
-                        .first_token
-                        .map(|t| t.duration_since(seq.enqueued).as_secs_f64())
-                        .unwrap_or(queued_s),
-                    overflow_events: seq.overflow,
-                    prefill_tokens_skipped: seq.skipped,
-                });
+                self.finished.push(finish(seq, Status::Ok));
             } else {
                 i += 1;
             }
         }
 
-        // -- compose the ragged step: one decode row per Decoding
-        // sequence (always — admissions can never stall the batch),
-        // plus prefill chunks under the shared FCFS token budget
+        // -- compose the ragged step. Pass 1: one decode row per
+        // Decoding sequence, in active order (always — admissions can
+        // never stall the batch).
         self.step_tokens.clear();
         self.groups.clear();
         self.group_seq.clear();
-        let mut budget = self.cfg.prefill_chunk.max(1);
         let (mut decode_rows, mut prefill_rows, mut prefill_chunks) = (0u32, 0u32, 0u32);
         for (si, seq) in self.active.iter().enumerate() {
-            match seq.phase {
-                Phase::Decoding => {
-                    let start = self.step_tokens.len();
-                    self.step_tokens.push(*seq.context.last().unwrap());
-                    self.groups.push(RowGroup { slot: seq.slot, start, len: 1 });
-                    self.group_seq.push(si);
-                    decode_rows += 1;
-                }
-                Phase::Prefilling { next_pos } => {
-                    if budget == 0 {
-                        continue; // starved this step; next step's budget is fresh
-                    }
-                    let take = budget.min(seq.context.len() - next_pos);
-                    let start = self.step_tokens.len();
-                    self.step_tokens.extend_from_slice(&seq.context[next_pos..next_pos + take]);
-                    self.groups.push(RowGroup { slot: seq.slot, start, len: take });
-                    self.group_seq.push(si);
-                    budget -= take;
-                    prefill_rows += take as u32;
-                    prefill_chunks += 1;
-                }
+            if matches!(seq.phase, Phase::Decoding) {
+                let start = self.step_tokens.len();
+                self.step_tokens.push(*seq.context.last().unwrap());
+                self.groups.push(RowGroup { slot: seq.slot, start, len: 1 });
+                self.group_seq.push(si);
+                decode_rows += 1;
+            }
+        }
+        // fair budget: the decode rows above already claimed their
+        // share of the step, so shrink the prefill budget by them —
+        // step tokens (and step latency) stay bounded by
+        // max(prefill_chunk, max_batch) however hard admissions storm
+        let mut budget = if self.cfg.fair_budget {
+            self.cfg.prefill_chunk.max(1).saturating_sub(decode_rows as usize).max(1)
+        } else {
+            self.cfg.prefill_chunk.max(1)
+        };
+        // Pass 2: hand prefill chunks out round-robin, rotating the
+        // start by one sequence per executed step, so a giant prompt
+        // shares the budget instead of monopolizing it. Grant order
+        // only — every row is computed independently, so tokens and
+        // attribution are unchanged by the rotation.
+        let n = self.active.len();
+        let start_at = if n == 0 { 0 } else { self.rr_cursor % n };
+        for k in 0..n {
+            if budget == 0 {
+                break; // starved this step; next step's budget is fresh
+            }
+            let si = (start_at + k) % n;
+            let seq = &self.active[si];
+            if let Phase::Prefilling { next_pos } = seq.phase {
+                let take = budget.min(seq.context.len() - next_pos);
+                let start = self.step_tokens.len();
+                self.step_tokens.extend_from_slice(&seq.context[next_pos..next_pos + take]);
+                self.groups.push(RowGroup { slot: seq.slot, start, len: take });
+                self.group_seq.push(si);
+                budget -= take;
+                prefill_rows += take as u32;
+                prefill_chunks += 1;
             }
         }
         if self.groups.is_empty() {
+            // nothing to execute — but terminal events observed since
+            // the last record (sheds with an idle engine, a reap that
+            // emptied the batch) must still reach the record stream:
+            // emit a zero-token drain record so per-step sums stay
+            // equal to the response-status counts
+            if self.pending_shed != 0 || self.pending_miss != 0 || self.pending_cancel != 0 {
+                if let Some(m) = &self.metrics {
+                    let rec = StepRecord {
+                        step: self.step_idx,
+                        wall_ns: t0.map(|t| t.elapsed().as_nanos() as u64).unwrap_or(0),
+                        arena_resident_bytes: self.arena.bytes() as u64,
+                        arena_capacity_bytes: self.arena.capacity_bytes() as u64,
+                        queue_depth: self.queue_depth,
+                        queue_hwm: self.queue_hwm,
+                        shed: self.pending_shed.min(u32::MAX as u64) as u32,
+                        deadline_miss: self.pending_miss,
+                        cancelled: self.pending_cancel,
+                        ..StepRecord::default()
+                    };
+                    m.with(|mm| mm.record(rec));
+                    self.step_idx += 1;
+                }
+                self.pending_shed = 0;
+                self.pending_miss = 0;
+                self.pending_cancel = 0;
+            }
             return;
         }
         self.group_ovf.clear();
@@ -759,6 +1189,7 @@ impl<'m> StepEngine<'m> {
                 seq.phase = Phase::Decoding;
             }
         }
+        self.rr_cursor = self.rr_cursor.wrapping_add(1);
 
         // -- telemetry: one record per executed ragged step, built from
         // state the step already computed (per-group overflow fold, the
@@ -788,11 +1219,18 @@ impl<'m> StepEngine<'m> {
                 prefix_evictions: (evicted - self.prefix_snap[2]) as u32,
                 attn_bands: self.scratch.last_attn_bands() as u32,
                 queue_depth: self.queue_depth,
+                queue_hwm: self.queue_hwm,
+                shed: self.pending_shed.min(u32::MAX as u64) as u32,
+                deadline_miss: self.pending_miss,
+                cancelled: self.pending_cancel,
             };
             self.prefix_snap = [shared, deduped, evicted];
             m.with(|mm| mm.record(rec));
             self.step_idx += 1;
         }
+        self.pending_shed = 0;
+        self.pending_miss = 0;
+        self.pending_cancel = 0;
     }
 
     /// Drain completed responses (unordered; the queue sorts on drain).
@@ -918,10 +1356,12 @@ pub fn serve_telemetry(
 
 /// One engine thread: drive a [`StepEngine`] off the shared queue —
 /// block when idle, poll admissions (bounded by free slots) when the
-/// batch has work, one ragged step per iteration. With a sink attached
-/// (and telemetry on), a drainer thread streams the step records; it
-/// is finished — final drain + flush — after the engine stops
-/// stepping, so the stream is complete before the stats return.
+/// batch has work, one ragged step per iteration. Queue sheds are
+/// credited to this engine's telemetry exactly once via
+/// [`ServeQueue::take_shed_delta`]. With a sink attached (and
+/// telemetry on), a drainer thread streams the step records; it is
+/// finished — final drain + flush — after the engine stops stepping,
+/// so the stream is complete before the stats return.
 fn run_engine(
     model: &Transformer,
     queue: &ServeQueue,
@@ -947,9 +1387,15 @@ fn run_engine(
             engine.admit(req, enqueued);
         }
         engine.note_queue_depth(queue.depth());
+        engine.note_shed(queue.take_shed_delta());
         engine.step();
         queue.complete(engine.take_finished());
     }
+    // sheds can land while this engine idles in pop_batch (a rejected
+    // submit never enqueues, so no admission follows it) — take the
+    // final delta and let an empty step flush it as a drain record
+    engine.note_shed(queue.take_shed_delta());
+    engine.step();
     let mut stats = EngineStats::of(engine.arena());
     if let Some(d) = drainer {
         d.finish();
@@ -991,7 +1437,8 @@ mod tests {
         let m = model();
         let q = ServeQueue::new();
         for id in 0..12 {
-            q.submit(Request { id, prompt: vec![1, 2, 3], max_new_tokens: 5 });
+            q.submit(Request { id, prompt: vec![1, 2, 3], max_new_tokens: 5, ..Request::default() })
+                .unwrap();
         }
         q.close();
         let t0 = Instant::now();
@@ -1000,12 +1447,16 @@ mod tests {
         assert_eq!(responses.len(), 12);
         for (i, r) in responses.iter().enumerate() {
             assert_eq!(r.id, i as u64);
+            assert_eq!(r.status, Status::Ok);
             assert_eq!(r.tokens.len(), 5);
             assert!(r.ttft_s >= r.queued_s, "ttft precedes admission");
             assert!(r.ttft_s <= r.queued_s + r.gen_s + 1e-9);
         }
         let stats = ServeStats::from_responses(&responses, t0.elapsed().as_secs_f64());
         assert_eq!(stats.requests, 12);
+        assert_eq!(stats.completed, 12);
+        assert_eq!((stats.shed, stats.deadline_miss, stats.cancelled), (0, 0, 0));
+        assert!(stats.conserved(q.submitted_count()));
         assert_eq!(stats.total_tokens, 60);
         assert!(stats.p99_latency_s >= stats.p50_latency_s);
         assert!(stats.p99_ttft_s >= stats.p50_ttft_s);
@@ -1015,7 +1466,8 @@ mod tests {
     fn serving_matches_direct_generation() {
         let m = model();
         let q = ServeQueue::new();
-        q.submit(Request { id: 0, prompt: vec![4, 5, 6], max_new_tokens: 8 });
+        q.submit(Request { id: 0, prompt: vec![4, 5, 6], max_new_tokens: 8, ..Request::default() })
+            .unwrap();
         q.close();
         serve(&m, &q, 1, 1);
         let responses = q.drain();
@@ -1028,7 +1480,8 @@ mod tests {
     /// staggered retirements and per-slot window slides emits, for every
     /// request, exactly the tokens sequential greedy decode emits —
     /// whatever the prefill chunk size (whole-prompt, the default, or a
-    /// pathological 1-token trickle).
+    /// pathological 1-token trickle), with the fair budget and the
+    /// round-robin rotation live.
     #[test]
     fn continuous_batching_is_token_exact() {
         let m = model();
@@ -1041,32 +1494,36 @@ mod tests {
             let plen = 1 + ((off * 5) % 22);
             let prompt: Vec<u16> = (0..plen).map(|i| ((i * 7 + off) % 32) as u16).collect();
             let max_new_tokens = 3 + ((off * 11) % 25);
-            reqs.push(Request { id, prompt, max_new_tokens });
+            reqs.push(Request { id, prompt, max_new_tokens, ..Request::default() });
         }
         for chunk in [1usize, 3, DEFAULT_PREFILL_CHUNK, usize::MAX] {
-            let q = ServeQueue::new();
-            for r in &reqs {
-                q.submit(r.clone());
-            }
-            q.close();
-            // one engine, 3 slots, 10 requests → continuous mid-flight
-            // admission pressure the whole run
-            serve_config(
-                &m,
-                &q,
-                1,
-                ServeConfig::new(3, KvCacheKind::F32).with_prefill_chunk(chunk),
-            );
-            let responses = q.drain();
-            assert_eq!(responses.len(), reqs.len());
-            for (resp, req) in responses.iter().zip(reqs.iter()) {
-                assert_eq!(resp.id, req.id);
-                let want = direct(&m, &req.prompt, req.max_new_tokens);
-                assert_eq!(
-                    resp.tokens, want,
-                    "request {} diverged from sequential greedy decode at chunk {}",
-                    req.id, chunk
+            for fair in [true, false] {
+                let q = ServeQueue::new();
+                for r in &reqs {
+                    q.submit(r.clone()).unwrap();
+                }
+                q.close();
+                // one engine, 3 slots, 10 requests → continuous mid-flight
+                // admission pressure the whole run
+                serve_config(
+                    &m,
+                    &q,
+                    1,
+                    ServeConfig::new(3, KvCacheKind::F32)
+                        .with_prefill_chunk(chunk)
+                        .with_fair_budget(fair),
                 );
+                let responses = q.drain();
+                assert_eq!(responses.len(), reqs.len());
+                for (resp, req) in responses.iter().zip(reqs.iter()) {
+                    assert_eq!(resp.id, req.id);
+                    let want = direct(&m, &req.prompt, req.max_new_tokens);
+                    assert_eq!(
+                        resp.tokens, want,
+                        "request {} diverged from sequential greedy decode at chunk {} fair {}",
+                        req.id, chunk, fair
+                    );
+                }
             }
         }
     }
@@ -1088,13 +1545,14 @@ mod tests {
                     id,
                     prompt: (0..plen).map(|i| ((i * 7 + off) % 32) as u16).collect(),
                     max_new_tokens: 3 + ((off * 11) % 22),
+                    ..Request::default()
                 }
             })
             .collect();
         for chunk in [2usize, usize::MAX] {
             let q = ServeQueue::new();
             for r in &reqs {
-                q.submit(r.clone());
+                q.submit(r.clone()).unwrap();
             }
             q.close();
             serve_config(&m, &q, 1, ServeConfig::new(3, kind).with_prefill_chunk(chunk));
@@ -1123,17 +1581,26 @@ mod tests {
         let cfg = ServeConfig::new(2, KvCacheKind::F32).with_prefill_chunk(2);
         let mut eng = StepEngine::new(&m, cfg);
         // sequence A: short prompt, decoding after 1 step
-        eng.admit(Request { id: 0, prompt: vec![1, 2], max_new_tokens: 12 }, Instant::now());
+        eng.admit(
+            Request { id: 0, prompt: vec![1, 2], max_new_tokens: 12, ..Request::default() },
+            Instant::now(),
+        );
         eng.step(); // A's whole prompt (2 ≤ chunk)
         assert_eq!(eng.prefilling(), 0);
-        // sequence B: 15-token prompt → 8 chunked steps at chunk 2
+        // sequence B: 15-token prompt → many chunked steps (the fair
+        // budget shrinks the chunk to 1 while A decodes)
         let prompt_b: Vec<u16> = (0..15).map(|i| (i % 32) as u16).collect();
-        eng.admit(Request { id: 1, prompt: prompt_b.clone(), max_new_tokens: 3 }, Instant::now());
+        eng.admit(
+            Request { id: 1, prompt: prompt_b.clone(), max_new_tokens: 3, ..Request::default() },
+            Instant::now(),
+        );
         let mut a_tokens_during_b_prefill = 0usize;
         while eng.prefilling() > 0 {
             eng.step();
-            let a = eng.active.iter().find(|s| s.id == 0).unwrap();
-            a_tokens_during_b_prefill = a.emitted.len();
+            // A may retire mid-prefill (12 tokens < B's chunked steps)
+            if let Some(a) = eng.active.iter().find(|s| s.id == 0) {
+                a_tokens_during_b_prefill = a_tokens_during_b_prefill.max(a.emitted.len());
+            }
         }
         assert!(
             a_tokens_during_b_prefill >= 5,
@@ -1172,7 +1639,7 @@ mod tests {
                 let mut eng = StepEngine::new(&m, cfg);
                 // leader: prefills + registers the shared prompt
                 eng.admit(
-                    Request { id: 0, prompt: sys.clone(), max_new_tokens: 4 },
+                    Request { id: 0, prompt: sys.clone(), max_new_tokens: 4, ..Request::default() },
                     Instant::now(),
                 );
                 while eng.prefilling() > 0 {
@@ -1182,7 +1649,12 @@ mod tests {
                 // both full pages and prefill covers only the tail
                 for id in 1..3u64 {
                     eng.admit(
-                        Request { id, prompt: sys.clone(), max_new_tokens: 4 },
+                        Request {
+                            id,
+                            prompt: sys.clone(),
+                            max_new_tokens: 4,
+                            ..Request::default()
+                        },
                         Instant::now(),
                     );
                 }
@@ -1231,12 +1703,15 @@ mod tests {
     fn zero_token_request_completes_empty() {
         let m = model();
         let q = ServeQueue::new();
-        q.submit(Request { id: 0, prompt: vec![1, 2], max_new_tokens: 0 });
-        q.submit(Request { id: 1, prompt: vec![1, 2], max_new_tokens: 4 });
+        q.submit(Request { id: 0, prompt: vec![1, 2], max_new_tokens: 0, ..Request::default() })
+            .unwrap();
+        q.submit(Request { id: 1, prompt: vec![1, 2], max_new_tokens: 4, ..Request::default() })
+            .unwrap();
         q.close();
         serve(&m, &q, 1, 2);
         let r = q.drain();
         assert_eq!(r[0].tokens.len(), 0);
+        assert_eq!(r[0].status, Status::Ok);
         assert_eq!(r[1].tokens, direct(&m, &[1, 2], 4));
     }
 
@@ -1245,7 +1720,8 @@ mod tests {
         let m = model();
         let q = ServeQueue::new();
         let long: Vec<u16> = (0..40).map(|i| i % 32).collect();
-        q.submit(Request { id: 0, prompt: long.clone(), max_new_tokens: 4 });
+        q.submit(Request { id: 0, prompt: long.clone(), max_new_tokens: 4, ..Request::default() })
+            .unwrap();
         q.close();
         serve(&m, &q, 1, 1);
         let r = q.drain();
@@ -1258,7 +1734,13 @@ mod tests {
         let m = model();
         for chunk in [3usize, usize::MAX] {
             let q = ServeQueue::new();
-            q.submit(Request { id: 0, prompt: vec![1, 2], max_new_tokens: 30 });
+            q.submit(Request {
+                id: 0,
+                prompt: vec![1, 2],
+                max_new_tokens: 30,
+                ..Request::default()
+            })
+            .unwrap();
             q.close();
             serve_config(
                 &m,
@@ -1270,6 +1752,203 @@ mod tests {
             assert_eq!(r[0].tokens.len(), 30, "generation must continue past max_seq");
             assert_eq!(r[0].tokens, direct(&m, &[1, 2], 30), "chunk {chunk}");
         }
+    }
+
+    /// Satellite fix: submitting after close is a typed error, not a
+    /// panic and not a silent enqueue — the request is not counted and
+    /// yields no response.
+    #[test]
+    fn submit_after_close_returns_typed_error() {
+        let q = ServeQueue::new();
+        q.submit(Request { id: 0, prompt: vec![1], max_new_tokens: 1, ..Request::default() })
+            .unwrap();
+        q.close();
+        let err = q
+            .submit(Request { id: 1, prompt: vec![1], max_new_tokens: 1, ..Request::default() })
+            .unwrap_err();
+        assert_eq!(err, SubmitError::Closed);
+        assert_eq!(q.submitted_count(), 1, "closed submits are not counted");
+        assert_eq!(q.depth(), 1, "closed submits are not enqueued");
+    }
+
+    /// Bounded admission, reject-newest: overflowing submits shed
+    /// deterministically, every submission still resolves to exactly
+    /// one typed response, and the conservation invariant holds.
+    #[test]
+    fn bounded_queue_sheds_newest_and_conserves() {
+        let m = model();
+        let q = ServeQueue::bounded(2, ShedPolicy::RejectNewest);
+        let results: Vec<bool> = (0..5u64)
+            .map(|id| {
+                q.submit(Request {
+                    id,
+                    prompt: vec![1, 2],
+                    max_new_tokens: 2,
+                    ..Request::default()
+                })
+                .is_ok()
+            })
+            .collect();
+        // no engine is draining yet: 2 fit, the 3 newest shed
+        assert_eq!(results, [true, true, false, false, false]);
+        assert_eq!(q.shed_count(), 3);
+        assert_eq!(q.depth_hwm(), 2, "bounded depth never exceeds the cap");
+        q.close();
+        serve(&m, &q, 1, 2);
+        let responses = q.drain();
+        assert_eq!(responses.len(), 5, "every accepted submit yields a terminal response");
+        let stats = ServeStats::from_responses(&responses, 1.0);
+        assert_eq!(stats.completed, 2);
+        assert_eq!(stats.shed, 3);
+        assert!(stats.conserved(q.submitted_count()));
+        for r in &responses {
+            match r.status {
+                Status::Ok => assert_eq!(r.tokens, direct(&m, &[1, 2], 2)),
+                Status::Shed => assert!(r.tokens.is_empty()),
+                s => panic!("unexpected status {s:?}"),
+            }
+        }
+    }
+
+    /// Bounded admission, reject-largest-prompt: the pending giant is
+    /// evicted for a smaller incoming request; an incoming giant sheds
+    /// itself.
+    #[test]
+    fn reject_largest_prompt_evicts_the_pending_giant() {
+        let q = ServeQueue::bounded(2, ShedPolicy::RejectLargestPrompt);
+        q.submit(Request { id: 0, prompt: vec![0; 10], max_new_tokens: 1, ..Request::default() })
+            .unwrap();
+        q.submit(Request { id: 1, prompt: vec![0; 2], max_new_tokens: 1, ..Request::default() })
+            .unwrap();
+        // incoming len 3 < largest pending (id 0, len 10) → evict it
+        assert!(q
+            .submit(Request { id: 2, prompt: vec![0; 3], max_new_tokens: 1, ..Request::default() })
+            .is_ok());
+        // incoming len 50 is itself the largest → shed incoming
+        assert_eq!(
+            q.submit(Request {
+                id: 3,
+                prompt: vec![0; 50],
+                max_new_tokens: 1,
+                ..Request::default()
+            }),
+            Err(SubmitError::QueueFull)
+        );
+        assert_eq!(q.shed_count(), 2);
+        assert_eq!(q.depth(), 2);
+        q.close();
+        let m = model();
+        serve(&m, &q, 1, 2);
+        let responses = q.drain();
+        assert_eq!(responses.len(), 4);
+        let statuses: Vec<Status> = responses.iter().map(|r| r.status).collect();
+        assert_eq!(
+            statuses,
+            [Status::Shed, Status::Ok, Status::Ok, Status::Shed],
+            "shed decisions are deterministic: the pending giant and the incoming giant"
+        );
+        assert!(ServeStats::from_responses(&responses, 1.0).conserved(q.submitted_count()));
+    }
+
+    /// Round-robin chunk grants: with a 1-token budget, a giant prompt
+    /// and a small prompt admitted together alternate grants, so the
+    /// small one reaches decoding in bounded steps instead of starving
+    /// behind the giant — and both stay token-exact.
+    #[test]
+    fn round_robin_prefill_prevents_giant_prompt_starvation() {
+        let m = model();
+        let cfg = ServeConfig::new(2, KvCacheKind::F32).with_prefill_chunk(1);
+        let mut eng = StepEngine::new(&m, cfg);
+        let big: Vec<u16> = (0..15).map(|i| (i % 32) as u16).collect();
+        let small: Vec<u16> = vec![3, 4, 5];
+        eng.admit(
+            Request { id: 0, prompt: big.clone(), max_new_tokens: 2, ..Request::default() },
+            Instant::now(),
+        );
+        eng.admit(
+            Request { id: 1, prompt: small.clone(), max_new_tokens: 2, ..Request::default() },
+            Instant::now(),
+        );
+        let mut steps = 0;
+        while eng
+            .active
+            .iter()
+            .any(|s| s.id == 1 && matches!(s.phase, Phase::Prefilling { .. }))
+        {
+            eng.step();
+            steps += 1;
+            assert!(steps <= 6, "round-robin grants must reach the small prompt");
+        }
+        assert!(
+            eng.active
+                .iter()
+                .any(|s| s.id == 0 && matches!(s.phase, Phase::Prefilling { .. })),
+            "the giant prompt must still be mid-prefill — it did not monopolize the budget"
+        );
+        while eng.has_work() {
+            eng.step();
+        }
+        let mut done = eng.take_finished();
+        done.sort_by_key(|r| r.id);
+        assert_eq!(done[0].tokens, direct(&m, &big, 2));
+        assert_eq!(done[1].tokens, direct(&m, &small, 2));
+    }
+
+    /// Cancellation mid-decode: the reaper resolves the sequence with a
+    /// partial, prefix-exact token stream and frees its slot.
+    #[test]
+    fn cancel_mid_decode_returns_partial_prefix_exact_tokens() {
+        let m = model();
+        let cfg = ServeConfig::new(1, KvCacheKind::F32).with_prefill_chunk(usize::MAX);
+        let mut eng = StepEngine::new(&m, cfg);
+        let tok = CancelToken::new();
+        eng.admit(
+            Request {
+                id: 0,
+                prompt: vec![1, 2],
+                max_new_tokens: 10,
+                cancel: Some(tok.clone()),
+                ..Request::default()
+            },
+            Instant::now(),
+        );
+        eng.step(); // whole-prompt prefill
+        eng.step(); // first decode sample
+        eng.step(); // second decode sample
+        tok.cancel();
+        eng.step(); // reaper fires before any further sampling
+        let done = eng.take_finished();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].status, Status::Cancelled);
+        assert_eq!(done[0].tokens.len(), 2, "two samples before the cancel");
+        let want = direct(&m, &[1, 2], 10);
+        assert_eq!(done[0].tokens[..], want[..2], "partial stream is prefix-exact");
+        assert_eq!(eng.free_slots(), 1, "slot released on cancellation");
+        assert!(!eng.has_work());
+    }
+
+    /// A request whose deadline already expired is refused at admission
+    /// without spending an arena slot.
+    #[test]
+    fn expired_deadline_is_refused_at_admission() {
+        let m = model();
+        let mut eng = StepEngine::new(&m, ServeConfig::new(2, KvCacheKind::F32));
+        eng.admit(
+            Request {
+                id: 0,
+                prompt: vec![1, 2],
+                max_new_tokens: 4,
+                deadline: Some(Instant::now()),
+                ..Request::default()
+            },
+            Instant::now(),
+        );
+        let done = eng.take_finished();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].status, Status::DeadlineMiss);
+        assert!(done[0].tokens.is_empty());
+        assert_eq!(eng.free_slots(), 2, "no slot spent on dead-on-arrival work");
+        assert_eq!(eng.arena().resident_pages(), 0, "no pages touched");
     }
 
     /// The merged telemetry histograms must tell the same story as the
@@ -1288,7 +1967,9 @@ mod tests {
                 id,
                 prompt: (0..1 + (off % 7)).map(|i| ((i * 5 + off) % 32) as u16).collect(),
                 max_new_tokens: 2 + (off % 9),
-            });
+                ..Request::default()
+            })
+            .unwrap();
         }
         q.close();
         let t0 = Instant::now();
@@ -1306,6 +1987,8 @@ mod tests {
         // decode rows = total tokens − one per request (the first token
         // is sampled from prefill logits, the last needs no decode row)
         assert_eq!(t.tpot_ns.count(), (stats.total_tokens - stats.requests) as u64);
+        // no overload events in this run — the v2 counters stay zero
+        assert_eq!((t.shed, t.deadline_miss, t.cancelled), (0, 0, 0));
         for (q_, sorted_s) in [(0.50, stats.p50_ttft_s), (0.99, stats.p99_ttft_s)] {
             let hist_bucket = LatHist::bucket_of(t.ttft_ns.quantile(q_));
             let sorted_bucket = LatHist::bucket_of((sorted_s * 1e9) as u64);
@@ -1316,7 +1999,8 @@ mod tests {
         }
         // and telemetry can be switched off entirely
         let q2 = ServeQueue::new();
-        q2.submit(Request { id: 0, prompt: vec![1, 2], max_new_tokens: 3 });
+        q2.submit(Request { id: 0, prompt: vec![1, 2], max_new_tokens: 3, ..Request::default() })
+            .unwrap();
         q2.close();
         let engines =
             serve_config(&m, &q2, 1, ServeConfig::new(1, KvCacheKind::F32).with_telemetry(false));
@@ -1336,6 +2020,7 @@ mod tests {
                 overflow_events: i % 5,
                 // first half shared (and faster), second half cold
                 prefill_tokens_skipped: if i < 50 { 8 } else { 0 },
+                status: Status::Ok,
             })
             .collect();
         let s = ServeStats::from_responses(&resp, 1.0);
@@ -1344,6 +2029,9 @@ mod tests {
         assert!((s.p50_ttft_s - 0.25).abs() < 0.02);
         assert!((s.p99_ttft_s - 0.495).abs() < 0.02);
         assert_eq!(s.total_tokens, 200);
+        assert_eq!(s.completed, 100);
+        assert!(s.conserved(100));
+        assert!(!s.conserved(101), "a lost submission must break conservation");
         // per-request counts are disjoint, so the total is their sum
         assert_eq!(s.overflow_events, (0..100u64).map(|i| i % 5).sum::<u64>());
         assert_eq!(s.arena_bytes, 0, "arena bytes are caller-filled");
@@ -1354,5 +2042,24 @@ mod tests {
         assert!((s.p50_ttft_shared_s - 0.125).abs() < 0.01);
         assert!((s.p50_ttft_cold_s - 0.375).abs() < 0.01);
         assert_eq!(s.pages_shared, 0, "pages shared are caller-filled");
+
+        // non-Ok responses: excluded from latency percentiles, counted
+        // in the status partition
+        let mut with_shed = resp;
+        with_shed.push(Response {
+            id: 100,
+            tokens: Vec::new(),
+            queued_s: 9.0,
+            gen_s: 0.0,
+            ttft_s: 9.0,
+            overflow_events: 0,
+            prefill_tokens_skipped: 0,
+            status: Status::Shed,
+        });
+        let s2 = ServeStats::from_responses(&with_shed, 1.0);
+        assert_eq!(s2.shed, 1);
+        assert_eq!(s2.completed, 100);
+        assert!(s2.conserved(101));
+        assert!((s2.p99_latency_s - 0.99).abs() < 0.02, "shed wait must not poison latency");
     }
 }

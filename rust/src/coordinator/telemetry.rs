@@ -35,8 +35,11 @@ use std::thread::JoinHandle;
 use std::time::Duration;
 
 /// Version tag stamped on every emitted record; bump on any
-/// field-set change so downstream consumers can dispatch.
-pub const SCHEMA_VERSION: u32 = 1;
+/// field-set change so downstream consumers can dispatch. v2 added the
+/// overload-control counters (`shed`, `deadline_miss`, `cancelled`,
+/// `queue_hwm`); consumers (`check_jsonl.py`, `metrics_report.py`)
+/// still accept v1 streams.
+pub const SCHEMA_VERSION: u32 = 2;
 
 /// Default ring capacity (records buffered between drains) — the
 /// `--metrics-ring` default. At one record per ragged step, 4096 steps
@@ -92,6 +95,18 @@ pub struct StepRecord {
     /// Pending (unadmitted) queue depth sampled at this step's
     /// admission poll.
     pub queue_depth: u32,
+    /// Running high-water mark of the sampled queue depth — monotone
+    /// non-decreasing within one engine's record stream (v2).
+    pub queue_hwm: u32,
+    /// Requests shed by the bounded queue's capacity policy since the
+    /// previous record (credited to exactly one engine's stream) (v2).
+    pub shed: u32,
+    /// Requests dropped on an expired deadline since the previous
+    /// record — at admission or mid-flight (v2).
+    pub deadline_miss: u32,
+    /// Requests dropped via their cancel token since the previous
+    /// record (v2).
+    pub cancelled: u32,
 }
 
 impl StepRecord {
@@ -116,7 +131,11 @@ impl StepRecord {
             .set("prefix_dedups", self.prefix_dedups.into())
             .set("prefix_evictions", self.prefix_evictions.into())
             .set("attn_bands", self.attn_bands.into())
-            .set("queue_depth", self.queue_depth.into());
+            .set("queue_depth", self.queue_depth.into())
+            .set("queue_hwm", self.queue_hwm.into())
+            .set("shed", self.shed.into())
+            .set("deadline_miss", self.deadline_miss.into())
+            .set("cancelled", self.cancelled.into());
         o
     }
 }
@@ -242,6 +261,15 @@ pub struct MetricsSummary {
     pub overflow_linear: u64,
     /// Total quantized-KV attention overflow events.
     pub overflow_attn: u64,
+    /// Total requests shed by the bounded queue (v2).
+    pub shed: u64,
+    /// Total requests dropped on an expired deadline (v2).
+    pub deadline_miss: u64,
+    /// Total requests dropped via their cancel token (v2).
+    pub cancelled: u64,
+    /// Queue-depth high-water mark (max over records; max-merged
+    /// across engines) (v2).
+    pub queue_hwm: u64,
     /// Step wall-time histogram, nanoseconds.
     pub step_ns: LatHist,
     /// Time-to-first-token histogram, nanoseconds (requests that
@@ -261,6 +289,10 @@ impl MetricsSummary {
         self.tokens += other.tokens;
         self.overflow_linear += other.overflow_linear;
         self.overflow_attn += other.overflow_attn;
+        self.shed += other.shed;
+        self.deadline_miss += other.deadline_miss;
+        self.cancelled += other.cancelled;
+        self.queue_hwm = self.queue_hwm.max(other.queue_hwm);
         self.step_ns.merge(&other.step_ns);
         self.ttft_ns.merge(&other.ttft_ns);
         self.tpot_ns.merge(&other.tpot_ns);
@@ -284,6 +316,10 @@ pub struct StepMetrics {
     tokens: u64,
     overflow_linear: u64,
     overflow_attn: u64,
+    shed: u64,
+    deadline_miss: u64,
+    cancelled: u64,
+    queue_hwm: u64,
     step_ns: LatHist,
     ttft_ns: LatHist,
     tpot_ns: LatHist,
@@ -301,6 +337,10 @@ impl StepMetrics {
             tokens: 0,
             overflow_linear: 0,
             overflow_attn: 0,
+            shed: 0,
+            deadline_miss: 0,
+            cancelled: 0,
+            queue_hwm: 0,
             step_ns: LatHist::new(),
             ttft_ns: LatHist::new(),
             tpot_ns: LatHist::new(),
@@ -323,6 +363,10 @@ impl StepMetrics {
         self.tokens += rec.tokens as u64;
         self.overflow_linear += rec.overflow_linear;
         self.overflow_attn += rec.overflow_attn;
+        self.shed += rec.shed as u64;
+        self.deadline_miss += rec.deadline_miss as u64;
+        self.cancelled += rec.cancelled as u64;
+        self.queue_hwm = self.queue_hwm.max(rec.queue_hwm as u64);
         let cap = self.ring.len();
         if self.len == cap {
             self.ring[self.head] = rec;
@@ -377,6 +421,10 @@ impl StepMetrics {
             tokens: self.tokens,
             overflow_linear: self.overflow_linear,
             overflow_attn: self.overflow_attn,
+            shed: self.shed,
+            deadline_miss: self.deadline_miss,
+            cancelled: self.cancelled,
+            queue_hwm: self.queue_hwm,
             step_ns: self.step_ns,
             ttft_ns: self.ttft_ns,
             tpot_ns: self.tpot_ns,
@@ -698,6 +746,8 @@ mod tests {
             "arena_capacity_bytes",
             "arena_resident_bytes",
             "attn_bands",
+            "cancelled",
+            "deadline_miss",
             "decode_rows",
             "overflow_attn",
             "overflow_linear",
@@ -707,7 +757,9 @@ mod tests {
             "prefix_evictions",
             "prefix_hits",
             "queue_depth",
+            "queue_hwm",
             "schema_version",
+            "shed",
             "step",
             "tokens",
             "wall_ns",
@@ -723,7 +775,7 @@ mod tests {
             let v = Json::parse(line).expect("every line parses");
             let keys: Vec<&str> = v.as_obj().unwrap().keys().map(|k| k.as_str()).collect();
             assert_eq!(keys, golden, "field set drifted without a schema bump");
-            assert_eq!(v.get("schema_version").unwrap().as_usize(), Some(1));
+            assert_eq!(v.get("schema_version").unwrap().as_usize(), Some(2));
         }
         assert_eq!(Json::parse(lines[0]).unwrap().get("step").unwrap().as_usize(), Some(7));
     }
@@ -793,11 +845,11 @@ mod tests {
         let mut a = StepMetrics::new(8);
         let mut b = StepMetrics::new(8);
         for i in 0..5 {
-            a.record(rec(i));
+            a.record(StepRecord { shed: 1, queue_hwm: 10 + i as u32, ..rec(i) });
             a.record_ttft(500 + i);
         }
         for i in 0..3 {
-            b.record(rec(i));
+            b.record(StepRecord { deadline_miss: 2, cancelled: 1, queue_hwm: 40, ..rec(i) });
         }
         let mut s = a.summary();
         s.merge(&b.summary());
@@ -806,5 +858,11 @@ mod tests {
         assert_eq!(s.step_ns.count(), 8);
         assert_eq!(s.ttft_ns.count(), 5);
         assert_eq!(s.tpot_ns.count(), 8 * 2);
+        // v2 overload counters: terminal events sum, the high-water
+        // mark max-merges
+        assert_eq!(s.shed, 5);
+        assert_eq!(s.deadline_miss, 6);
+        assert_eq!(s.cancelled, 3);
+        assert_eq!(s.queue_hwm, 40);
     }
 }

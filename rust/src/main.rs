@@ -307,7 +307,8 @@ fn cmd_sensitivity(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     use axe::coordinator::report::render_telemetry_report;
     use axe::coordinator::serve::{
-        serve_telemetry, Request, ServeConfig, ServeQueue, ServeStats, DEFAULT_PREFILL_CHUNK,
+        serve_telemetry, Request, ServeConfig, ServeQueue, ServeStats, ShedPolicy,
+        DEFAULT_PREFILL_CHUNK,
     };
     use axe::coordinator::telemetry::{SinkSpec, DEFAULT_FLUSH_EVERY, DEFAULT_RING_CAPACITY};
     use axe::model::{KvArena, KvCacheKind, KvQuantSpec, DEFAULT_KV_PAGE};
@@ -404,7 +405,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // and per-request overflow counts are bit-identical at every value.
     let attn_threads = args.usize_or("attn-threads", 0);
     // --metrics <path|->: stream one JSON object per executed ragged
-    // step (schema v1) to a JSONL file — `<path>.<i>` per engine at
+    // step (schema v2) to a JSONL file — `<path>.<i>` per engine at
     // --workers > 1 — or to stdout with `-`. Off by default; the
     // in-memory histograms below are on either way.
     // --metrics-flush-every N: buffered records per off-thread drain;
@@ -412,13 +413,43 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let sink = args.get("metrics").map(SinkSpec::parse).unwrap_or_default();
     let flush_every = args.usize_or("metrics-flush-every", DEFAULT_FLUSH_EVERY);
     let metrics_ring = args.usize_or("metrics-ring", DEFAULT_RING_CAPACITY);
-    let queue = ServeQueue::new();
+    // --queue-cap N: bound the pending queue at N requests (0 =
+    // unbounded); overflow is shed per --shed-policy and every shed
+    // request still resolves to a typed response. --deadline-ms N
+    // attaches a wall-clock deadline to every request (0 = off);
+    // expired work is dropped at admission or mid-step. --fair-budget
+    // scales the shared prefill budget by live decode rows (default
+    // on). Tokens of accepted-and-finished requests are bit-identical
+    // under every setting.
+    let queue_cap = args.usize_or("queue-cap", 0);
+    let shed_policy = match args.str_or("shed-policy", "newest").as_str() {
+        "newest" => ShedPolicy::RejectNewest,
+        "largest" => ShedPolicy::RejectLargestPrompt,
+        s => return Err(anyhow!("--shed-policy must be newest or largest (got {s})")),
+    };
+    let deadline_ms = args.u64_or("deadline-ms", 0);
+    let fair_budget = match args.str_or("fair-budget", "on").as_str() {
+        "on" | "true" | "1" => true,
+        "off" | "false" | "0" => false,
+        s => return Err(anyhow!("--fair-budget must be on or off (got {s})")),
+    };
+    let queue = if queue_cap == 0 {
+        ServeQueue::new()
+    } else {
+        ServeQueue::bounded(queue_cap, shed_policy)
+    };
     for id in 0..n_requests as u64 {
         let start = (id as usize * 37) % (val.len() - seq);
-        queue.submit(Request {
+        let deadline = (deadline_ms > 0)
+            .then(|| std::time::Instant::now() + std::time::Duration::from_millis(deadline_ms));
+        // a full queue sheds by design: the queue files the typed
+        // Shed response, so a rejected submit needs no handling here
+        let _ = queue.submit(Request {
             id,
             prompt: val[start..start + seq / 2].to_vec(),
             max_new_tokens: new_tokens,
+            deadline,
+            ..Request::default()
         });
     }
     queue.close();
@@ -433,6 +464,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .with_kv_page(kv_page)
             .with_prefix_cache(prefix_cache)
             .with_attn_threads(attn_threads)
+            .with_fair_budget(fair_budget)
             .with_metrics_ring(metrics_ring),
         &sink,
         flush_every,
@@ -445,6 +477,29 @@ fn cmd_serve(args: &Args) -> Result<()> {
     stats.fill_telemetry(&engine_stats);
     let f32_bytes = KvArena::footprint_paged(&model.cfg, max_batch, KvCacheKind::F32, kv_page);
     println!("requests      : {}", stats.requests);
+    println!(
+        "admission     : {} completed / {} shed / {} deadline-missed / {} cancelled \
+         (queue cap {}, hwm {}, policy {:?})",
+        stats.completed,
+        stats.shed,
+        stats.deadline_miss,
+        stats.cancelled,
+        if queue_cap == 0 { "off".to_string() } else { queue_cap.to_string() },
+        queue.depth_hwm(),
+        shed_policy,
+    );
+    // conservation is the overload-safety contract: every submitted
+    // request resolved to exactly one typed response
+    if !stats.conserved(queue.submitted_count()) {
+        return Err(anyhow!(
+            "conservation violated: {} submitted != {} completed + {} shed + {} missed + {} cancelled",
+            queue.submitted_count(),
+            stats.completed,
+            stats.shed,
+            stats.deadline_miss,
+            stats.cancelled
+        ));
+    }
     println!("generated     : {} tokens in {:.2}s", stats.total_tokens, stats.wall_s);
     println!("throughput    : {:.1} tok/s", stats.tokens_per_s);
     println!("latency p50   : {:.1} ms", stats.p50_latency_s * 1e3);
@@ -512,7 +567,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     if let SinkSpec::Jsonl(path) = &sink {
         println!(
-            "metrics       : step records streamed to {} (schema v1{})",
+            "metrics       : step records streamed to {} (schema v2{})",
             path.display(),
             if workers > 1 { ", one file per engine" } else { "" }
         );

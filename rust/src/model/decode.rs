@@ -339,6 +339,12 @@ impl KvArena {
         self.pool.allocated()
     }
 
+    /// Pages on the pool's free list — the complement of
+    /// [`KvArena::resident_pages`] (release/cancellation accounting).
+    pub fn free_pages(&self) -> usize {
+        self.pool.free_pages()
+    }
+
     /// Full pages mapped read-only into slots via prefix adoption.
     pub fn pages_shared(&self) -> u64 {
         self.pages_adopted

@@ -88,6 +88,13 @@ impl PagePool {
         self.n_pages - self.free.len()
     }
 
+    /// Pages on the free list right now — the complement of
+    /// [`PagePool::allocated`]. Cancellation tests assert a reaped
+    /// sequence's pages come back here.
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
     /// Pop a free page (refcount 1, overflow attribution reset). `None`
     /// when the pool is exhausted — the arena reacts by flushing the
     /// prefix cache and retrying.

@@ -157,7 +157,7 @@ fn random_schedule(rng: &mut Rng, n_req: usize) -> (Vec<Request>, Vec<usize>) {
         let plen = rng.int_in(1, 22) as usize;
         let prompt: Vec<u16> = (0..plen).map(|_| rng.int_in(0, 31) as u16).collect();
         let max_new_tokens = rng.int_in(1, 28) as usize;
-        reqs.push(Request { id, prompt, max_new_tokens });
+        reqs.push(Request { id, prompt, max_new_tokens, ..Request::default() });
     }
     (reqs, arrivals)
 }
@@ -303,7 +303,12 @@ fn shared_prefix_schedules_match_sharing_off_exactly() {
                     let tail = rng.int_in(0, 5) as usize;
                     let mut prompt = system.clone();
                     prompt.extend((0..tail).map(|_| rng.int_in(0, 31) as u16));
-                    Request { id, prompt, max_new_tokens: rng.int_in(1, 24) as usize }
+                    Request {
+                        id,
+                        prompt,
+                        max_new_tokens: rng.int_in(1, 24) as usize,
+                        ..Request::default()
+                    }
                 })
                 .collect();
             let run = |sharing: bool| {
@@ -371,7 +376,7 @@ fn sixty_four_token_shared_prefix_across_eight_sequences() {
             let mut prompt = system.clone();
             let id = id as u16;
             prompt.extend([id % 32, (id * 7 + 2) % 32, (id * 13 + 1) % 32]);
-            Request { id: id as u64, prompt, max_new_tokens: 4 }
+            Request { id: id as u64, prompt, max_new_tokens: 4, ..Request::default() }
         })
         .collect();
     // leader at tick 0; followers arrive once it has retired, so the
@@ -505,6 +510,7 @@ fn slot_reuse_across_waves_stays_exact() {
             id,
             prompt: vec![(id as u16 * 3) % 32, (id as u16 * 5 + 1) % 32],
             max_new_tokens: 4 + (id as usize % 3),
+            ..Request::default()
         })
         .collect();
     let arrivals = vec![0usize; reqs.len()]; // all at once, 2 slots
@@ -536,7 +542,7 @@ fn telemetry_step_records_conserve_serve_totals() {
         .map(|i| {
             let plen = 1 + (i % 7);
             let prompt: Vec<u16> = (0..plen).map(|p| ((p * 5 + i * 3 + 1) % 32) as u16).collect();
-            Request { id: i as u64, prompt, max_new_tokens: 1 + (i % 6) }
+            Request { id: i as u64, prompt, max_new_tokens: 1 + (i % 6), ..Request::default() }
         })
         .collect();
     let arrivals: Vec<usize> = (0..reqs.len()).map(|i| i / 2).collect();

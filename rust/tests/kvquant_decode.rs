@@ -207,12 +207,13 @@ fn per_request_overflow_attribution_is_batch_invariant() {
             id,
             prompt: toks[id as usize * 7..id as usize * 7 + 3 + id as usize].to_vec(),
             max_new_tokens: 4 + (id as usize * 5) % 14,
+            ..Request::default()
         })
         .collect();
     let run = |max_batch: usize| {
         let q = ServeQueue::new();
         for r in &reqs {
-            q.submit(r.clone());
+            q.submit(r.clone()).unwrap();
         }
         q.close();
         serve_with(&m, &q, 1, max_batch, kv);
@@ -261,12 +262,13 @@ fn quantized_model_serves_end_to_end_on_quant_kv() {
                 id,
                 prompt: toks[id as usize * 16..id as usize * 16 + plen].to_vec(),
                 max_new_tokens: 6 + ((id as usize * 9) % 20), // some past the window → slides
+                ..Request::default()
             }
         })
         .collect();
     let q = ServeQueue::new();
     for r in &reqs {
-        q.submit(r.clone());
+        q.submit(r.clone()).unwrap();
     }
     q.close();
     let t0 = std::time::Instant::now();

@@ -1,0 +1,234 @@
+//! Overload-safety integration tests: seeded storms through the
+//! bounded admission queue must stay bounded (queue depth, step
+//! latency proxy via per-step token caps), conserve every submitted
+//! request into exactly one typed response, replay bit-identically
+//! per seed, and never perturb the token streams of the requests
+//! that survive.
+
+use std::time::Instant;
+
+use axe::bench_support::load::{run_load, schedule, solo_reference, FaultSpec, LoadSpec};
+use axe::coordinator::serve::{CancelToken, Request, ServeConfig, ShedPolicy, Status, StepEngine};
+use axe::model::{
+    random_transformer, Activation, KvCacheKind, KvQuantSpec, Transformer, TransformerConfig,
+};
+
+fn model() -> Transformer {
+    random_transformer(
+        TransformerConfig {
+            name: "overload".into(),
+            vocab: 32,
+            d_model: 16,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 32,
+            max_seq: 16,
+            act: Activation::Gelu,
+            parallel_residual: false,
+        },
+        5,
+    )
+}
+
+/// Burst storm against a small cap: depth stays ≤ cap, per-step work
+/// stays ≤ max(prefill_chunk, max_batch) under the fair budget, every
+/// request resolves, the whole run replays bit-identically for the
+/// seed, shed accounting agrees between responses and the step-record
+/// stream, and every surviving stream matches the solo oracle.
+#[test]
+fn bursty_storm_is_bounded_conserved_and_replayable() {
+    let m = model();
+    let cfg = ServeConfig::new(3, KvCacheKind::F32)
+        .with_prefill_chunk(4)
+        .with_kv_page(4)
+        .with_prefix_cache(true);
+    let spec = LoadSpec::bursty(24, 8, 2);
+    let events = schedule(&spec, 7);
+    let a = run_load(&m, cfg, 4, ShedPolicy::RejectNewest, &events, FaultSpec::default());
+    let b = run_load(&m, cfg, 4, ShedPolicy::RejectNewest, &events, FaultSpec::default());
+
+    assert!(a.conserved(), "submitted {} != responses {}", a.submitted, a.responses.len());
+    assert_eq!(a.submitted, 24);
+    assert!(a.shed > 0, "an 8-wide burst into cap 4 must shed");
+    assert!(a.depth_hwm <= 4, "bounded queue leaked past its cap: {}", a.depth_hwm);
+
+    // bit-exact replay: same seed → same shed decisions, same tokens
+    let key = |r: &axe::coordinator::serve::Response| (r.id, r.status as u8, r.tokens.clone());
+    let mut ka: Vec<_> = a.responses.iter().map(key).collect();
+    let mut kb: Vec<_> = b.responses.iter().map(key).collect();
+    ka.sort();
+    kb.sort();
+    assert_eq!(ka, kb, "same seed must replay the same outcomes");
+
+    // fair budget bounds per-step work even mid-storm
+    for rec in &a.records {
+        assert!(rec.tokens <= 4, "step {} ran {} tokens (> chunk)", rec.step, rec.tokens);
+        assert_eq!(rec.tokens, rec.decode_rows + rec.prefill_rows);
+    }
+    // queue_hwm is a running maximum → nondecreasing along the stream
+    let mut hwm = 0u32;
+    for rec in &a.records {
+        assert!(rec.queue_hwm >= hwm, "queue_hwm regressed at step {}", rec.step);
+        hwm = rec.queue_hwm;
+    }
+    // record-stream admission counters agree with the typed responses
+    let (ok, shed, miss, cancelled) = a.status_counts();
+    assert_eq!(a.records.iter().map(|r| r.shed as u64).sum::<u64>(), shed as u64);
+    assert_eq!(a.records.iter().map(|r| r.deadline_miss).sum::<u32>(), miss as u32);
+    assert_eq!(a.records.iter().map(|r| r.cancelled).sum::<u32>(), cancelled as u32);
+    assert_eq!(shed as u64, a.shed);
+    assert_eq!(ok + shed + miss + cancelled, a.responses.len());
+    let s = a.summary.expect("telemetry is on by default");
+    assert_eq!(s.shed, a.shed);
+    // the engine folds depths observed at its admission polls, which
+    // can miss the instantaneous peak the queue itself saw
+    assert!(s.queue_hwm <= a.depth_hwm as u64);
+
+    // survivors are bit-identical to running alone
+    for r in a.responses.iter().filter(|r| r.status == Status::Ok) {
+        let ev = &events[r.id as usize];
+        let solo = solo_reference(&m, cfg, &ev.req);
+        assert_eq!(r.tokens, solo.tokens, "overload changed request {}'s tokens", r.id);
+        assert_eq!(r.overflow_events, solo.overflow_events);
+    }
+}
+
+/// Open-loop Poisson arrivals across several seeds: conservation and
+/// survivor exactness hold for every trace, not just the bursty one.
+#[test]
+fn poisson_arrivals_conserve_across_seeds() {
+    let m = model();
+    let cfg = ServeConfig::new(2, KvCacheKind::F32).with_prefill_chunk(3).with_kv_page(4);
+    for seed in [1u64, 2, 3] {
+        let events = schedule(&LoadSpec::poisson(16, 1.5), seed);
+        let rep =
+            run_load(&m, cfg, 3, ShedPolicy::RejectLargestPrompt, &events, FaultSpec::default());
+        assert!(
+            rep.conserved(),
+            "seed {seed}: {} submitted, {} resolved",
+            rep.submitted,
+            rep.responses.len()
+        );
+        assert!(rep.depth_hwm <= 3, "seed {seed}: hwm {}", rep.depth_hwm);
+        for r in rep.responses.iter().filter(|r| r.status == Status::Ok) {
+            let solo = solo_reference(&m, cfg, &events[r.id as usize].req);
+            assert_eq!(r.tokens, solo.tokens, "seed {seed} request {}", r.id);
+        }
+    }
+}
+
+/// Cancelling mid-prefill must release the slot and every unshared
+/// page (shared prefix pages stay exactly while cached), on both KV
+/// backends, and the freed slot must serve the next request
+/// bit-identically to a cold engine.
+#[test]
+fn cancellation_mid_prefill_releases_slot_and_pages() {
+    let m = model();
+    for kind in [KvCacheKind::F32, KvCacheKind::Quant(KvQuantSpec::int8())] {
+        for cache in [false, true] {
+            let cfg = ServeConfig::new(2, kind)
+                .with_prefill_chunk(2)
+                .with_kv_page(4)
+                .with_prefix_cache(cache);
+            let mut eng = StepEngine::new(&m, cfg);
+            let free0 = eng.arena().free_pages();
+            let tok = CancelToken::new();
+            eng.admit(
+                Request {
+                    id: 0,
+                    prompt: (0..10u16).collect(),
+                    max_new_tokens: 2,
+                    cancel: Some(tok.clone()),
+                    ..Request::default()
+                },
+                Instant::now(),
+            );
+            eng.step();
+            assert_eq!(eng.prefilling(), 1, "10-token prompt at chunk 2 is still prefilling");
+            tok.cancel();
+            eng.step();
+            let done = eng.take_finished();
+            assert_eq!(done.len(), 1);
+            assert_eq!(done[0].status, Status::Cancelled);
+            assert!(done[0].tokens.is_empty(), "no token sampled mid-prefill");
+            assert_eq!(eng.free_slots(), 2, "cancellation must free the slot ({kind:?})");
+            let cached = eng.arena().prefix_cache_pages();
+            if cache {
+                assert_eq!(eng.arena().resident_pages(), cached);
+            } else {
+                assert_eq!(cached, 0);
+                assert_eq!(eng.arena().resident_pages(), 0);
+            }
+            let msg = format!("pages leaked ({kind:?}, cache {cache})");
+            assert_eq!(eng.arena().free_pages(), free0 - cached, "{msg}");
+
+            // the recycled slot serves the next request exactly
+            let req = Request {
+                id: 1,
+                prompt: vec![3, 1, 4, 1, 5],
+                max_new_tokens: 3,
+                ..Request::default()
+            };
+            eng.admit(req.clone(), Instant::now());
+            while eng.has_work() {
+                eng.step();
+            }
+            let done = eng.take_finished();
+            assert_eq!(done.len(), 1);
+            assert_eq!(done[0].status, Status::Ok);
+            let solo = solo_reference(&m, cfg, &req);
+            let msg = format!("slot reuse after cancel ({kind:?}, cache {cache})");
+            assert_eq!(done[0].tokens, solo.tokens, "{msg}");
+            assert_eq!(done[0].overflow_events, solo.overflow_events);
+        }
+    }
+}
+
+/// A request whose deadline already passed is refused at admission:
+/// typed response, no tokens, no slot or page spent.
+#[test]
+fn expired_deadline_is_refused_without_spending_a_slot() {
+    let m = model();
+    let cfg = ServeConfig::new(2, KvCacheKind::F32).with_kv_page(4);
+    let mut eng = StepEngine::new(&m, cfg);
+    let d = Instant::now();
+    eng.admit(
+        Request {
+            id: 9,
+            prompt: vec![1, 2, 3],
+            max_new_tokens: 4,
+            deadline: Some(d),
+            ..Request::default()
+        },
+        d,
+    );
+    let done = eng.take_finished();
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].status, Status::DeadlineMiss);
+    assert!(done[0].tokens.is_empty());
+    assert_eq!(eng.free_slots(), 2, "dead-on-arrival must not consume a slot");
+    assert_eq!(eng.arena().resident_pages(), 0);
+    assert!(!eng.has_work());
+}
+
+/// Slow-step fault injection: with every step slowed past the
+/// deadline, an admitted request misses mid-flight — and the run
+/// still conserves and reports the miss through telemetry.
+#[test]
+fn slow_steps_force_mid_flight_deadline_miss() {
+    let m = model();
+    let cfg = ServeConfig::new(2, KvCacheKind::F32).with_prefill_chunk(1).with_kv_page(4);
+    let mut spec = LoadSpec::poisson(1, 1.0);
+    spec.prompt_lens = (8, 8);
+    spec.output_lens = (4, 4);
+    spec.deadline_ms = 10;
+    let events = schedule(&spec, 11);
+    let faults = FaultSpec { slow_every: 1, slow_ms: 25 };
+    let rep = run_load(&m, cfg, 4, ShedPolicy::RejectNewest, &events, faults);
+    assert!(rep.conserved());
+    let (ok, shed, miss, cancelled) = rep.status_counts();
+    assert_eq!((ok, shed, miss, cancelled), (0, 0, 1, 0), "25ms steps must blow a 10ms deadline");
+    let s = rep.summary.expect("telemetry is on by default");
+    assert_eq!(s.deadline_miss, 1);
+    assert_eq!(rep.records.iter().map(|r| r.deadline_miss).sum::<u32>(), 1);
+}

@@ -192,12 +192,13 @@ fn continuous_batched_serving_is_token_exact_on_quantized_model() {
                 id,
                 prompt: toks[id as usize * 16..id as usize * 16 + plen].to_vec(),
                 max_new_tokens: 6 + ((id as usize * 9) % 20),
+                ..Request::default()
             }
         })
         .collect();
     let q = ServeQueue::new();
     for r in &reqs {
-        q.submit(r.clone());
+        q.submit(r.clone()).unwrap();
     }
     q.close();
     let ovf_before = m.overflow_events();
