@@ -3,13 +3,15 @@
 
 Every line must be a self-contained JSON object carrying the complete
 StepRecord field set for its declared schema version (no more, no
-less) — v1 streams from older builds and v2 streams with the overload
-counters (shed, deadline_miss, cancelled, queue_hwm) both pass; steps
-must be strictly increasing, every counter a non-negative integer,
-each record's row total must decompose into decode + prefill rows,
-and v2's queue_hwm must dominate queue_depth and never regress along
-the stream. Exits non-zero with a file:line diagnostic on the first
-violation.
+less) — v1 streams from older builds, v2 streams with the overload
+counters (shed, deadline_miss, cancelled, queue_hwm) and v3 streams
+with the speculative-decoding counters (spec_proposed, spec_accepted,
+draft_rows, overflow_draft) all pass; steps must be strictly
+increasing, every counter a non-negative integer, each record's row
+total must decompose into decode + prefill rows, v2+'s queue_hwm must
+dominate queue_depth and never regress along the stream, and v3's
+spec_accepted can never exceed spec_proposed. Exits non-zero with a
+file:line diagnostic on the first violation.
 
 Usage: check_jsonl.py <metrics.jsonl> [min_records]
 """
@@ -38,7 +40,14 @@ REQUIRED_V1 = {
 
 REQUIRED_V2 = REQUIRED_V1 | {"cancelled", "deadline_miss", "queue_hwm", "shed"}
 
-REQUIRED = {1: REQUIRED_V1, 2: REQUIRED_V2}
+REQUIRED_V3 = REQUIRED_V2 | {
+    "draft_rows",
+    "overflow_draft",
+    "spec_accepted",
+    "spec_proposed",
+}
+
+REQUIRED = {1: REQUIRED_V1, 2: REQUIRED_V2, 3: REQUIRED_V3}
 
 
 def fail(path, line_no, msg):
@@ -110,6 +119,13 @@ def main():
                         f"queue_hwm {rec['queue_hwm']} regressed (prev {prev_hwm})",
                     )
                 prev_hwm = rec["queue_hwm"]
+            if version >= 3 and rec["spec_accepted"] > rec["spec_proposed"]:
+                fail(
+                    path,
+                    line_no,
+                    f"spec_accepted {rec['spec_accepted']} > "
+                    f"spec_proposed {rec['spec_proposed']}",
+                )
             n += 1
     if n < min_records:
         print(f"{path}: only {n} records, expected at least {min_records}", file=sys.stderr)

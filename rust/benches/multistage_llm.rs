@@ -20,7 +20,10 @@
 //! and an in-run before/after of the attention hot loop
 //! (`attend_one_query_quant_ref`, the PR 3 per-element-gather +
 //! per-call-alloc implementation, vs the scratch/bulk-gather fast
-//! path). If `BENCH_decode.baseline.json` exists (override with
+//! path), and a self-speculative decoding probe (`"speculative"`):
+//! tokens/s and accept rate vs draft depth k × draft accumulator
+//! width on the int8 KV backend, bit-exactness vs the k = 1 run
+//! asserted in-run. If `BENCH_decode.baseline.json` exists (override with
 //! AXE_BENCH_BASELINE), its content is embedded verbatim under
 //! `"baseline"` so the perf trajectory can be tracked across PRs; CI
 //! uploads the JSON as an artifact on every run.
@@ -301,6 +304,79 @@ fn ragged_attn_probe(model: &Transformer, val: &[u16], kind: KvCacheKind) -> Rag
         }
     }
     RaggedAttnProbe { attn_threads: axe::linalg::num_threads(), gen_tokens, points }
+}
+
+/// Self-speculative decoding: one (draft depth, draft width) row.
+struct SpeculativePoint {
+    k: usize,
+    /// Draft inner-register width in bits; 0 = full width (exact draft).
+    draft_bits: u32,
+    tokens_per_s: f64,
+    accept_rate: f64,
+    proposed: u64,
+    accepted: u64,
+    draft_rows: u64,
+}
+
+/// Tokens/s and acceptance vs draft depth × draft accumulator width on
+/// the int8 KV backend, against the non-speculative (k = 1) run of the
+/// same workload. Token streams are bit-identical at every setting
+/// (asserted in-run; property-tested in tests/speculative.rs) — the
+/// probe measures the draft-work-vs-accepted-tokens trade only.
+struct SpeculativeProbe {
+    in_flight: usize,
+    baseline_tok_s: f64,
+    points: Vec<SpeculativePoint>,
+}
+
+fn speculative_probe(
+    model: &Transformer,
+    make_requests: &dyn Fn() -> Vec<Request>,
+    kind: KvCacheKind,
+) -> SpeculativeProbe {
+    let in_flight = 16usize;
+    type Served = Vec<axe::coordinator::serve::Response>;
+    let run = |k: usize, bits: Option<u32>| -> (f64, MetricsSummary, Served) {
+        let queue = ServeQueue::new();
+        for r in make_requests() {
+            queue.submit(r).expect("unbounded queue accepts every submit");
+        }
+        queue.close();
+        let t0 = std::time::Instant::now();
+        let engines = serve_config(
+            model,
+            &queue,
+            1,
+            ServeConfig::new(in_flight, kind).with_speculate(k, bits),
+        );
+        let responses = queue.drain();
+        let tokens: usize = responses.iter().map(|r| r.tokens.len()).sum();
+        let tok_s = tokens as f64 / t0.elapsed().as_secs_f64();
+        (tok_s, engines[0].telemetry.expect("telemetry on by default"), responses)
+    };
+    let (baseline_tok_s, _, want) = run(1, None);
+    let mut points = Vec::new();
+    for &k in &[2usize, 4, 8] {
+        for &bits in &[0u32, 8] {
+            let (tok_s, t, resp) = run(k, if bits == 0 { None } else { Some(bits) });
+            for (a, b) in resp.iter().zip(want.iter()) {
+                assert_eq!(
+                    a.tokens, b.tokens,
+                    "speculative serving must stay bit-exact (k {k}, draft bits {bits})"
+                );
+            }
+            points.push(SpeculativePoint {
+                k,
+                draft_bits: bits,
+                tokens_per_s: tok_s,
+                accept_rate: t.spec_accepted as f64 / t.spec_proposed.max(1) as f64,
+                proposed: t.spec_proposed,
+                accepted: t.spec_accepted,
+                draft_rows: t.draft_rows,
+            });
+        }
+    }
+    SpeculativeProbe { in_flight, baseline_tok_s, points }
 }
 
 fn ttft_probe(model: &Transformer, val: &[u16]) -> TtftProbe {
@@ -723,6 +799,35 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    // ---- self-speculative decoding: draft k tokens on a narrowed
+    // accumulator, verify in one full-width ragged step. Tokens are
+    // bit-identical to k = 1 at every setting (asserted in-run); the
+    // probe prices the draft-work-vs-accepted-tokens trade.
+    let spec = speculative_probe(&qmodel, &make_requests, kv_kind);
+    println!(
+        "\nself-speculative decoding (int8 KV @ {} in-flight, non-speculative {:.1} tok/s):",
+        spec.in_flight, spec.baseline_tok_s
+    );
+    for p in &spec.points {
+        let width = if p.draft_bits == 0 {
+            "full".to_string()
+        } else {
+            format!("{:>2}b", p.draft_bits)
+        };
+        println!(
+            "  k {:>2}, draft {:>4} : {:>7.1} tok/s ({:.2}x), accepted {}/{} ({:.0}%), \
+             {} draft rows",
+            p.k,
+            width,
+            p.tokens_per_s,
+            p.tokens_per_s / spec.baseline_tok_s,
+            p.accepted,
+            p.proposed,
+            100.0 * p.accept_rate,
+            p.draft_rows
+        );
+    }
+
     // ---- machine-readable results (CI uploads this as an artifact).
     // Default paths anchor at the workspace root (one level above this
     // package's manifest), independent of the bench's CWD.
@@ -745,6 +850,7 @@ fn main() -> anyhow::Result<()> {
         &ttft,
         &shared,
         &ragged,
+        &spec,
         &baseline_path,
     );
     std::fs::write(&out_path, &json)?;
@@ -836,6 +942,7 @@ fn render_json(
     ttft: &TtftProbe,
     shared: &SharedPrefixProbe,
     ragged: &RaggedAttnProbe,
+    spec: &SpeculativeProbe,
     baseline_path: &str,
 ) -> String {
     let mut s = String::new();
@@ -958,6 +1065,28 @@ fn render_json(
             p.parallel_tok_s,
             p.parallel_tok_s / p.serial_tok_s,
             if i + 1 < ragged.points.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]},\n");
+    // draft_bits 0 = full-width (exact) draft
+    s.push_str(&format!(
+        "  \"speculative\": {{\"in_flight\": {}, \"kv\": \"int8\", \
+         \"baseline_tok_s\": {:.1}, \"configs\": [\n",
+        spec.in_flight, spec.baseline_tok_s
+    ));
+    for (i, p) in spec.points.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"k\": {}, \"draft_bits\": {}, \"tokens_per_s\": {:.1}, \
+             \"accept_rate\": {:.4}, \"proposed\": {}, \"accepted\": {}, \
+             \"draft_rows\": {}}}{}\n",
+            p.k,
+            p.draft_bits,
+            p.tokens_per_s,
+            p.accept_rate,
+            p.proposed,
+            p.accepted,
+            p.draft_rows,
+            if i + 1 < spec.points.len() { "," } else { "" }
         ));
     }
     s.push_str("  ]},\n");

@@ -83,6 +83,19 @@ pub fn render_telemetry_report(t: &MetricsSummary) -> String {
         "  admission   : {} shed / {} deadline-missed / {} cancelled (queue hwm {})",
         t.shed, t.deadline_miss, t.cancelled, t.queue_hwm
     ));
+    // only speculative runs propose draft tokens; the line is noise
+    // otherwise
+    if t.spec_proposed > 0 {
+        out.push_str(&format!(
+            "\n  speculative : {} / {} draft tokens accepted ({:.0}% accept rate, \
+             {} draft rows, {} draft overflow events)",
+            t.spec_accepted,
+            t.spec_proposed,
+            100.0 * t.spec_accepted as f64 / t.spec_proposed as f64,
+            t.draft_rows,
+            t.overflow_draft
+        ));
+    }
     out
 }
 
@@ -149,6 +162,24 @@ mod tests {
         assert!(s.contains("10 linear + 0 attention"), "{s}");
         assert!(s.contains("admission   : 2 shed / 5 deadline-missed / 0 cancelled"), "{s}");
         assert!(s.contains("queue hwm 7"), "{s}");
+        // no speculative line unless the run proposed draft tokens
+        assert!(!s.contains("speculative"), "{s}");
+        m.record(StepRecord {
+            step: 5,
+            decode_rows: 3,
+            tokens: 3,
+            spec_proposed: 3,
+            spec_accepted: 2,
+            draft_rows: 3,
+            overflow_draft: 4,
+            ..StepRecord::default()
+        });
+        let s = render_telemetry_report(&m.summary());
+        assert!(
+            s.contains("speculative : 2 / 3 draft tokens accepted (67% accept rate"),
+            "{s}"
+        );
+        assert!(s.contains("3 draft rows, 4 draft overflow events"), "{s}");
     }
 
     #[test]

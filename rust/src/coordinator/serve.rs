@@ -72,13 +72,38 @@
 //! prefill chunks, decode rows and (on the quantized-KV backend,
 //! [`serve_with`]) attention matmuls produced — not a batch-window
 //! bound.
+//!
+//! **Self-speculative decoding** (`--speculate-k`). The narrow-register
+//! integer datapath is a free draft model: with `speculate_k > 1` each
+//! decoding sequence extends its committed sample into a depth-`k`
+//! chunk by running extra 1-row rounds at a narrower inner accumulator
+//! width ([`RaggedOpts::draft`] — same weights, codes and scales, so
+//! the draft costs zero extra memory), rolls the draft K/V appends
+//! back ([`KvArena::truncate_tail`]; draft rows never touch the page
+//! fill ledgers), and re-encodes the whole chunk **full-width** as one
+//! chunk-causal verify group with per-row logits
+//! ([`RaggedOpts::verify`]). Greedy acceptance keeps the longest
+//! matching prefix, so the emitted stream — and, because attribution
+//! counts accepted verify rows only, each response's overflow count —
+//! is **bit-identical to non-speculative decode by construction**
+//! (`tests/speculative.rs`). Speculation trades step *composition*
+//! only: more rows per step when drafts hit, wasted verify rows when
+//! they miss (`spec_accepted / spec_proposed` in the step records).
+//!
+//! **Sampling** (`--temperature/--top-k/--top-p/--seed`). Decode
+//! sampling is pluggable via [`SampleSpec`]: draws are keyed per
+//! `(seed, request id, position)` so sampled streams are
+//! batch-composition-invariant and replayable, exactly like the greedy
+//! default (`tests/sampling.rs`). Speculative mode requires greedy —
+//! its acceptance rule *is* the greedy argmax.
 
 use crate::coordinator::telemetry::{
     spawn_drainer, EventSink, MetricsSummary, SharedMetrics, SinkSpec, StepRecord,
     DEFAULT_FLUSH_EVERY, DEFAULT_RING_CAPACITY,
 };
 use crate::model::{
-    argmax, DecodeScratch, KvArena, KvCacheKind, RowGroup, Transformer, DEFAULT_KV_PAGE,
+    argmax, DecodeScratch, KvArena, KvCacheKind, RaggedOpts, RowGroup, SampleSpec, Transformer,
+    DEFAULT_KV_PAGE,
 };
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -652,6 +677,26 @@ pub struct ServeConfig {
     /// slack between the engine and its off-thread sink drainer before
     /// oldest records are overwritten (drop-counted).
     pub metrics_ring: usize,
+    /// Self-speculative chunk depth (`--speculate-k`): each decoding
+    /// sequence proposes up to `speculate_k - 1` draft tokens per step
+    /// on the narrowed datapath and verifies the whole chunk in one
+    /// full-width chunk-causal group. `≤ 1` disables speculation.
+    /// Token streams and per-request overflow counts are bit-identical
+    /// to non-speculative decode at every depth — the knob trades step
+    /// composition (and wasted verify rows on draft misses) only.
+    pub speculate_k: usize,
+    /// Inner accumulator register width of the draft rounds
+    /// (`--draft-acc-bits`; clamped to the datapath's own width, so
+    /// `None` — or anything at least as wide — makes the draft exact
+    /// and every proposal accept). Narrower drafts are cheaper models
+    /// of the same weights: saturation skews their argmax, costing
+    /// acceptance rate, never correctness.
+    pub draft_bits: Option<u32>,
+    /// Decode sampling spec (`--temperature/--top-k/--top-p/--seed`);
+    /// greedy by default. Draws are keyed per (seed, request id,
+    /// position), so sampled streams are batch-composition-invariant.
+    /// Speculative mode (`speculate_k > 1`) requires greedy.
+    pub sample: SampleSpec,
 }
 
 impl ServeConfig {
@@ -667,6 +712,9 @@ impl ServeConfig {
             fair_budget: true,
             telemetry: true,
             metrics_ring: DEFAULT_RING_CAPACITY,
+            speculate_k: 1,
+            draft_bits: None,
+            sample: SampleSpec::greedy(),
         }
     }
 
@@ -713,6 +761,21 @@ impl ServeConfig {
     /// Telemetry ring capacity in records (clamped to ≥ 1).
     pub fn with_metrics_ring(mut self, records: usize) -> ServeConfig {
         self.metrics_ring = records.max(1);
+        self
+    }
+
+    /// Speculative chunk depth and draft register width (`k ≤ 1`
+    /// disables speculation; see the field docs).
+    pub fn with_speculate(mut self, k: usize, draft_bits: Option<u32>) -> ServeConfig {
+        self.speculate_k = k.max(1);
+        self.draft_bits = draft_bits;
+        self
+    }
+
+    /// Decode sampling spec (greedy by default). Speculative mode
+    /// requires greedy — asserted at engine construction.
+    pub fn with_sampling(mut self, sample: SampleSpec) -> ServeConfig {
+        self.sample = sample;
         self
     }
 }
@@ -792,6 +855,20 @@ pub struct StepEngine<'m> {
     cfg: ServeConfig,
     arena: KvArena,
     scratch: DecodeScratch,
+    /// Draft-round workspace (speculative mode only): the narrowed
+    /// passes run over their own scratch, so the verify pass's per-row
+    /// overflow counters, logits and attention-share telemetry in
+    /// `scratch` stay readable after the step.
+    draft_scratch: Option<DecodeScratch>,
+    /// Flat per-sequence draft chunks, stride `speculate_k`, indexed by
+    /// position in `active` (stable within a step): entry 0 is the
+    /// committed sample, the rest are narrow-register proposals.
+    spec_chunk: Vec<u16>,
+    /// Live chunk depth per `active` index (0 while not decoding).
+    spec_len: Vec<usize>,
+    /// Reused candidate buffer for sampled decode (presized to vocab,
+    /// so sampling stays on the zero-allocation steady state).
+    sample_buf: Vec<(f32, u32)>,
     active: Vec<InFlight>,
     finished: Vec<Response>,
     // reused ragged-step composition buffers (allocation-free loop)
@@ -823,6 +900,14 @@ pub struct StepEngine<'m> {
     pending_shed: u64,
     pending_miss: u32,
     pending_cancel: u32,
+    /// Speculation counters of the step being composed: draft tokens
+    /// proposed / accepted, draft rows executed, draft-pass overflow
+    /// events (work-done telemetry — per-request attribution counts
+    /// accepted verify rows only).
+    pending_proposed: u32,
+    pending_accepted: u32,
+    pending_draft_rows: u32,
+    pending_draft_ovf: u64,
     /// Last recorded [pages_shared, pages_deduped, cache_evictions] —
     /// step records carry per-step deltas of the arena's lifetime
     /// counters.
@@ -832,18 +917,42 @@ pub struct StepEngine<'m> {
 impl<'m> StepEngine<'m> {
     pub fn new(model: &'m Transformer, cfg: ServeConfig) -> StepEngine<'m> {
         let max_batch = cfg.max_batch.max(1);
-        let mut scratch = DecodeScratch::for_serve(&model.cfg, max_batch, cfg.prefill_chunk);
+        let k = cfg.speculate_k.max(1);
+        assert!(
+            k <= 1 || cfg.sample.is_greedy(),
+            "speculative decoding requires greedy sampling — its acceptance rule is the argmax"
+        );
+        // a speculative step stacks up to k verify rows per decoding
+        // sequence, so the main workspace is presized to that wider
+        // ragged high-water mark
+        let mut scratch = DecodeScratch::for_serve(&model.cfg, max_batch * k, cfg.prefill_chunk);
         // resolve the thread count once and presize the per-thread
         // attention pool here, so the step loop never allocates scratch
         let threads =
             if cfg.attn_threads == 0 { crate::linalg::num_threads() } else { cfg.attn_threads };
         scratch.set_attn_threads(&model.cfg, threads);
         scratch.set_attn_par_min_work(cfg.attn_par_min);
+        let draft_scratch = (k > 1).then(|| {
+            // draft rounds are all-1-row-group steps: one row per
+            // decoding sequence, no prefill chunks
+            let mut s = DecodeScratch::for_serve(&model.cfg, max_batch, 1);
+            s.set_attn_threads(&model.cfg, threads);
+            s.set_attn_par_min_work(cfg.attn_par_min);
+            s
+        });
         StepEngine {
             model,
             cfg,
             arena: KvArena::with_kind_paged(model, max_batch, cfg.kind, cfg.kv_page),
             scratch,
+            draft_scratch,
+            spec_chunk: vec![0; max_batch * k],
+            spec_len: vec![0; max_batch],
+            sample_buf: if cfg.sample.is_greedy() {
+                Vec::new()
+            } else {
+                Vec::with_capacity(model.cfg.vocab)
+            },
             active: Vec::with_capacity(max_batch),
             finished: Vec::new(),
             step_tokens: Vec::new(),
@@ -858,6 +967,10 @@ impl<'m> StepEngine<'m> {
             pending_shed: 0,
             pending_miss: 0,
             pending_cancel: 0,
+            pending_proposed: 0,
+            pending_accepted: 0,
+            pending_draft_rows: 0,
+            pending_draft_ovf: 0,
             prefix_snap: [0; 3],
         }
     }
@@ -1052,7 +1165,15 @@ impl<'m> StepEngine<'m> {
                 i += 1;
                 continue;
             }
-            let next = argmax(&seq.logits) as u16;
+            // seeded sampling is keyed per (request id, emitted count):
+            // a pure function of per-request state, so the draw — and
+            // hence the stream — is invariant to batch composition
+            let next = self.cfg.sample.sample_with(
+                &seq.logits,
+                seq.id,
+                seq.emitted.len() as u64,
+                &mut self.sample_buf,
+            ) as u16;
             if seq.first_token.is_none() {
                 let now = Instant::now();
                 seq.first_token = Some(now);
@@ -1076,9 +1197,80 @@ impl<'m> StepEngine<'m> {
             }
         }
 
-        // -- compose the ragged step. Pass 1: one decode row per
+        // -- speculative draft rounds: every decoding sequence extends
+        // the sample it just committed into a depth-L chunk on the
+        // narrowed datapath, batched as one 1-row group per sequence
+        // per round. Draft rows append K/V like any step row but skip
+        // the page fill ledgers; the rollback below restores the arena
+        // byte for byte before the full-width verify re-encodes the
+        // whole chunk at the same positions.
+        let k = self.cfg.speculate_k;
+        let speculating = k > 1;
+        if speculating {
+            let max_seq = self.model.cfg.max_seq;
+            self.spec_len.iter_mut().for_each(|l| *l = 0);
+            for (si, seq) in self.active.iter().enumerate() {
+                if !matches!(seq.phase, Phase::Decoding) {
+                    continue;
+                }
+                // chunk depth L = committed sample + up to k-1 drafts,
+                // capped by the window and by remaining tokens so full
+                // acceptance leaves at least one token for the next
+                // sample pass (retirement stays in one place) and the
+                // verify group never overflows the slot
+                let remaining = seq.max_new - seq.emitted.len();
+                let space = max_seq - self.arena.len(seq.slot);
+                self.spec_len[si] = k.min(remaining).min(space);
+                self.spec_chunk[si * k] = *seq.context.last().unwrap();
+            }
+            let draft =
+                self.draft_scratch.as_mut().expect("speculating engine owns a draft workspace");
+            for round in 1..k {
+                self.step_tokens.clear();
+                self.groups.clear();
+                self.group_seq.clear();
+                for (si, seq) in self.active.iter().enumerate() {
+                    if self.spec_len[si] > round {
+                        let start = self.step_tokens.len();
+                        self.step_tokens.push(self.spec_chunk[si * k + round - 1]);
+                        self.groups.push(RowGroup { slot: seq.slot, start, len: 1 });
+                        self.group_seq.push(si);
+                    }
+                }
+                if self.groups.is_empty() {
+                    break;
+                }
+                self.group_ovf.clear();
+                self.group_ovf.resize(self.groups.len(), 0);
+                self.model.decode_step_ragged_opts(
+                    &self.step_tokens,
+                    &self.groups,
+                    &mut self.arena,
+                    &mut self.group_ovf,
+                    draft,
+                    RaggedOpts::draft(self.cfg.draft_bits),
+                );
+                self.pending_draft_rows += self.groups.len() as u32;
+                self.pending_draft_ovf += self.group_ovf.iter().sum::<u64>();
+                for (gi, &si) in self.group_seq.iter().enumerate() {
+                    self.spec_chunk[si * k + round] =
+                        argmax(&draft.step.logits[gi * vocab..(gi + 1) * vocab]) as u16;
+                }
+            }
+            // roll every draft append back; the verify group re-encodes
+            // chunk row 0 (the committed sample) onward full-width
+            for (si, seq) in self.active.iter().enumerate() {
+                if self.spec_len[si] > 1 {
+                    self.arena.truncate_tail(seq.slot, self.spec_len[si] - 1);
+                }
+            }
+        }
+
+        // -- compose the ragged step. Pass 1: one decode group per
         // Decoding sequence, in active order (always — admissions can
-        // never stall the batch).
+        // never stall the batch): a single row normally, the whole
+        // draft chunk as one chunk-causal verify group when
+        // speculating.
         self.step_tokens.clear();
         self.groups.clear();
         self.group_seq.clear();
@@ -1086,10 +1278,17 @@ impl<'m> StepEngine<'m> {
         for (si, seq) in self.active.iter().enumerate() {
             if matches!(seq.phase, Phase::Decoding) {
                 let start = self.step_tokens.len();
-                self.step_tokens.push(*seq.context.last().unwrap());
-                self.groups.push(RowGroup { slot: seq.slot, start, len: 1 });
+                if speculating {
+                    let l = self.spec_len[si];
+                    self.step_tokens.extend_from_slice(&self.spec_chunk[si * k..si * k + l]);
+                    self.groups.push(RowGroup { slot: seq.slot, start, len: l });
+                    decode_rows += l as u32;
+                } else {
+                    self.step_tokens.push(*seq.context.last().unwrap());
+                    self.groups.push(RowGroup { slot: seq.slot, start, len: 1 });
+                    decode_rows += 1;
+                }
                 self.group_seq.push(si);
-                decode_rows += 1;
             }
         }
         // fair budget: the decode rows above already claimed their
@@ -1156,23 +1355,62 @@ impl<'m> StepEngine<'m> {
         }
         self.group_ovf.clear();
         self.group_ovf.resize(self.groups.len(), 0);
-        self.model.decode_step_ragged_scratch(
+        // a speculative step needs per-row logits (acceptance compares
+        // every chunk position), so the whole step runs in the
+        // all-rows layout; otherwise the standard one-per-group shape
+        self.model.decode_step_ragged_opts(
             &self.step_tokens,
             &self.groups,
             &mut self.arena,
             &mut self.group_ovf,
             &mut self.scratch,
+            if speculating { RaggedOpts::verify() } else { RaggedOpts::standard() },
         );
 
         // -- route results: overflow attribution per group, logits to
-        // every decode row and to each prefill that just completed
+        // every decode row and to each prefill that just completed. In
+        // speculative mode decode groups additionally run acceptance:
+        // draft position i stands iff the full-width argmax over verify
+        // row i-1 (the logits after chunk[..i]) reproduces it — the
+        // longest matching prefix is committed, the rejected tail rolls
+        // back, and the row after the last accepted token seeds the
+        // next sample with exactly the logits plain decode would hold.
         for (gi, &si) in self.group_seq.iter().enumerate() {
+            let g = self.groups[gi];
             let seq = &mut self.active[si];
+            if speculating && matches!(seq.phase, Phase::Decoding) {
+                let mut acc = 1usize;
+                while acc < g.len {
+                    let row = g.start + acc - 1;
+                    let t =
+                        argmax(&self.scratch.step.logits[row * vocab..(row + 1) * vocab]) as u16;
+                    if t != self.spec_chunk[si * k + acc] {
+                        break;
+                    }
+                    seq.emitted.push(t);
+                    seq.context.push(t);
+                    acc += 1;
+                }
+                self.pending_proposed += (g.len - 1) as u32;
+                self.pending_accepted += (acc - 1) as u32;
+                self.arena.truncate_tail(seq.slot, g.len - acc);
+                // per-request attribution counts the committed rows
+                // only — exactly the rows non-speculative decode runs;
+                // rejected verify rows are step-level work, folded into
+                // the telemetry record's overflow totals instead
+                seq.overflow +=
+                    self.scratch.step.row_ovf[g.start..g.start + acc].iter().sum::<u64>();
+                let row = g.start + acc - 1;
+                seq.logits.clear();
+                seq.logits
+                    .extend_from_slice(&self.scratch.step.logits[row * vocab..(row + 1) * vocab]);
+                continue;
+            }
             seq.overflow += self.group_ovf[gi];
             let done_prefill = match &mut seq.phase {
                 Phase::Decoding => true,
                 Phase::Prefilling { next_pos } => {
-                    *next_pos += self.groups[gi].len;
+                    *next_pos += g.len;
                     if self.cfg.prefix_cache {
                         // file the pages this chunk just completed in
                         // the prefix cache, so admissions sharing the
@@ -1183,9 +1421,13 @@ impl<'m> StepEngine<'m> {
                 }
             };
             if done_prefill {
+                // logits row of this group: its own index in the
+                // one-per-group layout, its final row when the
+                // speculative step ran in the all-rows layout
+                let row = if speculating { g.start + g.len - 1 } else { gi };
                 seq.logits.clear();
                 seq.logits
-                    .extend_from_slice(&self.scratch.step.logits[gi * vocab..(gi + 1) * vocab]);
+                    .extend_from_slice(&self.scratch.step.logits[row * vocab..(row + 1) * vocab]);
                 seq.phase = Phase::Decoding;
             }
         }
@@ -1223,6 +1465,10 @@ impl<'m> StepEngine<'m> {
                 shed: self.pending_shed.min(u32::MAX as u64) as u32,
                 deadline_miss: self.pending_miss,
                 cancelled: self.pending_cancel,
+                spec_proposed: self.pending_proposed,
+                spec_accepted: self.pending_accepted,
+                draft_rows: self.pending_draft_rows,
+                overflow_draft: self.pending_draft_ovf,
             };
             self.prefix_snap = [shared, deduped, evicted];
             m.with(|mm| mm.record(rec));
@@ -1231,6 +1477,10 @@ impl<'m> StepEngine<'m> {
         self.pending_shed = 0;
         self.pending_miss = 0;
         self.pending_cancel = 0;
+        self.pending_proposed = 0;
+        self.pending_accepted = 0;
+        self.pending_draft_rows = 0;
+        self.pending_draft_ovf = 0;
     }
 
     /// Drain completed responses (unordered; the queue sorts on drain).
@@ -2061,5 +2311,174 @@ mod tests {
         assert_eq!(s2.completed, 100);
         assert!(s2.conserved(101));
         assert!((s2.p99_latency_s - 0.99).abs() < 0.02, "shed wait must not poison latency");
+    }
+
+    /// THE speculative exactness property at the engine level: with a
+    /// narrowed draft proposing k tokens per sequence and a full-width
+    /// verify step accepting the longest matching prefix, every
+    /// request's token stream AND per-request overflow attribution are
+    /// bit-identical to the non-speculative engine — across draft
+    /// depths, both KV backends (overflow live on the quant one),
+    /// chunked admission, window slides and clipped prompts — while
+    /// the run actually accepts draft tokens.
+    #[test]
+    fn speculative_serving_is_bit_exact_and_accepts() {
+        use crate::model::KvQuantSpec;
+        let m = model();
+        // mixed lengths: clipped prompts (> max_seq 16), window-sliding
+        // generations (30 > 16), and short stragglers that retire early
+        let reqs: Vec<Request> = (0..6u64)
+            .map(|id| {
+                let off = id as usize;
+                let plen = 1 + ((off * 7) % 20);
+                Request {
+                    id,
+                    prompt: (0..plen).map(|i| ((i * 5 + off) % 32) as u16).collect(),
+                    max_new_tokens: 2 + ((off * 13) % 29),
+                    ..Request::default()
+                }
+            })
+            .collect();
+        for kind in [
+            KvCacheKind::F32,
+            KvCacheKind::Quant(KvQuantSpec::new(8, 8, Some(6))), // overflow live
+        ] {
+            for k in [2usize, 4, 8] {
+                let mut runs: Vec<(Vec<Response>, MetricsSummary)> = Vec::new();
+                for spec_on in [true, false] {
+                    let q = ServeQueue::new();
+                    for r in &reqs {
+                        q.submit(r.clone()).unwrap();
+                    }
+                    q.close();
+                    let cfg = ServeConfig::new(3, kind).with_prefill_chunk(4).with_speculate(
+                        if spec_on { k } else { 1 },
+                        Some(4), // narrowed draft: wrong proposals allowed, never wrong output
+                    );
+                    let engines = serve_config(&m, &q, 1, cfg);
+                    let mut done = q.drain();
+                    done.sort_by_key(|r| r.id);
+                    runs.push((done, engines[0].telemetry.expect("telemetry on")));
+                }
+                let ((spec, st), (plain, pt)) = (&runs[0], &runs[1]);
+                for ((a, b), req) in spec.iter().zip(plain.iter()).zip(reqs.iter()) {
+                    assert_eq!(
+                        a.tokens, b.tokens,
+                        "kind={kind:?} k={k} request {}: speculative tokens diverge",
+                        req.id
+                    );
+                    assert_eq!(
+                        a.overflow_events, b.overflow_events,
+                        "kind={kind:?} k={k} request {}: overflow attribution diverges",
+                        req.id
+                    );
+                    let clipped = m.clip_to_window(&req.prompt);
+                    let want = m.generate_greedy_with(&clipped, req.max_new_tokens, kind);
+                    assert_eq!(a.tokens, want[clipped.len()..], "kind={kind:?} k={k}");
+                }
+                // the speculation must be real: proposals made, never
+                // more accepted than proposed, one narrow draft row per
+                // proposal. On this float-weight model with f32 KV the
+                // narrow knob has nothing to bite (no integer register
+                // anywhere), so the draft is bit-identical to the
+                // verify pass and EVERY proposal must be accepted — the
+                // structural ceiling of self-speculation. The quant-KV
+                // backend narrows the attention accumulators, so there
+                // acceptance may genuinely drop below 100%.
+                assert!(st.spec_proposed > 0, "kind={kind:?} k={k}: no draft tokens proposed");
+                assert!(st.spec_accepted <= st.spec_proposed, "kind={kind:?} k={k}");
+                assert_eq!(
+                    st.draft_rows, st.spec_proposed,
+                    "kind={kind:?} k={k}: one draft row per proposal"
+                );
+                if matches!(kind, KvCacheKind::F32) {
+                    assert_eq!(
+                        st.spec_accepted, st.spec_proposed,
+                        "kind={kind:?} k={k}: an exact draft must be fully accepted"
+                    );
+                }
+                assert_eq!(pt.spec_proposed, 0, "k=1 must not speculate");
+                assert_eq!((pt.spec_accepted, pt.draft_rows, pt.overflow_draft), (0, 0, 0));
+                // verify rows inflate decode_rows (work-done), but the
+                // emitted token count matches the plain run exactly
+                let spec_tokens: usize = spec.iter().map(|r| r.tokens.len()).sum();
+                let plain_tokens: usize = plain.iter().map(|r| r.tokens.len()).sum();
+                assert_eq!(spec_tokens, plain_tokens);
+                assert!(
+                    st.tokens >= pt.tokens,
+                    "verify rows are counted work: {} < {}",
+                    st.tokens,
+                    pt.tokens
+                );
+            }
+        }
+    }
+
+    /// Speculation's acceptance rule is the argmax — constructing an
+    /// engine that speculates under a sampling spec must fail loudly
+    /// instead of silently emitting non-reproducible streams.
+    #[test]
+    #[should_panic(expected = "greedy")]
+    fn speculative_requires_greedy_sampling() {
+        let m = model();
+        let cfg = ServeConfig::new(2, KvCacheKind::F32)
+            .with_speculate(4, None)
+            .with_sampling(SampleSpec::temperature(0.9, 7));
+        let _ = StepEngine::new(&m, cfg);
+    }
+
+    /// Sampled serving parity: with a seeded SampleSpec, the batched
+    /// engine reproduces sequential sampled decode token for token —
+    /// the draw is keyed per (request, position), so batch composition,
+    /// chunked admission and mid-flight joins cannot perturb it.
+    #[test]
+    fn sampled_serving_matches_sequential_sampled() {
+        let m = model();
+        let spec = SampleSpec::temperature(0.8, 1234).with_top_k(12).with_top_p(0.95);
+        let reqs: Vec<Request> = (0..6u64)
+            .map(|id| {
+                let off = id as usize;
+                let plen = 1 + ((off * 5) % 14);
+                Request {
+                    id,
+                    prompt: (0..plen).map(|i| ((i * 7 + off) % 32) as u16).collect(),
+                    max_new_tokens: 3 + ((off * 11) % 20),
+                    ..Request::default()
+                }
+            })
+            .collect();
+        for chunk in [2usize, usize::MAX] {
+            let q = ServeQueue::new();
+            for r in &reqs {
+                q.submit(r.clone()).unwrap();
+            }
+            q.close();
+            serve_config(
+                &m,
+                &q,
+                1,
+                ServeConfig::new(3, KvCacheKind::F32)
+                    .with_prefill_chunk(chunk)
+                    .with_sampling(spec),
+            );
+            let responses = q.drain();
+            assert_eq!(responses.len(), reqs.len());
+            for (resp, req) in responses.iter().zip(reqs.iter()) {
+                let clipped = m.clip_to_window(&req.prompt);
+                let want = m.generate_sampled_with(
+                    &clipped,
+                    req.max_new_tokens,
+                    KvCacheKind::F32,
+                    &spec,
+                    req.id,
+                );
+                assert_eq!(
+                    resp.tokens,
+                    want[clipped.len()..],
+                    "request {} diverged from sequential sampled decode at chunk {chunk}",
+                    req.id
+                );
+            }
+        }
     }
 }

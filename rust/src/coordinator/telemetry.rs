@@ -37,9 +37,11 @@ use std::time::Duration;
 /// Version tag stamped on every emitted record; bump on any
 /// field-set change so downstream consumers can dispatch. v2 added the
 /// overload-control counters (`shed`, `deadline_miss`, `cancelled`,
-/// `queue_hwm`); consumers (`check_jsonl.py`, `metrics_report.py`)
-/// still accept v1 streams.
-pub const SCHEMA_VERSION: u32 = 2;
+/// `queue_hwm`); v3 adds the speculative-decoding counters
+/// (`spec_proposed`, `spec_accepted`, `draft_rows`, `overflow_draft`).
+/// Consumers (`check_jsonl.py`, `metrics_report.py`) still accept v1
+/// and v2 streams.
+pub const SCHEMA_VERSION: u32 = 3;
 
 /// Default ring capacity (records buffered between drains) — the
 /// `--metrics-ring` default. At one record per ragged step, 4096 steps
@@ -107,6 +109,21 @@ pub struct StepRecord {
     /// Requests dropped via their cancel token since the previous
     /// record (v2).
     pub cancelled: u32,
+    /// Draft tokens proposed by the speculative scheduler this step
+    /// (`speculate_k - 1` and window/remaining caps per decoding
+    /// sequence; 0 with speculation off) (v3).
+    pub spec_proposed: u32,
+    /// Proposed draft tokens the full-width verify pass accepted this
+    /// step (`spec_accepted <= spec_proposed` always) (v3).
+    pub spec_accepted: u32,
+    /// Narrow-register draft rows executed this step — the speculative
+    /// overhead's work measure; **not** counted in `tokens`, which
+    /// covers full-width rows only (v3).
+    pub draft_rows: u32,
+    /// Overflow events the narrowed draft rounds triggered this step.
+    /// Work-done telemetry only: draft rows roll back, so these events
+    /// never reach per-request attribution (v3).
+    pub overflow_draft: u64,
 }
 
 impl StepRecord {
@@ -135,7 +152,11 @@ impl StepRecord {
             .set("queue_hwm", self.queue_hwm.into())
             .set("shed", self.shed.into())
             .set("deadline_miss", self.deadline_miss.into())
-            .set("cancelled", self.cancelled.into());
+            .set("cancelled", self.cancelled.into())
+            .set("spec_proposed", self.spec_proposed.into())
+            .set("spec_accepted", self.spec_accepted.into())
+            .set("draft_rows", self.draft_rows.into())
+            .set("overflow_draft", self.overflow_draft.into());
         o
     }
 }
@@ -270,6 +291,14 @@ pub struct MetricsSummary {
     /// Queue-depth high-water mark (max over records; max-merged
     /// across engines) (v2).
     pub queue_hwm: u64,
+    /// Total speculative draft tokens proposed (v3).
+    pub spec_proposed: u64,
+    /// Total draft tokens the verify passes accepted (v3).
+    pub spec_accepted: u64,
+    /// Total narrow-register draft rows executed (v3).
+    pub draft_rows: u64,
+    /// Total overflow events from the narrowed draft rounds (v3).
+    pub overflow_draft: u64,
     /// Step wall-time histogram, nanoseconds.
     pub step_ns: LatHist,
     /// Time-to-first-token histogram, nanoseconds (requests that
@@ -293,6 +322,10 @@ impl MetricsSummary {
         self.deadline_miss += other.deadline_miss;
         self.cancelled += other.cancelled;
         self.queue_hwm = self.queue_hwm.max(other.queue_hwm);
+        self.spec_proposed += other.spec_proposed;
+        self.spec_accepted += other.spec_accepted;
+        self.draft_rows += other.draft_rows;
+        self.overflow_draft += other.overflow_draft;
         self.step_ns.merge(&other.step_ns);
         self.ttft_ns.merge(&other.ttft_ns);
         self.tpot_ns.merge(&other.tpot_ns);
@@ -320,6 +353,10 @@ pub struct StepMetrics {
     deadline_miss: u64,
     cancelled: u64,
     queue_hwm: u64,
+    spec_proposed: u64,
+    spec_accepted: u64,
+    draft_rows: u64,
+    overflow_draft: u64,
     step_ns: LatHist,
     ttft_ns: LatHist,
     tpot_ns: LatHist,
@@ -341,6 +378,10 @@ impl StepMetrics {
             deadline_miss: 0,
             cancelled: 0,
             queue_hwm: 0,
+            spec_proposed: 0,
+            spec_accepted: 0,
+            draft_rows: 0,
+            overflow_draft: 0,
             step_ns: LatHist::new(),
             ttft_ns: LatHist::new(),
             tpot_ns: LatHist::new(),
@@ -367,6 +408,10 @@ impl StepMetrics {
         self.deadline_miss += rec.deadline_miss as u64;
         self.cancelled += rec.cancelled as u64;
         self.queue_hwm = self.queue_hwm.max(rec.queue_hwm as u64);
+        self.spec_proposed += rec.spec_proposed as u64;
+        self.spec_accepted += rec.spec_accepted as u64;
+        self.draft_rows += rec.draft_rows as u64;
+        self.overflow_draft += rec.overflow_draft;
         let cap = self.ring.len();
         if self.len == cap {
             self.ring[self.head] = rec;
@@ -425,6 +470,10 @@ impl StepMetrics {
             deadline_miss: self.deadline_miss,
             cancelled: self.cancelled,
             queue_hwm: self.queue_hwm,
+            spec_proposed: self.spec_proposed,
+            spec_accepted: self.spec_accepted,
+            draft_rows: self.draft_rows,
+            overflow_draft: self.overflow_draft,
             step_ns: self.step_ns,
             ttft_ns: self.ttft_ns,
             tpot_ns: self.tpot_ns,
@@ -749,7 +798,9 @@ mod tests {
             "cancelled",
             "deadline_miss",
             "decode_rows",
+            "draft_rows",
             "overflow_attn",
+            "overflow_draft",
             "overflow_linear",
             "prefill_chunks",
             "prefill_rows",
@@ -760,6 +811,8 @@ mod tests {
             "queue_hwm",
             "schema_version",
             "shed",
+            "spec_accepted",
+            "spec_proposed",
             "step",
             "tokens",
             "wall_ns",
@@ -775,7 +828,7 @@ mod tests {
             let v = Json::parse(line).expect("every line parses");
             let keys: Vec<&str> = v.as_obj().unwrap().keys().map(|k| k.as_str()).collect();
             assert_eq!(keys, golden, "field set drifted without a schema bump");
-            assert_eq!(v.get("schema_version").unwrap().as_usize(), Some(2));
+            assert_eq!(v.get("schema_version").unwrap().as_usize(), Some(3));
         }
         assert_eq!(Json::parse(lines[0]).unwrap().get("step").unwrap().as_usize(), Some(7));
     }
@@ -845,7 +898,15 @@ mod tests {
         let mut a = StepMetrics::new(8);
         let mut b = StepMetrics::new(8);
         for i in 0..5 {
-            a.record(StepRecord { shed: 1, queue_hwm: 10 + i as u32, ..rec(i) });
+            a.record(StepRecord {
+                shed: 1,
+                queue_hwm: 10 + i as u32,
+                spec_proposed: 3,
+                spec_accepted: 2,
+                draft_rows: 3,
+                overflow_draft: 7,
+                ..rec(i)
+            });
             a.record_ttft(500 + i);
         }
         for i in 0..3 {
@@ -864,5 +925,10 @@ mod tests {
         assert_eq!(s.deadline_miss, 6);
         assert_eq!(s.cancelled, 3);
         assert_eq!(s.queue_hwm, 40);
+        // v3 speculation counters sum across records and engines
+        assert_eq!(s.spec_proposed, 15);
+        assert_eq!(s.spec_accepted, 10);
+        assert_eq!(s.draft_rows, 15);
+        assert_eq!(s.overflow_draft, 35);
     }
 }

@@ -311,7 +311,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         DEFAULT_PREFILL_CHUNK,
     };
     use axe::coordinator::telemetry::{SinkSpec, DEFAULT_FLUSH_EVERY, DEFAULT_RING_CAPACITY};
-    use axe::model::{KvArena, KvCacheKind, KvQuantSpec, DEFAULT_KV_PAGE};
+    use axe::model::{KvArena, KvCacheKind, KvQuantSpec, SampleSpec, DEFAULT_KV_PAGE};
     let model_name = args.str_or("model", "pico-160k");
     // --model synthetic: a seeded random transformer served on the
     // float weight datapath with PTQ skipped — the serve loop, the KV
@@ -404,8 +404,34 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // per engine (0 = auto-detect; 1 = serial oracle). Token streams
     // and per-request overflow counts are bit-identical at every value.
     let attn_threads = args.usize_or("attn-threads", 0);
+    // --speculate-k K: self-speculative decoding — draft K tokens per
+    // decoding sequence on a narrowed accumulator (--draft-acc-bits,
+    // 0 = full width) and verify them in one full-width ragged step.
+    // Greedy acceptance keeps token streams bit-identical to K=1; the
+    // knobs trade draft work against accepted tokens per step only.
+    let speculate_k = args.usize_or("speculate-k", 1).max(1);
+    let draft_bits = match args.u32_or("draft-acc-bits", 0) {
+        0 => None, // draft on the full-width datapath (exact draft)
+        b => Some(b),
+    };
+    // --temperature/--top-k/--top-p/--seed: seeded batch-invariant
+    // sampling (temperature 0 = greedy). Draws are keyed per (seed,
+    // request, position), so sampled streams are identical across
+    // batch compositions and replay exactly under the same seed.
+    let sample = SampleSpec {
+        temperature: args.f64_or("temperature", 0.0) as f32,
+        top_k: args.usize_or("top-k", 0),
+        top_p: args.f64_or("top-p", 1.0) as f32,
+        seed: args.u64_or("seed", 0),
+    };
+    if speculate_k > 1 && !sample.is_greedy() {
+        return Err(anyhow!(
+            "--speculate-k {speculate_k} requires greedy sampling (--temperature 0) — \
+             the acceptance rule is the argmax"
+        ));
+    }
     // --metrics <path|->: stream one JSON object per executed ragged
-    // step (schema v2) to a JSONL file — `<path>.<i>` per engine at
+    // step (schema v3) to a JSONL file — `<path>.<i>` per engine at
     // --workers > 1 — or to stdout with `-`. Off by default; the
     // in-memory histograms below are on either way.
     // --metrics-flush-every N: buffered records per off-thread drain;
@@ -465,7 +491,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .with_prefix_cache(prefix_cache)
             .with_attn_threads(attn_threads)
             .with_fair_budget(fair_budget)
-            .with_metrics_ring(metrics_ring),
+            .with_metrics_ring(metrics_ring)
+            .with_speculate(speculate_k, draft_bits)
+            .with_sampling(sample),
         &sink,
         flush_every,
     )?;
@@ -567,7 +595,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     if let SinkSpec::Jsonl(path) = &sink {
         println!(
-            "metrics       : step records streamed to {} (schema v2{})",
+            "metrics       : step records streamed to {} (schema v3{})",
             path.display(),
             if workers > 1 { ", one file per engine" } else { "" }
         );

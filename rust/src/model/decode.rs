@@ -111,6 +111,72 @@ pub struct RowGroup {
     pub len: usize,
 }
 
+/// Which rows of a ragged step produce logits (see
+/// [`Transformer::decode_step_ragged_opts`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum LogitRows {
+    /// One logits row per **group**, from its last row — the only row a
+    /// non-speculative scheduler can ever sample from. The default, and
+    /// the shape every pre-speculative caller sees.
+    #[default]
+    GroupLast,
+    /// One logits row per **step row** — the speculative verify shape:
+    /// acceptance needs the full-width distribution at every chunk
+    /// position, not just the last. Logits land row-major in
+    /// `scratch.step.logits[..n * vocab]`, `n` the step's row count.
+    All,
+}
+
+/// Knobs of the ragged step that the speculative engine varies per
+/// call. [`RaggedOpts::standard`] reproduces
+/// [`Transformer::decode_step_ragged_scratch`] exactly — same logits
+/// layout, full-width registers, fill-time page attribution on.
+#[derive(Clone, Copy, Debug)]
+pub struct RaggedOpts {
+    /// Logit-row layout.
+    pub logits: LogitRows,
+    /// Narrow every integer datapath (quantized linears and
+    /// quantized-KV attention) to at most this many inner-register
+    /// bits — the self-speculative **draft** configuration: same
+    /// weights, same codes, narrower accumulators. `None` runs the
+    /// layers' own widths.
+    pub draft_bits: Option<u32>,
+    /// Record fill-time overflow events onto the pages holding the
+    /// appended rows (the ledger prefix adoption credits from). Draft
+    /// steps pass `false`: their K/V rows are rolled back before the
+    /// verify re-encodes those positions full-width, and they must
+    /// leave no trace in any page ledger.
+    pub record_fill: bool,
+}
+
+impl Default for RaggedOpts {
+    fn default() -> Self {
+        RaggedOpts::standard()
+    }
+}
+
+impl RaggedOpts {
+    /// The non-speculative shape: group-last logits, stored register
+    /// widths, fill attribution on.
+    pub fn standard() -> RaggedOpts {
+        RaggedOpts { logits: LogitRows::GroupLast, draft_bits: None, record_fill: true }
+    }
+
+    /// The speculative draft shape: group-last logits on registers
+    /// narrowed to at most `bits` (`None` = stored widths — a
+    /// same-width "draft" that the verify accepts in full), with page
+    /// ledgers untouched because every draft append is rolled back.
+    pub fn draft(bits: Option<u32>) -> RaggedOpts {
+        RaggedOpts { logits: LogitRows::GroupLast, draft_bits: bits, record_fill: false }
+    }
+
+    /// The speculative verify shape: full-width registers, one logits
+    /// row per step row so acceptance can compare every chunk position.
+    pub fn verify() -> RaggedOpts {
+        RaggedOpts { logits: LogitRows::All, draft_bits: None, record_fill: true }
+    }
+}
+
 /// Multi-sequence key/value arena over a fixed [`PagePool`]: `slots`
 /// independent sequences, each holding a table of refcounted fixed-size
 /// pages. Slots are allocated at admission, reused after retirement,
@@ -496,6 +562,40 @@ impl KvArena {
         self.chain[slot] = NO_PREFIX;
     }
 
+    /// Roll back the **newest** `n` cached positions of one slot — the
+    /// speculative-decode rollback path (draft rows before the verify
+    /// re-encodes their positions full-width, rejected verify rows
+    /// after acceptance). Strictly the inverse of the appends that grew
+    /// the tail: the length shrinks, and pages no longer covered by the
+    /// new length pop off the table back to the pool (refcount
+    /// decrements — a tail page freshly opened by the rolled-back rows
+    /// is freed the moment the rollback crosses its boundary). Nothing
+    /// else moves: head offset, sharing state and the surviving pages'
+    /// bytes and overflow ledgers are untouched, so a rollback of rows
+    /// appended with fill attribution off restores the arena
+    /// byte-identically (asserted in `super::paging` tests).
+    ///
+    /// Registered (prefix-cached) pages can never be cut into: drafts
+    /// only ever extend past the verified high-water mark, and the
+    /// assert below keeps that invariant load-bearing.
+    pub fn truncate_tail(&mut self, slot: usize, n: usize) {
+        assert!(self.live[slot], "truncating a free slot");
+        let n = n.min(self.lens[slot]);
+        if n == 0 {
+            return;
+        }
+        self.lens[slot] -= n;
+        assert!(
+            self.lens[slot] >= self.registered[slot] * self.page_size,
+            "tail rollback cut into prefix-registered pages of slot {slot}"
+        );
+        let keep = (self.heads[slot] + self.lens[slot] + self.page_size - 1) / self.page_size;
+        while self.tables[slot].len() > keep {
+            let page = self.tables[slot].pop().expect("table covered the pre-rollback length");
+            self.pool.unref(page);
+        }
+    }
+
     /// Borrowed position → (page, offset) resolver for one slot.
     fn page_map(&self, slot: usize) -> PageMap<'_> {
         PageMap::new(&self.tables[slot], self.heads[slot], self.page_size)
@@ -879,6 +979,31 @@ impl Transformer {
         group_ovf: &mut [u64],
         scratch: &mut DecodeScratch,
     ) {
+        let opts = RaggedOpts::standard();
+        self.decode_step_ragged_opts(tokens, groups, arena, group_ovf, scratch, opts);
+    }
+
+    /// [`Transformer::decode_step_ragged_scratch`] with explicit
+    /// [`RaggedOpts`] — the speculative entry point. With
+    /// [`RaggedOpts::standard`] it is that function, bit for bit. A
+    /// [`RaggedOpts::draft`] call narrows every integer register (same
+    /// weights, codes and scales) and leaves page overflow ledgers
+    /// untouched; a [`RaggedOpts::verify`] call produces one logits row
+    /// per step row so a k-row chunk-causal group scores a whole draft
+    /// chunk in one full-width pass. Per-group and per-row overflow
+    /// attribution semantics are unchanged in every mode (per-row
+    /// counts stay readable in `scratch.step.row_ovf[..n]` after the
+    /// call — the accepted-rows-only attribution the speculative
+    /// engine needs).
+    pub fn decode_step_ragged_opts(
+        &self,
+        tokens: &[u16],
+        groups: &[RowGroup],
+        arena: &mut KvArena,
+        group_ovf: &mut [u64],
+        scratch: &mut DecodeScratch,
+        opts: RaggedOpts,
+    ) {
         assert!(!groups.is_empty(), "empty ragged step");
         assert_eq!(group_ovf.len(), groups.len(), "one counter per group");
         assert_eq!(arena.d, self.cfg.d_model);
@@ -920,7 +1045,11 @@ impl Transformer {
 
         let DecodeScratch { lin, attn, step, attn_pool, attn_threads, attn_par_min, .. } = scratch;
         let (attn_threads, attn_par_min) = (*attn_threads, *attn_par_min);
-        step.ensure(n, g_n, d, d_ff, vocab);
+        let logit_rows = match opts.logits {
+            LogitRows::GroupLast => g_n,
+            LogitRows::All => n,
+        };
+        step.ensure(n, logit_rows, d, d_ff, vocab);
         // Live-size views over the grow-only step buffers; everything
         // below operates on exactly n rows (g_n logit rows).
         let h = &mut step.h[..n * d];
@@ -981,9 +1110,9 @@ impl Transformer {
             for r in 0..n {
                 blk.ln1.forward_row(&h[r * d..(r + 1) * d], &mut ln_out[r * d..(r + 1) * d]);
             }
-            blk.wq.forward_rows_scratch(ln_out, n, q, row_ovf, lin);
-            blk.wk.forward_rows_scratch(ln_out, n, k_new, row_ovf, lin);
-            blk.wv.forward_rows_scratch(ln_out, n, v_new, row_ovf, lin);
+            blk.wq.forward_rows_scratch_narrowed(ln_out, n, q, row_ovf, lin, opts.draft_bits);
+            blk.wk.forward_rows_scratch_narrowed(ln_out, n, k_new, row_ovf, lin, opts.draft_bits);
+            blk.wv.forward_rows_scratch_narrowed(ln_out, n, v_new, row_ovf, lin, opts.draft_bits);
             for g in groups {
                 let pos0 = arena.len(g.slot);
                 arena.append_kv_rows_at(
@@ -1011,11 +1140,13 @@ impl Transformer {
             let ovf_base = row_ovf.as_mut_ptr() as usize;
             if bands <= 1 {
                 attn_total += attend_groups_band(
-                    n_heads, arena, groups, 0, g_n, bi, q, d, mix_base, ovf_base, attn,
+                    n_heads, arena, groups, 0, g_n, bi, q, d, mix_base, ovf_base,
+                    opts.draft_bits, attn,
                 );
             } else {
                 let arena_ro: &KvArena = arena;
                 let q_ro: &[f32] = q;
+                let narrow = opts.draft_bits;
                 std::thread::scope(|s| {
                     let mut handles = Vec::with_capacity(bands - 1);
                     let mut pool = attn_pool.iter_mut();
@@ -1028,20 +1159,20 @@ impl Transformer {
                         handles.push(s.spawn(move || {
                             attend_groups_band(
                                 n_heads, arena_ro, groups, lo, hi, bi, q_ro, d, mix_base,
-                                ovf_base, a,
+                                ovf_base, narrow, a,
                             )
                         }));
                     }
                     attn_total += attend_groups_band(
                         n_heads, arena_ro, groups, bounds[0], bounds[1], bi, q_ro, d, mix_base,
-                        ovf_base, attn,
+                        ovf_base, narrow, attn,
                     );
                     for h in handles {
                         attn_total += h.join().expect("attention band panicked");
                     }
                 });
             }
-            blk.wo.forward_rows_scratch(mix, n, attn_out, row_ovf, lin);
+            blk.wo.forward_rows_scratch_narrowed(mix, n, attn_out, row_ovf, lin, opts.draft_bits);
             if !self.cfg.parallel_residual {
                 for i in 0..n * d {
                     h[i] += attn_out[i];
@@ -1050,9 +1181,9 @@ impl Transformer {
             for r in 0..n {
                 blk.ln2.forward_row(&h[r * d..(r + 1) * d], &mut ln_out[r * d..(r + 1) * d]);
             }
-            blk.fc1.forward_rows_scratch(ln_out, n, ff, row_ovf, lin);
+            blk.fc1.forward_rows_scratch_narrowed(ln_out, n, ff, row_ovf, lin, opts.draft_bits);
             self.cfg.act.apply_vec(ff);
-            blk.fc2.forward_rows_scratch(ff, n, ff_out, row_ovf, lin);
+            blk.fc2.forward_rows_scratch_narrowed(ff, n, ff_out, row_ovf, lin, opts.draft_bits);
             if self.cfg.parallel_residual {
                 for i in 0..n * d {
                     h[i] += attn_out[i] + ff_out[i];
@@ -1075,13 +1206,17 @@ impl Transformer {
         // fill-time page attribution: each appended row's complete event
         // count (all its linear rows + its own attention; the float LM
         // head below contributes none) lands on the page holding it, so
-        // a later adopter of that page credits exactly these events
-        for g in groups {
-            let pos0 = arena.len(g.slot);
-            for i in 0..g.len {
-                let events = row_ovf[g.start + i];
-                if events > 0 {
-                    arena.record_fill_ovf(g.slot, pos0 + i, events);
+        // a later adopter of that page credits exactly these events.
+        // Draft steps skip this (their rows are rolled back and must
+        // leave the ledgers byte-identical).
+        if opts.record_fill {
+            for g in groups {
+                let pos0 = arena.len(g.slot);
+                for i in 0..g.len {
+                    let events = row_ovf[g.start + i];
+                    if events > 0 {
+                        arena.record_fill_ovf(g.slot, pos0 + i, events);
+                    }
                 }
             }
         }
@@ -1092,18 +1227,38 @@ impl Transformer {
         for (gi, g) in groups.iter().enumerate() {
             group_ovf[gi] += row_ovf[g.start..g.start + g.len].iter().sum::<u64>();
         }
-        // one logits row per group, from its last row: gather the
-        // final-norm rows contiguously, one head GEMM over all groups
-        for (gi, g) in groups.iter().enumerate() {
-            let r = g.start + g.len - 1;
-            self.ln_f.forward_row(&h[r * d..(r + 1) * d], &mut ln_out[gi * d..(gi + 1) * d]);
+        match opts.logits {
+            // one logits row per group, from its last row: gather the
+            // final-norm rows contiguously, one head GEMM over all groups
+            LogitRows::GroupLast => {
+                for (gi, g) in groups.iter().enumerate() {
+                    let r = g.start + g.len - 1;
+                    self.ln_f
+                        .forward_row(&h[r * d..(r + 1) * d], &mut ln_out[gi * d..(gi + 1) * d]);
+                }
+                self.head.forward_rows_scratch(
+                    &ln_out[..g_n * d],
+                    g_n,
+                    &mut step.logits[..g_n * vocab],
+                    lin,
+                );
+            }
+            // verify shape: one logits row per step row, in place — the
+            // head GEMM covers every chunk position so acceptance can
+            // compare all of them against the drafts
+            LogitRows::All => {
+                for r in 0..n {
+                    self.ln_f
+                        .forward_row(&h[r * d..(r + 1) * d], &mut ln_out[r * d..(r + 1) * d]);
+                }
+                self.head.forward_rows_scratch(
+                    &ln_out[..n * d],
+                    n,
+                    &mut step.logits[..n * vocab],
+                    lin,
+                );
+            }
         }
-        self.head.forward_rows_scratch(
-            &ln_out[..g_n * d],
-            g_n,
-            &mut step.logits[..g_n * vocab],
-            lin,
-        );
     }
 
     /// Prefill: push a whole prompt through one cache slot, returning
@@ -1223,6 +1378,46 @@ impl Transformer {
         }
         out
     }
+
+    /// Seeded sampled generation on the chosen KV backend — the
+    /// sequential reference batched **sampled** serving must reproduce
+    /// token for token. `stream` keys this sequence's RNG stream (the
+    /// engine uses the request id), and position `i` of the generation
+    /// draws from `spec` at `(stream, i)` — a pure function of the
+    /// logits and those three keys, independent of batch composition.
+    /// With a greedy `spec` this is [`Transformer::generate_greedy_with`]
+    /// exactly.
+    pub fn generate_sampled_with(
+        &self,
+        prompt: &[u16],
+        n: usize,
+        kind: KvCacheKind,
+        spec: &super::sample::SampleSpec,
+        stream: u64,
+    ) -> Vec<u16> {
+        let mut cache = KvCache::with_kind(self, kind);
+        let mut scratch = DecodeScratch::new();
+        let mut buf = Vec::new();
+        let vocab = self.cfg.vocab;
+        let mut out = prompt.to_vec();
+        let mut ovf = 0u64;
+        self.prefill_slot_scratch(prompt, 0, &mut cache.arena, &mut ovf, &mut scratch);
+        let mut row = [0u64; 1];
+        for i in 0..n {
+            if cache.is_full() {
+                let keep = self.slide_keep();
+                let tail = out[out.len() - keep..].to_vec();
+                cache.clear();
+                self.prefill_slot_scratch(&tail, 0, &mut cache.arena, &mut ovf, &mut scratch);
+            }
+            let next =
+                spec.sample_with(&scratch.step.logits[..vocab], stream, i as u64, &mut buf) as u16;
+            out.push(next);
+            row[0] = 0;
+            self.decode_step_batch_scratch(&[next], &[0], &mut cache.arena, &mut row, &mut scratch);
+        }
+        out
+    }
 }
 
 /// Split `count` work items into `bands` contiguous, work-balanced
@@ -1277,6 +1472,7 @@ fn attend_groups_band(
     d: usize,
     mix_base: usize,
     ovf_base: usize,
+    narrow: Option<u32>,
     attn: &mut AttnScratch,
 ) -> u64 {
     let mut total = 0u64;
@@ -1294,7 +1490,10 @@ fn attend_groups_band(
                 attend_chunk_rows(qrows, &view, t0, g.len, d, n_heads, attn, orows);
             }
             KvStore::Quant(qkv) => {
-                let spec = qkv.spec;
+                let spec = match narrow {
+                    Some(bits) => qkv.spec.narrowed(bits),
+                    None => qkv.spec,
+                };
                 // SAFETY: disjoint range per group (see contract above)
                 let rovf = unsafe {
                     std::slice::from_raw_parts_mut((ovf_base as *mut u64).add(g.start), g.len)
@@ -2092,5 +2291,137 @@ mod tests {
         let f = arena.alloc().unwrap();
         let (mapped, _) = arena.adopt_prefix(f, &hot);
         assert_eq!(mapped, 8, "hot entries must survive eviction under pressure");
+    }
+
+    /// The verify logits shape: a [`LogitRows::All`] step over one
+    /// multi-row group yields, at every row, logits bit-identical to
+    /// sequential decode at that position — the property greedy
+    /// acceptance rests on.
+    #[test]
+    fn all_logit_rows_match_sequential_decode() {
+        for kind in [KvCacheKind::F32, KvCacheKind::Quant(KvQuantSpec::int8())] {
+            let m = model(false);
+            let vocab = m.cfg.vocab;
+            let toks: Vec<u16> = vec![3, 1, 4, 1, 5, 9];
+            let mut cache = KvCache::with_kind(&m, kind);
+            let want: Vec<Vec<f32>> = toks.iter().map(|&t| m.decode_step(t, &mut cache)).collect();
+            let mut arena = KvArena::with_kind(&m, 1, kind);
+            let slot = arena.alloc().unwrap();
+            let mut scratch = DecodeScratch::new();
+            let groups = [RowGroup { slot, start: 0, len: toks.len() }];
+            let mut g_ovf = [0u64; 1];
+            m.decode_step_ragged_opts(
+                &toks,
+                &groups,
+                &mut arena,
+                &mut g_ovf,
+                &mut scratch,
+                RaggedOpts::verify(),
+            );
+            for (i, w) in want.iter().enumerate() {
+                assert_eq!(
+                    &scratch.step.logits[i * vocab..(i + 1) * vocab],
+                    &w[..],
+                    "kind={kind:?}: verify logits row {i} diverged from sequential decode"
+                );
+            }
+        }
+    }
+
+    /// The tentpole oracle at model level: a full self-speculative
+    /// loop — narrow-register draft rounds, tail rollback, one
+    /// full-width k-row verify, longest-matching-prefix acceptance —
+    /// reproduces non-speculative greedy generation bit for bit,
+    /// including every cached K/V row, on both backends.
+    #[test]
+    fn draft_verify_composition_reproduces_plain_decode() {
+        for kind in [KvCacheKind::F32, KvCacheKind::Quant(KvQuantSpec::int8())] {
+            let m = model(false);
+            let vocab = m.cfg.vocab;
+            let prompt: Vec<u16> = vec![3, 1, 4];
+            let n = 8usize;
+            let k = 3usize; // chunk depth: 1 sampled + up to 2 drafts
+            let want = m.generate_greedy_with(&prompt, n, kind);
+            // non-speculative arena for the final cached-row comparison
+            let mut plain = KvArena::with_kind(&m, 1, kind);
+            let ps = plain.alloc().unwrap();
+            m.prefill_slot(&prompt, ps, &mut plain);
+            for &t in &want[prompt.len()..] {
+                m.decode_step_batch(&[t], &[ps], &mut plain);
+            }
+            let mut arena = KvArena::with_kind(&m, 1, kind);
+            let slot = arena.alloc().unwrap();
+            let mut scratch = DecodeScratch::new();
+            let mut draft = DecodeScratch::new();
+            let mut ovf = 0u64;
+            m.prefill_slot_scratch(&prompt, slot, &mut arena, &mut ovf, &mut scratch);
+            let mut out = prompt.to_vec();
+            let mut accepted_drafts = 0usize;
+            while out.len() < prompt.len() + n {
+                // c1 is sampled from committed full-width logits; the
+                // drafts extend it on 4-bit inner registers
+                let c1 = argmax(&scratch.step.logits[..vocab]) as u16;
+                let remaining = prompt.len() + n - out.len();
+                let space = m.cfg.max_seq - arena.len(slot);
+                let l = k.min(remaining).min(space);
+                let mut chunk = vec![c1];
+                for _ in 1..l {
+                    let groups = [RowGroup { slot, start: 0, len: 1 }];
+                    let mut g = [0u64; 1];
+                    m.decode_step_ragged_opts(
+                        &[*chunk.last().unwrap()],
+                        &groups,
+                        &mut arena,
+                        &mut g,
+                        &mut draft,
+                        RaggedOpts::draft(Some(4)),
+                    );
+                    chunk.push(argmax(&draft.step.logits[..vocab]) as u16);
+                }
+                // roll the draft appends back, then re-encode the whole
+                // chunk full-width in one k-row verify group
+                arena.truncate_tail(slot, chunk.len() - 1);
+                let groups = [RowGroup { slot, start: 0, len: chunk.len() }];
+                let mut g = [0u64; 1];
+                m.decode_step_ragged_opts(
+                    &chunk,
+                    &groups,
+                    &mut arena,
+                    &mut g,
+                    &mut scratch,
+                    RaggedOpts::verify(),
+                );
+                // longest matching prefix: draft i stands iff the
+                // full-width argmax after chunk[..i] agrees with it
+                out.push(c1);
+                let mut acc = 1usize;
+                while acc < chunk.len() {
+                    let t = argmax(&scratch.step.logits[(acc - 1) * vocab..acc * vocab]) as u16;
+                    if t != chunk[acc] {
+                        break;
+                    }
+                    out.push(t);
+                    accepted_drafts += 1;
+                    acc += 1;
+                }
+                arena.truncate_tail(slot, chunk.len() - acc);
+                // the row after the last accepted token seeds the next
+                // chunk (exactly the logits plain decode would hold)
+                scratch.step.logits.copy_within((acc - 1) * vocab..acc * vocab, 0);
+            }
+            assert_eq!(out, want, "kind={kind:?}: speculative stream diverged");
+            assert_eq!(arena.len(slot), plain.len(ps), "kind={kind:?}: lengths diverged");
+            for layer in 0..m.cfg.n_layers {
+                for pos in 0..arena.len(slot) {
+                    assert_eq!(
+                        arena.kv_row(layer, slot, pos),
+                        plain.kv_row(layer, ps, pos),
+                        "kind={kind:?} layer {layer} pos {pos}: cached rows diverged"
+                    );
+                }
+            }
+            // the harness is only meaningful if drafting actually ran
+            assert!(accepted_drafts > 0 || k == 1, "kind={kind:?}: no draft ever accepted");
+        }
     }
 }

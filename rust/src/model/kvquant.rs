@@ -87,6 +87,15 @@ impl KvQuantSpec {
         KvQuantSpec::new(16, 64, None)
     }
 
+    /// Copy of this spec with the inner accumulator narrowed to at most
+    /// `bits` (clamped to the 2-bit floor; never widens). The draft
+    /// pass of self-speculative decoding runs the attention matmuls
+    /// through this — same codes, same scales, narrower registers —
+    /// so narrowing costs zero extra storage.
+    pub fn narrowed(&self, bits: u32) -> KvQuantSpec {
+        KvQuantSpec { inner_bits: self.inner_bits.min(bits.max(2)), ..*self }
+    }
+
     /// Largest representable K/V code magnitude.
     #[inline]
     pub fn code_max(&self) -> i32 {

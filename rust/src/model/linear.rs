@@ -209,6 +209,26 @@ pub enum Datapath {
     Simulated { tile: usize, inner_bits: u32, outer_bits: u32, mode: OverflowMode },
 }
 
+impl Datapath {
+    /// Copy of this datapath with the inner registers narrowed to at
+    /// most `bits` (clamped to the 2-bit floor; never widens). `Exact`
+    /// stays exact — there is no register to narrow. The
+    /// self-speculative draft pass runs every quantized linear through
+    /// this: same stored codes and scales, narrower accumulators, so a
+    /// draft model costs zero extra weight memory.
+    pub fn narrowed(&self, bits: u32) -> Datapath {
+        match *self {
+            Datapath::Exact => Datapath::Exact,
+            Datapath::Simulated { tile, inner_bits, outer_bits, mode } => Datapath::Simulated {
+                tile,
+                inner_bits: inner_bits.min(bits.max(2)),
+                outer_bits,
+                mode,
+            },
+        }
+    }
+}
+
 /// Quantized linear layer executing on the integer datapath.
 ///
 /// Weights are integer codes with per-channel scales; input activations
@@ -301,9 +321,19 @@ impl QuantLinear {
     /// Run the integer datapath kernel over `rows` quantized input rows,
     /// writing raw accumulator outputs and per-row overflow-event
     /// counts into `row_ovf` (overwrite semantics; all zeros on the
-    /// Exact datapath, which cannot overflow by construction).
-    fn run_kernel(&self, x_codes: &[i64], rows: usize, acc: &mut [i64], row_ovf: &mut [u64]) {
-        match self.datapath {
+    /// Exact datapath, which cannot overflow by construction). The
+    /// datapath is a parameter so the speculative draft pass can run
+    /// the same layer through [`Datapath::narrowed`] registers without
+    /// touching the stored configuration.
+    fn run_kernel(
+        &self,
+        dp: Datapath,
+        x_codes: &[i64],
+        rows: usize,
+        acc: &mut [i64],
+        row_ovf: &mut [u64],
+    ) {
+        match dp {
             Datapath::Exact => {
                 qgemm::qgemm_exact(x_codes, rows, &self.codes, self.out_dim, self.in_dim, acc);
                 row_ovf.fill(0);
@@ -352,7 +382,7 @@ impl QuantLinear {
         }
         let mut acc = vec![0i64; self.out_dim];
         let mut row1 = [0u64; 1];
-        self.run_kernel(&x_codes[..self.in_dim], 1, &mut acc, &mut row1);
+        self.run_kernel(self.datapath, &x_codes[..self.in_dim], 1, &mut acc, &mut row1);
         self.dequant_rows(&acc, 1, y);
         if row1[0] > 0 {
             self.overflow_events.fetch_add(row1[0], Ordering::Relaxed);
@@ -397,6 +427,24 @@ impl QuantLinear {
         row_ovf: &mut [u64],
         scratch: &mut LinearScratch,
     ) {
+        self.forward_rows_scratch_dp(xs, rows, ys, row_ovf, scratch, self.datapath);
+    }
+
+    /// [`QuantLinear::forward_rows_scratch`] on an explicit datapath —
+    /// the speculative draft entry point. `dp` is normally
+    /// `self.datapath` or [`Datapath::narrowed`] of it; codes, scales
+    /// and the activation quantizer are the stored ones either way, so
+    /// a widened-register verify over the same inputs reproduces the
+    /// non-speculative forward bit for bit.
+    pub fn forward_rows_scratch_dp(
+        &self,
+        xs: &[f32],
+        rows: usize,
+        ys: &mut [f32],
+        row_ovf: &mut [u64],
+        scratch: &mut LinearScratch,
+        dp: Datapath,
+    ) {
         debug_assert_eq!(xs.len(), rows * self.in_dim);
         debug_assert_eq!(ys.len(), rows * self.out_dim);
         debug_assert!(row_ovf.is_empty() || row_ovf.len() == rows);
@@ -422,7 +470,7 @@ impl QuantLinear {
         }
         let acc = &mut scratch.acc[..rows * self.out_dim];
         let kernel_ovf = &mut scratch.row_ovf[..rows];
-        self.run_kernel(codes, rows, acc, kernel_ovf);
+        self.run_kernel(dp, codes, rows, acc, kernel_ovf);
         self.dequant_rows(acc, rows, ys);
         let overflow_total: u64 = kernel_ovf.iter().sum();
         if overflow_total > 0 {
@@ -526,6 +574,31 @@ impl Linear {
         match self {
             Linear::Float(l) => l.forward_rows_scratch(xs, rows, ys, scratch),
             Linear::Quant(l) => l.forward_rows_scratch(xs, rows, ys, row_ovf, scratch),
+        }
+    }
+
+    /// [`Linear::forward_rows_scratch`] with the integer registers
+    /// optionally narrowed to at most `narrow` inner bits — the
+    /// self-speculative draft dispatch. `None` (and any float layer)
+    /// is bit-identical to [`Linear::forward_rows_scratch`].
+    pub fn forward_rows_scratch_narrowed(
+        &self,
+        xs: &[f32],
+        rows: usize,
+        ys: &mut [f32],
+        row_ovf: &mut [u64],
+        scratch: &mut LinearScratch,
+        narrow: Option<u32>,
+    ) {
+        match self {
+            Linear::Float(l) => l.forward_rows_scratch(xs, rows, ys, scratch),
+            Linear::Quant(l) => {
+                let dp = match narrow {
+                    Some(bits) => l.datapath.narrowed(bits),
+                    None => l.datapath,
+                };
+                l.forward_rows_scratch_dp(xs, rows, ys, row_ovf, scratch, dp)
+            }
         }
     }
 

@@ -13,10 +13,11 @@ pub mod linear;
 pub mod loader;
 pub mod mlp;
 pub mod paging;
+pub mod sample;
 pub mod scratch;
 pub mod transformer;
 
-pub use decode::{argmax, KvArena, KvCache, RowGroup};
+pub use decode::{argmax, KvArena, KvCache, LogitRows, RaggedOpts, RowGroup};
 pub use kvquant::{KvCacheKind, KvQuantSpec};
 pub use layers::{
     attend_chunk, attend_chunk_quant, attend_chunk_rows, attend_one_query,
@@ -29,5 +30,6 @@ pub use loader::{
 };
 pub use mlp::{random_mlp, Mlp, MlpConfig};
 pub use paging::{PageMap, PagePool, PrefixCache, DEFAULT_KV_PAGE, NO_PREFIX};
+pub use sample::SampleSpec;
 pub use scratch::{AttnScratch, DecodeScratch, LinearScratch, StepScratch, PAR_ATTN_MIN_WORK};
 pub use transformer::{random_transformer, Block, Capture, Transformer, TransformerConfig};

@@ -497,4 +497,199 @@ mod tests {
         assert!(cache.is_empty());
         assert_eq!(cache.lookup(NO_PREFIX, &[1, 2]), None);
     }
+
+    // -----------------------------------------------------------------
+    // Speculative tail rollback (satellite of the draft/verify PR):
+    // `KvArena::truncate_tail` must be the exact inverse of draft
+    // appends at the page/refcount/cache level. The latent bug class
+    // here is off-by-one page accounting — freeing the open tail page
+    // on a partial rollback, or leaking the page a rolled-back draft
+    // freshly opened.
+
+    use crate::model::decode::{KvArena, RaggedOpts, RowGroup};
+    use crate::model::kvquant::{KvCacheKind, KvQuantSpec};
+    use crate::model::scratch::DecodeScratch;
+    use crate::model::transformer::Transformer;
+    use crate::model::{random_transformer, Activation, TransformerConfig};
+
+    fn spec_model() -> Transformer {
+        random_transformer(
+            TransformerConfig {
+                name: "p".into(),
+                vocab: 48,
+                d_model: 16,
+                n_layers: 2,
+                n_heads: 2,
+                d_ff: 32,
+                max_seq: 16,
+                act: Activation::Gelu,
+                parallel_residual: false,
+            },
+            31,
+        )
+    }
+
+    /// Append `toks` to `slot` as one draft group (narrow registers,
+    /// fill attribution off — exactly what the speculative engine
+    /// rolls back afterwards).
+    fn draft_append(m: &Transformer, arena: &mut KvArena, slot: usize, toks: &[u16]) {
+        let groups = [RowGroup { slot, start: 0, len: toks.len() }];
+        let mut g_ovf = [0u64; 1];
+        let mut scratch = DecodeScratch::new();
+        m.decode_step_ragged_opts(
+            toks,
+            &groups,
+            arena,
+            &mut g_ovf,
+            &mut scratch,
+            RaggedOpts::draft(Some(4)),
+        );
+    }
+
+    /// Rolling back draft positions that stayed **within** the open
+    /// tail page must restore page/refcount state identically: same
+    /// resident and free page counts, the tail page still held, and
+    /// every surviving row bit-identical — on both backends.
+    #[test]
+    fn tail_rollback_within_open_page_restores_state() {
+        for kind in [KvCacheKind::F32, KvCacheKind::Quant(KvQuantSpec::int8())] {
+            let m = spec_model();
+            let mut arena = KvArena::with_kind_paged(&m, 1, kind, 4);
+            let slot = arena.alloc().unwrap();
+            m.prefill_slot(&[3, 1, 4, 1, 5, 9], slot, &mut arena); // 1 full page + 2 tail rows
+            let resident = arena.resident_pages();
+            let free = arena.free_pages();
+            let rows: Vec<_> = (0..6).map(|p| arena.kv_row(1, slot, p)).collect();
+            // two draft rows fill the open tail page exactly — no new page
+            draft_append(&m, &mut arena, slot, &[7, 7]);
+            assert_eq!(arena.len(slot), 8);
+            assert_eq!(arena.resident_pages(), resident, "drafts stayed in the open page");
+            arena.truncate_tail(slot, 2);
+            assert_eq!(arena.len(slot), 6);
+            assert_eq!(arena.resident_pages(), resident, "kind={kind:?}: page count changed");
+            assert_eq!(arena.free_pages(), free, "kind={kind:?}: free list changed");
+            for (p, want) in rows.iter().enumerate() {
+                assert_eq!(
+                    &arena.kv_row(1, slot, p),
+                    want,
+                    "kind={kind:?}: surviving row {p} drifted across the rollback"
+                );
+            }
+            // a partial rollback must NOT free the open tail page: the
+            // slot keeps decoding through it without re-allocating
+            m.decode_step_batch(&[2], &[slot], &mut arena);
+            assert_eq!(arena.len(slot), 7);
+            assert_eq!(arena.resident_pages(), resident);
+        }
+    }
+
+    /// A rollback crossing a page boundary must free the page the
+    /// rolled-back rows freshly opened (refcount to zero, back on the
+    /// free list), while a rollback stopping exactly at the boundary
+    /// keeps the still-covered page resident.
+    #[test]
+    fn tail_rollback_across_boundary_frees_fresh_page() {
+        let m = spec_model();
+        let mut arena = KvArena::with_kind_paged(&m, 1, KvCacheKind::F32, 4);
+        let slot = arena.alloc().unwrap();
+        m.prefill_slot(&[3, 1, 4, 1], slot, &mut arena); // exactly one full page
+        assert_eq!(arena.resident_pages(), 1);
+        let free = arena.free_pages();
+        // drafts open a second page…
+        draft_append(&m, &mut arena, slot, &[9, 2]);
+        assert_eq!(arena.resident_pages(), 2, "drafts opened the tail page");
+        // …and rolling them back must hand it straight back
+        arena.truncate_tail(slot, 2);
+        assert_eq!(arena.len(slot), 4);
+        assert_eq!(arena.resident_pages(), 1, "freshly-opened page must free");
+        assert_eq!(arena.free_pages(), free, "page must return to the free list");
+        // partial rollbacks stage by stage: 6 rows → drop 1 (page
+        // still covered) → drop 1 more (crosses the boundary)
+        draft_append(&m, &mut arena, slot, &[9, 2]);
+        assert_eq!(arena.resident_pages(), 2);
+        arena.truncate_tail(slot, 1);
+        assert_eq!(arena.len(slot), 5);
+        assert_eq!(arena.resident_pages(), 2, "page with a live row must survive");
+        arena.truncate_tail(slot, 1);
+        assert_eq!(arena.len(slot), 4);
+        assert_eq!(arena.resident_pages(), 1, "boundary crossing frees the page");
+    }
+
+    /// Rollback arithmetic must count the slot's **head offset**: after
+    /// a mid-page `truncate_front` slide, position → page mapping is
+    /// shifted, and the keep-page computation has to shift with it.
+    #[test]
+    fn tail_rollback_respects_head_offset() {
+        let m = spec_model();
+        let mut arena = KvArena::with_kind_paged(&m, 1, KvCacheKind::F32, 4);
+        let slot = arena.alloc().unwrap();
+        m.prefill_slot(&[3, 1, 4, 1, 5, 9], slot, &mut arena);
+        arena.truncate_front(slot, 5); // head offset 1, one page dropped
+        assert_eq!(arena.len(slot), 1);
+        let resident = arena.resident_pages();
+        // head(1) + len(1) + 3 appends = 5 > ps: opens a second page
+        draft_append(&m, &mut arena, slot, &[7, 7, 7]);
+        assert_eq!(arena.resident_pages(), resident + 1);
+        arena.truncate_tail(slot, 3);
+        assert_eq!(arena.len(slot), 1);
+        assert_eq!(
+            arena.resident_pages(),
+            resident,
+            "head-offset slot must free exactly the page its drafts opened"
+        );
+    }
+
+    /// Prefix-cache neutrality: drafts and their rollback must leave
+    /// the cache, adoption credit, and per-page overflow ledgers
+    /// byte-identical — a draft recorded onto a shared ledger would
+    /// corrupt every later adopter's attribution.
+    #[test]
+    fn tail_rollback_leaves_cache_and_ovf_ledgers_untouched() {
+        // narrow attention register so fill-time events are live
+        let kind = KvCacheKind::Quant(KvQuantSpec::new(8, 8, Some(6)));
+        let m = spec_model();
+        let prompt: Vec<u16> = vec![3, 1, 4, 1, 5, 9, 2, 6, 5]; // 2 full pages + 1 tail row
+        let mut arena = KvArena::with_kind_paged(&m, 3, kind, 4);
+        let a = arena.alloc().unwrap();
+        m.prefill_slot(&prompt, a, &mut arena);
+        arena.register_prefix(a, &prompt);
+        assert_eq!(arena.prefix_cache_pages(), 2);
+        // baseline adoption credit before any speculation
+        let b = arena.alloc().unwrap();
+        let (mapped, credit) = arena.adopt_prefix(b, &prompt);
+        assert_eq!(mapped, 8);
+        arena.release(b);
+        // draft rows on A's open tail page, then roll them back
+        draft_append(&m, &mut arena, a, &[7, 7, 7]);
+        arena.truncate_tail(a, 3);
+        assert_eq!(arena.prefix_cache_pages(), 2, "rollback must not disturb the cache");
+        let c = arena.alloc().unwrap();
+        let (mapped2, credit2) = arena.adopt_prefix(c, &prompt);
+        assert_eq!(mapped2, mapped);
+        assert_eq!(
+            credit2, credit,
+            "draft + rollback changed a shared page's overflow ledger"
+        );
+    }
+
+    /// The registered-prefix guard: a rollback can never cut into pages
+    /// the cache indexes (drafts only extend past the verified
+    /// high-water mark).
+    #[test]
+    fn tail_rollback_into_registered_pages_panics() {
+        let m = spec_model();
+        let prompt: Vec<u16> = vec![3, 1, 4, 1, 5]; // 1 full page + 1 tail row
+        let mut arena = KvArena::with_kind_paged(&m, 1, KvCacheKind::F32, 4);
+        let slot = arena.alloc().unwrap();
+        m.prefill_slot(&prompt, slot, &mut arena);
+        arena.register_prefix(slot, &prompt);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut a2 = arena.clone();
+            a2.truncate_tail(slot, 2); // would cut into the registered page
+        }));
+        assert!(r.is_err(), "rollback into registered pages must panic");
+        // rolling back only the unregistered tail row is fine
+        arena.truncate_tail(slot, 1);
+        assert_eq!(arena.len(slot), 4);
+    }
 }

@@ -1,0 +1,231 @@
+//! Seeded, **batch-invariant** token sampling.
+//!
+//! The serving engine's exactness story (sequential ≡ batched ≡ ragged,
+//! bit for bit) only extends beyond greedy decoding if the sampled
+//! token is a pure function of the logits and a key that does not
+//! depend on batch composition. [`SampleSpec::sample`] is exactly
+//! that: the RNG draw is keyed per `(seed, stream, position)` — the
+//! engine uses the request id as the stream and the request's emitted
+//! count as the position — so a sequence draws the same randomness
+//! whether it decodes alone, inside any batch, or interleaved with
+//! prefill chunks, and two runs with the same seed replay identically.
+//!
+//! **Greedy is the `temperature == 0` corner** and routes through
+//! [`super::decode::argmax`] (first maximum), so every greedy path in
+//! the crate keeps one tie-break. Candidate ordering is a total order
+//! (logit descending, index ascending), which makes `top_k == 1`
+//! coincide with greedy exactly, and `top_p == 1.0` skip the nucleus
+//! cut entirely (bit-identical to temperature-only sampling). All
+//! probability arithmetic is fixed-order scalar f64, so results are
+//! identical at every thread count and SIMD setting.
+
+use super::decode::argmax;
+use crate::util::rng::Rng;
+
+/// Sampling configuration of one serve run (`--temperature`,
+/// `--top-k`, `--top-p`, `--seed`). The default is greedy.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SampleSpec {
+    /// Softmax temperature; `<= 0` means greedy argmax (the other
+    /// fields are ignored then).
+    pub temperature: f32,
+    /// Keep only the `top_k` highest-logit candidates before
+    /// renormalizing; `0` disables the cut.
+    pub top_k: usize,
+    /// Nucleus cut: keep the smallest candidate prefix whose
+    /// probability mass reaches `top_p`; `1.0` disables the cut.
+    pub top_p: f32,
+    /// Root seed of the run; every `(stream, position)` derives its own
+    /// independent generator from it.
+    pub seed: u64,
+}
+
+impl Default for SampleSpec {
+    fn default() -> Self {
+        SampleSpec::greedy()
+    }
+}
+
+impl SampleSpec {
+    /// Deterministic argmax decoding — the spec every pre-sampling
+    /// caller implicitly ran.
+    pub fn greedy() -> SampleSpec {
+        SampleSpec { temperature: 0.0, top_k: 0, top_p: 1.0, seed: 0 }
+    }
+
+    /// Temperature sampling with no top-k/top-p cut.
+    pub fn temperature(t: f32, seed: u64) -> SampleSpec {
+        SampleSpec { temperature: t, seed, ..SampleSpec::greedy() }
+    }
+
+    /// This spec with a top-k cut.
+    pub fn with_top_k(self, k: usize) -> SampleSpec {
+        SampleSpec { top_k: k, ..self }
+    }
+
+    /// This spec with a nucleus (top-p) cut.
+    pub fn with_top_p(self, p: f32) -> SampleSpec {
+        assert!((0.0..=1.0).contains(&p), "top_p must be in [0, 1]");
+        SampleSpec { top_p: p, ..self }
+    }
+
+    /// Whether this spec decodes greedily (no randomness drawn at all —
+    /// the speculative scheduler requires this for its exactness
+    /// oracle).
+    pub fn is_greedy(&self) -> bool {
+        self.temperature <= 0.0
+    }
+
+    /// Sample one token id from `logits`. `stream` and `position` key
+    /// the draw (see module docs); equal keys and logits always yield
+    /// equal tokens. Allocates a transient candidate buffer — hot
+    /// paths hold one and call [`SampleSpec::sample_with`].
+    pub fn sample(&self, logits: &[f32], stream: u64, position: u64) -> usize {
+        let mut buf = Vec::new();
+        self.sample_with(logits, stream, position, &mut buf)
+    }
+
+    /// [`SampleSpec::sample`] over a caller-owned candidate buffer —
+    /// allocation-free once `buf` has reached vocab capacity (the
+    /// engine presizes it, keeping sampled decode on the zero-alloc
+    /// steady state).
+    pub fn sample_with(
+        &self,
+        logits: &[f32],
+        stream: u64,
+        position: u64,
+        buf: &mut Vec<(f32, u32)>,
+    ) -> usize {
+        if self.is_greedy() {
+            return argmax(logits);
+        }
+        // independent generator per (seed, stream, position): a pure
+        // function of the three keys, so the draw is batch-invariant
+        // and replayable by construction
+        let mut rng = Rng::new(self.seed).fork(stream).fork(position);
+        buf.clear();
+        buf.extend(logits.iter().enumerate().map(|(i, &v)| (v, i as u32)));
+        // total order (logit desc, index asc): the head of the sorted
+        // list is argmax's first maximum, so top_k == 1 ≡ greedy
+        buf.sort_unstable_by(|a, b| {
+            b.0.partial_cmp(&a.0).expect("non-finite logit").then(a.1.cmp(&b.1))
+        });
+        if self.top_k > 0 {
+            buf.truncate(self.top_k.max(1));
+        }
+        // softmax at temperature over the kept candidates, shifted by
+        // the max logit for stability; probabilities replace the logit
+        // component in place
+        let t = self.temperature as f64;
+        let m = buf[0].0 as f64;
+        let mut total = 0f64;
+        for c in buf.iter_mut() {
+            let p = ((c.0 as f64 - m) / t).exp();
+            c.0 = p as f32;
+            total += p;
+        }
+        // nucleus cut: smallest prefix reaching top_p of the mass
+        // (candidates are probability-sorted already). top_p == 1.0
+        // never truncates — the full mass is reached only at the end,
+        // so the branch is bit-identical to temperature-only sampling.
+        if self.top_p < 1.0 {
+            let target = self.top_p as f64 * total;
+            let mut cum = 0f64;
+            let mut keep = 0usize;
+            for c in buf.iter() {
+                keep += 1;
+                cum += c.0 as f64;
+                if cum >= target {
+                    break;
+                }
+            }
+            buf.truncate(keep.max(1));
+            total = buf.iter().map(|c| c.0 as f64).sum();
+        }
+        // inverse-CDF draw in fixed candidate order
+        let r = rng.f64() * total;
+        let mut cum = 0f64;
+        for c in buf.iter() {
+            cum += c.0 as f64;
+            if r < cum {
+                return c.1 as usize;
+            }
+        }
+        buf.last().expect("at least one candidate").1 as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn logits() -> Vec<f32> {
+        vec![0.1, 2.5, -1.0, 2.5, 0.7, 1.9, -0.3, 0.0]
+    }
+
+    #[test]
+    fn greedy_is_first_argmax() {
+        let spec = SampleSpec::greedy();
+        // index 1 and 3 tie at 2.5 — first maximum wins
+        assert_eq!(spec.sample(&logits(), 0, 0), 1);
+        assert!(spec.is_greedy());
+        assert_eq!(SampleSpec::default(), SampleSpec::greedy());
+    }
+
+    #[test]
+    fn top_k_one_equals_greedy() {
+        let spec = SampleSpec::temperature(0.8, 42).with_top_k(1);
+        for pos in 0..50u64 {
+            assert_eq!(spec.sample(&logits(), 7, pos), 1, "top_k=1 must match greedy");
+        }
+    }
+
+    #[test]
+    fn top_p_one_is_temperature_only() {
+        let base = SampleSpec::temperature(1.3, 99);
+        let cut = base.with_top_p(1.0);
+        for stream in 0..4u64 {
+            for pos in 0..40u64 {
+                assert_eq!(
+                    base.sample(&logits(), stream, pos),
+                    cut.sample(&logits(), stream, pos),
+                    "top_p=1.0 must be bit-identical to no nucleus cut"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn draws_are_keyed_and_replayable() {
+        let spec = SampleSpec::temperature(1.0, 1234).with_top_k(4).with_top_p(0.9);
+        let a: Vec<usize> = (0..64).map(|p| spec.sample(&logits(), 3, p)).collect();
+        let b: Vec<usize> = (0..64).map(|p| spec.sample(&logits(), 3, p)).collect();
+        assert_eq!(a, b, "same keys must replay identically");
+        let c: Vec<usize> = (0..64).map(|p| spec.sample(&logits(), 4, p)).collect();
+        assert_ne!(a, c, "a different stream must draw differently somewhere");
+        // the candidate-buffer path is the same function
+        let mut buf = Vec::new();
+        for p in 0..64 {
+            assert_eq!(spec.sample_with(&logits(), 3, p, &mut buf), a[p as usize]);
+        }
+    }
+
+    #[test]
+    fn tight_nucleus_collapses_to_argmax() {
+        // top_p → 0 keeps exactly one candidate: the first maximum
+        let spec = SampleSpec::temperature(1.0, 5).with_top_p(0.0);
+        for pos in 0..20u64 {
+            assert_eq!(spec.sample(&logits(), 0, pos), 1);
+        }
+    }
+
+    #[test]
+    fn samples_respect_top_k_support() {
+        let spec = SampleSpec::temperature(2.0, 7).with_top_k(3);
+        // top-3 of the fixture: indices 1, 3 (2.5) and 5 (1.9)
+        for pos in 0..200u64 {
+            let t = spec.sample(&logits(), 11, pos);
+            assert!([1usize, 3, 5].contains(&t), "token {t} outside the top-k support");
+        }
+    }
+}

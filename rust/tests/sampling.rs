@@ -1,0 +1,231 @@
+//! Serving-level harness for **batch-invariant seeded sampling**: a
+//! sampled token must be a pure function of the logits and the
+//! `(seed, request id, position)` key, never of batch composition. So
+//! under randomized admission schedules, every request's sampled
+//! stream must equal the solo sequential sampled reference
+//! ([`Transformer::generate_sampled_with`]) token for token — at every
+//! prefill chunk size, at every slot count (max_batch = 1 IS
+//! sequential service, so sequential ≡ batched ≡ ragged falls out of
+//! one equality), on both KV backends — and two runs of the same
+//! config must replay bit-identically, overflow attribution included.
+
+use axe::coordinator::serve::{Request, Response, ServeConfig, StepEngine};
+use axe::model::{
+    random_transformer, Activation, KvCacheKind, KvQuantSpec, SampleSpec, Transformer,
+    TransformerConfig,
+};
+use axe::util::rng::Rng;
+use std::time::Instant;
+
+fn model(seed: u64) -> Transformer {
+    random_transformer(
+        TransformerConfig {
+            name: "sampling".into(),
+            vocab: 32,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 32,
+            max_seq: 16,
+            act: Activation::Gelu,
+            parallel_residual: false,
+        },
+        seed,
+    )
+}
+
+/// Drive a [`StepEngine`] through an admission schedule (request `i`
+/// admitted at tick `arrivals[i]`, deferred FCFS while no slot is
+/// free), returning id-sorted responses.
+fn run_schedule(
+    m: &Transformer,
+    cfg: ServeConfig,
+    reqs: &[Request],
+    arrivals: &[usize],
+) -> Vec<Response> {
+    let mut eng = StepEngine::new(m, cfg);
+    let mut done: Vec<Response> = Vec::new();
+    let mut next = 0usize;
+    let mut tick = 0usize;
+    loop {
+        while next < reqs.len() && arrivals[next] <= tick && eng.free_slots() > 0 {
+            eng.admit(reqs[next].clone(), Instant::now());
+            next += 1;
+        }
+        eng.step();
+        done.extend(eng.take_finished());
+        tick += 1;
+        if next == reqs.len() && !eng.has_work() {
+            break;
+        }
+        assert!(tick < 100_000, "schedule did not converge");
+    }
+    done.sort_by_key(|r| r.id);
+    done
+}
+
+/// Random schedule: prompts 1..=22 tokens (several past max_seq=16 →
+/// clipped), generations 1..=28 (several past the window → slides),
+/// arrivals spread over the first 12 ticks.
+fn random_schedule(rng: &mut Rng, n_req: usize) -> (Vec<Request>, Vec<usize>) {
+    let mut reqs = Vec::new();
+    let mut arrivals: Vec<usize> = (0..n_req).map(|_| rng.int_in(0, 12) as usize).collect();
+    arrivals.sort_unstable();
+    for id in 0..n_req as u64 {
+        let plen = rng.int_in(1, 22) as usize;
+        let prompt: Vec<u16> = (0..plen).map(|_| rng.int_in(0, 31) as u16).collect();
+        let max_new_tokens = rng.int_in(1, 28) as usize;
+        reqs.push(Request { id, prompt, max_new_tokens, ..Request::default() });
+    }
+    (reqs, arrivals)
+}
+
+/// Solo sequential sampled reference for one request: the engine keys
+/// each draw by (request id, emitted count), so the reference stream
+/// is `generate_sampled_with` at stream = id.
+fn sampled_reference(
+    m: &Transformer,
+    req: &Request,
+    kind: KvCacheKind,
+    spec: &SampleSpec,
+) -> Vec<u16> {
+    let clipped = m.clip_to_window(&req.prompt);
+    m.generate_sampled_with(&clipped, req.max_new_tokens, kind, spec, req.id)[clipped.len()..]
+        .to_vec()
+}
+
+/// THE sampling property: for every spec (plain temperature, top-k,
+/// top-p, all three), every chunk size and both KV backends, batched
+/// sampled serving reproduces the solo sequential sampled stream token
+/// for token — the draw depends on the `(seed, id, position)` key and
+/// the logits, never on what else shares the step.
+#[test]
+fn sampled_schedules_match_sequential_reference() {
+    let m = model(61);
+    let specs = [
+        SampleSpec::temperature(0.8, 1234).with_top_k(12).with_top_p(0.95),
+        SampleSpec::temperature(1.3, 7),
+        SampleSpec::temperature(0.6, 99).with_top_k(3),
+        SampleSpec::temperature(1.0, 2718).with_top_p(0.7),
+    ];
+    let mut rng = Rng::new(8001);
+    for kind in [KvCacheKind::F32, KvCacheKind::Quant(KvQuantSpec::int8())] {
+        let (reqs, arrivals) = random_schedule(&mut rng, 7);
+        for spec in &specs {
+            for &chunk in &[2usize, usize::MAX] {
+                let label = format!("kind={kind:?} spec={spec:?} chunk={chunk}");
+                let cfg = ServeConfig::new(3, kind).with_prefill_chunk(chunk).with_sampling(*spec);
+                let responses = run_schedule(&m, cfg, &reqs, &arrivals);
+                assert_eq!(responses.len(), reqs.len(), "{label}: lost responses");
+                for (resp, req) in responses.iter().zip(reqs.iter()) {
+                    assert_eq!(resp.id, req.id);
+                    assert_eq!(
+                        resp.tokens,
+                        sampled_reference(&m, req, kind, spec),
+                        "{label}: request {} sampled stream depends on batching",
+                        req.id
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Slot count is invisible: the same schedule served with 1, 3 and 7
+/// slots emits identical sampled tokens AND identical per-request
+/// overflow attribution. `max_batch = 1` is literal sequential service
+/// (one request at a time, no ragged batching), so this is the
+/// sequential ≡ batched ≡ ragged chain at the serving level.
+#[test]
+fn batch_composition_is_invisible_to_sampling() {
+    let m = model(62);
+    let spec = SampleSpec::temperature(0.9, 4242).with_top_k(8).with_top_p(0.9);
+    let mut rng = Rng::new(8002);
+    for kind in [KvCacheKind::F32, KvCacheKind::Quant(KvQuantSpec::new(8, 8, Some(6)))] {
+        let (reqs, arrivals) = random_schedule(&mut rng, 7);
+        let label = format!("kind={kind:?}");
+        let run = |slots: usize| {
+            let cfg = ServeConfig::new(slots, kind).with_prefill_chunk(5).with_sampling(spec);
+            run_schedule(&m, cfg, &reqs, &arrivals)
+        };
+        let sequential = run(1);
+        assert_eq!(sequential.len(), reqs.len(), "{label}: lost responses");
+        for slots in [3usize, 7] {
+            let batched = run(slots);
+            for (a, b) in batched.iter().zip(sequential.iter()) {
+                assert_eq!(a.id, b.id);
+                assert_eq!(
+                    a.tokens, b.tokens,
+                    "{label}: request {} tokens depend on max_batch={slots}",
+                    a.id
+                );
+                assert_eq!(
+                    a.overflow_events, b.overflow_events,
+                    "{label}: request {} attribution depends on max_batch={slots}",
+                    a.id
+                );
+            }
+        }
+    }
+}
+
+/// Degenerate cuts collapse to greedy end to end: `top_k = 1` and
+/// `top_p = 0.0` both keep exactly the first maximum, so a hot-running
+/// sampled engine must emit the greedy engine's exact streams — the
+/// tie-break (logit descending, index ascending) is one total order
+/// shared with `argmax`.
+#[test]
+fn degenerate_cuts_reduce_to_greedy_serving() {
+    let m = model(63);
+    let mut rng = Rng::new(8003);
+    let (reqs, arrivals) = random_schedule(&mut rng, 6);
+    let kind = KvCacheKind::F32;
+    let greedy =
+        run_schedule(&m, ServeConfig::new(3, kind).with_prefill_chunk(4), &reqs, &arrivals);
+    for spec in [
+        SampleSpec::temperature(0.9, 42).with_top_k(1),
+        SampleSpec::temperature(1.0, 5).with_top_p(0.0),
+    ] {
+        let cfg = ServeConfig::new(3, kind).with_prefill_chunk(4).with_sampling(spec);
+        let sampled = run_schedule(&m, cfg, &reqs, &arrivals);
+        for ((a, b), req) in sampled.iter().zip(greedy.iter()).zip(reqs.iter()) {
+            assert_eq!(a.id, req.id);
+            assert_eq!(a.tokens, b.tokens, "spec={spec:?}: request {} is not greedy", req.id);
+            let clipped = m.clip_to_window(&req.prompt);
+            let direct = m.generate_greedy_with(&clipped, req.max_new_tokens, kind);
+            assert_eq!(
+                a.tokens,
+                direct[clipped.len()..],
+                "spec={spec:?}: request {} vs direct greedy",
+                req.id
+            );
+        }
+    }
+}
+
+/// Replay determinism and seed sensitivity: the same config replays
+/// bit-identically (tokens and overflow events), and changing only the
+/// root seed moves at least one request's stream — the randomness is
+/// real, and all of it lives in the seed.
+#[test]
+fn replay_is_deterministic_and_seeded() {
+    let m = model(64);
+    let mut rng = Rng::new(8004);
+    let (reqs, arrivals) = random_schedule(&mut rng, 6);
+    let run = |seed: u64| {
+        let spec = SampleSpec::temperature(1.1, seed).with_top_p(0.92);
+        let cfg = ServeConfig::new(3, KvCacheKind::F32).with_prefill_chunk(3).with_sampling(spec);
+        run_schedule(&m, cfg, &reqs, &arrivals)
+    };
+    let a = run(1001);
+    let b = run(1001);
+    assert_eq!(a.len(), reqs.len(), "lost responses");
+    for (x, y) in a.iter().zip(b.iter()) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.tokens, y.tokens, "request {} does not replay", x.id);
+        assert_eq!(x.overflow_events, y.overflow_events, "request {} attribution drifts", x.id);
+    }
+    let c = run(2002);
+    let moved = a.iter().zip(c.iter()).any(|(x, y)| x.tokens != y.tokens);
+    assert!(moved, "changing the root seed must move at least one stream");
+}

@@ -1,0 +1,377 @@
+//! Property harness for **self-speculative decoding**: under
+//! randomized admission schedules, the speculative scheduler — a
+//! narrow-register draft pass proposing k tokens per decoding
+//! sequence, verified in one full-width chunk-causal ragged step —
+//! must emit, for every request, exactly the token stream sequential
+//! greedy decode emits AND exactly the overflow events that request
+//! triggers when served alone (accepted verify rows only; draft work
+//! rolls back and is never attributed). The property must hold for
+//! every draft depth k ∈ {1, 2, 4, 8} × draft width (full and
+//! aggressively narrowed), on both KV backends, with the prefix cache
+//! on and off, through window slides, slot reuse and mid-flight
+//! cancellation — a wrong-often draft may cost acceptance, never
+//! correctness.
+
+use axe::accum::OverflowMode;
+use axe::coordinator::serve::{CancelToken, Request, Response, ServeConfig, Status, StepEngine};
+use axe::coordinator::telemetry::MetricsSummary;
+use axe::coordinator::{quantize_transformer, DatapathMode, PipelineConfig};
+use axe::eval::synth_corpus;
+use axe::model::{
+    argmax, random_transformer, Activation, Datapath, KvArena, KvCacheKind, KvQuantSpec, Linear,
+    Transformer, TransformerConfig,
+};
+use axe::quant::{AccumTarget, Algorithm, Method};
+use axe::util::rng::Rng;
+use std::time::Instant;
+
+fn model(seed: u64) -> Transformer {
+    random_transformer(
+        TransformerConfig {
+            name: "spec".into(),
+            vocab: 32,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 32,
+            max_seq: 16,
+            act: Activation::Gelu,
+            parallel_residual: false,
+        },
+        seed,
+    )
+}
+
+/// Sequential single-request reference: the tokens AND the exact
+/// overflow events this request costs when served alone — the stream
+/// and attribution every speculative configuration must reproduce.
+fn sequential_reference(
+    m: &Transformer,
+    prompt: &[u16],
+    n: usize,
+    kind: KvCacheKind,
+) -> (Vec<u16>, u64) {
+    let clipped = m.clip_to_window(prompt);
+    let mut arena = KvArena::with_kind(m, 1, kind);
+    let slot = arena.alloc().unwrap();
+    let mut ovf = 0u64;
+    let mut logits = m.prefill_slot_counted(&clipped, slot, &mut arena, &mut ovf);
+    let mut context = clipped.clone();
+    let mut out: Vec<u16> = Vec::new();
+    let mut row = [0u64; 1];
+    for i in 0..n {
+        if arena.is_full(slot) {
+            let keep = m.slide_keep();
+            let tail = context[context.len() - keep..].to_vec();
+            arena.reset_slot(slot);
+            logits = m.prefill_slot_counted(&tail, slot, &mut arena, &mut ovf);
+            context = tail;
+        }
+        let next = argmax(&logits) as u16;
+        out.push(next);
+        context.push(next);
+        if i + 1 < n {
+            row[0] = 0;
+            logits = m.decode_step_batch_counted(&[next], &[slot], &mut arena, &mut row);
+            ovf += row[0];
+        }
+    }
+    (out, ovf)
+}
+
+/// Drive a [`StepEngine`] through an admission schedule (request `i`
+/// admitted at tick `arrivals[i]`, deferred FCFS while no slot is
+/// free), returning the id-sorted responses and the engine's telemetry
+/// summary.
+fn run_schedule(
+    m: &Transformer,
+    cfg: ServeConfig,
+    reqs: &[Request],
+    arrivals: &[usize],
+) -> (Vec<Response>, MetricsSummary) {
+    let mut eng = StepEngine::new(m, cfg);
+    let mut done: Vec<Response> = Vec::new();
+    let mut next = 0usize;
+    let mut tick = 0usize;
+    loop {
+        while next < reqs.len() && arrivals[next] <= tick && eng.free_slots() > 0 {
+            eng.admit(reqs[next].clone(), Instant::now());
+            next += 1;
+        }
+        eng.step();
+        done.extend(eng.take_finished());
+        tick += 1;
+        if next == reqs.len() && !eng.has_work() {
+            break;
+        }
+        assert!(tick < 100_000, "schedule did not converge");
+    }
+    let summary = eng.metrics().expect("telemetry is on by default").summary();
+    done.sort_by_key(|r| r.id);
+    (done, summary)
+}
+
+/// Random schedule: prompts 1..=22 tokens (several past max_seq=16 →
+/// clipped), generations 1..=28 (several past the window → slides mid
+/// speculation chunk), arrivals spread over the first 12 ticks, 3
+/// slots for 7 requests → deferred admissions and slot reuse.
+fn random_schedule(rng: &mut Rng, n_req: usize) -> (Vec<Request>, Vec<usize>) {
+    let mut reqs = Vec::new();
+    let mut arrivals: Vec<usize> = (0..n_req).map(|_| rng.int_in(0, 12) as usize).collect();
+    arrivals.sort_unstable();
+    for id in 0..n_req as u64 {
+        let plen = rng.int_in(1, 22) as usize;
+        let prompt: Vec<u16> = (0..plen).map(|_| rng.int_in(0, 31) as u16).collect();
+        let max_new_tokens = rng.int_in(1, 28) as usize;
+        reqs.push(Request { id, prompt, max_new_tokens, ..Request::default() });
+    }
+    (reqs, arrivals)
+}
+
+/// THE speculative-serving property: for every draft depth × draft
+/// width × KV backend, randomized schedules emit bit-identical token
+/// streams and exact per-request overflow attribution versus the solo
+/// sequential reference — identical to what the k = 1 engine is held
+/// to, so speculation is pure scheduling, invisible in every output.
+#[test]
+fn randomized_schedules_are_bit_exact_across_draft_depths() {
+    let m = model(42);
+    let mut rng = Rng::new(7001);
+    for kind in [KvCacheKind::F32, KvCacheKind::Quant(KvQuantSpec::new(8, 8, Some(6)))] {
+        let (reqs, arrivals) = random_schedule(&mut rng, 7);
+        // solo references once per backend — every configuration below
+        // must hit exactly these
+        let want: Vec<(Vec<u16>, u64)> = reqs
+            .iter()
+            .map(|r| sequential_reference(&m, &r.prompt, r.max_new_tokens, kind))
+            .collect();
+        for &k in &[1usize, 2, 4, 8] {
+            for &bits in &[None, Some(4u32)] {
+                let label = format!("kind={kind:?} k={k} draft_bits={bits:?}");
+                let cfg = ServeConfig::new(3, kind).with_prefill_chunk(5).with_speculate(k, bits);
+                let (responses, t) = run_schedule(&m, cfg, &reqs, &arrivals);
+                assert_eq!(responses.len(), reqs.len(), "{label}: lost responses");
+                for (resp, (req, (want_tokens, want_ovf))) in
+                    responses.iter().zip(reqs.iter().zip(want.iter()))
+                {
+                    assert_eq!(resp.id, req.id);
+                    assert_eq!(
+                        &resp.tokens, want_tokens,
+                        "{label}: request {} token stream diverged from sequential decode",
+                        req.id
+                    );
+                    assert_eq!(
+                        resp.overflow_events, *want_ovf,
+                        "{label}: request {} overflow attribution diverged from solo serving",
+                        req.id
+                    );
+                }
+                assert!(t.spec_accepted <= t.spec_proposed, "{label}");
+                assert_eq!(t.draft_rows, t.spec_proposed, "{label}: one draft row per proposal");
+                if k == 1 {
+                    assert_eq!(t.spec_proposed, 0, "{label}: k=1 must not speculate");
+                    assert_eq!(t.overflow_draft, 0, "{label}");
+                } else {
+                    assert!(t.spec_proposed > 0, "{label}: no draft tokens proposed");
+                }
+                // float weights + f32 KV leave the narrow knob nothing
+                // to bite: the draft is exact, so acceptance is total
+                if k > 1 && matches!(kind, KvCacheKind::F32) {
+                    assert_eq!(
+                        t.spec_accepted, t.spec_proposed,
+                        "{label}: an exact draft must be fully accepted"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The full paper configuration: an AXE-quantized model on the fused
+/// integer kernel with deliberately narrowed linear registers (live
+/// linear overflow events), speculating with the draft registers
+/// narrowed further. Drafts run the same stored codes through smaller
+/// accumulators — often wrong, costing only acceptance — and tokens
+/// plus attribution stay exact on both KV backends.
+#[test]
+fn quantized_model_speculative_serving_is_exact() {
+    let base = model(44);
+    let toks = synth_corpus(16 * 16, 32, 45);
+    let calib: Vec<&[u16]> = toks.chunks_exact(16).take(4).collect();
+    let mut cfg = PipelineConfig::new(Algorithm::Optq, Method::Axe, 4, 8);
+    cfg.target = AccumTarget::MultiStage { p_inner: 14, tile: 8 };
+    cfg.datapath = DatapathMode::Faithful;
+    let mut qmodel = base;
+    quantize_transformer(&mut qmodel, &calib, &cfg).unwrap();
+    // narrow every quantized linear so verify-pass overflow events are
+    // live — their attribution must survive speculation exactly
+    for name in qmodel.linear_names() {
+        if let Some(Linear::Quant(q)) = qmodel.get_linear_mut(&name) {
+            q.datapath = Datapath::Simulated {
+                tile: 8,
+                inner_bits: 11,
+                outer_bits: 14,
+                mode: OverflowMode::Wraparound,
+            };
+        }
+    }
+    let mut rng = Rng::new(7002);
+    let (reqs, arrivals) = random_schedule(&mut rng, 5);
+    let (_, probe_ovf) =
+        sequential_reference(&qmodel, &reqs[0].prompt, reqs[0].max_new_tokens, KvCacheKind::F32);
+    assert!(probe_ovf > 0, "narrowed linear registers must overflow in this fixture");
+    for kind in [KvCacheKind::F32, KvCacheKind::Quant(KvQuantSpec::int8())] {
+        for &k in &[2usize, 4] {
+            for &bits in &[None, Some(8u32)] {
+                let label = format!("qmodel kind={kind:?} k={k} draft_bits={bits:?}");
+                let cfg = ServeConfig::new(3, kind).with_prefill_chunk(4).with_speculate(k, bits);
+                let (responses, t) = run_schedule(&qmodel, cfg, &reqs, &arrivals);
+                assert_eq!(responses.len(), reqs.len(), "{label}: lost responses");
+                for (resp, req) in responses.iter().zip(reqs.iter()) {
+                    let (want_tokens, want_ovf) =
+                        sequential_reference(&qmodel, &req.prompt, req.max_new_tokens, kind);
+                    assert_eq!(resp.tokens, want_tokens, "{label}: request {} tokens", req.id);
+                    assert_eq!(
+                        resp.overflow_events, want_ovf,
+                        "{label}: request {} overflow attribution",
+                        req.id
+                    );
+                }
+                assert!(t.spec_proposed > 0, "{label}: no proposals");
+                assert!(t.spec_accepted <= t.spec_proposed, "{label}");
+                if bits == Some(8) {
+                    // an 8-bit draft register under 11-bit-live traffic
+                    // must overflow — that work is telemetry, never
+                    // per-request attribution (checked exactly above)
+                    assert!(t.overflow_draft > 0, "{label}: narrow draft must overflow");
+                }
+            }
+        }
+    }
+}
+
+/// Prefix sharing composes with speculation: overlapping-prefix
+/// schedules (7 requests over one system prompt, 3 slots, 4-token
+/// pages) emit identical tokens and per-request overflow with the
+/// cache on vs off while speculating — accepted verify rows extend
+/// pages the followers adopted, rejected rows roll back off them, and
+/// none of it may leak into the registered prefix.
+#[test]
+fn prefix_sharing_composes_with_speculation() {
+    let m = model(47);
+    let system: Vec<u16> = (0..10u16).map(|i| (i * 7 + 3) % 32).collect();
+    let mut rng = Rng::new(7003);
+    for kind in [KvCacheKind::F32, KvCacheKind::Quant(KvQuantSpec::new(8, 8, Some(6)))] {
+        let mut arrivals: Vec<usize> = (0..7).map(|_| rng.int_in(0, 10) as usize).collect();
+        arrivals.sort_unstable();
+        let reqs: Vec<Request> = (0..7u64)
+            .map(|id| {
+                let tail = rng.int_in(0, 5) as usize;
+                let mut prompt = system.clone();
+                prompt.extend((0..tail).map(|_| rng.int_in(0, 31) as u16));
+                Request {
+                    id,
+                    prompt,
+                    max_new_tokens: rng.int_in(1, 24) as usize,
+                    ..Request::default()
+                }
+            })
+            .collect();
+        let label = format!("kind={kind:?}");
+        let run = |sharing: bool| {
+            let cfg = ServeConfig::new(3, kind)
+                .with_prefill_chunk(5)
+                .with_kv_page(4)
+                .with_prefix_cache(sharing)
+                .with_speculate(4, Some(4));
+            run_schedule(&m, cfg, &reqs, &arrivals).0
+        };
+        let on = run(true);
+        let off = run(false);
+        assert_eq!(on.len(), reqs.len(), "{label}: lost responses");
+        for ((a, b), req) in on.iter().zip(off.iter()).zip(reqs.iter()) {
+            assert_eq!(a.id, req.id);
+            assert_eq!(
+                a.tokens, b.tokens,
+                "{label}: request {} tokens depend on prefix sharing",
+                req.id
+            );
+            assert_eq!(
+                a.overflow_events, b.overflow_events,
+                "{label}: request {} overflow attribution depends on prefix sharing",
+                req.id
+            );
+            assert_eq!(b.prefill_tokens_skipped, 0, "{label}: sharing off must skip nothing");
+            let (want_tokens, want_ovf) =
+                sequential_reference(&m, &req.prompt, req.max_new_tokens, kind);
+            assert_eq!(a.tokens, want_tokens, "{label}: request {} vs solo", req.id);
+            assert_eq!(a.overflow_events, want_ovf, "{label}: request {} ovf vs solo", req.id);
+        }
+        let skipped: usize = on.iter().map(|r| r.prefill_tokens_skipped).sum();
+        assert!(skipped > 0, "{label}: no admission ever hit the prefix cache");
+    }
+}
+
+/// Mid-flight cancellation while the engine is speculating: the reaper
+/// resolves the cancelled sequence with a partial, prefix-exact stream
+/// (whole accepted chunks — never a half-verified token), frees its
+/// slot immediately, and once the survivors retire every page refcount
+/// is back to zero — rolled-back draft and rejected verify rows pin
+/// nothing.
+#[test]
+fn cancellation_with_outstanding_draft_tokens_frees_everything() {
+    let m = model(46);
+    for kind in [KvCacheKind::F32, KvCacheKind::Quant(KvQuantSpec::new(8, 8, Some(6)))] {
+        let label = format!("kind={kind:?}");
+        let cfg = ServeConfig::new(2, kind)
+            .with_prefill_chunk(usize::MAX)
+            .with_kv_page(4)
+            .with_speculate(8, Some(4));
+        let mut eng = StepEngine::new(&m, cfg);
+        let tok = CancelToken::new();
+        eng.admit(
+            Request {
+                id: 0,
+                prompt: vec![1, 2],
+                max_new_tokens: 26, // runs past the window if uncancelled
+                cancel: Some(tok.clone()),
+                ..Request::default()
+            },
+            Instant::now(),
+        );
+        eng.admit(
+            Request { id: 1, prompt: vec![3, 4, 5], max_new_tokens: 12, ..Request::default() },
+            Instant::now(),
+        );
+        eng.step(); // both prompts prefill
+        eng.step(); // first sample + speculative chunk
+        eng.step(); // another speculative step; drafts outstanding for both
+        tok.cancel();
+        eng.step(); // reaper fires before any further sampling
+        let cancelled: Vec<Response> =
+            eng.take_finished().into_iter().filter(|r| r.id == 0).collect();
+        assert_eq!(cancelled.len(), 1, "{label}: cancel must resolve the request");
+        assert_eq!(cancelled[0].status, Status::Cancelled, "{label}");
+        let (want, _) = sequential_reference(&m, &[1, 2], 26, kind);
+        let got = &cancelled[0].tokens;
+        assert!(!got.is_empty(), "{label}: two speculative steps must have emitted");
+        assert!(got.len() < want.len(), "{label}: the cancel must land mid-generation");
+        assert_eq!(got[..], want[..got.len()], "{label}: partial stream is prefix-exact");
+        assert_eq!(eng.free_slots(), 1, "{label}: slot released on cancellation");
+        // the survivor decodes on, unperturbed, to the exact stream
+        let mut done = Vec::new();
+        while eng.has_work() {
+            eng.step();
+            done.extend(eng.take_finished());
+        }
+        assert_eq!(done.len(), 1, "{label}: survivor must retire");
+        let (want1, want1_ovf) = sequential_reference(&m, &[3, 4, 5], 12, kind);
+        assert_eq!(done[0].tokens, want1, "{label}: survivor tokens");
+        assert_eq!(done[0].overflow_events, want1_ovf, "{label}: survivor attribution");
+        assert_eq!(
+            eng.arena().resident_pages(),
+            0,
+            "{label}: every page refcount must drop to zero after retirement"
+        );
+    }
+}

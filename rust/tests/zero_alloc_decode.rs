@@ -4,12 +4,13 @@
 //! (which grows the [`DecodeScratch`] buffers to their high-water
 //! shape), a batched decode step must perform **zero** heap
 //! allocations — on the quantized model + quantized-KV backend (the
-//! serving configuration the scratch plan exists for) and on the float
-//! model + f32 arena. Telemetry recording rides inside every measured
-//! window: each step builds a [`StepRecord`] and pushes it through a
-//! [`SharedMetrics`] ring sized to wrap, so the record/observe/
-//! overwrite path is held to the same zero-allocation bar as the
-//! kernels it measures.
+//! serving configuration the scratch plan exists for), on the float
+//! model + f32 arena, on ragged steps carrying a prefill chunk, and on
+//! full speculative draft/verify/rollback cycles on both backends.
+//! Telemetry recording rides inside every measured window: each step
+//! builds a [`StepRecord`] and pushes it through a [`SharedMetrics`]
+//! ring sized to wrap, so the record/observe/overwrite path is held to
+//! the same zero-allocation bar as the kernels it measures.
 //!
 //! The fixture is deliberately sized below the kernels' band-threading
 //! work threshold (rows·c·k < 64³ everywhere): the zero-allocation
@@ -28,8 +29,8 @@ use axe::coordinator::telemetry::{SharedMetrics, StepRecord};
 use axe::coordinator::{quantize_transformer, DatapathMode, PipelineConfig};
 use axe::eval::synth_corpus;
 use axe::model::{
-    random_transformer, Activation, DecodeScratch, KvArena, KvCacheKind, KvQuantSpec, RowGroup,
-    Transformer, TransformerConfig,
+    random_transformer, Activation, DecodeScratch, KvArena, KvCacheKind, KvQuantSpec, RaggedOpts,
+    RowGroup, Transformer, TransformerConfig,
 };
 use axe::quant::{AccumTarget, Algorithm, Method};
 
@@ -161,7 +162,7 @@ fn steady_state_decode_steps_allocate_nothing() {
         qmodel.prefill_slot_scratch(&toks[i * 3..i * 3 + 3], s, &mut arena, &mut ovf, &mut scratch);
     }
     // one telemetry ring for the whole test, sized to WRAP (capacity 8,
-    // 27 records by the end): overwrite + drop accounting run inside
+    // 45 records by the end): overwrite + drop accounting run inside
     // the measured windows, not just the happy path.
     let metrics = SharedMetrics::new(8);
     // warmup: first steps may still grow buffers / free-list internals
@@ -281,10 +282,142 @@ fn steady_state_decode_steps_allocate_nothing() {
          ({ragged_allocs} allocations across 6 steps)"
     );
 
+    // -- phases 4 and 5: full speculative decoding cycles (the
+    // self-speculative serving shape) on both backends. Per step, k-1
+    // single-row draft rounds on a second scratch (page ledgers off),
+    // a draft rollback, one k-row chunk-causal verify group per
+    // sequence with per-row logits, and an acceptance rollback — the
+    // exact call sequence StepEngine runs per speculative step. The
+    // draft runs the stored register widths here (the exact-draft
+    // configuration; a width-narrowed draft drives the same buffers,
+    // just hotter overflow counters — and this fixture's phase-1 width
+    // is chosen event-free on purpose, see above). Draft and verify
+    // scratches, the All-layout logits plane, and the page pops /
+    // free-list pushes from both rollbacks must all be warm after one
+    // cycle.
+    const K: usize = 4;
+    let mut draft_tokens = [0u16; 3];
+    let mut verify_tokens = [0u16; 3 * K];
+    let mut spec_ovf = [0u64; 3];
+    let mut spec_step = |model: &Transformer,
+                         arena: &mut KvArena,
+                         verify: &mut DecodeScratch,
+                         draft: &mut DecodeScratch,
+                         groups: &mut Vec<RowGroup>,
+                         slots: &[usize; 3],
+                         phase: u16| {
+        for r in 0..K - 1 {
+            for (b, t) in draft_tokens.iter_mut().enumerate() {
+                *t = ((phase as usize + r * 11 + b * 5) % vocab as usize) as u16;
+            }
+            groups.clear();
+            for (g, &s) in slots.iter().enumerate() {
+                groups.push(RowGroup { slot: s, start: g, len: 1 });
+            }
+            spec_ovf.iter_mut().for_each(|v| *v = 0);
+            model.decode_step_ragged_opts(
+                &draft_tokens,
+                groups,
+                arena,
+                &mut spec_ovf,
+                draft,
+                RaggedOpts::draft(None),
+            );
+        }
+        // roll every draft append back, then score the whole chunk
+        // full-width with one logits row per position
+        for &s in slots.iter() {
+            arena.truncate_tail(s, K - 1);
+        }
+        for (b, t) in verify_tokens.iter_mut().enumerate() {
+            *t = ((phase as usize + b * 7) % vocab as usize) as u16;
+        }
+        groups.clear();
+        for (g, &s) in slots.iter().enumerate() {
+            groups.push(RowGroup { slot: s, start: g * K, len: K });
+        }
+        spec_ovf.iter_mut().for_each(|v| *v = 0);
+        model.decode_step_ragged_opts(
+            &verify_tokens,
+            groups,
+            arena,
+            &mut spec_ovf,
+            verify,
+            RaggedOpts::verify(),
+        );
+        assert!(verify.step.logits[..3 * K * vocab as usize].iter().all(|v| v.is_finite()));
+        // acceptance rollback, sized so steady-state net growth is zero
+        for &s in slots.iter() {
+            arena.truncate_tail(s, K);
+        }
+        let attn = verify.last_attn_overflows();
+        let total: u64 = spec_ovf.iter().sum();
+        metrics.with(|m| {
+            m.record(StepRecord {
+                step: phase as u64,
+                wall_ns: 1 + phase as u64,
+                decode_rows: (3 * K) as u32,
+                tokens: (3 * K) as u32,
+                overflow_linear: total.saturating_sub(attn),
+                overflow_attn: attn,
+                spec_proposed: (3 * (K - 1)) as u32,
+                spec_accepted: (3 * (K - 1)) as u32,
+                draft_rows: (3 * (K - 1)) as u32,
+                arena_resident_bytes: arena.bytes() as u64,
+                arena_capacity_bytes: arena.capacity_bytes() as u64,
+                ..StepRecord::default()
+            });
+        });
+    };
+    for (model, akind, name) in
+        [(&qmodel, Some(kind), "quantized model + quant KV"), (&base, None, "float model + f32 KV")]
+    {
+        let mut arena_s = match akind {
+            Some(k) => KvArena::with_kind(model, 3, k),
+            None => KvArena::new(model, 3),
+        };
+        let mut slots_s = [0usize; 3];
+        for s in slots_s.iter_mut() {
+            *s = arena_s.alloc().expect("3-slot arena");
+        }
+        let mut verify_s = DecodeScratch::for_model(&model.cfg, 4);
+        let mut draft_s = DecodeScratch::for_model(&model.cfg, 4);
+        let mut groups_s: Vec<RowGroup> = Vec::with_capacity(3);
+        let mut ovf_s = 0u64;
+        for (i, &s) in slots_s.iter().enumerate() {
+            model.prefill_slot_scratch(
+                &toks[i * 3..i * 3 + 3],
+                s,
+                &mut arena_s,
+                &mut ovf_s,
+                &mut draft_s,
+            );
+        }
+        for i in 0..3u16 {
+            let p = 700 + i; // warmup
+            spec_step(model, &mut arena_s, &mut verify_s, &mut draft_s, &mut groups_s, &slots_s, p);
+        }
+        let before = allocations();
+        for i in 0..6u16 {
+            let p = 800 + i;
+            spec_step(model, &mut arena_s, &mut verify_s, &mut draft_s, &mut groups_s, &slots_s, p);
+        }
+        let spec_allocs = allocations() - before;
+        assert_eq!(
+            spec_allocs, 0,
+            "speculative draft/verify/rollback steps on the {name} must not allocate \
+             after warmup ({spec_allocs} allocations across 6 steps)"
+        );
+    }
+
     // every step of every phase recorded; the capacity-8 ring wrapped
     // and drop-counted the overflow — all inside the audited windows.
     let sum = metrics.summary();
-    assert_eq!(sum.steps, 27, "all 27 steps must be telemetry-recorded");
-    assert_eq!(sum.records_dropped, 27 - 8, "ring wraparound must drop-count exactly");
-    assert_eq!(sum.tokens, 18 * 4 + 9 * 8, "recorded row totals must match the driven steps");
+    assert_eq!(sum.steps, 45, "all 45 steps must be telemetry-recorded");
+    assert_eq!(sum.records_dropped, 45 - 8, "ring wraparound must drop-count exactly");
+    assert_eq!(
+        sum.tokens,
+        18 * 4 + 9 * 8 + 18 * 12,
+        "recorded row totals must match the driven steps"
+    );
 }
